@@ -1,0 +1,51 @@
+//! Fig. 4 — uniform scaling vs the sigmoid Balanced-Dampening profile.
+//!
+//! Prints S(l) for the uniform baseline and for sigmoid profiles at a few
+//! (c_m, b_r), including the paper's calibration (c_m from the smoothed
+//! SSD selection extrema, b_r = 10) computed live on rn18slim.
+//!
+//! Run: `cargo run --release --example fig4`
+
+use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
+use ficabu::unlearn::Schedule;
+
+fn print_profile(label: &str, s: &Schedule, big_l: usize) {
+    let prof = s.profile(big_l);
+    print!("{label:24}");
+    for v in &prof {
+        print!(" {v:5.2}");
+    }
+    println!();
+}
+
+fn main() -> anyhow::Result<()> {
+    let big_l = 10; // rn18slim depth
+    print!("{:24}", "l =");
+    for l in 1..=big_l {
+        print!(" {l:5}");
+    }
+    println!("   (l=1 back-end ... l=L front-end)");
+
+    print_profile("uniform (SSD)", &Schedule::Uniform, big_l);
+    for (cm, br) in [(5.5, 10.0), (3.0, 10.0), (8.0, 10.0), (5.5, 4.0)] {
+        print_profile(
+            &format!("sigmoid cm={cm} br={br}"),
+            &Schedule::Sigmoid { cm, br },
+            big_l,
+        );
+    }
+
+    // live calibration from an SSD selection profile (paper §III-B)
+    let prep = exp::prepare("rn18slim", DatasetKind::Cifar20, &PrepareOpts::default())?;
+    let ssd = exp::run_mode(&prep, 0, Mode::Ssd, None)?;
+    let sel = ssd.report.unwrap().selected_per_depth;
+    println!("\nSSD selected per depth: {sel:?}");
+    let cal = Schedule::from_selection_distribution(&sel, 10.0);
+    if let Schedule::Sigmoid { cm, br } = &cal {
+        println!("calibrated: c_m = {cm:.2}, b_r = {br}");
+    }
+    print_profile("calibrated profile", &cal, big_l);
+    println!("\npaper shape: S(l) = 1 at the back-end rising to b_r at the front-end,");
+    println!("mirroring the selection distribution in reverse.");
+    Ok(())
+}

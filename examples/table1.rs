@@ -1,0 +1,89 @@
+//! Table I — Context-Adaptive Unlearning vs baseline and SSD.
+//!
+//! (a) CIFAR-20-like: RN + ViT, two named classes (analogues of Rocket and
+//!     Mushroom) and the average over further classes.
+//! (b) PinsFace-like: RN, class average.
+//!
+//! Metrics per cell: Dr, Df, MIA (percent) and editing MACs relative to
+//! SSD (= 100), including checkpoint overhead.
+//!
+//! Run: `cargo run --release --example table1 [-- --avg-classes N]`
+
+use ficabu::exp::{self, ClassResult, DatasetKind, Mode, PrepareOpts};
+use ficabu::util::cli::Args;
+
+fn cell(r: &ClassResult) -> String {
+    format!(
+        "Dr {:6.2}  Df {:6.2}  MIA {:6.2}  MACs {:8.3}",
+        100.0 * r.dr,
+        100.0 * r.df,
+        100.0 * r.mia,
+        if r.mode == Mode::Baseline { f64::NAN } else { r.macs_vs_ssd_pct }
+    )
+}
+
+fn mean(rs: &[ClassResult]) -> ClassResult {
+    let n = rs.len() as f64;
+    let mut out = rs[0].clone();
+    out.dr = rs.iter().map(|r| r.dr).sum::<f64>() / n;
+    out.df = rs.iter().map(|r| r.df).sum::<f64>() / n;
+    out.mia = rs.iter().map(|r| r.mia).sum::<f64>() / n;
+    out.macs_vs_ssd_pct = rs.iter().map(|r| r.macs_vs_ssd_pct).sum::<f64>() / n;
+    out
+}
+
+fn section(
+    prep: &exp::Prepared,
+    named: &[(usize, &str)],
+    avg_classes: usize,
+) -> anyhow::Result<()> {
+    println!(
+        "--- {} / {} (alpha,lambda = {:?}, tau = {:.0}%) ---",
+        prep.model.meta.name,
+        prep.kind.tag(),
+        prep.kind.ssd_params(&prep.model.meta.name),
+        100.0 * prep.kind.tau()
+    );
+    for &(class, label) in named {
+        for mode in [Mode::Baseline, Mode::Ssd, Mode::Cau] {
+            let r = exp::run_mode(prep, class, mode, None)?;
+            println!("{label:8} {:8} {}", mode.name(), cell(&r));
+        }
+    }
+    // average over the remaining classes
+    let classes: Vec<usize> = (named.len()..named.len() + avg_classes).collect();
+    for mode in [Mode::Baseline, Mode::Ssd, Mode::Cau] {
+        let rs: Vec<ClassResult> = classes
+            .iter()
+            .map(|&c| exp::run_mode(prep, c, mode, None))
+            .collect::<anyhow::Result<_>>()?;
+        println!("{:8} {:8} {}", format!("Avg({avg_classes})"), mode.name(), cell(&mean(&rs)));
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1))?;
+    args.declare(&["avg-classes", "steps"]);
+    args.finish()?;
+    let avg_classes = args.usize_or("avg-classes", 4)?;
+    let opts = PrepareOpts { train_steps: args.usize_or("steps", 240)?, ..Default::default() };
+
+    println!("=== Table I(a): CIFAR-20-like ===");
+    let named = [(0usize, "Rocket*"), (1usize, "MR*")];
+    let rn = exp::prepare("rn18slim", DatasetKind::Cifar20, &opts)?;
+    section(&rn, &named, avg_classes)?;
+    drop(rn);
+    let opts_vit = PrepareOpts { train_steps: 400, lr: 0.15, ..opts.clone() };
+    let vit = exp::prepare("vitslim", DatasetKind::Cifar20, &opts_vit)?;
+    section(&vit, &named, avg_classes)?;
+    drop(vit);
+
+    println!("\n=== Table I(b): PinsFace-like ===");
+    let pins = exp::prepare("rn18slim", DatasetKind::PinsFace, &opts)?;
+    section(&pins, &[], avg_classes.max(2))?;
+
+    println!("\npaper shape: Df -> random guess; Dr within ~1pt of SSD;");
+    println!("CAU editing MACs << 100 with PinsFace <= CIFAR-20.");
+    Ok(())
+}

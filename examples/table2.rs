@@ -1,0 +1,103 @@
+//! Table II — Balanced Dampening vs baseline and SSD.
+//!
+//! BD replaces the fixed (alpha, lambda) with the sigmoid depth profile
+//! S(l) (calibrated per §III-B from the SSD selection distribution,
+//! b_r = 10). Metrics: Dr, Df, dDr (drop vs baseline) and RPR (eq. 7).
+//!
+//! Run: `cargo run --release --example table2 [-- --avg-classes N]`
+
+use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
+use ficabu::metrics::rpr::rpr;
+use ficabu::util::cli::Args;
+
+struct Row {
+    label: String,
+    base_dr: f64,
+    ssd_dr: f64,
+    ssd_df: f64,
+    bd_dr: f64,
+    bd_df: f64,
+}
+
+impl Row {
+    fn print(&self) {
+        let d_ssd = 100.0 * (self.base_dr - self.ssd_dr);
+        let d_bd = 100.0 * (self.base_dr - self.bd_dr);
+        println!(
+            "{:10} SSD: Dr {:6.2} Df {:6.2} dDr {:5.2} | BD: Dr {:6.2} Df {:6.2} dDr {:5.2} | RPR {:+7.2}",
+            self.label,
+            100.0 * self.ssd_dr,
+            100.0 * self.ssd_df,
+            d_ssd,
+            100.0 * self.bd_dr,
+            100.0 * self.bd_df,
+            d_bd,
+            rpr(self.base_dr, self.ssd_dr, self.bd_dr),
+        );
+    }
+}
+
+fn run_class(prep: &exp::Prepared, class: usize, label: &str) -> anyhow::Result<Row> {
+    let base = exp::run_mode(prep, class, Mode::Baseline, None)?;
+    let ssd = exp::run_mode(prep, class, Mode::Ssd, None)?;
+    // calibrate the sigmoid from this class's SSD selection profile
+    let sel = ssd.report.as_ref().map(|r| r.selected_per_depth.clone());
+    let bd = exp::run_mode(prep, class, Mode::Bd, sel.as_deref())?;
+    Ok(Row {
+        label: label.to_string(),
+        base_dr: base.dr,
+        ssd_dr: ssd.dr,
+        ssd_df: ssd.df,
+        bd_dr: bd.dr,
+        bd_df: bd.df,
+    })
+}
+
+fn section(prep: &exp::Prepared, named: &[(usize, &str)], avg_classes: usize) -> anyhow::Result<()> {
+    println!("--- {} / {} (b_r = 10, c_m from SSD selection) ---",
+        prep.model.meta.name, prep.kind.tag());
+    for &(c, label) in named {
+        run_class(prep, c, label)?.print();
+    }
+    let classes: Vec<usize> = (named.len()..named.len() + avg_classes).collect();
+    let rows: Vec<Row> = classes
+        .iter()
+        .map(|&c| run_class(prep, c, &format!("c{c}")))
+        .collect::<anyhow::Result<_>>()?;
+    let n = rows.len() as f64;
+    Row {
+        label: format!("Avg({avg_classes})"),
+        base_dr: rows.iter().map(|r| r.base_dr).sum::<f64>() / n,
+        ssd_dr: rows.iter().map(|r| r.ssd_dr).sum::<f64>() / n,
+        ssd_df: rows.iter().map(|r| r.ssd_df).sum::<f64>() / n,
+        bd_dr: rows.iter().map(|r| r.bd_dr).sum::<f64>() / n,
+        bd_df: rows.iter().map(|r| r.bd_df).sum::<f64>() / n,
+    }
+    .print();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1))?;
+    args.declare(&["avg-classes", "steps"]);
+    args.finish()?;
+    let avg_classes = args.usize_or("avg-classes", 4)?;
+    let opts = PrepareOpts { train_steps: args.usize_or("steps", 240)?, ..Default::default() };
+    let named = [(0usize, "Rocket*"), (1usize, "MR*")];
+
+    println!("=== Table II(a): CIFAR-20-like ===");
+    let rn = exp::prepare("rn18slim", DatasetKind::Cifar20, &opts)?;
+    section(&rn, &named, avg_classes)?;
+    drop(rn);
+    let opts_vit = PrepareOpts { train_steps: 400, lr: 0.15, ..opts.clone() };
+    let vit = exp::prepare("vitslim", DatasetKind::Cifar20, &opts_vit)?;
+    section(&vit, &named, avg_classes)?;
+    drop(vit);
+
+    println!("\n=== Table II(b): PinsFace-like ===");
+    let pins = exp::prepare("rn18slim", DatasetKind::PinsFace, &opts)?;
+    section(&pins, &[], avg_classes.max(2))?;
+
+    println!("\npaper shape: BD matches SSD forget accuracy with smaller dDr (positive RPR).");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Table IV — end-to-end FiCABU processor evaluation, INT8 models.
+//!
+//! SSD runs on the simulated *baseline* processor (no specialized IPs:
+//! Fisher/dampening serialized on the Rocket core at 11.7x/7.9x the IP
+//! cycle cost); FiCABU (CAU + BD combined) runs on the simulated FiCABU
+//! processor (streaming GEMM->FIMD->DAMP pipeline). Reported: Dr, Df,
+//! editing MACs vs SSD, RPR, and energy savings ES.
+//!
+//! Run: `cargo run --release --example table4 [-- --avg-classes N]`
+
+use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
+use ficabu::hwsim::mem::Precision;
+use ficabu::metrics::rpr::rpr;
+use ficabu::util::cli::Args;
+
+fn section(kind: DatasetKind, avg_classes: usize, steps: usize) -> anyhow::Result<()> {
+    let opts = PrepareOpts { train_steps: steps, int8: true, ..Default::default() };
+    let prep = exp::prepare("rn18slim", kind, &opts)?;
+    println!(
+        "--- INT8 rn18slim / {} ({} classes averaged) ---",
+        kind.tag(),
+        avg_classes
+    );
+    let (mut b_dr, mut b_df) = (0.0, 0.0);
+    let (mut s_dr, mut s_df) = (0.0, 0.0);
+    let (mut f_dr, mut f_df, mut f_macs) = (0.0, 0.0, 0.0);
+    let (mut e_fic_sum, mut e_ssd_sum) = (0.0, 0.0);
+    for class in 0..avg_classes {
+        let base = exp::run_mode(&prep, class, Mode::Baseline, None)?;
+        let ssd = exp::run_mode(&prep, class, Mode::Ssd, None)?;
+        let sel = ssd.report.as_ref().map(|r| r.selected_per_depth.clone());
+        let fic = exp::run_mode(&prep, class, Mode::Ficabu, sel.as_deref())?;
+        let (e_fic, e_ssd, _) = exp::tables::hardware_cost(
+            &prep,
+            fic.report.as_ref().unwrap(),
+            ssd.report.as_ref().unwrap(),
+            Precision::Int8,
+        );
+        b_dr += base.dr;
+        b_df += base.df;
+        s_dr += ssd.dr;
+        s_df += ssd.df;
+        f_dr += fic.dr;
+        f_df += fic.df;
+        f_macs += fic.macs_vs_ssd_pct;
+        e_fic_sum += e_fic;
+        e_ssd_sum += e_ssd;
+    }
+    let n = avg_classes as f64;
+    let (b_dr, b_df) = (b_dr / n, b_df / n);
+    let (s_dr, s_df) = (s_dr / n, s_df / n);
+    let (f_dr, f_df, f_macs) = (f_dr / n, f_df / n, f_macs / n);
+    let es = 1.0 - e_fic_sum / e_ssd_sum;
+    println!("metric      Baseline     SSD      FiCABU");
+    println!("Dr [%]       {:7.2}  {:7.2}  {:7.2}", 100.0 * b_dr, 100.0 * s_dr, 100.0 * f_dr);
+    println!("Df [%]       {:7.2}  {:7.2}  {:7.2}", 100.0 * b_df, 100.0 * s_df, 100.0 * f_df);
+    println!("MACs [%]           -   100.00  {:8.4}", f_macs);
+    println!("RPR [%]            -        -  {:8.2}", rpr(b_dr, s_dr, f_dr));
+    println!(
+        "energy [mJ]        -  {:8.3} {:8.3}   ES {:6.2}%",
+        e_ssd_sum / n,
+        e_fic_sum / n,
+        100.0 * es
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1))?;
+    args.declare(&["avg-classes", "steps"]);
+    args.finish()?;
+    let avg = args.usize_or("avg-classes", 4)?;
+    let steps = args.usize_or("steps", 240)?;
+    println!("=== Table IV: FiCABU processor, INT8 ResNet-18 ===\n");
+    section(DatasetKind::Cifar20, avg, steps)?;
+    println!();
+    section(DatasetKind::PinsFace, avg, steps)?;
+    println!("\npaper shape: random-guess Df, positive RPR, energy to ~6.5% (CIFAR-20)");
+    println!("and ~0.13% (PinsFace) of the SSD-on-baseline cost.");
+    Ok(())
+}

@@ -1,0 +1,196 @@
+"""AOT export: lower every L2 module to HLO *text* under artifacts/.
+
+Python runs exactly once (``make artifacts``); afterwards the Rust binary
+is self-contained. Interchange is HLO text, NOT serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model we export:
+  fwd_<k>.hlo.txt    segment k forward, batch = BATCH          (params..., x) -> (y,)
+  bwd_<k>.hlo.txt    segment k VJP, batch = MICROBATCH         (params..., x, gy) -> (grads..., gx)
+  logits.hlo.txt     full forward, batch = BATCH               (params..., x) -> (logits,)
+  train_step.hlo.txt one SGD step, batch = BATCH               (params..., x, onehot, lr) -> (params'..., loss)
+  loss_grad.hlo.txt  dlogits of mean NLL, batch = MICROBATCH   (logits, onehot) -> (dlogits,)
+  meta.json          segment/param/shape/MAC inventory for the Rust side
+
+Shared (model-independent) engine modules:
+  shared/fimd.hlo.txt    FIMD IP tile update        (grad, acc, scale) -> (acc',)
+  shared/dampen.hlo.txt  Dampening IP tile pass     (theta, idf, id, alpha, lam) -> (theta', mask)
+  shared/gemm.hlo.txt    patch-GEMM engine demo     (x, y) -> (out,)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.dampen import dampen_tile
+from .kernels.fimd import TILE, fimd_update
+from .kernels.gemm import matmul_patch_k
+from .model import (
+    MODELS,
+    ModelSpec,
+    make_loss_grad_fn,
+    make_segment_bwd_fn,
+    make_segment_fwd_fn,
+    make_train_step_fn,
+)
+
+BATCH = 64        # forget-batch size N (paper §II) and eval batch
+MICROBATCH = 8    # Fisher micro-batch: grads of 8-sample slices are squared
+                  # and averaged; preserves the relative magnitudes that the
+                  # selection rule consumes (DESIGN.md §2)
+GEMM_DEMO = 256   # shared gemm module dimensions
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, arg_specs, path: str) -> None:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def export_model(spec: ModelSpec, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    meta = {
+        "name": spec.name,
+        "num_classes": spec.num_classes,
+        "input_shape": list(spec.input_shape),
+        "batch": BATCH,
+        "microbatch": MICROBATCH,
+        "tile": TILE,
+        "segments": [],
+        "modules": {
+            "logits": "logits.hlo.txt",
+            "train_step": "train_step.hlo.txt",
+            "loss_grad": "loss_grad.hlo.txt",
+        },
+    }
+
+    for k, seg in enumerate(spec.segments):
+        pspecs = [f32(s) for _, s in seg.param_specs]
+        fwd_name = f"fwd_{k:02d}.hlo.txt"
+        bwd_name = f"bwd_{k:02d}.hlo.txt"
+        lower_to_file(
+            make_segment_fwd_fn(seg),
+            pspecs + [f32((BATCH,) + seg.in_shape)],
+            os.path.join(out_dir, fwd_name),
+        )
+        lower_to_file(
+            make_segment_bwd_fn(seg),
+            pspecs
+            + [f32((MICROBATCH,) + seg.in_shape), f32((MICROBATCH,) + seg.out_shape)],
+            os.path.join(out_dir, bwd_name),
+        )
+        meta["segments"].append(
+            {
+                "name": seg.name,
+                "kind": seg.kind,
+                "params": [
+                    {"name": n, "shape": list(s)} for n, s in seg.param_specs
+                ],
+                "in_shape": list(seg.in_shape),
+                "out_shape": list(seg.out_shape),
+                "macs_fwd_per_sample": seg.macs_fwd_per_sample,
+                "fwd": fwd_name,
+                "bwd": bwd_name,
+            }
+        )
+        print(f"  [{spec.name}] segment {k:2d} {seg.name:8s} "
+              f"params={seg.param_count:7d} macs/sample={seg.macs_fwd_per_sample}")
+
+    all_pspecs = [f32(s) for _, s in sum(
+        ([p for p in seg.param_specs] for seg in spec.segments), [])]
+    lower_to_file(
+        spec.logits_fn(),
+        all_pspecs + [f32((BATCH,) + spec.input_shape)],
+        os.path.join(out_dir, "logits.hlo.txt"),
+    )
+    lower_to_file(
+        make_train_step_fn(spec),
+        all_pspecs
+        + [
+            f32((BATCH,) + spec.input_shape),
+            f32((BATCH, spec.num_classes)),
+            f32(()),
+        ],
+        os.path.join(out_dir, "train_step.hlo.txt"),
+    )
+    lower_to_file(
+        make_loss_grad_fn(),
+        [f32((MICROBATCH, spec.num_classes)), f32((MICROBATCH, spec.num_classes))],
+        os.path.join(out_dir, "loss_grad.hlo.txt"),
+    )
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"  [{spec.name}] logits/train_step/loss_grad + meta.json written")
+
+
+def export_shared(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    lower_to_file(
+        lambda g, a, s: (fimd_update(g, a, s),),
+        [f32((TILE,)), f32((TILE,)), f32((1,))],
+        os.path.join(out_dir, "fimd.hlo.txt"),
+    )
+    lower_to_file(
+        lambda t, idf, idd, al, la: dampen_tile(t, idf, idd, al, la),
+        [f32((TILE,)), f32((TILE,)), f32((TILE,)), f32((1,)), f32((1,))],
+        os.path.join(out_dir, "dampen.hlo.txt"),
+    )
+    lower_to_file(
+        lambda x, y: (matmul_patch_k(x, y),),
+        [f32((GEMM_DEMO, GEMM_DEMO)), f32((GEMM_DEMO, GEMM_DEMO))],
+        os.path.join(out_dir, "gemm.hlo.txt"),
+    )
+    with open(os.path.join(out_dir, "shared.json"), "w") as f:
+        json.dump(
+            {
+                "tile": TILE,
+                "gemm_demo": GEMM_DEMO,
+                "modules": {
+                    "fimd": "fimd.hlo.txt",
+                    "dampen": "dampen.hlo.txt",
+                    "gemm": "gemm.hlo.txt",
+                },
+            },
+            f,
+            indent=1,
+        )
+    print("  [shared] fimd/dampen/gemm + shared.json written")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts root")
+    ap.add_argument("--models", default="rn18slim,vitslim")
+    args = ap.parse_args()
+
+    export_shared(os.path.join(args.out, "shared"))
+    for name in args.models.split(","):
+        spec = MODELS[name]()
+        export_model(spec, os.path.join(args.out, name))
+    # build stamp for make
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from . import conv, dampen, fimd, gemm, ref  # noqa: F401

@@ -1,0 +1,50 @@
+"""im2col convolution on the patch-GEMM engine.
+
+The FiCABU processor runs convolutions on its GEMM backbone by lowering
+them to matrix multiplies (the standard VTA flow). This module provides the
+same lowering on top of the Pallas patch GEMM: extract (kh*kw*cin) patches,
+multiply by the reshaped filter, fold back to NHWC.
+
+Used by the kernel test-suite and the GEMM benches; inside the exported
+model graphs we let XLA's native conv lowering play the role of the VTA
+backbone (DESIGN.md §3) — the paper's *novel* IPs (FIMD, Dampening) are the
+Pallas kernels on the unlearning hot path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .gemm import matmul_patch
+
+
+def im2col(x, kh: int, kw: int, stride: int, padding: int):
+    """NHWC -> (B*Ho*Wo, kh*kw*C) patch matrix."""
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (w + 2 * padding - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                xp,
+                (0, i, j, 0),
+                (b, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            cols.append(patch.reshape(b * ho * wo, c))
+    return jnp.concatenate(cols, axis=1), (b, ho, wo)
+
+
+def conv2d_gemm(x, w, stride: int = 1, padding: int = 1):
+    """2-D convolution via im2col + patch GEMM.
+
+    Args:
+      x: f32[B,H,W,Cin] NHWC input.
+      w: f32[kh,kw,Cin,Cout] HWIO filter.
+    """
+    kh, kw, cin, cout = w.shape
+    cols, (b, ho, wo) = im2col(x, kh, kw, stride, padding)
+    wmat = w.transpose(0, 1, 2, 3).reshape(kh * kw * cin, cout)
+    out = matmul_patch(cols, wmat)
+    return out.reshape(b, ho, wo, cout)

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel for the Dampening IP (selection + beta + update).
+
+Paper §IV-A, Fig. 5b: for each parameter the IP compares ``I_Df`` against
+``alpha * I_D`` (eq. 3), generates ``beta = min(lambda * I_D / I_Df, 1)``
+(eq. 4) in the beta GENERATOR when selected, and updates the value by
+multiplication. The RTL is a double-buffered 5-stage pipeline
+LOAD -> COMPARE -> betaCALC -> MULTIPLY -> STORE; here all four compute
+stages fuse into one VPU pass over the tile, and the LOAD/STORE stages are
+the BlockSpec streams.
+
+Balanced Dampening (paper eq. 5) is realised by the *coordinator* scaling
+``(alpha, lambda)`` by the depth profile S(l) before issuing the tile — the
+kernel itself stays layer-agnostic, exactly like the hardware IP.
+
+Outputs both the updated parameters and the selection mask; the mask feeds
+Fig. 3 (layer-wise selected-parameter distribution) and the MAC accounting.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fimd import BLOCK, TILE  # same burst geometry as the FIMD IP
+
+
+def dampen_tile(theta, i_df, i_d, alpha, lam):
+    """One Dampening pass over a parameter burst.
+
+    Args:
+      theta: f32[T] parameter chunk.
+      i_df:  f32[T] forget-set importance for the chunk.
+      i_d:   f32[T] stored global importance for the chunk.
+      alpha: f32[1] selection threshold (already S(l)-scaled by L3).
+      lam:   f32[1] dampening constant  (already S(l)-scaled by L3).
+
+    Returns:
+      (f32[T] updated theta, f32[T] selection mask in {0,1}).
+    """
+    (t,) = theta.shape
+    assert t % BLOCK == 0, f"tile {t} must be a multiple of {BLOCK}"
+
+    def kernel(t_ref, f_ref, d_ref, a_ref, l_ref, o_ref, m_ref):
+        th = t_ref[...]
+        idf = f_ref[...]
+        idd = d_ref[...]
+        # COMPARE
+        sel = idf > a_ref[0] * idd
+        # betaCALC — guard the divide; unselected lanes are masked anyway.
+        beta = jnp.minimum(l_ref[0] * idd / jnp.maximum(idf, 1e-30), 1.0)
+        # MULTIPLY
+        o_ref[...] = jnp.where(sel, beta * th, th)
+        m_ref[...] = sel.astype(jnp.float32)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(t // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+        ],
+        interpret=True,
+    )(theta, i_df, i_d, alpha, lam)

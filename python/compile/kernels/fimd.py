@@ -1,0 +1,58 @@
+"""L1 Pallas kernel for the FIMD IP (diagonal Fisher estimation).
+
+Paper §IV-A, Fig. 5a: the FIMD module consumes gradient tiles produced by
+the GEMM engine, squares each element and accumulates across the batch
+dimension to produce the forget-set importance ``I_Df`` (eq. 2). The RTL
+is a double-buffered LOAD -> SQUARE -> ACCUMULATE -> STORE 4-stage pipeline;
+in Pallas the same schedule is a 1-D tile grid whose consecutive steps are
+pipelined automatically, with SQUARE+ACCUMULATE fused on the VPU.
+
+The kernel is stateless across calls: the accumulator tile is an explicit
+input/output, so the Rust coordinator streams (grad tile, acc tile) pairs
+through one compiled module per unlearning pass — mirroring the DMA-burst
+organisation of the hardware IP.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One DMA burst / scratchpad line of the Unlearning Engine. 8192 f32 = 32 KiB,
+# half of the 64 KB on-chip SRAM of the prototype (paper §IV-A), leaving the
+# other half to the double buffer.
+TILE = 8192
+BLOCK = 1024  # VPU-friendly inner block (8 x 128 lanes)
+
+
+def fimd_update(grad, acc, scale):
+    """One FIMD accumulation step: ``acc + scale * grad**2`` (elementwise).
+
+    Args:
+      grad:  f32[TILE] gradient burst for a parameter chunk.
+      acc:   f32[TILE] running importance accumulator for the same chunk.
+      scale: f32[1] microbatch weight (1/num_microbatches), broadcast.
+
+    Returns:
+      f32[TILE] updated accumulator.
+    """
+    (t,) = grad.shape
+    assert t % BLOCK == 0, f"tile {t} must be a multiple of {BLOCK}"
+
+    def kernel(g_ref, a_ref, s_ref, o_ref):
+        # SQUARE + ACCUMULATE stages, fused; LOAD/STORE are the BlockSpec
+        # streams on either side.
+        g = g_ref[...]
+        o_ref[...] = a_ref[...] + s_ref[0] * g * g
+
+    return pl.pallas_call(
+        kernel,
+        grid=(t // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        interpret=True,
+    )(grad, acc, scale)

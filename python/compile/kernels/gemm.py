@@ -1,0 +1,144 @@
+"""L1 Pallas patch-streaming GEMM — the VTA-backbone analogue.
+
+The FiCABU processor executes all matrix arithmetic on a GEMM engine that
+streams fixed-size *patches* (tiles) from memory (paper §IV-A, Fig. 5c).
+On TPU the analogous schedule is a Pallas grid over (M, N[, K]) tiles with
+BlockSpecs expressing the HBM->VMEM movement; the MXU plays the PE array.
+
+All kernels are lowered with ``interpret=True`` so the emitted HLO runs on
+any PJRT backend (CPU here); real-TPU lowering would emit a Mosaic
+custom-call instead (see DESIGN.md §6).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default patch shape. 128 matches the MXU systolic dimension; the VTA
+# prototype in the paper uses 16x16 INT8 patches — the *streaming schedule*
+# is what we reproduce, the patch size is a tuning knob (see bench_gemm).
+DEF_BM = 128
+DEF_BN = 128
+DEF_BK = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pad2(a, rows: int, cols: int):
+    r, c = a.shape
+    if r == rows and c == cols:
+        return a
+    return jnp.pad(a, ((0, rows - r), (0, cols - c)))
+
+
+def matmul_patch(x, y, *, bm: int = DEF_BM, bn: int = DEF_BN):
+    """Patch GEMM with full-K rows streamed per grid step.
+
+    Grid is (M/bm, N/bn); each step loads an (bm, K) row-band of ``x`` and a
+    (K, bn) column-band of ``y`` into VMEM and issues one MXU matmul.
+    Suitable when K fits VMEM (true for every layer in the slim models).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch {k} vs {k2}"
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), k
+    xp, yp = _pad2(x, mp, kp), _pad2(y, kp, np_)
+
+    def kernel(x_ref, y_ref, o_ref):
+        o_ref[...] = jnp.dot(
+            x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def matmul_patch_k(x, y, *, bm: int = DEF_BM, bn: int = DEF_BN, bk: int = DEF_BK):
+    """Patch GEMM with a K-streamed accumulation grid.
+
+    Grid is (M/bm, N/bn, K/bk); the output block is revisited across the K
+    axis and accumulated in place — the Pallas analogue of the VTA
+    load/compute/store queue overlap (double buffering is the automatic
+    pipelining of consecutive grid steps).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    xp, yp = _pad2(x, mp, kp), _pad2(y, kp, np_)
+    nk = kp // bk
+
+    def kernel(x_ref, y_ref, o_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def linear(x, w):
+    """``x @ w`` on the patch-GEMM engine, differentiable.
+
+    Pallas kernels carry no autodiff rule, so the VJP is defined manually —
+    both the forward and the two backward products run on the same patch
+    engine, exactly as the processor would schedule them.
+    """
+    return matmul_patch(x, w)
+
+
+def _linear_fwd(x, w):
+    return linear(x, w), (x, w)
+
+
+def _linear_bwd(res, g):
+    x, w = res
+    return matmul_patch(g, w.T), matmul_patch(x.T, g)
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)
+
+
+def vmem_bytes(bm: int, bn: int, k: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one ``matmul_patch`` grid step."""
+    return dtype_bytes * (bm * k + k * bn + bm * bn)
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int = DEF_BM, bn: int = DEF_BN):
+    """Fraction of MXU work that is useful (non-padding) for a given GEMM."""
+    mp, np_ = _ceil_to(m, min(bm, _ceil_to(m, 8))), _ceil_to(n, min(bn, _ceil_to(n, 8)))
+    return (m * n * k) / float(mp * np_ * k)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the CORE correctness references: pytest sweeps shapes/dtypes and
+asserts the Pallas kernels match these to float tolerance. Nothing here is
+ever exported to HLO.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_matmul(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def ref_fimd_update(grad, acc, scale):
+    return acc + scale[0] * grad * grad
+
+
+def ref_dampen(theta, i_df, i_d, alpha, lam):
+    sel = i_df > alpha[0] * i_d
+    beta = jnp.minimum(lam[0] * i_d / jnp.maximum(i_df, 1e-30), 1.0)
+    return jnp.where(sel, beta * theta, theta), sel.astype(jnp.float32)
+
+
+def ref_conv2d(x, w, stride: int = 1, padding: int = 1):
+    import jax.lax as lax
+
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

@@ -1,0 +1,451 @@
+"""L2 — JAX model graphs for the FiCABU reproduction.
+
+Two architecturally-faithful, width-reduced models (DESIGN.md §2):
+
+* ``rn18slim`` — ResNet-18 topology: stem conv, 4 stages x 2 BasicBlocks
+  (16 block convolutions, matching the paper's "16 convolutional layers"
+  checkpoint grid), global-average-pool head. BatchNorm is replaced by
+  GroupNorm so the model is stateless (no running statistics to ship across
+  the AOT boundary); the unlearning mechanics only see per-layer parameter
+  tensors either way.
+* ``vitslim``  — ViT topology: 4x4 patch embedding + learned positional
+  embedding, 12 pre-LN encoder blocks (the paper's checkpoint grid is every
+  3 of 12), mean-pool + linear head.
+
+Each model is a list of :class:`Segment` — the unit of the back-end-first
+unlearning loop. Segment boundaries are where activations are cached and
+where partial inference can resume, so every segment's ``apply`` is a pure
+function ``(params, x) -> y``. The classifier head uses the Pallas patch
+GEMM (`kernels.gemm.linear`), putting the L1 engine on the model path.
+
+Depth convention (paper §III-A): l = 1 is the segment nearest the output
+(the head), l = L the segment nearest the input (the stem / patch embed).
+Segments are stored front-to-back (forward order); ``depth_l`` converts.
+"""
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gemm import linear
+
+# ---------------------------------------------------------------------------
+# Segment plumbing
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Segment:
+    """One unlearning unit: a named pure function with named parameters."""
+
+    name: str
+    kind: str                              # stem | block | head | embed | encoder
+    param_specs: List[Tuple[str, Tuple[int, ...]]]
+    apply: Callable                        # (params: list[Array], x) -> y
+    in_shape: Tuple[int, ...]              # per-sample shape (no batch dim)
+    out_shape: Tuple[int, ...]
+    macs_fwd_per_sample: int               # analytic MAC count, fwd, 1 sample
+
+    @property
+    def param_count(self) -> int:
+        return sum(int(math.prod(s)) for _, s in self.param_specs)
+
+
+@dataclass
+class ModelSpec:
+    name: str
+    num_classes: int
+    input_shape: Tuple[int, ...]           # per-sample, e.g. (32, 32, 3)
+    segments: List[Segment] = field(default_factory=list)
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.segments)
+
+    def depth_l(self, seg_index: int) -> int:
+        """Paper depth index: head (last segment) -> l=1, stem -> l=L."""
+        return self.num_segments - seg_index
+
+    def logits_fn(self):
+        """Full forward: (flat params..., x) -> logits, for AOT export."""
+        counts = [len(s.param_specs) for s in self.segments]
+
+        def fn(*args):
+            args = _pin_args(args)
+            x = args[-1]
+            flat = list(args[:-1])
+            off = 0
+            for seg, c in zip(self.segments, counts):
+                x = seg.apply(flat[off : off + c], x)
+                off += c
+            return (x,)
+
+        return fn
+
+    def all_param_specs(self):
+        out = []
+        for si, seg in enumerate(self.segments):
+            for pname, shape in seg.param_specs:
+                out.append((si, seg.name, pname, shape))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Shared primitives (stateless)
+# ---------------------------------------------------------------------------
+
+GN_GROUPS = 4
+GN_EPS = 1e-5
+LN_EPS = 1e-5
+
+
+def group_norm(x, gamma, beta, groups: int = GN_GROUPS):
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(b, h, w, g, c // g)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xn = ((xg - mu) * jax.lax.rsqrt(var + GN_EPS)).reshape(b, h, w, c)
+    return xn * gamma + beta
+
+
+def layer_norm(x, gamma, beta):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + LN_EPS) * gamma + beta
+
+
+def conv2d(x, w, stride: int = 1):
+    """SAME conv, NHWC/HWIO — the XLA-native path standing in for the VTA
+    GEMM backbone (DESIGN.md §3); kernels/conv.py holds the explicit
+    im2col+Pallas lowering, cross-checked in the kernel tests."""
+    kh, _, _, _ = w.shape
+    pad = kh // 2
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18-slim
+# ---------------------------------------------------------------------------
+
+
+def _conv_macs(hw_out: int, cin: int, cout: int, k: int) -> int:
+    return hw_out * hw_out * cout * cin * k * k
+
+
+def build_rn18slim(num_classes: int = 20, width: int = 8,
+                   img: int = 32) -> ModelSpec:
+    """ResNet-18 topology at reduced width (stage widths w, 2w, 4w, 8w)."""
+    spec = ModelSpec("rn18slim", num_classes, (img, img, 3))
+    w0 = width
+
+    # --- stem ---
+    def stem_apply(p, x):
+        wv, g, b = p
+        return jax.nn.relu(group_norm(conv2d(x, wv, 1), g, b))
+
+    spec.segments.append(
+        Segment(
+            name="stem",
+            kind="stem",
+            param_specs=[("w", (3, 3, 3, w0)), ("gamma", (w0,)), ("beta", (w0,))],
+            apply=stem_apply,
+            in_shape=(img, img, 3),
+            out_shape=(img, img, w0),
+            macs_fwd_per_sample=_conv_macs(img, 3, w0, 3),
+        )
+    )
+
+    # --- 4 stages x 2 BasicBlocks ---
+    stage_widths = [w0, 2 * w0, 4 * w0, 8 * w0]
+    hw = img
+    cin = w0
+    for s, cout in enumerate(stage_widths):
+        for b in range(2):
+            stride = 2 if (s > 0 and b == 0) else 1
+            down = (stride != 1) or (cin != cout)
+            hw_out = hw // stride
+
+            params = [
+                ("w1", (3, 3, cin, cout)),
+                ("g1", (cout,)),
+                ("b1", (cout,)),
+                ("w2", (3, 3, cout, cout)),
+                ("g2", (cout,)),
+                ("b2", (cout,)),
+            ]
+            if down:
+                params += [("wd", (1, 1, cin, cout)), ("gd", (cout,)), ("bd", (cout,))]
+
+            def block_apply(p, x, stride=stride, down=down):
+                w1, g1, b1, w2, g2, b2 = p[:6]
+                h = jax.nn.relu(group_norm(conv2d(x, w1, stride), g1, b1))
+                h = group_norm(conv2d(h, w2, 1), g2, b2)
+                if down:
+                    wd, gd, bd = p[6:]
+                    sc = group_norm(conv2d(x, wd, stride), gd, bd)
+                else:
+                    sc = x
+                return jax.nn.relu(h + sc)
+
+            macs = (
+                _conv_macs(hw_out, cin, cout, 3)
+                + _conv_macs(hw_out, cout, cout, 3)
+                + (_conv_macs(hw_out, cin, cout, 1) if down else 0)
+            )
+            spec.segments.append(
+                Segment(
+                    name=f"s{s + 1}b{b + 1}",
+                    kind="block",
+                    param_specs=params,
+                    apply=block_apply,
+                    in_shape=(hw, hw, cin),
+                    out_shape=(hw_out, hw_out, cout),
+                    macs_fwd_per_sample=macs,
+                )
+            )
+            hw, cin = hw_out, cout
+
+    # --- head: GAP + Pallas-GEMM linear ---
+    cfin = stage_widths[-1]
+
+    def head_apply(p, x):
+        wv, b = p
+        pooled = x.mean(axis=(1, 2))
+        return linear(pooled, wv) + b
+
+    spec.segments.append(
+        Segment(
+            name="head",
+            kind="head",
+            param_specs=[("w", (cfin, num_classes)), ("b", (num_classes,))],
+            apply=head_apply,
+            in_shape=(hw, hw, cfin),
+            out_shape=(num_classes,),
+            macs_fwd_per_sample=cfin * num_classes,
+        )
+    )
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# ViT-slim
+# ---------------------------------------------------------------------------
+
+
+def build_vitslim(
+    num_classes: int = 20,
+    dim: int = 32,
+    depth: int = 12,
+    heads: int = 4,
+    mlp_ratio: int = 2,
+    patch: int = 4,
+    img: int = 32,
+) -> ModelSpec:
+    spec = ModelSpec("vitslim", num_classes, (img, img, 3))
+    tokens = (img // patch) ** 2
+    hdim = dim // heads
+    mlp = dim * mlp_ratio
+
+    # --- patch embed (+ learned positional embedding) ---
+    def embed_apply(p, x):
+        wv, b, pos = p
+        bsz = x.shape[0]
+        xp = x.reshape(bsz, img // patch, patch, img // patch, patch, 3)
+        xp = xp.transpose(0, 1, 3, 2, 4, 5).reshape(bsz, tokens, patch * patch * 3)
+        return xp @ wv + b + pos
+
+    spec.segments.append(
+        Segment(
+            name="embed",
+            kind="embed",
+            param_specs=[
+                ("w", (patch * patch * 3, dim)),
+                ("b", (dim,)),
+                ("pos", (tokens, dim)),
+            ],
+            apply=embed_apply,
+            in_shape=(img, img, 3),
+            out_shape=(tokens, dim),
+            macs_fwd_per_sample=tokens * patch * patch * 3 * dim,
+        )
+    )
+
+    # --- encoder blocks (pre-LN) ---
+    def enc_apply(p, x):
+        ln1g, ln1b, wqkv, bqkv, wproj, bproj, ln2g, ln2b, w1, b1, w2, b2 = p
+        bsz, t, d = x.shape
+        h = layer_norm(x, ln1g, ln1b)
+        qkv = h @ wqkv + bqkv
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads_view(a):
+            return a.reshape(bsz, t, heads, hdim).transpose(0, 2, 1, 3)
+
+        q, k, v = heads_view(q), heads_view(k), heads_view(v)
+        att = jax.nn.softmax(q @ k.transpose(0, 1, 3, 2) / math.sqrt(hdim), axis=-1)
+        o = (att @ v).transpose(0, 2, 1, 3).reshape(bsz, t, d)
+        x = x + o @ wproj + bproj
+        h2 = layer_norm(x, ln2g, ln2b)
+        h2 = jax.nn.gelu(h2 @ w1 + b1) @ w2 + b2
+        return x + h2
+
+    enc_macs = (
+        tokens * dim * 3 * dim                 # qkv
+        + 2 * heads * tokens * tokens * hdim   # scores + AV
+        + tokens * dim * dim                   # proj
+        + 2 * tokens * dim * mlp               # mlp
+    )
+    for i in range(depth):
+        spec.segments.append(
+            Segment(
+                name=f"enc{i + 1}",
+                kind="encoder",
+                param_specs=[
+                    ("ln1g", (dim,)),
+                    ("ln1b", (dim,)),
+                    ("wqkv", (dim, 3 * dim)),
+                    ("bqkv", (3 * dim,)),
+                    ("wproj", (dim, dim)),
+                    ("bproj", (dim,)),
+                    ("ln2g", (dim,)),
+                    ("ln2b", (dim,)),
+                    ("w1", (dim, mlp)),
+                    ("b1", (mlp,)),
+                    ("w2", (mlp, dim)),
+                    ("b2", (dim,)),
+                ],
+                apply=enc_apply,
+                in_shape=(tokens, dim),
+                out_shape=(tokens, dim),
+                macs_fwd_per_sample=enc_macs,
+            )
+        )
+
+    # --- head: LN + mean-pool + Pallas-GEMM linear ---
+    def head_apply(p, x):
+        g, b, wv, bv = p
+        h = layer_norm(x, g, b).mean(axis=1)
+        return linear(h, wv) + bv
+
+    spec.segments.append(
+        Segment(
+            name="head",
+            kind="head",
+            param_specs=[
+                ("lng", (dim,)),
+                ("lnb", (dim,)),
+                ("w", (dim, num_classes)),
+                ("b", (num_classes,)),
+            ],
+            apply=head_apply,
+            in_shape=(tokens, dim),
+            out_shape=(num_classes,),
+            macs_fwd_per_sample=dim * num_classes,
+        )
+    )
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Losses / training step (exported whole-model modules)
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, onehot):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -(onehot * logp).sum(axis=-1).mean()
+
+
+def _pin_args(args):
+    """Defeat argument DCE in the StableHLO->XLA conversion.
+
+    The xla_client converter drops ENTRY parameters whose *values* are
+    unused (e.g. a bias in its own VJP) and silently renumbers the rest,
+    which would desynchronise the Rust caller's positional argument
+    binding. An optimization_barrier makes every argument live without
+    changing any result."""
+    return jax.lax.optimization_barrier(tuple(args))
+
+
+def make_loss_grad_fn():
+    """(logits[B,C], onehot[B,C]) -> dlogits for mean NLL — the gradient the
+    FIMD stream starts from."""
+
+    def fn(logits, onehot):
+        logits, onehot = _pin_args((logits, onehot))
+        b = logits.shape[0]
+        return ((jax.nn.softmax(logits, axis=-1) - onehot) / b,)
+
+    return fn
+
+
+def make_train_step_fn(spec: ModelSpec):
+    """One SGD step: (flat params..., x, onehot, lr) -> (new params..., loss)."""
+    counts = [len(s.param_specs) for s in spec.segments]
+    n_params = sum(counts)
+
+    def forward(flat, x):
+        off = 0
+        for seg, c in zip(spec.segments, counts):
+            x = seg.apply(flat[off : off + c], x)
+            off += c
+        return x
+
+    def fn(*args):
+        args = _pin_args(args)
+        flat = list(args[:n_params])
+        x, onehot, lr = args[n_params], args[n_params + 1], args[n_params + 2]
+
+        def loss_fn(fl):
+            return cross_entropy(forward(fl, x), onehot)
+
+        loss, grads = jax.value_and_grad(loss_fn)(flat)
+        new = [p - lr * g for p, g in zip(flat, grads)]
+        return tuple(new) + (loss,)
+
+    return fn
+
+
+def make_segment_fwd_fn(seg: Segment):
+    def fn(*args):
+        args = _pin_args(args)
+        return (seg.apply(list(args[:-1]), args[-1]),)
+
+    return fn
+
+
+def make_segment_bwd_fn(seg: Segment):
+    """(params..., x, gy) -> (param grads..., gx) via VJP through the
+    segment. Because the head uses the custom-VJP Pallas linear, its
+    backward also runs on the patch engine."""
+    n = len(seg.param_specs)
+
+    def fn(*args):
+        args = _pin_args(args)
+        params = list(args[:n])
+        x, gy = args[n], args[n + 1]
+
+        def f(ps, xx):
+            return seg.apply(ps, xx)
+
+        _, vjp = jax.vjp(f, params, x)
+        gparams, gx = vjp(gy)
+        return tuple(gparams) + (gx,)
+
+    return fn
+
+
+MODELS = {
+    "rn18slim": build_rn18slim,
+    "vitslim": build_vitslim,
+}

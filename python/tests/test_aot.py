@@ -1,0 +1,105 @@
+"""AOT artifact consistency: meta.json matches the model specs and the HLO
+text files exist, are parseable-looking, and have the right entry arity.
+
+Runs against the artifacts/ tree if present (make artifacts); otherwise the
+export-path tests are skipped and only the in-process lowering tests run.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def art(*p):
+    return os.path.join(ART, *p)
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(art(".stamp")), reason="run `make artifacts` first"
+)
+
+
+def test_to_hlo_text_roundtrip_smoke():
+    """Lower a trivial fn and sanity-check the HLO text format the Rust
+    loader consumes (ENTRY + ROOT tuple)."""
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "ROOT" in text
+    assert "f32[4]" in text
+
+
+@needs_artifacts
+@pytest.mark.parametrize("name", ["rn18slim", "vitslim"])
+def test_meta_matches_spec(name):
+    spec = M.MODELS[name]()
+    with open(art(name, "meta.json")) as f:
+        meta = json.load(f)
+    assert meta["name"] == name
+    assert meta["num_classes"] == spec.num_classes
+    assert len(meta["segments"]) == spec.num_segments
+    for seg, ms in zip(spec.segments, meta["segments"]):
+        assert ms["name"] == seg.name
+        assert [tuple(p["shape"]) for p in ms["params"]] == [
+            s for _, s in seg.param_specs
+        ]
+        assert ms["macs_fwd_per_sample"] == seg.macs_fwd_per_sample
+
+
+@needs_artifacts
+@pytest.mark.parametrize("name", ["rn18slim", "vitslim"])
+def test_all_modules_exist_nonempty(name):
+    with open(art(name, "meta.json")) as f:
+        meta = json.load(f)
+    files = [s["fwd"] for s in meta["segments"]]
+    files += [s["bwd"] for s in meta["segments"]]
+    files += list(meta["modules"].values())
+    for fn in files:
+        p = art(name, fn)
+        assert os.path.exists(p), fn
+        with open(p) as f:
+            text = f.read()
+        assert "ENTRY" in text, fn
+
+
+@needs_artifacts
+def test_shared_modules_exist():
+    with open(art("shared", "shared.json")) as f:
+        shared = json.load(f)
+    assert shared["tile"] % 1024 == 0
+    for fn in shared["modules"].values():
+        assert os.path.exists(art("shared", fn)), fn
+
+
+def _entry_param_count(text: str) -> int:
+    """Count parameter instructions inside the ENTRY computation only
+    (nested fusion computations also contain `parameter(i)` lines; ENTRY is
+    the last computation in HLO text)."""
+    entry = text[text.rindex("ENTRY") :]
+    return entry.count(" parameter(")
+
+
+@needs_artifacts
+@pytest.mark.parametrize("name", ["rn18slim", "vitslim"])
+def test_hlo_entry_arity(name):
+    """fwd module must take (n_params + 1) args; bwd (n_params + 2)."""
+    spec = M.MODELS[name]()
+    with open(art(name, "meta.json")) as f:
+        meta = json.load(f)
+    for seg, ms in zip(spec.segments, meta["segments"]):
+        n = len(seg.param_specs)
+        with open(art(name, ms["fwd"])) as f:
+            nparams = _entry_param_count(f.read())
+        assert nparams == n + 1, (seg.name, nparams, n + 1)
+        with open(art(name, ms["bwd"])) as f:
+            nparams_b = _entry_param_count(f.read())
+        assert nparams_b == n + 2, (seg.name, nparams_b)

@@ -1,0 +1,194 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle across a shape sweep.
+
+The environment has no `hypothesis` package, so the sweep is an explicit
+seeded parameter grid (same spirit: many shapes/dtypes, deterministic
+reproduction via the printed seed/params on failure).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import conv, dampen, fimd, gemm, ref
+
+SEEDS = [0, 1, 2]
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# GEMM patch engine
+# ---------------------------------------------------------------------------
+
+GEMM_SHAPES = [
+    (8, 8, 8),
+    (64, 64, 64),
+    (64, 64, 20),     # head fc shape (N not tile-aligned)
+    (37, 53, 29),     # fully unaligned
+    (1, 64, 20),
+    (128, 256, 64),
+    (256, 19, 7),
+]
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("m,k,n", GEMM_SHAPES)
+def test_matmul_patch(seed, m, k, n):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x, y = rand(kx, (m, k)), rand(ky, (k, n))
+    np.testing.assert_allclose(
+        gemm.matmul_patch(x, y), ref.ref_matmul(x, y), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("seed", SEEDS[:2])
+@pytest.mark.parametrize("m,k,n", GEMM_SHAPES)
+def test_matmul_patch_k_streamed(seed, m, k, n):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed + 100))
+    x, y = rand(kx, (m, k)), rand(ky, (k, n))
+    np.testing.assert_allclose(
+        gemm.matmul_patch_k(x, y), ref.ref_matmul(x, y), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (32, 64), (128, 128), (256, 128)])
+def test_matmul_patch_block_shapes(bm, bn):
+    """Patch geometry is a tuning knob; results must be identical."""
+    kx, ky = jax.random.split(jax.random.PRNGKey(7))
+    x, y = rand(kx, (96, 48)), rand(ky, (48, 40))
+    np.testing.assert_allclose(
+        gemm.matmul_patch(x, y, bm=bm, bn=bn),
+        ref.ref_matmul(x, y),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+
+
+def test_linear_custom_vjp_matches_autodiff_oracle():
+    kx, ky, kg = jax.random.split(jax.random.PRNGKey(3), 3)
+    x, w = rand(kx, (16, 24)), rand(ky, (24, 12))
+    g = rand(kg, (16, 12))
+
+    def pallas_loss(x, w):
+        return (gemm.linear(x, w) * g).sum()
+
+    def ref_loss(x, w):
+        return (ref.ref_matmul(x, w) * g).sum()
+
+    gx_p, gw_p = jax.grad(pallas_loss, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(ref_loss, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx_p, gx_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gw_p, gw_r, rtol=1e-4, atol=1e-5)
+
+
+def test_mxu_utilization_bounds():
+    assert gemm.mxu_utilization(128, 128, 64) == 1.0
+    u = gemm.mxu_utilization(37, 53, 29)
+    assert 0.0 < u <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# FIMD IP (diagonal Fisher tile update)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("t", [1024, 4096, fimd.TILE])
+def test_fimd_update(seed, t):
+    kg, ka = jax.random.split(jax.random.PRNGKey(seed))
+    g, a = rand(kg, (t,)), jnp.abs(rand(ka, (t,)))
+    s = jnp.array([1.0 / 8])
+    np.testing.assert_allclose(
+        fimd.fimd_update(g, a, s), ref.ref_fimd_update(g, a, s), rtol=1e-6, atol=1e-7
+    )
+
+
+def test_fimd_accumulates_over_microbatches():
+    """Streaming the kernel over M microbatches == one-shot mean of squares."""
+    key = jax.random.PRNGKey(9)
+    grads = rand(key, (8, fimd.TILE))
+    acc = jnp.zeros((fimd.TILE,))
+    s = jnp.array([1.0 / 8])
+    for i in range(8):
+        acc = fimd.fimd_update(grads[i], acc, s)
+    np.testing.assert_allclose(acc, (grads**2).mean(axis=0), rtol=1e-5, atol=1e-6)
+
+
+def test_fimd_zero_grad_is_identity():
+    acc = jnp.arange(fimd.TILE, dtype=jnp.float32)
+    out = fimd.fimd_update(jnp.zeros((fimd.TILE,)), acc, jnp.array([1.0]))
+    np.testing.assert_allclose(out, acc)
+
+
+# ---------------------------------------------------------------------------
+# Dampening IP
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("alpha,lam", [(10.0, 1.0), (25.0, 1.0), (50.0, 0.1), (0.5, 2.0)])
+def test_dampen_tile(seed, alpha, lam):
+    kt, kf, kd = jax.random.split(jax.random.PRNGKey(seed), 3)
+    t = fimd.TILE
+    theta = rand(kt, (t,))
+    idf = jnp.abs(rand(kf, (t,)))
+    idd = jnp.abs(rand(kd, (t,)))
+    al, la = jnp.array([alpha]), jnp.array([lam])
+    got_t, got_m = dampen.dampen_tile(theta, idf, idd, al, la)
+    want_t, want_m = ref.ref_dampen(theta, idf, idd, al, la)
+    np.testing.assert_allclose(got_t, want_t, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(got_m, want_m)
+
+
+def test_dampen_properties():
+    """Invariants of eq. (3)/(4): unselected params untouched; selected
+    params shrink in magnitude (beta <= 1); mask is exactly the selection
+    predicate."""
+    key = jax.random.PRNGKey(11)
+    t = fimd.TILE
+    theta = rand(key, (t,))
+    idf = jnp.abs(rand(jax.random.PRNGKey(12), (t,))) + 1e-6
+    idd = jnp.abs(rand(jax.random.PRNGKey(13), (t,))) + 1e-6
+    al, la = jnp.array([1.0]), jnp.array([1.0])
+    out, mask = dampen.dampen_tile(theta, idf, idd, al, la)
+    sel = np.asarray(idf > al[0] * idd)
+    np.testing.assert_allclose(np.asarray(out)[~sel], np.asarray(theta)[~sel])
+    assert np.all(np.abs(np.asarray(out)) <= np.abs(np.asarray(theta)) + 1e-7)
+    np.testing.assert_allclose(np.asarray(mask), sel.astype(np.float32))
+
+
+def test_dampen_alpha_monotone():
+    """Larger alpha selects fewer parameters."""
+    key = jax.random.PRNGKey(21)
+    t = fimd.TILE
+    theta = rand(key, (t,))
+    idf = jnp.abs(rand(jax.random.PRNGKey(22), (t,)))
+    idd = jnp.abs(rand(jax.random.PRNGKey(23), (t,)))
+    counts = []
+    for alpha in (0.1, 1.0, 10.0, 100.0):
+        _, m = dampen.dampen_tile(theta, idf, idd, jnp.array([alpha]), jnp.array([1.0]))
+        counts.append(float(m.sum()))
+    assert counts == sorted(counts, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# im2col conv on the patch engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("b,hw,cin,cout,k", [(2, 8, 3, 8, 3), (1, 16, 8, 16, 3), (2, 8, 4, 4, 1)])
+def test_conv2d_gemm(stride, b, hw, cin, cout, k):
+    kx, kw = jax.random.split(jax.random.PRNGKey(b * 100 + hw))
+    x = rand(kx, (b, hw, hw, cin))
+    w = rand(kw, (k, k, cin, cout), scale=0.2)
+    pad = k // 2
+    np.testing.assert_allclose(
+        conv.conv2d_gemm(x, w, stride, pad),
+        ref.ref_conv2d(x, w, stride, pad),
+        rtol=1e-4,
+        atol=1e-4,
+    )

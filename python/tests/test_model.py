@@ -1,0 +1,169 @@
+"""L2 model-graph correctness: segment composition, VJP fidelity, shapes."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def init_flat(spec, seed=0, scale=0.1):
+    key = jax.random.PRNGKey(seed)
+    flat = []
+    for _, _, _, shape in spec.all_param_specs():
+        key, sub = jax.random.split(key)
+        flat.append(jax.random.normal(sub, shape) * scale)
+    return flat
+
+
+@pytest.fixture(scope="module")
+def rn():
+    return M.build_rn18slim()
+
+
+@pytest.fixture(scope="module")
+def vit():
+    return M.build_vitslim()
+
+
+# ---------------------------------------------------------------------------
+# Topology fidelity (paper checkpoint grids need these counts)
+# ---------------------------------------------------------------------------
+
+
+def test_rn_topology(rn):
+    assert rn.num_segments == 10  # stem + 8 blocks + head
+    kinds = [s.kind for s in rn.segments]
+    assert kinds == ["stem"] + ["block"] * 8 + ["head"]
+    # 16 block convolutions, as in the paper's checkpoint description
+    convs = sum(
+        1 for s in rn.segments for n, _ in s.param_specs if n in ("w1", "w2")
+    )
+    assert convs == 16
+
+
+def test_vit_topology(vit):
+    assert vit.num_segments == 14  # embed + 12 encoders + head
+    assert sum(1 for s in vit.segments if s.kind == "encoder") == 12
+
+
+def test_depth_indexing(rn):
+    # l=1 is the head (back-end), l=L the stem (front-end) — paper §III-A.
+    assert rn.depth_l(rn.num_segments - 1) == 1
+    assert rn.depth_l(0) == rn.num_segments
+
+
+@pytest.mark.parametrize("name", ["rn18slim", "vitslim"])
+def test_segment_shapes_chain(name):
+    spec = M.MODELS[name]()
+    for a, b in zip(spec.segments[:-1], spec.segments[1:]):
+        assert a.out_shape == b.in_shape, f"{a.name} -> {b.name}"
+    assert spec.segments[-1].out_shape == (spec.num_classes,)
+
+
+# ---------------------------------------------------------------------------
+# Composition: chained segment fwd == full logits fn
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["rn18slim", "vitslim"])
+def test_segment_chain_equals_full_forward(name):
+    spec = M.MODELS[name]()
+    flat = init_flat(spec, seed=1)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4,) + spec.input_shape)
+    counts = [len(s.param_specs) for s in spec.segments]
+    h, off = x, 0
+    for seg, c in zip(spec.segments, counts):
+        h = seg.apply(flat[off : off + c], h)
+        off += c
+    full = spec.logits_fn()(*flat, x)[0]
+    np.testing.assert_allclose(h, full, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Per-segment VJP == autodiff of the composed model
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["rn18slim", "vitslim"])
+def test_streamed_backprop_matches_full_grad(name):
+    """The Rust coordinator backprops segment-by-segment (bwd modules chained
+    back-end-first). That stream must equal jax.grad of the whole model."""
+    spec = M.MODELS[name]()
+    flat = init_flat(spec, seed=3)
+    counts = [len(s.param_specs) for s in spec.segments]
+    bsz = 2
+    x = jax.random.normal(jax.random.PRNGKey(4), (bsz,) + spec.input_shape)
+    onehot = jax.nn.one_hot(jnp.arange(bsz) % spec.num_classes, spec.num_classes)
+
+    # reference: grad of the composed loss
+    def loss_fn(fl):
+        return M.cross_entropy(spec.logits_fn()(*fl, x)[0], onehot)
+
+    ref_grads = jax.grad(loss_fn)(flat)
+
+    # streamed: cache activations fwd, then chain per-segment bwd
+    acts, h, off = [], x, 0
+    for seg, c in zip(spec.segments, counts):
+        acts.append(h)
+        h = seg.apply(flat[off : off + c], h)
+        off += c
+    gy = M.make_loss_grad_fn()(h, onehot)[0]
+    offs = np.cumsum([0] + counts)
+    got = [None] * len(flat)
+    for k in reversed(range(len(spec.segments))):
+        seg = spec.segments[k]
+        bwd = M.make_segment_bwd_fn(seg)
+        outs = bwd(*flat[offs[k] : offs[k + 1]], acts[k], gy)
+        for i, gp in enumerate(outs[:-1]):
+            got[offs[k] + i] = gp
+        gy = outs[-1]
+    for g_ref, g_got in zip(ref_grads, got):
+        np.testing.assert_allclose(g_got, g_ref, rtol=5e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Train step sanity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["rn18slim", "vitslim"])
+def test_train_step_reduces_loss(name):
+    spec = M.MODELS[name]()
+    flat = init_flat(spec, seed=5)
+    ts = M.make_train_step_fn(spec)
+    bsz = 8
+    x = jax.random.normal(jax.random.PRNGKey(6), (bsz,) + spec.input_shape)
+    onehot = jax.nn.one_hot(jnp.arange(bsz) % spec.num_classes, spec.num_classes)
+    losses = []
+    for _ in range(5):
+        out = ts(*flat, x, onehot, jnp.float32(0.2))
+        flat = list(out[:-1])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_loss_grad_rowsums_zero():
+    fn = M.make_loss_grad_fn()
+    logits = jax.random.normal(jax.random.PRNGKey(7), (8, 20))
+    onehot = jax.nn.one_hot(jnp.arange(8) % 20, 20)
+    (g,) = fn(logits, onehot)
+    np.testing.assert_allclose(g.sum(axis=-1), np.zeros(8), atol=1e-6)
+    assert g.shape == (8, 20)
+
+
+def test_group_norm_normalizes():
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 8, 8, 8)) * 3 + 1
+    y = M.group_norm(x, jnp.ones(8), jnp.zeros(8))
+    yg = np.asarray(y).reshape(2, 8, 8, M.GN_GROUPS, 8 // M.GN_GROUPS)
+    mu = yg.mean(axis=(1, 2, 4))
+    assert np.abs(mu).max() < 1e-4
+
+
+def test_cross_entropy_uniform():
+    logits = jnp.zeros((4, 20))
+    onehot = jax.nn.one_hot(jnp.arange(4), 20)
+    assert abs(float(M.cross_entropy(logits, onehot)) - math.log(20.0)) < 1e-5

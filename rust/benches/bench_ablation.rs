@@ -1,0 +1,128 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. checkpoint placement (stride sweep): MAC cost vs verification
+//!    granularity trade-off of Algorithm 1's checkpoint set C;
+//! 2. b_r sweep for the Balanced-Dampening profile: front-end protection
+//!    strength vs forgetting efficacy;
+//! 3. alpha sweep: selection-threshold sensitivity of SSD (the knife-edge
+//!    the paper's layer-agnostic hyperparameters sit on);
+//! 4. INT8 vs FP32 deployment: quantization's effect on unlearning quality
+//!    and simulated traffic/energy.
+
+mod harness;
+
+use ficabu::exp::{self, tables::mode_config, DatasetKind, Mode, PrepareOpts};
+use ficabu::hwsim::mem::Precision;
+use ficabu::hwsim::{BaselineProcessor, FicabuProcessor};
+use ficabu::unlearn::{default_checkpoints, run_unlearning, Schedule, UnlearnConfig};
+use ficabu::util::prng::Pcg32;
+use harness::Bench;
+
+fn main() {
+    // cargo runs bench executables with cwd = package root (rust/)
+    std::env::set_var(
+        "FICABU_ARTIFACTS",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"),
+    );
+    let b = Bench::new("ablation");
+    let prep = b.bench_once("prepare rn18slim/cifar20 (cached)", || {
+        exp::prepare("rn18slim", DatasetKind::Cifar20, &PrepareOpts::default()).unwrap()
+    });
+    let meta = prep.model.meta.clone();
+    let (alpha, lambda) = prep.kind.ssd_params(&meta.name);
+    let tau = prep.kind.tau();
+
+    // --- 1. checkpoint stride sweep -------------------------------------
+    println!("\n[ablation] checkpoint stride sweep (class 0):");
+    println!("stride  checkpoints           stop_l  editing-MACs%  Df%");
+    for stride in [1usize, 2, 4, 8] {
+        let cps = default_checkpoints(meta.num_segments(), stride);
+        let mut params = prep.params.clone();
+        let mut rng = Pcg32::seeded(0xab1);
+        let (x, labels) = prep.train.forget_batch(0, meta.batch, &mut rng);
+        let cfg = UnlearnConfig::cau(alpha, lambda, cps.clone(), tau);
+        let r = run_unlearning(
+            &prep.model, &mut params, &x, &labels, &prep.global, &prep.fimd, &prep.damp, &cfg,
+        )
+        .unwrap();
+        let ssd_macs = ficabu::model::macs::ssd_ledger(&meta, meta.batch).editing_total();
+        let df = r
+            .checkpoint_trace
+            .last()
+            .map(|(_, a)| 100.0 * a)
+            .unwrap_or(f64::NAN);
+        println!(
+            "{stride:6}  {:20} {:7}  {:12.4}  {df:5.1}",
+            format!("{cps:?}"),
+            format!("{:?}", r.stop_depth),
+            100.0 * r.ledger.editing_total() as f64 / ssd_macs as f64,
+        );
+    }
+
+    // --- 2. b_r sweep ----------------------------------------------------
+    println!("\n[ablation] b_r sweep (BD, class 1): front-end selections vs b_r");
+    for br in [1.0f64, 2.0, 5.0, 10.0, 20.0] {
+        let mut params = prep.params.clone();
+        let mut rng = Pcg32::seeded(0xab2);
+        let (x, labels) = prep.train.forget_batch(1, meta.batch, &mut rng);
+        let cfg = UnlearnConfig::bd(
+            alpha,
+            lambda,
+            Schedule::Sigmoid { cm: (meta.num_segments() as f64 + 1.0) / 2.0, br },
+        );
+        let r = run_unlearning(
+            &prep.model, &mut params, &x, &labels, &prep.global, &prep.fimd, &prep.damp, &cfg,
+        )
+        .unwrap();
+        let half = meta.num_segments() / 2;
+        let front: u64 = r.selected_per_depth[half..].iter().sum();
+        let back: u64 = r.selected_per_depth[..half].iter().sum();
+        println!("  b_r {br:5.1}: back-end selected {back:7}, front-end selected {front:7}");
+    }
+
+    // --- 3. alpha sweep --------------------------------------------------
+    println!("\n[ablation] alpha sweep (SSD, class 2): selected params + Df");
+    for a in [2.0f64, 5.0, 10.0, 15.0, 20.0] {
+        let mut params = prep.params.clone();
+        let mut rng = Pcg32::seeded(0xab3);
+        let (x, labels) = prep.train.forget_batch(2, meta.batch, &mut rng);
+        let cfg = UnlearnConfig::ssd(a, lambda);
+        let r = run_unlearning(
+            &prep.model, &mut params, &x, &labels, &prep.global, &prep.fimd, &prep.damp, &cfg,
+        )
+        .unwrap();
+        let sel: u64 = r.selected_per_depth.iter().sum();
+        let logits = prep
+            .model
+            .logits(&params, &x)
+            .unwrap();
+        let df = ficabu::unlearn::forget_accuracy(&logits, &labels);
+        println!(
+            "  alpha {a:5.1}: selected {sel:7} ({:.3}% of params), forget-batch acc {:.1}%",
+            100.0 * sel as f64 / meta.total_params() as f64,
+            100.0 * df
+        );
+    }
+
+    // --- 4. INT8 vs FP32 hardware cost ----------------------------------
+    println!("\n[ablation] precision: simulated cost of one FiCABU run");
+    let cfg = mode_config(&prep, Mode::Ficabu, None);
+    let mut params = prep.params.clone();
+    let mut rng = Pcg32::seeded(0xab4);
+    let (x, labels) = prep.train.forget_batch(3, meta.batch, &mut rng);
+    let r = run_unlearning(
+        &prep.model, &mut params, &x, &labels, &prep.global, &prep.fimd, &prep.damp, &cfg,
+    )
+    .unwrap();
+    for precision in [Precision::Int8, Precision::Fp32] {
+        let fic = FicabuProcessor::new(meta.tile, precision).cost(&r);
+        let base = BaselineProcessor::new(meta.tile, precision).cost(&r);
+        println!(
+            "  {precision:?}: FiCABU {:.4} mJ / {:.1} ms vs same-work-on-baseline {:.4} mJ",
+            fic.energy_mj,
+            fic.seconds * 1e3,
+            base.energy_mj
+        );
+    }
+    println!("\n[ablation] complete");
+}

@@ -1,0 +1,70 @@
+//! Hardware-model benches: the IP speedups the paper reports (11.7x FIMD,
+//! 7.9x Dampening), the pipeline-overlap property of Fig. 5c, and the
+//! live FIMD/Dampening engine throughput (compiled Pallas modules).
+
+mod harness;
+
+use ficabu::config::SharedMeta;
+use ficabu::fisher::FimdEngine;
+use ficabu::hwsim::ip::StreamingIp;
+use ficabu::hwsim::mem::Precision;
+use ficabu::hwsim::FicabuProcessor;
+use ficabu::runtime::Runtime;
+use ficabu::unlearn::DampEngine;
+use ficabu::util::prng::Pcg32;
+use harness::Bench;
+
+const ART: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
+
+fn main() {
+    std::env::set_var("FICABU_ARTIFACTS", ART);
+    let b = Bench::new("hwsim");
+
+    // --- modelled IP speedups (paper §IV-A numbers) ---
+    for (ip, paper) in [
+        (StreamingIp::fimd(8192), 11.7),
+        (StreamingIp::dampening(8192), 7.9),
+    ] {
+        let elems = 1u64 << 22;
+        let s = ip.speedup(elems);
+        println!(
+            "[hwsim] {:4} IP vs core: modelled speedup {s:.2}x (paper {paper}x) over {elems} elems",
+            ip.name
+        );
+        assert!((s - paper).abs() < 0.2);
+    }
+
+    // --- pipeline overlap: cadence equals GEMM window ---
+    let proc_ = FicabuProcessor::new(8192, Precision::Int8);
+    let ev = proc_.trace(32, [64, 24, 16]);
+    let gemm: Vec<_> = ev.iter().filter(|e| e.0 == 0).collect();
+    let cadence = gemm[1].2 - gemm[0].2;
+    println!("[hwsim] pipeline cadence {cadence} cycles (= GEMM patch window 64)");
+    assert_eq!(cadence, 64);
+
+    // --- live engine throughput (compiled Pallas tiles) ---
+    let rt = Runtime::cpu().unwrap();
+    let shared = SharedMeta::load(format!("{ART}/shared")).unwrap();
+    let fimd = FimdEngine::new(&rt, &shared).unwrap();
+    let damp = DampEngine::new(&rt, &shared).unwrap();
+    let mut rng = Pcg32::seeded(1);
+    let n = shared.tile * 8;
+    let grads = rng.normal_vec(n, 0.1);
+    let mut acc = vec![0.0f32; n];
+    b.bench("fimd engine: 8 tiles (64K elems)", 20, || {
+        fimd.accumulate(&mut acc, &grads, 0.125).unwrap();
+    });
+    let idf: Vec<f32> = rng.normal_vec(n, 1.0).iter().map(|v| v.abs()).collect();
+    let idd = vec![1.0f32; n];
+    let mut theta = rng.normal_vec(n, 1.0);
+    b.bench("dampening engine: 8 tiles (64K elems)", 20, || {
+        damp.dampen(&mut theta, &idf, &idd, 10.0, 1.0).unwrap();
+    });
+
+    // throughput summary
+    let elems_per_pass = n as f64;
+    println!(
+        "[hwsim] streamed {:.0} elems/pass through each engine module",
+        elems_per_pass
+    );
+}

@@ -1,0 +1,67 @@
+//! Runtime/L3 hot-path benches: module dispatch overhead, forward passes,
+//! per-segment backward, the full unlearning event, and the patch-GEMM
+//! module — the profile that drives the §Perf iteration log.
+
+mod harness;
+
+use ficabu::config::{ModelMeta, SharedMeta};
+use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
+use ficabu::model::{Model, ParamStore};
+use ficabu::runtime::Runtime;
+use ficabu::tensor::Tensor;
+use ficabu::util::prng::Pcg32;
+use harness::Bench;
+
+const ART: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
+
+fn main() {
+    std::env::set_var("FICABU_ARTIFACTS", ART);
+    let b = Bench::new("runtime");
+    let rt = Runtime::cpu().unwrap();
+    let shared = SharedMeta::load(format!("{ART}/shared")).unwrap();
+
+    // --- dispatch overhead: smallest module (loss_grad) ---
+    let meta = ModelMeta::load(format!("{ART}/rn18slim")).unwrap();
+    let model = Model::load(&rt, meta.clone()).unwrap();
+    let mb = meta.microbatch;
+    let mut rng = Pcg32::seeded(3);
+    let logits = Tensor::new(vec![mb, meta.num_classes],
+        rng.normal_vec(mb * meta.num_classes, 1.0)).unwrap();
+    let mut onehot = Tensor::zeros(vec![mb, meta.num_classes]);
+    for i in 0..mb {
+        onehot.data[i * meta.num_classes + i % meta.num_classes] = 1.0;
+    }
+    b.bench("dispatch: loss_grad module (8x20)", 200, || {
+        model.loss_grad(&logits, &onehot).unwrap()
+    });
+
+    // --- patch GEMM engine module (256^3) ---
+    let gemm = rt.load(shared.module_path(&shared.gemm)).unwrap();
+    let d = shared.gemm_demo;
+    let x = Tensor::new(vec![d, d], rng.normal_vec(d * d, 1.0)).unwrap();
+    let y = Tensor::new(vec![d, d], rng.normal_vec(d * d, 1.0)).unwrap();
+    b.bench("patch GEMM module 256x256x256", 50, || {
+        gemm.run(&[&x, &y]).unwrap()
+    });
+
+    // --- model passes ---
+    let params = ParamStore::init(&meta, 5);
+    let mut shape = vec![meta.batch];
+    shape.extend_from_slice(&meta.input_shape);
+    let xin = Tensor::new(shape.clone(), rng.normal_vec(shape.iter().product(), 1.0)).unwrap();
+    b.bench("fused logits fwd (B=64, rn18slim)", 10, || {
+        model.logits(&params, &xin).unwrap()
+    });
+    b.bench("cached segment-wise fwd (B=64)", 10, || {
+        model.forward_cached(&params, &xin).unwrap()
+    });
+
+    // --- end-to-end unlearning event (Table IV inner loop) ---
+    let prep = exp::prepare("rn18slim", DatasetKind::Cifar20, &PrepareOpts::default()).unwrap();
+    b.bench("unlearning event: FiCABU (early stop)", 5, || {
+        exp::run_mode(&prep, 0, Mode::Ficabu, None).unwrap()
+    });
+    b.bench_once("unlearning event: SSD (all layers)", || {
+        exp::run_mode(&prep, 0, Mode::Ssd, None).unwrap()
+    });
+}

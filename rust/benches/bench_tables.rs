@@ -1,0 +1,93 @@
+//! Table benches: one end-to-end measurement per paper table/figure
+//! (DESIGN.md §4 index). Each bench regenerates the table's core quantity
+//! and asserts the paper's qualitative shape, timing the run.
+//!
+//! T1 (CAU MACs reduction), T2 (BD RPR), T4 (INT8 + ES), F3 (selection
+//! distribution), F4 (S(l) profile). Table III / Fig 5c are covered by
+//! bench_hwsim + power_report.
+
+mod harness;
+
+use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
+use ficabu::hwsim::mem::Precision;
+use ficabu::metrics::rpr::rpr;
+use ficabu::unlearn::Schedule;
+use harness::Bench;
+
+fn main() {
+    // cargo runs bench executables with cwd = package root (rust/)
+    std::env::set_var(
+        "FICABU_ARTIFACTS",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"),
+    );
+    let b = Bench::new("tables");
+    let opts = PrepareOpts::default();
+    let prep = b.bench_once("prepare rn18slim/cifar20 (cached)", || {
+        exp::prepare("rn18slim", DatasetKind::Cifar20, &opts).unwrap()
+    });
+
+    // --- Table I: CAU vs SSD ---
+    let (ssd, cau) = b.bench_once("T1: SSD + CAU on one class", || {
+        let ssd = exp::run_mode(&prep, 0, Mode::Ssd, None).unwrap();
+        let cau = exp::run_mode(&prep, 0, Mode::Cau, None).unwrap();
+        (ssd, cau)
+    });
+    println!(
+        "[tables] T1 shape: CAU Df {:.1}% (tau {:.0}%), editing MACs {:.3}% of SSD",
+        100.0 * cau.df,
+        100.0 * prep.kind.tau(),
+        cau.macs_vs_ssd_pct
+    );
+    assert!(cau.df <= prep.kind.tau() + 1e-9);
+    assert!(cau.macs_vs_ssd_pct < 50.0, "CAU must cut editing MACs");
+
+    // --- Table II: BD RPR ---
+    let bd = b.bench_once("T2: BD on one class", || {
+        let sel = ssd.report.as_ref().unwrap().selected_per_depth.clone();
+        exp::run_mode(&prep, 0, Mode::Bd, Some(&sel)).unwrap()
+    });
+    let base = exp::run_mode(&prep, 0, Mode::Baseline, None).unwrap();
+    let r = rpr(base.dr, ssd.dr, bd.dr);
+    println!(
+        "[tables] T2 shape: BD Df {:.1}%, dDr SSD {:.2}pp vs BD {:.2}pp, RPR {r:+.1}",
+        100.0 * bd.df,
+        100.0 * (base.dr - ssd.dr),
+        100.0 * (base.dr - bd.dr)
+    );
+    assert!(bd.df <= prep.kind.tau() + 1e-9, "BD must still forget");
+    assert!(bd.dr >= ssd.dr - 1e-9, "BD must preserve at least as much retain accuracy");
+
+    // --- Table IV: combined engine + hw energy ---
+    let (es, macs) = b.bench_once("T4: FiCABU vs SSD-on-baseline (INT8 hw model)", || {
+        let sel = ssd.report.as_ref().unwrap().selected_per_depth.clone();
+        let fic = exp::run_mode(&prep, 0, Mode::Ficabu, Some(&sel)).unwrap();
+        let (_, _, es) = exp::tables::hardware_cost(
+            &prep,
+            fic.report.as_ref().unwrap(),
+            ssd.report.as_ref().unwrap(),
+            Precision::Int8,
+        );
+        (es, fic.macs_vs_ssd_pct)
+    });
+    println!("[tables] T4 shape: ES {:.2}% (paper 93.52% CIFAR-20), MACs {macs:.3}%", 100.0 * es);
+    assert!(es > 0.5, "FiCABU must save the majority of energy");
+
+    // --- Fig 3: back-end concentration ---
+    let sel = &ssd.report.as_ref().unwrap().selected_per_depth;
+    let meta = &prep.model.meta;
+    let share = |l: usize| {
+        sel[l - 1] as f64 / meta.segments[meta.seg_index(l)].param_count().max(1) as f64
+    };
+    let back = (share(1) + share(2)) / 2.0;
+    let front = (share(meta.num_segments()) + share(meta.num_segments() - 1)) / 2.0;
+    println!("[tables] F3 shape: back-end selection share {back:.4} vs front-end {front:.4}");
+    assert!(back > front, "selection must concentrate toward the back-end");
+
+    // --- Fig 4: S(l) profile from this selection ---
+    let sched = Schedule::from_selection_distribution(sel, 10.0);
+    let prof = sched.profile(meta.num_segments());
+    println!("[tables] F4 shape: S(1) = {:.2} ... S(L) = {:.2}", prof[0], prof[prof.len() - 1]);
+    assert!((prof[0] - 1.0).abs() < 1e-9 && (prof[prof.len() - 1] - 10.0).abs() < 1e-9);
+
+    println!("[tables] all table shapes hold");
+}

@@ -1,0 +1,45 @@
+//! Minimal benchmark harness (no `criterion` in the offline vendor tree).
+//!
+//! `bench(name, iters, f)` reports min/mean over iterations after a warmup
+//! run; `bench_once` is for expensive end-to-end cases measured once.
+
+use std::time::Instant;
+
+pub struct Bench {
+    pub suite: &'static str,
+}
+
+impl Bench {
+    pub fn new(suite: &'static str) -> Bench {
+        println!("=== bench suite: {suite} ===");
+        Bench { suite }
+    }
+
+    pub fn bench<T>(&self, name: &str, iters: usize, mut f: impl FnMut() -> T) {
+        let _ = f(); // warmup
+        let mut times = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let out = f();
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+            std::hint::black_box(out);
+        }
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        println!(
+            "[{}] {name:40} min {min:10.3} ms   mean {mean:10.3} ms   ({iters} iters)",
+            self.suite
+        );
+    }
+
+    pub fn bench_once<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        println!(
+            "[{}] {name:40} once {:10.3} ms",
+            self.suite,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        out
+    }
+}

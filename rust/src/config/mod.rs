@@ -1,0 +1,238 @@
+//! Artifact metadata: parse `artifacts/<model>/meta.json` and
+//! `artifacts/shared/shared.json` (written once by `python -m compile.aot`)
+//! into the typed inventory the coordinator drives the compiled modules
+//! with. Argument *order* is the contract: module args are
+//! `(params in listed order, x[, gy])` and outputs mirror the meta.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SegmentMeta {
+    pub name: String,
+    pub kind: String,
+    pub params: Vec<ParamMeta>,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub macs_fwd_per_sample: u64,
+    pub fwd: String,
+    pub bwd: String,
+}
+
+impl SegmentMeta {
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub dir: PathBuf,
+    pub name: String,
+    pub num_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub batch: usize,
+    pub microbatch: usize,
+    pub tile: usize,
+    pub segments: Vec<SegmentMeta>,
+    pub logits_module: String,
+    pub train_step_module: String,
+    pub loss_grad_module: String,
+}
+
+impl ModelMeta {
+    pub fn load(dir: impl AsRef<Path>) -> Result<ModelMeta> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let mut segments = Vec::new();
+        for s in j.req("segments")?.as_arr().context("segments not array")? {
+            let params = s
+                .req("params")?
+                .as_arr()
+                .context("params not array")?
+                .iter()
+                .map(|p| {
+                    Ok(ParamMeta {
+                        name: p.req("name")?.as_str().context("param name")?.to_string(),
+                        shape: p.req("shape")?.usize_list()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            segments.push(SegmentMeta {
+                name: s.req("name")?.as_str().context("name")?.to_string(),
+                kind: s.req("kind")?.as_str().context("kind")?.to_string(),
+                params,
+                in_shape: s.req("in_shape")?.usize_list()?,
+                out_shape: s.req("out_shape")?.usize_list()?,
+                macs_fwd_per_sample: s
+                    .req("macs_fwd_per_sample")?
+                    .as_f64()
+                    .context("macs")? as u64,
+                fwd: s.req("fwd")?.as_str().context("fwd")?.to_string(),
+                bwd: s.req("bwd")?.as_str().context("bwd")?.to_string(),
+            });
+        }
+        let modules = j.req("modules")?;
+        Ok(ModelMeta {
+            dir,
+            name: j.req("name")?.as_str().context("name")?.to_string(),
+            num_classes: j.req("num_classes")?.as_usize().context("num_classes")?,
+            input_shape: j.req("input_shape")?.usize_list()?,
+            batch: j.req("batch")?.as_usize().context("batch")?,
+            microbatch: j.req("microbatch")?.as_usize().context("microbatch")?,
+            tile: j.req("tile")?.as_usize().context("tile")?,
+            segments,
+            logits_module: modules.req("logits")?.as_str().context("logits")?.to_string(),
+            train_step_module: modules
+                .req("train_step")?
+                .as_str()
+                .context("train_step")?
+                .to_string(),
+            loss_grad_module: modules
+                .req("loss_grad")?
+                .as_str()
+                .context("loss_grad")?
+                .to_string(),
+        })
+    }
+
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Paper depth index: last segment (head) -> l = 1; first -> l = L.
+    pub fn depth_l(&self, seg_index: usize) -> usize {
+        self.num_segments() - seg_index
+    }
+
+    /// Segment index for a given depth l (inverse of `depth_l`).
+    pub fn seg_index(&self, l: usize) -> usize {
+        self.num_segments() - l
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.segments.iter().map(|s| s.param_count()).sum()
+    }
+
+    pub fn module_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SharedMeta {
+    pub dir: PathBuf,
+    pub tile: usize,
+    pub fimd: String,
+    pub dampen: String,
+    pub gemm: String,
+    pub gemm_demo: usize,
+}
+
+impl SharedMeta {
+    pub fn load(dir: impl AsRef<Path>) -> Result<SharedMeta> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("shared.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let m = j.req("modules")?;
+        Ok(SharedMeta {
+            dir,
+            tile: j.req("tile")?.as_usize().context("tile")?,
+            fimd: m.req("fimd")?.as_str().context("fimd")?.to_string(),
+            dampen: m.req("dampen")?.as_str().context("dampen")?.to_string(),
+            gemm: m.req("gemm")?.as_str().context("gemm")?.to_string(),
+            gemm_demo: j.req("gemm_demo")?.as_usize().context("gemm_demo")?,
+        })
+    }
+
+    pub fn module_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+/// Locate the artifacts root: $FICABU_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("FICABU_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art() -> PathBuf {
+        // tests run from rust/; artifacts live at the workspace root
+        let ws = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+        ws.join("artifacts")
+    }
+
+    #[test]
+    fn load_rn18slim_meta() {
+        let m = ModelMeta::load(art().join("rn18slim")).unwrap();
+        assert_eq!(m.name, "rn18slim");
+        assert_eq!(m.num_classes, 20);
+        assert_eq!(m.num_segments(), 10);
+        assert_eq!(m.segments[0].kind, "stem");
+        assert_eq!(m.segments[9].kind, "head");
+        assert_eq!(m.input_shape, vec![32, 32, 3]);
+        // depth indexing: head is l=1, stem is l=L
+        assert_eq!(m.depth_l(9), 1);
+        assert_eq!(m.depth_l(0), 10);
+        assert_eq!(m.seg_index(1), 9);
+        assert!(m.total_params() > 100_000);
+    }
+
+    #[test]
+    fn load_vitslim_meta() {
+        let m = ModelMeta::load(art().join("vitslim")).unwrap();
+        assert_eq!(m.num_segments(), 14);
+        assert_eq!(
+            m.segments.iter().filter(|s| s.kind == "encoder").count(),
+            12
+        );
+    }
+
+    #[test]
+    fn load_shared_meta() {
+        let s = SharedMeta::load(art().join("shared")).unwrap();
+        assert_eq!(s.tile % 1024, 0);
+        assert!(s.module_path(&s.fimd).exists());
+        assert!(s.module_path(&s.dampen).exists());
+    }
+
+    #[test]
+    fn segment_shapes_chain() {
+        for name in ["rn18slim", "vitslim"] {
+            let m = ModelMeta::load(art().join(name)).unwrap();
+            for w in m.segments.windows(2) {
+                assert_eq!(w[0].out_shape, w[1].in_shape);
+            }
+            assert_eq!(
+                m.segments.last().unwrap().out_shape,
+                vec![m.num_classes]
+            );
+        }
+    }
+}

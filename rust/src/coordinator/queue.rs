@@ -1,0 +1,70 @@
+//! Request-queue statistics for the edge serving loop.
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Timing {
+    pub queue_ms: f64,
+    pub service_ms: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct QueueStats {
+    pub served: u64,
+    pub failures: u64,
+    pub total_queue_ms: f64,
+    pub total_service_ms: f64,
+    pub max_queue_ms: f64,
+    pub max_service_ms: f64,
+}
+
+impl QueueStats {
+    pub fn record(&mut self, t: &Timing) {
+        self.served += 1;
+        self.total_queue_ms += t.queue_ms;
+        self.total_service_ms += t.service_ms;
+        if t.queue_ms > self.max_queue_ms {
+            self.max_queue_ms = t.queue_ms;
+        }
+        if t.service_ms > self.max_service_ms {
+            self.max_service_ms = t.service_ms;
+        }
+    }
+
+    pub fn mean_queue_ms(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.total_queue_ms / self.served as f64
+        }
+    }
+
+    pub fn mean_service_ms(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.total_service_ms / self.served as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let mut s = QueueStats::default();
+        s.record(&Timing { queue_ms: 2.0, service_ms: 10.0 });
+        s.record(&Timing { queue_ms: 4.0, service_ms: 30.0 });
+        assert_eq!(s.served, 2);
+        assert_eq!(s.mean_queue_ms(), 3.0);
+        assert_eq!(s.mean_service_ms(), 20.0);
+        assert_eq!(s.max_service_ms, 30.0);
+    }
+
+    #[test]
+    fn empty_stats_zero() {
+        let s = QueueStats::default();
+        assert_eq!(s.mean_queue_ms(), 0.0);
+        assert_eq!(s.mean_service_ms(), 0.0);
+    }
+}

@@ -1,0 +1,288 @@
+//! Procedural image synthesis: smooth fields via bilinear-upsampled noise
+//! grids, class identity split between low- and high-frequency components.
+
+use crate::tensor::Tensor;
+use crate::util::prng::Pcg32;
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub images: Vec<Vec<f32>>, // each img_shape.iter().product() long
+    pub labels: Vec<usize>,
+    pub num_classes: usize,
+    pub img_shape: Vec<usize>, // e.g. [32, 32, 3]
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetCfg {
+    pub num_classes: usize,
+    pub img: usize,
+    pub channels: usize,
+    pub train_per_class: usize,
+    pub test_per_class: usize,
+    /// amplitude of the dataset-wide shared base pattern
+    pub shared_amp: f32,
+    /// amplitude of the class low-frequency component
+    pub low_amp: f32,
+    /// amplitude of the class high-frequency component
+    pub high_amp: f32,
+    /// per-sample noise
+    pub noise: f32,
+    pub seed: u64,
+}
+
+/// Optional env override for dataset tuning experiments
+/// (e.g. `FICABU_DS_NOISE=0.9 ficabu train ...`).
+fn env_f32(name: &str, default: f32) -> f32 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+impl DatasetCfg {
+    pub fn cifar20() -> DatasetCfg {
+        DatasetCfg {
+            num_classes: 20,
+            img: 32,
+            channels: 3,
+            train_per_class: 48,
+            test_per_class: 16,
+            shared_amp: env_f32("FICABU_DS_SHARED", 0.8),
+            low_amp: env_f32("FICABU_DS_LOW", 0.45),
+            high_amp: env_f32("FICABU_DS_HIGH", 0.3),
+            noise: env_f32("FICABU_DS_NOISE", 0.9),
+            seed: 2026,
+        }
+    }
+
+    /// High inter-class similarity: strong shared base, weak class detail
+    /// concentrated in high frequencies.
+    pub fn pinsface() -> DatasetCfg {
+        DatasetCfg {
+            num_classes: 20,
+            img: 32,
+            channels: 3,
+            train_per_class: 48,
+            test_per_class: 16,
+            shared_amp: 1.2,
+            low_amp: 0.12,
+            high_amp: 0.45,
+            noise: 0.5,
+            seed: 4052,
+        }
+    }
+}
+
+/// Bilinear upsample of a `g x g x c` noise grid to `img x img x c` —
+/// a cheap smooth random field.
+fn smooth_field(rng: &mut Pcg32, g: usize, img: usize, c: usize, amp: f32) -> Vec<f32> {
+    let grid = rng.normal_vec(g * g * c, amp);
+    let mut out = vec![0.0f32; img * img * c];
+    let scale = g as f32 / img as f32;
+    for y in 0..img {
+        for x in 0..img {
+            let fy = (y as f32 + 0.5) * scale - 0.5;
+            let fx = (x as f32 + 0.5) * scale - 0.5;
+            let y0 = fy.floor().max(0.0) as usize;
+            let x0 = fx.floor().max(0.0) as usize;
+            let y1 = (y0 + 1).min(g - 1);
+            let x1 = (x0 + 1).min(g - 1);
+            let wy = (fy - y0 as f32).clamp(0.0, 1.0);
+            let wx = (fx - x0 as f32).clamp(0.0, 1.0);
+            for ch in 0..c {
+                let v00 = grid[(y0 * g + x0) * c + ch];
+                let v01 = grid[(y0 * g + x1) * c + ch];
+                let v10 = grid[(y1 * g + x0) * c + ch];
+                let v11 = grid[(y1 * g + x1) * c + ch];
+                let v0 = v00 * (1.0 - wx) + v01 * wx;
+                let v1 = v10 * (1.0 - wx) + v11 * wx;
+                out[(y * img + x) * c + ch] = v0 * (1.0 - wy) + v1 * wy;
+            }
+        }
+    }
+    out
+}
+
+fn generate(cfg: &DatasetCfg) -> (Dataset, Dataset) {
+    let n = cfg.img * cfg.img * cfg.channels;
+    let mut rng = Pcg32::seeded(cfg.seed);
+
+    // dataset-wide shared base (low frequency)
+    let base = smooth_field(&mut rng, 4, cfg.img, cfg.channels, cfg.shared_amp);
+
+    // per-class prototypes: low-freq + high-freq components
+    let mut protos = Vec::with_capacity(cfg.num_classes);
+    for _ in 0..cfg.num_classes {
+        let low = smooth_field(&mut rng, 4, cfg.img, cfg.channels, cfg.low_amp);
+        let high = rng.normal_vec(n, cfg.high_amp);
+        let proto: Vec<f32> = (0..n).map(|i| base[i] + low[i] + high[i]).collect();
+        protos.push(proto);
+    }
+
+    let make = |per_class: usize, stream: u64| -> Dataset {
+        let mut rng = Pcg32::new(cfg.seed ^ 0x5eed, stream);
+        let mut images = Vec::with_capacity(per_class * cfg.num_classes);
+        let mut labels = Vec::with_capacity(per_class * cfg.num_classes);
+        for c in 0..cfg.num_classes {
+            for _ in 0..per_class {
+                let img: Vec<f32> = protos[c]
+                    .iter()
+                    .map(|&v| v + rng.normal() * cfg.noise)
+                    .collect();
+                images.push(img);
+                labels.push(c);
+            }
+        }
+        Dataset {
+            images,
+            labels,
+            num_classes: cfg.num_classes,
+            img_shape: vec![cfg.img, cfg.img, cfg.channels],
+        }
+    };
+
+    (make(cfg.train_per_class, 1), make(cfg.test_per_class, 2))
+}
+
+pub fn cifar20_like(cfg: &DatasetCfg) -> (Dataset, Dataset) {
+    generate(cfg)
+}
+
+pub fn pinsface_like(cfg: &DatasetCfg) -> (Dataset, Dataset) {
+    generate(cfg)
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// Indices of all samples with the given label.
+    pub fn class_indices(&self, class: usize) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.labels[i] == class).collect()
+    }
+
+    /// All samples except the given class — the retain set D_r (eq. 1).
+    pub fn without_class(&self, class: usize) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.labels[i] != class).collect()
+    }
+
+    /// Assemble a batched tensor `[batch, ...img_shape]` from sample
+    /// indices, repeating the tail to fill (padding masked out by caller).
+    pub fn batch(&self, idx: &[usize], batch: usize) -> (Tensor, Vec<usize>) {
+        let samples: Vec<&[f32]> = idx.iter().map(|&i| self.images[i].as_slice()).collect();
+        let t = Tensor::stack_pad(&samples, &self.img_shape, batch).expect("batch");
+        let labels = idx.iter().map(|&i| self.labels[i]).collect();
+        (t, labels)
+    }
+
+    /// A forget batch: `batch` samples of one class (sampled with
+    /// replacement if the class has fewer).
+    pub fn forget_batch(&self, class: usize, batch: usize, rng: &mut Pcg32) -> (Tensor, Vec<usize>) {
+        let pool = self.class_indices(class);
+        assert!(!pool.is_empty(), "class {class} empty");
+        let idx: Vec<usize> = (0..batch).map(|_| pool[rng.below(pool.len())]).collect();
+        self.batch(&idx, batch)
+    }
+
+    /// Mean pairwise prototype correlation between class means — the
+    /// inter-class-similarity measure that separates the two datasets.
+    pub fn interclass_similarity(&self) -> f32 {
+        let n = self.images[0].len();
+        let mut means = vec![vec![0.0f32; n]; self.num_classes];
+        let mut counts = vec![0usize; self.num_classes];
+        for (img, &l) in self.images.iter().zip(&self.labels) {
+            for (m, v) in means[l].iter_mut().zip(img) {
+                *m += v;
+            }
+            counts[l] += 1;
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c.max(1) as f32;
+            }
+        }
+        let mut sum = 0.0;
+        let mut pairs = 0;
+        for a in 0..self.num_classes {
+            for b in (a + 1)..self.num_classes {
+                sum += cosine(&means[a], &means[b]);
+                pairs += 1;
+            }
+        }
+        sum / pairs as f32
+    }
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+    let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+    dot / (na * nb).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_counts() {
+        let cfg = DatasetCfg { train_per_class: 4, test_per_class: 2, ..DatasetCfg::cifar20() };
+        let (train, test) = cifar20_like(&cfg);
+        assert_eq!(train.len(), 80);
+        assert_eq!(test.len(), 40);
+        assert_eq!(train.images[0].len(), 32 * 32 * 3);
+        for c in 0..20 {
+            assert_eq!(train.class_indices(c).len(), 4);
+        }
+        assert_eq!(train.without_class(0).len(), 76);
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = DatasetCfg { train_per_class: 2, test_per_class: 1, ..DatasetCfg::cifar20() };
+        let (a, _) = cifar20_like(&cfg);
+        let (b, _) = cifar20_like(&cfg);
+        assert_eq!(a.images[7], b.images[7]);
+    }
+
+    #[test]
+    fn faces_more_similar_than_cifar() {
+        let c1 = DatasetCfg { train_per_class: 6, test_per_class: 1, ..DatasetCfg::cifar20() };
+        let c2 = DatasetCfg { train_per_class: 6, test_per_class: 1, ..DatasetCfg::pinsface() };
+        let (cifar, _) = cifar20_like(&c1);
+        let (faces, _) = pinsface_like(&c2);
+        let sc = cifar.interclass_similarity();
+        let sf = faces.interclass_similarity();
+        assert!(
+            sf > sc + 0.2,
+            "faces similarity {sf} should exceed cifar {sc}"
+        );
+        assert!(sf > 0.5, "faces should be strongly correlated: {sf}");
+    }
+
+    #[test]
+    fn forget_batch_single_class() {
+        let cfg = DatasetCfg { train_per_class: 4, test_per_class: 1, ..DatasetCfg::cifar20() };
+        let (train, _) = cifar20_like(&cfg);
+        let mut rng = Pcg32::seeded(3);
+        let (x, labels) = train.forget_batch(5, 16, &mut rng);
+        assert_eq!(x.shape, vec![16, 32, 32, 3]);
+        assert!(labels.iter().all(|&l| l == 5));
+    }
+
+    #[test]
+    fn batch_pads_with_repeats() {
+        let cfg = DatasetCfg { train_per_class: 2, test_per_class: 1, ..DatasetCfg::cifar20() };
+        let (train, _) = cifar20_like(&cfg);
+        let (x, labels) = train.batch(&[0, 1, 2], 8);
+        assert_eq!(x.shape[0], 8);
+        assert_eq!(labels.len(), 3);
+        // padded rows repeat the last sample
+        assert_eq!(x.row(2), x.row(7));
+    }
+}

@@ -1,0 +1,17 @@
+//! Synthetic dataset substrates (DESIGN.md §2).
+//!
+//! No network access and no CIFAR/Kaggle archives in this environment, so
+//! both evaluation datasets are synthesized with the *properties the paper
+//! leans on*:
+//!
+//! * `cifar20_like` — 20 well-separated classes: each class owns a
+//!   low-frequency structure plus mid/high-frequency detail on top of a
+//!   weak shared base. A slim net trains to high accuracy quickly.
+//! * `pinsface_like` — 20 "identities" that share a single strong base
+//!   pattern (high inter-class similarity — the property the paper cites
+//!   to explain the 99.9% MAC savings on faces): discriminative detail is
+//!   a small high-frequency perturbation.
+
+pub mod gen;
+
+pub use gen::{cifar20_like, pinsface_like, Dataset, DatasetCfg};

@@ -1,0 +1,10 @@
+//! Experiment harness: shared preparation (train/load model, compute or
+//! load global importance) and the table/figure generators that the CLI,
+//! examples and benches all drive. Each paper artifact (Tables I/II/IV,
+//! Figs 3/4/5c) has a generator here — see DESIGN.md §4 for the index.
+
+pub mod prepare;
+pub mod tables;
+
+pub use prepare::{prepare, DatasetKind, PrepareOpts, Prepared};
+pub use tables::{run_mode, ClassResult, Mode};

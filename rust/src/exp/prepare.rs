@@ -1,0 +1,224 @@
+//! Shared experiment setup: synthesize data, train the model from the
+//! Rust binary via the AOT `train_step` module, compute the stored global
+//! importance `I_D`, cache both on disk so table runs are reproducible
+//! without retraining.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::config::{artifacts_root, ModelMeta, SharedMeta};
+use crate::data::{cifar20_like, pinsface_like, Dataset, DatasetCfg};
+use crate::fisher::{compute_global_importance, FimdEngine, Importance};
+use crate::model::{Model, ParamStore};
+use crate::runtime::Runtime;
+use crate::unlearn::{make_onehot, DampEngine};
+use crate::util::prng::Pcg32;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    Cifar20,
+    PinsFace,
+}
+
+impl DatasetKind {
+    pub fn tag(self) -> &'static str {
+        match self {
+            DatasetKind::Cifar20 => "cifar20",
+            DatasetKind::PinsFace => "pinsface",
+        }
+    }
+
+    pub fn cfg(self) -> DatasetCfg {
+        match self {
+            DatasetKind::Cifar20 => DatasetCfg::cifar20(),
+            DatasetKind::PinsFace => DatasetCfg::pinsface(),
+        }
+    }
+
+    /// Random-guess forget-accuracy target tau (paper: 5% CIFAR-20, 1%
+    /// PinsFace).
+    pub fn tau(self) -> f64 {
+        match self {
+            DatasetKind::Cifar20 => 0.05,
+            DatasetKind::PinsFace => 0.01,
+        }
+    }
+
+    /// SSD hyperparameters (alpha, lambda).
+    ///
+    /// The paper's values — (10,1) RN/CIFAR-20, (25,1) ViT/CIFAR-20,
+    /// (50,0.1) PinsFace — are calibrated to an `I_D` computed over the
+    /// full mixed dataset, whose scale is far below per-class Fisher. Our
+    /// stored `I_D` is the class-balanced mean of class-conditional
+    /// Fisher (see `global_importance`), which bounds the selection ratio
+    /// `I_Df / I_D` by roughly `num_classes`; alphas above that select
+    /// nothing. We keep the paper's *ordering* (face task more selective
+    /// + stronger dampening) but rescale into the valid range. Override
+    /// with FICABU_ALPHA / FICABU_LAMBDA for ablations.
+    pub fn ssd_params(self, model: &str) -> (f64, f64) {
+        let (a, l) = match (self, model) {
+            (DatasetKind::Cifar20, "vitslim") => (12.0, 1.0),
+            (DatasetKind::Cifar20, _) => (10.0, 1.0),
+            (DatasetKind::PinsFace, _) => (12.0, 0.1),
+        };
+        let env = |k: &str, d: f64| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        (env("FICABU_ALPHA", a), env("FICABU_LAMBDA", l))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PrepareOpts {
+    pub train_steps: usize,
+    pub lr: f32,
+    pub importance_batches: usize,
+    pub seed: u64,
+    /// Ignore cached checkpoints and retrain.
+    pub retrain: bool,
+    /// Apply INT8 fake quantization after training (Table IV mode).
+    pub int8: bool,
+    pub verbose: bool,
+}
+
+impl Default for PrepareOpts {
+    fn default() -> Self {
+        PrepareOpts {
+            train_steps: 240,
+            lr: 0.08,
+            importance_batches: 4,
+            seed: 17,
+            retrain: false,
+            int8: false,
+            verbose: false,
+        }
+    }
+}
+
+/// Everything a table/figure run needs, ready to go.
+pub struct Prepared {
+    pub rt: Runtime,
+    pub model: Model,
+    pub params: ParamStore,
+    pub global: Importance,
+    pub train: Dataset,
+    pub test: Dataset,
+    pub fimd: FimdEngine,
+    pub damp: DampEngine,
+    pub kind: DatasetKind,
+    pub loss_curve: Vec<f32>,
+}
+
+fn runs_dir() -> PathBuf {
+    artifacts_root().join("runs")
+}
+
+/// Train (or load) a model on the given dataset and compute (or load) its
+/// stored global importance.
+pub fn prepare(model_name: &str, kind: DatasetKind, opts: &PrepareOpts) -> Result<Prepared> {
+    let root = artifacts_root();
+    let rt = Runtime::cpu()?;
+    let meta = ModelMeta::load(root.join(model_name))
+        .with_context(|| format!("loading meta for {model_name} (run `make artifacts`)"))?;
+    let shared = SharedMeta::load(root.join("shared"))?;
+    let model = Model::load(&rt, meta)?;
+    let fimd = FimdEngine::new(&rt, &shared)?;
+    let damp = DampEngine::new(&rt, &shared)?;
+
+    let (train, test) = match kind {
+        DatasetKind::Cifar20 => cifar20_like(&kind.cfg()),
+        DatasetKind::PinsFace => pinsface_like(&kind.cfg()),
+    };
+
+    let tag = format!("{model_name}_{}{}", kind.tag(), if opts.int8 { "_int8" } else { "" });
+    let ckpt = runs_dir().join(format!("{tag}.fcb"));
+    let imp_path = runs_dir().join(format!("{tag}.imp"));
+
+    let (params, global, loss_curve) = if !opts.retrain && ckpt.exists() && imp_path.exists() {
+        let params = ParamStore::load(&ckpt)?;
+        params.validate(&model.meta)?;
+        (params, Importance::load(&imp_path)?, vec![])
+    } else {
+        let (mut params, curve) = train_model(&model, &train, opts)?;
+        if opts.int8 {
+            params.fake_quant_int8();
+        }
+        let global = global_importance(&model, &params, &train, &fimd, opts)?;
+        params.save(&ckpt)?;
+        global.save(&imp_path)?;
+        (params, global, curve)
+    };
+
+    Ok(Prepared {
+        rt,
+        model,
+        params,
+        global,
+        train,
+        test,
+        fimd,
+        damp,
+        kind,
+        loss_curve,
+    })
+}
+
+/// SGD training loop driven entirely from Rust through the compiled
+/// `train_step` module (the e2e-driver requirement: all layers compose).
+pub fn train_model(
+    model: &Model,
+    train: &Dataset,
+    opts: &PrepareOpts,
+) -> Result<(ParamStore, Vec<f32>)> {
+    let meta = &model.meta;
+    let mut params = ParamStore::init(meta, opts.seed);
+    let mut rng = Pcg32::seeded(opts.seed ^ 0x7ea1);
+    let mut order: Vec<usize> = (0..train.len()).collect();
+    let mut curve = Vec::with_capacity(opts.train_steps);
+    let mut cursor = train.len(); // trigger shuffle on first step
+    for step in 0..opts.train_steps {
+        if cursor + meta.batch > order.len() {
+            rng.shuffle(&mut order);
+            cursor = 0;
+        }
+        let idx = &order[cursor..cursor + meta.batch];
+        cursor += meta.batch;
+        let (x, labels) = train.batch(idx, meta.batch);
+        let onehot = make_onehot(&labels, meta.num_classes);
+        // cosine-ish decay keeps late training stable on the tiny corpus
+        let frac = step as f32 / opts.train_steps.max(1) as f32;
+        let lr = opts.lr * (1.0 - 0.9 * frac);
+        let loss = model.train_step(&mut params, &x, &onehot, lr)?;
+        curve.push(loss);
+        if opts.verbose && step % 20 == 0 {
+            eprintln!("  step {step:4}  loss {loss:.4}  lr {lr:.4}");
+        }
+    }
+    Ok((params, curve))
+}
+
+/// Stored global importance I_D (paper §II: computed once after training
+/// and stored). One class-conditional batch per class: microbatch
+/// gradients of a single class are coherent, exactly like the forget
+/// batches the selection rule compares against — mixing classes in a
+/// microbatch would cancel gradients and deflate `I_D` relative to
+/// `I_Df`, over-selecting shared parameters.
+pub fn global_importance(
+    model: &Model,
+    params: &ParamStore,
+    train: &Dataset,
+    fimd: &FimdEngine,
+    opts: &PrepareOpts,
+) -> Result<Importance> {
+    let meta = &model.meta;
+    let mut rng = Pcg32::seeded(opts.seed ^ 0x91d);
+    let mut batches = Vec::with_capacity(meta.num_classes);
+    for class in 0..meta.num_classes {
+        let (x, labels) = train.forget_batch(class, meta.batch, &mut rng);
+        batches.push((x, make_onehot(&labels, meta.num_classes)));
+    }
+    let mut imp = compute_global_importance(model, params, fimd, &batches)?;
+    imp.floor(1e-12);
+    Ok(imp)
+}

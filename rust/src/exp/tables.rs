@@ -1,0 +1,176 @@
+//! Per-class unlearning evaluation in every paper mode, with the metric
+//! set of Tables I/II/IV (Dr, Df, MIA, MACs, dDr, RPR, ES).
+
+use anyhow::Result;
+
+use crate::hwsim::{baseline::energy_savings, BaselineProcessor, FicabuProcessor};
+use crate::hwsim::mem::Precision;
+use crate::metrics::{eval_accuracy, mia_accuracy, per_sample_losses};
+use crate::model::macs::ssd_ledger;
+use crate::unlearn::{
+    default_checkpoints, run_unlearning, Schedule, UnlearnConfig, UnlearnReport,
+};
+use crate::util::prng::Pcg32;
+
+use super::prepare::Prepared;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Baseline, // pre-trained model, no unlearning
+    Ssd,
+    Cau,
+    Bd,
+    Ficabu,
+}
+
+impl Mode {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Baseline => "Baseline",
+            Mode::Ssd => "SSD",
+            Mode::Cau => "CAU",
+            Mode::Bd => "BD",
+            Mode::Ficabu => "FiCABU",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ClassResult {
+    pub class: usize,
+    pub mode: Mode,
+    /// Retain accuracy (train retain split) in [0,1].
+    pub dr: f64,
+    /// Forget accuracy in [0,1].
+    pub df: f64,
+    /// MIA member-rate on the forget set in [0,1].
+    pub mia: f64,
+    /// Total MACs of the unlearning procedure (0 for Baseline).
+    pub macs: u64,
+    /// MACs relative to SSD, percent.
+    pub macs_vs_ssd_pct: f64,
+    pub stop_depth: Option<usize>,
+    pub report: Option<UnlearnReport>,
+}
+
+/// The checkpoint stride per model (paper: every 4 of 16 convs = 2 block
+/// segments for RN; every 3 encoder segments for ViT).
+pub fn checkpoint_stride(model_name: &str) -> usize {
+    if model_name.starts_with("vit") {
+        3
+    } else {
+        2
+    }
+}
+
+/// Build the UnlearnConfig for a mode, calibrating the BD sigmoid from an
+/// SSD selection profile when needed (paper §III-B procedure).
+pub fn mode_config(prep: &Prepared, mode: Mode, ssd_selection: Option<&[u64]>) -> UnlearnConfig {
+    let (alpha, lambda) = prep.kind.ssd_params(&prep.model.meta.name);
+    let tau = prep.kind.tau();
+    let big_l = prep.model.meta.num_segments();
+    let cps = default_checkpoints(big_l, checkpoint_stride(&prep.model.meta.name));
+    let schedule = |sel: Option<&[u64]>| match sel {
+        Some(s) => Schedule::from_selection_distribution(s, 10.0),
+        None => Schedule::Sigmoid { cm: (big_l as f64 + 1.0) / 2.0, br: 10.0 },
+    };
+    match mode {
+        Mode::Baseline => UnlearnConfig::ssd(alpha, lambda), // unused
+        Mode::Ssd => UnlearnConfig::ssd(alpha, lambda),
+        Mode::Cau => UnlearnConfig::cau(alpha, lambda, cps, tau),
+        Mode::Bd => UnlearnConfig::bd(alpha, lambda, schedule(ssd_selection)),
+        Mode::Ficabu => {
+            UnlearnConfig::ficabu(alpha, lambda, schedule(ssd_selection), cps, tau)
+        }
+    }
+}
+
+/// Run one (class, mode) cell: clone the trained parameters, unlearn,
+/// evaluate Dr / Df / MIA / MACs.
+pub fn run_mode(prep: &Prepared, class: usize, mode: Mode,
+                ssd_selection: Option<&[u64]>) -> Result<ClassResult> {
+    let meta = &prep.model.meta;
+    let mut params = prep.params.clone();
+    let ssd_total = ssd_ledger(meta, meta.batch).editing_total();
+
+    let report = if mode == Mode::Baseline {
+        None
+    } else {
+        let cfg = mode_config(prep, mode, ssd_selection);
+        let mut rng = Pcg32::seeded(0xc1a55 ^ class as u64);
+        let (x, labels) = prep.train.forget_batch(class, meta.batch, &mut rng);
+        Some(run_unlearning(
+            &prep.model,
+            &mut params,
+            &x,
+            &labels,
+            &prep.global,
+            &prep.fimd,
+            &prep.damp,
+            &cfg,
+        )?)
+    };
+
+    // evaluation splits
+    let forget_idx = prep.train.class_indices(class);
+    let retain_idx = prep.train.without_class(class);
+    let dr = eval_accuracy(&prep.model, &params, &prep.train, &retain_idx)?;
+    let df = eval_accuracy(&prep.model, &params, &prep.train, &forget_idx)?;
+
+    // MIA: members = retain train subsample, nonmembers = test set
+    let member_idx: Vec<usize> = retain_idx.iter().copied().step_by(3).collect();
+    let nonmember_idx: Vec<usize> = (0..prep.test.len()).collect();
+    let member = per_sample_losses(&prep.model, &params, &prep.train, &member_idx)?;
+    let nonmember = per_sample_losses(&prep.model, &params, &prep.test, &nonmember_idx)?;
+    let forget = per_sample_losses(&prep.model, &params, &prep.train, &forget_idx)?;
+    let mia = mia_accuracy(&member, &nonmember, &forget);
+
+    let macs = report.as_ref().map(|r| r.ledger.editing_total()).unwrap_or(0);
+    Ok(ClassResult {
+        class,
+        mode,
+        dr,
+        df,
+        mia,
+        macs,
+        macs_vs_ssd_pct: 100.0 * macs as f64 / ssd_total as f64,
+        stop_depth: report.as_ref().and_then(|r| r.stop_depth),
+        report,
+    })
+}
+
+/// Hardware cost of a result on the FiCABU processor vs SSD on the
+/// baseline processor (Table IV: ES).
+pub fn hardware_cost(
+    prep: &Prepared,
+    ours: &UnlearnReport,
+    ssd: &UnlearnReport,
+    precision: Precision,
+) -> (f64, f64, f64) {
+    let tile = prep.model.meta.tile;
+    let fic = FicabuProcessor::new(tile, precision).cost(ours);
+    let base = BaselineProcessor::new(tile, precision).cost(ssd);
+    (fic.energy_mj, base.energy_mj, energy_savings(&fic, &base))
+}
+
+/// Format helpers shared by the table printers.
+pub fn pct(x: f64) -> String {
+    format!("{:6.2}", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_strides() {
+        assert_eq!(checkpoint_stride("rn18slim"), 2);
+        assert_eq!(checkpoint_stride("vitslim"), 3);
+    }
+
+    #[test]
+    fn mode_names() {
+        assert_eq!(Mode::Ficabu.name(), "FiCABU");
+        assert_eq!(Mode::Baseline.name(), "Baseline");
+    }
+}

@@ -1,0 +1,245 @@
+//! Diagonal-Fisher importance: storage + the FIMD engine stream.
+//!
+//! Importance is stored per segment as one flat f32 buffer covering the
+//! segment's parameters in meta order (the same contiguous layout the
+//! hardware IP sees as DMA bursts). `FimdEngine` streams gradient bursts
+//! through the compiled Pallas FIMD module tile by tile — eq. (2):
+//! `I_i = E[(d ln p(D_f|theta) / d theta_i)^2]`, accumulated as
+//! `acc += scale * g^2` per microbatch.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::config::{ModelMeta, SharedMeta};
+use crate::model::{Model, ParamStore};
+use crate::runtime::{Executable, Runtime};
+use crate::tensor::Tensor;
+
+/// Per-segment flat importance buffers (`I_D` or `I_Df`).
+#[derive(Clone, Debug)]
+pub struct Importance {
+    pub per_seg: Vec<Vec<f32>>,
+}
+
+impl Importance {
+    pub fn zeros_like(meta: &ModelMeta) -> Importance {
+        Importance {
+            per_seg: meta
+                .segments
+                .iter()
+                .map(|s| vec![0.0; s.param_count()])
+                .collect(),
+        }
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.per_seg.iter().map(|v| v.len()).sum()
+    }
+
+    /// Elementwise max with a floor — used to keep stored global
+    /// importance strictly positive (a zero `I_D` would make the
+    /// selection threshold trivially satisfiable).
+    pub fn floor(&mut self, eps: f32) {
+        for seg in self.per_seg.iter_mut() {
+            for v in seg.iter_mut() {
+                if *v < eps {
+                    *v = eps;
+                }
+            }
+        }
+    }
+
+    // --- persistence (same container format idea as ParamStore) ---------
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"FICABIM1");
+        buf.extend_from_slice(&(self.per_seg.len() as u32).to_le_bytes());
+        for seg in &self.per_seg {
+            buf.extend_from_slice(&(seg.len() as u32).to_le_bytes());
+            for v in seg {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        if let Some(p) = path.as_ref().parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Importance> {
+        let b = std::fs::read(path)?;
+        if b.len() < 12 || &b[..8] != b"FICABIM1" {
+            bail!("bad importance file");
+        }
+        let mut pos = 8;
+        let mut rd_u32 = |pos: &mut usize| -> Result<u32> {
+            if *pos + 4 > b.len() {
+                bail!("truncated importance file");
+            }
+            let v = u32::from_le_bytes([b[*pos], b[*pos + 1], b[*pos + 2], b[*pos + 3]]);
+            *pos += 4;
+            Ok(v)
+        };
+        let nseg = rd_u32(&mut pos)? as usize;
+        let mut per_seg = Vec::with_capacity(nseg);
+        for _ in 0..nseg {
+            let n = rd_u32(&mut pos)? as usize;
+            if pos + 4 * n > b.len() {
+                bail!("truncated importance data");
+            }
+            let seg = b[pos..pos + 4 * n]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            pos += 4 * n;
+            per_seg.push(seg);
+        }
+        Ok(Importance { per_seg })
+    }
+}
+
+/// Concatenate a segment's gradient tensors into one burst buffer
+/// (meta parameter order — must mirror the dampening write-back).
+pub fn concat_seg(tensors: &[Tensor]) -> Vec<f32> {
+    let n: usize = tensors.iter().map(|t| t.len()).sum();
+    let mut out = Vec::with_capacity(n);
+    for t in tensors {
+        out.extend_from_slice(&t.data);
+    }
+    out
+}
+
+/// The FIMD IP: streams (grad, acc) tile pairs through the compiled Pallas
+/// module. Tiles are fixed-size bursts; the tail is zero-padded (padding
+/// squares to zero, so accumulation is exact).
+pub struct FimdEngine {
+    exe: Rc<Executable>,
+    pub tile: usize,
+    /// Total elements streamed (feeds the hwsim cycle model).
+    pub elems_streamed: std::cell::Cell<u64>,
+}
+
+impl FimdEngine {
+    pub fn new(rt: &Runtime, shared: &SharedMeta) -> Result<FimdEngine> {
+        Ok(FimdEngine {
+            exe: rt.load(shared.module_path(&shared.fimd))?,
+            tile: shared.tile,
+            elems_streamed: std::cell::Cell::new(0),
+        })
+    }
+
+    /// `acc[i] += scale * grads[i]^2` for a whole segment buffer.
+    pub fn accumulate(&self, acc: &mut [f32], grads: &[f32], scale: f32) -> Result<()> {
+        if acc.len() != grads.len() {
+            bail!("fimd: acc {} vs grads {}", acc.len(), grads.len());
+        }
+        let t = self.tile;
+        let scale_t = Tensor::vec1(vec![scale]);
+        let mut off = 0;
+        while off < acc.len() {
+            let n = t.min(acc.len() - off);
+            let mut gbuf = vec![0.0f32; t];
+            gbuf[..n].copy_from_slice(&grads[off..off + n]);
+            let mut abuf = vec![0.0f32; t];
+            abuf[..n].copy_from_slice(&acc[off..off + n]);
+            let out = self
+                .exe
+                .run(&[&Tensor::vec1(gbuf), &Tensor::vec1(abuf), &scale_t])?;
+            acc[off..off + n].copy_from_slice(&out[0].data[..n]);
+            self.elems_streamed
+                .set(self.elems_streamed.get() + t as u64);
+            off += n;
+        }
+        Ok(())
+    }
+}
+
+/// Compute the stored global importance `I_D` (paper §II): full
+/// backward-stream over `batches` of representative data, squared-grad
+/// accumulated over every microbatch of every batch. Computed once after
+/// training and persisted alongside the checkpoint.
+pub fn compute_global_importance(
+    model: &Model,
+    params: &ParamStore,
+    engine: &FimdEngine,
+    batches: &[(Tensor, Tensor)], // (x [B,...], onehot [B,C])
+) -> Result<Importance> {
+    let meta = &model.meta;
+    let mb_size = meta.microbatch;
+    let num_mb = meta.batch / mb_size;
+    let mut imp = Importance::zeros_like(meta);
+    let scale = 1.0 / (batches.len() * num_mb) as f32;
+
+    for (x, onehot) in batches {
+        let cache = model.forward_cached(params, x)?;
+        for mb in 0..num_mb {
+            let logits_mb = cache.microbatch_logits(mb, mb_size)?;
+            let onehot_mb = onehot.slice_batch(mb * mb_size, mb_size)?;
+            let mut gy = model.loss_grad(&logits_mb, &onehot_mb)?;
+            // back-end-first segment stream (same direction as hardware)
+            for k in (0..meta.num_segments()).rev() {
+                let x_mb = cache.microbatch_input(k, mb, mb_size)?;
+                let (grads, gx) = model.segment_bwd(k, params, &x_mb, &gy)?;
+                let burst = concat_seg(&grads);
+                engine.accumulate(&mut imp.per_seg[k], &burst, scale)?;
+                gy = gx;
+            }
+        }
+    }
+    Ok(imp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn art() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts")
+    }
+
+    #[test]
+    fn fimd_engine_matches_scalar_math() {
+        let rt = Runtime::cpu().unwrap();
+        let shared = SharedMeta::load(art().join("shared")).unwrap();
+        let eng = FimdEngine::new(&rt, &shared).unwrap();
+        // odd length exercises tail padding
+        let n = shared.tile + 1234;
+        let grads: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).sin()).collect();
+        let mut acc = vec![0.5f32; n];
+        eng.accumulate(&mut acc, &grads, 0.25).unwrap();
+        for i in (0..n).step_by(997) {
+            let want = 0.5 + 0.25 * grads[i] * grads[i];
+            assert!((acc[i] - want).abs() < 1e-6, "{i}");
+        }
+        assert_eq!(eng.elems_streamed.get(), 2 * shared.tile as u64);
+    }
+
+    #[test]
+    fn importance_roundtrip() {
+        let imp = Importance { per_seg: vec![vec![1.0, 2.0], vec![3.0]] };
+        let dir = std::env::temp_dir().join("ficabu_imp_test");
+        let p = dir.join("i.bin");
+        imp.save(&p).unwrap();
+        let back = Importance::load(&p).unwrap();
+        assert_eq!(back.per_seg, imp.per_seg);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn floor_applies() {
+        let mut imp = Importance { per_seg: vec![vec![0.0, 5.0]] };
+        imp.floor(1e-8);
+        assert_eq!(imp.per_seg[0], vec![1e-8, 5.0]);
+    }
+
+    #[test]
+    fn concat_order() {
+        let a = Tensor::vec1(vec![1.0, 2.0]);
+        let b = Tensor::vec1(vec![3.0]);
+        assert_eq!(concat_seg(&[a, b]), vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,128 @@
+//! Baseline processor (§IV-B): identical platform — Rocket core, VTA GEMM,
+//! memory subsystem — but WITHOUT the specialized unlearning IPs. Fisher
+//! estimation and dampening execute as software loops on the core
+//! (11.7x / 7.9x more cycles per element) and do NOT overlap the GEMM
+//! stream; SSD runs here as the energy reference of Table IV.
+
+use crate::hwsim::ip::StreamingIp;
+use crate::hwsim::mem::{DdrModel, Precision, Traffic};
+use crate::hwsim::pipeline::{PhaseTimes, RunCost};
+use crate::hwsim::power::PowerModel;
+use crate::hwsim::vta::VtaGemm;
+use crate::hwsim::cycles_to_seconds;
+use crate::unlearn::UnlearnReport;
+
+#[derive(Debug, Clone)]
+pub struct BaselineProcessor {
+    pub vta: VtaGemm,
+    pub fimd_sw: StreamingIp,
+    pub damp_sw: StreamingIp,
+    pub ddr: DdrModel,
+    pub power: PowerModel,
+    pub precision: Precision,
+}
+
+impl BaselineProcessor {
+    pub fn new(tile: usize, precision: Precision) -> BaselineProcessor {
+        BaselineProcessor {
+            vta: VtaGemm::default(),
+            fimd_sw: StreamingIp::fimd(tile as u64),
+            damp_sw: StreamingIp::dampening(tile as u64),
+            ddr: DdrModel::default(),
+            power: PowerModel::default(),
+            precision,
+        }
+    }
+
+    fn traffic(&self, report: &UnlearnReport) -> Traffic {
+        let eb = self.precision.bytes();
+        Traffic {
+            activations: 2 * report.act_cache_bytes as u64 / 4 * eb,
+            params: 3 * report.damp_elems * eb,
+            grads: 4 * report.fimd_elems,
+            importance: 4 * report.damp_elems,
+        }
+    }
+
+    /// Cost of a run on the IP-less platform: GEMM on VTA, elementwise
+    /// phases serialized on the core.
+    pub fn cost(&self, report: &UnlearnReport) -> RunCost {
+        let l = &report.ledger;
+        let gemm = self
+            .vta
+            .cycles_for_macs(l.forward + l.backward + l.checkpoint);
+        let fimd = self.fimd_sw.core_cycles(report.fimd_elems);
+        let damp = self.damp_sw.core_cycles(report.damp_elems);
+        let mem = self.ddr.cycles(&self.traffic(report));
+        // no IP overlap: compute phases serialize; memory still overlaps
+        let compute = gemm + fimd + damp;
+        let total = compute.max(mem);
+        let seconds = cycles_to_seconds(total);
+        let power = self.power.baseline_total_mw();
+        RunCost {
+            phases: PhaseTimes {
+                gemm_cycles: gemm,
+                fimd_cycles: fimd,
+                damp_cycles: damp,
+                mem_cycles: mem,
+                total_cycles: total,
+            },
+            seconds,
+            energy_mj: PowerModel::energy_mj(power, seconds),
+            power_mw: power,
+        }
+    }
+}
+
+/// Energy savings (Table IV "ES"): fraction of the reference energy saved.
+pub fn energy_savings(ficabu: &RunCost, ssd_on_baseline: &RunCost) -> f64 {
+    1.0 - ficabu.energy_mj / ssd_on_baseline.energy_mj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::FicabuProcessor;
+    use crate::model::macs::MacLedger;
+    use crate::unlearn::UnlearnReport;
+
+    fn report(fwd: u64, bwd: u64, fimd: u64, damp: u64) -> UnlearnReport {
+        UnlearnReport {
+            ledger: MacLedger { forward: fwd, backward: bwd, ..Default::default() },
+            fimd_elems: fimd,
+            damp_elems: damp,
+            act_cache_bytes: 1 << 20,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn baseline_slower_than_ficabu_same_work() {
+        let r = report(1 << 28, 1 << 29, 1 << 22, 1 << 22);
+        let fic = FicabuProcessor::new(8192, Precision::Int8).cost(&r);
+        let base = BaselineProcessor::new(8192, Precision::Int8).cost(&r);
+        assert!(base.phases.total_cycles > fic.phases.total_cycles);
+        // serialized elementwise work shows up in the total
+        assert_eq!(
+            base.phases.total_cycles,
+            base.phases.gemm_cycles + base.phases.fimd_cycles + base.phases.damp_cycles
+        );
+    }
+
+    #[test]
+    fn energy_savings_positive_for_smaller_run() {
+        let fic = FicabuProcessor::new(8192, Precision::Int8)
+            .cost(&report(1 << 26, 1 << 27, 1 << 18, 1 << 18));
+        let ssd = BaselineProcessor::new(8192, Precision::Int8)
+            .cost(&report(1 << 29, 1 << 30, 1 << 22, 1 << 22));
+        let es = energy_savings(&fic, &ssd);
+        assert!(es > 0.8 && es < 1.0, "es = {es}");
+    }
+
+    #[test]
+    fn baseline_power_excludes_ips() {
+        let b = BaselineProcessor::new(8192, Precision::Int8);
+        let p = PowerModel::default();
+        assert!((b.power.baseline_total_mw() - (p.total_mw() - 0.81)).abs() < 1e-9);
+    }
+}

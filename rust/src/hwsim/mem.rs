@@ -1,0 +1,77 @@
+//! DDR traffic model: bytes moved per unlearning phase and the cycles they
+//! cost when the pipeline is bandwidth-bound.
+//!
+//! The prototype streams operands from DRAM through the custom DMA into
+//! the 64 KB scratchpad (§IV-A). We model a 64-bit DDR interface at the
+//! system clock: 8 bytes/cycle sustained.
+
+#[derive(Debug, Clone)]
+pub struct DdrModel {
+    pub bytes_per_cycle: f64,
+}
+
+impl Default for DdrModel {
+    fn default() -> Self {
+        DdrModel { bytes_per_cycle: 8.0 }
+    }
+}
+
+/// Traffic for one unlearning run, in bytes.
+#[derive(Debug, Clone, Default)]
+pub struct Traffic {
+    /// Activations written once (Step-0 cache) and re-read at checkpoints.
+    pub activations: u64,
+    /// Parameters read for GEMM/bwd, read+written by dampening.
+    pub params: u64,
+    /// Gradients streamed GEMM -> FIMD.
+    pub grads: u64,
+    /// Stored global importance read by dampening.
+    pub importance: u64,
+}
+
+impl Traffic {
+    pub fn total(&self) -> u64 {
+        self.activations + self.params + self.grads + self.importance
+    }
+}
+
+impl DdrModel {
+    pub fn cycles(&self, t: &Traffic) -> u64 {
+        (t.total() as f64 / self.bytes_per_cycle).ceil() as u64
+    }
+}
+
+/// Element size in bytes for the two deployment modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Int8,
+    Fp32,
+}
+
+impl Precision {
+    pub fn bytes(self) -> u64 {
+        match self {
+            Precision::Int8 => 1,
+            Precision::Fp32 => 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_sums() {
+        let t = Traffic { activations: 10, params: 20, grads: 30, importance: 40 };
+        assert_eq!(t.total(), 100);
+        let ddr = DdrModel::default();
+        assert_eq!(ddr.cycles(&t), 13); // ceil(100/8)
+    }
+
+    #[test]
+    fn precision_bytes() {
+        assert_eq!(Precision::Int8.bytes(), 1);
+        assert_eq!(Precision::Fp32.bytes(), 4);
+    }
+}

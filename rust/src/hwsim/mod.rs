@@ -1,0 +1,28 @@
+//! FiCABU processor simulator (DESIGN.md §2 substitution for the FPGA/45nm
+//! prototype).
+//!
+//! Cycle-approximate models of the blocks in Fig. 6: the VTA-like GEMM
+//! backbone, the FIMD and Dampening IPs with their pipeline depths and
+//! core-execution ratios (11.7x / 7.9x, §IV-A), a DDR traffic model, and a
+//! power model whose per-block mW are the paper's own Table III 45 nm
+//! numbers. Workload inputs (MACs, streamed elements, bytes moved) come
+//! from the measured `UnlearnReport` of the live engine, so relative
+//! energy (Table IV ES) is derived, not asserted.
+
+pub mod baseline;
+pub mod ip;
+pub mod mem;
+pub mod pipeline;
+pub mod power;
+pub mod vta;
+
+pub use baseline::BaselineProcessor;
+pub use pipeline::{FicabuProcessor, PhaseTimes, RunCost};
+pub use power::{PowerModel, PowerRow};
+
+/// System clock of the prototype (50 MHz Kintex-7, §IV-A).
+pub const CLOCK_HZ: f64 = 50.0e6;
+
+pub fn cycles_to_seconds(cycles: u64) -> f64 {
+    cycles as f64 / CLOCK_HZ
+}

@@ -1,0 +1,178 @@
+//! End-to-end streaming pipeline (Fig. 5c) and whole-run cost model.
+//!
+//! The three engines align at patch cadence: GEMM -> FIMD -> DAMPENING.
+//! With double-buffered IPs whose per-segment work is far smaller than the
+//! GEMM window (MAC ledger test), the steady-state run time is the
+//! max of the three streams, bounded below by DDR bandwidth.
+
+use crate::hwsim::ip::StreamingIp;
+use crate::hwsim::mem::{DdrModel, Precision, Traffic};
+use crate::hwsim::power::PowerModel;
+use crate::hwsim::vta::VtaGemm;
+use crate::hwsim::cycles_to_seconds;
+use crate::unlearn::UnlearnReport;
+
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimes {
+    pub gemm_cycles: u64,
+    pub fimd_cycles: u64,
+    pub damp_cycles: u64,
+    pub mem_cycles: u64,
+    pub total_cycles: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RunCost {
+    pub phases: PhaseTimes,
+    pub seconds: f64,
+    pub energy_mj: f64,
+    pub power_mw: f64,
+}
+
+/// The FiCABU processor: VTA + FIMD IP + Dampening IP, streaming pipeline.
+#[derive(Debug, Clone)]
+pub struct FicabuProcessor {
+    pub vta: VtaGemm,
+    pub fimd: StreamingIp,
+    pub damp: StreamingIp,
+    pub ddr: DdrModel,
+    pub power: PowerModel,
+    pub precision: Precision,
+}
+
+impl FicabuProcessor {
+    pub fn new(tile: usize, precision: Precision) -> FicabuProcessor {
+        FicabuProcessor {
+            vta: VtaGemm::default(),
+            fimd: StreamingIp::fimd(tile as u64),
+            damp: StreamingIp::dampening(tile as u64),
+            ddr: DdrModel::default(),
+            power: PowerModel::default(),
+            precision,
+        }
+    }
+
+    /// DDR traffic estimate from an engine report (see mem.rs).
+    pub fn traffic(&self, report: &UnlearnReport) -> Traffic {
+        let eb = self.precision.bytes();
+        Traffic {
+            // step-0 cache write + checkpoint re-reads (counted once: the
+            // dominant term is the single write of every segment input)
+            activations: 2 * report.act_cache_bytes as u64 / 4 * eb,
+            // bwd read + dampen read/write of every edited parameter
+            params: 3 * report.damp_elems * eb,
+            // gradient stream GEMM -> FIMD is internal f32
+            grads: 4 * report.fimd_elems,
+            // stored global importance read once per edited parameter (f32)
+            importance: 4 * report.damp_elems,
+        }
+    }
+
+    /// Cost of one unlearning run on this processor, from the live
+    /// engine's measured report.
+    pub fn cost(&self, report: &UnlearnReport) -> RunCost {
+        let l = &report.ledger;
+        let gemm = self
+            .vta
+            .cycles_for_macs(l.forward + l.backward + l.checkpoint);
+        let fimd = self.fimd.ip_cycles(report.fimd_elems);
+        let damp = self.damp.ip_cycles(report.damp_elems);
+        let mem = self.ddr.cycles(&self.traffic(report));
+        // streaming pipeline: engines overlap; memory overlaps compute via
+        // the double-buffered DMA, so the run is bound by the slowest stream
+        let total = gemm.max(fimd).max(damp).max(mem);
+        let seconds = cycles_to_seconds(total);
+        let power = self.power.total_mw();
+        RunCost {
+            phases: PhaseTimes {
+                gemm_cycles: gemm,
+                fimd_cycles: fimd,
+                damp_cycles: damp,
+                mem_cycles: mem,
+                total_cycles: total,
+            },
+            seconds,
+            energy_mj: PowerModel::energy_mj(power, seconds),
+            power_mw: power,
+        }
+    }
+
+    /// Fig. 5c: schedule `n_patches` patches through the 3-stage pipeline;
+    /// returns (stage, patch, start_cycle, end_cycle) events. `per_patch`
+    /// gives each stage's cycles per patch.
+    pub fn trace(&self, n_patches: usize, per_patch: [u64; 3]) -> Vec<(usize, usize, u64, u64)> {
+        let mut end = [[0u64; 3]; 2]; // rolling per-stage previous end
+        let mut prev_end_same_patch;
+        let mut events = Vec::with_capacity(n_patches * 3);
+        let mut stage_free = [0u64; 3];
+        for p in 0..n_patches {
+            prev_end_same_patch = 0;
+            for s in 0..3 {
+                let start = stage_free[s].max(prev_end_same_patch);
+                let endc = start + per_patch[s];
+                events.push((s, p, start, endc));
+                stage_free[s] = endc;
+                prev_end_same_patch = endc;
+            }
+            end[p % 2] = stage_free;
+        }
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::macs::MacLedger;
+
+    fn report(fwd: u64, bwd: u64, fimd: u64, damp: u64) -> UnlearnReport {
+        UnlearnReport {
+            ledger: MacLedger { forward: fwd, backward: bwd, ..Default::default() },
+            fimd_elems: fimd,
+            damp_elems: damp,
+            act_cache_bytes: 1 << 20,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn gemm_bound_when_ips_light() {
+        let p = FicabuProcessor::new(8192, Precision::Int8);
+        let r = report(1 << 30, 1 << 31, 1 << 18, 1 << 18);
+        let c = p.cost(&r);
+        assert_eq!(c.phases.total_cycles, c.phases.gemm_cycles);
+        assert!(c.phases.fimd_cycles < c.phases.gemm_cycles / 10);
+        assert!(c.seconds > 0.0 && c.energy_mj > 0.0);
+    }
+
+    #[test]
+    fn fewer_macs_less_energy() {
+        let p = FicabuProcessor::new(8192, Precision::Int8);
+        let full = p.cost(&report(1 << 30, 1 << 31, 1 << 20, 1 << 20));
+        let early = p.cost(&report(1 << 27, 1 << 28, 1 << 17, 1 << 17));
+        assert!(early.energy_mj < full.energy_mj * 0.2);
+    }
+
+    #[test]
+    fn pipeline_trace_overlaps() {
+        let p = FicabuProcessor::new(8192, Precision::Int8);
+        let ev = p.trace(4, [100, 30, 20]);
+        assert_eq!(ev.len(), 12);
+        // patch 1 GEMM starts while patch 0 FIMD/DAMP still pending or done;
+        // GEMM stage is busy back-to-back (cadence = GEMM window)
+        let gemm_events: Vec<_> = ev.iter().filter(|e| e.0 == 0).collect();
+        assert_eq!(gemm_events[1].2, 100);
+        assert_eq!(gemm_events[3].3, 400);
+        // FIMD of patch 0 runs inside GEMM window of patch 1
+        let fimd0 = ev.iter().find(|e| e.0 == 1 && e.1 == 0).unwrap();
+        assert!(fimd0.2 >= 100 && fimd0.3 <= 200);
+    }
+
+    #[test]
+    fn int8_traffic_smaller_than_fp32() {
+        let r = report(1 << 20, 1 << 21, 1 << 16, 1 << 16);
+        let p8 = FicabuProcessor::new(8192, Precision::Int8);
+        let p32 = FicabuProcessor::new(8192, Precision::Fp32);
+        assert!(p8.traffic(&r).total() < p32.traffic(&r).total());
+    }
+}

@@ -1,0 +1,105 @@
+//! Power/resource model — Table III.
+//!
+//! The per-block mW (45 nm Design Compiler) and FPGA LUT/FF counts are the
+//! paper's own report, used here as calibrated constants; energies follow
+//! from these constants times the *simulated* phase durations, so relative
+//! results (ES) are derived from workload, not copied.
+
+/// One row of Table III.
+#[derive(Debug, Clone)]
+pub struct PowerRow {
+    pub name: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+    pub mw: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    pub rows: Vec<PowerRow>,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        // Table III (FiCABU processor, 45 nm / Kintex-7)
+        let rows = vec![
+            PowerRow { name: "RISC-V Rocket core", luts: 15_246, ffs: 9_756, mw: 11.20 },
+            PowerRow { name: "On-chip SRAM (64KB)", luts: 354, ffs: 653, mw: 1.71 },
+            PowerRow { name: "Peripherals", luts: 1_556, ffs: 951, mw: 4.07 },
+            PowerRow { name: "uNoC / interconnect", luts: 4_329, ffs: 7_562, mw: 5.68 },
+            PowerRow { name: "DDR controller", luts: 8_102, ffs: 7_514, mw: 88.62 },
+            PowerRow { name: "AXI DMA", luts: 5_234, ffs: 652, mw: 33.90 },
+            PowerRow { name: "VTA (GEMM)", luts: 34_529, ffs: 7_186, mw: 39.90 },
+            PowerRow { name: "Specialized IPs (FIMD+Damp)", luts: 2_185, ffs: 785, mw: 0.81 },
+        ];
+        PowerModel { rows }
+    }
+}
+
+impl PowerModel {
+    pub fn total_mw(&self) -> f64 {
+        self.rows.iter().map(|r| r.mw).sum()
+    }
+
+    pub fn total_luts(&self) -> u64 {
+        self.rows.iter().map(|r| r.luts).sum()
+    }
+
+    pub fn total_ffs(&self) -> u64 {
+        self.rows.iter().map(|r| r.ffs).sum()
+    }
+
+    pub fn block_mw(&self, name: &str) -> f64 {
+        self.rows
+            .iter()
+            .find(|r| r.name.contains(name))
+            .map(|r| r.mw)
+            .unwrap_or(0.0)
+    }
+
+    /// The Unlearning Engine aggregate (VTA + specialized IPs + DMA), as
+    /// grouped in the paper's Table III discussion.
+    pub fn unlearning_engine_mw(&self) -> f64 {
+        self.block_mw("VTA") + self.block_mw("Specialized IPs")
+    }
+
+    /// Baseline processor (same components minus the specialized IPs).
+    pub fn baseline_total_mw(&self) -> f64 {
+        self.total_mw() - self.block_mw("Specialized IPs")
+    }
+
+    /// Energy in millijoules for a duration at a given power.
+    pub fn energy_mj(mw: f64, seconds: f64) -> f64 {
+        mw * seconds // mW * s = mJ
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_match_table_iii() {
+        let p = PowerModel::default();
+        assert!((p.total_mw() - 185.89).abs() < 0.02, "{}", p.total_mw());
+        // paper: total LUTs 71,535 / FFs 35,059
+        assert_eq!(p.total_luts(), 71_535);
+        assert_eq!(p.total_ffs(), 35_059);
+    }
+
+    #[test]
+    fn ip_share_is_tiny() {
+        let p = PowerModel::default();
+        let share = p.block_mw("Specialized IPs") / p.total_mw();
+        assert!((share - 0.0044).abs() < 0.001, "share {share}"); // 0.44%
+    }
+
+    #[test]
+    fn engine_share() {
+        let p = PowerModel::default();
+        // paper: Unlearning Engine 40.71 mW (21.9%)
+        assert!((p.unlearning_engine_mw() - 40.71).abs() < 0.01);
+        let share = p.unlearning_engine_mw() / p.total_mw();
+        assert!((share - 0.219).abs() < 0.005);
+    }
+}

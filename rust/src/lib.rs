@@ -1,0 +1,32 @@
+//! # FiCABU — Fisher-based Context-Adaptive Balanced Unlearning
+//!
+//! Reproduction of "FiCABU: A Fisher-Based, Context-Adaptive Machine
+//! Unlearning Processor for Edge AI" (DATE 2026) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** (build-time Python): Pallas kernels for the processor's
+//!   datapath engines — patch GEMM (VTA backbone), FIMD (diagonal Fisher),
+//!   Dampening — in `python/compile/kernels/`.
+//! * **L2** (build-time Python): per-segment JAX model graphs (ResNet-18
+//!   and ViT topologies), AOT-lowered to HLO text under `artifacts/`.
+//! * **L3** (this crate): the unlearning coordinator — back-end-first
+//!   Context-Adaptive Unlearning with checkpointed early stop, Balanced
+//!   Dampening depth schedule, SSD baseline, INT8 store, the FiCABU
+//!   processor cycle/energy simulator, and an edge request loop.
+//!
+//! Python never runs at request time: `make artifacts` is the only Python
+//! step; afterwards the `ficabu` binary is self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod exp;
+pub mod data;
+pub mod fisher;
+pub mod hwsim;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod testkit;
+pub mod unlearn;
+pub mod util;

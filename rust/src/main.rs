@@ -1,0 +1,249 @@
+//! `ficabu` — the edge unlearning coordinator CLI.
+//!
+//! Commands:
+//!   train      train a model on a synthetic dataset and cache the
+//!              checkpoint + stored global importance
+//!   unlearn    run one unlearning event (ssd | cau | bd | ficabu)
+//!   serve      edge request-loop demo (threads + channels)
+//!   info       runtime/platform and artifact inventory
+//!
+//! Table/figure regeneration lives in `examples/` (see DESIGN.md §4).
+
+use anyhow::Result;
+use ficabu::config::artifacts_root;
+use ficabu::coordinator::{EdgeServer, Request};
+use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
+use ficabu::hwsim::mem::Precision;
+use ficabu::hwsim::{BaselineProcessor, FicabuProcessor};
+use ficabu::runtime::Runtime;
+use ficabu::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dataset_kind(s: &str) -> Result<DatasetKind> {
+    match s {
+        "cifar20" => Ok(DatasetKind::Cifar20),
+        "pinsface" => Ok(DatasetKind::PinsFace),
+        _ => anyhow::bail!("unknown dataset `{s}` (cifar20 | pinsface)"),
+    }
+}
+
+fn mode_of(s: &str) -> Result<Mode> {
+    Ok(match s {
+        "ssd" => Mode::Ssd,
+        "cau" => Mode::Cau,
+        "bd" => Mode::Bd,
+        "ficabu" => Mode::Ficabu,
+        "baseline" => Mode::Baseline,
+        _ => anyhow::bail!("unknown mode `{s}`"),
+    })
+}
+
+fn prepare_opts(a: &Args) -> Result<PrepareOpts> {
+    Ok(PrepareOpts {
+        train_steps: a.usize_or("steps", 240)?,
+        lr: a.f64_or("lr", 0.08)? as f32,
+        importance_batches: a.usize_or("imp-batches", 4)?,
+        seed: a.usize_or("seed", 17)? as u64,
+        retrain: a.flag("retrain"),
+        int8: a.flag("int8"),
+        verbose: a.flag("verbose"),
+    })
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1))?;
+    args.declare(&[
+        "model", "dataset", "mode", "class", "steps", "lr", "imp-batches", "seed",
+        "retrain", "int8", "verbose", "requests", "clients",
+    ]);
+    args.finish()?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "unlearn" => cmd_unlearn(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+ficabu — Fisher-based Context-Adaptive Balanced Unlearning (edge coordinator)
+
+USAGE: ficabu <command> [--key value] [--flag]
+
+  train    --model rn18slim|vitslim --dataset cifar20|pinsface
+           [--steps N --lr F --seed N --retrain --int8 --verbose]
+  unlearn  --model M --dataset D --mode ssd|cau|bd|ficabu --class C [--int8]
+  serve    --model M --dataset D [--requests N --clients K]
+  info     platform + artifact inventory
+
+Tables/figures: cargo run --release --example table1 (table2, table4,
+fig3, fig4, power_report, pipeline_trace, quickstart, e2e_unlearning,
+edge_serving). See DESIGN.md for the experiment index.
+";
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+    let root = artifacts_root();
+    println!("artifacts root: {}", root.display());
+    for name in ["rn18slim", "vitslim"] {
+        match ficabu::config::ModelMeta::load(root.join(name)) {
+            Ok(m) => println!(
+                "  {name}: {} segments, {} params, batch {}, microbatch {}",
+                m.num_segments(),
+                m.total_params(),
+                m.batch,
+                m.microbatch
+            ),
+            Err(_) => println!("  {name}: NOT BUILT (run `make artifacts`)"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let model = a.str_or("model", "rn18slim");
+    let kind = dataset_kind(&a.str_or("dataset", "cifar20"))?;
+    let mut opts = prepare_opts(a)?;
+    opts.retrain = true;
+    let t0 = std::time::Instant::now();
+    let prep = exp::prepare(&model, kind, &opts)?;
+    let train_acc = ficabu::metrics::eval_accuracy(
+        &prep.model,
+        &prep.params,
+        &prep.train,
+        &(0..prep.train.len()).collect::<Vec<_>>(),
+    )?;
+    let test_acc = ficabu::metrics::eval_accuracy(
+        &prep.model,
+        &prep.params,
+        &prep.test,
+        &(0..prep.test.len()).collect::<Vec<_>>(),
+    )?;
+    println!(
+        "trained {model} on {}: train acc {:.2}% test acc {:.2}% ({:.1}s, {} steps)",
+        kind.tag(),
+        100.0 * train_acc,
+        100.0 * test_acc,
+        t0.elapsed().as_secs_f64(),
+        opts.train_steps,
+    );
+    if let (Some(first), Some(last)) = (prep.loss_curve.first(), prep.loss_curve.last()) {
+        println!("loss: {first:.4} -> {last:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_unlearn(a: &Args) -> Result<()> {
+    let model = a.str_or("model", "rn18slim");
+    let kind = dataset_kind(&a.str_or("dataset", "cifar20"))?;
+    let mode = mode_of(&a.str_or("mode", "ficabu"))?;
+    let class = a.usize_or("class", 0)?;
+    let opts = prepare_opts(a)?;
+    let prep = exp::prepare(&model, kind, &opts)?;
+
+    // calibrate BD schedule from an SSD pass when needed
+    let ssd_sel = if matches!(mode, Mode::Bd | Mode::Ficabu) {
+        let ssd = exp::run_mode(&prep, class, Mode::Ssd, None)?;
+        ssd.report.map(|r| r.selected_per_depth)
+    } else {
+        None
+    };
+    let res = exp::run_mode(&prep, class, mode, ssd_sel.as_deref())?;
+    println!(
+        "{} class {class}: Dr {:.2}% Df {:.2}% MIA {:.2}% MACs {:.2}% of SSD",
+        mode.name(),
+        100.0 * res.dr,
+        100.0 * res.df,
+        100.0 * res.mia,
+        res.macs_vs_ssd_pct
+    );
+    if let Some(l) = res.stop_depth {
+        println!("early stop at depth l = {l}");
+    }
+    if let Some(r) = &res.report {
+        println!(
+            "ledger: fwd {} bwd {} fisher {} dampen {} checkpoint {}",
+            r.ledger.forward, r.ledger.backward, r.ledger.fisher, r.ledger.dampen,
+            r.ledger.checkpoint
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    let model = a.str_or("model", "rn18slim");
+    let kind = dataset_kind(&a.str_or("dataset", "cifar20"))?;
+    let n_requests = a.usize_or("requests", 4)?;
+    let n_clients = a.usize_or("clients", 2)?;
+    let opts = prepare_opts(a)?;
+    let prep = exp::prepare(&model, kind, &opts)?;
+
+    let cfg = exp::tables::mode_config(&prep, Mode::Ficabu, None);
+    let tile = prep.model.meta.tile;
+    let precision = if opts.int8 { Precision::Int8 } else { Precision::Fp32 };
+    let mut server = EdgeServer::new(
+        prep.model,
+        prep.params,
+        prep.global,
+        prep.fimd,
+        prep.damp,
+        prep.train,
+        cfg,
+        FicabuProcessor::new(tile, precision),
+        BaselineProcessor::new(tile, precision),
+    );
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let classes: Vec<usize> = (0..n_requests).collect();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let tx = tx.clone();
+        let my: Vec<usize> = classes.iter().copied().skip(c).step_by(n_clients).collect();
+        handles.push(std::thread::spawn(move || {
+            let mut replies = Vec::new();
+            for class in my {
+                let (rtx, rrx) = std::sync::mpsc::channel();
+                tx.send((std::time::Instant::now(), Request::Unlearn { class, reply: rtx }))
+                    .unwrap();
+                replies.push(rrx);
+            }
+            replies
+                .into_iter()
+                .map(|r| r.recv().unwrap())
+                .collect::<Vec<_>>()
+        }));
+    }
+    drop(tx);
+    server.serve(rx)?;
+    for h in handles {
+        for reply in h.join().unwrap() {
+            match reply {
+                Ok(s) => println!(
+                    "class {:2}: Df {:.1}% Dr {:.1}% stop l={:?} MACs {:.2}% energy {:.3} mJ ({:.2}% of SSD) [queue {:.0} ms service {:.0} ms]",
+                    s.class,
+                    100.0 * s.forget_acc,
+                    100.0 * s.retain_acc,
+                    s.stop_depth,
+                    s.macs_vs_ssd_pct,
+                    s.sim_energy_mj,
+                    s.sim_energy_vs_ssd_pct,
+                    s.timing.queue_ms,
+                    s.timing.service_ms
+                ),
+                Err(e) => println!("request failed: {e}"),
+            }
+        }
+    }
+    Ok(())
+}

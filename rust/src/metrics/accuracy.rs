@@ -1,0 +1,55 @@
+//! Dataset accuracy / per-sample loss evaluation through the fused
+//! `logits` module (static batch; tail batches padded and masked).
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::model::{Model, ParamStore};
+
+/// Top-1 accuracy over the given sample indices.
+pub fn eval_accuracy(
+    model: &Model,
+    params: &ParamStore,
+    ds: &Dataset,
+    idx: &[usize],
+) -> Result<f64> {
+    if idx.is_empty() {
+        return Ok(0.0);
+    }
+    let b = model.meta.batch;
+    let mut hits = 0usize;
+    for chunk in idx.chunks(b) {
+        let (x, labels) = ds.batch(chunk, b);
+        let logits = model.logits(params, &x)?;
+        let preds = logits.argmax_rows();
+        hits += preds
+            .iter()
+            .take(labels.len())
+            .zip(&labels)
+            .filter(|(p, l)| p == l)
+            .count();
+    }
+    Ok(hits as f64 / idx.len() as f64)
+}
+
+/// Per-sample cross-entropy losses (softmax readout on host — the same
+/// quantity the MIA thresholds).
+pub fn per_sample_losses(
+    model: &Model,
+    params: &ParamStore,
+    ds: &Dataset,
+    idx: &[usize],
+) -> Result<Vec<f32>> {
+    let b = model.meta.batch;
+    let mut out = Vec::with_capacity(idx.len());
+    for chunk in idx.chunks(b) {
+        let (x, labels) = ds.batch(chunk, b);
+        let logits = model.logits(params, &x)?;
+        let probs = logits.softmax_rows();
+        for (i, &l) in labels.iter().enumerate() {
+            let p = probs.row(i)[l].max(1e-12);
+            out.push(-p.ln());
+        }
+    }
+    Ok(out)
+}

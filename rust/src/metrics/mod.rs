@@ -1,0 +1,10 @@
+//! Evaluation metrics: retain/forget accuracy, membership inference
+//! attack (MIA), and the Retain Preservation Rate (RPR, eq. 7).
+
+pub mod accuracy;
+pub mod mia;
+pub mod rpr;
+
+pub use accuracy::{eval_accuracy, per_sample_losses};
+pub use mia::{mia_accuracy, ThresholdAttack};
+pub use rpr::rpr;

@@ -1,0 +1,49 @@
+//! Retain Preservation Rate — eq. (7):
+//! `RPR = (1 - dDr_ours / dDr_ssd) * 100`, where `dDr` is the retain
+//! accuracy drop vs the pre-unlearning baseline. Positive RPR means the
+//! method preserves retain accuracy better than SSD.
+
+/// All accuracies as fractions in [0, 1].
+pub fn rpr(baseline_dr: f64, ssd_dr: f64, ours_dr: f64) -> f64 {
+    let d_ssd = baseline_dr - ssd_dr;
+    let d_ours = baseline_dr - ours_dr;
+    if d_ssd.abs() < 1e-12 {
+        // SSD lost nothing; any loss by ours is infinitely worse — report 0
+        // when both are lossless.
+        return if d_ours.abs() < 1e-12 { 0.0 } else { f64::NEG_INFINITY };
+    }
+    (1.0 - d_ours / d_ssd) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn positive_when_ours_preserves_more() {
+        // baseline 96.95, SSD 96.14, ours 96.25 (Table II Rocket/RN)
+        let v = rpr(0.9695, 0.9614, 0.9625);
+        assert!((v - 13.58).abs() < 0.2, "{v}");
+    }
+
+    #[test]
+    fn zero_when_equal() {
+        assert_eq!(rpr(0.97, 0.95, 0.95), 0.0);
+    }
+
+    #[test]
+    fn hundred_when_no_drop() {
+        assert!((rpr(0.97, 0.90, 0.97) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn negative_when_worse_than_ssd() {
+        assert!(rpr(0.97, 0.96, 0.94) < 0.0);
+    }
+
+    #[test]
+    fn degenerate_ssd_lossless() {
+        assert_eq!(rpr(0.97, 0.97, 0.97), 0.0);
+        assert_eq!(rpr(0.97, 0.97, 0.96), f64::NEG_INFINITY);
+    }
+}

@@ -1,0 +1,79 @@
+//! Activation cache — Algorithm 1, Step 0.
+//!
+//! One forward pass over the forget batch caches the *input* tensor of
+//! every segment (``activation[l, n]`` in the paper) plus the final
+//! logits. Because Context-Adaptive Unlearning edits strictly back-end
+//! first, the cached input of segment l stays exact while segments
+//! l..1 are being edited (everything *upstream* of l is untouched), so
+//! checkpoint partial inference and the lazy Fisher backprop can both
+//! start from the cache without re-running the front-end.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+#[derive(Clone)]
+pub struct ActivationCache {
+    /// `inputs[k]` = batched input to segment k (forward order).
+    pub inputs: Vec<Tensor>,
+    /// Logits of the cached forward pass (batch x classes).
+    pub logits: Tensor,
+}
+
+impl ActivationCache {
+    pub fn new(inputs: Vec<Tensor>, logits: Tensor) -> ActivationCache {
+        ActivationCache { inputs, logits }
+    }
+
+    pub fn num_segments(&self) -> usize {
+        self.inputs.len()
+    }
+
+    /// Input of segment `k`, sliced to a microbatch for the FIMD stream.
+    pub fn microbatch_input(&self, k: usize, mb: usize, mb_size: usize) -> Result<Tensor> {
+        if k >= self.inputs.len() {
+            bail!("segment {} out of {}", k, self.inputs.len());
+        }
+        self.inputs[k].slice_batch(mb * mb_size, mb_size)
+    }
+
+    /// Logits sliced to a microbatch (starting point of the grad stream).
+    pub fn microbatch_logits(&self, mb: usize, mb_size: usize) -> Result<Tensor> {
+        self.logits.slice_batch(mb * mb_size, mb_size)
+    }
+
+    /// Host memory held by the cache, in bytes (reported by the hwsim DDR
+    /// model and the perf pass).
+    pub fn bytes(&self) -> usize {
+        let n: usize = self.inputs.iter().map(|t| t.len()).sum::<usize>() + self.logits.len();
+        n * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache() -> ActivationCache {
+        let a = Tensor::new(vec![4, 2], (0..8).map(|v| v as f32).collect()).unwrap();
+        let b = Tensor::new(vec![4, 3], (0..12).map(|v| v as f32).collect()).unwrap();
+        let logits = Tensor::new(vec![4, 5], vec![0.0; 20]).unwrap();
+        ActivationCache::new(vec![a, b], logits)
+    }
+
+    #[test]
+    fn microbatch_slicing() {
+        let c = cache();
+        let mb = c.microbatch_input(0, 1, 2).unwrap();
+        assert_eq!(mb.shape, vec![2, 2]);
+        assert_eq!(mb.data, vec![4.0, 5.0, 6.0, 7.0]);
+        assert!(c.microbatch_input(2, 0, 2).is_err());
+        assert!(c.microbatch_input(0, 2, 2).is_err());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let c = cache();
+        assert_eq!(c.bytes(), (8 + 12 + 20) * 4);
+    }
+}

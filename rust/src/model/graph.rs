@@ -1,0 +1,245 @@
+//! Compiled model graph: drives the per-segment AOT modules.
+//!
+//! Argument order contract (see `python/compile/aot.py`):
+//!   fwd_k:      (params_k..., x)        -> (y,)
+//!   bwd_k:      (params_k..., x, gy)    -> (grads_k..., gx)
+//!   logits:     (all params..., x)      -> (logits,)
+//!   train_step: (all params..., x, onehot, lr) -> (new params..., loss)
+//!   loss_grad:  (logits, onehot)        -> (dlogits,)
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelMeta;
+use crate::model::{ActivationCache, ParamStore};
+use crate::runtime::{Executable, Runtime};
+use crate::tensor::Tensor;
+
+pub struct Model {
+    pub meta: ModelMeta,
+    fwd: Vec<Rc<Executable>>,
+    bwd: Vec<Rc<Executable>>,
+    logits_exe: Rc<Executable>,
+    train_step_exe: Rc<Executable>,
+    loss_grad_exe: Rc<Executable>,
+}
+
+impl Model {
+    /// Compile (or fetch from the runtime cache) every module of a model.
+    pub fn load(rt: &Runtime, meta: ModelMeta) -> Result<Model> {
+        let mut fwd = Vec::new();
+        let mut bwd = Vec::new();
+        for s in &meta.segments {
+            fwd.push(rt.load(meta.module_path(&s.fwd))?);
+            bwd.push(rt.load(meta.module_path(&s.bwd))?);
+        }
+        let logits_exe = rt.load(meta.module_path(&meta.logits_module))?;
+        let train_step_exe = rt.load(meta.module_path(&meta.train_step_module))?;
+        let loss_grad_exe = rt.load(meta.module_path(&meta.loss_grad_module))?;
+        Ok(Model { meta, fwd, bwd, logits_exe, train_step_exe, loss_grad_exe })
+    }
+
+    pub fn num_segments(&self) -> usize {
+        self.meta.num_segments()
+    }
+
+    /// Whole-model forward through the fused `logits` module (batch = meta.batch).
+    pub fn logits(&self, params: &ParamStore, x: &Tensor) -> Result<Tensor> {
+        let mut args = params.flat();
+        args.push(x);
+        let mut out = self.logits_exe.run(&args)?;
+        Ok(out.pop().context("logits output")?)
+    }
+
+    /// Segment-by-segment forward that caches each segment's input —
+    /// Algorithm 1 Step 0.
+    pub fn forward_cached(&self, params: &ParamStore, x: &Tensor) -> Result<ActivationCache> {
+        let mut inputs = Vec::with_capacity(self.num_segments());
+        let mut h = x.clone();
+        for (k, exe) in self.fwd.iter().enumerate() {
+            inputs.push(h.clone());
+            let mut args: Vec<&Tensor> = params.seg[k].iter().collect();
+            args.push(&h);
+            let mut out = exe.run(&args)?;
+            h = out.pop().with_context(|| format!("fwd[{k}] output"))?;
+        }
+        Ok(ActivationCache::new(inputs, h))
+    }
+
+    /// Partial inference (Algorithm 1): resume from the cached input of
+    /// segment `from_seg` and run through the back-end to logits, using the
+    /// *current* (possibly dampened) parameters.
+    pub fn partial_forward(
+        &self,
+        params: &ParamStore,
+        from_seg: usize,
+        act: &Tensor,
+    ) -> Result<Tensor> {
+        if from_seg >= self.num_segments() {
+            bail!("partial_forward: segment {} out of range", from_seg);
+        }
+        let mut h = act.clone();
+        for k in from_seg..self.num_segments() {
+            let mut args: Vec<&Tensor> = params.seg[k].iter().collect();
+            args.push(&h);
+            let mut out = self.fwd[k].run(&args)?;
+            h = out.pop().with_context(|| format!("fwd[{k}] output"))?;
+        }
+        Ok(h)
+    }
+
+    /// Per-segment VJP: returns (param grads in meta order, input grad).
+    pub fn segment_bwd(
+        &self,
+        k: usize,
+        params: &ParamStore,
+        x_mb: &Tensor,
+        gy: &Tensor,
+    ) -> Result<(Vec<Tensor>, Tensor)> {
+        let mut args: Vec<&Tensor> = params.seg[k].iter().collect();
+        args.push(x_mb);
+        args.push(gy);
+        let mut out = self.bwd[k].run(&args)?;
+        let gx = out.pop().with_context(|| format!("bwd[{k}] gx"))?;
+        Ok((out, gx))
+    }
+
+    /// dlogits of the mean NLL over a microbatch.
+    pub fn loss_grad(&self, logits_mb: &Tensor, onehot_mb: &Tensor) -> Result<Tensor> {
+        let mut out = self.loss_grad_exe.run(&[logits_mb, onehot_mb])?;
+        Ok(out.pop().context("loss_grad output")?)
+    }
+
+    /// One SGD step in place; returns the loss.
+    pub fn train_step(
+        &self,
+        params: &mut ParamStore,
+        x: &Tensor,
+        onehot: &Tensor,
+        lr: f32,
+    ) -> Result<f32> {
+        let lr_t = Tensor::scalar(lr);
+        let mut args = params.flat();
+        args.push(x);
+        args.push(onehot);
+        args.push(&lr_t);
+        let mut out = self.train_step_exe.run(&args)?;
+        let loss = out.pop().context("train_step loss")?;
+        params.set_flat(out)?;
+        Ok(loss.data[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelMeta;
+    use crate::util::prng::Pcg32;
+    use std::path::Path;
+
+    fn art() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts")
+    }
+
+    fn rand_batch(meta: &ModelMeta, batch: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::seeded(seed);
+        let n: usize = meta.input_shape.iter().product::<usize>() * batch;
+        let mut shape = vec![batch];
+        shape.extend_from_slice(&meta.input_shape);
+        Tensor::new(shape, rng.normal_vec(n, 1.0)).unwrap()
+    }
+
+    #[test]
+    fn cached_forward_matches_fused_logits() {
+        let rt = Runtime::cpu().unwrap();
+        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let model = Model::load(&rt, meta.clone()).unwrap();
+        let params = ParamStore::init(&meta, 11);
+        let x = rand_batch(&meta, meta.batch, 42);
+        let cache = model.forward_cached(&params, &x).unwrap();
+        let fused = model.logits(&params, &x).unwrap();
+        assert_eq!(cache.logits.shape, fused.shape);
+        for (a, b) in cache.logits.data.iter().zip(&fused.data) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        assert_eq!(cache.num_segments(), meta.num_segments());
+    }
+
+    #[test]
+    fn partial_forward_from_cache_matches_full() {
+        let rt = Runtime::cpu().unwrap();
+        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let model = Model::load(&rt, meta.clone()).unwrap();
+        let params = ParamStore::init(&meta, 13);
+        let x = rand_batch(&meta, meta.batch, 44);
+        let cache = model.forward_cached(&params, &x).unwrap();
+        // resume from the middle: same logits as the cached full pass
+        let mid = meta.num_segments() / 2;
+        let resumed = model.partial_forward(&params, mid, &cache.inputs[mid]).unwrap();
+        for (a, b) in resumed.data.iter().zip(&cache.logits.data) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn train_step_reduces_loss() {
+        let rt = Runtime::cpu().unwrap();
+        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let model = Model::load(&rt, meta.clone()).unwrap();
+        let mut params = ParamStore::init(&meta, 15);
+        let x = rand_batch(&meta, meta.batch, 46);
+        let mut onehot = Tensor::zeros(vec![meta.batch, meta.num_classes]);
+        for i in 0..meta.batch {
+            onehot.data[i * meta.num_classes + (i % meta.num_classes)] = 1.0;
+        }
+        let l0 = model.train_step(&mut params, &x, &onehot, 0.05).unwrap();
+        let mut last = l0;
+        for _ in 0..4 {
+            last = model.train_step(&mut params, &x, &onehot, 0.05).unwrap();
+        }
+        assert!(last < l0, "loss {l0} -> {last}");
+    }
+
+    #[test]
+    fn loss_grad_rows_sum_zero() {
+        let rt = Runtime::cpu().unwrap();
+        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let model = Model::load(&rt, meta.clone()).unwrap();
+        let mb = meta.microbatch;
+        let mut rng = Pcg32::seeded(5);
+        let logits = Tensor::new(vec![mb, meta.num_classes],
+            rng.normal_vec(mb * meta.num_classes, 1.0)).unwrap();
+        let mut onehot = Tensor::zeros(vec![mb, meta.num_classes]);
+        for i in 0..mb {
+            onehot.data[i * meta.num_classes + (i % meta.num_classes)] = 1.0;
+        }
+        let g = model.loss_grad(&logits, &onehot).unwrap();
+        for i in 0..mb {
+            let s: f32 = g.row(i).iter().sum();
+            assert!(s.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn segment_bwd_shapes() {
+        let rt = Runtime::cpu().unwrap();
+        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let model = Model::load(&rt, meta.clone()).unwrap();
+        let params = ParamStore::init(&meta, 17);
+        let k = meta.num_segments() - 1; // head
+        let mb = meta.microbatch;
+        let mut in_shape = vec![mb];
+        in_shape.extend_from_slice(&meta.segments[k].in_shape);
+        let mut out_shape = vec![mb];
+        out_shape.extend_from_slice(&meta.segments[k].out_shape);
+        let x = Tensor::zeros(in_shape.clone());
+        let gy = Tensor::new(out_shape.clone(), vec![1.0; out_shape.iter().product()]).unwrap();
+        let (grads, gx) = model.segment_bwd(k, &params, &x, &gy).unwrap();
+        assert_eq!(grads.len(), meta.segments[k].params.len());
+        for (g, pm) in grads.iter().zip(&meta.segments[k].params) {
+            assert_eq!(g.shape, pm.shape);
+        }
+        assert_eq!(gx.shape, in_shape);
+    }
+}

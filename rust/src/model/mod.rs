@@ -1,0 +1,11 @@
+//! Model graph driver: per-segment compiled modules + parameter store +
+//! activation cache + MAC accounting.
+
+pub mod acts;
+pub mod graph;
+pub mod macs;
+pub mod params;
+
+pub use acts::ActivationCache;
+pub use graph::Model;
+pub use params::ParamStore;

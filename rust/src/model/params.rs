@@ -1,0 +1,286 @@
+//! Parameter store: per-segment named tensors, host-side.
+//!
+//! The store owns the single authoritative copy of the model parameters.
+//! Initialization follows standard He/Glorot-style schemes keyed off the
+//! parameter roles recorded in meta.json (the Rust binary initializes and
+//! trains — Python never produces parameter values). Checkpoints are a
+//! small self-describing binary format so trained models can be reused
+//! across CLI invocations (`artifacts/runs/<model>.fcb`).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelMeta;
+use crate::tensor::{quant, Tensor};
+use crate::util::prng::Pcg32;
+
+const MAGIC: &[u8; 8] = b"FICABU01";
+
+#[derive(Clone)]
+pub struct ParamStore {
+    /// `seg[i][j]` = j-th parameter tensor of segment i (meta order).
+    pub seg: Vec<Vec<Tensor>>,
+}
+
+impl ParamStore {
+    /// He/Glorot initialization from the meta inventory.
+    pub fn init(meta: &ModelMeta, seed: u64) -> ParamStore {
+        let mut rng = Pcg32::seeded(seed);
+        let mut seg = Vec::with_capacity(meta.segments.len());
+        for s in &meta.segments {
+            let mut ps = Vec::with_capacity(s.params.len());
+            for p in &s.params {
+                ps.push(init_param(&p.name, &p.shape, &mut rng));
+            }
+            seg.push(ps);
+        }
+        ParamStore { seg }
+    }
+
+    /// Flatten in (segment, param) order — the AOT whole-model arg order.
+    pub fn flat(&self) -> Vec<&Tensor> {
+        self.seg.iter().flat_map(|s| s.iter()).collect()
+    }
+
+    pub fn set_flat(&mut self, tensors: Vec<Tensor>) -> Result<()> {
+        let n: usize = self.seg.iter().map(|s| s.len()).sum();
+        if tensors.len() != n {
+            bail!("set_flat: {} tensors for {} slots", tensors.len(), n);
+        }
+        let mut it = tensors.into_iter();
+        for s in self.seg.iter_mut() {
+            for p in s.iter_mut() {
+                *p = it.next().unwrap();
+            }
+        }
+        Ok(())
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.seg.iter().flat_map(|s| s.iter()).map(|t| t.len()).sum()
+    }
+
+    /// Snap every tensor onto its INT8 grid (fake quantization) — the
+    /// INT8 deployment mode of the paper's §IV-B evaluation.
+    pub fn fake_quant_int8(&mut self) {
+        for s in self.seg.iter_mut() {
+            for p in s.iter_mut() {
+                quant::fake_quant(p);
+            }
+        }
+    }
+
+    // --- checkpoint io -----------------------------------------------------
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        push_u32(&mut buf, self.seg.len() as u32);
+        for s in &self.seg {
+            push_u32(&mut buf, s.len() as u32);
+            for t in s {
+                push_u32(&mut buf, t.shape.len() as u32);
+                for &d in &t.shape {
+                    push_u32(&mut buf, d as u32);
+                }
+                for v in &t.data {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<ParamStore> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?
+            .read_to_end(&mut bytes)?;
+        let mut pos = 0usize;
+        let magic = take(&bytes, &mut pos, 8)?;
+        if magic != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let nseg = read_u32(&bytes, &mut pos)? as usize;
+        let mut seg = Vec::with_capacity(nseg);
+        for _ in 0..nseg {
+            let np = read_u32(&bytes, &mut pos)? as usize;
+            let mut ps = Vec::with_capacity(np);
+            for _ in 0..np {
+                let rank = read_u32(&bytes, &mut pos)? as usize;
+                let mut shape = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    shape.push(read_u32(&bytes, &mut pos)? as usize);
+                }
+                let n: usize = shape.iter().product();
+                let raw = take(&bytes, &mut pos, n * 4)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                ps.push(Tensor::new(shape, data)?);
+            }
+            seg.push(ps);
+        }
+        Ok(ParamStore { seg })
+    }
+
+    /// Shape-check against a meta inventory.
+    pub fn validate(&self, meta: &ModelMeta) -> Result<()> {
+        if self.seg.len() != meta.segments.len() {
+            bail!("segment count {} != meta {}", self.seg.len(), meta.segments.len());
+        }
+        for (s, ms) in self.seg.iter().zip(&meta.segments) {
+            if s.len() != ms.params.len() {
+                bail!("segment {}: {} params != meta {}", ms.name, s.len(), ms.params.len());
+            }
+            for (t, pm) in s.iter().zip(&ms.params) {
+                if t.shape != pm.shape {
+                    bail!("{}.{}: shape {:?} != meta {:?}", ms.name, pm.name, t.shape, pm.shape);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn init_param(name: &str, shape: &[usize], rng: &mut Pcg32) -> Tensor {
+    let n: usize = shape.iter().product();
+    // Norm scales start at 1, biases/shifts at 0, everything else random.
+    let is_scale = matches!(name, "gamma" | "g1" | "g2" | "gd" | "lng")
+        || name.starts_with("ln") && name.ends_with('g');
+    let is_shift = matches!(name, "beta" | "b1" | "b2" | "bd" | "lnb" | "b" | "bqkv" | "bproj")
+        || (name.starts_with("ln") && name.ends_with('b'));
+    if is_scale && shape.len() == 1 {
+        return Tensor { shape: shape.to_vec(), data: vec![1.0; n] };
+    }
+    if is_shift && shape.len() == 1 {
+        return Tensor { shape: shape.to_vec(), data: vec![0.0; n] };
+    }
+    let std = match shape.len() {
+        4 => {
+            // HWIO conv: He over fan_in = kh*kw*cin
+            let fan_in = (shape[0] * shape[1] * shape[2]) as f32;
+            (2.0 / fan_in).sqrt()
+        }
+        2 => {
+            // dense: Glorot
+            let (fi, fo) = (shape[0] as f32, shape[1] as f32);
+            (2.0 / (fi + fo)).sqrt()
+        }
+        _ => 0.02, // positional embeddings etc.
+    };
+    Tensor { shape: shape.to_vec(), data: rng.normal_vec(n, std) }
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn read_u32(b: &[u8], pos: &mut usize) -> Result<u32> {
+    let raw = take(b, pos, 4)?;
+    Ok(u32::from_le_bytes([raw[0], raw[1], raw[2], raw[3]]))
+}
+
+fn take<'a>(b: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if *pos + n > b.len() {
+        bail!("checkpoint truncated at byte {}", pos);
+    }
+    let s = &b[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn art() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts")
+    }
+
+    #[test]
+    fn init_matches_meta() {
+        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let ps = ParamStore::init(&meta, 1);
+        ps.validate(&meta).unwrap();
+        assert_eq!(ps.total_len(), meta.total_params());
+        // norm scales are ones
+        let stem = &ps.seg[0];
+        assert!(stem[1].data.iter().all(|&v| v == 1.0)); // gamma
+        assert!(stem[2].data.iter().all(|&v| v == 0.0)); // beta
+        // conv weights are random, nonzero
+        assert!(stem[0].l2() > 0.0);
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let meta = ModelMeta::load(art().join("vitslim")).unwrap();
+        let a = ParamStore::init(&meta, 7);
+        let b = ParamStore::init(&meta, 7);
+        assert_eq!(a.flat().len(), b.flat().len());
+        for (x, y) in a.flat().iter().zip(b.flat().iter()) {
+            assert_eq!(x.data, y.data);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let ps = ParamStore::init(&meta, 3);
+        let dir = std::env::temp_dir().join("ficabu_test_ckpt");
+        let path = dir.join("rn.fcb");
+        ps.save(&path).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        loaded.validate(&meta).unwrap();
+        for (a, b) in ps.flat().iter().zip(loaded.flat().iter()) {
+            assert_eq!(a.data, b.data);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn set_flat_roundtrip() {
+        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let mut ps = ParamStore::init(&meta, 5);
+        let cloned: Vec<Tensor> = ps.flat().into_iter().cloned().collect();
+        ps.set_flat(cloned).unwrap();
+        ps.validate(&meta).unwrap();
+        assert!(ps.set_flat(vec![]).is_err());
+    }
+
+    #[test]
+    fn int8_quant_changes_but_approximates() {
+        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let mut ps = ParamStore::init(&meta, 9);
+        let before: Vec<f32> = ps.seg[0][0].data.clone();
+        ps.fake_quant_int8();
+        let after = &ps.seg[0][0].data;
+        let rel: f32 = before
+            .iter()
+            .zip(after)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / before.iter().map(|v| v.abs()).sum::<f32>();
+        assert!(rel < 0.01, "quant err {rel}");
+    }
+
+    #[test]
+    fn corrupt_checkpoint_rejected() {
+        let dir = std::env::temp_dir().join("ficabu_test_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.fcb");
+        std::fs::write(&path, b"NOTMAGIC").unwrap();
+        assert!(ParamStore::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,105 @@
+//! Executable wrapper: Tensor <-> Literal conversion + per-exe run stats.
+
+use std::cell::RefCell;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub compiles: u64,
+    pub compile_ms: f64,
+    pub runs: u64,
+    pub run_ms: f64,
+}
+
+/// A compiled PJRT executable with positional-argument semantics matching
+/// the AOT export (params..., x[, gy]); outputs are the flattened ROOT
+/// tuple in export order.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    stats: RefCell<ExecStats>,
+}
+
+impl Executable {
+    pub(crate) fn new(name: String, exe: xla::PjRtLoadedExecutable) -> Executable {
+        Executable { name, exe, stats: RefCell::new(ExecStats::default()) }
+    }
+
+    /// Execute with host tensors; returns the output tuple as tensors.
+    pub fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let t0 = std::time::Instant::now();
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| tensor_to_literal(t))
+            .collect::<Result<_>>()?;
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        // AOT lowers with return_tuple=True, so the result is always a tuple.
+        let parts = lit
+            .to_tuple()
+            .with_context(|| format!("untupling result of {}", self.name))?;
+        let result = parts
+            .into_iter()
+            .map(|l| literal_to_tensor(&l))
+            .collect::<Result<Vec<_>>>()?;
+        let mut st = self.stats.borrow_mut();
+        st.runs += 1;
+        st.run_ms += t0.elapsed().as_secs_f64() * 1e3;
+        Ok(result)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        self.stats.borrow().clone()
+    }
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    if t.shape.is_empty() {
+        // rank-0: reshape [1] -> []
+        return lit.reshape(&[]).context("reshaping scalar literal");
+    }
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).context("reshaping literal")
+}
+
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().context("literal has no array shape")?;
+    let ty = shape.ty();
+    if !matches!(ty, xla::ElementType::F32) {
+        bail!("expected f32 output, got {:?}", ty);
+    }
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>().context("reading literal data")?;
+    Tensor::new(dims, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar(3.25);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back.shape, Vec::<usize>::new());
+        assert_eq!(back.data, vec![3.25]);
+    }
+}

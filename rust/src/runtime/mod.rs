@@ -1,0 +1,165 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute many.
+//!
+//! This is the only module that touches the `xla` crate. The rest of the
+//! coordinator deals in [`crate::tensor::Tensor`]s; conversion happens at
+//! the execute boundary. Executables are cached by path, so the per-layer
+//! unlearning loop pays compilation once per module per process.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+mod exec;
+pub use exec::{ExecStats, Executable};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU client plus an executable cache.
+///
+/// Deliberately `!Sync`: PJRT client handles are owned by the coordinator
+/// thread, matching the single Unlearning Engine of the processor; the
+/// request-facing threads talk to it via channels (`coordinator`).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<Executable>>>,
+    stats: RefCell<ExecStats>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(ExecStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text module, memoized by canonical path.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Rc<Executable>> {
+        let path = path.as_ref();
+        let key = path
+            .canonicalize()
+            .with_context(|| format!("module not found: {}", path.display()))?;
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {}", key.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", key.display()))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
+            st.compiles += 1;
+        }
+        let exe = Rc::new(Executable::new(
+            key.file_name().unwrap().to_string_lossy().to_string(),
+            exe,
+        ));
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    pub fn cached_modules(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Aggregate runtime statistics (compile count/time plus run stats
+    /// summed over every cached [`Executable`]).
+    pub fn stats(&self) -> ExecStats {
+        let mut s = self.stats.borrow().clone();
+        for exe in self.cache.borrow().values() {
+            let e = exe.stats();
+            s.runs += e.runs;
+            s.run_ms += e.run_ms;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SharedMeta;
+    use crate::tensor::Tensor;
+    use std::path::Path;
+
+    fn art() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts")
+    }
+
+    #[test]
+    fn load_and_run_fimd_module() {
+        let rt = Runtime::cpu().unwrap();
+        let shared = SharedMeta::load(art().join("shared")).unwrap();
+        let exe = rt.load(shared.module_path(&shared.fimd)).unwrap();
+        let t = shared.tile;
+        let grad = Tensor::vec1((0..t).map(|i| (i % 7) as f32 * 0.1).collect());
+        let acc = Tensor::vec1(vec![1.0; t]);
+        let scale = Tensor::vec1(vec![0.5]);
+        let out = exe.run(&[&grad, &acc, &scale]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![t]);
+        for i in (0..t).step_by(1717) {
+            let g = grad.data[i];
+            let want = 1.0 + 0.5 * g * g;
+            assert!((out[0].data[i] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let rt = Runtime::cpu().unwrap();
+        let shared = SharedMeta::load(art().join("shared")).unwrap();
+        let p = shared.module_path(&shared.dampen);
+        let a = rt.load(&p).unwrap();
+        let b = rt.load(&p).unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+        assert_eq!(rt.cached_modules(), 1);
+        assert_eq!(rt.stats().compiles, 1);
+    }
+
+    #[test]
+    fn dampen_module_semantics() {
+        let rt = Runtime::cpu().unwrap();
+        let shared = SharedMeta::load(art().join("shared")).unwrap();
+        let exe = rt.load(shared.module_path(&shared.dampen)).unwrap();
+        let t = shared.tile;
+        // idf huge for even indices -> selected, dampened by beta = id/idf
+        let theta = Tensor::vec1(vec![2.0; t]);
+        let idf = Tensor::vec1(
+            (0..t).map(|i| if i % 2 == 0 { 10.0 } else { 0.1 }).collect(),
+        );
+        let idd = Tensor::vec1(vec![1.0; t]);
+        let alpha = Tensor::vec1(vec![5.0]);
+        let lam = Tensor::vec1(vec![1.0]);
+        let out = exe.run(&[&theta, &idf, &idd, &alpha, &lam]).unwrap();
+        assert_eq!(out.len(), 2);
+        // even: selected (10 > 5*1), beta = min(1*1/10, 1) = 0.1 -> 0.2
+        assert!((out[0].data[0] - 0.2).abs() < 1e-6);
+        assert_eq!(out[1].data[0], 1.0);
+        // odd: not selected
+        assert_eq!(out[0].data[1], 2.0);
+        assert_eq!(out[1].data[1], 0.0);
+    }
+
+    #[test]
+    fn missing_module_errors() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.load("/nonexistent/x.hlo.txt").is_err());
+    }
+}

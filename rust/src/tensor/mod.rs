@@ -1,0 +1,189 @@
+//! Dense row-major f32 tensor — the host-side value type of the coordinator.
+//!
+//! Device math happens inside compiled XLA executables; this type only
+//! needs construction, batch slicing/padding (for the micro-batched FIMD
+//! stream), flattening into the tile bursts the engine modules consume, and
+//! the small readout ops the metrics use (argmax, softmax rows).
+
+pub mod quant;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn vec1(data: Vec<f32>) -> Tensor {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Leading (batch) dimension, or 1 for scalars.
+    pub fn batch(&self) -> usize {
+        self.shape.first().copied().unwrap_or(1)
+    }
+
+    /// Elements per sample (product of non-batch dims).
+    pub fn sample_len(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape[1..].iter().product()
+        }
+    }
+
+    /// Slice `[start, start+count)` along the batch dimension (contiguous
+    /// in row-major, so this is a memcpy).
+    pub fn slice_batch(&self, start: usize, count: usize) -> Result<Tensor> {
+        let b = self.batch();
+        if start + count > b {
+            bail!("batch slice {}..{} out of {}", start, start + count, b);
+        }
+        let s = self.sample_len();
+        let mut shape = self.shape.clone();
+        shape[0] = count;
+        Ok(Tensor {
+            shape,
+            data: self.data[start * s..(start + count) * s].to_vec(),
+        })
+    }
+
+    /// Stack sample-tensors along a new batch dim, padding with repeats of
+    /// the final sample if fewer than `batch` are given (XLA modules have a
+    /// static batch; metrics mask the padding back out).
+    pub fn stack_pad(samples: &[&[f32]], sample_shape: &[usize], batch: usize) -> Result<Tensor> {
+        if samples.is_empty() || samples.len() > batch {
+            bail!("stack_pad: {} samples for batch {}", samples.len(), batch);
+        }
+        let s: usize = sample_shape.iter().product();
+        let mut data = Vec::with_capacity(batch * s);
+        for x in samples {
+            if x.len() != s {
+                bail!("stack_pad: sample len {} != {}", x.len(), s);
+            }
+            data.extend_from_slice(x);
+        }
+        let last = samples[samples.len() - 1];
+        for _ in samples.len()..batch {
+            data.extend_from_slice(last);
+        }
+        let mut shape = vec![batch];
+        shape.extend_from_slice(sample_shape);
+        Tensor::new(shape, data)
+    }
+
+    /// View row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.sample_len();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.batch())
+            .map(|i| {
+                let r = self.row(i);
+                r.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Row-wise softmax (used by the MIA / loss metrics on logits).
+    pub fn softmax_rows(&self) -> Tensor {
+        let c = self.sample_len();
+        let mut out = self.clone();
+        for i in 0..self.batch() {
+            let r = &mut out.data[i * c..(i + 1) * c];
+            let m = r.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0;
+            for v in r.iter_mut() {
+                *v = (*v - m).exp();
+                z += *v;
+            }
+            for v in r.iter_mut() {
+                *v /= z;
+            }
+        }
+        out
+    }
+
+    pub fn l2(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn batch_slice() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|i| i as f32).collect()).unwrap();
+        let s = t.slice_batch(1, 2).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![2.0, 3.0, 4.0, 5.0]);
+        assert!(t.slice_batch(3, 2).is_err());
+    }
+
+    #[test]
+    fn stack_pad_repeats_last() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let t = Tensor::stack_pad(&[&a, &b], &[2], 4).unwrap();
+        assert_eq!(t.shape, vec![4, 2]);
+        assert_eq!(t.data, vec![1.0, 2.0, 3.0, 4.0, 3.0, 4.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn argmax() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0]).unwrap();
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]).unwrap();
+        let s = t.softmax_rows();
+        for i in 0..2 {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+        assert!(s.row(0)[2] > s.row(0)[1]);
+    }
+}

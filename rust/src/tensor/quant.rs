@@ -1,0 +1,103 @@
+//! INT8 per-tensor symmetric fake-quantization.
+//!
+//! The FiCABU prototype targets INT8 models (paper §IV-A: "Unless noted
+//! otherwise, we target INT8 quantized models"). The compiled XLA modules
+//! are f32, so we reproduce the INT8 operating point by quantize→dequantize
+//! of weights (and optionally activations): values are snapped onto the
+//! 256-level grid the hardware would see, and the hwsim charges INT8 MAC
+//! energy. DESIGN.md §2 records this substitution.
+
+use super::Tensor;
+
+/// Per-tensor symmetric scale for the int8 range [-127, 127].
+pub fn scale_for(data: &[f32]) -> f32 {
+    let amax = data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if amax == 0.0 {
+        1.0
+    } else {
+        amax / 127.0
+    }
+}
+
+/// Quantize to int8 with round-to-nearest-even-ish (f32 round).
+pub fn quantize(data: &[f32], scale: f32) -> Vec<i8> {
+    data.iter()
+        .map(|v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect()
+}
+
+pub fn dequantize(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+/// Snap a tensor onto its int8 grid in place; returns the scale.
+pub fn fake_quant(t: &mut Tensor) -> f32 {
+    let s = scale_for(&t.data);
+    for v in t.data.iter_mut() {
+        *v = (*v / s).round().clamp(-127.0, 127.0) * s;
+    }
+    s
+}
+
+/// Quantization SNR in dB — used by the INT8 ablation bench.
+pub fn quant_snr_db(orig: &[f32], quant: &[f32]) -> f32 {
+    let sig: f32 = orig.iter().map(|v| v * v).sum();
+    let err: f32 = orig
+        .iter()
+        .zip(quant)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum();
+    if err == 0.0 {
+        f32::INFINITY
+    } else {
+        10.0 * (sig / err).log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut r = Pcg32::seeded(3);
+        let data = r.normal_vec(4096, 0.5);
+        let s = scale_for(&data);
+        let deq = dequantize(&quantize(&data, s), s);
+        for (a, b) in data.iter().zip(&deq) {
+            assert!((a - b).abs() <= s * 0.5 + 1e-7, "{a} vs {b} (s={s})");
+        }
+    }
+
+    #[test]
+    fn fake_quant_idempotent() {
+        let mut r = Pcg32::seeded(4);
+        let mut t = Tensor::vec1(r.normal_vec(1024, 1.0));
+        fake_quant(&mut t);
+        let once = t.clone();
+        fake_quant(&mut t);
+        for (a, b) in once.data.iter().zip(&t.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zeros_stay_zero() {
+        let mut t = Tensor::zeros(vec![16]);
+        let s = fake_quant(&mut t);
+        assert_eq!(s, 1.0);
+        assert!(t.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn snr_reasonable() {
+        let mut r = Pcg32::seeded(5);
+        let data = r.normal_vec(8192, 1.0);
+        let mut t = Tensor::vec1(data.clone());
+        fake_quant(&mut t);
+        let snr = quant_snr_db(&data, &t.data);
+        // int8 on gaussian data: expect > 30 dB
+        assert!(snr > 30.0, "snr {snr}");
+    }
+}

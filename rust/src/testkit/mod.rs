@@ -1,0 +1,106 @@
+//! Seeded property-testing harness (no `proptest` in the vendor tree).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated inputs;
+//! on failure it reports the seed + case index so the exact input can be
+//! replayed, and performs a simple halving shrink when the generator
+//! supports resizing.
+
+pub mod prop {
+    use crate::util::prng::Pcg32;
+
+    /// Run a property over `cases` random inputs. `gen` receives an RNG and
+    /// a size hint in [1, 100]; `prop` returns `Err(reason)` on violation.
+    pub fn check<T: std::fmt::Debug>(
+        name: &str,
+        cases: usize,
+        mut gen: impl FnMut(&mut Pcg32, usize) -> T,
+        mut prop: impl FnMut(&T) -> Result<(), String>,
+    ) {
+        let seed = 0xf1ca_b0u64;
+        for case in 0..cases {
+            let mut rng = Pcg32::new(seed, case as u64);
+            let size = 1 + (case * 100 / cases.max(1));
+            let input = gen(&mut rng, size);
+            if let Err(reason) = prop(&input) {
+                // shrink: retry with smaller size hints from the same stream
+                let mut smallest = None;
+                for s in [size / 2, size / 4, 2, 1] {
+                    if s == 0 {
+                        continue;
+                    }
+                    let mut rng2 = Pcg32::new(seed, case as u64);
+                    let cand = gen(&mut rng2, s);
+                    if prop(&cand).is_err() {
+                        smallest = Some((s, cand));
+                    }
+                }
+                if let Some((s, cand)) = smallest {
+                    panic!(
+                        "property `{name}` failed (case {case}, seed {seed:#x}):\n  {reason}\n  shrunk input (size {s}): {cand:?}"
+                    );
+                }
+                panic!(
+                    "property `{name}` failed (case {case}, seed {seed:#x}):\n  {reason}\n  input: {input:?}"
+                );
+            }
+        }
+    }
+
+    /// Assert two f32 slices are elementwise close.
+    pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+        if a.len() != b.len() {
+            return Err(format!("length {} vs {}", a.len(), b.len()));
+        }
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            if (x - y).abs() > tol * (1.0 + x.abs().max(y.abs())) {
+                return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::prop;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn passing_property() {
+        prop::check(
+            "reverse twice is identity",
+            50,
+            |rng: &mut Pcg32, size| {
+                (0..size).map(|_| rng.next_u32()).collect::<Vec<_>>()
+            },
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v {
+                    Ok(())
+                } else {
+                    Err("mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_panics_with_context() {
+        prop::check(
+            "always fails",
+            5,
+            |rng: &mut Pcg32, _| rng.next_u32(),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn assert_close_works() {
+        assert!(prop::assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5).is_ok());
+        assert!(prop::assert_close(&[1.0], &[1.1], 1e-5).is_err());
+        assert!(prop::assert_close(&[1.0], &[1.0, 2.0], 1e-5).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Dampening engine: streams parameter bursts through the compiled Pallas
+//! Dampening IP module — eq. (3) selection + eq. (4) strength, with the
+//! Balanced-Dampening scaled `(alpha, lambda)` supplied per segment by the
+//! coordinator (the IP itself is layer-agnostic, like the RTL).
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::config::SharedMeta;
+use crate::runtime::{Executable, Runtime};
+use crate::tensor::Tensor;
+
+pub struct DampEngine {
+    exe: Rc<Executable>,
+    pub tile: usize,
+    pub elems_streamed: std::cell::Cell<u64>,
+}
+
+/// Result of one segment-level dampening pass.
+#[derive(Debug, Clone, Default)]
+pub struct DampStats {
+    pub selected: u64,
+    pub total: u64,
+}
+
+impl DampEngine {
+    pub fn new(rt: &Runtime, shared: &SharedMeta) -> Result<DampEngine> {
+        Ok(DampEngine {
+            exe: rt.load(shared.module_path(&shared.dampen))?,
+            tile: shared.tile,
+            elems_streamed: std::cell::Cell::new(0),
+        })
+    }
+
+    /// In-place dampening of a segment burst. `theta`, `i_df`, `i_d` are
+    /// the segment's concatenated parameters / forget importance / global
+    /// importance; returns the selection count.
+    ///
+    /// Tail padding uses `i_df = 0` so padded lanes are never selected
+    /// (`0 > alpha * i_d_pad` is false for the `i_d_pad = 1` filler).
+    pub fn dampen(
+        &self,
+        theta: &mut [f32],
+        i_df: &[f32],
+        i_d: &[f32],
+        alpha: f32,
+        lambda: f32,
+    ) -> Result<DampStats> {
+        if theta.len() != i_df.len() || theta.len() != i_d.len() {
+            bail!(
+                "dampen: mismatched lens {} / {} / {}",
+                theta.len(),
+                i_df.len(),
+                i_d.len()
+            );
+        }
+        let t = self.tile;
+        let alpha_t = Tensor::vec1(vec![alpha]);
+        let lambda_t = Tensor::vec1(vec![lambda]);
+        let mut stats = DampStats { selected: 0, total: theta.len() as u64 };
+        let mut off = 0;
+        while off < theta.len() {
+            let n = t.min(theta.len() - off);
+            let mut tb = vec![0.0f32; t];
+            tb[..n].copy_from_slice(&theta[off..off + n]);
+            let mut fb = vec![0.0f32; t]; // pad I_Df = 0 -> unselected
+            fb[..n].copy_from_slice(&i_df[off..off + n]);
+            let mut db = vec![1.0f32; t]; // pad I_D = 1
+            db[..n].copy_from_slice(&i_d[off..off + n]);
+            let out = self.exe.run(&[
+                &Tensor::vec1(tb),
+                &Tensor::vec1(fb),
+                &Tensor::vec1(db),
+                &alpha_t,
+                &lambda_t,
+            ])?;
+            theta[off..off + n].copy_from_slice(&out[0].data[..n]);
+            stats.selected += out[1].data[..n].iter().map(|&m| m as u64).sum::<u64>();
+            self.elems_streamed.set(self.elems_streamed.get() + t as u64);
+            off += n;
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn engine() -> (Runtime, DampEngine) {
+        let rt = Runtime::cpu().unwrap();
+        let art = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts");
+        let shared = SharedMeta::load(art.join("shared")).unwrap();
+        let eng = DampEngine::new(&rt, &shared);
+        let eng = eng.unwrap();
+        (rt, eng)
+    }
+
+    #[test]
+    fn selective_dampening_semantics() {
+        let (_rt, eng) = engine();
+        let n = eng.tile + 100; // exercise tail padding
+        let mut theta = vec![4.0f32; n];
+        // every third param has forget-importance 20x global
+        let i_df: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 20.0 } else { 0.5 }).collect();
+        let i_d = vec![1.0f32; n];
+        let stats = eng.dampen(&mut theta, &i_df, &i_d, 10.0, 1.0).unwrap();
+        let want_sel = (0..n).filter(|i| i % 3 == 0).count() as u64;
+        assert_eq!(stats.selected, want_sel);
+        assert_eq!(stats.total, n as u64);
+        // selected: beta = min(1/20, 1) = 0.05 -> 0.2
+        assert!((theta[0] - 0.2).abs() < 1e-5);
+        assert_eq!(theta[1], 4.0);
+        assert_eq!(theta[n - 1], if (n - 1) % 3 == 0 { 0.2 } else { 4.0 });
+    }
+
+    #[test]
+    fn alpha_lambda_scaling_changes_selection() {
+        let (_rt, eng) = engine();
+        let n = 2048;
+        let i_df: Vec<f32> = (0..n).map(|i| i as f32 / n as f32 * 10.0).collect();
+        let i_d = vec![1.0f32; n];
+        let mut t1 = vec![1.0f32; n];
+        let s1 = eng.dampen(&mut t1, &i_df, &i_d, 1.0, 1.0).unwrap();
+        let mut t2 = vec![1.0f32; n];
+        let s2 = eng.dampen(&mut t2, &i_df, &i_d, 5.0, 1.0).unwrap();
+        assert!(s2.selected < s1.selected, "{} vs {}", s2.selected, s1.selected);
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        let (_rt, eng) = engine();
+        let mut theta = vec![0.0; 8];
+        assert!(eng.dampen(&mut theta, &[0.0; 7], &[0.0; 8], 1.0, 1.0).is_err());
+    }
+}

@@ -1,0 +1,278 @@
+//! The unlearning engine — Algorithm 1 with the Balanced Dampening profile.
+//!
+//! One implementation covers all four operating points evaluated in the
+//! paper; they differ only in configuration:
+//!
+//! | mode     | checkpoints | schedule  | paper artifact |
+//! |----------|-------------|-----------|----------------|
+//! | SSD      | none        | Uniform   | baseline, §II  |
+//! | CAU      | paper grid  | Uniform   | Table I        |
+//! | BD       | none        | Sigmoid   | Table II       |
+//! | FiCABU   | paper grid  | Sigmoid   | Table IV       |
+//!
+//! The loop walks segments back-end-first (depth l = 1 at the head). For
+//! each segment it streams the per-microbatch gradient chain through the
+//! FIMD module (Fisher of the *original* parameters — the gy chain for
+//! segment l is computed before segment l is dampened, so the whole chain
+//! sees pre-edit weights, exactly like SSD's single-pass formulation),
+//! dampens the segment through the Dampening module with `S(l)`-scaled
+//! `(alpha, lambda)`, and at checkpoints resumes partial inference from the
+//! cached activations to decide early stop.
+
+use anyhow::{bail, Result};
+
+use crate::fisher::{concat_seg, FimdEngine, Importance};
+use crate::model::macs::{self, MacLedger};
+use crate::model::{Model, ParamStore};
+use crate::tensor::Tensor;
+use crate::unlearn::damp::DampEngine;
+use crate::unlearn::schedule::Schedule;
+
+#[derive(Debug, Clone)]
+pub struct UnlearnConfig {
+    pub alpha: f64,
+    pub lambda: f64,
+    pub schedule: Schedule,
+    /// Depths l at which to run checkpoint partial inference; empty
+    /// disables early stop (SSD/BD).
+    pub checkpoints: Vec<usize>,
+    /// Target forget accuracy (fraction): random-guess level for the task.
+    pub tau: f64,
+}
+
+impl UnlearnConfig {
+    pub fn ssd(alpha: f64, lambda: f64) -> UnlearnConfig {
+        UnlearnConfig {
+            alpha,
+            lambda,
+            schedule: Schedule::Uniform,
+            checkpoints: vec![],
+            tau: 0.0,
+        }
+    }
+
+    pub fn cau(alpha: f64, lambda: f64, checkpoints: Vec<usize>, tau: f64) -> UnlearnConfig {
+        UnlearnConfig { alpha, lambda, schedule: Schedule::Uniform, checkpoints, tau }
+    }
+
+    pub fn bd(alpha: f64, lambda: f64, schedule: Schedule) -> UnlearnConfig {
+        UnlearnConfig { alpha, lambda, schedule, checkpoints: vec![], tau: 0.0 }
+    }
+
+    pub fn ficabu(
+        alpha: f64,
+        lambda: f64,
+        schedule: Schedule,
+        checkpoints: Vec<usize>,
+        tau: f64,
+    ) -> UnlearnConfig {
+        UnlearnConfig { alpha, lambda, schedule, checkpoints, tau }
+    }
+}
+
+/// The paper's checkpoint grid: first and last depth, plus every
+/// `stride` interior segments (every 4 of 16 convs = every 2 of 8 blocks
+/// for ResNet-18; every 3 of 12 encoders for ViT).
+pub fn default_checkpoints(num_segments: usize, stride: usize) -> Vec<usize> {
+    let big_l = num_segments;
+    let mut cps = vec![1];
+    let mut l = 1 + stride;
+    while l < big_l {
+        cps.push(l);
+        l += stride;
+    }
+    cps.push(big_l);
+    cps.dedup();
+    cps
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct UnlearnReport {
+    pub ledger: MacLedger,
+    /// Depth at which early stop fired (None = ran to the front-end).
+    pub stop_depth: Option<usize>,
+    pub segments_edited: usize,
+    /// Selected-parameter count per depth l (index l-1) — Fig. 3 data.
+    pub selected_per_depth: Vec<u64>,
+    /// (depth, measured forget accuracy) at every evaluated checkpoint.
+    pub checkpoint_trace: Vec<(usize, f64)>,
+    /// Elements streamed through each IP (feeds the hwsim cycle model).
+    pub fimd_elems: u64,
+    pub damp_elems: u64,
+    /// Bytes of activation cache held for checkpoint reuse.
+    pub act_cache_bytes: usize,
+}
+
+pub fn make_onehot(labels: &[usize], classes: usize) -> Tensor {
+    let mut t = Tensor::zeros(vec![labels.len(), classes]);
+    for (i, &c) in labels.iter().enumerate() {
+        t.data[i * classes + c] = 1.0;
+    }
+    t
+}
+
+/// Run one unlearning event over a forget batch.
+///
+/// `forget_x` is `[N, ...]` with N = meta.batch; `forget_labels[n]` the
+/// class to forget (per the paper a single class per event). `global` is
+/// the stored `I_D`.
+pub fn run_unlearning(
+    model: &Model,
+    params: &mut ParamStore,
+    forget_x: &Tensor,
+    forget_labels: &[usize],
+    global: &Importance,
+    fimd: &FimdEngine,
+    damp: &DampEngine,
+    cfg: &UnlearnConfig,
+) -> Result<UnlearnReport> {
+    let meta = &model.meta;
+    let big_l = meta.num_segments();
+    let mb_size = meta.microbatch;
+    if forget_x.batch() != meta.batch {
+        bail!("forget batch {} != model batch {}", forget_x.batch(), meta.batch);
+    }
+    if forget_labels.len() != meta.batch {
+        bail!("labels len {} != batch {}", forget_labels.len(), meta.batch);
+    }
+    let num_mb = meta.batch / mb_size;
+    let fimd_start = fimd.elems_streamed.get();
+    let damp_start = damp.elems_streamed.get();
+
+    let mut report = UnlearnReport {
+        selected_per_depth: vec![0; big_l],
+        ..Default::default()
+    };
+
+    // --- Step 0: one forward pass, cache every segment input -------------
+    let cache = model.forward_cached(params, forget_x)?;
+    report.ledger.forward = macs::full_forward_macs(meta, meta.batch);
+    report.act_cache_bytes = cache.bytes();
+
+    // Per-microbatch gradient chain state, seeded at the logits.
+    let onehot = make_onehot(forget_labels, meta.num_classes);
+    let mut gy_state: Vec<Tensor> = Vec::with_capacity(num_mb);
+    for mb in 0..num_mb {
+        let logits_mb = cache.microbatch_logits(mb, mb_size)?;
+        let onehot_mb = onehot.slice_batch(mb * mb_size, mb_size)?;
+        gy_state.push(model.loss_grad(&logits_mb, &onehot_mb)?);
+    }
+
+    // --- back-end-first layer loop ---------------------------------------
+    for l in 1..=big_l {
+        let k = meta.seg_index(l);
+
+        // Fisher on D_f for this segment (original-parameter gradients:
+        // this segment is dampened only after its bwd has produced gx).
+        let mut i_df = vec![0.0f32; meta.segments[k].param_count()];
+        let scale = 1.0 / num_mb as f32;
+        for mb in 0..num_mb {
+            let x_mb = cache.microbatch_input(k, mb, mb_size)?;
+            let (grads, gx) = model.segment_bwd(k, params, &x_mb, &gy_state[mb])?;
+            fimd.accumulate(&mut i_df, &concat_seg(&grads), scale)?;
+            gy_state[mb] = gx;
+        }
+        report.ledger.backward += macs::bwd_macs(meta, k, meta.batch);
+        report.ledger.fisher += macs::fisher_macs(meta, k, num_mb);
+
+        // Balanced Dampening: scale (alpha, lambda) by S(l).
+        let s = cfg.schedule.s(l, big_l);
+        let alpha_l = (cfg.alpha * s) as f32;
+        let lambda_l = (cfg.lambda * s) as f32;
+        let mut theta = concat_seg(&params.seg[k]);
+        let stats = damp.dampen(&mut theta, &i_df, &global.per_seg[k], alpha_l, lambda_l)?;
+        scatter_seg(&theta, &mut params.seg[k]);
+        report.ledger.dampen += macs::dampen_macs(meta, k);
+        report.selected_per_depth[l - 1] = stats.selected;
+        report.segments_edited = l;
+
+        // Checkpoint: partial inference from the cached input of this
+        // segment through the (now partially dampened) back-end.
+        if cfg.checkpoints.contains(&l) {
+            let logits = model.partial_forward(params, k, &cache.inputs[k])?;
+            report.ledger.checkpoint += macs::partial_inference_macs(meta, k, meta.batch);
+            let acc = forget_accuracy(&logits, forget_labels);
+            report.checkpoint_trace.push((l, acc));
+            if acc <= cfg.tau {
+                report.stop_depth = Some(l);
+                break; // layers l+1..L left untouched
+            }
+        }
+    }
+
+    report.fimd_elems = fimd.elems_streamed.get() - fimd_start;
+    report.damp_elems = damp.elems_streamed.get() - damp_start;
+    Ok(report)
+}
+
+/// Scatter a segment burst back into its parameter tensors (inverse of
+/// `fisher::concat_seg`).
+pub fn scatter_seg(burst: &[f32], tensors: &mut [Tensor]) {
+    let mut off = 0;
+    for t in tensors.iter_mut() {
+        let n = t.len();
+        t.data.copy_from_slice(&burst[off..off + n]);
+        off += n;
+    }
+    debug_assert_eq!(off, burst.len());
+}
+
+/// Batch-mean forget accuracy (Algorithm 1's `partial_inference` readout).
+pub fn forget_accuracy(logits: &Tensor, labels: &[usize]) -> f64 {
+    let preds = logits.argmax_rows();
+    let hits = preds
+        .iter()
+        .zip(labels)
+        .filter(|(p, l)| p == l)
+        .count();
+    hits as f64 / labels.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_checkpoint_grids_match_paper() {
+        // RN: 10 segments, every 2 blocks -> {1,3,5,7,9,10}
+        assert_eq!(default_checkpoints(10, 2), vec![1, 3, 5, 7, 9, 10]);
+        // ViT: 14 segments, every 3 encoders -> {1,4,7,10,13,14}
+        assert_eq!(default_checkpoints(14, 3), vec![1, 4, 7, 10, 13, 14]);
+    }
+
+    #[test]
+    fn onehot_layout() {
+        let t = make_onehot(&[2, 0], 3);
+        assert_eq!(t.data, vec![0.0, 0.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn scatter_roundtrip() {
+        let mut ts = vec![Tensor::vec1(vec![0.0; 3]), Tensor::vec1(vec![0.0; 2])];
+        scatter_seg(&[1.0, 2.0, 3.0, 4.0, 5.0], &mut ts);
+        assert_eq!(ts[0].data, vec![1.0, 2.0, 3.0]);
+        assert_eq!(ts[1].data, vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn forget_accuracy_counts() {
+        let logits = Tensor::new(vec![2, 3], vec![0.0, 5.0, 0.0, 9.0, 0.0, 0.0]).unwrap();
+        assert_eq!(forget_accuracy(&logits, &[1, 0]), 1.0);
+        assert_eq!(forget_accuracy(&logits, &[1, 2]), 0.5);
+    }
+
+    #[test]
+    fn config_modes() {
+        let ssd = UnlearnConfig::ssd(10.0, 1.0);
+        assert!(ssd.checkpoints.is_empty());
+        assert_eq!(ssd.schedule, Schedule::Uniform);
+        let fic = UnlearnConfig::ficabu(
+            10.0,
+            1.0,
+            Schedule::Sigmoid { cm: 5.0, br: 10.0 },
+            vec![1, 3],
+            0.05,
+        );
+        assert!(!fic.checkpoints.is_empty());
+    }
+}

@@ -1,0 +1,13 @@
+//! The paper's method: SSD substrate + Context-Adaptive Unlearning +
+//! Balanced Dampening, unified in one configurable engine.
+
+pub mod damp;
+pub mod engine;
+pub mod schedule;
+
+pub use damp::{DampEngine, DampStats};
+pub use engine::{
+    default_checkpoints, forget_accuracy, make_onehot, run_unlearning, UnlearnConfig,
+    UnlearnReport,
+};
+pub use schedule::Schedule;

@@ -1,0 +1,149 @@
+//! Balanced Dampening depth schedule — paper §III-B, eq. (5)/(6), Fig. 4.
+//!
+//! The scalars `(alpha, lambda)` become `S(l) * (alpha, lambda)` with
+//!
+//! ```text
+//! S(l) = 1 + (b_r - 1) * (sigma(l) - sigma(1)) / (sigma(L) - sigma(1))
+//! sigma(l) = 1 / (1 + exp(-(l - c_m)))
+//! ```
+//!
+//! S(1) = 1 at the back-end (strongest edits, selection threshold and
+//! dampening constant unscaled) rising monotonically to S(L) = b_r at the
+//! front-end (weakest edits, protecting general features).
+
+/// Depth profile applied to `(alpha, lambda)`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Schedule {
+    /// Layer-agnostic scalars — vanilla SSD.
+    Uniform,
+    /// Sigmoid profile of eq. (6).
+    Sigmoid { cm: f64, br: f64 },
+}
+
+impl Schedule {
+    /// S(l) for depth l in [1, L].
+    pub fn s(&self, l: usize, big_l: usize) -> f64 {
+        match self {
+            Schedule::Uniform => 1.0,
+            Schedule::Sigmoid { cm, br } => {
+                let sig = |x: f64| 1.0 / (1.0 + (-(x - cm)).exp());
+                let s1 = sig(1.0);
+                let sl = sig(big_l as f64);
+                if (sl - s1).abs() < 1e-12 {
+                    return 1.0;
+                }
+                1.0 + (br - 1.0) * (sig(l as f64) - s1) / (sl - s1)
+            }
+        }
+    }
+
+    /// The paper's calibration (§III-B): smooth the layer-wise selected
+    /// parameter distribution from an SSD pass, and center `c_m` at the
+    /// mid-value between the smoothed extrema. `selected[i]` is indexed by
+    /// depth l = i + 1; `b_r` defaults to 10 in the paper.
+    pub fn from_selection_distribution(selected: &[u64], br: f64) -> Schedule {
+        let l = selected.len();
+        if l < 3 {
+            return Schedule::Sigmoid { cm: (l as f64 + 1.0) / 2.0, br };
+        }
+        // 3-tap moving-average smoothing
+        let sm: Vec<f64> = (0..l)
+            .map(|i| {
+                let lo = i.saturating_sub(1);
+                let hi = (i + 1).min(l - 1);
+                (lo..=hi).map(|j| selected[j] as f64).sum::<f64>() / (hi - lo + 1) as f64
+            })
+            .collect();
+        let (mut lmax, mut lmin) = (0usize, 0usize);
+        for i in 0..l {
+            if sm[i] > sm[lmax] {
+                lmax = i;
+            }
+            if sm[i] < sm[lmin] {
+                lmin = i;
+            }
+        }
+        // depths are 1-based
+        let cm = ((lmax + 1) as f64 + (lmin + 1) as f64) / 2.0;
+        Schedule::Sigmoid { cm, br }
+    }
+
+    /// The full profile, for Fig. 4 output.
+    pub fn profile(&self, big_l: usize) -> Vec<f64> {
+        (1..=big_l).map(|l| self.s(l, big_l)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn uniform_is_one() {
+        for l in 1..=16 {
+            assert_eq!(Schedule::Uniform.s(l, 16), 1.0);
+        }
+    }
+
+    #[test]
+    fn sigmoid_endpoints() {
+        let s = Schedule::Sigmoid { cm: 8.0, br: 10.0 };
+        assert!((s.s(1, 16) - 1.0).abs() < 1e-9, "S(1) must be 1");
+        assert!((s.s(16, 16) - 10.0).abs() < 1e-9, "S(L) must be b_r");
+    }
+
+    #[test]
+    fn sigmoid_monotone_property() {
+        prop::check(
+            "S(l) monotonically nondecreasing in l when b_r >= 1",
+            100,
+            |rng: &mut Pcg32, size| {
+                let big_l = 3 + rng.below(size.max(3) + 13);
+                let cm = rng.range(0.0, big_l as f32 + 2.0) as f64;
+                let br = 1.0 + rng.range(0.0, 20.0) as f64;
+                (big_l, cm, br)
+            },
+            |&(big_l, cm, br)| {
+                let s = Schedule::Sigmoid { cm, br };
+                let prof = s.profile(big_l);
+                for w in prof.windows(2) {
+                    if w[1] < w[0] - 1e-9 {
+                        return Err(format!("decreasing: {w:?}"));
+                    }
+                }
+                if (prof[0] - 1.0).abs() > 1e-9 {
+                    return Err(format!("S(1)={}", prof[0]));
+                }
+                if (prof[big_l - 1] - br).abs() > 1e-9 {
+                    return Err(format!("S(L)={} br={br}", prof[big_l - 1]));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn calibration_centers_between_extrema() {
+        // back-end-heavy selection (depth 1 has most selections)
+        let selected = [1000u64, 800, 400, 100, 50, 20, 10, 5];
+        let s = Schedule::from_selection_distribution(&selected, 10.0);
+        match s {
+            Schedule::Sigmoid { cm, br } => {
+                assert_eq!(br, 10.0);
+                // max at l=1, min at l=8 -> cm = 4.5
+                assert!((cm - 4.5).abs() < 1.0, "cm={cm}");
+            }
+            _ => panic!("expected sigmoid"),
+        }
+    }
+
+    #[test]
+    fn degenerate_lengths() {
+        let s = Schedule::from_selection_distribution(&[5, 3], 10.0);
+        assert!(matches!(s, Schedule::Sigmoid { .. }));
+        // L = 1: S must not NaN
+        assert!(Schedule::Sigmoid { cm: 1.0, br: 10.0 }.s(1, 1).is_finite());
+    }
+}

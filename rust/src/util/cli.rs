@@ -1,0 +1,135 @@
+//! Tiny CLI argument parser (no `clap` in the offline vendor tree).
+//!
+//! Grammar: `ficabu <command> [--flag] [--key value]...`. Unknown keys are
+//! an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> anyhow::Result<Args> {
+        let mut it = argv.into_iter();
+        let mut out = Args::default();
+        out.command = it.next().unwrap_or_else(|| "help".to_string());
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --key, got `{a}`"))?
+                .to_string();
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                out.kv.insert(key, rest[i + 1].clone());
+                i += 2;
+            } else {
+                out.flags.push(key);
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Declare a key as known (for validation via [`Args::finish`]).
+    pub fn declare(&mut self, keys: &[&str]) -> &mut Self {
+        self.known.extend(keys.iter().map(|s| s.to_string()));
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected integer, got `{v}`")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected number, got `{v}`")),
+        }
+    }
+
+    /// Error on any key/flag that was never declared.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        for k in self.kv.keys().chain(self.flags.iter()) {
+            if !self.known.iter().any(|n| n == k) {
+                anyhow::bail!(
+                    "unknown option --{k} for `{}` (known: {})",
+                    self.command,
+                    self.known.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let mut a = Args::parse(argv("train --model rn18slim --steps 100 --verbose")).unwrap();
+        a.declare(&["model", "steps", "verbose"]);
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("model"), Some("rn18slim"));
+        assert_eq!(a.usize_or("steps", 1).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv("unlearn")).unwrap();
+        assert_eq!(a.str_or("model", "rn18slim"), "rn18slim");
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("alpha", 10.0).unwrap(), 10.0);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut a = Args::parse(argv("train --oops 1")).unwrap();
+        a.declare(&["model"]);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number() {
+        let a = Args::parse(argv("x --steps abc")).unwrap();
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(argv("cmd stray")).is_err());
+    }
+}

@@ -1,0 +1,6 @@
+//! Offline substrates: JSON, PRNG, CLI (no serde/rand/clap in the vendor
+//! tree — see DESIGN.md §5).
+
+pub mod cli;
+pub mod json;
+pub mod prng;

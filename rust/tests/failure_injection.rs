@@ -1,0 +1,112 @@
+//! Failure injection: the coordinator must fail loudly and safely on
+//! corrupted artifacts, malformed metadata, and shape mismatches — an
+//! edge device cannot page an operator.
+
+use std::path::{Path, PathBuf};
+
+use ficabu::config::{ModelMeta, SharedMeta};
+use ficabu::model::{Model, ParamStore};
+use ficabu::runtime::Runtime;
+use ficabu::tensor::Tensor;
+use ficabu::util::json::Json;
+
+fn art() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts")
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ficabu_fi_{name}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn truncated_hlo_module_is_rejected_at_load() {
+    let rt = Runtime::cpu().unwrap();
+    let src = art().join("shared").join("fimd.hlo.txt");
+    let text = std::fs::read_to_string(&src).unwrap();
+    let dir = tmpdir("trunc");
+    let bad = dir.join("fimd.hlo.txt");
+    std::fs::write(&bad, &text[..text.len() / 3]).unwrap();
+    assert!(rt.load(&bad).is_err(), "truncated HLO must not compile");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn garbage_hlo_module_is_rejected() {
+    let rt = Runtime::cpu().unwrap();
+    let dir = tmpdir("garbage");
+    let bad = dir.join("x.hlo.txt");
+    std::fs::write(&bad, "this is not an hlo module at all {{{").unwrap();
+    assert!(rt.load(&bad).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn meta_with_missing_keys_is_rejected() {
+    let dir = tmpdir("meta");
+    std::fs::write(dir.join("meta.json"), r#"{"name": "x"}"#).unwrap();
+    assert!(ModelMeta::load(&dir).is_err());
+    // malformed json
+    std::fs::write(dir.join("meta.json"), "{ nope").unwrap();
+    assert!(ModelMeta::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shared_meta_missing_dir_is_rejected() {
+    assert!(SharedMeta::load("/nonexistent/shared").is_err());
+}
+
+#[test]
+fn wrong_arity_execution_fails_not_crashes() {
+    let rt = Runtime::cpu().unwrap();
+    let shared = SharedMeta::load(art().join("shared")).unwrap();
+    let exe = rt.load(shared.module_path(&shared.fimd)).unwrap();
+    // fimd takes 3 args; give it 1 — must be an Err, not a segfault
+    let t = Tensor::vec1(vec![0.0; shared.tile]);
+    assert!(exe.run(&[&t]).is_err());
+}
+
+#[test]
+fn wrong_shape_execution_fails_not_crashes() {
+    let rt = Runtime::cpu().unwrap();
+    let shared = SharedMeta::load(art().join("shared")).unwrap();
+    let exe = rt.load(shared.module_path(&shared.fimd)).unwrap();
+    let wrong = Tensor::vec1(vec![0.0; 16]); // tile is 8192
+    let acc = Tensor::vec1(vec![0.0; 16]);
+    let s = Tensor::vec1(vec![1.0]);
+    assert!(exe.run(&[&wrong, &acc, &s]).is_err());
+}
+
+#[test]
+fn params_shape_mismatch_detected_by_validate() {
+    let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+    let mut ps = ParamStore::init(&meta, 1);
+    // corrupt one tensor's shape
+    ps.seg[0][0] = Tensor::zeros(vec![1, 2, 3]);
+    assert!(ps.validate(&meta).is_err());
+}
+
+#[test]
+fn model_load_with_missing_module_file_errors() {
+    let rt = Runtime::cpu().unwrap();
+    let mut meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+    meta.segments[0].fwd = "does_not_exist.hlo.txt".into();
+    assert!(Model::load(&rt, meta).is_err());
+}
+
+#[test]
+fn json_emitter_roundtrips_report_like_structures() {
+    // emission path used by run reports: nested obj/arr with floats
+    let j = Json::obj(vec![
+        ("dr", Json::Num(0.9836)),
+        ("selected", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)])),
+        ("mode", Json::Str("ficabu".into())),
+        ("stop", Json::Null),
+    ]);
+    let s = j.to_string();
+    let back = Json::parse(&s).unwrap();
+    assert_eq!(back.get("dr").unwrap().as_f64(), Some(0.9836));
+    assert_eq!(back.get("stop"), Some(&Json::Null));
+}

@@ -1,0 +1,245 @@
+//! Integration tests across runtime + model + unlearn + metrics + hwsim.
+//!
+//! These use freshly initialized (untrained) parameters where possible to
+//! stay fast; the trained-model behaviour is exercised by the examples and
+//! the table benches.
+
+use std::path::{Path, PathBuf};
+
+use ficabu::config::{ModelMeta, SharedMeta};
+use ficabu::data::{cifar20_like, DatasetCfg};
+use ficabu::fisher::{FimdEngine, Importance};
+use ficabu::hwsim::mem::Precision;
+use ficabu::hwsim::{BaselineProcessor, FicabuProcessor};
+use ficabu::metrics::{eval_accuracy, per_sample_losses};
+use ficabu::model::macs::ssd_ledger;
+use ficabu::model::{Model, ParamStore};
+use ficabu::runtime::Runtime;
+use ficabu::unlearn::{
+    default_checkpoints, make_onehot, run_unlearning, Schedule, UnlearnConfig,
+};
+use ficabu::util::prng::Pcg32;
+
+fn art() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts")
+}
+
+struct Ctx {
+    model: Model,
+    params: ParamStore,
+    fimd: FimdEngine,
+    damp: ficabu::unlearn::DampEngine,
+    _rt: Runtime,
+}
+
+fn ctx(model_name: &str) -> Ctx {
+    let rt = Runtime::cpu().unwrap();
+    let meta = ModelMeta::load(art().join(model_name)).unwrap();
+    let shared = SharedMeta::load(art().join("shared")).unwrap();
+    let model = Model::load(&rt, meta.clone()).unwrap();
+    let params = ParamStore::init(&meta, 42);
+    let fimd = FimdEngine::new(&rt, &shared).unwrap();
+    let damp = ficabu::unlearn::DampEngine::new(&rt, &shared).unwrap();
+    Ctx { model, params, fimd, damp, _rt: rt }
+}
+
+fn forget_batch(meta: &ModelMeta, class: usize, seed: u64) -> (ficabu::tensor::Tensor, Vec<usize>) {
+    let cfg = DatasetCfg { train_per_class: 8, test_per_class: 1, ..DatasetCfg::cifar20() };
+    let (train, _) = cifar20_like(&cfg);
+    let mut rng = Pcg32::seeded(seed);
+    train.forget_batch(class, meta.batch, &mut rng)
+}
+
+#[test]
+fn ssd_mode_ledger_matches_analytic_ssd_ledger() {
+    let mut c = ctx("rn18slim");
+    let meta = c.model.meta.clone();
+    let (x, labels) = forget_batch(&meta, 0, 1);
+    let global = {
+        let mut g = Importance::zeros_like(&meta);
+        g.floor(1.0); // uniform global importance
+        g
+    };
+    let cfg = UnlearnConfig::ssd(10.0, 1.0);
+    let report = run_unlearning(
+        &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp, &cfg,
+    )
+    .unwrap();
+    // SSD (no checkpoints) must edit every segment and cost exactly the
+    // analytic SSD ledger
+    assert_eq!(report.segments_edited, meta.num_segments());
+    assert!(report.stop_depth.is_none());
+    let analytic = ssd_ledger(&meta, meta.batch);
+    assert_eq!(report.ledger.total(), analytic.total());
+    assert_eq!(report.ledger.checkpoint, 0);
+}
+
+#[test]
+fn early_stop_leaves_front_end_untouched() {
+    let mut c = ctx("rn18slim");
+    let meta = c.model.meta.clone();
+    let before = c.params.clone();
+    let (x, labels) = forget_batch(&meta, 2, 3);
+    // tau = 1.0 -> first checkpoint always satisfies the target
+    let cfg = UnlearnConfig::cau(10.0, 1.0, vec![1], 1.0);
+    let global = {
+        let mut g = Importance::zeros_like(&meta);
+        g.floor(1e-6);
+        g
+    };
+    let report = run_unlearning(
+        &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp, &cfg,
+    )
+    .unwrap();
+    assert_eq!(report.stop_depth, Some(1));
+    // all segments except the head must be bit-identical
+    for k in 0..meta.num_segments() - 1 {
+        for (a, b) in before.seg[k].iter().zip(&c.params.seg[k]) {
+            assert_eq!(a.data, b.data, "segment {k} was modified");
+        }
+    }
+    // checkpoint overhead accounted
+    assert!(report.ledger.checkpoint > 0);
+}
+
+#[test]
+fn balanced_dampening_weakens_front_end_edits() {
+    // with S(l) scaling, the front-end (large l) sees larger alpha (fewer
+    // selections): compare uniform vs sigmoid selection counts per depth
+    let run = |schedule: Schedule| {
+        let mut c = ctx("rn18slim");
+        let meta = c.model.meta.clone();
+        let (x, labels) = forget_batch(&meta, 1, 7);
+        let mut global = Importance::zeros_like(&meta);
+        global.floor(1e-6);
+        let cfg = UnlearnConfig::bd(1.0, 1.0, schedule);
+        run_unlearning(
+            &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp, &cfg,
+        )
+        .unwrap()
+        .selected_per_depth
+    };
+    let uni = run(Schedule::Uniform);
+    let sig = run(Schedule::Sigmoid { cm: 5.0, br: 10.0 });
+    let big_l = uni.len();
+    // back-end (l=1): S=1 -> identical selection
+    assert_eq!(uni[0], sig[0]);
+    // front-end: strictly fewer (or equal) selections under the sigmoid
+    assert!(sig[big_l - 1] <= uni[big_l - 1]);
+    let uni_front: u64 = uni[big_l / 2..].iter().sum();
+    let sig_front: u64 = sig[big_l / 2..].iter().sum();
+    assert!(
+        sig_front < uni_front,
+        "sigmoid front-end selections {sig_front} !< uniform {uni_front}"
+    );
+}
+
+#[test]
+fn unlearning_is_deterministic() {
+    let run = || {
+        let mut c = ctx("rn18slim");
+        let meta = c.model.meta.clone();
+        let (x, labels) = forget_batch(&meta, 4, 11);
+        let mut global = Importance::zeros_like(&meta);
+        global.floor(1e-6);
+        let cfg = UnlearnConfig::ssd(5.0, 1.0);
+        run_unlearning(
+            &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp, &cfg,
+        )
+        .unwrap();
+        c.params.seg[9][0].data.clone()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn dampening_never_increases_magnitude() {
+    let mut c = ctx("vitslim");
+    let meta = c.model.meta.clone();
+    let before = c.params.clone();
+    let (x, labels) = forget_batch(&meta, 0, 13);
+    let mut global = Importance::zeros_like(&meta);
+    global.floor(1e-6);
+    let cfg = UnlearnConfig::ssd(1.0, 0.5);
+    run_unlearning(
+        &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp, &cfg,
+    )
+    .unwrap();
+    for (sb, sa) in before.seg.iter().zip(&c.params.seg) {
+        for (tb, ta) in sb.iter().zip(sa) {
+            for (vb, va) in tb.data.iter().zip(&ta.data) {
+                assert!(va.abs() <= vb.abs() + 1e-6);
+            }
+        }
+    }
+}
+
+#[test]
+fn metrics_pipeline_on_untrained_model_is_chance_level() {
+    let c = ctx("rn18slim");
+    let cfg = DatasetCfg { train_per_class: 4, test_per_class: 2, ..DatasetCfg::cifar20() };
+    let (train, _) = cifar20_like(&cfg);
+    let idx: Vec<usize> = (0..train.len()).collect();
+    let acc = eval_accuracy(&c.model, &c.params, &train, &idx).unwrap();
+    assert!(acc < 0.3, "untrained model should be near chance, got {acc}");
+    let losses = per_sample_losses(&c.model, &c.params, &train, &idx).unwrap();
+    assert_eq!(losses.len(), idx.len());
+    assert!(losses.iter().all(|&l| l.is_finite() && l > 0.0));
+}
+
+#[test]
+fn hwsim_costs_track_ledger_scale() {
+    let mut c = ctx("rn18slim");
+    let meta = c.model.meta.clone();
+    let (x, labels) = forget_batch(&meta, 0, 17);
+    let mut global = Importance::zeros_like(&meta);
+    global.floor(1e-6);
+    // full SSD run vs head-only run
+    let full = run_unlearning(
+        &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp,
+        &UnlearnConfig::ssd(10.0, 1.0),
+    )
+    .unwrap();
+    let mut c2 = ctx("rn18slim");
+    let head_only = run_unlearning(
+        &c2.model, &mut c2.params, &x, &labels, &global, &c2.fimd, &c2.damp,
+        &UnlearnConfig::cau(10.0, 1.0, vec![1], 1.0),
+    )
+    .unwrap();
+    let fic = FicabuProcessor::new(meta.tile, Precision::Int8);
+    let base = BaselineProcessor::new(meta.tile, Precision::Int8);
+    let e_full_base = base.cost(&full).energy_mj;
+    let e_head_fic = fic.cost(&head_only).energy_mj;
+    assert!(
+        e_head_fic < e_full_base * 0.5,
+        "early-stop on FiCABU hw must cost far less: {e_head_fic} vs {e_full_base}"
+    );
+}
+
+#[test]
+fn train_step_then_unlearn_composes() {
+    // minimal composition: a few training steps, then a head-only
+    // unlearning event, all through compiled modules
+    let mut c = ctx("rn18slim");
+    let meta = c.model.meta.clone();
+    let cfg = DatasetCfg { train_per_class: 8, test_per_class: 1, ..DatasetCfg::cifar20() };
+    let (train, _) = cifar20_like(&cfg);
+    let mut rng = Pcg32::seeded(19);
+    for _ in 0..3 {
+        let idx = rng.choose_k(train.len(), meta.batch);
+        let (x, labels) = train.batch(&idx, meta.batch);
+        let onehot = make_onehot(&labels, meta.num_classes);
+        let loss = c.model.train_step(&mut c.params, &x, &onehot, 0.05).unwrap();
+        assert!(loss.is_finite());
+    }
+    let (x, labels) = train.forget_batch(0, meta.batch, &mut rng);
+    let mut global = Importance::zeros_like(&meta);
+    global.floor(1e-6);
+    let cps = default_checkpoints(meta.num_segments(), 2);
+    let report = run_unlearning(
+        &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp,
+        &UnlearnConfig::cau(10.0, 1.0, cps, 0.05),
+    )
+    .unwrap();
+    assert!(report.segments_edited >= 1);
+}
