@@ -75,6 +75,7 @@ def export_model(spec: ModelSpec, out_dir: str) -> None:
         "batch": BATCH,
         "microbatch": MICROBATCH,
         "tile": TILE,
+        "heads": spec.heads,
         "segments": [],
         "modules": {
             "logits": "logits.hlo.txt",

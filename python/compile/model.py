@@ -60,6 +60,9 @@ class ModelSpec:
     num_classes: int
     input_shape: Tuple[int, ...]           # per-sample, e.g. (32, 32, 3)
     segments: List[Segment] = field(default_factory=list)
+    # attention heads of encoder segments (0 for conv models); exported in
+    # meta.json — the Rust CpuBackend needs it to rebuild the head split
+    heads: int = 0
 
     @property
     def num_segments(self) -> int:
@@ -251,7 +254,7 @@ def build_vitslim(
     patch: int = 4,
     img: int = 32,
 ) -> ModelSpec:
-    spec = ModelSpec("vitslim", num_classes, (img, img, 3))
+    spec = ModelSpec("vitslim", num_classes, (img, img, 3), heads=heads)
     tokens = (img // patch) ** 2
     hdim = dim // heads
     mlp = dim * mlp_ratio

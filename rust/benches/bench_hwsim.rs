@@ -42,9 +42,9 @@ fn main() {
     println!("[hwsim] pipeline cadence {cadence} cycles (= GEMM patch window 64)");
     assert_eq!(cadence, 64);
 
-    // --- live engine throughput (compiled Pallas tiles) ---
+    // --- live engine throughput (reference kernel tiles) ---
     let rt = Runtime::cpu().unwrap();
-    let shared = SharedMeta::load(format!("{ART}/shared")).unwrap();
+    let shared = SharedMeta::builtin();
     let fimd = FimdEngine::new(&rt, &shared).unwrap();
     let damp = DampEngine::new(&rt, &shared).unwrap();
     let mut rng = Pcg32::seeded(1);

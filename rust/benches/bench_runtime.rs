@@ -7,7 +7,7 @@ mod harness;
 use ficabu::config::{ModelMeta, SharedMeta};
 use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
 use ficabu::model::{Model, ParamStore};
-use ficabu::runtime::Runtime;
+use ficabu::runtime::{ModuleSpec, Runtime};
 use ficabu::tensor::Tensor;
 use ficabu::util::prng::Pcg32;
 use harness::Bench;
@@ -15,13 +15,15 @@ use harness::Bench;
 const ART: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
 
 fn main() {
+    // artifacts root only hosts the run cache (checkpoints/importance);
+    // inventories resolve to the builtins when no export exists
     std::env::set_var("FICABU_ARTIFACTS", ART);
     let b = Bench::new("runtime");
     let rt = Runtime::cpu().unwrap();
-    let shared = SharedMeta::load(format!("{ART}/shared")).unwrap();
+    let shared = SharedMeta::builtin();
 
     // --- dispatch overhead: smallest module (loss_grad) ---
-    let meta = ModelMeta::load(format!("{ART}/rn18slim")).unwrap();
+    let meta = ModelMeta::resolve("rn18slim").unwrap();
     let model = Model::load(&rt, meta.clone()).unwrap();
     let mb = meta.microbatch;
     let mut rng = Pcg32::seeded(3);
@@ -36,7 +38,7 @@ fn main() {
     });
 
     // --- patch GEMM engine module (256^3) ---
-    let gemm = rt.load(shared.module_path(&shared.gemm)).unwrap();
+    let gemm = rt.load(&ModuleSpec::Gemm { shared: shared.clone() }).unwrap();
     let d = shared.gemm_demo;
     let x = Tensor::new(vec![d, d], rng.normal_vec(d * d, 1.0)).unwrap();
     let y = Tensor::new(vec![d, d], rng.normal_vec(d * d, 1.0)).unwrap();

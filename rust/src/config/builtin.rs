@@ -1,0 +1,303 @@
+//! Built-in model inventories — the Rust port of `python/compile/model.py`.
+//!
+//! The seed pipeline obtained `meta.json` from the Python AOT export
+//! (`make artifacts`). That made the whole coordinator unusable without a
+//! JAX toolchain. The topology is static, so the same inventories (segment
+//! names/kinds, parameter shapes, activation shapes, analytic MAC counts)
+//! are constructed here in pure Rust; `ModelMeta::resolve` prefers an
+//! on-disk `meta.json` when one exists (so `make artifacts` keeps working
+//! for the XLA path) and falls back to these builtins otherwise.
+//!
+//! Keep the numbers in lockstep with `python/compile/model.py` and
+//! `python/compile/aot.py`: the AOT export writes the same inventory to
+//! `meta.json`, and the golden tests compare the two worlds.
+
+use anyhow::{bail, Result};
+
+use super::{artifacts_root, ModelMeta, ParamMeta, SegmentMeta, SharedMeta};
+
+/// Forget-batch / eval batch size N (aot.py BATCH).
+pub const BATCH: usize = 64;
+/// Fisher micro-batch size (aot.py MICROBATCH).
+pub const MICROBATCH: usize = 8;
+/// Engine burst tile, elements (kernels/fimd.py TILE).
+pub const TILE: usize = 8192;
+/// Shared GEMM demo module dimension (aot.py GEMM_DEMO).
+pub const GEMM_DEMO: usize = 256;
+/// Attention heads of the vitslim encoder (model.py build_vitslim).
+pub const VIT_HEADS: usize = 4;
+
+/// GroupNorm group count (model.py GN_GROUPS).
+pub const GN_GROUPS: usize = 4;
+/// GroupNorm / LayerNorm epsilon (model.py GN_EPS / LN_EPS).
+pub const NORM_EPS: f32 = 1e-5;
+
+fn p(name: &str, shape: &[usize]) -> ParamMeta {
+    ParamMeta { name: name.to_string(), shape: shape.to_vec() }
+}
+
+fn conv_macs(hw_out: usize, cin: usize, cout: usize, k: usize) -> u64 {
+    (hw_out * hw_out * cout * cin * k * k) as u64
+}
+
+fn seg(
+    index: usize,
+    name: &str,
+    kind: &str,
+    params: Vec<ParamMeta>,
+    in_shape: Vec<usize>,
+    out_shape: Vec<usize>,
+    macs: u64,
+) -> SegmentMeta {
+    SegmentMeta {
+        name: name.to_string(),
+        kind: kind.to_string(),
+        params,
+        in_shape,
+        out_shape,
+        macs_fwd_per_sample: macs,
+        fwd: format!("fwd_{index:02}.hlo.txt"),
+        bwd: format!("bwd_{index:02}.hlo.txt"),
+    }
+}
+
+/// ResNet-18 topology at reduced width (stage widths w, 2w, 4w, 8w).
+fn rn18slim(num_classes: usize, width: usize, img: usize) -> ModelMeta {
+    let mut segments = Vec::new();
+    let w0 = width;
+
+    segments.push(seg(
+        0,
+        "stem",
+        "stem",
+        vec![p("w", &[3, 3, 3, w0]), p("gamma", &[w0]), p("beta", &[w0])],
+        vec![img, img, 3],
+        vec![img, img, w0],
+        conv_macs(img, 3, w0, 3),
+    ));
+
+    let stage_widths = [w0, 2 * w0, 4 * w0, 8 * w0];
+    let mut hw = img;
+    let mut cin = w0;
+    for (s, &cout) in stage_widths.iter().enumerate() {
+        for b in 0..2 {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            let down = stride != 1 || cin != cout;
+            let hw_out = hw / stride;
+            let mut params = vec![
+                p("w1", &[3, 3, cin, cout]),
+                p("g1", &[cout]),
+                p("b1", &[cout]),
+                p("w2", &[3, 3, cout, cout]),
+                p("g2", &[cout]),
+                p("b2", &[cout]),
+            ];
+            if down {
+                params.push(p("wd", &[1, 1, cin, cout]));
+                params.push(p("gd", &[cout]));
+                params.push(p("bd", &[cout]));
+            }
+            let macs = conv_macs(hw_out, cin, cout, 3)
+                + conv_macs(hw_out, cout, cout, 3)
+                + if down { conv_macs(hw_out, cin, cout, 1) } else { 0 };
+            segments.push(seg(
+                segments.len(),
+                &format!("s{}b{}", s + 1, b + 1),
+                "block",
+                params,
+                vec![hw, hw, cin],
+                vec![hw_out, hw_out, cout],
+                macs,
+            ));
+            hw = hw_out;
+            cin = cout;
+        }
+    }
+
+    let cfin = stage_widths[3];
+    segments.push(seg(
+        segments.len(),
+        "head",
+        "head",
+        vec![p("w", &[cfin, num_classes]), p("b", &[num_classes])],
+        vec![hw, hw, cfin],
+        vec![num_classes],
+        (cfin * num_classes) as u64,
+    ));
+
+    finish("rn18slim", num_classes, vec![img, img, 3], segments)
+}
+
+/// ViT topology: patch embed + 12 pre-LN encoders + mean-pool head.
+fn vitslim(
+    num_classes: usize,
+    dim: usize,
+    depth: usize,
+    heads: usize,
+    mlp_ratio: usize,
+    patch: usize,
+    img: usize,
+) -> ModelMeta {
+    let tokens = (img / patch) * (img / patch);
+    let hdim = dim / heads;
+    let mlp = dim * mlp_ratio;
+    let mut segments = Vec::new();
+
+    segments.push(seg(
+        0,
+        "embed",
+        "embed",
+        vec![
+            p("w", &[patch * patch * 3, dim]),
+            p("b", &[dim]),
+            p("pos", &[tokens, dim]),
+        ],
+        vec![img, img, 3],
+        vec![tokens, dim],
+        (tokens * patch * patch * 3 * dim) as u64,
+    ));
+
+    let enc_macs = (tokens * dim * 3 * dim
+        + 2 * heads * tokens * tokens * hdim
+        + tokens * dim * dim
+        + 2 * tokens * dim * mlp) as u64;
+    for i in 0..depth {
+        segments.push(seg(
+            segments.len(),
+            &format!("enc{}", i + 1),
+            "encoder",
+            vec![
+                p("ln1g", &[dim]),
+                p("ln1b", &[dim]),
+                p("wqkv", &[dim, 3 * dim]),
+                p("bqkv", &[3 * dim]),
+                p("wproj", &[dim, dim]),
+                p("bproj", &[dim]),
+                p("ln2g", &[dim]),
+                p("ln2b", &[dim]),
+                p("w1", &[dim, mlp]),
+                p("b1", &[mlp]),
+                p("w2", &[mlp, dim]),
+                p("b2", &[dim]),
+            ],
+            vec![tokens, dim],
+            vec![tokens, dim],
+            enc_macs,
+        ));
+    }
+
+    segments.push(seg(
+        segments.len(),
+        "head",
+        "head",
+        vec![
+            p("lng", &[dim]),
+            p("lnb", &[dim]),
+            p("w", &[dim, num_classes]),
+            p("b", &[num_classes]),
+        ],
+        vec![tokens, dim],
+        vec![num_classes],
+        (dim * num_classes) as u64,
+    ));
+
+    finish("vitslim", num_classes, vec![img, img, 3], segments)
+}
+
+fn finish(
+    name: &str,
+    num_classes: usize,
+    input_shape: Vec<usize>,
+    segments: Vec<SegmentMeta>,
+) -> ModelMeta {
+    ModelMeta {
+        dir: artifacts_root().join(name),
+        name: name.to_string(),
+        num_classes,
+        input_shape,
+        batch: BATCH,
+        microbatch: MICROBATCH,
+        tile: TILE,
+        heads: VIT_HEADS,
+        segments,
+        logits_module: "logits.hlo.txt".to_string(),
+        train_step_module: "train_step.hlo.txt".to_string(),
+        loss_grad_module: "loss_grad.hlo.txt".to_string(),
+    }
+}
+
+/// The built-in inventory for a known model name.
+pub fn model(name: &str) -> Result<ModelMeta> {
+    match name {
+        "rn18slim" => Ok(rn18slim(20, 8, 32)),
+        "vitslim" => Ok(vitslim(20, 32, 12, VIT_HEADS, 2, 4, 32)),
+        _ => bail!("unknown builtin model `{name}` (rn18slim | vitslim)"),
+    }
+}
+
+/// The built-in shared-engine inventory (burst geometry + module names).
+pub fn shared() -> SharedMeta {
+    SharedMeta {
+        dir: artifacts_root().join("shared"),
+        tile: TILE,
+        fimd: "fimd.hlo.txt".to_string(),
+        dampen: "dampen.hlo.txt".to_string(),
+        gemm: "gemm.hlo.txt".to_string(),
+        gemm_demo: GEMM_DEMO,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rn18slim_matches_python_inventory() {
+        let m = model("rn18slim").unwrap();
+        assert_eq!(m.num_segments(), 10);
+        assert_eq!(m.segments[0].kind, "stem");
+        assert_eq!(m.segments[9].kind, "head");
+        assert_eq!(m.input_shape, vec![32, 32, 3]);
+        assert_eq!(m.batch, BATCH);
+        assert_eq!(m.microbatch, MICROBATCH);
+        // stem MACs: 32*32*8*3*9
+        assert_eq!(m.segments[0].macs_fwd_per_sample, 221_184);
+        // shape chain is consistent and ends at the classifier
+        for w in m.segments.windows(2) {
+            assert_eq!(w[0].out_shape, w[1].in_shape);
+        }
+        assert_eq!(m.segments[9].out_shape, vec![20]);
+        // downsampling blocks carry 9 params, identity blocks 6
+        assert_eq!(m.segments[1].params.len(), 6); // s1b1: stride 1, 8->8
+        assert_eq!(m.segments[3].params.len(), 9); // s2b1: stride 2
+        assert!(m.total_params() > 100_000);
+    }
+
+    #[test]
+    fn vitslim_matches_python_inventory() {
+        let m = model("vitslim").unwrap();
+        assert_eq!(m.num_segments(), 14);
+        assert_eq!(
+            m.segments.iter().filter(|s| s.kind == "encoder").count(),
+            12
+        );
+        assert_eq!(m.segments[0].out_shape, vec![64, 32]); // tokens x dim
+        assert_eq!(m.segments[1].params.len(), 12);
+        assert_eq!(m.heads, 4);
+        for w in m.segments.windows(2) {
+            assert_eq!(w[0].out_shape, w[1].in_shape);
+        }
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        assert!(model("resnet152").is_err());
+    }
+
+    #[test]
+    fn shared_geometry() {
+        let s = shared();
+        assert_eq!(s.tile % 1024, 0);
+        assert_eq!(s.gemm_demo, GEMM_DEMO);
+    }
+}

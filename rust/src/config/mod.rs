@@ -1,8 +1,14 @@
-//! Artifact metadata: parse `artifacts/<model>/meta.json` and
-//! `artifacts/shared/shared.json` (written once by `python -m compile.aot`)
-//! into the typed inventory the coordinator drives the compiled modules
-//! with. Argument *order* is the contract: module args are
-//! `(params in listed order, x[, gy])` and outputs mirror the meta.
+//! Model/engine inventories the coordinator drives the modules with.
+//!
+//! Two sources, one type: [`ModelMeta::resolve`] loads
+//! `artifacts/<model>/meta.json` when the Python AOT export has been run
+//! (`make artifacts`, needed only for the `backend-xla` feature) and
+//! falls back to the [`builtin`] pure-Rust inventories otherwise, so the
+//! default CpuBackend needs no Python artifacts at all. Argument *order*
+//! is the contract: module args are `(params in listed order, x[, gy])`
+//! and outputs mirror the meta.
+
+pub mod builtin;
 
 use std::path::{Path, PathBuf};
 
@@ -49,6 +55,9 @@ pub struct ModelMeta {
     pub batch: usize,
     pub microbatch: usize,
     pub tile: usize,
+    /// Attention heads of encoder segments (4 for vitslim; unused by
+    /// convolutional models). Absent from older meta.json files.
+    pub heads: usize,
     pub segments: Vec<SegmentMeta>,
     pub logits_module: String,
     pub train_step_module: String,
@@ -92,6 +101,20 @@ impl ModelMeta {
             });
         }
         let modules = j.req("modules")?;
+        // `heads` is semantically load-bearing for encoder segments (the
+        // CPU interpreter rebuilds the attention head split from it), so
+        // a meta that ships encoders must state it explicitly; for conv
+        // inventories the value is unused.
+        let heads = match j.get("heads").and_then(|v| v.as_usize()) {
+            Some(h) => h,
+            None if segments.iter().any(|s| s.kind == "encoder") => {
+                anyhow::bail!(
+                    "meta.json has encoder segments but no `heads` key \
+                     (re-export artifacts with the current compile.aot)"
+                )
+            }
+            None => builtin::VIT_HEADS,
+        };
         Ok(ModelMeta {
             dir,
             name: j.req("name")?.as_str().context("name")?.to_string(),
@@ -100,6 +123,7 @@ impl ModelMeta {
             batch: j.req("batch")?.as_usize().context("batch")?,
             microbatch: j.req("microbatch")?.as_usize().context("microbatch")?,
             tile: j.req("tile")?.as_usize().context("tile")?,
+            heads,
             segments,
             logits_module: modules.req("logits")?.as_str().context("logits")?.to_string(),
             train_step_module: modules
@@ -113,6 +137,21 @@ impl ModelMeta {
                 .context("loss_grad")?
                 .to_string(),
         })
+    }
+
+    /// The built-in (pure Rust) inventory for a known model name.
+    pub fn builtin(name: &str) -> Result<ModelMeta> {
+        builtin::model(name)
+    }
+
+    /// Artifacts if exported, builtin otherwise — the default entry point.
+    pub fn resolve(name: &str) -> Result<ModelMeta> {
+        let dir = artifacts_root().join(name);
+        if dir.join("meta.json").exists() {
+            ModelMeta::load(dir)
+        } else {
+            ModelMeta::builtin(name)
+        }
     }
 
     pub fn num_segments(&self) -> usize {
@@ -166,6 +205,21 @@ impl SharedMeta {
         })
     }
 
+    /// The built-in shared-engine inventory.
+    pub fn builtin() -> SharedMeta {
+        builtin::shared()
+    }
+
+    /// Artifacts if exported, builtin otherwise.
+    pub fn resolve() -> Result<SharedMeta> {
+        let dir = artifacts_root().join("shared");
+        if dir.join("shared.json").exists() {
+            SharedMeta::load(dir)
+        } else {
+            Ok(SharedMeta::builtin())
+        }
+    }
+
     pub fn module_path(&self, file: &str) -> PathBuf {
         self.dir.join(file)
     }
@@ -182,50 +236,63 @@ pub fn artifacts_root() -> PathBuf {
 mod tests {
     use super::*;
 
-    fn art() -> PathBuf {
-        // tests run from rust/; artifacts live at the workspace root
-        let ws = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
-        ws.join("artifacts")
-    }
-
     #[test]
-    fn load_rn18slim_meta() {
-        let m = ModelMeta::load(art().join("rn18slim")).unwrap();
+    fn resolve_falls_back_to_builtin() {
+        // no artifacts in the test environment -> builtin inventory
+        let m = ModelMeta::resolve("rn18slim").unwrap();
         assert_eq!(m.name, "rn18slim");
         assert_eq!(m.num_classes, 20);
         assert_eq!(m.num_segments(), 10);
-        assert_eq!(m.segments[0].kind, "stem");
-        assert_eq!(m.segments[9].kind, "head");
-        assert_eq!(m.input_shape, vec![32, 32, 3]);
         // depth indexing: head is l=1, stem is l=L
         assert_eq!(m.depth_l(9), 1);
         assert_eq!(m.depth_l(0), 10);
         assert_eq!(m.seg_index(1), 9);
-        assert!(m.total_params() > 100_000);
+        assert!(ModelMeta::resolve("nope").is_err());
     }
 
     #[test]
-    fn load_vitslim_meta() {
-        let m = ModelMeta::load(art().join("vitslim")).unwrap();
-        assert_eq!(m.num_segments(), 14);
-        assert_eq!(
-            m.segments.iter().filter(|s| s.kind == "encoder").count(),
-            12
-        );
+    fn meta_json_roundtrip_shapes() {
+        // a hand-rolled meta.json exercising the artifact parse path
+        let dir = std::env::temp_dir().join("ficabu_cfg_meta");
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{
+ "name": "toy", "num_classes": 2, "input_shape": [4, 4, 3],
+ "batch": 8, "microbatch": 2, "tile": 1024,
+ "segments": [
+  {"name": "stem", "kind": "stem",
+   "params": [{"name": "w", "shape": [3, 3, 3, 4]},
+              {"name": "gamma", "shape": [4]},
+              {"name": "beta", "shape": [4]}],
+   "in_shape": [4, 4, 3], "out_shape": [4, 4, 4],
+   "macs_fwd_per_sample": 1728,
+   "fwd": "fwd_00.hlo.txt", "bwd": "bwd_00.hlo.txt"}
+ ],
+ "modules": {"logits": "logits.hlo.txt",
+             "train_step": "train_step.hlo.txt",
+             "loss_grad": "loss_grad.hlo.txt"}
+}"#;
+        std::fs::write(dir.join("meta.json"), text).unwrap();
+        let m = ModelMeta::load(&dir).unwrap();
+        assert_eq!(m.name, "toy");
+        assert_eq!(m.segments[0].params[0].shape, vec![3, 3, 3, 4]);
+        assert_eq!(m.segments[0].param_count(), 108 + 4 + 4);
+        // `heads` absent -> default
+        assert_eq!(m.heads, builtin::VIT_HEADS);
+        assert_eq!(m.module_path("x.hlo.txt"), dir.join("x.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
-    fn load_shared_meta() {
-        let s = SharedMeta::load(art().join("shared")).unwrap();
+    fn shared_resolve_builtin() {
+        let s = SharedMeta::resolve().unwrap();
         assert_eq!(s.tile % 1024, 0);
-        assert!(s.module_path(&s.fimd).exists());
-        assert!(s.module_path(&s.dampen).exists());
+        assert_eq!(s.tile, builtin::TILE);
     }
 
     #[test]
     fn segment_shapes_chain() {
         for name in ["rn18slim", "vitslim"] {
-            let m = ModelMeta::load(art().join(name)).unwrap();
+            let m = ModelMeta::builtin(name).unwrap();
             for w in m.segments.windows(2) {
                 assert_eq!(w[0].out_shape, w[1].in_shape);
             }

@@ -1,11 +1,13 @@
 //! Shared experiment setup: synthesize data, train the model from the
-//! Rust binary via the AOT `train_step` module, compute the stored global
+//! Rust binary via the `train_step` module, compute the stored global
 //! importance `I_D`, cache both on disk so table runs are reproducible
-//! without retraining.
+//! without retraining. Model/engine inventories resolve to the built-in
+//! topologies when no artifacts are exported, so everything here runs on
+//! the default CpuBackend with no Python step.
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::config::{artifacts_root, ModelMeta, SharedMeta};
 use crate::data::{cifar20_like, pinsface_like, Dataset, DatasetCfg};
@@ -117,11 +119,9 @@ fn runs_dir() -> PathBuf {
 /// Train (or load) a model on the given dataset and compute (or load) its
 /// stored global importance.
 pub fn prepare(model_name: &str, kind: DatasetKind, opts: &PrepareOpts) -> Result<Prepared> {
-    let root = artifacts_root();
-    let rt = Runtime::cpu()?;
-    let meta = ModelMeta::load(root.join(model_name))
-        .with_context(|| format!("loading meta for {model_name} (run `make artifacts`)"))?;
-    let shared = SharedMeta::load(root.join("shared"))?;
+    let rt = Runtime::from_env()?;
+    let meta = ModelMeta::resolve(model_name)?;
+    let shared = SharedMeta::resolve()?;
     let model = Model::load(&rt, meta)?;
     let fimd = FimdEngine::new(&rt, &shared)?;
     let damp = DampEngine::new(&rt, &shared)?;

@@ -13,7 +13,7 @@ use anyhow::{bail, Result};
 
 use crate::config::{ModelMeta, SharedMeta};
 use crate::model::{Model, ParamStore};
-use crate::runtime::{Executable, Runtime};
+use crate::runtime::{Executable, ModuleSpec, Runtime};
 use crate::tensor::Tensor;
 
 /// Per-segment flat importance buffers (`I_D` or `I_Df`).
@@ -125,7 +125,7 @@ pub struct FimdEngine {
 impl FimdEngine {
     pub fn new(rt: &Runtime, shared: &SharedMeta) -> Result<FimdEngine> {
         Ok(FimdEngine {
-            exe: rt.load(shared.module_path(&shared.fimd))?,
+            exe: rt.load(&ModuleSpec::Fimd { shared: shared.clone() })?,
             tile: shared.tile,
             elems_streamed: std::cell::Cell::new(0),
         })
@@ -195,16 +195,11 @@ pub fn compute_global_importance(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::path::Path;
-
-    fn art() -> std::path::PathBuf {
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts")
-    }
 
     #[test]
     fn fimd_engine_matches_scalar_math() {
         let rt = Runtime::cpu().unwrap();
-        let shared = SharedMeta::load(art().join("shared")).unwrap();
+        let shared = SharedMeta::builtin();
         let eng = FimdEngine::new(&rt, &shared).unwrap();
         // odd length exercises tail padding
         let n = shared.tile + 1234;

@@ -1,26 +1,36 @@
 //! # FiCABU — Fisher-based Context-Adaptive Balanced Unlearning
 //!
 //! Reproduction of "FiCABU: A Fisher-Based, Context-Adaptive Machine
-//! Unlearning Processor for Edge AI" (DATE 2026) as a three-layer
-//! Rust + JAX + Pallas stack:
+//! Unlearning Processor for Edge AI" (DATE 2026) as a self-contained Rust
+//! crate: the unlearning coordinator — back-end-first Context-Adaptive
+//! Unlearning with checkpointed early stop, Balanced Dampening depth
+//! schedule, SSD baseline, INT8 store, the FiCABU processor cycle/energy
+//! simulator, and an edge request loop.
 //!
-//! * **L1** (build-time Python): Pallas kernels for the processor's
-//!   datapath engines — patch GEMM (VTA backbone), FIMD (diagonal Fisher),
-//!   Dampening — in `python/compile/kernels/`.
-//! * **L2** (build-time Python): per-segment JAX model graphs (ResNet-18
-//!   and ViT topologies), AOT-lowered to HLO text under `artifacts/`.
-//! * **L3** (this crate): the unlearning coordinator — back-end-first
-//!   Context-Adaptive Unlearning with checkpointed early stop, Balanced
-//!   Dampening depth schedule, SSD baseline, INT8 store, the FiCABU
-//!   processor cycle/energy simulator, and an edge request loop.
+//! ## Execution backends
 //!
-//! Python never runs at request time: `make artifacts` is the only Python
-//! step; afterwards the `ficabu` binary is self-contained.
+//! All compute flows through the [`runtime::Backend`] seam:
+//!
+//! * **CpuBackend (default).** A pure-Rust interpreter with reference
+//!   GEMM / conv / FIMD / dampening kernels matching
+//!   `python/compile/kernels/ref.py`, driving model inventories built in
+//!   Rust ([`config::builtin`]). `cargo build && cargo test` works on a
+//!   stock stable toolchain with **no Python artifacts and no XLA** —
+//!   `make artifacts` is *not* required.
+//! * **XlaBackend (`backend-xla` feature, optional).** The original
+//!   PJRT path executing the HLO-text artifacts of the Python AOT export
+//!   (L1 Pallas kernels, L2 JAX graphs — see `python/compile/`). Only
+//!   this feature consumes `make artifacts`; the workspace compiles it
+//!   against a vendored API stub, real execution needs the actual `xla`
+//!   bindings. Select at runtime with `FICABU_BACKEND=xla`.
+//!
+//! Python never runs at request time on either path: after an optional
+//! one-shot `make artifacts`, the `ficabu` binary is self-contained.
 
 pub mod config;
 pub mod coordinator;
-pub mod exp;
 pub mod data;
+pub mod exp;
 pub mod fisher;
 pub mod hwsim;
 pub mod metrics;

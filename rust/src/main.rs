@@ -92,20 +92,29 @@ edge_serving). See DESIGN.md for the experiment index.
 ";
 
 fn cmd_info() -> Result<()> {
-    let rt = Runtime::cpu()?;
-    println!("platform: {}", rt.platform());
+    let rt = Runtime::from_env()?;
+    println!("backend: {}", rt.platform());
     let root = artifacts_root();
-    println!("artifacts root: {}", root.display());
+    println!(
+        "artifacts root: {} ({})",
+        root.display(),
+        if root.exists() { "present" } else { "absent; using builtin inventories" }
+    );
     for name in ["rn18slim", "vitslim"] {
-        match ficabu::config::ModelMeta::load(root.join(name)) {
+        let source = if root.join(name).join("meta.json").exists() {
+            "artifacts"
+        } else {
+            "builtin"
+        };
+        match ficabu::config::ModelMeta::resolve(name) {
             Ok(m) => println!(
-                "  {name}: {} segments, {} params, batch {}, microbatch {}",
+                "  {name}: {} segments, {} params, batch {}, microbatch {} [{source}]",
                 m.num_segments(),
                 m.total_params(),
                 m.batch,
                 m.microbatch
             ),
-            Err(_) => println!("  {name}: NOT BUILT (run `make artifacts`)"),
+            Err(e) => println!("  {name}: unavailable ({e:#})"),
         }
     }
     Ok(())

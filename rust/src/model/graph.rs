@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::ModelMeta;
 use crate::model::{ActivationCache, ParamStore};
-use crate::runtime::{Executable, Runtime};
+use crate::runtime::{Executable, ModuleSpec, Runtime};
 use crate::tensor::Tensor;
 
 pub struct Model {
@@ -30,13 +30,13 @@ impl Model {
     pub fn load(rt: &Runtime, meta: ModelMeta) -> Result<Model> {
         let mut fwd = Vec::new();
         let mut bwd = Vec::new();
-        for s in &meta.segments {
-            fwd.push(rt.load(meta.module_path(&s.fwd))?);
-            bwd.push(rt.load(meta.module_path(&s.bwd))?);
+        for k in 0..meta.num_segments() {
+            fwd.push(rt.load(&ModuleSpec::SegmentFwd { meta: meta.clone(), seg: k })?);
+            bwd.push(rt.load(&ModuleSpec::SegmentBwd { meta: meta.clone(), seg: k })?);
         }
-        let logits_exe = rt.load(meta.module_path(&meta.logits_module))?;
-        let train_step_exe = rt.load(meta.module_path(&meta.train_step_module))?;
-        let loss_grad_exe = rt.load(meta.module_path(&meta.loss_grad_module))?;
+        let logits_exe = rt.load(&ModuleSpec::Logits { meta: meta.clone() })?;
+        let train_step_exe = rt.load(&ModuleSpec::TrainStep { meta: meta.clone() })?;
+        let loss_grad_exe = rt.load(&ModuleSpec::LossGrad { meta: meta.clone() })?;
         Ok(Model { meta, fwd, bwd, logits_exe, train_step_exe, loss_grad_exe })
     }
 
@@ -136,11 +136,6 @@ mod tests {
     use super::*;
     use crate::config::ModelMeta;
     use crate::util::prng::Pcg32;
-    use std::path::Path;
-
-    fn art() -> std::path::PathBuf {
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts")
-    }
 
     fn rand_batch(meta: &ModelMeta, batch: usize, seed: u64) -> Tensor {
         let mut rng = Pcg32::seeded(seed);
@@ -153,7 +148,7 @@ mod tests {
     #[test]
     fn cached_forward_matches_fused_logits() {
         let rt = Runtime::cpu().unwrap();
-        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
         let model = Model::load(&rt, meta.clone()).unwrap();
         let params = ParamStore::init(&meta, 11);
         let x = rand_batch(&meta, meta.batch, 42);
@@ -169,7 +164,7 @@ mod tests {
     #[test]
     fn partial_forward_from_cache_matches_full() {
         let rt = Runtime::cpu().unwrap();
-        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
         let model = Model::load(&rt, meta.clone()).unwrap();
         let params = ParamStore::init(&meta, 13);
         let x = rand_batch(&meta, meta.batch, 44);
@@ -185,7 +180,7 @@ mod tests {
     #[test]
     fn train_step_reduces_loss() {
         let rt = Runtime::cpu().unwrap();
-        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
         let model = Model::load(&rt, meta.clone()).unwrap();
         let mut params = ParamStore::init(&meta, 15);
         let x = rand_batch(&meta, meta.batch, 46);
@@ -204,7 +199,7 @@ mod tests {
     #[test]
     fn loss_grad_rows_sum_zero() {
         let rt = Runtime::cpu().unwrap();
-        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
         let model = Model::load(&rt, meta.clone()).unwrap();
         let mb = meta.microbatch;
         let mut rng = Pcg32::seeded(5);
@@ -224,7 +219,7 @@ mod tests {
     #[test]
     fn segment_bwd_shapes() {
         let rt = Runtime::cpu().unwrap();
-        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
         let model = Model::load(&rt, meta.clone()).unwrap();
         let params = ParamStore::init(&meta, 17);
         let k = meta.num_segments() - 1; // head

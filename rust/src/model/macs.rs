@@ -98,11 +98,9 @@ pub fn ssd_ledger(meta: &ModelMeta, batch: usize) -> MacLedger {
 mod tests {
     use super::*;
     use crate::config::ModelMeta;
-    use std::path::Path;
 
     fn meta() -> ModelMeta {
-        let art = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts");
-        ModelMeta::load(art.join("rn18slim")).unwrap()
+        ModelMeta::builtin("rn18slim").unwrap()
     }
 
     #[test]

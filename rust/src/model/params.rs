@@ -202,15 +202,10 @@ fn take<'a>(b: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::path::PathBuf;
-
-    fn art() -> PathBuf {
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts")
-    }
 
     #[test]
     fn init_matches_meta() {
-        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
         let ps = ParamStore::init(&meta, 1);
         ps.validate(&meta).unwrap();
         assert_eq!(ps.total_len(), meta.total_params());
@@ -224,7 +219,7 @@ mod tests {
 
     #[test]
     fn deterministic_init() {
-        let meta = ModelMeta::load(art().join("vitslim")).unwrap();
+        let meta = ModelMeta::builtin("vitslim").unwrap();
         let a = ParamStore::init(&meta, 7);
         let b = ParamStore::init(&meta, 7);
         assert_eq!(a.flat().len(), b.flat().len());
@@ -235,7 +230,7 @@ mod tests {
 
     #[test]
     fn save_load_roundtrip() {
-        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
         let ps = ParamStore::init(&meta, 3);
         let dir = std::env::temp_dir().join("ficabu_test_ckpt");
         let path = dir.join("rn.fcb");
@@ -250,7 +245,7 @@ mod tests {
 
     #[test]
     fn set_flat_roundtrip() {
-        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
         let mut ps = ParamStore::init(&meta, 5);
         let cloned: Vec<Tensor> = ps.flat().into_iter().cloned().collect();
         ps.set_flat(cloned).unwrap();
@@ -260,7 +255,7 @@ mod tests {
 
     #[test]
     fn int8_quant_changes_but_approximates() {
-        let meta = ModelMeta::load(art().join("rn18slim")).unwrap();
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
         let mut ps = ParamStore::init(&meta, 9);
         let before: Vec<f32> = ps.seg[0][0].data.clone();
         ps.fake_quant_int8();

@@ -1,0 +1,370 @@
+//! CpuBackend — a pure-Rust interpreter for every module spec.
+//!
+//! This is the default execution backend: forward inference, the gy
+//! gradient chain, Algorithm 1's back-end-first loop, training, and the
+//! engine IPs all run on stock stable Rust with no Python artifacts and
+//! no XLA. Kernels live in [`kernels`] (semantics of
+//! `python/compile/kernels/ref.py`), per-segment interpreters in
+//! [`segment`]. Every module validates arity and shapes before touching
+//! data — an edge device fails loudly, never UB (`tests/failure_injection`).
+
+// Index-heavy numeric loops read better with explicit ranges.
+#![allow(clippy::needless_range_loop)]
+
+pub mod kernels;
+mod segment;
+
+use anyhow::{bail, Result};
+
+use crate::config::{ModelMeta, SegmentMeta};
+use crate::tensor::Tensor;
+
+use super::{Backend, ModuleImpl, ModuleSpec};
+use segment::SegmentDef;
+
+/// The interpreter backend. Stateless: all module state is built at
+/// `compile` time from the spec's inventory.
+#[derive(Debug, Default)]
+pub struct CpuBackend;
+
+impl CpuBackend {
+    pub fn new() -> CpuBackend {
+        CpuBackend
+    }
+}
+
+impl Backend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu-interpreter"
+    }
+
+    fn compile(&self, spec: &ModuleSpec) -> Result<Box<dyn ModuleImpl>> {
+        Ok(match spec {
+            ModuleSpec::SegmentFwd { meta, seg } => {
+                let def = SegmentDef::from_meta(meta, *seg)?; // bounds-checks seg
+                Box::new(SegmentFwdModule { seg: meta.segments[*seg].clone(), def })
+            }
+            ModuleSpec::SegmentBwd { meta, seg } => {
+                let def = SegmentDef::from_meta(meta, *seg)?;
+                Box::new(SegmentBwdModule { seg: meta.segments[*seg].clone(), def })
+            }
+            ModuleSpec::Logits { meta } => Box::new(LogitsModule::new(meta)?),
+            ModuleSpec::TrainStep { meta } => Box::new(TrainStepModule {
+                chain: LogitsModule::new(meta)?,
+            }),
+            ModuleSpec::LossGrad { meta } => Box::new(LossGradModule {
+                classes: meta.num_classes,
+            }),
+            ModuleSpec::Fimd { shared } => Box::new(FimdModule { tile: shared.tile }),
+            ModuleSpec::Dampen { shared } => Box::new(DampenModule { tile: shared.tile }),
+            ModuleSpec::Gemm { .. } => Box::new(GemmModule),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// validation helpers
+// ---------------------------------------------------------------------------
+
+fn check_arity(args: &[&Tensor], want: usize, what: &str) -> Result<()> {
+    if args.len() != want {
+        bail!("{what}: expected {want} arguments, got {}", args.len());
+    }
+    Ok(())
+}
+
+/// Check a batched tensor `[B, ...sample]`; returns B.
+fn check_batched(t: &Tensor, sample: &[usize], what: &str) -> Result<usize> {
+    if t.shape.len() != sample.len() + 1 || t.shape[1..] != *sample || t.shape[0] == 0 {
+        bail!(
+            "{what}: expected shape [B{}], got {:?}",
+            sample.iter().map(|d| format!(", {d}")).collect::<String>(),
+            t.shape
+        );
+    }
+    Ok(t.shape[0])
+}
+
+fn check_params(seg: &SegmentMeta, args: &[&Tensor]) -> Result<()> {
+    for (t, pm) in args.iter().zip(&seg.params) {
+        if t.shape != pm.shape {
+            bail!(
+                "{}.{}: expected shape {:?}, got {:?}",
+                seg.name,
+                pm.name,
+                pm.shape,
+                t.shape
+            );
+        }
+    }
+    Ok(())
+}
+
+fn check_tile(t: &Tensor, tile: usize, what: &str) -> Result<()> {
+    if t.shape != [tile] {
+        bail!("{what}: expected shape [{tile}], got {:?}", t.shape);
+    }
+    Ok(())
+}
+
+fn check_scalarish(t: &Tensor, what: &str) -> Result<f32> {
+    if t.len() != 1 {
+        bail!("{what}: expected a scalar, got shape {:?}", t.shape);
+    }
+    Ok(t.data[0])
+}
+
+// ---------------------------------------------------------------------------
+// segment modules
+// ---------------------------------------------------------------------------
+
+struct SegmentFwdModule {
+    seg: SegmentMeta,
+    def: SegmentDef,
+}
+
+impl ModuleImpl for SegmentFwdModule {
+    fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let np = self.seg.params.len();
+        check_arity(args, np + 1, &format!("fwd[{}]", self.seg.name))?;
+        check_params(&self.seg, &args[..np])?;
+        check_batched(args[np], &self.seg.in_shape, "x")?;
+        let y = self.def.fwd(&args[..np], args[np])?;
+        Ok(vec![y])
+    }
+}
+
+struct SegmentBwdModule {
+    seg: SegmentMeta,
+    def: SegmentDef,
+}
+
+impl ModuleImpl for SegmentBwdModule {
+    fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let np = self.seg.params.len();
+        check_arity(args, np + 2, &format!("bwd[{}]", self.seg.name))?;
+        check_params(&self.seg, &args[..np])?;
+        let b = check_batched(args[np], &self.seg.in_shape, "x")?;
+        let b2 = check_batched(args[np + 1], &self.seg.out_shape, "gy")?;
+        if b != b2 {
+            bail!("bwd[{}]: x batch {b} != gy batch {b2}", self.seg.name);
+        }
+        let (mut grads, gx) = self.def.bwd(&args[..np], args[np], args[np + 1])?;
+        grads.push(gx);
+        Ok(grads)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// whole-model modules
+// ---------------------------------------------------------------------------
+
+/// Shared forward chain for `logits` and `train_step`.
+struct LogitsModule {
+    meta: ModelMeta,
+    defs: Vec<SegmentDef>,
+    param_count: usize,
+}
+
+impl LogitsModule {
+    fn new(meta: &ModelMeta) -> Result<LogitsModule> {
+        let defs = (0..meta.num_segments())
+            .map(|k| SegmentDef::from_meta(meta, k))
+            .collect::<Result<Vec<_>>>()?;
+        let param_count = meta.segments.iter().map(|s| s.params.len()).sum();
+        Ok(LogitsModule { meta: meta.clone(), defs, param_count })
+    }
+
+    fn check_all_params(&self, args: &[&Tensor]) -> Result<()> {
+        let mut off = 0;
+        for seg in &self.meta.segments {
+            check_params(seg, &args[off..off + seg.params.len()])?;
+            off += seg.params.len();
+        }
+        Ok(())
+    }
+
+    /// Forward through every segment; optionally cache segment inputs.
+    fn forward(
+        &self,
+        args: &[&Tensor],
+        x: &Tensor,
+        mut cache: Option<&mut Vec<Tensor>>,
+    ) -> Result<Tensor> {
+        let mut h = x.clone();
+        let mut off = 0;
+        for (seg, def) in self.meta.segments.iter().zip(&self.defs) {
+            if let Some(c) = cache.as_mut() {
+                c.push(h.clone());
+            }
+            h = def.fwd(&args[off..off + seg.params.len()], &h)?;
+            off += seg.params.len();
+        }
+        Ok(h)
+    }
+}
+
+impl ModuleImpl for LogitsModule {
+    fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        check_arity(args, self.param_count + 1, "logits")?;
+        self.check_all_params(&args[..self.param_count])?;
+        let x = args[self.param_count];
+        check_batched(x, &self.meta.input_shape, "x")?;
+        let logits = self.forward(&args[..self.param_count], x, None)?;
+        Ok(vec![logits])
+    }
+}
+
+/// One SGD step: full forward (caching segment inputs), mean-NLL loss,
+/// reverse-chain VJP, in-place parameter update.
+struct TrainStepModule {
+    chain: LogitsModule,
+}
+
+impl ModuleImpl for TrainStepModule {
+    fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let n = self.chain.param_count;
+        let meta = &self.chain.meta;
+        check_arity(args, n + 3, "train_step")?;
+        self.chain.check_all_params(&args[..n])?;
+        let x = args[n];
+        let onehot = args[n + 1];
+        let lr = check_scalarish(args[n + 2], "lr")?;
+        let b = check_batched(x, &meta.input_shape, "x")?;
+        check_batched(onehot, &[meta.num_classes], "onehot")?;
+        if onehot.batch() != b {
+            bail!("train_step: onehot batch {} != x batch {b}", onehot.batch());
+        }
+
+        let mut inputs = Vec::with_capacity(meta.num_segments());
+        let logits = self.chain.forward(&args[..n], x, Some(&mut inputs))?;
+
+        // mean NLL + dlogits via log-sum-exp (model.py cross_entropy)
+        let classes = meta.num_classes;
+        let mut loss = 0.0f32;
+        let mut gy_data = vec![0.0f32; b * classes];
+        for i in 0..b {
+            let row = logits.row(i);
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = row.iter().map(|v| (v - m).exp()).sum();
+            let lse = m + z.ln();
+            let orow = onehot.row(i);
+            let dot: f32 = row.iter().zip(orow).map(|(l, o)| l * o).sum();
+            loss += lse - dot;
+            for c in 0..classes {
+                gy_data[i * classes + c] = ((row[c] - lse).exp() - orow[c]) / b as f32;
+            }
+        }
+        loss /= b as f32;
+
+        // reverse-chain VJP + SGD update
+        let mut gy = Tensor::new(vec![b, classes], gy_data)?;
+        let mut new_params: Vec<Vec<Tensor>> = vec![Vec::new(); meta.num_segments()];
+        let mut offsets = Vec::with_capacity(meta.num_segments());
+        let mut off = 0;
+        for seg in &meta.segments {
+            offsets.push(off);
+            off += seg.params.len();
+        }
+        for k in (0..meta.num_segments()).rev() {
+            let np = meta.segments[k].params.len();
+            let ps = &args[offsets[k]..offsets[k] + np];
+            let (grads, gx) = self.chain.defs[k].bwd(ps, &inputs[k], &gy)?;
+            gy = gx;
+            new_params[k] = ps
+                .iter()
+                .zip(&grads)
+                .map(|(p, g)| {
+                    let data = p.data.iter().zip(&g.data).map(|(pv, gv)| pv - lr * gv).collect();
+                    Tensor { shape: p.shape.clone(), data }
+                })
+                .collect();
+        }
+
+        let mut out: Vec<Tensor> = new_params.into_iter().flatten().collect();
+        out.push(Tensor::scalar(loss));
+        Ok(out)
+    }
+}
+
+/// dlogits of the mean NLL: `(softmax(logits) - onehot) / B`.
+struct LossGradModule {
+    classes: usize,
+}
+
+impl ModuleImpl for LossGradModule {
+    fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        check_arity(args, 2, "loss_grad")?;
+        let logits = args[0];
+        let onehot = args[1];
+        let b = check_batched(logits, &[self.classes], "logits")?;
+        check_batched(onehot, &[self.classes], "onehot")?;
+        if onehot.batch() != b {
+            bail!("loss_grad: onehot batch {} != logits batch {b}", onehot.batch());
+        }
+        let probs = logits.softmax_rows();
+        let data = probs
+            .data
+            .iter()
+            .zip(&onehot.data)
+            .map(|(p, o)| (p - o) / b as f32)
+            .collect();
+        Ok(vec![Tensor::new(logits.shape.clone(), data)?])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// engine IP modules
+// ---------------------------------------------------------------------------
+
+/// FIMD tile update: `(grad, acc, scale) -> (acc + scale * grad^2,)`.
+struct FimdModule {
+    tile: usize,
+}
+
+impl ModuleImpl for FimdModule {
+    fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        check_arity(args, 3, "fimd")?;
+        check_tile(args[0], self.tile, "grad")?;
+        check_tile(args[1], self.tile, "acc")?;
+        let scale = check_scalarish(args[2], "scale")?;
+        let acc = kernels::fimd_update(&args[0].data, &args[1].data, scale);
+        Ok(vec![Tensor::vec1(acc)])
+    }
+}
+
+/// Dampening tile pass:
+/// `(theta, idf, id, alpha, lam) -> (theta', mask)`.
+struct DampenModule {
+    tile: usize,
+}
+
+impl ModuleImpl for DampenModule {
+    fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        check_arity(args, 5, "dampen")?;
+        check_tile(args[0], self.tile, "theta")?;
+        check_tile(args[1], self.tile, "i_df")?;
+        check_tile(args[2], self.tile, "i_d")?;
+        let alpha = check_scalarish(args[3], "alpha")?;
+        let lam = check_scalarish(args[4], "lambda")?;
+        let (theta, mask) =
+            kernels::dampen(&args[0].data, &args[1].data, &args[2].data, alpha, lam);
+        Ok(vec![Tensor::vec1(theta), Tensor::vec1(mask)])
+    }
+}
+
+/// Patch-GEMM engine demo: plain 2-D `x @ y`.
+struct GemmModule;
+
+impl ModuleImpl for GemmModule {
+    fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        check_arity(args, 2, "gemm")?;
+        let (x, y) = (args[0], args[1]);
+        if x.shape.len() != 2 || y.shape.len() != 2 || x.shape[1] != y.shape[0] {
+            bail!("gemm: incompatible shapes {:?} x {:?}", x.shape, y.shape);
+        }
+        let (m, k, n) = (x.shape[0], x.shape[1], y.shape[1]);
+        let out = kernels::matmul(&x.data, &y.data, m, k, n);
+        Ok(vec![Tensor::new(vec![m, n], out)?])
+    }
+}

@@ -1,0 +1,741 @@
+//! Per-segment interpreters: forward and VJP for every segment kind of
+//! the built-in topologies (`python/compile/model.py` semantics).
+//!
+//! Each [`SegmentDef`] is constructed once from the meta inventory
+//! (`SegmentDef::from_meta`) and then applied batch-agnostically:
+//! `fwd(params, x[B,...]) -> y`, `bwd(params, x, gy) -> (param grads in
+//! meta order, gx)`. The VJPs are hand-derived (this is what `jax.vjp`
+//! produced on the XLA path) and cross-checked against finite
+//! differences in `tests/backend_golden.rs`.
+
+// Index-heavy numeric loops read better with explicit ranges.
+#![allow(clippy::needless_range_loop)]
+
+use anyhow::{bail, Result};
+
+use crate::config::builtin::GN_GROUPS;
+use crate::config::ModelMeta;
+use crate::tensor::Tensor;
+
+use super::kernels::{
+    add_bias, col_sum, gelu, gelu_bwd, group_norm_bwd, group_norm_fwd, layer_norm_bwd,
+    layer_norm_fwd, matmul, matmul_nt, matmul_tn, relu, relu_bwd, softmax_bwd, softmax_rows,
+    Conv,
+};
+
+/// Static per-segment execution plan.
+pub(crate) enum SegmentDef {
+    /// conv3x3 s1 + GroupNorm + relu.
+    Stem { h: usize, w: usize, conv: Conv },
+    /// BasicBlock: two conv3x3 + GN (+ optional 1x1 downsample path),
+    /// residual add, relu.
+    Block { h: usize, w: usize, conv1: Conv, conv2: Conv, down: Option<Conv> },
+    /// Global-average-pool + linear classifier (ResNet head).
+    HeadGap { hw: usize, c: usize, classes: usize },
+    /// LayerNorm + token-mean-pool + linear classifier (ViT head).
+    HeadVit { tokens: usize, dim: usize, classes: usize },
+    /// Patchify + linear embed + learned positional embedding.
+    Embed { img: usize, chans: usize, patch: usize, grid: usize, dim: usize },
+    /// Pre-LN transformer encoder block.
+    Encoder { tokens: usize, dim: usize, heads: usize, mlp: usize },
+}
+
+/// Require parameter `idx` of a segment to declare exactly `want`.
+/// Run-time tensors are checked against the meta by the module wrapper,
+/// so meta-internal consistency here makes the interpreters panic-free
+/// on arbitrary (artifact-supplied) inventories.
+fn expect_param(seg: &crate::config::SegmentMeta, idx: usize, want: &[usize]) -> Result<()> {
+    let got = &seg.params[idx].shape;
+    if got != want {
+        bail!(
+            "{}.{}: inventory declares shape {:?}, geometry requires {:?}",
+            seg.name,
+            seg.params[idx].name,
+            got,
+            want
+        );
+    }
+    Ok(())
+}
+
+fn expect_out(seg: &crate::config::SegmentMeta, want: &[usize]) -> Result<()> {
+    if seg.out_shape != want {
+        bail!(
+            "{}: inventory declares out_shape {:?}, geometry requires {:?}",
+            seg.name,
+            seg.out_shape,
+            want
+        );
+    }
+    Ok(())
+}
+
+impl SegmentDef {
+    /// Build the plan for segment `k`, validating the inventory: every
+    /// parameter shape and the out_shape must be consistent with the
+    /// geometry derived from in_shape, or this is an `Err` (never a
+    /// panic or silently wrong math on a malformed meta.json).
+    pub(crate) fn from_meta(meta: &ModelMeta, k: usize) -> Result<SegmentDef> {
+        if k >= meta.num_segments() {
+            bail!("segment {k} out of range ({})", meta.num_segments());
+        }
+        let seg = &meta.segments[k];
+        let np = seg.params.len();
+        match seg.kind.as_str() {
+            "stem" => {
+                if np != 3 || seg.params[0].shape.len() != 4 || seg.in_shape.len() != 3 {
+                    bail!("stem `{}`: malformed inventory", seg.name);
+                }
+                let ws = seg.params[0].shape.clone();
+                let (h, w) = (seg.in_shape[0], seg.in_shape[1]);
+                let conv = Conv { kh: ws[0], kw: ws[1], cin: ws[2], cout: ws[3], stride: 1 };
+                if ws[0] == 0 || ws[1] == 0 || ws[2] != seg.in_shape[2] {
+                    bail!("stem `{}`: kernel/in_shape mismatch", seg.name);
+                }
+                expect_param(seg, 1, &[conv.cout])?;
+                expect_param(seg, 2, &[conv.cout])?;
+                let (ho, wo) = conv.out_hw(h, w);
+                expect_out(seg, &[ho, wo, conv.cout])?;
+                Ok(SegmentDef::Stem { h, w, conv })
+            }
+            "block" => {
+                if !(np == 6 || np == 9) || seg.in_shape.len() != 3 || seg.out_shape.len() != 3 {
+                    bail!("block `{}`: malformed inventory", seg.name);
+                }
+                let (h, w) = (seg.in_shape[0], seg.in_shape[1]);
+                let (cin, cout) = (seg.in_shape[2], seg.out_shape[2]);
+                if seg.out_shape[0] == 0 || h % seg.out_shape[0] != 0 {
+                    bail!("block `{}`: bad spatial shapes", seg.name);
+                }
+                let stride = h / seg.out_shape[0];
+                let down = np == 9;
+                if down != (stride != 1 || cin != cout) {
+                    bail!("block `{}`: downsample params inconsistent", seg.name);
+                }
+                let conv1 = Conv { kh: 3, kw: 3, cin, cout, stride };
+                let conv2 = Conv { kh: 3, kw: 3, cin: cout, cout, stride: 1 };
+                expect_param(seg, 0, &[3, 3, cin, cout])?;
+                expect_param(seg, 1, &[cout])?;
+                expect_param(seg, 2, &[cout])?;
+                expect_param(seg, 3, &[3, 3, cout, cout])?;
+                expect_param(seg, 4, &[cout])?;
+                expect_param(seg, 5, &[cout])?;
+                if down {
+                    expect_param(seg, 6, &[1, 1, cin, cout])?;
+                    expect_param(seg, 7, &[cout])?;
+                    expect_param(seg, 8, &[cout])?;
+                }
+                let (ho, wo) = conv1.out_hw(h, w);
+                expect_out(seg, &[ho, wo, cout])?;
+                Ok(SegmentDef::Block {
+                    h,
+                    w,
+                    conv1,
+                    conv2,
+                    down: down.then_some(Conv { kh: 1, kw: 1, cin, cout, stride }),
+                })
+            }
+            "head" if seg.in_shape.len() == 3 => {
+                if np != 2 || seg.out_shape.len() != 1 {
+                    bail!("head `{}`: expected (w, b)", seg.name);
+                }
+                let c = seg.in_shape[2];
+                let classes = seg.out_shape[0];
+                expect_param(seg, 0, &[c, classes])?;
+                expect_param(seg, 1, &[classes])?;
+                Ok(SegmentDef::HeadGap {
+                    hw: seg.in_shape[0] * seg.in_shape[1],
+                    c,
+                    classes,
+                })
+            }
+            "head" => {
+                if np != 4 || seg.in_shape.len() != 2 || seg.out_shape.len() != 1 {
+                    bail!("head `{}`: expected (lng, lnb, w, b)", seg.name);
+                }
+                let (tokens, dim) = (seg.in_shape[0], seg.in_shape[1]);
+                let classes = seg.out_shape[0];
+                expect_param(seg, 0, &[dim])?;
+                expect_param(seg, 1, &[dim])?;
+                expect_param(seg, 2, &[dim, classes])?;
+                expect_param(seg, 3, &[classes])?;
+                Ok(SegmentDef::HeadVit { tokens, dim, classes })
+            }
+            "embed" => {
+                if np != 3 || seg.in_shape.len() != 3 || seg.out_shape.len() != 2 {
+                    bail!("embed `{}`: malformed inventory", seg.name);
+                }
+                let img = seg.in_shape[0];
+                let chans = seg.in_shape[2];
+                let tokens = seg.out_shape[0];
+                let dim = seg.out_shape[1];
+                let grid = (1..=img).find(|g| g * g == tokens).unwrap_or(0);
+                if grid == 0 || img % grid != 0 || seg.in_shape[1] != img {
+                    bail!("embed `{}`: token grid {} not square in {}", seg.name, tokens, img);
+                }
+                let patch = img / grid;
+                expect_param(seg, 0, &[patch * patch * chans, dim])?;
+                expect_param(seg, 1, &[dim])?;
+                expect_param(seg, 2, &[tokens, dim])?;
+                Ok(SegmentDef::Embed { img, chans, patch, grid, dim })
+            }
+            "encoder" => {
+                if np != 12 || seg.in_shape.len() != 2 || seg.params[8].shape.len() != 2 {
+                    bail!("encoder `{}`: malformed inventory", seg.name);
+                }
+                let (tokens, dim) = (seg.in_shape[0], seg.in_shape[1]);
+                if meta.heads == 0 || dim % meta.heads != 0 {
+                    bail!(
+                        "encoder `{}`: dim {} not divisible by {} heads",
+                        seg.name,
+                        dim,
+                        meta.heads
+                    );
+                }
+                let mlp = seg.params[8].shape[1];
+                expect_param(seg, 0, &[dim])?;
+                expect_param(seg, 1, &[dim])?;
+                expect_param(seg, 2, &[dim, 3 * dim])?;
+                expect_param(seg, 3, &[3 * dim])?;
+                expect_param(seg, 4, &[dim, dim])?;
+                expect_param(seg, 5, &[dim])?;
+                expect_param(seg, 6, &[dim])?;
+                expect_param(seg, 7, &[dim])?;
+                expect_param(seg, 8, &[dim, mlp])?;
+                expect_param(seg, 9, &[mlp])?;
+                expect_param(seg, 10, &[mlp, dim])?;
+                expect_param(seg, 11, &[dim])?;
+                expect_out(seg, &[tokens, dim])?;
+                Ok(SegmentDef::Encoder { tokens, dim, heads: meta.heads, mlp })
+            }
+            other => bail!(
+                "unsupported segment kind `{other}` for the CpuBackend (segment `{}`)",
+                seg.name
+            ),
+        }
+    }
+
+    /// Forward: `(params..., x[B,...]) -> y`.
+    pub(crate) fn fwd(&self, ps: &[&Tensor], x: &Tensor) -> Result<Tensor> {
+        let b = x.batch();
+        match self {
+            SegmentDef::Stem { h, w, conv } => {
+                let c1 = conv.fwd(&x.data, &ps[0].data, b, *h, *w);
+                let (ho, wo) = conv.out_hw(*h, *w);
+                let mut y = group_norm_fwd(
+                    &c1, b, ho * wo, conv.cout, GN_GROUPS, &ps[1].data, &ps[2].data,
+                );
+                relu(&mut y);
+                Tensor::new(vec![b, ho, wo, conv.cout], y)
+            }
+            SegmentDef::Block { h, w, conv1, conv2, down } => {
+                let cout = conv1.cout;
+                let c1 = conv1.fwd(&x.data, &ps[0].data, b, *h, *w);
+                let (ho, wo) = conv1.out_hw(*h, *w);
+                let hw = ho * wo;
+                let o1 =
+                    group_norm_fwd(&c1, b, hw, cout, GN_GROUPS, &ps[1].data, &ps[2].data);
+                let mut h1 = o1;
+                relu(&mut h1);
+                let c2 = conv2.fwd(&h1, &ps[3].data, b, ho, wo);
+                let o2 =
+                    group_norm_fwd(&c2, b, hw, cout, GN_GROUPS, &ps[4].data, &ps[5].data);
+                let sc = match down {
+                    Some(cd) => {
+                        let cdo = cd.fwd(&x.data, &ps[6].data, b, *h, *w);
+                        group_norm_fwd(&cdo, b, hw, cout, GN_GROUPS, &ps[7].data, &ps[8].data)
+                    }
+                    None => x.data.clone(),
+                };
+                let mut y: Vec<f32> = o2.iter().zip(&sc).map(|(a, s)| a + s).collect();
+                relu(&mut y);
+                Tensor::new(vec![b, ho, wo, cout], y)
+            }
+            SegmentDef::HeadGap { hw, c, classes } => {
+                let pooled = gap_pool(&x.data, b, *hw, *c);
+                let mut y = matmul(&pooled, &ps[0].data, b, *c, *classes);
+                add_bias(&mut y, &ps[1].data);
+                Tensor::new(vec![b, *classes], y)
+            }
+            SegmentDef::HeadVit { tokens, dim, classes } => {
+                let r = b * tokens;
+                let hn = layer_norm_fwd(&x.data, r, *dim, &ps[0].data, &ps[1].data);
+                let pooled = token_pool(&hn, b, *tokens, *dim);
+                let mut y = matmul(&pooled, &ps[2].data, b, *dim, *classes);
+                add_bias(&mut y, &ps[3].data);
+                Tensor::new(vec![b, *classes], y)
+            }
+            SegmentDef::Embed { img, chans, patch, grid, dim } => {
+                let tokens = grid * grid;
+                let pdim = patch * patch * chans;
+                let xp = patchify(&x.data, b, *img, *chans, *patch, *grid);
+                let mut y = matmul(&xp, &ps[0].data, b * tokens, pdim, *dim);
+                add_bias(&mut y, &ps[1].data);
+                let pos = &ps[2].data;
+                for bi in 0..b {
+                    let base = bi * tokens * dim;
+                    for (yv, &pv) in y[base..base + tokens * dim].iter_mut().zip(pos) {
+                        *yv += pv;
+                    }
+                }
+                Tensor::new(vec![b, tokens, *dim], y)
+            }
+            SegmentDef::Encoder { tokens, dim, heads, mlp } => {
+                let y = self.encoder_fwd(ps, &x.data, b, *tokens, *dim, *heads, *mlp);
+                Tensor::new(vec![b, *tokens, *dim], y)
+            }
+        }
+    }
+
+    /// VJP: `(params..., x, gy) -> (param grads in meta order, gx)`.
+    pub(crate) fn bwd(
+        &self,
+        ps: &[&Tensor],
+        x: &Tensor,
+        gy: &Tensor,
+    ) -> Result<(Vec<Tensor>, Tensor)> {
+        let b = x.batch();
+        match self {
+            SegmentDef::Stem { h, w, conv } => {
+                let c1 = conv.fwd(&x.data, &ps[0].data, b, *h, *w);
+                let (ho, wo) = conv.out_hw(*h, *w);
+                let o = group_norm_fwd(
+                    &c1, b, ho * wo, conv.cout, GN_GROUPS, &ps[1].data, &ps[2].data,
+                );
+                let mut g = gy.data.clone();
+                relu_bwd(&o, &mut g);
+                let (dc1, dgamma, dbeta) = group_norm_bwd(
+                    &c1, b, ho * wo, conv.cout, GN_GROUPS, &ps[1].data, &g,
+                );
+                let (dx, dw) = conv.bwd(&x.data, &ps[0].data, &dc1, b, *h, *w);
+                Ok((
+                    vec![
+                        Tensor::new(ps[0].shape.clone(), dw)?,
+                        Tensor::vec1(dgamma),
+                        Tensor::vec1(dbeta),
+                    ],
+                    Tensor::new(x.shape.clone(), dx)?,
+                ))
+            }
+            SegmentDef::Block { h, w, conv1, conv2, down } => {
+                self.block_bwd(ps, x, gy, b, *h, *w, conv1, conv2, down.as_ref())
+            }
+            SegmentDef::HeadGap { hw, c, classes } => {
+                let pooled = gap_pool(&x.data, b, *hw, *c);
+                let dw = matmul_tn(&pooled, &gy.data, b, *c, *classes);
+                let db = col_sum(&gy.data, *classes);
+                let dpooled = matmul_nt(&gy.data, &ps[0].data, b, *classes, *c);
+                let mut dx = vec![0.0f32; b * hw * c];
+                let inv = 1.0 / *hw as f32;
+                for bi in 0..b {
+                    for s in 0..*hw {
+                        let base = (bi * hw + s) * c;
+                        for ch in 0..*c {
+                            dx[base + ch] = dpooled[bi * c + ch] * inv;
+                        }
+                    }
+                }
+                Ok((
+                    vec![Tensor::new(ps[0].shape.clone(), dw)?, Tensor::vec1(db)],
+                    Tensor::new(x.shape.clone(), dx)?,
+                ))
+            }
+            SegmentDef::HeadVit { tokens, dim, classes } => {
+                let r = b * tokens;
+                let hn = layer_norm_fwd(&x.data, r, *dim, &ps[0].data, &ps[1].data);
+                let pooled = token_pool(&hn, b, *tokens, *dim);
+                let dw = matmul_tn(&pooled, &gy.data, b, *dim, *classes);
+                let db = col_sum(&gy.data, *classes);
+                let dpooled = matmul_nt(&gy.data, &ps[2].data, b, *classes, *dim);
+                // broadcast back over tokens
+                let inv = 1.0 / *tokens as f32;
+                let mut dh = vec![0.0f32; r * dim];
+                for bi in 0..b {
+                    for t in 0..*tokens {
+                        let base = (bi * tokens + t) * dim;
+                        for dd in 0..*dim {
+                            dh[base + dd] = dpooled[bi * dim + dd] * inv;
+                        }
+                    }
+                }
+                let (dx, dlng, dlnb) =
+                    layer_norm_bwd(&x.data, r, *dim, &ps[0].data, &dh);
+                Ok((
+                    vec![
+                        Tensor::vec1(dlng),
+                        Tensor::vec1(dlnb),
+                        Tensor::new(ps[2].shape.clone(), dw)?,
+                        Tensor::vec1(db),
+                    ],
+                    Tensor::new(x.shape.clone(), dx)?,
+                ))
+            }
+            SegmentDef::Embed { img, chans, patch, grid, dim } => {
+                let tokens = grid * grid;
+                let pdim = patch * patch * chans;
+                let r = b * tokens;
+                let xp = patchify(&x.data, b, *img, *chans, *patch, *grid);
+                let dw = matmul_tn(&xp, &gy.data, r, pdim, *dim);
+                let db = col_sum(&gy.data, *dim);
+                let mut dpos = vec![0.0f32; tokens * dim];
+                for bi in 0..b {
+                    let base = bi * tokens * dim;
+                    for (dp, &gv) in dpos.iter_mut().zip(&gy.data[base..base + tokens * dim]) {
+                        *dp += gv;
+                    }
+                }
+                let dxp = matmul_nt(&gy.data, &ps[0].data, r, *dim, pdim);
+                let dx = unpatchify(&dxp, b, *img, *chans, *patch, *grid);
+                Ok((
+                    vec![
+                        Tensor::new(ps[0].shape.clone(), dw)?,
+                        Tensor::vec1(db),
+                        Tensor::new(ps[2].shape.clone(), dpos)?,
+                    ],
+                    Tensor::new(x.shape.clone(), dx)?,
+                ))
+            }
+            SegmentDef::Encoder { tokens, dim, heads, mlp } => {
+                self.encoder_bwd(ps, x, gy, b, *tokens, *dim, *heads, *mlp)
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn block_bwd(
+        &self,
+        ps: &[&Tensor],
+        x: &Tensor,
+        gy: &Tensor,
+        b: usize,
+        h: usize,
+        w: usize,
+        conv1: &Conv,
+        conv2: &Conv,
+        down: Option<&Conv>,
+    ) -> Result<(Vec<Tensor>, Tensor)> {
+        let cout = conv1.cout;
+        // --- recompute forward intermediates ---
+        let c1 = conv1.fwd(&x.data, &ps[0].data, b, h, w);
+        let (ho, wo) = conv1.out_hw(h, w);
+        let hw = ho * wo;
+        let o1 = group_norm_fwd(&c1, b, hw, cout, GN_GROUPS, &ps[1].data, &ps[2].data);
+        let mut h1 = o1.clone();
+        relu(&mut h1);
+        let c2 = conv2.fwd(&h1, &ps[3].data, b, ho, wo);
+        let o2 = group_norm_fwd(&c2, b, hw, cout, GN_GROUPS, &ps[4].data, &ps[5].data);
+        let (cdo, sc) = match down {
+            Some(cd) => {
+                let cdo = cd.fwd(&x.data, &ps[6].data, b, h, w);
+                let sc =
+                    group_norm_fwd(&cdo, b, hw, cout, GN_GROUPS, &ps[7].data, &ps[8].data);
+                (cdo, sc)
+            }
+            None => (Vec::new(), x.data.clone()),
+        };
+        let pre: Vec<f32> = o2.iter().zip(&sc).map(|(a, s)| a + s).collect();
+
+        // --- backward ---
+        let mut g = gy.data.clone();
+        relu_bwd(&pre, &mut g); // grad at o2 and sc alike
+        let (dc2, dg2, db2) = group_norm_bwd(&c2, b, hw, cout, GN_GROUPS, &ps[4].data, &g);
+        let (mut dh1, dw2) = conv2.bwd(&h1, &ps[3].data, &dc2, b, ho, wo);
+        relu_bwd(&o1, &mut dh1);
+        let (dc1, dg1, db1) = group_norm_bwd(&c1, b, hw, cout, GN_GROUPS, &ps[1].data, &dh1);
+        let (dx1, dw1) = conv1.bwd(&x.data, &ps[0].data, &dc1, b, h, w);
+
+        let mut grads = vec![
+            Tensor::new(ps[0].shape.clone(), dw1)?,
+            Tensor::vec1(dg1),
+            Tensor::vec1(db1),
+            Tensor::new(ps[3].shape.clone(), dw2)?,
+            Tensor::vec1(dg2),
+            Tensor::vec1(db2),
+        ];
+        let mut dx = dx1;
+        match down {
+            Some(cd) => {
+                let (dcdo, dgd, dbd) =
+                    group_norm_bwd(&cdo, b, hw, cout, GN_GROUPS, &ps[7].data, &g);
+                let (dx2, dwd) = cd.bwd(&x.data, &ps[6].data, &dcdo, b, h, w);
+                for (a, v) in dx.iter_mut().zip(&dx2) {
+                    *a += v;
+                }
+                grads.push(Tensor::new(ps[6].shape.clone(), dwd)?);
+                grads.push(Tensor::vec1(dgd));
+                grads.push(Tensor::vec1(dbd));
+            }
+            None => {
+                for (a, v) in dx.iter_mut().zip(&g) {
+                    *a += v;
+                }
+            }
+        }
+        Ok((grads, Tensor::new(x.shape.clone(), dx)?))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn encoder_fwd(
+        &self,
+        ps: &[&Tensor],
+        x: &[f32],
+        b: usize,
+        tokens: usize,
+        dim: usize,
+        heads: usize,
+        mlp: usize,
+    ) -> Vec<f32> {
+        let r = b * tokens;
+        let d3 = 3 * dim;
+        let hd = dim / heads;
+        let inv = 1.0 / (hd as f32).sqrt();
+        let xh = layer_norm_fwd(x, r, dim, &ps[0].data, &ps[1].data);
+        let mut qkv = matmul(&xh, &ps[2].data, r, dim, d3);
+        add_bias(&mut qkv, &ps[3].data);
+        let mut o = vec![0.0f32; r * dim];
+        for bi in 0..b {
+            for hh in 0..heads {
+                let q = gather_head(&qkv, bi, tokens, d3, hh * hd, hd);
+                let k = gather_head(&qkv, bi, tokens, d3, dim + hh * hd, hd);
+                let v = gather_head(&qkv, bi, tokens, d3, 2 * dim + hh * hd, hd);
+                let mut att = matmul_nt(&q, &k, tokens, hd, tokens);
+                for a in att.iter_mut() {
+                    *a *= inv;
+                }
+                softmax_rows(&mut att, tokens);
+                let oh = matmul(&att, &v, tokens, tokens, hd);
+                scatter_head(&mut o, &oh, bi, tokens, dim, hh * hd, hd);
+            }
+        }
+        let mut proj = matmul(&o, &ps[4].data, r, dim, dim);
+        add_bias(&mut proj, &ps[5].data);
+        let x2: Vec<f32> = x.iter().zip(&proj).map(|(a, p)| a + p).collect();
+        let h2 = layer_norm_fwd(&x2, r, dim, &ps[6].data, &ps[7].data);
+        let mut z1 = matmul(&h2, &ps[8].data, r, dim, mlp);
+        add_bias(&mut z1, &ps[9].data);
+        let a = gelu(&z1);
+        let mut y = matmul(&a, &ps[10].data, r, mlp, dim);
+        add_bias(&mut y, &ps[11].data);
+        for (yv, xv) in y.iter_mut().zip(&x2) {
+            *yv += xv;
+        }
+        y
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn encoder_bwd(
+        &self,
+        ps: &[&Tensor],
+        x: &Tensor,
+        gy: &Tensor,
+        b: usize,
+        tokens: usize,
+        dim: usize,
+        heads: usize,
+        mlp: usize,
+    ) -> Result<(Vec<Tensor>, Tensor)> {
+        let r = b * tokens;
+        let d3 = 3 * dim;
+        let hd = dim / heads;
+        let inv = 1.0 / (hd as f32).sqrt();
+
+        // --- recompute forward intermediates ---
+        let xh = layer_norm_fwd(&x.data, r, dim, &ps[0].data, &ps[1].data);
+        let mut qkv = matmul(&xh, &ps[2].data, r, dim, d3);
+        add_bias(&mut qkv, &ps[3].data);
+        let mut o = vec![0.0f32; r * dim];
+        let mut atts: Vec<Vec<f32>> = Vec::with_capacity(b * heads);
+        for bi in 0..b {
+            for hh in 0..heads {
+                let q = gather_head(&qkv, bi, tokens, d3, hh * hd, hd);
+                let k = gather_head(&qkv, bi, tokens, d3, dim + hh * hd, hd);
+                let v = gather_head(&qkv, bi, tokens, d3, 2 * dim + hh * hd, hd);
+                let mut att = matmul_nt(&q, &k, tokens, hd, tokens);
+                for a in att.iter_mut() {
+                    *a *= inv;
+                }
+                softmax_rows(&mut att, tokens);
+                let oh = matmul(&att, &v, tokens, tokens, hd);
+                scatter_head(&mut o, &oh, bi, tokens, dim, hh * hd, hd);
+                atts.push(att);
+            }
+        }
+        let mut proj = matmul(&o, &ps[4].data, r, dim, dim);
+        add_bias(&mut proj, &ps[5].data);
+        let x2: Vec<f32> = x.data.iter().zip(&proj).map(|(a, p)| a + p).collect();
+        let h2 = layer_norm_fwd(&x2, r, dim, &ps[6].data, &ps[7].data);
+        let mut z1 = matmul(&h2, &ps[8].data, r, dim, mlp);
+        add_bias(&mut z1, &ps[9].data);
+        let a = gelu(&z1);
+
+        // --- backward: mlp sub-block ---
+        let g = &gy.data;
+        let db2 = col_sum(g, dim);
+        let dw2 = matmul_tn(&a, g, r, mlp, dim);
+        let da = matmul_nt(g, &ps[10].data, r, dim, mlp);
+        let dz1 = gelu_bwd(&z1, &da);
+        let db1 = col_sum(&dz1, mlp);
+        let dw1 = matmul_tn(&h2, &dz1, r, dim, mlp);
+        let dh2 = matmul_nt(&dz1, &ps[8].data, r, mlp, dim);
+        let (dx2_ln, dln2g, dln2b) = layer_norm_bwd(&x2, r, dim, &ps[6].data, &dh2);
+        let dx2: Vec<f32> = g.iter().zip(&dx2_ln).map(|(a, l)| a + l).collect();
+
+        // --- projection ---
+        let dbproj = col_sum(&dx2, dim);
+        let dwproj = matmul_tn(&o, &dx2, r, dim, dim);
+        let do_ = matmul_nt(&dx2, &ps[4].data, r, dim, dim);
+
+        // --- attention ---
+        let mut dqkv = vec![0.0f32; r * d3];
+        for bi in 0..b {
+            for hh in 0..heads {
+                let att = &atts[bi * heads + hh];
+                let q = gather_head(&qkv, bi, tokens, d3, hh * hd, hd);
+                let k = gather_head(&qkv, bi, tokens, d3, dim + hh * hd, hd);
+                let v = gather_head(&qkv, bi, tokens, d3, 2 * dim + hh * hd, hd);
+                let doh = gather_head(&do_, bi, tokens, dim, hh * hd, hd);
+                let datt = matmul_nt(&doh, &v, tokens, hd, tokens);
+                let dv = matmul_tn(att, &doh, tokens, tokens, hd);
+                let mut ds = softmax_bwd(att, &datt, tokens);
+                for s in ds.iter_mut() {
+                    *s *= inv;
+                }
+                let dq = matmul(&ds, &k, tokens, tokens, hd);
+                let dk = matmul_tn(&ds, &q, tokens, tokens, hd);
+                scatter_head(&mut dqkv, &dq, bi, tokens, d3, hh * hd, hd);
+                scatter_head(&mut dqkv, &dk, bi, tokens, d3, dim + hh * hd, hd);
+                scatter_head(&mut dqkv, &dv, bi, tokens, d3, 2 * dim + hh * hd, hd);
+            }
+        }
+        let dbqkv = col_sum(&dqkv, d3);
+        let dwqkv = matmul_tn(&xh, &dqkv, r, dim, d3);
+        let dxh = matmul_nt(&dqkv, &ps[2].data, r, d3, dim);
+        let (dx_ln1, dln1g, dln1b) = layer_norm_bwd(&x.data, r, dim, &ps[0].data, &dxh);
+        let dx: Vec<f32> = dx2.iter().zip(&dx_ln1).map(|(a, l)| a + l).collect();
+
+        Ok((
+            vec![
+                Tensor::vec1(dln1g),
+                Tensor::vec1(dln1b),
+                Tensor::new(ps[2].shape.clone(), dwqkv)?,
+                Tensor::vec1(dbqkv),
+                Tensor::new(ps[4].shape.clone(), dwproj)?,
+                Tensor::vec1(dbproj),
+                Tensor::vec1(dln2g),
+                Tensor::vec1(dln2b),
+                Tensor::new(ps[8].shape.clone(), dw1)?,
+                Tensor::vec1(db1),
+                Tensor::new(ps[10].shape.clone(), dw2)?,
+                Tensor::vec1(db2),
+            ],
+            Tensor::new(x.shape.clone(), dx)?,
+        ))
+    }
+}
+
+/// `pooled[b,c] = mean over hw` for `x[b,hw,c]`.
+fn gap_pool(x: &[f32], b: usize, hw: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; b * c];
+    let inv = 1.0 / hw as f32;
+    for bi in 0..b {
+        for s in 0..hw {
+            let base = (bi * hw + s) * c;
+            let orow = &mut out[bi * c..(bi + 1) * c];
+            for (ov, &xv) in orow.iter_mut().zip(&x[base..base + c]) {
+                *ov += xv * inv;
+            }
+        }
+    }
+    out
+}
+
+/// `pooled[b,d] = mean over tokens` for `x[b,t,d]` (same layout as gap).
+fn token_pool(x: &[f32], b: usize, tokens: usize, d: usize) -> Vec<f32> {
+    gap_pool(x, b, tokens, d)
+}
+
+/// NHWC image -> `[b, tokens, patch*patch*chans]` token rows.
+fn patchify(x: &[f32], b: usize, img: usize, chans: usize, patch: usize, grid: usize) -> Vec<f32> {
+    let tokens = grid * grid;
+    let pdim = patch * patch * chans;
+    let mut out = vec![0.0f32; b * tokens * pdim];
+    for bi in 0..b {
+        for ti in 0..grid {
+            for tj in 0..grid {
+                let t = ti * grid + tj;
+                for py in 0..patch {
+                    for px in 0..patch {
+                        let src = ((bi * img + ti * patch + py) * img + tj * patch + px) * chans;
+                        let dst = ((bi * tokens + t) * pdim) + (py * patch + px) * chans;
+                        out[dst..dst + chans].copy_from_slice(&x[src..src + chans]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`patchify`] (bijective, so plain assignment).
+fn unpatchify(
+    xp: &[f32],
+    b: usize,
+    img: usize,
+    chans: usize,
+    patch: usize,
+    grid: usize,
+) -> Vec<f32> {
+    let tokens = grid * grid;
+    let pdim = patch * patch * chans;
+    let mut out = vec![0.0f32; b * img * img * chans];
+    for bi in 0..b {
+        for ti in 0..grid {
+            for tj in 0..grid {
+                let t = ti * grid + tj;
+                for py in 0..patch {
+                    for px in 0..patch {
+                        let dst = ((bi * img + ti * patch + py) * img + tj * patch + px) * chans;
+                        let src = ((bi * tokens + t) * pdim) + (py * patch + px) * chans;
+                        out[dst..dst + chans].copy_from_slice(&xp[src..src + chans]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Extract head columns `[tokens, hd]` at `col` from `[b, tokens, width]`.
+fn gather_head(
+    buf: &[f32],
+    bi: usize,
+    tokens: usize,
+    width: usize,
+    col: usize,
+    hd: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; tokens * hd];
+    for t in 0..tokens {
+        let src = (bi * tokens + t) * width + col;
+        out[t * hd..(t + 1) * hd].copy_from_slice(&buf[src..src + hd]);
+    }
+    out
+}
+
+/// Scatter head columns back (adds into the destination).
+fn scatter_head(
+    buf: &mut [f32],
+    head: &[f32],
+    bi: usize,
+    tokens: usize,
+    width: usize,
+    col: usize,
+    hd: usize,
+) {
+    for t in 0..tokens {
+        let dst = (bi * tokens + t) * width + col;
+        for j in 0..hd {
+            buf[dst + j] += head[t * hd + j];
+        }
+    }
+}

@@ -1,75 +1,263 @@
-//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute many.
+//! Backend-agnostic execution runtime.
 //!
-//! This is the only module that touches the `xla` crate. The rest of the
-//! coordinator deals in [`crate::tensor::Tensor`]s; conversion happens at
-//! the execute boundary. Executables are cached by path, so the per-layer
-//! unlearning loop pays compilation once per module per process.
+//! The coordinator never names a compute library: it asks the [`Runtime`]
+//! for the module described by a [`ModuleSpec`] (a segment forward, the
+//! fused logits graph, the FIMD engine tile, ...) and receives an opaque
+//! [`Executable`] handle with positional-argument semantics matching the
+//! AOT export contract (`params..., x[, gy]`; outputs in export order).
 //!
-//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
-//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
-//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//! Two backends implement the seam today:
+//!
+//! * [`cpu::CpuBackend`] (default) — a pure-Rust interpreter with
+//!   reference GEMM / conv / FIMD / dampening kernels matching
+//!   `python/compile/kernels/ref.py`. No artifacts, no Python, no XLA.
+//! * `xla::XlaBackend` (`backend-xla` feature) — the original PJRT path:
+//!   loads the HLO-text artifacts produced by `make artifacts`, compiles
+//!   once, executes many. Builds offline against the vendored API stub;
+//!   runtime execution needs the real `xla` bindings.
+//!
+//! Later GPU/NPU/hwsim-in-the-loop backends plug into the same trait.
+//!
+//! Executables are cached by spec key, so the per-layer unlearning loop
+//! pays module construction once per process — mirroring the
+//! compile-once/execute-many discipline of the PJRT path.
 
-mod exec;
-pub use exec::{ExecStats, Executable};
+pub mod cpu;
+#[cfg(feature = "backend-xla")]
+pub mod xla;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-/// A PJRT CPU client plus an executable cache.
+use crate::config::{ModelMeta, SharedMeta};
+use crate::tensor::Tensor;
+
+/// Aggregate compile/run statistics.
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub compiles: u64,
+    pub compile_ms: f64,
+    pub runs: u64,
+    pub run_ms: f64,
+}
+
+/// What computation a module performs — the backend-agnostic module
+/// identity. Model-graph modules carry the full inventory so a backend
+/// can either map them to artifact files (XLA) or build an interpreter
+/// (CPU) without further context.
+#[derive(Clone)]
+pub enum ModuleSpec {
+    /// Segment k forward: `(params_k..., x) -> (y,)`.
+    SegmentFwd { meta: ModelMeta, seg: usize },
+    /// Segment k VJP: `(params_k..., x, gy) -> (grads_k..., gx)`.
+    SegmentBwd { meta: ModelMeta, seg: usize },
+    /// Whole-model forward: `(all params..., x) -> (logits,)`.
+    Logits { meta: ModelMeta },
+    /// One SGD step: `(all params..., x, onehot, lr) -> (params'..., loss)`.
+    TrainStep { meta: ModelMeta },
+    /// dlogits of the mean NLL: `(logits, onehot) -> (dlogits,)`.
+    LossGrad { meta: ModelMeta },
+    /// FIMD IP tile update: `(grad, acc, scale) -> (acc',)`.
+    Fimd { shared: SharedMeta },
+    /// Dampening IP tile pass:
+    /// `(theta, idf, id, alpha, lam) -> (theta', mask)`.
+    Dampen { shared: SharedMeta },
+    /// Patch-GEMM engine demo: `(x, y) -> (x @ y,)`.
+    Gemm { shared: SharedMeta },
+}
+
+/// Structural fingerprint of a model inventory. Cache keys must reflect
+/// the *content* of the spec, not just the model name: two inventories
+/// sharing a name (e.g. a builtin and a differently-exported artifact
+/// meta) would otherwise alias in the executable cache and silently run
+/// each other's modules.
+fn meta_fingerprint(meta: &ModelMeta) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    meta.dir.hash(&mut h);
+    meta.name.hash(&mut h);
+    meta.num_classes.hash(&mut h);
+    meta.input_shape.hash(&mut h);
+    meta.batch.hash(&mut h);
+    meta.microbatch.hash(&mut h);
+    meta.heads.hash(&mut h);
+    for s in &meta.segments {
+        s.name.hash(&mut h);
+        s.kind.hash(&mut h);
+        s.in_shape.hash(&mut h);
+        s.out_shape.hash(&mut h);
+        for p in &s.params {
+            p.name.hash(&mut h);
+            p.shape.hash(&mut h);
+        }
+    }
+    h.finish()
+}
+
+impl ModuleSpec {
+    /// Cache key — stable across identical specs, distinct across
+    /// inventories that merely share a model name.
+    pub fn key(&self) -> String {
+        let model = |meta: &ModelMeta| format!("{}-{:016x}", meta.name, meta_fingerprint(meta));
+        match self {
+            ModuleSpec::SegmentFwd { meta, seg } => {
+                format!("model/{}/fwd/{seg}", model(meta))
+            }
+            ModuleSpec::SegmentBwd { meta, seg } => {
+                format!("model/{}/bwd/{seg}", model(meta))
+            }
+            ModuleSpec::Logits { meta } => format!("model/{}/logits", model(meta)),
+            ModuleSpec::TrainStep { meta } => format!("model/{}/train_step", model(meta)),
+            ModuleSpec::LossGrad { meta } => format!("model/{}/loss_grad", model(meta)),
+            ModuleSpec::Fimd { shared } => {
+                format!("shared/fimd/{}/{}", shared.dir.display(), shared.tile)
+            }
+            ModuleSpec::Dampen { shared } => {
+                format!("shared/dampen/{}/{}", shared.dir.display(), shared.tile)
+            }
+            ModuleSpec::Gemm { shared } => {
+                format!("shared/gemm/{}/{}", shared.dir.display(), shared.gemm_demo)
+            }
+        }
+    }
+
+    /// Human-readable module name for error contexts and stats.
+    pub fn label(&self) -> String {
+        let seg_name = |meta: &ModelMeta, seg: usize| {
+            meta.segments
+                .get(seg)
+                .map(|s| s.name.clone())
+                .unwrap_or_else(|| format!("#{seg}"))
+        };
+        match self {
+            ModuleSpec::SegmentFwd { meta, seg } => {
+                format!("fwd[{}]({})", seg_name(meta, *seg), meta.name)
+            }
+            ModuleSpec::SegmentBwd { meta, seg } => {
+                format!("bwd[{}]({})", seg_name(meta, *seg), meta.name)
+            }
+            ModuleSpec::Logits { meta } => format!("logits({})", meta.name),
+            ModuleSpec::TrainStep { meta } => format!("train_step({})", meta.name),
+            ModuleSpec::LossGrad { meta } => format!("loss_grad({})", meta.name),
+            ModuleSpec::Fimd { .. } => "fimd".to_string(),
+            ModuleSpec::Dampen { .. } => "dampen".to_string(),
+            ModuleSpec::Gemm { .. } => "gemm".to_string(),
+        }
+    }
+}
+
+/// A backend-built module body: positional tensors in, tensors out.
+pub trait ModuleImpl {
+    fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// An execution backend: builds module bodies from specs.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    fn compile(&self, spec: &ModuleSpec) -> Result<Box<dyn ModuleImpl>>;
+}
+
+/// A compiled/interpreted module with per-module run statistics — the
+/// backend-agnostic handle the model graph and engines hold.
+pub struct Executable {
+    pub name: String,
+    imp: Box<dyn ModuleImpl>,
+    stats: RefCell<ExecStats>,
+}
+
+impl Executable {
+    pub(crate) fn new(name: String, imp: Box<dyn ModuleImpl>) -> Executable {
+        Executable { name, imp, stats: RefCell::new(ExecStats::default()) }
+    }
+
+    /// Execute with host tensors; returns the output tuple as tensors.
+    pub fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let t0 = std::time::Instant::now();
+        let out = self
+            .imp
+            .run(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut st = self.stats.borrow_mut();
+        st.runs += 1;
+        st.run_ms += t0.elapsed().as_secs_f64() * 1e3;
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        self.stats.borrow().clone()
+    }
+}
+
+/// A backend plus an executable cache.
 ///
-/// Deliberately `!Sync`: PJRT client handles are owned by the coordinator
+/// Deliberately `!Sync`: execution handles are owned by the coordinator
 /// thread, matching the single Unlearning Engine of the processor; the
 /// request-facing threads talk to it via channels (`coordinator`).
 pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: RefCell<HashMap<PathBuf, Rc<Executable>>>,
+    backend: Box<dyn Backend>,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
     stats: RefCell<ExecStats>,
 }
 
 impl Runtime {
+    /// The default pure-Rust interpreter backend.
     pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
+        Ok(Runtime::with_backend(Box::new(cpu::CpuBackend::new())))
+    }
+
+    /// The PJRT/HLO backend (requires `make artifacts` + real bindings).
+    #[cfg(feature = "backend-xla")]
+    pub fn xla() -> Result<Runtime> {
+        Ok(Runtime::with_backend(Box::new(xla::XlaBackend::new()?)))
+    }
+
+    /// Select the backend via `FICABU_BACKEND` (`cpu` default, `xla` with
+    /// the `backend-xla` feature).
+    pub fn from_env() -> Result<Runtime> {
+        match std::env::var("FICABU_BACKEND").as_deref() {
+            Err(_) | Ok("") | Ok("cpu") => Runtime::cpu(),
+            #[cfg(feature = "backend-xla")]
+            Ok("xla") => Runtime::xla(),
+            #[cfg(not(feature = "backend-xla"))]
+            Ok("xla") => {
+                bail!("FICABU_BACKEND=xla requires building with --features backend-xla")
+            }
+            Ok(other) => bail!("unknown FICABU_BACKEND `{other}` (cpu | xla)"),
+        }
+    }
+
+    pub fn with_backend(backend: Box<dyn Backend>) -> Runtime {
+        Runtime {
+            backend,
             cache: RefCell::new(HashMap::new()),
             stats: RefCell::new(ExecStats::default()),
-        })
+        }
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.name().to_string()
     }
 
-    /// Load + compile an HLO-text module, memoized by canonical path.
-    pub fn load(&self, path: impl AsRef<Path>) -> Result<Rc<Executable>> {
-        let path = path.as_ref();
-        let key = path
-            .canonicalize()
-            .with_context(|| format!("module not found: {}", path.display()))?;
+    /// Build (or fetch from cache) the module for a spec.
+    pub fn load(&self, spec: &ModuleSpec) -> Result<Rc<Executable>> {
+        let key = spec.key();
         if let Some(exe) = self.cache.borrow().get(&key) {
             return Ok(exe.clone());
         }
         let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&key)
-            .with_context(|| format!("parsing HLO text {}", key.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", key.display()))?;
+        let imp = self
+            .backend
+            .compile(spec)
+            .with_context(|| format!("compiling {}", spec.label()))?;
         {
             let mut st = self.stats.borrow_mut();
             st.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
             st.compiles += 1;
         }
-        let exe = Rc::new(Executable::new(
-            key.file_name().unwrap().to_string_lossy().to_string(),
-            exe,
-        ));
+        let exe = Rc::new(Executable::new(spec.label(), imp));
         self.cache.borrow_mut().insert(key, exe.clone());
         Ok(exe)
     }
@@ -95,19 +283,16 @@ impl Runtime {
 mod tests {
     use super::*;
     use crate::config::SharedMeta;
-    use crate::tensor::Tensor;
-    use std::path::Path;
 
-    fn art() -> std::path::PathBuf {
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts")
+    fn shared() -> SharedMeta {
+        SharedMeta::builtin()
     }
 
     #[test]
-    fn load_and_run_fimd_module() {
+    fn fimd_module_semantics() {
         let rt = Runtime::cpu().unwrap();
-        let shared = SharedMeta::load(art().join("shared")).unwrap();
-        let exe = rt.load(shared.module_path(&shared.fimd)).unwrap();
-        let t = shared.tile;
+        let exe = rt.load(&ModuleSpec::Fimd { shared: shared() }).unwrap();
+        let t = shared().tile;
         let grad = Tensor::vec1((0..t).map(|i| (i % 7) as f32 * 0.1).collect());
         let acc = Tensor::vec1(vec![1.0; t]);
         let scale = Tensor::vec1(vec![0.5]);
@@ -124,10 +309,9 @@ mod tests {
     #[test]
     fn executable_cache_hits() {
         let rt = Runtime::cpu().unwrap();
-        let shared = SharedMeta::load(art().join("shared")).unwrap();
-        let p = shared.module_path(&shared.dampen);
-        let a = rt.load(&p).unwrap();
-        let b = rt.load(&p).unwrap();
+        let spec = ModuleSpec::Dampen { shared: shared() };
+        let a = rt.load(&spec).unwrap();
+        let b = rt.load(&spec).unwrap();
         assert!(Rc::ptr_eq(&a, &b));
         assert_eq!(rt.cached_modules(), 1);
         assert_eq!(rt.stats().compiles, 1);
@@ -136,9 +320,8 @@ mod tests {
     #[test]
     fn dampen_module_semantics() {
         let rt = Runtime::cpu().unwrap();
-        let shared = SharedMeta::load(art().join("shared")).unwrap();
-        let exe = rt.load(shared.module_path(&shared.dampen)).unwrap();
-        let t = shared.tile;
+        let exe = rt.load(&ModuleSpec::Dampen { shared: shared() }).unwrap();
+        let t = shared().tile;
         // idf huge for even indices -> selected, dampened by beta = id/idf
         let theta = Tensor::vec1(vec![2.0; t]);
         let idf = Tensor::vec1(
@@ -158,8 +341,20 @@ mod tests {
     }
 
     #[test]
-    fn missing_module_errors() {
+    fn unsupported_segment_kind_errors() {
         let rt = Runtime::cpu().unwrap();
-        assert!(rt.load("/nonexistent/x.hlo.txt").is_err());
+        let mut meta = crate::config::ModelMeta::builtin("rn18slim").unwrap();
+        meta.segments[0].kind = "alien".to_string();
+        assert!(rt.load(&ModuleSpec::SegmentFwd { meta, seg: 0 }).is_err());
+    }
+
+    #[test]
+    fn from_env_rejects_unknown_backend() {
+        std::env::set_var("FICABU_BACKEND", "npu");
+        assert!(Runtime::from_env().is_err());
+        std::env::set_var("FICABU_BACKEND", "cpu");
+        assert!(Runtime::from_env().is_ok());
+        std::env::remove_var("FICABU_BACKEND");
+        assert!(Runtime::from_env().is_ok());
     }
 }

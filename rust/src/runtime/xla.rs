@@ -1,0 +1,137 @@
+//! XlaBackend — the PJRT/HLO artifact path (`backend-xla` feature).
+//!
+//! Maps every [`ModuleSpec`] onto the HLO-text file `make artifacts`
+//! exported for it, compiles once through the PJRT client, and converts
+//! tensors at the execute boundary. This is the only module that touches
+//! the `xla` crate; by default the workspace links the vendored API stub
+//! (`vendor/xla-stub`) so the feature *compiles* everywhere — real
+//! execution requires swapping in the actual `xla` bindings.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+use super::{Backend, ModuleImpl, ModuleSpec};
+
+/// PJRT CPU client shared by every compiled module.
+pub struct XlaBackend {
+    client: std::rc::Rc<xla::PjRtClient>,
+}
+
+impl XlaBackend {
+    pub fn new() -> Result<XlaBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaBackend { client: std::rc::Rc::new(client) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// The artifact file a spec maps to.
+fn module_path(spec: &ModuleSpec) -> Result<PathBuf> {
+    Ok(match spec {
+        ModuleSpec::SegmentFwd { meta, seg } => meta.module_path(&meta.segments[*seg].fwd),
+        ModuleSpec::SegmentBwd { meta, seg } => meta.module_path(&meta.segments[*seg].bwd),
+        ModuleSpec::Logits { meta } => meta.module_path(&meta.logits_module),
+        ModuleSpec::TrainStep { meta } => meta.module_path(&meta.train_step_module),
+        ModuleSpec::LossGrad { meta } => meta.module_path(&meta.loss_grad_module),
+        ModuleSpec::Fimd { shared } => shared.module_path(&shared.fimd),
+        ModuleSpec::Dampen { shared } => shared.module_path(&shared.dampen),
+        ModuleSpec::Gemm { shared } => shared.module_path(&shared.gemm),
+    })
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn compile(&self, spec: &ModuleSpec) -> Result<Box<dyn ModuleImpl>> {
+        let path = module_path(spec)?;
+        let key = path.canonicalize().with_context(|| {
+            format!("module not found: {} (run `make artifacts`)", path.display())
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {}", key.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", key.display()))?;
+        Ok(Box::new(XlaModule { name: spec.label(), exe }))
+    }
+}
+
+/// A compiled PJRT executable with positional-argument semantics matching
+/// the AOT export (params..., x[, gy]); outputs are the flattened ROOT
+/// tuple in export order.
+struct XlaModule {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ModuleImpl for XlaModule {
+    fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        if outs.is_empty() || outs[0].is_empty() {
+            bail!("{}: empty execution result", self.name);
+        }
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        // AOT lowers with return_tuple=True, so the result is always a tuple.
+        let parts = lit
+            .to_tuple()
+            .with_context(|| format!("untupling result of {}", self.name))?;
+        parts.into_iter().map(|l| literal_to_tensor(&l)).collect()
+    }
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    if t.shape.is_empty() {
+        // rank-0: reshape [1] -> []
+        return lit.reshape(&[]).context("reshaping scalar literal");
+    }
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).context("reshaping literal")
+}
+
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().context("literal has no array shape")?;
+    let ty = shape.ty();
+    if !matches!(ty, xla::ElementType::F32) {
+        bail!("expected f32 output, got {ty:?}");
+    }
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>().context("reading literal data")?;
+    Tensor::new(dims, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_backend_fails_gracefully() {
+        // with the vendored stub linked, client creation is a clean error,
+        // not a crash — the real bindings swap in via the path dependency
+        match XlaBackend::new() {
+            Ok(_) => (), // real bindings present
+            Err(e) => assert!(format!("{e:#}").contains("PJRT")),
+        }
+    }
+}

@@ -8,7 +8,7 @@ use std::rc::Rc;
 use anyhow::{bail, Result};
 
 use crate::config::SharedMeta;
-use crate::runtime::{Executable, Runtime};
+use crate::runtime::{Executable, ModuleSpec, Runtime};
 use crate::tensor::Tensor;
 
 pub struct DampEngine {
@@ -27,7 +27,7 @@ pub struct DampStats {
 impl DampEngine {
     pub fn new(rt: &Runtime, shared: &SharedMeta) -> Result<DampEngine> {
         Ok(DampEngine {
-            exe: rt.load(shared.module_path(&shared.dampen))?,
+            exe: rt.load(&ModuleSpec::Dampen { shared: shared.clone() })?,
             tile: shared.tile,
             elems_streamed: std::cell::Cell::new(0),
         })
@@ -87,14 +87,11 @@ impl DampEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::path::Path;
 
     fn engine() -> (Runtime, DampEngine) {
         let rt = Runtime::cpu().unwrap();
-        let art = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts");
-        let shared = SharedMeta::load(art.join("shared")).unwrap();
-        let eng = DampEngine::new(&rt, &shared);
-        let eng = eng.unwrap();
+        let shared = SharedMeta::builtin();
+        let eng = DampEngine::new(&rt, &shared).unwrap();
         (rt, eng)
     }
 

@@ -1,10 +1,10 @@
-//! Integration tests across runtime + model + unlearn + metrics + hwsim.
+//! Integration tests across runtime + model + unlearn + metrics + hwsim,
+//! running end-to-end on the default CpuBackend (no artifacts, no XLA).
 //!
 //! These use freshly initialized (untrained) parameters where possible to
 //! stay fast; the trained-model behaviour is exercised by the examples and
-//! the table benches.
-
-use std::path::{Path, PathBuf};
+//! the table benches. Every source of randomness is an explicitly seeded
+//! `Pcg32`, so the suite is bit-deterministic across runs and machines.
 
 use ficabu::config::{ModelMeta, SharedMeta};
 use ficabu::data::{cifar20_like, DatasetCfg};
@@ -20,10 +20,6 @@ use ficabu::unlearn::{
 };
 use ficabu::util::prng::Pcg32;
 
-fn art() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts")
-}
-
 struct Ctx {
     model: Model,
     params: ParamStore,
@@ -34,8 +30,8 @@ struct Ctx {
 
 fn ctx(model_name: &str) -> Ctx {
     let rt = Runtime::cpu().unwrap();
-    let meta = ModelMeta::load(art().join(model_name)).unwrap();
-    let shared = SharedMeta::load(art().join("shared")).unwrap();
+    let meta = ModelMeta::builtin(model_name).unwrap();
+    let shared = SharedMeta::builtin();
     let model = Model::load(&rt, meta.clone()).unwrap();
     let params = ParamStore::init(&meta, 42);
     let fimd = FimdEngine::new(&rt, &shared).unwrap();
