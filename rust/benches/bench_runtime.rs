@@ -1,49 +1,128 @@
-//! Runtime/L3 hot-path benches: module dispatch overhead, forward passes,
-//! per-segment backward, the full unlearning event, and the patch-GEMM
-//! module — the profile that drives the §Perf iteration log.
+//! Runtime/L3 hot-path benches: module dispatch overhead, the tiled
+//! GEMM core against the retained PR-1 naive kernels on paper-scale
+//! layer shapes (ResNet-18 / ViT-Base), the fused conv lowering, forward
+//! passes, and the full unlearning event — the profile that drives the
+//! §Performance iteration log.
+//!
+//! Emits `BENCH_runtime.json` at the repo root (per-case min/mean ms,
+//! GFLOP/s, thread count, git rev). `FICABU_BENCH_PRESET=smoke` shrinks
+//! sizes/iterations for the CI artifact-validity check.
 
 mod harness;
 
 use ficabu::config::{ModelMeta, SharedMeta};
 use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
 use ficabu::model::{Model, ParamStore};
+use ficabu::runtime::cpu::gemm;
+use ficabu::runtime::cpu::kernels::{naive, Conv};
+use ficabu::runtime::cpu::scratch::Scratch;
 use ficabu::runtime::{ModuleSpec, Runtime};
 use ficabu::tensor::Tensor;
 use ficabu::util::prng::Pcg32;
 use harness::Bench;
 
 const ART: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
+const OUT_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_runtime.json");
 
 fn main() {
     // artifacts root only hosts the run cache (checkpoints/importance);
     // inventories resolve to the builtins when no export exists
     std::env::set_var("FICABU_ARTIFACTS", ART);
+    let smoke = matches!(
+        std::env::var("FICABU_BENCH_PRESET").as_deref(),
+        Ok("smoke")
+    );
     let b = Bench::new("runtime");
+    println!(
+        "[runtime] gemm workers: {} (FICABU_THREADS to override){}",
+        gemm::effective_threads(),
+        if smoke { "  [smoke preset]" } else { "" }
+    );
     let rt = Runtime::cpu().unwrap();
     let shared = SharedMeta::builtin();
+    let mut rng = Pcg32::seeded(3);
+    let mut sc = Scratch::new();
+
+    // --- tiled GEMM core vs PR-1 naive kernels, paper-scale shapes ---
+    // ResNet-18 conv layers as im2col GEMMs (m = b*ho*wo, k = kh*kw*cin,
+    // n = cout) and ViT-Base encoder GEMMs (m = tokens).
+    let shapes: &[(&str, usize, usize, usize)] = if smoke {
+        &[
+            ("rn18 conv 16x16x64 (256x576x64)", 256, 576, 64),
+            ("vit qkv tiny (64x192x576)", 64, 192, 576),
+        ]
+    } else {
+        &[
+            ("rn18 conv2.x 56x56 64ch (3136x576x64)", 3136, 576, 64),
+            ("rn18 conv4.x 14x14 256ch (196x2304x256)", 196, 2304, 256),
+            ("vit-b qkv (197x768x2304)", 197, 768, 2304),
+            ("vit-b mlp-up (197x768x3072)", 197, 768, 3072),
+        ]
+    };
+    let (naive_iters, tiled_iters) = if smoke { (2, 5) } else { (5, 20) };
+    for &(name, m, k, n) in shapes {
+        let a = rng.normal_vec(m * k, 1.0);
+        let bm = rng.normal_vec(k * n, 1.0);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let naive_min = b.bench_flops(&format!("gemm/naive/{name}"), naive_iters, flops, || {
+            naive::matmul(&a, &bm, m, k, n)
+        });
+        let mut out = vec![0.0f32; m * n];
+        let tiled_min = b.bench_flops(&format!("gemm/tiled/{name}"), tiled_iters, flops, || {
+            gemm::matmul_into(&mut sc, &a, &bm, m, k, n, &mut out);
+            out[0]
+        });
+        println!(
+            "[runtime]   -> speedup {:5.2}x over naive ({name})",
+            naive_min / tiled_min
+        );
+    }
+
+    // --- conv: fused-packing lowering vs materialized im2col + naive ---
+    let cv = Conv { kh: 3, kw: 3, cin: 64, cout: 64, stride: 1 };
+    let (cb, ch, cw) = if smoke { (1, 16, 16) } else { (1, 56, 56) };
+    let (ho, wo) = cv.out_hw(ch, cw);
+    let x = rng.normal_vec(cb * ch * cw * cv.cin, 1.0);
+    let wk = rng.normal_vec(cv.kh * cv.kw * cv.cin * cv.cout, 0.5);
+    let cflops = 2.0 * (cb * ho * wo) as f64 * (cv.kh * cv.kw * cv.cin) as f64 * cv.cout as f64;
+    let conv_name = format!("3x3 {}ch @{}x{}", cv.cin, ch, cw);
+    let naive_min = b.bench_flops(&format!("conv/naive/{conv_name}"), naive_iters, cflops, || {
+        naive::conv_fwd(&cv, &x, &wk, cb, ch, cw)
+    });
+    let mut y = vec![0.0f32; cb * ho * wo * cv.cout];
+    let fused_min = b.bench_flops(&format!("conv/fused/{conv_name}"), tiled_iters, cflops, || {
+        cv.fwd_into(&mut sc, &x, &wk, cb, ch, cw, &mut y);
+        y[0]
+    });
+    println!(
+        "[runtime]   -> speedup {:5.2}x over naive (conv {conv_name})",
+        naive_min / fused_min
+    );
 
     // --- dispatch overhead: smallest module (loss_grad) ---
     let meta = ModelMeta::resolve("rn18slim").unwrap();
     let model = Model::load(&rt, meta.clone()).unwrap();
     let mb = meta.microbatch;
-    let mut rng = Pcg32::seeded(3);
-    let logits = Tensor::new(vec![mb, meta.num_classes],
-        rng.normal_vec(mb * meta.num_classes, 1.0)).unwrap();
+    let logits = Tensor::new(
+        vec![mb, meta.num_classes],
+        rng.normal_vec(mb * meta.num_classes, 1.0),
+    )
+    .unwrap();
     let mut onehot = Tensor::zeros(vec![mb, meta.num_classes]);
     for i in 0..mb {
         onehot.data[i * meta.num_classes + i % meta.num_classes] = 1.0;
     }
-    b.bench("dispatch: loss_grad module (8x20)", 200, || {
+    b.bench("dispatch: loss_grad module (8x20)", if smoke { 50 } else { 200 }, || {
         model.loss_grad(&logits, &onehot).unwrap()
     });
 
     // --- patch GEMM engine module (256^3) ---
-    let gemm = rt.load(&ModuleSpec::Gemm { shared: shared.clone() }).unwrap();
+    let gemm_mod = rt.load(&ModuleSpec::Gemm { shared: shared.clone() }).unwrap();
     let d = shared.gemm_demo;
-    let x = Tensor::new(vec![d, d], rng.normal_vec(d * d, 1.0)).unwrap();
-    let y = Tensor::new(vec![d, d], rng.normal_vec(d * d, 1.0)).unwrap();
-    b.bench("patch GEMM module 256x256x256", 50, || {
-        gemm.run(&[&x, &y]).unwrap()
+    let gx = Tensor::new(vec![d, d], rng.normal_vec(d * d, 1.0)).unwrap();
+    let gy = Tensor::new(vec![d, d], rng.normal_vec(d * d, 1.0)).unwrap();
+    b.bench("patch GEMM module 256x256x256", if smoke { 10 } else { 50 }, || {
+        gemm_mod.run(&[&gx, &gy]).unwrap()
     });
 
     // --- model passes ---
@@ -51,19 +130,32 @@ fn main() {
     let mut shape = vec![meta.batch];
     shape.extend_from_slice(&meta.input_shape);
     let xin = Tensor::new(shape.clone(), rng.normal_vec(shape.iter().product(), 1.0)).unwrap();
-    b.bench("fused logits fwd (B=64, rn18slim)", 10, || {
+    let pass_iters = if smoke { 2 } else { 10 };
+    b.bench("fused logits fwd (B=64, rn18slim)", pass_iters, || {
         model.logits(&params, &xin).unwrap()
     });
-    b.bench("cached segment-wise fwd (B=64)", 10, || {
+    b.bench("cached segment-wise fwd (B=64)", pass_iters, || {
         model.forward_cached(&params, &xin).unwrap()
     });
 
     // --- end-to-end unlearning event (Table IV inner loop) ---
-    let prep = exp::prepare("rn18slim", DatasetKind::Cifar20, &PrepareOpts::default()).unwrap();
-    b.bench("unlearning event: FiCABU (early stop)", 5, || {
-        exp::run_mode(&prep, 0, Mode::Ficabu, None).unwrap()
-    });
-    b.bench_once("unlearning event: SSD (all layers)", || {
-        exp::run_mode(&prep, 0, Mode::Ssd, None).unwrap()
-    });
+    let opts = if smoke {
+        PrepareOpts { train_steps: 40, importance_batches: 2, ..PrepareOpts::default() }
+    } else {
+        PrepareOpts::default()
+    };
+    let prep = exp::prepare("rn18slim", DatasetKind::Cifar20, &opts).unwrap();
+    b.bench(
+        "unlearning event: FiCABU (early stop)",
+        if smoke { 1 } else { 5 },
+        || exp::run_mode(&prep, 0, Mode::Ficabu, None).unwrap(),
+    );
+    if !smoke {
+        b.bench_once("unlearning event: SSD (all layers)", || {
+            exp::run_mode(&prep, 0, Mode::Ssd, None).unwrap()
+        });
+    }
+
+    b.write_json(OUT_JSON).expect("write BENCH_runtime.json");
+    println!("[runtime] wrote {OUT_JSON}");
 }

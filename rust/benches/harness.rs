@@ -1,21 +1,71 @@
 //! Minimal benchmark harness (no `criterion` in the offline vendor tree).
 //!
-//! `bench(name, iters, f)` reports min/mean over iterations after a warmup
-//! run; `bench_once` is for expensive end-to-end cases measured once.
+//! `bench(name, iters, f)` reports min/mean over iterations after a
+//! warmup run; `bench_flops` additionally derives GFLOP/s from a FLOP
+//! count; `bench_once` is for expensive end-to-end cases measured once.
+//! Every case is recorded, and `write_json` emits a machine-readable
+//! `BENCH_*.json` artifact (per-case min/mean ms and GFLOP/s, plus the
+//! GEMM worker count and git revision) for CI and cross-PR comparison.
 
+// Each bench binary uses a subset of the harness API.
+#![allow(dead_code)]
+
+use std::cell::RefCell;
 use std::time::Instant;
+
+use ficabu::runtime::cpu::gemm;
+use ficabu::util::json::Json;
+
+struct Case {
+    name: String,
+    iters: usize,
+    min_ms: f64,
+    mean_ms: f64,
+    flops: Option<f64>,
+}
+
+impl Case {
+    fn gflops(&self) -> Option<f64> {
+        // flops / (min_ms * 1e-3) / 1e9
+        self.flops.map(|fl| fl / (self.min_ms * 1e6))
+    }
+}
 
 pub struct Bench {
     pub suite: &'static str,
+    cases: RefCell<Vec<Case>>,
 }
 
 impl Bench {
     pub fn new(suite: &'static str) -> Bench {
         println!("=== bench suite: {suite} ===");
-        Bench { suite }
+        Bench { suite, cases: RefCell::new(Vec::new()) }
     }
 
-    pub fn bench<T>(&self, name: &str, iters: usize, mut f: impl FnMut() -> T) {
+    /// Time `f` over `iters` iterations (after one warmup); returns the
+    /// min time in ms.
+    pub fn bench<T>(&self, name: &str, iters: usize, f: impl FnMut() -> T) -> f64 {
+        self.run_case(name, iters, None, f)
+    }
+
+    /// Like [`Bench::bench`], with a FLOP count for GFLOP/s reporting.
+    pub fn bench_flops<T>(
+        &self,
+        name: &str,
+        iters: usize,
+        flops: f64,
+        f: impl FnMut() -> T,
+    ) -> f64 {
+        self.run_case(name, iters, Some(flops), f)
+    }
+
+    fn run_case<T>(
+        &self,
+        name: &str,
+        iters: usize,
+        flops: Option<f64>,
+        mut f: impl FnMut() -> T,
+    ) -> f64 {
         let _ = f(); // warmup
         let mut times = Vec::with_capacity(iters);
         for _ in 0..iters {
@@ -26,20 +76,67 @@ impl Bench {
         }
         let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
         let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let case = Case { name: name.to_string(), iters, min_ms: min, mean_ms: mean, flops };
+        let gf = match case.gflops() {
+            Some(g) => format!("   {g:8.2} GFLOP/s"),
+            None => String::new(),
+        };
         println!(
-            "[{}] {name:40} min {min:10.3} ms   mean {mean:10.3} ms   ({iters} iters)",
+            "[{}] {name:44} min {min:9.3} ms   mean {mean:9.3} ms{gf}   ({iters} iters)",
             self.suite
         );
+        self.cases.borrow_mut().push(case);
+        min
     }
 
     pub fn bench_once<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
         let out = f();
-        println!(
-            "[{}] {name:40} once {:10.3} ms",
-            self.suite,
-            t0.elapsed().as_secs_f64() * 1e3
-        );
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!("[{}] {name:44} once {ms:9.3} ms", self.suite);
+        self.cases.borrow_mut().push(Case {
+            name: name.to_string(),
+            iters: 1,
+            min_ms: ms,
+            mean_ms: ms,
+            flops: None,
+        });
         out
     }
+
+    /// Emit every recorded case as a JSON artifact at `path`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let cases: Vec<Json> = self
+            .cases
+            .borrow()
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("name", Json::Str(c.name.clone())),
+                    ("iters", Json::Num(c.iters as f64)),
+                    ("min_ms", Json::Num(c.min_ms)),
+                    ("mean_ms", Json::Num(c.mean_ms)),
+                    ("gflops", c.gflops().map(Json::Num).unwrap_or(Json::Null)),
+                ])
+            })
+            .collect();
+        let root = Json::obj(vec![
+            ("suite", Json::Str(self.suite.to_string())),
+            ("git_rev", Json::Str(git_rev())),
+            ("threads", Json::Num(gemm::effective_threads() as f64)),
+            ("cases", Json::Arr(cases)),
+        ]);
+        std::fs::write(path, format!("{root}\n"))
+    }
+}
+
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string())
 }

@@ -11,10 +11,12 @@
 //!
 //! All compute flows through the [`runtime::Backend`] seam:
 //!
-//! * **CpuBackend (default).** A pure-Rust interpreter with reference
-//!   GEMM / conv / FIMD / dampening kernels matching
-//!   `python/compile/kernels/ref.py`, driving model inventories built in
-//!   Rust ([`config::builtin`]). `cargo build && cargo test` works on a
+//! * **CpuBackend (default).** A pure-Rust interpreter whose GEMM /
+//!   conv / FIMD / dampening kernels match `python/compile/kernels/ref.py`
+//!   and run on a tiled, panel-packed, multi-threaded GEMM core
+//!   (`FICABU_THREADS`, see README §Performance) with a zero-alloc
+//!   scratch arena, driving model inventories built in Rust
+//!   ([`config::builtin`]). `cargo build && cargo test` works on a
 //!   stock stable toolchain with **no Python artifacts and no XLA** —
 //!   `make artifacts` is *not* required.
 //! * **XlaBackend (`backend-xla` feature, optional).** The original

@@ -1,0 +1,519 @@
+//! Cache-blocked, panel-packed GEMM core for the CpuBackend hot path.
+//!
+//! Classic three-level structure (the same discipline BLIS and the
+//! paper's patch-streaming GEMM engine use, scaled to a CPU):
+//!
+//! * an `MR x NR` register-tiled micro-kernel over fixed-size arrays the
+//!   compiler keeps in vector registers (f32, autovectorizable — no
+//!   intrinsics, no nightly features, no new crates);
+//! * `KC`-blocked panel packing: the A operand is repacked into
+//!   MR-interleaved micro-panels and B into NR-interleaved micro-panels
+//!   so the micro-kernel streams contiguously regardless of the logical
+//!   operand layout (N/T views, or im2col patches extracted on the fly);
+//! * multi-threading over disjoint row panels via `std::thread::scope`,
+//!   worker count from `std::thread::available_parallelism()` and
+//!   overridable with `FICABU_THREADS`.
+//!
+//! Packing goes through the [`ASrc`]/[`BSrc`] seams. [`Strided`] covers
+//! all dense N/T operand views, and [`Im2col`]/[`Im2colT`] materialize
+//! SAME-conv patch panels straight from the NHWC image, so `Conv` never
+//! builds the full `[b*ho*wo, kh*kw*cin]` patch matrix.
+//!
+//! Determinism: each output element is accumulated in the same order
+//! regardless of thread count (threads only partition rows), so results
+//! are bitwise identical for any `FICABU_THREADS` value.
+
+use std::thread;
+
+use super::kernels::Conv;
+use super::scratch::Scratch;
+
+/// Micro-tile rows. With NR=8 this gives 8 vector accumulators (128-bit
+/// lanes) plus broadcast/load temporaries — inside the 16-register
+/// budget of baseline x86-64, so nothing spills.
+pub const MR: usize = 4;
+/// Micro-tile columns (two 4-lane vectors per row).
+pub const NR: usize = 8;
+/// k-dimension block: an `MR x KC` A panel (8 KiB) plus one `KC x NR`
+/// B panel (16 KiB) stay L1-resident under the micro-kernel.
+pub const KC: usize = 512;
+
+/// Work (in FLOPs) below which forking threads costs more than it buys:
+/// scoped workers are spawned per call (no pool yet), at tens of µs per
+/// fork/join, so only GEMMs in the multi-ms single-thread range win.
+const PAR_MIN_FLOPS: usize = 1 << 23;
+
+/// Effective worker count: `FICABU_THREADS` if set to a positive
+/// integer (re-read per call so tests/operators can flip it live),
+/// else `available_parallelism()` (a syscall — cached once).
+pub fn effective_threads() -> usize {
+    static DEFAULT: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    match std::env::var("FICABU_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+    {
+        Some(v) if v >= 1 => v,
+        _ => *DEFAULT
+            .get_or_init(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(1)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pack sources
+// ---------------------------------------------------------------------------
+
+/// Left operand of a logical `[m,k] @ [k,n]` product, packed panel-wise.
+pub trait ASrc: Sync {
+    /// Fill `dst[p*MR + ii] = A[i0+ii, p0+p]` for `p < kc`, zero-padding
+    /// rows `ii >= mr`. `dst` is the `kc*MR` prefix of a micro-panel.
+    fn pack_a(&self, dst: &mut [f32], i0: usize, mr: usize, p0: usize, kc: usize);
+}
+
+/// Right operand, packed panel-wise.
+pub trait BSrc: Sync {
+    /// Fill `dst[p*NR + jj] = B[p0+p, j0+jj]` for `p < kc`, zero-padding
+    /// columns `jj >= nr`. `dst` is the `kc*NR` prefix of a micro-panel.
+    fn pack_b(&self, dst: &mut [f32], j0: usize, nr: usize, p0: usize, kc: usize);
+}
+
+/// Dense operand view with arbitrary row/column strides: element
+/// `(r, c)` lives at `data[r*rs + c*cs]`. Covers row-major operands
+/// (`cs = 1`) and transposed views (`rs = 1`) of both sides.
+pub struct Strided<'a> {
+    pub data: &'a [f32],
+    pub rs: usize,
+    pub cs: usize,
+}
+
+impl ASrc for Strided<'_> {
+    fn pack_a(&self, dst: &mut [f32], i0: usize, mr: usize, p0: usize, kc: usize) {
+        for ii in 0..MR {
+            if ii < mr {
+                let base = (i0 + ii) * self.rs + p0 * self.cs;
+                for p in 0..kc {
+                    dst[p * MR + ii] = self.data[base + p * self.cs];
+                }
+            } else {
+                for p in 0..kc {
+                    dst[p * MR + ii] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+impl BSrc for Strided<'_> {
+    fn pack_b(&self, dst: &mut [f32], j0: usize, nr: usize, p0: usize, kc: usize) {
+        for p in 0..kc {
+            let base = (p0 + p) * self.rs + j0 * self.cs;
+            let drow = &mut dst[p * NR..(p + 1) * NR];
+            for (jj, d) in drow.iter_mut().enumerate() {
+                *d = if jj < nr { self.data[base + jj * self.cs] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// The im2col patch matrix `[b*ho*wo, kh*kw*cin]` of a SAME-padded NHWC
+/// conv input, extracted panel-by-panel straight from the image — the
+/// full patch matrix is never materialized.
+pub struct Im2col<'a> {
+    pub x: &'a [f32],
+    pub conv: Conv,
+    pub batch: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl ASrc for Im2col<'_> {
+    fn pack_a(&self, dst: &mut [f32], i0: usize, mr: usize, p0: usize, kc: usize) {
+        let cv = &self.conv;
+        let (ho, wo) = cv.out_hw(self.h, self.w);
+        let (ph, pw) = (cv.kh / 2, cv.kw / 2);
+        debug_assert!(i0 + mr <= self.batch * ho * wo, "patch rows out of range");
+        for ii in 0..MR {
+            if ii >= mr {
+                for p in 0..kc {
+                    dst[p * MR + ii] = 0.0;
+                }
+                continue;
+            }
+            let r = i0 + ii;
+            let bi = r / (ho * wo);
+            let rem = r % (ho * wo);
+            let (oy, ox) = (rem / wo, rem % wo);
+            // walk (ky, kx, c) incrementally over the k range
+            let mut c = p0 % cv.cin;
+            let kyx = p0 / cv.cin;
+            let (mut ky, mut kx) = (kyx / cv.kw, kyx % cv.kw);
+            for p in 0..kc {
+                let iy = (oy * cv.stride + ky) as isize - ph as isize;
+                let ix = (ox * cv.stride + kx) as isize - pw as isize;
+                dst[p * MR + ii] = if iy < 0
+                    || iy >= self.h as isize
+                    || ix < 0
+                    || ix >= self.w as isize
+                {
+                    0.0
+                } else {
+                    self.x[((bi * self.h + iy as usize) * self.w + ix as usize) * cv.cin + c]
+                };
+                c += 1;
+                if c == cv.cin {
+                    c = 0;
+                    kx += 1;
+                    if kx == cv.kw {
+                        kx = 0;
+                        ky += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Transpose of [`Im2col`]: the logical `[kh*kw*cin, b*ho*wo]` operand
+/// of the grad-wrt-weights product `dW = colsᵀ @ gy`.
+pub struct Im2colT<'a> {
+    pub x: &'a [f32],
+    pub conv: Conv,
+    pub batch: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl ASrc for Im2colT<'_> {
+    fn pack_a(&self, dst: &mut [f32], i0: usize, mr: usize, p0: usize, kc: usize) {
+        let cv = &self.conv;
+        let (ho, wo) = cv.out_hw(self.h, self.w);
+        let (ph, pw) = (cv.kh / 2, cv.kw / 2);
+        debug_assert!(p0 + kc <= self.batch * ho * wo, "patch columns out of range");
+        // decompose the row block's kernel coordinates once
+        let mut kdec = [(0usize, 0usize, 0usize); MR];
+        for (ii, d) in kdec.iter_mut().enumerate().take(mr) {
+            let i = i0 + ii;
+            let kyx = i / cv.cin;
+            *d = (kyx / cv.kw, kyx % cv.kw, i % cv.cin); // (ky, kx, c)
+        }
+        for p in 0..kc {
+            let r = p0 + p;
+            let bi = r / (ho * wo);
+            let rem = r % (ho * wo);
+            let (oy, ox) = (rem / wo, rem % wo);
+            let drow = &mut dst[p * MR..(p + 1) * MR];
+            for (ii, d) in drow.iter_mut().enumerate() {
+                *d = if ii < mr {
+                    let (ky, kx, c) = kdec[ii];
+                    let iy = (oy * cv.stride + ky) as isize - ph as isize;
+                    let ix = (ox * cv.stride + kx) as isize - pw as isize;
+                    if iy < 0 || iy >= self.h as isize || ix < 0 || ix >= self.w as isize {
+                        0.0
+                    } else {
+                        self.x[((bi * self.h + iy as usize) * self.w + ix as usize) * cv.cin + c]
+                    }
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// micro-kernel + panel loop
+// ---------------------------------------------------------------------------
+
+/// `acc += Ap @ Bp` over one `kc`-deep packed panel pair. Fixed-size
+/// inner tiles so the accumulators live in vector registers.
+#[inline(always)]
+fn micro_kernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for p in 0..kc {
+        let ar: &[f32; MR] = ap[p * MR..(p + 1) * MR].try_into().unwrap();
+        let br: &[f32; NR] = bp[p * NR..(p + 1) * NR].try_into().unwrap();
+        for i in 0..MR {
+            let a = ar[i];
+            for j in 0..NR {
+                acc[i][j] += a * br[j];
+            }
+        }
+    }
+}
+
+/// Write (`first`) or accumulate (`!first`) the valid `mr x nr` corner
+/// of a micro-tile into `out` (row-major, leading dimension `n`).
+#[inline]
+fn store_tile(
+    out: &mut [f32],
+    n: usize,
+    r0: usize,
+    j0: usize,
+    mr: usize,
+    nr: usize,
+    acc: &[[f32; NR]; MR],
+    first: bool,
+) {
+    for ii in 0..mr {
+        let row = &mut out[(r0 + ii) * n + j0..][..nr];
+        if first {
+            for (o, v) in row.iter_mut().zip(&acc[ii][..nr]) {
+                *o = *v;
+            }
+        } else {
+            for (o, v) in row.iter_mut().zip(&acc[ii][..nr]) {
+                *o += *v;
+            }
+        }
+    }
+}
+
+/// One worker's share: rows `[lo, hi)` of the output, written into
+/// `out_chunk` (whose row 0 is global row `lo`).
+fn run_rows<A: ASrc>(
+    a: &A,
+    bpack: &[f32],
+    lo: usize,
+    hi: usize,
+    k: usize,
+    n: usize,
+    njp: usize,
+    nkb: usize,
+    out_chunk: &mut [f32],
+) {
+    let mut apack = [0.0f32; MR * KC];
+    let slot = KC * NR;
+    let mut ip = lo;
+    while ip < hi {
+        let mr = MR.min(hi - ip);
+        for kb in 0..nkb {
+            let p0 = kb * KC;
+            let kc = KC.min(k - p0);
+            a.pack_a(&mut apack[..kc * MR], ip, mr, p0, kc);
+            for jp in 0..njp {
+                let j0 = jp * NR;
+                let nr = NR.min(n - j0);
+                let bp = &bpack[(kb * njp + jp) * slot..][..kc * NR];
+                let mut acc = [[0.0f32; NR]; MR];
+                micro_kernel(kc, &apack, bp, &mut acc);
+                store_tile(out_chunk, n, ip - lo, j0, mr, nr, &acc, kb == 0);
+            }
+        }
+        ip += MR;
+    }
+}
+
+/// `out[m,n] = A[m,k] @ B[k,n]` through the packed sources, with an
+/// explicit worker count (threads only partition rows, so the result is
+/// bitwise independent of `threads`).
+pub fn gemm_threads<A: ASrc, B: BSrc>(
+    scratch: &mut Scratch,
+    a: &A,
+    b: &B,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(out.len(), m * n, "gemm: out buffer is {}, want {m}x{n}", out.len());
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let njp = n.div_ceil(NR);
+    let nkb = k.div_ceil(KC);
+    let slot = KC * NR;
+
+    // pack B once, NR-interleaved per (k-block, column-panel) slot
+    let mut bpack = scratch.take_any(nkb * njp * slot);
+    for kb in 0..nkb {
+        let p0 = kb * KC;
+        let kc = KC.min(k - p0);
+        for jp in 0..njp {
+            let j0 = jp * NR;
+            let nr = NR.min(n - j0);
+            let off = (kb * njp + jp) * slot;
+            b.pack_b(&mut bpack[off..off + kc * NR], j0, nr, p0, kc);
+        }
+    }
+
+    let panels = m.div_ceil(MR);
+    let flops = 2usize
+        .saturating_mul(m)
+        .saturating_mul(n)
+        .saturating_mul(k);
+    let t = if flops < PAR_MIN_FLOPS { 1 } else { threads.clamp(1, panels) };
+
+    if t <= 1 {
+        run_rows(a, &bpack, 0, m, k, n, njp, nkb, out);
+    } else {
+        // contiguous panel-aligned row chunks, one per worker
+        let mut chunks: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(t);
+        let mut rest: &mut [f32] = out;
+        let mut lo = 0usize;
+        for ti in 0..t {
+            let hi = ((panels * (ti + 1) / t) * MR).min(m);
+            let (chunk, tail) = rest.split_at_mut((hi - lo) * n);
+            chunks.push((lo, hi, chunk));
+            rest = tail;
+            lo = hi;
+        }
+        let bp: &[f32] = &bpack;
+        thread::scope(|s| {
+            let mut iter = chunks.into_iter();
+            let (lo0, hi0, chunk0) = iter.next().expect("at least one worker");
+            for (lo_i, hi_i, chunk) in iter {
+                s.spawn(move || run_rows(a, bp, lo_i, hi_i, k, n, njp, nkb, chunk));
+            }
+            run_rows(a, bp, lo0, hi0, k, n, njp, nkb, chunk0);
+        });
+    }
+    scratch.put(bpack);
+}
+
+/// [`gemm_threads`] with the worker count from the environment.
+pub fn gemm<A: ASrc, B: BSrc>(
+    scratch: &mut Scratch,
+    a: &A,
+    b: &B,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    gemm_threads(scratch, a, b, m, k, n, out, effective_threads());
+}
+
+// ---------------------------------------------------------------------------
+// dense entry points (the ref_matmul family)
+// ---------------------------------------------------------------------------
+
+/// `out = a[m,k] @ b[k,n]` (row-major).
+pub fn matmul_into(
+    scratch: &mut Scratch,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    gemm(
+        scratch,
+        &Strided { data: a, rs: k, cs: 1 },
+        &Strided { data: b, rs: n, cs: 1 },
+        m,
+        k,
+        n,
+        out,
+    );
+}
+
+/// `out = a[r,m]ᵀ @ b[r,n]` — the grad-wrt-weights product.
+pub fn matmul_tn_into(
+    scratch: &mut Scratch,
+    a: &[f32],
+    b: &[f32],
+    r: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), r * m);
+    debug_assert_eq!(b.len(), r * n);
+    gemm(
+        scratch,
+        &Strided { data: a, rs: 1, cs: m },
+        &Strided { data: b, rs: n, cs: 1 },
+        m,
+        r,
+        n,
+        out,
+    );
+}
+
+/// `out = a[m,k] @ b[n,k]ᵀ` — the grad-wrt-inputs product.
+pub fn matmul_nt_into(
+    scratch: &mut Scratch,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    gemm(
+        scratch,
+        &Strided { data: a, rs: k, cs: 1 },
+        &Strided { data: b, rs: 1, cs: k },
+        m,
+        k,
+        n,
+        out,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_small_matmul_exact() {
+        let mut sc = Scratch::new();
+        let mut out = vec![0.0f32; 4];
+        matmul_into(&mut sc, &[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2, 2, 2, &mut out);
+        assert_eq!(out, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn k_zero_zeroes_out() {
+        let mut sc = Scratch::new();
+        let mut out = vec![7.0f32; 6];
+        gemm(
+            &mut sc,
+            &Strided { data: &[], rs: 0, cs: 1 },
+            &Strided { data: &[], rs: 3, cs: 1 },
+            2,
+            0,
+            3,
+            &mut out,
+        );
+        assert_eq!(out, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn variants_are_bitwise_consistent() {
+        // identical logical operands through all three dense views give
+        // identical packed panels, hence identical results
+        let mut sc = Scratch::new();
+        let (m, k, n) = (5, 9, 7);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.21).cos()).collect();
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for p in 0..k {
+                at[p * m + i] = a[i * k + p];
+            }
+        }
+        let mut bt = vec![0.0f32; n * k];
+        for p in 0..k {
+            for j in 0..n {
+                bt[j * k + p] = b[p * n + j];
+            }
+        }
+        let mut y = vec![0.0f32; m * n];
+        let mut y_tn = vec![0.0f32; m * n];
+        let mut y_nt = vec![0.0f32; m * n];
+        matmul_into(&mut sc, &a, &b, m, k, n, &mut y);
+        matmul_tn_into(&mut sc, &at, &b, k, m, n, &mut y_tn);
+        matmul_nt_into(&mut sc, &a, &bt, m, k, n, &mut y_nt);
+        assert_eq!(y, y_tn);
+        assert_eq!(y, y_nt);
+    }
+}

@@ -1,12 +1,18 @@
-//! Reference kernels for the CpuBackend.
+//! Kernels for the CpuBackend.
 //!
 //! Semantics mirror the pure-jnp oracles in `python/compile/kernels/ref.py`
 //! (GEMM, FIMD update, dampening, SAME conv) and the shared primitives in
-//! `python/compile/model.py` (GroupNorm, LayerNorm, gelu, softmax). These
-//! are correctness references, not tuned BLAS: plain row-major loops
-//! arranged so the inner dimension is contiguous (the compiler
-//! autovectorizes the `axpy`/dot shapes), with conv lowered through
-//! im2col onto the GEMM — the same structure the patch engine streams.
+//! `python/compile/model.py` (GroupNorm, LayerNorm, gelu, softmax).
+//!
+//! The GEMM family and the conv lowering now run on the tuned compute
+//! core in [`super::gemm`]: cache-blocked panel packing, a register-tiled
+//! micro-kernel, and row-panel multi-threading (`FICABU_THREADS`), with
+//! conv patch extraction fused into the packing step so the im2col
+//! matrix is never materialized. The PR-1 triple-loop references are
+//! retained in [`naive`] as correctness oracles and bench baselines.
+//! Hot paths should use the `_into` variants together with a
+//! [`Scratch`] arena; the `Vec`-returning forms are conveniences for
+//! tests and one-shot callers.
 
 // Index-heavy numeric loops read better with explicit ranges.
 #![allow(clippy::needless_range_loop)]
@@ -14,66 +20,31 @@
 
 use crate::config::builtin::NORM_EPS;
 
+use super::gemm;
+use super::scratch::Scratch;
+
 // ---------------------------------------------------------------------------
-// GEMM family (ref_matmul)
+// GEMM family (ref_matmul) — tiled core, Vec conveniences
 // ---------------------------------------------------------------------------
 
 /// `a[m,k] @ b[k,n] -> [m,n]` (row-major, f32 accumulate).
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av != 0.0 {
-                let brow = &b[p * n..(p + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
-    }
+    gemm::matmul_into(&mut Scratch::new(), a, b, m, k, n, &mut out);
     out
 }
 
 /// `a[r,m]^T @ b[r,n] -> [m,n]` — the grad-wrt-weights product.
 pub fn matmul_tn(a: &[f32], b: &[f32], r: usize, m: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), r * m);
-    debug_assert_eq!(b.len(), r * n);
     let mut out = vec![0.0f32; m * n];
-    for p in 0..r {
-        let arow = &a[p * m..(p + 1) * m];
-        let brow = &b[p * n..(p + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av != 0.0 {
-                let orow = &mut out[i * n..(i + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
-    }
+    gemm::matmul_tn_into(&mut Scratch::new(), a, b, r, m, n, &mut out);
     out
 }
 
 /// `a[m,k] @ b[n,k]^T -> [m,n]` — the grad-wrt-inputs product.
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            out[i * n + j] = acc;
-        }
-    }
+    gemm::matmul_nt_into(&mut Scratch::new(), a, b, m, k, n, &mut out);
     out
 }
 
@@ -98,7 +69,7 @@ pub fn col_sum(x: &[f32], cols: usize) -> Vec<f32> {
 }
 
 // ---------------------------------------------------------------------------
-// SAME conv, NHWC/HWIO (ref_conv2d) via im2col
+// SAME conv, NHWC/HWIO (ref_conv2d) — im2col fused into GEMM packing
 // ---------------------------------------------------------------------------
 
 /// Static conv geometry: kernel `[kh, kw, cin, cout]`, SAME padding
@@ -121,44 +92,110 @@ impl Conv {
         )
     }
 
-    /// Lower `x[b,h,w,cin]` into patch rows `[b*ho*wo, kh*kw*cin]`.
-    fn im2col(&self, x: &[f32], b: usize, h: usize, w: usize) -> Vec<f32> {
+    /// Forward conv into `y[b,ho,wo,cout]`. Patch rows are extracted
+    /// during GEMM panel packing — the `[b*ho*wo, kh*kw*cin]` im2col
+    /// matrix is never materialized.
+    pub fn fwd_into(
+        &self,
+        scratch: &mut Scratch,
+        x: &[f32],
+        wk: &[f32],
+        b: usize,
+        h: usize,
+        w: usize,
+        y: &mut [f32],
+    ) {
         let (ho, wo) = self.out_hw(h, w);
-        let (ph, pw) = (self.kh / 2, self.kw / 2);
         let kk = self.kh * self.kw * self.cin;
-        let mut cols = vec![0.0f32; b * ho * wo * kk];
-        for bi in 0..b {
-            for oy in 0..ho {
-                for ox in 0..wo {
-                    let row = ((bi * ho + oy) * wo + ox) * kk;
-                    for ky in 0..self.kh {
-                        let iy = (oy * self.stride + ky) as isize - ph as isize;
-                        if iy < 0 || iy >= h as isize {
-                            continue;
-                        }
-                        for kx in 0..self.kw {
-                            let ix = (ox * self.stride + kx) as isize - pw as isize;
-                            if ix < 0 || ix >= w as isize {
-                                continue;
-                            }
-                            let src = ((bi * h + iy as usize) * w + ix as usize) * self.cin;
-                            let dst = row + (ky * self.kw + kx) * self.cin;
-                            cols[dst..dst + self.cin]
-                                .copy_from_slice(&x[src..src + self.cin]);
-                        }
-                    }
-                }
-            }
-        }
-        cols
+        debug_assert_eq!(x.len(), b * h * w * self.cin);
+        debug_assert_eq!(wk.len(), kk * self.cout);
+        gemm::gemm(
+            scratch,
+            &gemm::Im2col { x, conv: *self, batch: b, h, w },
+            &gemm::Strided { data: wk, rs: self.cout, cs: 1 },
+            b * ho * wo,
+            kk,
+            self.cout,
+            y,
+        );
     }
 
-    /// Scatter-add of patch-row grads back onto the input image.
-    fn col2im(&self, dcols: &[f32], b: usize, h: usize, w: usize) -> Vec<f32> {
+    /// Forward conv: `y[b,ho,wo,cout]` (allocating convenience).
+    pub fn fwd(&self, x: &[f32], wk: &[f32], b: usize, h: usize, w: usize) -> Vec<f32> {
+        let (ho, wo) = self.out_hw(h, w);
+        let mut y = vec![0.0f32; b * ho * wo * self.cout];
+        self.fwd_into(&mut Scratch::new(), x, wk, b, h, w, &mut y);
+        y
+    }
+
+    /// VJP into `dx[b,h,w,cin]` and `dw[kh,kw,cin,cout]` for output
+    /// grads `gy[b,ho,wo,cout]`. The weight-grad GEMM reads its patch
+    /// operand straight from the image (fused packing); only the
+    /// patch-grad matrix for the col2im scatter is staged in scratch.
+    pub fn bwd_into(
+        &self,
+        scratch: &mut Scratch,
+        x: &[f32],
+        wk: &[f32],
+        gy: &[f32],
+        b: usize,
+        h: usize,
+        w: usize,
+        dx: &mut [f32],
+        dw: &mut [f32],
+    ) {
+        let (ho, wo) = self.out_hw(h, w);
+        let rows = b * ho * wo;
+        let kk = self.kh * self.kw * self.cin;
+        debug_assert_eq!(gy.len(), rows * self.cout);
+        // dW = colsᵀ @ gy
+        gemm::gemm(
+            scratch,
+            &gemm::Im2colT { x, conv: *self, batch: b, h, w },
+            &gemm::Strided { data: gy, rs: self.cout, cs: 1 },
+            kk,
+            rows,
+            self.cout,
+            dw,
+        );
+        // dcols = gy @ wkᵀ, then scatter-add back onto the image
+        let mut dcols = scratch.take_any(rows * kk);
+        gemm::gemm(
+            scratch,
+            &gemm::Strided { data: gy, rs: self.cout, cs: 1 },
+            &gemm::Strided { data: wk, rs: 1, cs: self.cout },
+            rows,
+            self.cout,
+            kk,
+            &mut dcols,
+        );
+        self.col2im_into(&dcols, b, h, w, dx);
+        scratch.put(dcols);
+    }
+
+    /// VJP: returns `(dx, dw)` (allocating convenience).
+    pub fn bwd(
+        &self,
+        x: &[f32],
+        wk: &[f32],
+        gy: &[f32],
+        b: usize,
+        h: usize,
+        w: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut dx = vec![0.0f32; b * h * w * self.cin];
+        let mut dw = vec![0.0f32; self.kh * self.kw * self.cin * self.cout];
+        self.bwd_into(&mut Scratch::new(), x, wk, gy, b, h, w, &mut dx, &mut dw);
+        (dx, dw)
+    }
+
+    /// Scatter-add of patch-row grads back onto the input image
+    /// (`dx` is fully overwritten).
+    fn col2im_into(&self, dcols: &[f32], b: usize, h: usize, w: usize, dx: &mut [f32]) {
         let (ho, wo) = self.out_hw(h, w);
         let (ph, pw) = (self.kh / 2, self.kw / 2);
         let kk = self.kh * self.kw * self.cin;
-        let mut dx = vec![0.0f32; b * h * w * self.cin];
+        dx.fill(0.0);
         for bi in 0..b {
             for oy in 0..ho {
                 for ox in 0..wo {
@@ -183,19 +220,121 @@ impl Conv {
                 }
             }
         }
-        dx
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PR-1 reference loops — oracles + bench baselines
+// ---------------------------------------------------------------------------
+
+/// The PR-1 triple-loop reference kernels, kept as correctness oracles
+/// for the tiled core (property tests in `tests/gemm_tiled.rs`) and as
+/// the measured baseline in `benches/bench_runtime.rs`.
+///
+/// Branch-free: the old `if av != 0.0` skip in the dense inner loops
+/// pessimized dense panels (a data-dependent branch per k step) and the
+/// tiled kernel makes it obsolete. No current GEMM operand is provably
+/// sparse — the dampening masks never feed a matmul — so no sparsity
+/// skipping survives anywhere.
+pub mod naive {
+    use super::Conv;
+
+    /// `a[m,k] @ b[k,n] -> [m,n]`, axpy-ordered triple loop.
+    pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
     }
 
-    /// Forward conv: `y[b,ho,wo,cout]`.
-    pub fn fwd(&self, x: &[f32], wk: &[f32], b: usize, h: usize, w: usize) -> Vec<f32> {
-        let (ho, wo) = self.out_hw(h, w);
-        let cols = self.im2col(x, b, h, w);
-        matmul(&cols, wk, b * ho * wo, self.kh * self.kw * self.cin, self.cout)
+    /// `a[r,m]^T @ b[r,n] -> [m,n]`.
+    pub fn matmul_tn(a: &[f32], b: &[f32], r: usize, m: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), r * m);
+        debug_assert_eq!(b.len(), r * n);
+        let mut out = vec![0.0f32; m * n];
+        for p in 0..r {
+            let arow = &a[p * m..(p + 1) * m];
+            let brow = &b[p * n..(p + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
     }
 
-    /// VJP: returns `(dx, dw)` for output grads `gy[b,ho,wo,cout]`.
-    pub fn bwd(
-        &self,
+    /// `a[m,k] @ b[n,k]^T -> [m,n]`.
+    pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// Materialize `x[b,h,w,cin]` into patch rows `[b*ho*wo, kh*kw*cin]`.
+    pub fn im2col(cv: &Conv, x: &[f32], b: usize, h: usize, w: usize) -> Vec<f32> {
+        let (ho, wo) = cv.out_hw(h, w);
+        let (ph, pw) = (cv.kh / 2, cv.kw / 2);
+        let kk = cv.kh * cv.kw * cv.cin;
+        let mut cols = vec![0.0f32; b * ho * wo * kk];
+        for bi in 0..b {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let row = ((bi * ho + oy) * wo + ox) * kk;
+                    for ky in 0..cv.kh {
+                        let iy = (oy * cv.stride + ky) as isize - ph as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..cv.kw {
+                            let ix = (ox * cv.stride + kx) as isize - pw as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let src = ((bi * h + iy as usize) * w + ix as usize) * cv.cin;
+                            let dst = row + (ky * cv.kw + kx) * cv.cin;
+                            cols[dst..dst + cv.cin].copy_from_slice(&x[src..src + cv.cin]);
+                        }
+                    }
+                }
+            }
+        }
+        cols
+    }
+
+    /// Forward conv through a materialized im2col matrix.
+    pub fn conv_fwd(cv: &Conv, x: &[f32], wk: &[f32], b: usize, h: usize, w: usize) -> Vec<f32> {
+        let (ho, wo) = cv.out_hw(h, w);
+        let cols = im2col(cv, x, b, h, w);
+        matmul(&cols, wk, b * ho * wo, cv.kh * cv.kw * cv.cin, cv.cout)
+    }
+
+    /// Conv VJP `(dx, dw)` through a materialized im2col matrix.
+    pub fn conv_bwd(
+        cv: &Conv,
         x: &[f32],
         wk: &[f32],
         gy: &[f32],
@@ -203,13 +342,14 @@ impl Conv {
         h: usize,
         w: usize,
     ) -> (Vec<f32>, Vec<f32>) {
-        let (ho, wo) = self.out_hw(h, w);
+        let (ho, wo) = cv.out_hw(h, w);
         let rows = b * ho * wo;
-        let kk = self.kh * self.kw * self.cin;
-        let cols = self.im2col(x, b, h, w);
-        let dw = matmul_tn(&cols, gy, rows, kk, self.cout);
-        let dcols = matmul_nt(gy, wk, rows, self.cout, kk);
-        let dx = self.col2im(&dcols, b, h, w);
+        let kk = cv.kh * cv.kw * cv.cin;
+        let cols = im2col(cv, x, b, h, w);
+        let dw = matmul_tn(&cols, gy, rows, kk, cv.cout);
+        let dcols = matmul_nt(gy, wk, rows, cv.cout, kk);
+        let mut dx = vec![0.0f32; b * h * w * cv.cin];
+        cv.col2im_into(&dcols, b, h, w, &mut dx);
         (dx, dw)
     }
 }
@@ -218,9 +358,10 @@ impl Conv {
 // Normalization (model.py group_norm / layer_norm)
 // ---------------------------------------------------------------------------
 
-/// GroupNorm over `[b, hw, c]` with `g = min(groups, c)` channel groups:
-/// per (sample, group) statistics over the spatial x group-channel set.
-pub fn group_norm_fwd(
+/// GroupNorm over `[b, hw, c]` with `g = min(groups, c)` channel groups
+/// into a caller-provided (zeroed) `y`: residual channels beyond `g *
+/// (c/g)` are left untouched, matching the allocating form.
+pub fn group_norm_fwd_into(
     x: &[f32],
     b: usize,
     hw: usize,
@@ -228,11 +369,12 @@ pub fn group_norm_fwd(
     groups: usize,
     gamma: &[f32],
     beta: &[f32],
-) -> Vec<f32> {
+    y: &mut [f32],
+) {
+    debug_assert_eq!(y.len(), x.len());
     let g = groups.min(c);
     let cg = c / g;
     let m = (hw * cg) as f32;
-    let mut y = vec![0.0f32; x.len()];
     for bi in 0..b {
         for gi in 0..g {
             let (mu, inv) = group_stats(x, bi, gi, hw, c, cg, m);
@@ -246,6 +388,20 @@ pub fn group_norm_fwd(
             }
         }
     }
+}
+
+/// GroupNorm forward (allocating convenience).
+pub fn group_norm_fwd(
+    x: &[f32],
+    b: usize,
+    hw: usize,
+    c: usize,
+    groups: usize,
+    gamma: &[f32],
+    beta: &[f32],
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; x.len()];
+    group_norm_fwd_into(x, b, hw, c, groups, gamma, beta, &mut y);
     y
 }
 
@@ -277,8 +433,9 @@ fn group_stats(
     (mu, 1.0 / (var / m + NORM_EPS).sqrt())
 }
 
-/// GroupNorm VJP: `(dx, dgamma, dbeta)`.
-pub fn group_norm_bwd(
+/// GroupNorm VJP into a caller-provided (zeroed) `dx`; returns
+/// `(dgamma, dbeta)`.
+pub fn group_norm_bwd_into(
     x: &[f32],
     b: usize,
     hw: usize,
@@ -286,11 +443,12 @@ pub fn group_norm_bwd(
     groups: usize,
     gamma: &[f32],
     gy: &[f32],
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    dx: &mut [f32],
+) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(dx.len(), x.len());
     let g = groups.min(c);
     let cg = c / g;
     let m = (hw * cg) as f32;
-    let mut dx = vec![0.0f32; x.len()];
     let mut dgamma = vec![0.0f32; c];
     let mut dbeta = vec![0.0f32; c];
     for bi in 0..b {
@@ -322,12 +480,34 @@ pub fn group_norm_bwd(
             }
         }
     }
+    (dgamma, dbeta)
+}
+
+/// GroupNorm VJP: `(dx, dgamma, dbeta)` (allocating convenience).
+pub fn group_norm_bwd(
+    x: &[f32],
+    b: usize,
+    hw: usize,
+    c: usize,
+    groups: usize,
+    gamma: &[f32],
+    gy: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; x.len()];
+    let (dgamma, dbeta) = group_norm_bwd_into(x, b, hw, c, groups, gamma, gy, &mut dx);
     (dx, dgamma, dbeta)
 }
 
-/// LayerNorm over the last dim of `[rows, d]`.
-pub fn layer_norm_fwd(x: &[f32], rows: usize, d: usize, gamma: &[f32], beta: &[f32]) -> Vec<f32> {
-    let mut y = vec![0.0f32; x.len()];
+/// LayerNorm over the last dim of `[rows, d]` into `y` (fully written).
+pub fn layer_norm_fwd_into(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    y: &mut [f32],
+) {
+    debug_assert_eq!(y.len(), x.len());
     for i in 0..rows {
         let r = &x[i * d..(i + 1) * d];
         let (mu, inv) = row_stats(r);
@@ -336,6 +516,12 @@ pub fn layer_norm_fwd(x: &[f32], rows: usize, d: usize, gamma: &[f32], beta: &[f
             o[j] = (r[j] - mu) * inv * gamma[j] + beta[j];
         }
     }
+}
+
+/// LayerNorm forward (allocating convenience).
+pub fn layer_norm_fwd(x: &[f32], rows: usize, d: usize, gamma: &[f32], beta: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0f32; x.len()];
+    layer_norm_fwd_into(x, rows, d, gamma, beta, &mut y);
     y
 }
 
@@ -346,16 +532,17 @@ fn row_stats(r: &[f32]) -> (f32, f32) {
     (mu, 1.0 / (var + NORM_EPS).sqrt())
 }
 
-/// LayerNorm VJP: `(dx, dgamma, dbeta)`.
-pub fn layer_norm_bwd(
+/// LayerNorm VJP into `dx` (fully written); returns `(dgamma, dbeta)`.
+pub fn layer_norm_bwd_into(
     x: &[f32],
     rows: usize,
     d: usize,
     gamma: &[f32],
     gy: &[f32],
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    dx: &mut [f32],
+) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(dx.len(), x.len());
     let m = d as f32;
-    let mut dx = vec![0.0f32; x.len()];
     let mut dgamma = vec![0.0f32; d];
     let mut dbeta = vec![0.0f32; d];
     for i in 0..rows {
@@ -379,6 +566,19 @@ pub fn layer_norm_bwd(
             o[j] = inv * (dxn - s1 / m - xn * s2 / m);
         }
     }
+    (dgamma, dbeta)
+}
+
+/// LayerNorm VJP: `(dx, dgamma, dbeta)` (allocating convenience).
+pub fn layer_norm_bwd(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    gamma: &[f32],
+    gy: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; x.len()];
+    let (dgamma, dbeta) = layer_norm_bwd_into(x, rows, d, gamma, gy, &mut dx);
     (dx, dgamma, dbeta)
 }
 
@@ -406,27 +606,49 @@ pub fn relu_bwd(pre: &[f32], g: &mut [f32]) {
 const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi)
 const GELU_A: f32 = 0.044_715;
 
-/// Tanh-approximate gelu (jax.nn.gelu default).
-pub fn gelu(x: &[f32]) -> Vec<f32> {
-    x.iter()
-        .map(|&v| {
-            let u = GELU_C * (v + GELU_A * v * v * v);
-            0.5 * v * (1.0 + u.tanh())
-        })
-        .collect()
+#[inline]
+fn gelu_scalar(v: f32) -> f32 {
+    let u = GELU_C * (v + GELU_A * v * v * v);
+    0.5 * v * (1.0 + u.tanh())
 }
 
-/// Gelu VJP: `g * gelu'(x)`.
+/// Tanh-approximate gelu (jax.nn.gelu default) into `out`.
+pub fn gelu_into(x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = gelu_scalar(v);
+    }
+}
+
+/// Tanh-approximate gelu in place.
+pub fn gelu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = gelu_scalar(*v);
+    }
+}
+
+/// Tanh-approximate gelu (allocating convenience).
+pub fn gelu(x: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    gelu_into(x, &mut out);
+    out
+}
+
+/// Gelu VJP in place: `g *= gelu'(x)`.
+pub fn gelu_bwd_inplace(x: &[f32], g: &mut [f32]) {
+    for (gv, &v) in g.iter_mut().zip(x) {
+        let u = GELU_C * (v + GELU_A * v * v * v);
+        let t = u.tanh();
+        let du = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
+        *gv *= 0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du;
+    }
+}
+
+/// Gelu VJP: `g * gelu'(x)` (allocating convenience).
 pub fn gelu_bwd(x: &[f32], g: &[f32]) -> Vec<f32> {
-    x.iter()
-        .zip(g)
-        .map(|(&v, &gv)| {
-            let u = GELU_C * (v + GELU_A * v * v * v);
-            let t = u.tanh();
-            let du = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
-            gv * (0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du)
-        })
-        .collect()
+    let mut out = g.to_vec();
+    gelu_bwd_inplace(x, &mut out);
+    out
 }
 
 /// Row-wise softmax in place over `[rows, cols]`.
@@ -444,9 +666,9 @@ pub fn softmax_rows(x: &mut [f32], cols: usize) {
     }
 }
 
-/// Softmax VJP per row: `ds = s * (g - <g, s>)`.
-pub fn softmax_bwd(s: &[f32], g: &[f32], cols: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; s.len()];
+/// Softmax VJP per row into `out`: `ds = s * (g - <g, s>)`.
+pub fn softmax_bwd_into(s: &[f32], g: &[f32], cols: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), s.len());
     for ((srow, grow), orow) in s
         .chunks_exact(cols)
         .zip(g.chunks_exact(cols))
@@ -457,6 +679,12 @@ pub fn softmax_bwd(s: &[f32], g: &[f32], cols: usize) -> Vec<f32> {
             *o = sv * (gv - dot);
         }
     }
+}
+
+/// Softmax VJP per row (allocating convenience).
+pub fn softmax_bwd(s: &[f32], g: &[f32], cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; s.len()];
+    softmax_bwd_into(s, g, cols, &mut out);
     out
 }
 
@@ -473,6 +701,8 @@ pub fn fimd_update(grad: &[f32], acc: &[f32], scale: f32) -> Vec<f32> {
 }
 
 /// Selection + beta + update — eq. (3)/(4). Returns `(theta', mask)`.
+/// The selection branch is inherent to the semantics (and the mask is
+/// the only provably sparse signal here — it never feeds a GEMM).
 pub fn dampen(
     theta: &[f32],
     i_df: &[f32],

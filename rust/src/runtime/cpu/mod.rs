@@ -4,15 +4,25 @@
 //! gradient chain, Algorithm 1's back-end-first loop, training, and the
 //! engine IPs all run on stock stable Rust with no Python artifacts and
 //! no XLA. Kernels live in [`kernels`] (semantics of
-//! `python/compile/kernels/ref.py`), per-segment interpreters in
-//! [`segment`]. Every module validates arity and shapes before touching
-//! data — an edge device fails loudly, never UB (`tests/failure_injection`).
+//! `python/compile/kernels/ref.py`) on top of the tiled multi-threaded
+//! GEMM core in [`gemm`]; per-segment interpreters live in [`segment`].
+//! The backend owns one [`scratch::Scratch`] arena shared by every
+//! module it compiles, so im2col panels, packed GEMM panels, and
+//! activation/grad temporaries are reused across segments and steps
+//! instead of reallocated. Every module validates arity and shapes
+//! before touching data — an edge device fails loudly, never UB
+//! (`tests/failure_injection`).
 
 // Index-heavy numeric loops read better with explicit ranges.
 #![allow(clippy::needless_range_loop)]
 
+pub mod gemm;
 pub mod kernels;
+pub mod scratch;
 mod segment;
+
+use std::cell::RefCell;
+use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
@@ -20,16 +30,21 @@ use crate::config::{ModelMeta, SegmentMeta};
 use crate::tensor::Tensor;
 
 use super::{Backend, ModuleImpl, ModuleSpec};
+use scratch::Scratch;
 use segment::SegmentDef;
 
-/// The interpreter backend. Stateless: all module state is built at
-/// `compile` time from the spec's inventory.
+/// The interpreter backend. All module state is built at `compile` time
+/// from the spec's inventory; the only runtime state is the shared
+/// scratch arena (the `Runtime` is single-threaded, so a `RefCell` is
+/// the whole synchronization story).
 #[derive(Debug, Default)]
-pub struct CpuBackend;
+pub struct CpuBackend {
+    scratch: Rc<RefCell<Scratch>>,
+}
 
 impl CpuBackend {
     pub fn new() -> CpuBackend {
-        CpuBackend
+        CpuBackend::default()
     }
 }
 
@@ -39,25 +54,34 @@ impl Backend for CpuBackend {
     }
 
     fn compile(&self, spec: &ModuleSpec) -> Result<Box<dyn ModuleImpl>> {
+        let sc = &self.scratch;
         Ok(match spec {
             ModuleSpec::SegmentFwd { meta, seg } => {
                 let def = SegmentDef::from_meta(meta, *seg)?; // bounds-checks seg
-                Box::new(SegmentFwdModule { seg: meta.segments[*seg].clone(), def })
+                Box::new(SegmentFwdModule {
+                    seg: meta.segments[*seg].clone(),
+                    def,
+                    scratch: sc.clone(),
+                })
             }
             ModuleSpec::SegmentBwd { meta, seg } => {
                 let def = SegmentDef::from_meta(meta, *seg)?;
-                Box::new(SegmentBwdModule { seg: meta.segments[*seg].clone(), def })
+                Box::new(SegmentBwdModule {
+                    seg: meta.segments[*seg].clone(),
+                    def,
+                    scratch: sc.clone(),
+                })
             }
-            ModuleSpec::Logits { meta } => Box::new(LogitsModule::new(meta)?),
+            ModuleSpec::Logits { meta } => Box::new(LogitsModule::new(meta, sc.clone())?),
             ModuleSpec::TrainStep { meta } => Box::new(TrainStepModule {
-                chain: LogitsModule::new(meta)?,
+                chain: LogitsModule::new(meta, sc.clone())?,
             }),
             ModuleSpec::LossGrad { meta } => Box::new(LossGradModule {
                 classes: meta.num_classes,
             }),
             ModuleSpec::Fimd { shared } => Box::new(FimdModule { tile: shared.tile }),
             ModuleSpec::Dampen { shared } => Box::new(DampenModule { tile: shared.tile }),
-            ModuleSpec::Gemm { .. } => Box::new(GemmModule),
+            ModuleSpec::Gemm { .. } => Box::new(GemmModule { scratch: sc.clone() }),
         })
     }
 }
@@ -121,6 +145,7 @@ fn check_scalarish(t: &Tensor, what: &str) -> Result<f32> {
 struct SegmentFwdModule {
     seg: SegmentMeta,
     def: SegmentDef,
+    scratch: Rc<RefCell<Scratch>>,
 }
 
 impl ModuleImpl for SegmentFwdModule {
@@ -129,7 +154,8 @@ impl ModuleImpl for SegmentFwdModule {
         check_arity(args, np + 1, &format!("fwd[{}]", self.seg.name))?;
         check_params(&self.seg, &args[..np])?;
         check_batched(args[np], &self.seg.in_shape, "x")?;
-        let y = self.def.fwd(&args[..np], args[np])?;
+        let mut sc = self.scratch.borrow_mut();
+        let y = self.def.fwd(&args[..np], args[np], &mut sc)?;
         Ok(vec![y])
     }
 }
@@ -137,6 +163,7 @@ impl ModuleImpl for SegmentFwdModule {
 struct SegmentBwdModule {
     seg: SegmentMeta,
     def: SegmentDef,
+    scratch: Rc<RefCell<Scratch>>,
 }
 
 impl ModuleImpl for SegmentBwdModule {
@@ -149,7 +176,8 @@ impl ModuleImpl for SegmentBwdModule {
         if b != b2 {
             bail!("bwd[{}]: x batch {b} != gy batch {b2}", self.seg.name);
         }
-        let (mut grads, gx) = self.def.bwd(&args[..np], args[np], args[np + 1])?;
+        let mut sc = self.scratch.borrow_mut();
+        let (mut grads, gx) = self.def.bwd(&args[..np], args[np], args[np + 1], &mut sc)?;
         grads.push(gx);
         Ok(grads)
     }
@@ -164,15 +192,16 @@ struct LogitsModule {
     meta: ModelMeta,
     defs: Vec<SegmentDef>,
     param_count: usize,
+    scratch: Rc<RefCell<Scratch>>,
 }
 
 impl LogitsModule {
-    fn new(meta: &ModelMeta) -> Result<LogitsModule> {
+    fn new(meta: &ModelMeta, scratch: Rc<RefCell<Scratch>>) -> Result<LogitsModule> {
         let defs = (0..meta.num_segments())
             .map(|k| SegmentDef::from_meta(meta, k))
             .collect::<Result<Vec<_>>>()?;
         let param_count = meta.segments.iter().map(|s| s.params.len()).sum();
-        Ok(LogitsModule { meta: meta.clone(), defs, param_count })
+        Ok(LogitsModule { meta: meta.clone(), defs, param_count, scratch })
     }
 
     fn check_all_params(&self, args: &[&Tensor]) -> Result<()> {
@@ -190,6 +219,7 @@ impl LogitsModule {
         args: &[&Tensor],
         x: &Tensor,
         mut cache: Option<&mut Vec<Tensor>>,
+        sc: &mut Scratch,
     ) -> Result<Tensor> {
         let mut h = x.clone();
         let mut off = 0;
@@ -197,7 +227,7 @@ impl LogitsModule {
             if let Some(c) = cache.as_mut() {
                 c.push(h.clone());
             }
-            h = def.fwd(&args[off..off + seg.params.len()], &h)?;
+            h = def.fwd(&args[off..off + seg.params.len()], &h, sc)?;
             off += seg.params.len();
         }
         Ok(h)
@@ -210,7 +240,8 @@ impl ModuleImpl for LogitsModule {
         self.check_all_params(&args[..self.param_count])?;
         let x = args[self.param_count];
         check_batched(x, &self.meta.input_shape, "x")?;
-        let logits = self.forward(&args[..self.param_count], x, None)?;
+        let mut sc = self.scratch.borrow_mut();
+        let logits = self.forward(&args[..self.param_count], x, None, &mut sc)?;
         Ok(vec![logits])
     }
 }
@@ -236,8 +267,9 @@ impl ModuleImpl for TrainStepModule {
             bail!("train_step: onehot batch {} != x batch {b}", onehot.batch());
         }
 
+        let mut sc = self.chain.scratch.borrow_mut();
         let mut inputs = Vec::with_capacity(meta.num_segments());
-        let logits = self.chain.forward(&args[..n], x, Some(&mut inputs))?;
+        let logits = self.chain.forward(&args[..n], x, Some(&mut inputs), &mut sc)?;
 
         // mean NLL + dlogits via log-sum-exp (model.py cross_entropy)
         let classes = meta.num_classes;
@@ -269,7 +301,7 @@ impl ModuleImpl for TrainStepModule {
         for k in (0..meta.num_segments()).rev() {
             let np = meta.segments[k].params.len();
             let ps = &args[offsets[k]..offsets[k] + np];
-            let (grads, gx) = self.chain.defs[k].bwd(ps, &inputs[k], &gy)?;
+            let (grads, gx) = self.chain.defs[k].bwd(ps, &inputs[k], &gy, &mut sc)?;
             gy = gx;
             new_params[k] = ps
                 .iter()
@@ -353,8 +385,10 @@ impl ModuleImpl for DampenModule {
     }
 }
 
-/// Patch-GEMM engine demo: plain 2-D `x @ y`.
-struct GemmModule;
+/// Patch-GEMM engine demo: plain 2-D `x @ y` on the tiled core.
+struct GemmModule {
+    scratch: Rc<RefCell<Scratch>>,
+}
 
 impl ModuleImpl for GemmModule {
     fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
@@ -364,7 +398,9 @@ impl ModuleImpl for GemmModule {
             bail!("gemm: incompatible shapes {:?} x {:?}", x.shape, y.shape);
         }
         let (m, k, n) = (x.shape[0], x.shape[1], y.shape[1]);
-        let out = kernels::matmul(&x.data, &y.data, m, k, n);
+        let mut out = vec![0.0f32; m * n];
+        let mut sc = self.scratch.borrow_mut();
+        gemm::matmul_into(&mut sc, &x.data, &y.data, m, k, n, &mut out);
         Ok(vec![Tensor::new(vec![m, n], out)?])
     }
 }

@@ -1,0 +1,181 @@
+//! Zero-alloc scratch arena for the CpuBackend hot path.
+//!
+//! Every forward/VJP interpreter pass used to allocate a fresh `Vec` for
+//! each im2col patch matrix, packed GEMM panel, and activation/grad
+//! temporary. Under the per-layer unlearning loop those allocations
+//! recur with identical sizes thousands of times, so the backend now
+//! owns one [`Scratch`] pool (behind a `RefCell`, matching the
+//! single-threaded `Runtime`) and the interpreters `take`/`put` buffers
+//! from it instead. Buffers are handed out as plain `Vec<f32>` so a
+//! caller can still keep one (e.g. to move into an output `Tensor`) —
+//! anything not `put` back simply stops being pooled.
+//!
+//! Not thread-safe by design: the GEMM worker threads never touch the
+//! arena; the packed-B panel is taken before the fork and returned after
+//! the join.
+
+/// Upper bound on parked buffers; beyond this the smallest is dropped so
+/// the pool converges to the few large panel/activation sizes that
+/// dominate the hot path instead of hoarding every tile ever seen.
+const MAX_POOLED: usize = 32;
+
+/// Reusable `f32` buffer pool. `take` returns a zero-filled buffer of
+/// the exact requested length, reusing parked capacity when possible;
+/// `put` parks a buffer for the next taker.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    pool: Vec<Vec<f32>>,
+    takes: u64,
+    grows: u64,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// A buffer with capacity for at least `len` elements, length and
+    /// contents unadjusted. Best-fit over the pool: the smallest parked
+    /// buffer that already holds `len`, else the largest so regrowth
+    /// converges.
+    fn take_raw(&mut self, len: usize) -> Vec<f32> {
+        self.takes += 1;
+        let mut best: Option<usize> = None;
+        for (i, buf) in self.pool.iter().enumerate() {
+            best = match best {
+                None => Some(i),
+                Some(j) => {
+                    let (c, cj) = (buf.capacity(), self.pool[j].capacity());
+                    let (fits, jfits) = (c >= len, cj >= len);
+                    if (fits && (!jfits || c < cj)) || (!fits && !jfits && c > cj) {
+                        Some(i)
+                    } else {
+                        Some(j)
+                    }
+                }
+            };
+        }
+        let mut v = match best {
+            Some(i) => self.pool.swap_remove(i),
+            None => Vec::new(),
+        };
+        if v.capacity() < len {
+            // fresh allocation instead of reserve(): a realloc would
+            // memcpy stale contents every taker discards anyway
+            self.grows += 1;
+            v = Vec::with_capacity(len);
+        }
+        v
+    }
+
+    /// Borrow a zero-filled buffer of exactly `len` elements — for
+    /// destinations that are accumulated into (scatter-adds) or only
+    /// partially written (GroupNorm residual channels).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take_raw(len);
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Borrow a buffer of exactly `len` elements with *arbitrary*
+    /// (stale but initialized) contents — for destinations the caller
+    /// fully overwrites (GEMM outputs, packs, norms over the last dim).
+    /// Skips the zero-fill memset [`Scratch::take`] pays.
+    pub fn take_any(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take_raw(len);
+        v.resize(len, 0.0); // zero-fills only the growth tail, if any
+        v
+    }
+
+    /// Borrow a buffer initialized to a copy of `src` (no zero-fill pass).
+    pub fn take_from(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut v = self.take_raw(src.len());
+        v.clear();
+        v.extend_from_slice(src);
+        v
+    }
+
+    /// Park a buffer for reuse. Zero-capacity buffers are dropped.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        self.pool.push(buf);
+        if self.pool.len() > MAX_POOLED {
+            if let Some(i) = (0..self.pool.len()).min_by_key(|&i| self.pool[i].capacity()) {
+                self.pool.swap_remove(i);
+            }
+        }
+    }
+
+    /// `take*` calls so far (reuse diagnostics for tests/benches).
+    pub fn takes(&self) -> u64 {
+        self.takes
+    }
+
+    /// `take*` calls that had to allocate or regrow (the cold path; a
+    /// steady-state hot loop should stop advancing this counter).
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// Total `f32` capacity currently parked in the pool.
+    pub fn pooled_floats(&self) -> usize {
+        self.pool.iter().map(|b| b.capacity()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zero_filled_and_reuses_capacity() {
+        let mut sc = Scratch::new();
+        let mut a = sc.take(1024);
+        assert_eq!(a.len(), 1024);
+        assert!(a.iter().all(|&v| v == 0.0));
+        a.iter_mut().for_each(|v| *v = 7.0);
+        sc.put(a);
+        let b = sc.take(512);
+        assert_eq!(b.len(), 512);
+        assert!(b.capacity() >= 1024, "parked buffer should be reused");
+        assert!(b.iter().all(|&v| v == 0.0), "reused buffer must be re-zeroed");
+        sc.put(b);
+        assert_eq!(sc.takes(), 2);
+        assert_eq!(sc.grows(), 1);
+    }
+
+    #[test]
+    fn take_from_copies_without_zeroing() {
+        let mut sc = Scratch::new();
+        let src = [1.0f32, 2.0, 3.0];
+        let v = sc.take_from(&src);
+        assert_eq!(v, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn take_any_has_exact_len_and_skips_zeroing() {
+        let mut sc = Scratch::new();
+        sc.put(vec![7.0f32; 100]);
+        let v = sc.take_any(60);
+        assert_eq!(v.len(), 60);
+        assert_eq!(v[0], 7.0, "stale contents are allowed (and expected)");
+        sc.put(v);
+        let w = sc.take_any(200);
+        assert_eq!(w.len(), 200);
+        assert!(w[100..].iter().all(|&x| x == 0.0), "growth tail is zeroed");
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let mut sc = Scratch::new();
+        for i in 0..4 * MAX_POOLED {
+            sc.put(vec![0.0; i + 1]);
+        }
+        assert!(sc.pool.len() <= MAX_POOLED);
+        // the survivors are the big ones
+        assert!(sc.pool.iter().all(|b| b.capacity() > MAX_POOLED));
+    }
+}

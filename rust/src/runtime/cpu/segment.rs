@@ -3,10 +3,15 @@
 //!
 //! Each [`SegmentDef`] is constructed once from the meta inventory
 //! (`SegmentDef::from_meta`) and then applied batch-agnostically:
-//! `fwd(params, x[B,...]) -> y`, `bwd(params, x, gy) -> (param grads in
-//! meta order, gx)`. The VJPs are hand-derived (this is what `jax.vjp`
-//! produced on the XLA path) and cross-checked against finite
-//! differences in `tests/backend_golden.rs`.
+//! `fwd(params, x[B,...], scratch) -> y`, `bwd(params, x, gy, scratch)
+//! -> (param grads in meta order, gx)`. The VJPs are hand-derived (this
+//! is what `jax.vjp` produced on the XLA path) and cross-checked against
+//! finite differences in `tests/backend_golden.rs`.
+//!
+//! All GEMMs run on the tiled core in [`super::gemm`] and every
+//! intermediate activation/grad buffer is taken from the backend's
+//! [`Scratch`] arena, so steady-state passes allocate only their output
+//! tensors.
 
 // Index-heavy numeric loops read better with explicit ranges.
 #![allow(clippy::needless_range_loop)]
@@ -17,11 +22,13 @@ use crate::config::builtin::GN_GROUPS;
 use crate::config::ModelMeta;
 use crate::tensor::Tensor;
 
+use super::gemm;
 use super::kernels::{
-    add_bias, col_sum, gelu, gelu_bwd, group_norm_bwd, group_norm_fwd, layer_norm_bwd,
-    layer_norm_fwd, matmul, matmul_nt, matmul_tn, relu, relu_bwd, softmax_bwd, softmax_rows,
-    Conv,
+    add_bias, col_sum, gelu_bwd_inplace, gelu_inplace, gelu_into, group_norm_bwd_into,
+    group_norm_fwd_into, layer_norm_bwd, layer_norm_bwd_into, layer_norm_fwd_into, relu,
+    relu_bwd, softmax_bwd_into, softmax_rows, Conv,
 };
+use super::scratch::Scratch;
 
 /// Static per-segment execution plan.
 pub(crate) enum SegmentDef {
@@ -216,60 +223,94 @@ impl SegmentDef {
     }
 
     /// Forward: `(params..., x[B,...]) -> y`.
-    pub(crate) fn fwd(&self, ps: &[&Tensor], x: &Tensor) -> Result<Tensor> {
+    pub(crate) fn fwd(&self, ps: &[&Tensor], x: &Tensor, sc: &mut Scratch) -> Result<Tensor> {
         let b = x.batch();
         match self {
             SegmentDef::Stem { h, w, conv } => {
-                let c1 = conv.fwd(&x.data, &ps[0].data, b, *h, *w);
                 let (ho, wo) = conv.out_hw(*h, *w);
-                let mut y = group_norm_fwd(
-                    &c1, b, ho * wo, conv.cout, GN_GROUPS, &ps[1].data, &ps[2].data,
+                let mut c1 = sc.take_any(b * ho * wo * conv.cout);
+                conv.fwd_into(sc, &x.data, &ps[0].data, b, *h, *w, &mut c1);
+                let mut y = vec![0.0f32; c1.len()];
+                group_norm_fwd_into(
+                    &c1, b, ho * wo, conv.cout, GN_GROUPS, &ps[1].data, &ps[2].data, &mut y,
                 );
+                sc.put(c1);
                 relu(&mut y);
                 Tensor::new(vec![b, ho, wo, conv.cout], y)
             }
             SegmentDef::Block { h, w, conv1, conv2, down } => {
                 let cout = conv1.cout;
-                let c1 = conv1.fwd(&x.data, &ps[0].data, b, *h, *w);
                 let (ho, wo) = conv1.out_hw(*h, *w);
                 let hw = ho * wo;
-                let o1 =
-                    group_norm_fwd(&c1, b, hw, cout, GN_GROUPS, &ps[1].data, &ps[2].data);
-                let mut h1 = o1;
+                let len = b * hw * cout;
+                let mut c1 = sc.take_any(len);
+                conv1.fwd_into(sc, &x.data, &ps[0].data, b, *h, *w, &mut c1);
+                let mut h1 = sc.take(len);
+                group_norm_fwd_into(
+                    &c1, b, hw, cout, GN_GROUPS, &ps[1].data, &ps[2].data, &mut h1,
+                );
                 relu(&mut h1);
-                let c2 = conv2.fwd(&h1, &ps[3].data, b, ho, wo);
-                let o2 =
-                    group_norm_fwd(&c2, b, hw, cout, GN_GROUPS, &ps[4].data, &ps[5].data);
-                let sc = match down {
+                // c1 is dead — reuse it for the second conv's output
+                conv2.fwd_into(sc, &h1, &ps[3].data, b, ho, wo, &mut c1);
+                sc.put(h1);
+                let mut y = vec![0.0f32; len];
+                group_norm_fwd_into(
+                    &c1, b, hw, cout, GN_GROUPS, &ps[4].data, &ps[5].data, &mut y,
+                );
+                sc.put(c1);
+                match down {
                     Some(cd) => {
-                        let cdo = cd.fwd(&x.data, &ps[6].data, b, *h, *w);
-                        group_norm_fwd(&cdo, b, hw, cout, GN_GROUPS, &ps[7].data, &ps[8].data)
+                        let mut cdo = sc.take_any(len);
+                        cd.fwd_into(sc, &x.data, &ps[6].data, b, *h, *w, &mut cdo);
+                        let mut scb = sc.take(len);
+                        group_norm_fwd_into(
+                            &cdo, b, hw, cout, GN_GROUPS, &ps[7].data, &ps[8].data, &mut scb,
+                        );
+                        sc.put(cdo);
+                        for (yv, sv) in y.iter_mut().zip(&scb) {
+                            *yv += sv;
+                        }
+                        sc.put(scb);
                     }
-                    None => x.data.clone(),
-                };
-                let mut y: Vec<f32> = o2.iter().zip(&sc).map(|(a, s)| a + s).collect();
+                    None => {
+                        for (yv, sv) in y.iter_mut().zip(&x.data) {
+                            *yv += sv;
+                        }
+                    }
+                }
                 relu(&mut y);
                 Tensor::new(vec![b, ho, wo, cout], y)
             }
             SegmentDef::HeadGap { hw, c, classes } => {
-                let pooled = gap_pool(&x.data, b, *hw, *c);
-                let mut y = matmul(&pooled, &ps[0].data, b, *c, *classes);
+                let mut pooled = sc.take_any(b * c);
+                gap_pool_into(&x.data, b, *hw, *c, &mut pooled);
+                let mut y = vec![0.0f32; b * classes];
+                gemm::matmul_into(sc, &pooled, &ps[0].data, b, *c, *classes, &mut y);
+                sc.put(pooled);
                 add_bias(&mut y, &ps[1].data);
                 Tensor::new(vec![b, *classes], y)
             }
             SegmentDef::HeadVit { tokens, dim, classes } => {
                 let r = b * tokens;
-                let hn = layer_norm_fwd(&x.data, r, *dim, &ps[0].data, &ps[1].data);
-                let pooled = token_pool(&hn, b, *tokens, *dim);
-                let mut y = matmul(&pooled, &ps[2].data, b, *dim, *classes);
+                let mut hn = sc.take_any(r * dim);
+                layer_norm_fwd_into(&x.data, r, *dim, &ps[0].data, &ps[1].data, &mut hn);
+                let mut pooled = sc.take_any(b * dim);
+                gap_pool_into(&hn, b, *tokens, *dim, &mut pooled); // token mean-pool
+                sc.put(hn);
+                let mut y = vec![0.0f32; b * classes];
+                gemm::matmul_into(sc, &pooled, &ps[2].data, b, *dim, *classes, &mut y);
+                sc.put(pooled);
                 add_bias(&mut y, &ps[3].data);
                 Tensor::new(vec![b, *classes], y)
             }
             SegmentDef::Embed { img, chans, patch, grid, dim } => {
                 let tokens = grid * grid;
                 let pdim = patch * patch * chans;
-                let xp = patchify(&x.data, b, *img, *chans, *patch, *grid);
-                let mut y = matmul(&xp, &ps[0].data, b * tokens, pdim, *dim);
+                let mut xp = sc.take_any(b * tokens * pdim);
+                patchify_into(&x.data, b, *img, *chans, *patch, *grid, &mut xp);
+                let mut y = vec![0.0f32; b * tokens * dim];
+                gemm::matmul_into(sc, &xp, &ps[0].data, b * tokens, pdim, *dim, &mut y);
+                sc.put(xp);
                 add_bias(&mut y, &ps[1].data);
                 let pos = &ps[2].data;
                 for bi in 0..b {
@@ -281,7 +322,7 @@ impl SegmentDef {
                 Tensor::new(vec![b, tokens, *dim], y)
             }
             SegmentDef::Encoder { tokens, dim, heads, mlp } => {
-                let y = self.encoder_fwd(ps, &x.data, b, *tokens, *dim, *heads, *mlp);
+                let y = self.encoder_fwd(ps, &x.data, b, *tokens, *dim, *heads, *mlp, sc);
                 Tensor::new(vec![b, *tokens, *dim], y)
             }
         }
@@ -293,21 +334,32 @@ impl SegmentDef {
         ps: &[&Tensor],
         x: &Tensor,
         gy: &Tensor,
+        sc: &mut Scratch,
     ) -> Result<(Vec<Tensor>, Tensor)> {
         let b = x.batch();
         match self {
             SegmentDef::Stem { h, w, conv } => {
-                let c1 = conv.fwd(&x.data, &ps[0].data, b, *h, *w);
                 let (ho, wo) = conv.out_hw(*h, *w);
-                let o = group_norm_fwd(
-                    &c1, b, ho * wo, conv.cout, GN_GROUPS, &ps[1].data, &ps[2].data,
+                let len = b * ho * wo * conv.cout;
+                let mut c1 = sc.take_any(len);
+                conv.fwd_into(sc, &x.data, &ps[0].data, b, *h, *w, &mut c1);
+                let mut o = sc.take(len);
+                group_norm_fwd_into(
+                    &c1, b, ho * wo, conv.cout, GN_GROUPS, &ps[1].data, &ps[2].data, &mut o,
                 );
-                let mut g = gy.data.clone();
+                let mut g = sc.take_from(&gy.data);
                 relu_bwd(&o, &mut g);
-                let (dc1, dgamma, dbeta) = group_norm_bwd(
-                    &c1, b, ho * wo, conv.cout, GN_GROUPS, &ps[1].data, &g,
+                sc.put(o);
+                let mut dc1 = sc.take(len);
+                let (dgamma, dbeta) = group_norm_bwd_into(
+                    &c1, b, ho * wo, conv.cout, GN_GROUPS, &ps[1].data, &g, &mut dc1,
                 );
-                let (dx, dw) = conv.bwd(&x.data, &ps[0].data, &dc1, b, *h, *w);
+                sc.put(c1);
+                sc.put(g);
+                let mut dx = vec![0.0f32; b * h * w * conv.cin];
+                let mut dw = vec![0.0f32; conv.kh * conv.kw * conv.cin * conv.cout];
+                conv.bwd_into(sc, &x.data, &ps[0].data, &dc1, b, *h, *w, &mut dx, &mut dw);
+                sc.put(dc1);
                 Ok((
                     vec![
                         Tensor::new(ps[0].shape.clone(), dw)?,
@@ -318,13 +370,17 @@ impl SegmentDef {
                 ))
             }
             SegmentDef::Block { h, w, conv1, conv2, down } => {
-                self.block_bwd(ps, x, gy, b, *h, *w, conv1, conv2, down.as_ref())
+                self.block_bwd(ps, x, gy, b, *h, *w, conv1, conv2, down.as_ref(), sc)
             }
             SegmentDef::HeadGap { hw, c, classes } => {
-                let pooled = gap_pool(&x.data, b, *hw, *c);
-                let dw = matmul_tn(&pooled, &gy.data, b, *c, *classes);
+                let mut pooled = sc.take_any(b * c);
+                gap_pool_into(&x.data, b, *hw, *c, &mut pooled);
+                let mut dw = vec![0.0f32; c * classes];
+                gemm::matmul_tn_into(sc, &pooled, &gy.data, b, *c, *classes, &mut dw);
+                sc.put(pooled);
                 let db = col_sum(&gy.data, *classes);
-                let dpooled = matmul_nt(&gy.data, &ps[0].data, b, *classes, *c);
+                let mut dpooled = sc.take_any(b * c);
+                gemm::matmul_nt_into(sc, &gy.data, &ps[0].data, b, *classes, *c, &mut dpooled);
                 let mut dx = vec![0.0f32; b * hw * c];
                 let inv = 1.0 / *hw as f32;
                 for bi in 0..b {
@@ -335,6 +391,7 @@ impl SegmentDef {
                         }
                     }
                 }
+                sc.put(dpooled);
                 Ok((
                     vec![Tensor::new(ps[0].shape.clone(), dw)?, Tensor::vec1(db)],
                     Tensor::new(x.shape.clone(), dx)?,
@@ -342,14 +399,20 @@ impl SegmentDef {
             }
             SegmentDef::HeadVit { tokens, dim, classes } => {
                 let r = b * tokens;
-                let hn = layer_norm_fwd(&x.data, r, *dim, &ps[0].data, &ps[1].data);
-                let pooled = token_pool(&hn, b, *tokens, *dim);
-                let dw = matmul_tn(&pooled, &gy.data, b, *dim, *classes);
+                let mut hn = sc.take_any(r * dim);
+                layer_norm_fwd_into(&x.data, r, *dim, &ps[0].data, &ps[1].data, &mut hn);
+                let mut pooled = sc.take_any(b * dim);
+                gap_pool_into(&hn, b, *tokens, *dim, &mut pooled);
+                sc.put(hn);
+                let mut dw = vec![0.0f32; dim * classes];
+                gemm::matmul_tn_into(sc, &pooled, &gy.data, b, *dim, *classes, &mut dw);
+                sc.put(pooled);
                 let db = col_sum(&gy.data, *classes);
-                let dpooled = matmul_nt(&gy.data, &ps[2].data, b, *classes, *dim);
+                let mut dpooled = sc.take_any(b * dim);
+                gemm::matmul_nt_into(sc, &gy.data, &ps[2].data, b, *classes, *dim, &mut dpooled);
                 // broadcast back over tokens
                 let inv = 1.0 / *tokens as f32;
-                let mut dh = vec![0.0f32; r * dim];
+                let mut dh = sc.take_any(r * dim);
                 for bi in 0..b {
                     for t in 0..*tokens {
                         let base = (bi * tokens + t) * dim;
@@ -358,8 +421,9 @@ impl SegmentDef {
                         }
                     }
                 }
-                let (dx, dlng, dlnb) =
-                    layer_norm_bwd(&x.data, r, *dim, &ps[0].data, &dh);
+                sc.put(dpooled);
+                let (dx, dlng, dlnb) = layer_norm_bwd(&x.data, r, *dim, &ps[0].data, &dh);
+                sc.put(dh);
                 Ok((
                     vec![
                         Tensor::vec1(dlng),
@@ -374,8 +438,11 @@ impl SegmentDef {
                 let tokens = grid * grid;
                 let pdim = patch * patch * chans;
                 let r = b * tokens;
-                let xp = patchify(&x.data, b, *img, *chans, *patch, *grid);
-                let dw = matmul_tn(&xp, &gy.data, r, pdim, *dim);
+                let mut xp = sc.take_any(r * pdim);
+                patchify_into(&x.data, b, *img, *chans, *patch, *grid, &mut xp);
+                let mut dw = vec![0.0f32; pdim * dim];
+                gemm::matmul_tn_into(sc, &xp, &gy.data, r, pdim, *dim, &mut dw);
+                sc.put(xp);
                 let db = col_sum(&gy.data, *dim);
                 let mut dpos = vec![0.0f32; tokens * dim];
                 for bi in 0..b {
@@ -384,8 +451,11 @@ impl SegmentDef {
                         *dp += gv;
                     }
                 }
-                let dxp = matmul_nt(&gy.data, &ps[0].data, r, *dim, pdim);
-                let dx = unpatchify(&dxp, b, *img, *chans, *patch, *grid);
+                let mut dxp = sc.take_any(r * pdim);
+                gemm::matmul_nt_into(sc, &gy.data, &ps[0].data, r, *dim, pdim, &mut dxp);
+                let mut dx = vec![0.0f32; b * img * img * chans];
+                unpatchify_into(&dxp, b, *img, *chans, *patch, *grid, &mut dx);
+                sc.put(dxp);
                 Ok((
                     vec![
                         Tensor::new(ps[0].shape.clone(), dw)?,
@@ -396,7 +466,7 @@ impl SegmentDef {
                 ))
             }
             SegmentDef::Encoder { tokens, dim, heads, mlp } => {
-                self.encoder_bwd(ps, x, gy, b, *tokens, *dim, *heads, *mlp)
+                self.encoder_bwd(ps, x, gy, b, *tokens, *dim, *heads, *mlp, sc)
             }
         }
     }
@@ -413,36 +483,67 @@ impl SegmentDef {
         conv1: &Conv,
         conv2: &Conv,
         down: Option<&Conv>,
+        sc: &mut Scratch,
     ) -> Result<(Vec<Tensor>, Tensor)> {
         let cout = conv1.cout;
-        // --- recompute forward intermediates ---
-        let c1 = conv1.fwd(&x.data, &ps[0].data, b, h, w);
         let (ho, wo) = conv1.out_hw(h, w);
         let hw = ho * wo;
-        let o1 = group_norm_fwd(&c1, b, hw, cout, GN_GROUPS, &ps[1].data, &ps[2].data);
-        let mut h1 = o1.clone();
-        relu(&mut h1);
-        let c2 = conv2.fwd(&h1, &ps[3].data, b, ho, wo);
-        let o2 = group_norm_fwd(&c2, b, hw, cout, GN_GROUPS, &ps[4].data, &ps[5].data);
-        let (cdo, sc) = match down {
+        let len = b * hw * cout;
+        // --- recompute forward intermediates ---
+        let mut c1 = sc.take_any(len);
+        conv1.fwd_into(sc, &x.data, &ps[0].data, b, h, w, &mut c1);
+        let mut h1 = sc.take(len);
+        group_norm_fwd_into(&c1, b, hw, cout, GN_GROUPS, &ps[1].data, &ps[2].data, &mut h1);
+        relu(&mut h1); // h1 > 0 exactly where the pre-relu o1 > 0
+        let mut c2 = sc.take_any(len);
+        conv2.fwd_into(sc, &h1, &ps[3].data, b, ho, wo, &mut c2);
+        let mut pre = sc.take(len); // o2, then o2 + shortcut
+        group_norm_fwd_into(&c2, b, hw, cout, GN_GROUPS, &ps[4].data, &ps[5].data, &mut pre);
+        let cdo = match down {
             Some(cd) => {
-                let cdo = cd.fwd(&x.data, &ps[6].data, b, h, w);
-                let sc =
-                    group_norm_fwd(&cdo, b, hw, cout, GN_GROUPS, &ps[7].data, &ps[8].data);
-                (cdo, sc)
+                let mut cdo = sc.take_any(len);
+                cd.fwd_into(sc, &x.data, &ps[6].data, b, h, w, &mut cdo);
+                let mut scb = sc.take(len);
+                group_norm_fwd_into(
+                    &cdo, b, hw, cout, GN_GROUPS, &ps[7].data, &ps[8].data, &mut scb,
+                );
+                for (p, s) in pre.iter_mut().zip(&scb) {
+                    *p += s;
+                }
+                sc.put(scb);
+                Some(cdo)
             }
-            None => (Vec::new(), x.data.clone()),
+            None => {
+                for (p, s) in pre.iter_mut().zip(&x.data) {
+                    *p += s;
+                }
+                None
+            }
         };
-        let pre: Vec<f32> = o2.iter().zip(&sc).map(|(a, s)| a + s).collect();
 
         // --- backward ---
-        let mut g = gy.data.clone();
+        let mut g = sc.take_from(&gy.data);
         relu_bwd(&pre, &mut g); // grad at o2 and sc alike
-        let (dc2, dg2, db2) = group_norm_bwd(&c2, b, hw, cout, GN_GROUPS, &ps[4].data, &g);
-        let (mut dh1, dw2) = conv2.bwd(&h1, &ps[3].data, &dc2, b, ho, wo);
-        relu_bwd(&o1, &mut dh1);
-        let (dc1, dg1, db1) = group_norm_bwd(&c1, b, hw, cout, GN_GROUPS, &ps[1].data, &dh1);
-        let (dx1, dw1) = conv1.bwd(&x.data, &ps[0].data, &dc1, b, h, w);
+        sc.put(pre);
+        let mut dc2 = sc.take(len);
+        let (dg2, db2) =
+            group_norm_bwd_into(&c2, b, hw, cout, GN_GROUPS, &ps[4].data, &g, &mut dc2);
+        sc.put(c2);
+        let mut dh1 = sc.take_any(len);
+        let mut dw2 = vec![0.0f32; conv2.kh * conv2.kw * conv2.cin * conv2.cout];
+        conv2.bwd_into(sc, &h1, &ps[3].data, &dc2, b, ho, wo, &mut dh1, &mut dw2);
+        sc.put(dc2);
+        relu_bwd(&h1, &mut dh1);
+        sc.put(h1);
+        let mut dc1 = sc.take(len);
+        let (dg1, db1) =
+            group_norm_bwd_into(&c1, b, hw, cout, GN_GROUPS, &ps[1].data, &dh1, &mut dc1);
+        sc.put(c1);
+        sc.put(dh1);
+        let mut dx = vec![0.0f32; b * h * w * conv1.cin];
+        let mut dw1 = vec![0.0f32; conv1.kh * conv1.kw * conv1.cin * conv1.cout];
+        conv1.bwd_into(sc, &x.data, &ps[0].data, &dc1, b, h, w, &mut dx, &mut dw1);
+        sc.put(dc1);
 
         let mut grads = vec![
             Tensor::new(ps[0].shape.clone(), dw1)?,
@@ -452,25 +553,31 @@ impl SegmentDef {
             Tensor::vec1(dg2),
             Tensor::vec1(db2),
         ];
-        let mut dx = dx1;
-        match down {
-            Some(cd) => {
-                let (dcdo, dgd, dbd) =
-                    group_norm_bwd(&cdo, b, hw, cout, GN_GROUPS, &ps[7].data, &g);
-                let (dx2, dwd) = cd.bwd(&x.data, &ps[6].data, &dcdo, b, h, w);
+        match (down, cdo) {
+            (Some(cd), Some(cdo)) => {
+                let mut dcdo = sc.take(len);
+                let (dgd, dbd) =
+                    group_norm_bwd_into(&cdo, b, hw, cout, GN_GROUPS, &ps[7].data, &g, &mut dcdo);
+                sc.put(cdo);
+                let mut dx2 = sc.take_any(b * h * w * cd.cin);
+                let mut dwd = vec![0.0f32; cd.kh * cd.kw * cd.cin * cd.cout];
+                cd.bwd_into(sc, &x.data, &ps[6].data, &dcdo, b, h, w, &mut dx2, &mut dwd);
+                sc.put(dcdo);
                 for (a, v) in dx.iter_mut().zip(&dx2) {
                     *a += v;
                 }
+                sc.put(dx2);
                 grads.push(Tensor::new(ps[6].shape.clone(), dwd)?);
                 grads.push(Tensor::vec1(dgd));
                 grads.push(Tensor::vec1(dbd));
             }
-            None => {
+            _ => {
                 for (a, v) in dx.iter_mut().zip(&g) {
                     *a += v;
                 }
             }
         }
+        sc.put(g);
         Ok((grads, Tensor::new(x.shape.clone(), dx)?))
     }
 
@@ -484,41 +591,66 @@ impl SegmentDef {
         dim: usize,
         heads: usize,
         mlp: usize,
+        sc: &mut Scratch,
     ) -> Vec<f32> {
         let r = b * tokens;
         let d3 = 3 * dim;
         let hd = dim / heads;
         let inv = 1.0 / (hd as f32).sqrt();
-        let xh = layer_norm_fwd(x, r, dim, &ps[0].data, &ps[1].data);
-        let mut qkv = matmul(&xh, &ps[2].data, r, dim, d3);
+        let mut xh = sc.take_any(r * dim);
+        layer_norm_fwd_into(x, r, dim, &ps[0].data, &ps[1].data, &mut xh);
+        let mut qkv = sc.take_any(r * d3);
+        gemm::matmul_into(sc, &xh, &ps[2].data, r, dim, d3, &mut qkv);
+        sc.put(xh);
         add_bias(&mut qkv, &ps[3].data);
-        let mut o = vec![0.0f32; r * dim];
+        let mut o = sc.take(r * dim); // zeroed: heads scatter-add into it
+        let mut q = sc.take_any(tokens * hd);
+        let mut kb = sc.take_any(tokens * hd);
+        let mut v = sc.take_any(tokens * hd);
+        let mut att = sc.take_any(tokens * tokens);
+        let mut oh = sc.take_any(tokens * hd);
         for bi in 0..b {
             for hh in 0..heads {
-                let q = gather_head(&qkv, bi, tokens, d3, hh * hd, hd);
-                let k = gather_head(&qkv, bi, tokens, d3, dim + hh * hd, hd);
-                let v = gather_head(&qkv, bi, tokens, d3, 2 * dim + hh * hd, hd);
-                let mut att = matmul_nt(&q, &k, tokens, hd, tokens);
+                gather_head_into(&qkv, bi, tokens, d3, hh * hd, hd, &mut q);
+                gather_head_into(&qkv, bi, tokens, d3, dim + hh * hd, hd, &mut kb);
+                gather_head_into(&qkv, bi, tokens, d3, 2 * dim + hh * hd, hd, &mut v);
+                gemm::matmul_nt_into(sc, &q, &kb, tokens, hd, tokens, &mut att);
                 for a in att.iter_mut() {
                     *a *= inv;
                 }
                 softmax_rows(&mut att, tokens);
-                let oh = matmul(&att, &v, tokens, tokens, hd);
+                gemm::matmul_into(sc, &att, &v, tokens, tokens, hd, &mut oh);
                 scatter_head(&mut o, &oh, bi, tokens, dim, hh * hd, hd);
             }
         }
-        let mut proj = matmul(&o, &ps[4].data, r, dim, dim);
-        add_bias(&mut proj, &ps[5].data);
-        let x2: Vec<f32> = x.iter().zip(&proj).map(|(a, p)| a + p).collect();
-        let h2 = layer_norm_fwd(&x2, r, dim, &ps[6].data, &ps[7].data);
-        let mut z1 = matmul(&h2, &ps[8].data, r, dim, mlp);
+        sc.put(q);
+        sc.put(kb);
+        sc.put(v);
+        sc.put(att);
+        sc.put(oh);
+        sc.put(qkv);
+        let mut x2 = sc.take_any(r * dim); // attention projection, then + x
+        gemm::matmul_into(sc, &o, &ps[4].data, r, dim, dim, &mut x2);
+        sc.put(o);
+        add_bias(&mut x2, &ps[5].data);
+        for (pv, &xv) in x2.iter_mut().zip(x) {
+            *pv += xv;
+        }
+        let mut h2 = sc.take_any(r * dim);
+        layer_norm_fwd_into(&x2, r, dim, &ps[6].data, &ps[7].data, &mut h2);
+        let mut z1 = sc.take_any(r * mlp);
+        gemm::matmul_into(sc, &h2, &ps[8].data, r, dim, mlp, &mut z1);
+        sc.put(h2);
         add_bias(&mut z1, &ps[9].data);
-        let a = gelu(&z1);
-        let mut y = matmul(&a, &ps[10].data, r, mlp, dim);
+        gelu_inplace(&mut z1);
+        let mut y = vec![0.0f32; r * dim];
+        gemm::matmul_into(sc, &z1, &ps[10].data, r, mlp, dim, &mut y);
+        sc.put(z1);
         add_bias(&mut y, &ps[11].data);
         for (yv, xv) in y.iter_mut().zip(&x2) {
             *yv += xv;
         }
+        sc.put(x2);
         y
     }
 
@@ -533,6 +665,7 @@ impl SegmentDef {
         dim: usize,
         heads: usize,
         mlp: usize,
+        sc: &mut Scratch,
     ) -> Result<(Vec<Tensor>, Tensor)> {
         let r = b * tokens;
         let d3 = 3 * dim;
@@ -540,78 +673,136 @@ impl SegmentDef {
         let inv = 1.0 / (hd as f32).sqrt();
 
         // --- recompute forward intermediates ---
-        let xh = layer_norm_fwd(&x.data, r, dim, &ps[0].data, &ps[1].data);
-        let mut qkv = matmul(&xh, &ps[2].data, r, dim, d3);
+        let mut xh = sc.take_any(r * dim);
+        layer_norm_fwd_into(&x.data, r, dim, &ps[0].data, &ps[1].data, &mut xh);
+        let mut qkv = sc.take_any(r * d3);
+        gemm::matmul_into(sc, &xh, &ps[2].data, r, dim, d3, &mut qkv);
         add_bias(&mut qkv, &ps[3].data);
-        let mut o = vec![0.0f32; r * dim];
-        let mut atts: Vec<Vec<f32>> = Vec::with_capacity(b * heads);
+        let mut o = sc.take(r * dim);
+        let mut q = sc.take_any(tokens * hd);
+        let mut kb = sc.take_any(tokens * hd);
+        let mut v = sc.take_any(tokens * hd);
+        let mut oh = sc.take_any(tokens * hd);
+        // all b*heads softmax maps staged in ONE buffer (kept for the
+        // VJP) so the arena parks a single large slab, not b*heads tiles
+        let tt = tokens * tokens;
+        let mut atts = sc.take_any(b * heads * tt);
         for bi in 0..b {
             for hh in 0..heads {
-                let q = gather_head(&qkv, bi, tokens, d3, hh * hd, hd);
-                let k = gather_head(&qkv, bi, tokens, d3, dim + hh * hd, hd);
-                let v = gather_head(&qkv, bi, tokens, d3, 2 * dim + hh * hd, hd);
-                let mut att = matmul_nt(&q, &k, tokens, hd, tokens);
+                gather_head_into(&qkv, bi, tokens, d3, hh * hd, hd, &mut q);
+                gather_head_into(&qkv, bi, tokens, d3, dim + hh * hd, hd, &mut kb);
+                gather_head_into(&qkv, bi, tokens, d3, 2 * dim + hh * hd, hd, &mut v);
+                let att = &mut atts[(bi * heads + hh) * tt..(bi * heads + hh + 1) * tt];
+                gemm::matmul_nt_into(sc, &q, &kb, tokens, hd, tokens, att);
                 for a in att.iter_mut() {
                     *a *= inv;
                 }
-                softmax_rows(&mut att, tokens);
-                let oh = matmul(&att, &v, tokens, tokens, hd);
+                softmax_rows(att, tokens);
+                gemm::matmul_into(sc, att, &v, tokens, tokens, hd, &mut oh);
                 scatter_head(&mut o, &oh, bi, tokens, dim, hh * hd, hd);
-                atts.push(att);
             }
         }
-        let mut proj = matmul(&o, &ps[4].data, r, dim, dim);
-        add_bias(&mut proj, &ps[5].data);
-        let x2: Vec<f32> = x.data.iter().zip(&proj).map(|(a, p)| a + p).collect();
-        let h2 = layer_norm_fwd(&x2, r, dim, &ps[6].data, &ps[7].data);
-        let mut z1 = matmul(&h2, &ps[8].data, r, dim, mlp);
+        let mut x2 = sc.take_any(r * dim);
+        gemm::matmul_into(sc, &o, &ps[4].data, r, dim, dim, &mut x2);
+        add_bias(&mut x2, &ps[5].data);
+        for (pv, &xv) in x2.iter_mut().zip(&x.data) {
+            *pv += xv;
+        }
+        let mut h2 = sc.take_any(r * dim);
+        layer_norm_fwd_into(&x2, r, dim, &ps[6].data, &ps[7].data, &mut h2);
+        let mut z1 = sc.take_any(r * mlp);
+        gemm::matmul_into(sc, &h2, &ps[8].data, r, dim, mlp, &mut z1);
         add_bias(&mut z1, &ps[9].data);
-        let a = gelu(&z1);
+        let mut a = sc.take_any(r * mlp);
+        gelu_into(&z1, &mut a);
 
         // --- backward: mlp sub-block ---
         let g = &gy.data;
         let db2 = col_sum(g, dim);
-        let dw2 = matmul_tn(&a, g, r, mlp, dim);
-        let da = matmul_nt(g, &ps[10].data, r, dim, mlp);
-        let dz1 = gelu_bwd(&z1, &da);
+        let mut dw2 = vec![0.0f32; mlp * dim];
+        gemm::matmul_tn_into(sc, &a, g, r, mlp, dim, &mut dw2);
+        sc.put(a);
+        let mut dz1 = sc.take_any(r * mlp); // da, masked in place to dz1
+        gemm::matmul_nt_into(sc, g, &ps[10].data, r, dim, mlp, &mut dz1);
+        gelu_bwd_inplace(&z1, &mut dz1);
+        sc.put(z1);
         let db1 = col_sum(&dz1, mlp);
-        let dw1 = matmul_tn(&h2, &dz1, r, dim, mlp);
-        let dh2 = matmul_nt(&dz1, &ps[8].data, r, mlp, dim);
-        let (dx2_ln, dln2g, dln2b) = layer_norm_bwd(&x2, r, dim, &ps[6].data, &dh2);
-        let dx2: Vec<f32> = g.iter().zip(&dx2_ln).map(|(a, l)| a + l).collect();
+        let mut dw1 = vec![0.0f32; dim * mlp];
+        gemm::matmul_tn_into(sc, &h2, &dz1, r, dim, mlp, &mut dw1);
+        sc.put(h2);
+        let mut dh2 = sc.take_any(r * dim);
+        gemm::matmul_nt_into(sc, &dz1, &ps[8].data, r, mlp, dim, &mut dh2);
+        sc.put(dz1);
+        let mut dx2 = sc.take_any(r * dim);
+        let (dln2g, dln2b) = layer_norm_bwd_into(&x2, r, dim, &ps[6].data, &dh2, &mut dx2);
+        sc.put(dh2);
+        for (dv, &gv) in dx2.iter_mut().zip(g) {
+            *dv += gv;
+        }
+        sc.put(x2);
 
         // --- projection ---
         let dbproj = col_sum(&dx2, dim);
-        let dwproj = matmul_tn(&o, &dx2, r, dim, dim);
-        let do_ = matmul_nt(&dx2, &ps[4].data, r, dim, dim);
+        let mut dwproj = vec![0.0f32; dim * dim];
+        gemm::matmul_tn_into(sc, &o, &dx2, r, dim, dim, &mut dwproj);
+        sc.put(o);
+        let mut do_ = sc.take_any(r * dim);
+        gemm::matmul_nt_into(sc, &dx2, &ps[4].data, r, dim, dim, &mut do_);
 
         // --- attention ---
-        let mut dqkv = vec![0.0f32; r * d3];
+        let mut dqkv = sc.take(r * d3); // zeroed: heads scatter-add into it
+        let mut datt = sc.take_any(tokens * tokens);
+        let mut ds = sc.take_any(tokens * tokens);
+        let mut doh = sc.take_any(tokens * hd);
+        let mut dq = sc.take_any(tokens * hd);
+        let mut dk = sc.take_any(tokens * hd);
+        let mut dvh = sc.take_any(tokens * hd);
         for bi in 0..b {
             for hh in 0..heads {
-                let att = &atts[bi * heads + hh];
-                let q = gather_head(&qkv, bi, tokens, d3, hh * hd, hd);
-                let k = gather_head(&qkv, bi, tokens, d3, dim + hh * hd, hd);
-                let v = gather_head(&qkv, bi, tokens, d3, 2 * dim + hh * hd, hd);
-                let doh = gather_head(&do_, bi, tokens, dim, hh * hd, hd);
-                let datt = matmul_nt(&doh, &v, tokens, hd, tokens);
-                let dv = matmul_tn(att, &doh, tokens, tokens, hd);
-                let mut ds = softmax_bwd(att, &datt, tokens);
+                let att = &atts[(bi * heads + hh) * tt..(bi * heads + hh + 1) * tt];
+                gather_head_into(&qkv, bi, tokens, d3, hh * hd, hd, &mut q);
+                gather_head_into(&qkv, bi, tokens, d3, dim + hh * hd, hd, &mut kb);
+                gather_head_into(&qkv, bi, tokens, d3, 2 * dim + hh * hd, hd, &mut v);
+                gather_head_into(&do_, bi, tokens, dim, hh * hd, hd, &mut doh);
+                gemm::matmul_nt_into(sc, &doh, &v, tokens, hd, tokens, &mut datt);
+                gemm::matmul_tn_into(sc, att, &doh, tokens, tokens, hd, &mut dvh);
+                softmax_bwd_into(att, &datt, tokens, &mut ds);
                 for s in ds.iter_mut() {
                     *s *= inv;
                 }
-                let dq = matmul(&ds, &k, tokens, tokens, hd);
-                let dk = matmul_tn(&ds, &q, tokens, tokens, hd);
+                gemm::matmul_into(sc, &ds, &kb, tokens, tokens, hd, &mut dq);
+                gemm::matmul_tn_into(sc, &ds, &q, tokens, tokens, hd, &mut dk);
                 scatter_head(&mut dqkv, &dq, bi, tokens, d3, hh * hd, hd);
                 scatter_head(&mut dqkv, &dk, bi, tokens, d3, dim + hh * hd, hd);
-                scatter_head(&mut dqkv, &dv, bi, tokens, d3, 2 * dim + hh * hd, hd);
+                scatter_head(&mut dqkv, &dvh, bi, tokens, d3, 2 * dim + hh * hd, hd);
             }
         }
+        sc.put(atts);
+        sc.put(datt);
+        sc.put(ds);
+        sc.put(doh);
+        sc.put(dq);
+        sc.put(dk);
+        sc.put(dvh);
+        sc.put(q);
+        sc.put(kb);
+        sc.put(v);
+        sc.put(oh);
+        sc.put(do_);
+        sc.put(qkv);
         let dbqkv = col_sum(&dqkv, d3);
-        let dwqkv = matmul_tn(&xh, &dqkv, r, dim, d3);
-        let dxh = matmul_nt(&dqkv, &ps[2].data, r, d3, dim);
-        let (dx_ln1, dln1g, dln1b) = layer_norm_bwd(&x.data, r, dim, &ps[0].data, &dxh);
-        let dx: Vec<f32> = dx2.iter().zip(&dx_ln1).map(|(a, l)| a + l).collect();
+        let mut dwqkv = vec![0.0f32; dim * d3];
+        gemm::matmul_tn_into(sc, &xh, &dqkv, r, dim, d3, &mut dwqkv);
+        sc.put(xh);
+        let mut dxh = sc.take_any(r * dim);
+        gemm::matmul_nt_into(sc, &dqkv, &ps[2].data, r, d3, dim, &mut dxh);
+        sc.put(dqkv);
+        let (mut dx, dln1g, dln1b) = layer_norm_bwd(&x.data, r, dim, &ps[0].data, &dxh);
+        sc.put(dxh);
+        for (dv, &av) in dx.iter_mut().zip(&dx2) {
+            *dv += av;
+        }
+        sc.put(dx2);
 
         Ok((
             vec![
@@ -633,9 +824,11 @@ impl SegmentDef {
     }
 }
 
-/// `pooled[b,c] = mean over hw` for `x[b,hw,c]`.
-fn gap_pool(x: &[f32], b: usize, hw: usize, c: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; b * c];
+/// `pooled[b,c] = mean over hw` for `x[b,hw,c]` (also the token
+/// mean-pool: same layout with `hw = tokens`). Fully overwrites `out`.
+fn gap_pool_into(x: &[f32], b: usize, hw: usize, c: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), b * c);
+    out.fill(0.0);
     let inv = 1.0 / hw as f32;
     for bi in 0..b {
         for s in 0..hw {
@@ -646,19 +839,22 @@ fn gap_pool(x: &[f32], b: usize, hw: usize, c: usize) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
-/// `pooled[b,d] = mean over tokens` for `x[b,t,d]` (same layout as gap).
-fn token_pool(x: &[f32], b: usize, tokens: usize, d: usize) -> Vec<f32> {
-    gap_pool(x, b, tokens, d)
-}
-
-/// NHWC image -> `[b, tokens, patch*patch*chans]` token rows.
-fn patchify(x: &[f32], b: usize, img: usize, chans: usize, patch: usize, grid: usize) -> Vec<f32> {
+/// NHWC image -> `[b, tokens, patch*patch*chans]` token rows (fully
+/// overwrites `out`).
+fn patchify_into(
+    x: &[f32],
+    b: usize,
+    img: usize,
+    chans: usize,
+    patch: usize,
+    grid: usize,
+    out: &mut [f32],
+) {
     let tokens = grid * grid;
     let pdim = patch * patch * chans;
-    let mut out = vec![0.0f32; b * tokens * pdim];
+    debug_assert_eq!(out.len(), b * tokens * pdim);
     for bi in 0..b {
         for ti in 0..grid {
             for tj in 0..grid {
@@ -673,21 +869,22 @@ fn patchify(x: &[f32], b: usize, img: usize, chans: usize, patch: usize, grid: u
             }
         }
     }
-    out
 }
 
-/// Inverse of [`patchify`] (bijective, so plain assignment).
-fn unpatchify(
+/// Inverse of [`patchify_into`] (bijective, so plain assignment; fully
+/// overwrites `out`).
+fn unpatchify_into(
     xp: &[f32],
     b: usize,
     img: usize,
     chans: usize,
     patch: usize,
     grid: usize,
-) -> Vec<f32> {
+    out: &mut [f32],
+) {
     let tokens = grid * grid;
     let pdim = patch * patch * chans;
-    let mut out = vec![0.0f32; b * img * img * chans];
+    debug_assert_eq!(out.len(), b * img * img * chans);
     for bi in 0..b {
         for ti in 0..grid {
             for tj in 0..grid {
@@ -702,24 +899,24 @@ fn unpatchify(
             }
         }
     }
-    out
 }
 
-/// Extract head columns `[tokens, hd]` at `col` from `[b, tokens, width]`.
-fn gather_head(
+/// Extract head columns `[tokens, hd]` at `col` from `[b, tokens, width]`
+/// (fully overwrites `out`).
+fn gather_head_into(
     buf: &[f32],
     bi: usize,
     tokens: usize,
     width: usize,
     col: usize,
     hd: usize,
-) -> Vec<f32> {
-    let mut out = vec![0.0f32; tokens * hd];
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), tokens * hd);
     for t in 0..tokens {
         let src = (bi * tokens + t) * width + col;
         out[t * hd..(t + 1) * hd].copy_from_slice(&buf[src..src + hd]);
     }
-    out
 }
 
 /// Scatter head columns back (adds into the destination).

@@ -1,0 +1,36 @@
+//! `FICABU_THREADS` determinism check, isolated in its own test binary:
+//! `std::env::set_var` is process-global, and keeping this the only test
+//! in the process means no sibling test reads the environment (every
+//! GEMM call consults `FICABU_THREADS`) while it is being mutated.
+
+use ficabu::runtime::cpu::gemm;
+use ficabu::runtime::cpu::scratch::Scratch;
+use ficabu::util::prng::Pcg32;
+
+#[test]
+fn ficabu_threads_env_does_not_change_results() {
+    let (m, k, n) = (130, 700, 90); // big enough to clear the fork threshold
+    let mut rng = Pcg32::seeded(0xdead);
+    let a = rng.normal_vec(m * k, 1.0);
+    let b = rng.normal_vec(k * n, 1.0);
+    let mut sc = Scratch::new();
+
+    std::env::set_var("FICABU_THREADS", "1");
+    assert_eq!(gemm::effective_threads(), 1);
+    let mut y1 = vec![0.0f32; m * n];
+    gemm::matmul_into(&mut sc, &a, &b, m, k, n, &mut y1);
+
+    std::env::set_var("FICABU_THREADS", "4");
+    assert_eq!(gemm::effective_threads(), 4);
+    let mut y4 = vec![0.0f32; m * n];
+    gemm::matmul_into(&mut sc, &a, &b, m, k, n, &mut y4);
+
+    std::env::remove_var("FICABU_THREADS");
+    for (i, (u, v)) in y1.iter().zip(&y4).enumerate() {
+        assert_eq!(
+            u.to_bits(),
+            v.to_bits(),
+            "FICABU_THREADS=1 vs 4 diverges at [{i}]: {u} vs {v}"
+        );
+    }
+}

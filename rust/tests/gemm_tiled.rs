@@ -1,0 +1,189 @@
+//! Property tests for the tiled multi-threaded GEMM core and the fused
+//! conv lowering against the retained PR-1 naive oracles
+//! (`kernels::naive`), over randomized shapes that exercise every edge:
+//! M/N/K not divisible by the micro-tile sizes, k=1, single-row/column
+//! operands, 1x1 convs, strided convs, and padding boundaries. Plus a
+//! `FICABU_THREADS` determinism check: worker count must never change a
+//! single bit of the output.
+
+use ficabu::runtime::cpu::gemm;
+use ficabu::runtime::cpu::kernels::{naive, Conv};
+use ficabu::runtime::cpu::scratch::Scratch;
+use ficabu::util::prng::Pcg32;
+
+/// Relative 1e-4 tolerance at the accumulation scale: tiled and naive
+/// kernels sum the same k products in different orders, so the error
+/// budget grows with sqrt(k) for unit-variance operands.
+fn assert_close(got: &[f32], want: &[f32], k: usize, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    let scale = 1.0 + (k as f32).sqrt();
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = 1e-4 * (scale + w.abs());
+        assert!(
+            (g - w).abs() <= tol,
+            "{what}[{i}]: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 7, 1),
+    (3, 1, 5),
+    (4, 8, 8),
+    (5, 9, 7),
+    (8, 64, 8),
+    (13, 17, 11),
+    (64, 64, 64),
+    (33, 129, 65),
+    (100, 37, 129),
+    (257, 96, 35),
+];
+
+#[test]
+fn tiled_matmul_matches_naive_over_shapes() {
+    let mut rng = Pcg32::seeded(0x71ed);
+    let mut sc = Scratch::new();
+    for &(m, k, n) in SHAPES {
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let want = naive::matmul(&a, &b, m, k, n);
+        let mut got = vec![0.0f32; m * n];
+        gemm::matmul_into(&mut sc, &a, &b, m, k, n, &mut got);
+        assert_close(&got, &want, k, &format!("matmul {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn tiled_matmul_tn_matches_naive_over_shapes() {
+    let mut rng = Pcg32::seeded(0x71ee);
+    let mut sc = Scratch::new();
+    for &(r, m, n) in SHAPES {
+        let a = rng.normal_vec(r * m, 1.0); // [r,m], logical A = aᵀ
+        let b = rng.normal_vec(r * n, 1.0);
+        let want = naive::matmul_tn(&a, &b, r, m, n);
+        let mut got = vec![0.0f32; m * n];
+        gemm::matmul_tn_into(&mut sc, &a, &b, r, m, n, &mut got);
+        assert_close(&got, &want, r, &format!("matmul_tn {r}x{m}x{n}"));
+    }
+}
+
+#[test]
+fn tiled_matmul_nt_matches_naive_over_shapes() {
+    let mut rng = Pcg32::seeded(0x71ef);
+    let mut sc = Scratch::new();
+    for &(m, k, n) in SHAPES {
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(n * k, 1.0); // [n,k], logical B = bᵀ
+        let want = naive::matmul_nt(&a, &b, m, k, n);
+        let mut got = vec![0.0f32; m * n];
+        gemm::matmul_nt_into(&mut sc, &a, &b, m, k, n, &mut got);
+        assert_close(&got, &want, k, &format!("matmul_nt {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn fused_conv_fwd_matches_naive() {
+    // (kh, kw, cin, cout, stride, b, h, w) — 1x1 kernels, strides,
+    // non-square and non-divisible spatial dims, multi-batch
+    let cases = [
+        (1, 1, 1, 1, 1, 1, 2, 2),
+        (1, 1, 3, 8, 1, 2, 5, 5),
+        (1, 1, 4, 4, 2, 1, 8, 8),
+        (3, 3, 1, 1, 1, 1, 3, 3),
+        (3, 3, 2, 3, 1, 2, 7, 5),
+        (3, 3, 3, 8, 2, 1, 9, 9),
+        (5, 5, 2, 2, 1, 1, 6, 6),
+    ];
+    let mut rng = Pcg32::seeded(0xc0de);
+    let mut sc = Scratch::new();
+    for &(kh, kw, cin, cout, stride, b, h, w) in &cases {
+        let cv = Conv { kh, kw, cin, cout, stride };
+        let x = rng.normal_vec(b * h * w * cin, 1.0);
+        let wk = rng.normal_vec(kh * kw * cin * cout, 0.5);
+        let want = naive::conv_fwd(&cv, &x, &wk, b, h, w);
+        let (ho, wo) = cv.out_hw(h, w);
+        let mut got = vec![0.0f32; b * ho * wo * cout];
+        cv.fwd_into(&mut sc, &x, &wk, b, h, w, &mut got);
+        let kk = kh * kw * cin;
+        assert_close(&got, &want, kk, &format!("conv {kh}x{kw} s{stride} {cin}->{cout}"));
+    }
+}
+
+#[test]
+fn fused_conv_bwd_matches_naive() {
+    let cases = [
+        (1, 1, 2, 3, 1, 1, 4, 4),
+        (1, 1, 4, 4, 2, 1, 8, 8),
+        (3, 3, 2, 3, 1, 2, 7, 5),
+        (3, 3, 3, 4, 2, 1, 9, 9),
+    ];
+    let mut rng = Pcg32::seeded(0xbeef);
+    let mut sc = Scratch::new();
+    for &(kh, kw, cin, cout, stride, b, h, w) in &cases {
+        let cv = Conv { kh, kw, cin, cout, stride };
+        let (ho, wo) = cv.out_hw(h, w);
+        let x = rng.normal_vec(b * h * w * cin, 1.0);
+        let wk = rng.normal_vec(kh * kw * cin * cout, 0.5);
+        let gy = rng.normal_vec(b * ho * wo * cout, 1.0);
+        let (want_dx, want_dw) = naive::conv_bwd(&cv, &x, &wk, &gy, b, h, w);
+        let mut dx = vec![0.0f32; b * h * w * cin];
+        let mut dw = vec![0.0f32; kh * kw * cin * cout];
+        cv.bwd_into(&mut sc, &x, &wk, &gy, b, h, w, &mut dx, &mut dw);
+        let what = format!("conv-bwd {kh}x{kw} s{stride} {cin}->{cout}");
+        // dW accumulates over b*ho*wo patch rows; dx over cout
+        assert_close(&dw, &want_dw, b * ho * wo, &format!("{what}: dw"));
+        assert_close(&dx, &want_dx, cout * kh * kw, &format!("{what}: dx"));
+    }
+}
+
+#[test]
+fn thread_count_does_not_change_results() {
+    // Threads only partition output rows; every element accumulates in
+    // the same order, so results must be bitwise identical. The
+    // FICABU_THREADS env path is exercised in its own test binary
+    // (`tests/gemm_threads_env.rs`) so no parallel test reads the
+    // environment while it is being mutated.
+    let (m, k, n) = (130, 700, 90); // big enough to clear the fork threshold
+    let mut rng = Pcg32::seeded(0xdead);
+    let a = rng.normal_vec(m * k, 1.0);
+    let b = rng.normal_vec(k * n, 1.0);
+    let mut sc = Scratch::new();
+    let av = gemm::Strided { data: &a, rs: k, cs: 1 };
+    let bv = gemm::Strided { data: &b, rs: n, cs: 1 };
+    let mut y1 = vec![0.0f32; m * n];
+    gemm::gemm_threads(&mut sc, &av, &bv, m, k, n, &mut y1, 1);
+    for threads in [2usize, 3, 4, 7] {
+        let mut yt = vec![0.0f32; m * n];
+        gemm::gemm_threads(&mut sc, &av, &bv, m, k, n, &mut yt, threads);
+        for (i, (u, v)) in y1.iter().zip(&yt).enumerate() {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "threads={threads} diverges at [{i}]: {u} vs {v}"
+            );
+        }
+    }
+}
+
+#[test]
+fn scratch_stops_allocating_at_steady_state() {
+    // repeated same-shape GEMMs must hit the arena, not the allocator
+    let (m, k, n) = (64, 576, 64);
+    let mut rng = Pcg32::seeded(0x5c7a);
+    let a = rng.normal_vec(m * k, 1.0);
+    let b = rng.normal_vec(k * n, 1.0);
+    let mut sc = Scratch::new();
+    let mut out = vec![0.0f32; m * n];
+    gemm::matmul_into(&mut sc, &a, &b, m, k, n, &mut out);
+    let grows_after_first = sc.grows();
+    for _ in 0..10 {
+        gemm::matmul_into(&mut sc, &a, &b, m, k, n, &mut out);
+    }
+    assert_eq!(
+        sc.grows(),
+        grows_after_first,
+        "steady-state GEMMs must reuse pooled panels"
+    );
+    assert_eq!(sc.takes(), 11);
+}
