@@ -114,7 +114,7 @@ fn main() {
         &prep.model, &mut params, &x, &labels, &prep.global, &prep.fimd, &prep.damp, &cfg,
     )
     .unwrap();
-    for precision in [Precision::Int8, Precision::Fp32] {
+    for precision in [Precision::Int8, Precision::F32] {
         let fic = FicabuProcessor::new(meta.tile, precision).cost(&r);
         let base = BaselineProcessor::new(meta.tile, precision).cost(&r);
         println!(

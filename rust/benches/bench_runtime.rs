@@ -14,9 +14,10 @@ use ficabu::config::{ModelMeta, SharedMeta};
 use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
 use ficabu::model::{Model, ParamStore};
 use ficabu::runtime::cpu::gemm;
-use ficabu::runtime::cpu::kernels::{naive, Conv};
+use ficabu::runtime::cpu::kernels::{self, naive, Conv};
 use ficabu::runtime::cpu::scratch::Scratch;
 use ficabu::runtime::{ModuleSpec, Runtime};
+use ficabu::tensor::quant::QTensor;
 use ficabu::tensor::Tensor;
 use ficabu::util::prng::Pcg32;
 use harness::Bench;
@@ -76,6 +77,17 @@ fn main() {
             "[runtime]   -> speedup {:5.2}x over naive ({name})",
             naive_min / tiled_min
         );
+        // true-int8 path at the same shape: weight pre-quantized per
+        // output channel, activation quantized during panel packing
+        let wq = QTensor::from_weight(&Tensor::new(vec![k, n], bm.clone()).unwrap());
+        let int8_min = b.bench_flops(&format!("gemm/tiled-int8/{name}"), tiled_iters, flops, || {
+            kernels::matmul_i8_into(&mut sc, &a, &wq, m, k, n, &mut out);
+            out[0]
+        });
+        println!(
+            "[runtime]   -> int8 speedup {:5.2}x over tiled f32 ({name})",
+            tiled_min / int8_min
+        );
     }
 
     // --- conv: fused-packing lowering vs materialized im2col + naive ---
@@ -97,6 +109,18 @@ fn main() {
     println!(
         "[runtime]   -> speedup {:5.2}x over naive (conv {conv_name})",
         naive_min / fused_min
+    );
+    let wq_conv = QTensor::from_weight(
+        &Tensor::new(vec![cv.kh, cv.kw, cv.cin, cv.cout], wk.clone()).unwrap(),
+    );
+    let int8_conv_min =
+        b.bench_flops(&format!("conv/fused-int8/{conv_name}"), tiled_iters, cflops, || {
+            cv.fwd_i8_into(&mut sc, &x, &wq_conv, cb, ch, cw, &mut y);
+            y[0]
+        });
+    println!(
+        "[runtime]   -> int8 speedup {:5.2}x over fused f32 (conv {conv_name})",
+        fused_min / int8_conv_min
     );
 
     // --- dispatch overhead: smallest module (loss_grad) ---
@@ -153,6 +177,13 @@ fn main() {
     if !smoke {
         b.bench_once("unlearning event: SSD (all layers)", || {
             exp::run_mode(&prep, 0, Mode::Ssd, None).unwrap()
+        });
+        // int8-served pipeline: quantized store, int8 forward/checkpoint
+        // GEMMs, f32 gradient chain
+        let opts8 = PrepareOpts { int8: true, ..opts };
+        let prep8 = exp::prepare("rn18slim", DatasetKind::Cifar20, &opts8).unwrap();
+        b.bench("unlearning event: FiCABU int8-served", 5, || {
+            exp::run_mode(&prep8, 0, Mode::Ficabu, None).unwrap()
         });
     }
 

@@ -143,12 +143,15 @@ impl EdgeServer {
             metrics::eval_accuracy(&self.model, &self.params, &self.train, &retain_idx)?;
 
         // hardware cost: this run on FiCABU vs the SSD ledger on baseline
+        // (same executed precision, so the f32-gradient lane penalty and
+        // byte widths apply to both sides of the comparison)
         let fic = self.ficabu_hw.cost(&report);
         let ssd_ref_report = UnlearnReport {
             ledger: ssd_ledger(meta, meta.batch),
             fimd_elems: meta.total_params() as u64 * (meta.batch / meta.microbatch) as u64,
             damp_elems: meta.total_params() as u64,
             act_cache_bytes: report.act_cache_bytes,
+            precision: report.precision,
             ..Default::default()
         };
         let ssd = self.baseline_hw.cost(&ssd_ref_report);

@@ -13,7 +13,7 @@ use crate::config::{artifacts_root, ModelMeta, SharedMeta};
 use crate::data::{cifar20_like, pinsface_like, Dataset, DatasetCfg};
 use crate::fisher::{compute_global_importance, FimdEngine, Importance};
 use crate::model::{Model, ParamStore};
-use crate::runtime::Runtime;
+use crate::runtime::{Precision, Runtime};
 use crate::unlearn::{make_onehot, DampEngine};
 use crate::util::prng::Pcg32;
 
@@ -79,7 +79,10 @@ pub struct PrepareOpts {
     pub seed: u64,
     /// Ignore cached checkpoints and retrain.
     pub retrain: bool,
-    /// Apply INT8 fake quantization after training (Table IV mode).
+    /// Serve the model in true INT8 after training (Table IV mode):
+    /// weights quantized per output channel, forwards/evals execute the
+    /// int8 GEMM path, the gradient chain stays f32 over the snapped
+    /// masters.
     pub int8: bool,
     pub verbose: bool,
 }
@@ -110,6 +113,8 @@ pub struct Prepared {
     pub damp: DampEngine,
     pub kind: DatasetKind,
     pub loss_curve: Vec<f32>,
+    /// Serving precision (int8 when the store is quantized).
+    pub precision: Precision,
 }
 
 fn runs_dir() -> PathBuf {
@@ -135,20 +140,27 @@ pub fn prepare(model_name: &str, kind: DatasetKind, opts: &PrepareOpts) -> Resul
     let ckpt = runs_dir().join(format!("{tag}.fcb"));
     let imp_path = runs_dir().join(format!("{tag}.imp"));
 
-    let (params, global, loss_curve) = if !opts.retrain && ckpt.exists() && imp_path.exists() {
+    let (mut params, global, loss_curve) = if !opts.retrain && ckpt.exists() && imp_path.exists() {
         let params = ParamStore::load(&ckpt)?;
         params.validate(&model.meta)?;
         (params, Importance::load(&imp_path)?, vec![])
     } else {
         let (mut params, curve) = train_model(&model, &train, opts)?;
         if opts.int8 {
-            params.fake_quant_int8();
+            // true int8 store: per-channel weights + snapped f32
+            // masters, so I_D below sees the deployed model
+            params.quantize_int8(&model.meta);
         }
         let global = global_importance(&model, &params, &train, &fimd, opts)?;
         params.save(&ckpt)?;
         global.save(&imp_path)?;
         (params, global, curve)
     };
+    if opts.int8 && !params.is_quantized() {
+        // cache-hit path: the checkpoint stores the snapped f32 masters;
+        // re-deriving the int8 copies is exact on the saved grid
+        params.quantize_int8(&model.meta);
+    }
 
     Ok(Prepared {
         rt,
@@ -161,6 +173,7 @@ pub fn prepare(model_name: &str, kind: DatasetKind, opts: &PrepareOpts) -> Resul
         damp,
         kind,
         loss_curve,
+        precision: if opts.int8 { Precision::Int8 } else { Precision::F32 },
     })
 }
 

@@ -64,7 +64,9 @@ pub fn checkpoint_stride(model_name: &str) -> usize {
 }
 
 /// Build the UnlearnConfig for a mode, calibrating the BD sigmoid from an
-/// SSD selection profile when needed (paper §III-B procedure).
+/// SSD selection profile when needed (paper §III-B procedure). The
+/// forward/eval precision follows the prepared store (int8-served when
+/// `prepare` ran with `int8`).
 pub fn mode_config(prep: &Prepared, mode: Mode, ssd_selection: Option<&[u64]>) -> UnlearnConfig {
     let (alpha, lambda) = prep.kind.ssd_params(&prep.model.meta.name);
     let tau = prep.kind.tau();
@@ -74,7 +76,7 @@ pub fn mode_config(prep: &Prepared, mode: Mode, ssd_selection: Option<&[u64]>) -
         Some(s) => Schedule::from_selection_distribution(s, 10.0),
         None => Schedule::Sigmoid { cm: (big_l as f64 + 1.0) / 2.0, br: 10.0 },
     };
-    match mode {
+    let cfg = match mode {
         Mode::Baseline => UnlearnConfig::ssd(alpha, lambda), // unused
         Mode::Ssd => UnlearnConfig::ssd(alpha, lambda),
         Mode::Cau => UnlearnConfig::cau(alpha, lambda, cps, tau),
@@ -82,7 +84,8 @@ pub fn mode_config(prep: &Prepared, mode: Mode, ssd_selection: Option<&[u64]>) -
         Mode::Ficabu => {
             UnlearnConfig::ficabu(alpha, lambda, schedule(ssd_selection), cps, tau)
         }
-    }
+    };
+    cfg.with_precision(prep.precision)
 }
 
 /// Run one (class, mode) cell: clone the trained parameters, unlearn,

@@ -101,14 +101,22 @@ impl Importance {
     }
 }
 
-/// Concatenate a segment's gradient tensors into one burst buffer
-/// (meta parameter order — must mirror the dampening write-back).
-pub fn concat_seg(tensors: &[Tensor]) -> Vec<f32> {
-    let n: usize = tensors.iter().map(|t| t.len()).sum();
-    let mut out = Vec::with_capacity(n);
+/// Concatenate a segment's gradient tensors into a caller-owned burst
+/// buffer (meta parameter order — must mirror the dampening
+/// write-back). The buffer is cleared and refilled, so one allocation
+/// serves every microbatch of every segment in the hot loop.
+pub fn concat_seg_into(tensors: &[Tensor], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(tensors.iter().map(|t| t.len()).sum());
     for t in tensors {
         out.extend_from_slice(&t.data);
     }
+}
+
+/// Concatenate into a fresh buffer (allocating convenience).
+pub fn concat_seg(tensors: &[Tensor]) -> Vec<f32> {
+    let mut out = Vec::new();
+    concat_seg_into(tensors, &mut out);
     out
 }
 
@@ -118,8 +126,12 @@ pub fn concat_seg(tensors: &[Tensor]) -> Vec<f32> {
 pub struct FimdEngine {
     exe: Rc<Executable>,
     pub tile: usize,
-    /// Total elements streamed (feeds the hwsim cycle model).
+    /// *Real* elements streamed (feeds the hwsim cycle/traffic model).
     pub elems_streamed: std::cell::Cell<u64>,
+    /// Zero-pad lanes of tail bursts, counted separately: they occupy
+    /// IP cycles but never move over DDR (and previously inflated
+    /// `elems_streamed` by a full tile per non-divisible segment).
+    pub pad_elems: std::cell::Cell<u64>,
 }
 
 impl FimdEngine {
@@ -128,29 +140,35 @@ impl FimdEngine {
             exe: rt.load(&ModuleSpec::Fimd { shared: shared.clone() })?,
             tile: shared.tile,
             elems_streamed: std::cell::Cell::new(0),
+            pad_elems: std::cell::Cell::new(0),
         })
     }
 
     /// `acc[i] += scale * grads[i]^2` for a whole segment buffer.
+    /// The two tile buffers are hoisted out of the tile loop — one
+    /// allocation pair per call, not per tile (and the module reuses
+    /// them across every full tile; only the tail rewrites its padding).
     pub fn accumulate(&self, acc: &mut [f32], grads: &[f32], scale: f32) -> Result<()> {
         if acc.len() != grads.len() {
             bail!("fimd: acc {} vs grads {}", acc.len(), grads.len());
         }
         let t = self.tile;
         let scale_t = Tensor::vec1(vec![scale]);
+        let mut gbuf = Tensor::vec1(vec![0.0f32; t]);
+        let mut abuf = Tensor::vec1(vec![0.0f32; t]);
         let mut off = 0;
         while off < acc.len() {
             let n = t.min(acc.len() - off);
-            let mut gbuf = vec![0.0f32; t];
-            gbuf[..n].copy_from_slice(&grads[off..off + n]);
-            let mut abuf = vec![0.0f32; t];
-            abuf[..n].copy_from_slice(&acc[off..off + n]);
-            let out = self
-                .exe
-                .run(&[&Tensor::vec1(gbuf), &Tensor::vec1(abuf), &scale_t])?;
+            gbuf.data[..n].copy_from_slice(&grads[off..off + n]);
+            abuf.data[..n].copy_from_slice(&acc[off..off + n]);
+            if n < t {
+                gbuf.data[n..].fill(0.0);
+                abuf.data[n..].fill(0.0);
+            }
+            let out = self.exe.run(&[&gbuf, &abuf, &scale_t])?;
             acc[off..off + n].copy_from_slice(&out[0].data[..n]);
-            self.elems_streamed
-                .set(self.elems_streamed.get() + t as u64);
+            self.elems_streamed.set(self.elems_streamed.get() + n as u64);
+            self.pad_elems.set(self.pad_elems.get() + (t - n) as u64);
             off += n;
         }
         Ok(())
@@ -173,6 +191,7 @@ pub fn compute_global_importance(
     let mut imp = Importance::zeros_like(meta);
     let scale = 1.0 / (batches.len() * num_mb) as f32;
 
+    let mut burst: Vec<f32> = Vec::new();
     for (x, onehot) in batches {
         let cache = model.forward_cached(params, x)?;
         for mb in 0..num_mb {
@@ -183,7 +202,7 @@ pub fn compute_global_importance(
             for k in (0..meta.num_segments()).rev() {
                 let x_mb = cache.microbatch_input(k, mb, mb_size)?;
                 let (grads, gx) = model.segment_bwd(k, params, &x_mb, &gy)?;
-                let burst = concat_seg(&grads);
+                concat_seg_into(&grads, &mut burst);
                 engine.accumulate(&mut imp.per_seg[k], &burst, scale)?;
                 gy = gx;
             }
@@ -210,7 +229,15 @@ mod tests {
             let want = 0.5 + 0.25 * grads[i] * grads[i];
             assert!((acc[i] - want).abs() < 1e-6, "{i}");
         }
-        assert_eq!(eng.elems_streamed.get(), 2 * shared.tile as u64);
+        // real/pad split: the tail tile must charge only its real lanes
+        // as streamed elements, the zero filler as pad cycles — and the
+        // two must add up to the burst train the IP actually clocked.
+        assert_eq!(eng.elems_streamed.get(), n as u64);
+        assert_eq!(eng.pad_elems.get(), (shared.tile - 1234) as u64);
+        assert_eq!(
+            eng.elems_streamed.get() + eng.pad_elems.get(),
+            2 * shared.tile as u64
+        );
     }
 
     #[test]
@@ -236,5 +263,18 @@ mod tests {
         let a = Tensor::vec1(vec![1.0, 2.0]);
         let b = Tensor::vec1(vec![3.0]);
         assert_eq!(concat_seg(&[a, b]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn concat_into_reuses_buffer() {
+        let a = Tensor::vec1(vec![1.0, 2.0, 3.0]);
+        let b = Tensor::vec1(vec![4.0]);
+        let mut buf = Vec::new();
+        concat_seg_into(&[a.clone(), b], &mut buf);
+        assert_eq!(buf, vec![1.0, 2.0, 3.0, 4.0]);
+        let cap = buf.capacity();
+        concat_seg_into(&[a], &mut buf);
+        assert_eq!(buf, vec![1.0, 2.0, 3.0]);
+        assert_eq!(buf.capacity(), cap, "refill must not reallocate");
     }
 }

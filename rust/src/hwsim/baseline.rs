@@ -35,7 +35,7 @@ impl BaselineProcessor {
     }
 
     fn traffic(&self, report: &UnlearnReport) -> Traffic {
-        let eb = self.precision.bytes();
+        let eb = crate::hwsim::pipeline::effective_precision(self.precision, report).bytes();
         Traffic {
             activations: 2 * report.act_cache_bytes as u64 / 4 * eb,
             params: 3 * report.damp_elems * eb,
@@ -45,12 +45,10 @@ impl BaselineProcessor {
     }
 
     /// Cost of a run on the IP-less platform: GEMM on VTA, elementwise
-    /// phases serialized on the core.
+    /// phases serialized on the core. The software Fisher/dampening
+    /// loops iterate real elements only — no burst padding on the core.
     pub fn cost(&self, report: &UnlearnReport) -> RunCost {
-        let l = &report.ledger;
-        let gemm = self
-            .vta
-            .cycles_for_macs(l.forward + l.backward + l.checkpoint);
+        let gemm = crate::hwsim::pipeline::gemm_cycles(&self.vta, report);
         let fimd = self.fimd_sw.core_cycles(report.fimd_elems);
         let damp = self.damp_sw.core_cycles(report.damp_elems);
         let mem = self.ddr.cycles(&self.traffic(report));

@@ -41,21 +41,12 @@ impl DdrModel {
     }
 }
 
-/// Element size in bytes for the two deployment modes.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Precision {
-    Int8,
-    Fp32,
-}
-
-impl Precision {
-    pub fn bytes(self) -> u64 {
-        match self {
-            Precision::Int8 => 1,
-            Precision::Fp32 => 4,
-        }
-    }
-}
+/// Element precision of the modeled data streams. Since PR 3 this is
+/// the runtime's own [`Precision`] — the coordinator *executes* int8
+/// forwards, so the hwsim shares the enum instead of assuming a
+/// deployment mode (`UnlearnReport::precision` carries what actually
+/// ran).
+pub use crate::runtime::Precision;
 
 #[cfg(test)]
 mod tests {
@@ -72,6 +63,6 @@ mod tests {
     #[test]
     fn precision_bytes() {
         assert_eq!(Precision::Int8.bytes(), 1);
-        assert_eq!(Precision::Fp32.bytes(), 4);
+        assert_eq!(Precision::F32.bytes(), 4);
     }
 }

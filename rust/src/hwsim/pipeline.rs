@@ -37,7 +37,31 @@ pub struct FicabuProcessor {
     pub damp: StreamingIp,
     pub ddr: DdrModel,
     pub power: PowerModel,
+    /// Deployment assumption used when a report did not execute int8
+    /// (legacy fake-quant mode); an int8-*executed* report overrides it.
     pub precision: Precision,
+}
+
+/// Data-stream precision to charge for a report: what actually executed
+/// (int8-served run) wins over the processor's deployment assumption.
+pub(crate) fn effective_precision(assumed: Precision, report: &UnlearnReport) -> Precision {
+    if report.precision == Precision::Int8 {
+        Precision::Int8
+    } else {
+        assumed
+    }
+}
+
+/// MAC-stream cycles on the int8 PE array. For an int8-*executed*
+/// report, the forward/checkpoint MACs really streamed as int8 and the
+/// f32 gradient chain occupies 4 lanes per MAC; otherwise every MAC is
+/// charged at PE rate (the legacy deployment assumption).
+pub(crate) fn gemm_cycles(vta: &VtaGemm, report: &UnlearnReport) -> u64 {
+    let l = &report.ledger;
+    match report.precision {
+        Precision::Int8 => vta.cycles_for_macs(l.forward + l.checkpoint + 4 * l.backward),
+        Precision::F32 => vta.cycles_for_macs(l.forward + l.backward + l.checkpoint),
+    }
 }
 
 impl FicabuProcessor {
@@ -52,9 +76,13 @@ impl FicabuProcessor {
         }
     }
 
-    /// DDR traffic estimate from an engine report (see mem.rs).
+    /// DDR traffic estimate from an engine report (see mem.rs). Charged
+    /// from the precision the report *executed* (int8 activations and
+    /// parameters move 1 byte/element), falling back to the processor's
+    /// deployment assumption for legacy f32 reports. Pad lanes of IP
+    /// bursts never appear here — they cost cycles, not bandwidth.
     pub fn traffic(&self, report: &UnlearnReport) -> Traffic {
-        let eb = self.precision.bytes();
+        let eb = effective_precision(self.precision, report).bytes();
         Traffic {
             // step-0 cache write + checkpoint re-reads (counted once: the
             // dominant term is the single write of every segment input)
@@ -71,12 +99,10 @@ impl FicabuProcessor {
     /// Cost of one unlearning run on this processor, from the live
     /// engine's measured report.
     pub fn cost(&self, report: &UnlearnReport) -> RunCost {
-        let l = &report.ledger;
-        let gemm = self
-            .vta
-            .cycles_for_macs(l.forward + l.backward + l.checkpoint);
-        let fimd = self.fimd.ip_cycles(report.fimd_elems);
-        let damp = self.damp.ip_cycles(report.damp_elems);
+        let gemm = gemm_cycles(&self.vta, report);
+        // the IPs clock every burst lane, padding included
+        let fimd = self.fimd.ip_cycles(report.fimd_elems + report.fimd_pad_elems);
+        let damp = self.damp.ip_cycles(report.damp_elems + report.damp_pad_elems);
         let mem = self.ddr.cycles(&self.traffic(report));
         // streaming pipeline: engines overlap; memory overlaps compute via
         // the double-buffered DMA, so the run is bound by the slowest stream
@@ -172,7 +198,35 @@ mod tests {
     fn int8_traffic_smaller_than_fp32() {
         let r = report(1 << 20, 1 << 21, 1 << 16, 1 << 16);
         let p8 = FicabuProcessor::new(8192, Precision::Int8);
-        let p32 = FicabuProcessor::new(8192, Precision::Fp32);
+        let p32 = FicabuProcessor::new(8192, Precision::F32);
         assert!(p8.traffic(&r).total() < p32.traffic(&r).total());
+    }
+
+    #[test]
+    fn executed_int8_overrides_deployment_assumption() {
+        // an int8-*executed* report charges int8 traffic even on an
+        // f32-assumed processor, and its f32 gradient chain costs 4
+        // PE lanes per MAC
+        let mut r = report(1 << 20, 1 << 21, 1 << 16, 1 << 16);
+        let p32 = FicabuProcessor::new(8192, Precision::F32);
+        let t_f32 = p32.traffic(&r).total();
+        let g_f32 = p32.cost(&r).phases.gemm_cycles;
+        r.precision = Precision::Int8;
+        assert!(p32.traffic(&r).total() < t_f32);
+        let g_i8 = p32.cost(&r).phases.gemm_cycles;
+        // fwd + 4*bwd > fwd + bwd for this ledger (bwd dominates)
+        assert!(g_i8 > g_f32);
+    }
+
+    #[test]
+    fn pad_elems_cost_cycles_not_bandwidth() {
+        let base = report(1 << 20, 1 << 21, 1 << 16, 1 << 16);
+        let mut padded = base.clone();
+        padded.fimd_pad_elems = 1 << 15;
+        padded.damp_pad_elems = 1 << 15;
+        let p = FicabuProcessor::new(8192, Precision::Int8);
+        assert_eq!(p.traffic(&base).total(), p.traffic(&padded).total());
+        assert!(p.cost(&padded).phases.fimd_cycles > p.cost(&base).phases.fimd_cycles);
+        assert!(p.cost(&padded).phases.damp_cycles > p.cost(&base).phases.damp_cycles);
     }
 }

@@ -13,7 +13,6 @@ use anyhow::Result;
 use ficabu::config::artifacts_root;
 use ficabu::coordinator::{EdgeServer, Request};
 use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
-use ficabu::hwsim::mem::Precision;
 use ficabu::hwsim::{BaselineProcessor, FicabuProcessor};
 use ficabu::runtime::Runtime;
 use ficabu::util::cli::Args;
@@ -200,7 +199,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
 
     let cfg = exp::tables::mode_config(&prep, Mode::Ficabu, None);
     let tile = prep.model.meta.tile;
-    let precision = if opts.int8 { Precision::Int8 } else { Precision::Fp32 };
+    let precision = prep.precision;
     let mut server = EdgeServer::new(
         prep.model,
         prep.params,

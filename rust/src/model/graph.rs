@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::ModelMeta;
 use crate::model::{ActivationCache, ParamStore};
-use crate::runtime::{Executable, ModuleSpec, Runtime};
+use crate::runtime::{ArgRef, Executable, ModuleSpec, Precision, Runtime};
 use crate::tensor::Tensor;
 
 pub struct Model {
@@ -44,24 +44,77 @@ impl Model {
         self.meta.num_segments()
     }
 
-    /// Whole-model forward through the fused `logits` module (batch = meta.batch).
+    /// Serving precision implied by the store: quantized -> int8.
+    pub fn store_precision(params: &ParamStore) -> Precision {
+        if params.is_quantized() {
+            Precision::Int8
+        } else {
+            Precision::F32
+        }
+    }
+
+    /// Parameter arguments of segment `k` at the requested precision:
+    /// int8 weight slots where the store has them, f32 otherwise.
+    fn seg_args<'a>(params: &'a ParamStore, k: usize, prec: Precision) -> Vec<ArgRef<'a>> {
+        match (prec, params.qseg(k)) {
+            (Precision::Int8, Some(qs)) => params.seg[k]
+                .iter()
+                .zip(qs)
+                .map(|(t, q)| match q {
+                    Some(qt) => ArgRef::Quant(qt),
+                    None => ArgRef::F32(t),
+                })
+                .collect(),
+            _ => params.seg[k].iter().map(ArgRef::F32).collect(),
+        }
+    }
+
+    fn check_precision(params: &ParamStore, prec: Precision) -> Result<()> {
+        if prec == Precision::Int8 && !params.is_quantized() {
+            bail!("int8 forward requested on an unquantized store (ParamStore::quantize_int8)");
+        }
+        Ok(())
+    }
+
+    /// Whole-model forward through the fused `logits` module (batch =
+    /// meta.batch), at the store's native precision.
     pub fn logits(&self, params: &ParamStore, x: &Tensor) -> Result<Tensor> {
-        let mut args = params.flat();
-        args.push(x);
-        let mut out = self.logits_exe.run(&args)?;
+        self.logits_prec(params, x, Self::store_precision(params))
+    }
+
+    /// [`Model::logits`] at an explicit precision.
+    pub fn logits_prec(&self, params: &ParamStore, x: &Tensor, prec: Precision) -> Result<Tensor> {
+        Self::check_precision(params, prec)?;
+        let mut args: Vec<ArgRef> = Vec::new();
+        for k in 0..self.num_segments() {
+            args.extend(Self::seg_args(params, k, prec));
+        }
+        args.push(ArgRef::F32(x));
+        let mut out = self.logits_exe.run_mixed(&args)?;
         Ok(out.pop().context("logits output")?)
     }
 
     /// Segment-by-segment forward that caches each segment's input —
-    /// Algorithm 1 Step 0.
+    /// Algorithm 1 Step 0 — at the store's native precision.
     pub fn forward_cached(&self, params: &ParamStore, x: &Tensor) -> Result<ActivationCache> {
+        self.forward_cached_prec(params, x, Self::store_precision(params))
+    }
+
+    /// [`Model::forward_cached`] at an explicit precision.
+    pub fn forward_cached_prec(
+        &self,
+        params: &ParamStore,
+        x: &Tensor,
+        prec: Precision,
+    ) -> Result<ActivationCache> {
+        Self::check_precision(params, prec)?;
         let mut inputs = Vec::with_capacity(self.num_segments());
         let mut h = x.clone();
         for (k, exe) in self.fwd.iter().enumerate() {
             inputs.push(h.clone());
-            let mut args: Vec<&Tensor> = params.seg[k].iter().collect();
-            args.push(&h);
-            let mut out = exe.run(&args)?;
+            let mut args = Self::seg_args(params, k, prec);
+            args.push(ArgRef::F32(&h));
+            let mut out = exe.run_mixed(&args)?;
             h = out.pop().with_context(|| format!("fwd[{k}] output"))?;
         }
         Ok(ActivationCache::new(inputs, h))
@@ -76,14 +129,26 @@ impl Model {
         from_seg: usize,
         act: &Tensor,
     ) -> Result<Tensor> {
+        self.partial_forward_prec(params, from_seg, act, Self::store_precision(params))
+    }
+
+    /// [`Model::partial_forward`] at an explicit precision.
+    pub fn partial_forward_prec(
+        &self,
+        params: &ParamStore,
+        from_seg: usize,
+        act: &Tensor,
+        prec: Precision,
+    ) -> Result<Tensor> {
+        Self::check_precision(params, prec)?;
         if from_seg >= self.num_segments() {
             bail!("partial_forward: segment {} out of range", from_seg);
         }
         let mut h = act.clone();
         for k in from_seg..self.num_segments() {
-            let mut args: Vec<&Tensor> = params.seg[k].iter().collect();
-            args.push(&h);
-            let mut out = self.fwd[k].run(&args)?;
+            let mut args = Self::seg_args(params, k, prec);
+            args.push(ArgRef::F32(&h));
+            let mut out = self.fwd[k].run_mixed(&args)?;
             h = out.pop().with_context(|| format!("fwd[{k}] output"))?;
         }
         Ok(h)
@@ -175,6 +240,51 @@ mod tests {
         for (a, b) in resumed.data.iter().zip(&cache.logits.data) {
             assert!((a - b).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn int8_forward_tracks_snapped_f32_forward() {
+        let rt = Runtime::cpu().unwrap();
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
+        let model = Model::load(&rt, meta.clone()).unwrap();
+        let mut params = ParamStore::init(&meta, 19);
+        let x = rand_batch(&meta, meta.batch, 48);
+        params.quantize_int8(&meta);
+        assert_eq!(Model::store_precision(&params), Precision::Int8);
+        // f32 forward over the snapped masters = the reference the int8
+        // path approximates (weights identical, activations quantized)
+        let snapped = model.logits_prec(&params, &x, Precision::F32).unwrap();
+        let int8 = model.logits(&params, &x).unwrap();
+        assert_eq!(int8.shape, snapped.shape);
+        let num: f32 = int8
+            .data
+            .iter()
+            .zip(&snapped.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        let den: f32 = snapped.data.iter().map(|v| v * v).sum();
+        let rel = (num / den.max(1e-12)).sqrt();
+        assert!(rel < 0.35, "int8 logits diverge: rel L2 {rel}");
+        // partial/full consistency on the int8 path
+        let cache = model.forward_cached(&params, &x).unwrap();
+        for (a, b) in cache.logits.data.iter().zip(&int8.data) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        let mid = meta.num_segments() / 2;
+        let resumed = model.partial_forward(&params, mid, &cache.inputs[mid]).unwrap();
+        for (a, b) in resumed.data.iter().zip(&cache.logits.data) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn int8_forward_on_unquantized_store_rejected() {
+        let rt = Runtime::cpu().unwrap();
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
+        let model = Model::load(&rt, meta.clone()).unwrap();
+        let params = ParamStore::init(&meta, 25);
+        let x = rand_batch(&meta, meta.batch, 50);
+        assert!(model.logits_prec(&params, &x, Precision::Int8).is_err());
     }
 
     #[test]

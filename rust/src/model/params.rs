@@ -13,7 +13,8 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::config::ModelMeta;
-use crate::tensor::{quant, Tensor};
+use crate::tensor::quant::{self, QTensor};
+use crate::tensor::Tensor;
 use crate::util::prng::Pcg32;
 
 const MAGIC: &[u8; 8] = b"FICABU01";
@@ -22,6 +23,12 @@ const MAGIC: &[u8; 8] = b"FICABU01";
 pub struct ParamStore {
     /// `seg[i][j]` = j-th parameter tensor of segment i (meta order).
     pub seg: Vec<Vec<Tensor>>,
+    /// Per-(segment, param) int8 weight copies for true int8 serving
+    /// (`None` per slot for params served in f32: rank < 2 and the
+    /// positional embedding). `None` overall = plain f32 store. Kept in
+    /// lockstep with `seg`: quantized once at load, re-quantized after
+    /// each dampening write-back of the edited segment only.
+    quant: Option<Vec<Vec<Option<QTensor>>>>,
 }
 
 impl ParamStore {
@@ -36,7 +43,7 @@ impl ParamStore {
             }
             seg.push(ps);
         }
-        ParamStore { seg }
+        ParamStore { seg, quant: None }
     }
 
     /// Flatten in (segment, param) order — the AOT whole-model arg order.
@@ -44,6 +51,9 @@ impl ParamStore {
         self.seg.iter().flat_map(|s| s.iter()).collect()
     }
 
+    /// Replace every tensor (the train_step write-back). Drops any int8
+    /// copies — a full f32 parameter replacement returns the store to
+    /// f32 serving; re-quantize explicitly after training.
     pub fn set_flat(&mut self, tensors: Vec<Tensor>) -> Result<()> {
         let n: usize = self.seg.iter().map(|s| s.len()).sum();
         if tensors.len() != n {
@@ -55,6 +65,7 @@ impl ParamStore {
                 *p = it.next().unwrap();
             }
         }
+        self.quant = None;
         Ok(())
     }
 
@@ -62,14 +73,59 @@ impl ParamStore {
         self.seg.iter().flat_map(|s| s.iter()).map(|t| t.len()).sum()
     }
 
-    /// Snap every tensor onto its INT8 grid (fake quantization) — the
-    /// INT8 deployment mode of the paper's §IV-B evaluation.
+    /// Snap every tensor onto its per-tensor INT8 grid (fake
+    /// quantization). Legacy deployment-assumption mode and test oracle;
+    /// true int8 serving goes through [`ParamStore::quantize_int8`].
     pub fn fake_quant_int8(&mut self) {
         for s in self.seg.iter_mut() {
             for p in s.iter_mut() {
                 quant::fake_quant(p);
             }
         }
+    }
+
+    // --- true int8 store ---------------------------------------------------
+
+    /// True INT8 deployment (paper §IV-A): every GEMM/conv weight is
+    /// quantized per output channel and the f32 master is snapped to the
+    /// dequantized grid, so the (f32) gradient chain differentiates
+    /// exactly the weights the int8 forward executes. 1-D params
+    /// (biases, norm affines) and the positional embedding stay f32,
+    /// mirroring the hardware split.
+    pub fn quantize_int8(&mut self, meta: &ModelMeta) {
+        let mut quant = Vec::with_capacity(self.seg.len());
+        for (s, ms) in self.seg.iter_mut().zip(&meta.segments) {
+            let mut qs = Vec::with_capacity(s.len());
+            for (t, pm) in s.iter_mut().zip(&ms.params) {
+                qs.push(quantize_slot(t, &pm.name));
+            }
+            quant.push(qs);
+        }
+        self.quant = Some(quant);
+    }
+
+    /// Re-quantize one segment's weight slots after a dampening
+    /// write-back (the master f32 tensors of segment `k` changed).
+    /// No-op on an f32 store.
+    pub fn requantize_segment(&mut self, k: usize) {
+        if let Some(quant) = &mut self.quant {
+            for (t, q) in self.seg[k].iter_mut().zip(&mut quant[k]) {
+                if let Some(qt) = q {
+                    *qt = QTensor::from_weight(t);
+                    qt.dequantize_into(&mut t.data);
+                }
+            }
+        }
+    }
+
+    /// Whether the store carries int8 weight copies (serves int8).
+    pub fn is_quantized(&self) -> bool {
+        self.quant.is_some()
+    }
+
+    /// Int8 weight slots of segment `k` (`None` on an f32 store).
+    pub fn qseg(&self, k: usize) -> Option<&[Option<QTensor>]> {
+        self.quant.as_ref().map(|q| q[k].as_slice())
     }
 
     // --- checkpoint io -----------------------------------------------------
@@ -130,7 +186,7 @@ impl ParamStore {
             }
             seg.push(ps);
         }
-        Ok(ParamStore { seg })
+        Ok(ParamStore { seg, quant: None })
     }
 
     /// Shape-check against a meta inventory.
@@ -150,6 +206,18 @@ impl ParamStore {
         }
         Ok(())
     }
+}
+
+/// Quantize one parameter slot if it is a GEMM/conv weight; snap the
+/// f32 master onto the dequantized grid. Rank-1 params and the learned
+/// positional embedding (`pos` — added, never multiplied) stay f32.
+fn quantize_slot(t: &mut Tensor, name: &str) -> Option<QTensor> {
+    if t.shape.len() < 2 || name == "pos" {
+        return None;
+    }
+    let q = QTensor::from_weight(t);
+    q.dequantize_into(&mut t.data);
+    Some(q)
 }
 
 fn init_param(name: &str, shape: &[usize], rng: &mut Pcg32) -> Tensor {
@@ -267,6 +335,42 @@ mod tests {
             .sum::<f32>()
             / before.iter().map(|v| v.abs()).sum::<f32>();
         assert!(rel < 0.01, "quant err {rel}");
+    }
+
+    #[test]
+    fn quantize_int8_snaps_master_and_tracks_edits() {
+        let meta = ModelMeta::builtin("vitslim").unwrap();
+        let mut ps = ParamStore::init(&meta, 21);
+        assert!(!ps.is_quantized());
+        ps.quantize_int8(&meta);
+        assert!(ps.is_quantized());
+        // weight slots (rank >= 2, not `pos`) are quantized, others f32
+        let q0 = ps.qseg(0).unwrap();
+        assert!(q0[0].is_some(), "embed w must be quantized");
+        assert!(q0[1].is_none(), "embed bias stays f32");
+        assert!(q0[2].is_none(), "positional embedding stays f32");
+        // master == dequantized int8 copy, bit for bit
+        let qt = q0[0].as_ref().unwrap();
+        assert_eq!(qt.dequantize().data, ps.seg[0][0].data);
+        // editing a segment then requantizing restores the invariant
+        for v in ps.seg[1][2].data.iter_mut() {
+            *v *= 0.5;
+        }
+        ps.requantize_segment(1);
+        let q1 = ps.qseg(1).unwrap()[2].as_ref().unwrap();
+        assert_eq!(q1.dequantize().data, ps.seg[1][2].data);
+        // shape check still passes: quantization preserves shapes
+        ps.validate(&meta).unwrap();
+    }
+
+    #[test]
+    fn set_flat_drops_quantized_copies() {
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
+        let mut ps = ParamStore::init(&meta, 23);
+        ps.quantize_int8(&meta);
+        let cloned: Vec<Tensor> = ps.flat().into_iter().cloned().collect();
+        ps.set_flat(cloned).unwrap();
+        assert!(!ps.is_quantized());
     }
 
     #[test]

@@ -27,6 +27,7 @@ use std::thread;
 
 use super::kernels::Conv;
 use super::scratch::Scratch;
+use crate::tensor::quant::q8;
 
 /// Micro-tile rows. With NR=8 this gives 8 vector accumulators (128-bit
 /// lanes) plus broadcast/load temporaries — inside the 16-register
@@ -125,50 +126,68 @@ pub struct Im2col<'a> {
     pub w: usize,
 }
 
-impl ASrc for Im2col<'_> {
-    fn pack_a(&self, dst: &mut [f32], i0: usize, mr: usize, p0: usize, kc: usize) {
-        let cv = &self.conv;
-        let (ho, wo) = cv.out_hw(self.h, self.w);
-        let (ph, pw) = (cv.kh / 2, cv.kw / 2);
-        debug_assert!(i0 + mr <= self.batch * ho * wo, "patch rows out of range");
-        for ii in 0..MR {
-            if ii >= mr {
-                for p in 0..kc {
-                    dst[p * MR + ii] = 0.0;
-                }
-                continue;
-            }
-            let r = i0 + ii;
-            let bi = r / (ho * wo);
-            let rem = r % (ho * wo);
-            let (oy, ox) = (rem / wo, rem % wo);
-            // walk (ky, kx, c) incrementally over the k range
-            let mut c = p0 % cv.cin;
-            let kyx = p0 / cv.cin;
-            let (mut ky, mut kx) = (kyx / cv.kw, kyx % cv.kw);
+/// The one copy of the SAME-padded patch-row walk shared by the f32 and
+/// int8 im2col pack sources: `dst[p*MR + ii] = load(image_index)` (or
+/// `zero` for padding / rows `ii >= mr`), with `(ky, kx, c)` advanced
+/// incrementally over the k range. `load` is where the int8 source
+/// applies its quantization.
+fn pack_patch_rows<T: Copy>(
+    dst: &mut [T],
+    zero: T,
+    cv: &Conv,
+    batch: usize,
+    h: usize,
+    w: usize,
+    i0: usize,
+    mr: usize,
+    p0: usize,
+    kc: usize,
+    mut load: impl FnMut(usize) -> T,
+) {
+    let (ho, wo) = cv.out_hw(h, w);
+    let (ph, pw) = (cv.kh / 2, cv.kw / 2);
+    debug_assert!(i0 + mr <= batch * ho * wo, "patch rows out of range");
+    for ii in 0..MR {
+        if ii >= mr {
             for p in 0..kc {
-                let iy = (oy * cv.stride + ky) as isize - ph as isize;
-                let ix = (ox * cv.stride + kx) as isize - pw as isize;
-                dst[p * MR + ii] = if iy < 0
-                    || iy >= self.h as isize
-                    || ix < 0
-                    || ix >= self.w as isize
-                {
-                    0.0
-                } else {
-                    self.x[((bi * self.h + iy as usize) * self.w + ix as usize) * cv.cin + c]
-                };
-                c += 1;
-                if c == cv.cin {
-                    c = 0;
-                    kx += 1;
-                    if kx == cv.kw {
-                        kx = 0;
-                        ky += 1;
-                    }
+                dst[p * MR + ii] = zero;
+            }
+            continue;
+        }
+        let r = i0 + ii;
+        let bi = r / (ho * wo);
+        let rem = r % (ho * wo);
+        let (oy, ox) = (rem / wo, rem % wo);
+        // walk (ky, kx, c) incrementally over the k range
+        let mut c = p0 % cv.cin;
+        let kyx = p0 / cv.cin;
+        let (mut ky, mut kx) = (kyx / cv.kw, kyx % cv.kw);
+        for p in 0..kc {
+            let iy = (oy * cv.stride + ky) as isize - ph as isize;
+            let ix = (ox * cv.stride + kx) as isize - pw as isize;
+            dst[p * MR + ii] = if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
+                zero
+            } else {
+                load(((bi * h + iy as usize) * w + ix as usize) * cv.cin + c)
+            };
+            c += 1;
+            if c == cv.cin {
+                c = 0;
+                kx += 1;
+                if kx == cv.kw {
+                    kx = 0;
+                    ky += 1;
                 }
             }
         }
+    }
+}
+
+impl ASrc for Im2col<'_> {
+    fn pack_a(&self, dst: &mut [f32], i0: usize, mr: usize, p0: usize, kc: usize) {
+        pack_patch_rows(dst, 0.0, &self.conv, self.batch, self.h, self.w, i0, mr, p0, kc, |i| {
+            self.x[i]
+        });
     }
 }
 
@@ -459,6 +478,368 @@ pub fn matmul_nt_into(
     );
 }
 
+// ---------------------------------------------------------------------------
+// int8 pack sources
+// ---------------------------------------------------------------------------
+
+/// Left operand of an int8 `[m,k] @ [k,n]` product, quantized into
+/// MR-interleaved i8 micro-panels during packing.
+pub trait ASrcI8: Sync {
+    /// Fill `dst[p*MR + ii] = q(A[i0+ii, p0+p])` for `p < kc`,
+    /// zero-padding rows `ii >= mr` (the int8 mirror of
+    /// [`ASrc::pack_a`]).
+    fn pack_a(&self, dst: &mut [i8], i0: usize, mr: usize, p0: usize, kc: usize);
+}
+
+/// Right operand (the pre-quantized weight), packed panel-wise.
+pub trait BSrcI8: Sync {
+    /// Fill `dst[p*NR + jj] = B[p0+p, j0+jj]` for `p < kc`, zero-padding
+    /// columns `jj >= nr`.
+    fn pack_b(&self, dst: &mut [i8], j0: usize, nr: usize, p0: usize, kc: usize);
+}
+
+/// Dense f32 operand quantized on the fly during packing (symmetric
+/// per-tensor activation scale, `inv_scale = 1/scale` precomputed).
+/// Element `(r, c)` lives at `data[r*rs + c*cs]`.
+pub struct QuantStrided<'a> {
+    pub data: &'a [f32],
+    pub rs: usize,
+    pub cs: usize,
+    pub inv_scale: f32,
+}
+
+impl ASrcI8 for QuantStrided<'_> {
+    fn pack_a(&self, dst: &mut [i8], i0: usize, mr: usize, p0: usize, kc: usize) {
+        for ii in 0..MR {
+            if ii < mr {
+                let base = (i0 + ii) * self.rs + p0 * self.cs;
+                for p in 0..kc {
+                    dst[p * MR + ii] = q8(self.data[base + p * self.cs], self.inv_scale);
+                }
+            } else {
+                for p in 0..kc {
+                    dst[p * MR + ii] = 0;
+                }
+            }
+        }
+    }
+}
+
+/// Already-quantized dense operand view (the int8 weight): element
+/// `(r, c)` at `data[r*rs + c*cs]`.
+pub struct QStrided<'a> {
+    pub data: &'a [i8],
+    pub rs: usize,
+    pub cs: usize,
+}
+
+impl BSrcI8 for QStrided<'_> {
+    fn pack_b(&self, dst: &mut [i8], j0: usize, nr: usize, p0: usize, kc: usize) {
+        for p in 0..kc {
+            let base = (p0 + p) * self.rs + j0 * self.cs;
+            let drow = &mut dst[p * NR..(p + 1) * NR];
+            for (jj, d) in drow.iter_mut().enumerate() {
+                *d = if jj < nr { self.data[base + jj * self.cs] } else { 0 };
+            }
+        }
+    }
+}
+
+/// [`Im2col`] with on-the-fly int8 quantization: SAME-conv patch rows of
+/// an NHWC f32 image, quantized with the image's per-tensor scale, so
+/// conv stays fused on the int8 path too.
+pub struct Im2colQ<'a> {
+    pub x: &'a [f32],
+    pub conv: Conv,
+    pub batch: usize,
+    pub h: usize,
+    pub w: usize,
+    pub inv_scale: f32,
+}
+
+impl ASrcI8 for Im2colQ<'_> {
+    fn pack_a(&self, dst: &mut [i8], i0: usize, mr: usize, p0: usize, kc: usize) {
+        pack_patch_rows(dst, 0, &self.conv, self.batch, self.h, self.w, i0, mr, p0, kc, |i| {
+            q8(self.x[i], self.inv_scale)
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// int8 micro-kernel + panel loop
+// ---------------------------------------------------------------------------
+
+/// `acc += Ap @ Bp` over one packed panel pair of `2*kc2` k-steps (kc
+/// rounded up to even; pad rows are zeroed by the packer). Every i8xi8
+/// product is exact in i16 and each adjacent k-pair sums without
+/// overflow (2 * 127^2 < 2^15), so the pair sums accumulate exactly in
+/// i32 — results are bitwise identical across kernel implementations,
+/// k-block order, and thread count.
+///
+/// x86-64 path: the pair-sum idiom IS `pmaddwd` (SSE2, part of the
+/// x86-64 baseline), retiring 8 MACs per instruction vs the 4-lane
+/// f32 mul+add pair — the source of the int8 throughput win.
+#[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+#[inline(always)]
+fn micro_kernel_i8(kc2: usize, ap: &[i8], bp: &[i8], acc: &mut [[i32; NR]; MR]) {
+    use std::arch::x86_64::*;
+    // the lane choreography below is written for the 4x8 micro-tile
+    debug_assert!(MR == 4 && NR == 8);
+    debug_assert!(ap.len() >= 2 * kc2 * MR && bp.len() >= 2 * kc2 * NR);
+    // SAFETY: SSE2 is unconditionally available under this cfg; each
+    // 8-byte load reads within the bounds asserted above (the last A
+    // load ends exactly at 2*kc2*MR, the last B load at 2*kc2*NR).
+    unsafe {
+        let zero = _mm_setzero_si128();
+        let mut va = [[zero; 2]; MR];
+        for p in 0..kc2 {
+            // B rows 2p and 2p+1 (8 i8 columns each) -> per-column
+            // (k0, k1) i16 pairs for columns 0..3 / 4..7
+            let b0 = _mm_loadl_epi64(bp.as_ptr().add(2 * p * NR) as *const __m128i);
+            let b1 = _mm_loadl_epi64(bp.as_ptr().add((2 * p + 1) * NR) as *const __m128i);
+            let bpairs = _mm_unpacklo_epi8(b0, b1);
+            let bsign = _mm_cmpgt_epi8(zero, bpairs);
+            let blo = _mm_unpacklo_epi8(bpairs, bsign); // columns 0..3
+            let bhi = _mm_unpackhi_epi8(bpairs, bsign); // columns 4..7
+            // A rows 2p and 2p+1 are adjacent MR-byte groups: one 8-byte
+            // load carries all four rows' (k0, k1) pairs; i32 lane i of
+            // `a16` is row i's sign-extended pair
+            let araw = _mm_loadl_epi64(ap.as_ptr().add(2 * p * MR) as *const __m128i);
+            let apairs = _mm_unpacklo_epi8(araw, _mm_srli_si128::<4>(araw));
+            let asign = _mm_cmpgt_epi8(zero, apairs);
+            let a16 = _mm_unpacklo_epi8(apairs, asign);
+            let aa0 = _mm_shuffle_epi32::<0x00>(a16);
+            let aa1 = _mm_shuffle_epi32::<0x55>(a16);
+            let aa2 = _mm_shuffle_epi32::<0xaa>(a16);
+            let aa3 = _mm_shuffle_epi32::<0xff>(a16);
+            va[0][0] = _mm_add_epi32(va[0][0], _mm_madd_epi16(blo, aa0));
+            va[0][1] = _mm_add_epi32(va[0][1], _mm_madd_epi16(bhi, aa0));
+            va[1][0] = _mm_add_epi32(va[1][0], _mm_madd_epi16(blo, aa1));
+            va[1][1] = _mm_add_epi32(va[1][1], _mm_madd_epi16(bhi, aa1));
+            va[2][0] = _mm_add_epi32(va[2][0], _mm_madd_epi16(blo, aa2));
+            va[2][1] = _mm_add_epi32(va[2][1], _mm_madd_epi16(bhi, aa2));
+            va[3][0] = _mm_add_epi32(va[3][0], _mm_madd_epi16(blo, aa3));
+            va[3][1] = _mm_add_epi32(va[3][1], _mm_madd_epi16(bhi, aa3));
+        }
+        for (i, v) in va.iter().enumerate() {
+            let mut tmp = [0i32; NR];
+            _mm_storeu_si128(tmp.as_mut_ptr() as *mut __m128i, v[0]);
+            _mm_storeu_si128(tmp.as_mut_ptr().add(4) as *mut __m128i, v[1]);
+            for j in 0..NR {
+                acc[i][j] += tmp[j];
+            }
+        }
+    }
+}
+
+/// Portable fallback: identical exact-integer semantics, structured as
+/// the same i16 pair sums so autovectorizers can find the widening MAC.
+#[cfg(not(all(target_arch = "x86_64", target_feature = "sse2")))]
+#[inline(always)]
+fn micro_kernel_i8(kc2: usize, ap: &[i8], bp: &[i8], acc: &mut [[i32; NR]; MR]) {
+    for p in 0..kc2 {
+        let a0: &[i8; MR] = ap[2 * p * MR..][..MR].try_into().unwrap();
+        let a1: &[i8; MR] = ap[(2 * p + 1) * MR..][..MR].try_into().unwrap();
+        let b0: &[i8; NR] = bp[2 * p * NR..][..NR].try_into().unwrap();
+        let b1: &[i8; NR] = bp[(2 * p + 1) * NR..][..NR].try_into().unwrap();
+        for i in 0..MR {
+            let x0 = a0[i] as i16;
+            let x1 = a1[i] as i16;
+            for j in 0..NR {
+                acc[i][j] += (x0 * b0[j] as i16 + x1 * b1[j] as i16) as i32;
+            }
+        }
+    }
+}
+
+/// Requantize and write the valid `mr x nr` corner of an i32 micro-tile:
+/// `out = acc * (a_scale * b_scale[col])`. Single store — the i32
+/// accumulator already covers the full k extent.
+#[inline]
+fn store_tile_i8(
+    out: &mut [f32],
+    n: usize,
+    r0: usize,
+    j0: usize,
+    mr: usize,
+    nr: usize,
+    acc: &[[i32; NR]; MR],
+    a_scale: f32,
+    b_scales: &[f32],
+) {
+    for ii in 0..mr {
+        let row = &mut out[(r0 + ii) * n + j0..][..nr];
+        for (jj, o) in row.iter_mut().enumerate() {
+            *o = acc[ii][jj] as f32 * (a_scale * b_scales[j0 + jj]);
+        }
+    }
+}
+
+/// One worker's share of the int8 product: rows `[lo, hi)` into
+/// `out_chunk` (row 0 = global row `lo`). A panels for *all* k-blocks
+/// of a row panel are packed at once into the caller-provided `apack`
+/// (`nkb * MR * KC` i8 — 4x denser than f32) so the i32 accumulator
+/// spans the full k extent without f32 round-trips.
+fn run_rows_i8<A: ASrcI8>(
+    a: &A,
+    bpack: &[i8],
+    apack: &mut [i8],
+    a_scale: f32,
+    b_scales: &[f32],
+    lo: usize,
+    hi: usize,
+    k: usize,
+    n: usize,
+    njp: usize,
+    nkb: usize,
+    out_chunk: &mut [f32],
+) {
+    let slot = KC * NR;
+    debug_assert_eq!(apack.len(), nkb * MR * KC);
+    let mut ip = lo;
+    while ip < hi {
+        let mr = MR.min(hi - ip);
+        for kb in 0..nkb {
+            let p0 = kb * KC;
+            let kc = KC.min(k - p0);
+            let ap = &mut apack[kb * MR * KC..(kb + 1) * MR * KC];
+            a.pack_a(&mut ap[..kc * MR], ip, mr, p0, kc);
+            if kc % 2 == 1 {
+                ap[kc * MR..(kc + 1) * MR].fill(0); // zero pad row for the pair kernel
+            }
+        }
+        for jp in 0..njp {
+            let j0 = jp * NR;
+            let nr = NR.min(n - j0);
+            let mut acc = [[0i32; NR]; MR];
+            for kb in 0..nkb {
+                let p0 = kb * KC;
+                let kc = KC.min(k - p0);
+                let ap = &apack[kb * MR * KC..(kb + 1) * MR * KC];
+                let bp = &bpack[(kb * njp + jp) * slot..][..slot];
+                micro_kernel_i8(kc.div_ceil(2), ap, bp, &mut acc);
+            }
+            store_tile_i8(out_chunk, n, ip - lo, j0, mr, nr, &acc, a_scale, b_scales);
+        }
+        ip += MR;
+    }
+}
+
+/// True-int8 `out[m,n] = A[m,k] @ B[k,n]`: i8 panels, i8 x i8 -> i32
+/// accumulation, one per-output-channel requantization at the store.
+/// Threads partition rows exactly like [`gemm_threads`], and integer
+/// accumulation is order-free, so results are bitwise independent of
+/// `threads` (and of the micro-kernel implementation).
+pub fn gemm_i8_threads<A: ASrcI8, B: BSrcI8>(
+    scratch: &mut Scratch,
+    a: &A,
+    b: &B,
+    a_scale: f32,
+    b_scales: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(out.len(), m * n, "gemm_i8: out buffer is {}, want {m}x{n}", out.len());
+    assert_eq!(b_scales.len(), n, "gemm_i8: {} scales for n={n}", b_scales.len());
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
+    // i32 accumulator headroom: |acc| <= 127^2 * k must stay below 2^31.
+    // A hard assert: this is the exported kernel API, and a release-mode
+    // wrap would silently corrupt every output element.
+    assert!(k <= 133_000, "int8 GEMM k={k} exceeds the i32 accumulator budget");
+    let njp = n.div_ceil(NR);
+    let nkb = k.div_ceil(KC);
+    let slot = KC * NR;
+
+    // pack (and pad) B once, NR-interleaved per (k-block, column-panel)
+    let mut bpack = scratch.take_i8(nkb * njp * slot);
+    for kb in 0..nkb {
+        let p0 = kb * KC;
+        let kc = KC.min(k - p0);
+        for jp in 0..njp {
+            let j0 = jp * NR;
+            let nr = NR.min(n - j0);
+            let off = (kb * njp + jp) * slot;
+            b.pack_b(&mut bpack[off..off + kc * NR], j0, nr, p0, kc);
+            if kc % 2 == 1 {
+                bpack[off + kc * NR..off + (kc + 1) * NR].fill(0);
+            }
+        }
+    }
+
+    let panels = m.div_ceil(MR);
+    let flops = 2usize
+        .saturating_mul(m)
+        .saturating_mul(n)
+        .saturating_mul(k);
+    // same fork/join break-even as the f32 path: even at ~4x the MAC
+    // rate, a GEMM past the threshold still runs long enough per core
+    // to amortize the spawn (and f32-vs-int8 comparisons at one shape
+    // then use identical worker counts)
+    let t = if flops < PAR_MIN_FLOPS { 1 } else { threads.clamp(1, panels) };
+
+    // the calling thread's A-pack buffer comes from the arena (workers
+    // spawned below are outside the single-threaded Scratch and allocate
+    // their own — amortized by the fork threshold)
+    let mut apack = scratch.take_i8(nkb * MR * KC);
+    if t <= 1 {
+        run_rows_i8(a, &bpack, &mut apack, a_scale, b_scales, 0, m, k, n, njp, nkb, out);
+    } else {
+        // contiguous panel-aligned row chunks, one per worker
+        let mut chunks: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(t);
+        let mut rest: &mut [f32] = out;
+        let mut lo = 0usize;
+        for ti in 0..t {
+            let hi = ((panels * (ti + 1) / t) * MR).min(m);
+            let (chunk, tail) = rest.split_at_mut((hi - lo) * n);
+            chunks.push((lo, hi, chunk));
+            rest = tail;
+            lo = hi;
+        }
+        let bp: &[i8] = &bpack;
+        thread::scope(|s| {
+            let mut iter = chunks.into_iter();
+            let (lo0, hi0, chunk0) = iter.next().expect("at least one worker");
+            for (lo_i, hi_i, chunk) in iter {
+                s.spawn(move || {
+                    let mut wpack = vec![0i8; nkb * MR * KC];
+                    run_rows_i8(
+                        a, bp, &mut wpack, a_scale, b_scales, lo_i, hi_i, k, n, njp, nkb, chunk,
+                    )
+                });
+            }
+            run_rows_i8(
+                a, bp, &mut apack, a_scale, b_scales, lo0, hi0, k, n, njp, nkb, chunk0,
+            );
+        });
+    }
+    scratch.put_i8(apack);
+    scratch.put_i8(bpack);
+}
+
+/// [`gemm_i8_threads`] with the worker count from the environment.
+pub fn gemm_i8<A: ASrcI8, B: BSrcI8>(
+    scratch: &mut Scratch,
+    a: &A,
+    b: &B,
+    a_scale: f32,
+    b_scales: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    gemm_i8_threads(scratch, a, b, a_scale, b_scales, m, k, n, out, effective_threads());
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -485,6 +866,77 @@ mod tests {
             &mut out,
         );
         assert_eq!(out, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn int8_small_matmul_exact() {
+        // integers on the grid: scale 1 quantization is lossless, so the
+        // int8 product must equal the exact integer result
+        let mut sc = Scratch::new();
+        let a = [1.0f32, 2.0, 3.0, 4.0]; // amax 4 -> scale 4/127
+        let bq: Vec<i8> = vec![5, 6, 7, 8];
+        let b_scales = [1.0f32, 1.0];
+        let a_scale = crate::tensor::quant::scale_for(&a);
+        let mut out = vec![0.0f32; 4];
+        gemm_i8(
+            &mut sc,
+            &QuantStrided { data: &a, rs: 2, cs: 1, inv_scale: 1.0 / a_scale },
+            &QStrided { data: &bq, rs: 2, cs: 1 },
+            a_scale,
+            &b_scales,
+            2,
+            2,
+            2,
+            &mut out,
+        );
+        // qa = round(a/scale): [32, 64, 95, 127]
+        let qa = [32i32, 64, 95, 127];
+        let want = [
+            (qa[0] * 5 + qa[1] * 7) as f32 * a_scale,
+            (qa[0] * 6 + qa[1] * 8) as f32 * a_scale,
+            (qa[2] * 5 + qa[3] * 7) as f32 * a_scale,
+            (qa[2] * 6 + qa[3] * 8) as f32 * a_scale,
+        ];
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn int8_k_zero_zeroes_out() {
+        let mut sc = Scratch::new();
+        let mut out = vec![7.0f32; 6];
+        gemm_i8(
+            &mut sc,
+            &QuantStrided { data: &[], rs: 0, cs: 1, inv_scale: 1.0 },
+            &QStrided { data: &[], rs: 3, cs: 1 },
+            1.0,
+            &[1.0; 3],
+            2,
+            0,
+            3,
+            &mut out,
+        );
+        assert_eq!(out, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn int8_odd_k_pad_rows_are_inert() {
+        // k = 3 exercises the zero pad row of the pair kernel
+        let mut sc = Scratch::new();
+        let a = [127.0f32, 127.0, 127.0]; // scale 1, quantizes to 127
+        let bq: Vec<i8> = vec![1, 2, 3];
+        let mut out = vec![0.0f32; 1];
+        gemm_i8(
+            &mut sc,
+            &QuantStrided { data: &a, rs: 3, cs: 1, inv_scale: 1.0 },
+            &QStrided { data: &bq, rs: 1, cs: 1 },
+            1.0,
+            &[1.0],
+            1,
+            3,
+            1,
+            &mut out,
+        );
+        assert_eq!(out[0], (127 * (1 + 2 + 3)) as f32);
     }
 
     #[test]

@@ -8,8 +8,12 @@
 //! core in [`super::gemm`]: cache-blocked panel packing, a register-tiled
 //! micro-kernel, and row-panel multi-threading (`FICABU_THREADS`), with
 //! conv patch extraction fused into the packing step so the im2col
-//! matrix is never materialized. The PR-1 triple-loop references are
-//! retained in [`naive`] as correctness oracles and bench baselines.
+//! matrix is never materialized. The forward path additionally has a
+//! true-int8 lowering ([`matmul_i8_into`], [`Conv::fwd_i8_into`]):
+//! per-channel int8 weights, activations quantized during packing, and
+//! an i8 x i8 -> i32 micro-kernel with one requantization at the store.
+//! The PR-1 triple-loop references are retained in [`naive`] as
+//! correctness oracles and bench baselines.
 //! Hot paths should use the `_into` variants together with a
 //! [`Scratch`] arena; the `Vec`-returning forms are conveniences for
 //! tests and one-shot callers.
@@ -19,6 +23,7 @@
 #![allow(clippy::too_many_arguments)]
 
 use crate::config::builtin::NORM_EPS;
+use crate::tensor::quant::{self, QTensor};
 
 use super::gemm;
 use super::scratch::Scratch;
@@ -46,6 +51,37 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
     let mut out = vec![0.0f32; m * n];
     gemm::matmul_nt_into(&mut Scratch::new(), a, b, m, k, n, &mut out);
     out
+}
+
+/// True-int8 `out = x[m,k] @ wq[k,n]`: the activation is quantized per
+/// tensor during panel packing, the weight arrives pre-quantized per
+/// output channel, accumulation is i8 x i8 -> i32, and one
+/// requantization happens at the store. Bitwise-deterministic across
+/// thread counts (integer accumulation is order-free).
+pub fn matmul_i8_into(
+    scratch: &mut Scratch,
+    x: &[f32],
+    wq: &QTensor,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(wq.data.len(), k * n);
+    debug_assert_eq!(wq.scales.len(), n);
+    let a_scale = quant::scale_for(x);
+    gemm::gemm_i8(
+        scratch,
+        &gemm::QuantStrided { data: x, rs: k, cs: 1, inv_scale: 1.0 / a_scale },
+        &gemm::QStrided { data: &wq.data, rs: n, cs: 1 },
+        a_scale,
+        &wq.scales,
+        m,
+        k,
+        n,
+        out,
+    );
 }
 
 /// Add a `[cols]` bias to every row of a `[rows, cols]` buffer in place.
@@ -126,6 +162,39 @@ impl Conv {
         let mut y = vec![0.0f32; b * ho * wo * self.cout];
         self.fwd_into(&mut Scratch::new(), x, wk, b, h, w, &mut y);
         y
+    }
+
+    /// True-int8 forward conv: the HWIO weight arrives pre-quantized per
+    /// output channel, image patches are quantized with the image's
+    /// per-tensor scale *during* fused im2col packing — the int8 patch
+    /// matrix is never materialized either.
+    pub fn fwd_i8_into(
+        &self,
+        scratch: &mut Scratch,
+        x: &[f32],
+        wq: &QTensor,
+        b: usize,
+        h: usize,
+        w: usize,
+        y: &mut [f32],
+    ) {
+        let (ho, wo) = self.out_hw(h, w);
+        let kk = self.kh * self.kw * self.cin;
+        debug_assert_eq!(x.len(), b * h * w * self.cin);
+        debug_assert_eq!(wq.data.len(), kk * self.cout);
+        debug_assert_eq!(wq.scales.len(), self.cout);
+        let a_scale = quant::scale_for(x);
+        gemm::gemm_i8(
+            scratch,
+            &gemm::Im2colQ { x, conv: *self, batch: b, h, w, inv_scale: 1.0 / a_scale },
+            &gemm::QStrided { data: &wq.data, rs: self.cout, cs: 1 },
+            a_scale,
+            &wq.scales,
+            b * ho * wo,
+            kk,
+            self.cout,
+            y,
+        );
     }
 
     /// VJP into `dx[b,h,w,cin]` and `dw[kh,kw,cin,cout]` for output
@@ -289,6 +358,71 @@ pub mod naive {
                     acc += av * bv;
                 }
                 out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// Scalar int8 oracle: quantize -> integer accumulate -> requantize,
+    /// the exact arithmetic contract of the tiled int8 core. Integer
+    /// accumulation is order-free and the quantization/requantization
+    /// expressions are shared (`quant::q8`, `acc * (a_scale * w_scale)`),
+    /// so the tiled path must match this oracle **bitwise**.
+    pub fn matmul_i8(
+        x: &[f32],
+        wq: &[i8],
+        w_scales: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        debug_assert_eq!(x.len(), m * k);
+        debug_assert_eq!(wq.len(), k * n);
+        debug_assert_eq!(w_scales.len(), n);
+        let a_scale = crate::tensor::quant::scale_for(x);
+        let inv = 1.0 / a_scale;
+        let xq: Vec<i8> = x.iter().map(|&v| crate::tensor::quant::q8(v, inv)).collect();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i32;
+                for p in 0..k {
+                    acc += xq[i * k + p] as i32 * wq[p * n + j] as i32;
+                }
+                out[i * n + j] = acc as f32 * (a_scale * w_scales[j]);
+            }
+        }
+        out
+    }
+
+    /// Int8 conv oracle through a materialized im2col matrix. The
+    /// activation scale comes from the *image* (like the fused path),
+    /// not from the patch matrix — padding zeros and stride-skipped
+    /// pixels must not change the quantization grid.
+    pub fn conv_fwd_i8(
+        cv: &Conv,
+        x: &[f32],
+        wq: &[i8],
+        w_scales: &[f32],
+        b: usize,
+        h: usize,
+        w: usize,
+    ) -> Vec<f32> {
+        let (ho, wo) = cv.out_hw(h, w);
+        let rows = b * ho * wo;
+        let kk = cv.kh * cv.kw * cv.cin;
+        let a_scale = crate::tensor::quant::scale_for(x);
+        let inv = 1.0 / a_scale;
+        let cols = im2col(cv, x, b, h, w);
+        let colsq: Vec<i8> = cols.iter().map(|&v| crate::tensor::quant::q8(v, inv)).collect();
+        let mut out = vec![0.0f32; rows * cv.cout];
+        for i in 0..rows {
+            for j in 0..cv.cout {
+                let mut acc = 0i32;
+                for p in 0..kk {
+                    acc += colsq[i * kk + p] as i32 * wq[p * cv.cout + j] as i32;
+                }
+                out[i * cv.cout + j] = acc as f32 * (a_scale * w_scales[j]);
             }
         }
         out

@@ -6,6 +6,10 @@
 //! no XLA. Kernels live in [`kernels`] (semantics of
 //! `python/compile/kernels/ref.py`) on top of the tiled multi-threaded
 //! GEMM core in [`gemm`]; per-segment interpreters live in [`segment`].
+//! Forward modules additionally accept per-channel int8 weights through
+//! the mixed-precision [`ArgRef`] seam and execute them on the true
+//! int8 GEMM core (the paper's §IV-A deployment mode); the gradient
+//! chain stays f32.
 //! The backend owns one [`scratch::Scratch`] arena shared by every
 //! module it compiles, so im2col panels, packed GEMM panels, and
 //! activation/grad temporaries are reused across segments and steps
@@ -29,7 +33,7 @@ use anyhow::{bail, Result};
 use crate::config::{ModelMeta, SegmentMeta};
 use crate::tensor::Tensor;
 
-use super::{Backend, ModuleImpl, ModuleSpec};
+use super::{ArgRef, Backend, ModuleImpl, ModuleSpec};
 use scratch::Scratch;
 use segment::SegmentDef;
 
@@ -90,7 +94,7 @@ impl Backend for CpuBackend {
 // validation helpers
 // ---------------------------------------------------------------------------
 
-fn check_arity(args: &[&Tensor], want: usize, what: &str) -> Result<()> {
+fn check_arity<T>(args: &[T], want: usize, what: &str) -> Result<()> {
     if args.len() != want {
         bail!("{what}: expected {want} arguments, got {}", args.len());
     }
@@ -124,6 +128,35 @@ fn check_params(seg: &SegmentMeta, args: &[&Tensor]) -> Result<()> {
     Ok(())
 }
 
+/// Mixed-precision parameter check: shapes as [`check_params`], plus a
+/// per-output-channel scale count for int8 weight slots.
+fn check_params_mixed(seg: &SegmentMeta, args: &[ArgRef]) -> Result<()> {
+    for (a, pm) in args.iter().zip(&seg.params) {
+        if a.shape() != pm.shape.as_slice() {
+            bail!(
+                "{}.{}: expected shape {:?}, got {:?}",
+                seg.name,
+                pm.name,
+                pm.shape,
+                a.shape()
+            );
+        }
+        if let ArgRef::Quant(q) = a {
+            let cols = pm.shape.last().copied().unwrap_or(0);
+            if q.scales.len() != cols {
+                bail!(
+                    "{}.{}: int8 weight has {} scales for {} output channels",
+                    seg.name,
+                    pm.name,
+                    q.scales.len(),
+                    cols
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
 fn check_tile(t: &Tensor, tile: usize, what: &str) -> Result<()> {
     if t.shape != [tile] {
         bail!("{what}: expected shape [{tile}], got {:?}", t.shape);
@@ -150,12 +183,21 @@ struct SegmentFwdModule {
 
 impl ModuleImpl for SegmentFwdModule {
     fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let margs: Vec<ArgRef> = args.iter().map(|&t| ArgRef::F32(t)).collect();
+        self.run_mixed(&margs)
+    }
+
+    fn run_mixed(&self, args: &[ArgRef]) -> Result<Vec<Tensor>> {
         let np = self.seg.params.len();
         check_arity(args, np + 1, &format!("fwd[{}]", self.seg.name))?;
-        check_params(&self.seg, &args[..np])?;
-        check_batched(args[np], &self.seg.in_shape, "x")?;
+        check_params_mixed(&self.seg, &args[..np])?;
+        let x = match args[np].f32() {
+            Some(t) => t,
+            None => bail!("fwd[{}]: x must be f32", self.seg.name),
+        };
+        check_batched(x, &self.seg.in_shape, "x")?;
         let mut sc = self.scratch.borrow_mut();
-        let y = self.def.fwd(&args[..np], args[np], &mut sc)?;
+        let y = self.def.fwd(&args[..np], x, &mut sc)?;
         Ok(vec![y])
     }
 }
@@ -204,10 +246,10 @@ impl LogitsModule {
         Ok(LogitsModule { meta: meta.clone(), defs, param_count, scratch })
     }
 
-    fn check_all_params(&self, args: &[&Tensor]) -> Result<()> {
+    fn check_all_params(&self, args: &[ArgRef]) -> Result<()> {
         let mut off = 0;
         for seg in &self.meta.segments {
-            check_params(seg, &args[off..off + seg.params.len()])?;
+            check_params_mixed(seg, &args[off..off + seg.params.len()])?;
             off += seg.params.len();
         }
         Ok(())
@@ -216,7 +258,7 @@ impl LogitsModule {
     /// Forward through every segment; optionally cache segment inputs.
     fn forward(
         &self,
-        args: &[&Tensor],
+        args: &[ArgRef],
         x: &Tensor,
         mut cache: Option<&mut Vec<Tensor>>,
         sc: &mut Scratch,
@@ -236,9 +278,17 @@ impl LogitsModule {
 
 impl ModuleImpl for LogitsModule {
     fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let margs: Vec<ArgRef> = args.iter().map(|&t| ArgRef::F32(t)).collect();
+        self.run_mixed(&margs)
+    }
+
+    fn run_mixed(&self, args: &[ArgRef]) -> Result<Vec<Tensor>> {
         check_arity(args, self.param_count + 1, "logits")?;
         self.check_all_params(&args[..self.param_count])?;
-        let x = args[self.param_count];
+        let x = match args[self.param_count].f32() {
+            Some(t) => t,
+            None => bail!("logits: x must be f32"),
+        };
         check_batched(x, &self.meta.input_shape, "x")?;
         let mut sc = self.scratch.borrow_mut();
         let logits = self.forward(&args[..self.param_count], x, None, &mut sc)?;
@@ -257,7 +307,8 @@ impl ModuleImpl for TrainStepModule {
         let n = self.chain.param_count;
         let meta = &self.chain.meta;
         check_arity(args, n + 3, "train_step")?;
-        self.chain.check_all_params(&args[..n])?;
+        let margs: Vec<ArgRef> = args[..n].iter().map(|&t| ArgRef::F32(t)).collect();
+        self.chain.check_all_params(&margs)?;
         let x = args[n];
         let onehot = args[n + 1];
         let lr = check_scalarish(args[n + 2], "lr")?;
@@ -269,7 +320,7 @@ impl ModuleImpl for TrainStepModule {
 
         let mut sc = self.chain.scratch.borrow_mut();
         let mut inputs = Vec::with_capacity(meta.num_segments());
-        let logits = self.chain.forward(&args[..n], x, Some(&mut inputs), &mut sc)?;
+        let logits = self.chain.forward(&margs, x, Some(&mut inputs), &mut sc)?;
 
         // mean NLL + dlogits via log-sum-exp (model.py cross_entropy)
         let classes = meta.num_classes;

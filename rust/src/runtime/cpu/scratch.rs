@@ -19,12 +19,60 @@
 /// dominate the hot path instead of hoarding every tile ever seen.
 const MAX_POOLED: usize = 32;
 
+/// Best-fit take shared by the f32 and i8 pools: the smallest parked
+/// buffer that already holds `len`, else the largest so regrowth
+/// converges. Returns the buffer (length/contents unadjusted) and
+/// whether a fresh allocation was needed.
+fn pool_take<T>(pool: &mut Vec<Vec<T>>, len: usize) -> (Vec<T>, bool) {
+    let mut best: Option<usize> = None;
+    for (i, buf) in pool.iter().enumerate() {
+        best = match best {
+            None => Some(i),
+            Some(j) => {
+                let (c, cj) = (buf.capacity(), pool[j].capacity());
+                let (fits, jfits) = (c >= len, cj >= len);
+                if (fits && (!jfits || c < cj)) || (!fits && !jfits && c > cj) {
+                    Some(i)
+                } else {
+                    Some(j)
+                }
+            }
+        };
+    }
+    let v = match best {
+        Some(i) => pool.swap_remove(i),
+        None => Vec::new(),
+    };
+    if v.capacity() < len {
+        // fresh allocation instead of reserve(): a realloc would
+        // memcpy stale contents every taker discards anyway
+        return (Vec::with_capacity(len), true);
+    }
+    (v, false)
+}
+
+/// Park a buffer, evicting the smallest once the pool exceeds
+/// [`MAX_POOLED`]. Zero-capacity buffers are dropped.
+fn pool_put<T>(pool: &mut Vec<Vec<T>>, buf: Vec<T>) {
+    if buf.capacity() == 0 {
+        return;
+    }
+    pool.push(buf);
+    if pool.len() > MAX_POOLED {
+        if let Some(i) = (0..pool.len()).min_by_key(|&i| pool[i].capacity()) {
+            pool.swap_remove(i);
+        }
+    }
+}
+
 /// Reusable `f32` buffer pool. `take` returns a zero-filled buffer of
 /// the exact requested length, reusing parked capacity when possible;
-/// `put` parks a buffer for the next taker.
+/// `put` parks a buffer for the next taker. A small parallel `i8` pool
+/// serves the int8 GEMM panel packs.
 #[derive(Debug, Default)]
 pub struct Scratch {
     pool: Vec<Vec<f32>>,
+    pool_i8: Vec<Vec<i8>>,
     takes: u64,
     grows: u64,
 }
@@ -35,35 +83,12 @@ impl Scratch {
     }
 
     /// A buffer with capacity for at least `len` elements, length and
-    /// contents unadjusted. Best-fit over the pool: the smallest parked
-    /// buffer that already holds `len`, else the largest so regrowth
-    /// converges.
+    /// contents unadjusted ([`pool_take`] best-fit).
     fn take_raw(&mut self, len: usize) -> Vec<f32> {
         self.takes += 1;
-        let mut best: Option<usize> = None;
-        for (i, buf) in self.pool.iter().enumerate() {
-            best = match best {
-                None => Some(i),
-                Some(j) => {
-                    let (c, cj) = (buf.capacity(), self.pool[j].capacity());
-                    let (fits, jfits) = (c >= len, cj >= len);
-                    if (fits && (!jfits || c < cj)) || (!fits && !jfits && c > cj) {
-                        Some(i)
-                    } else {
-                        Some(j)
-                    }
-                }
-            };
-        }
-        let mut v = match best {
-            Some(i) => self.pool.swap_remove(i),
-            None => Vec::new(),
-        };
-        if v.capacity() < len {
-            // fresh allocation instead of reserve(): a realloc would
-            // memcpy stale contents every taker discards anyway
+        let (v, grew) = pool_take(&mut self.pool, len);
+        if grew {
             self.grows += 1;
-            v = Vec::with_capacity(len);
         }
         v
     }
@@ -98,15 +123,25 @@ impl Scratch {
 
     /// Park a buffer for reuse. Zero-capacity buffers are dropped.
     pub fn put(&mut self, buf: Vec<f32>) {
-        if buf.capacity() == 0 {
-            return;
+        pool_put(&mut self.pool, buf);
+    }
+
+    /// Borrow an `i8` buffer of exactly `len` elements with arbitrary
+    /// (stale but initialized) contents — the int8 pack buffers are
+    /// fully written (pad rows zeroed explicitly by the packer).
+    pub fn take_i8(&mut self, len: usize) -> Vec<i8> {
+        self.takes += 1;
+        let (mut v, grew) = pool_take(&mut self.pool_i8, len);
+        if grew {
+            self.grows += 1;
         }
-        self.pool.push(buf);
-        if self.pool.len() > MAX_POOLED {
-            if let Some(i) = (0..self.pool.len()).min_by_key(|&i| self.pool[i].capacity()) {
-                self.pool.swap_remove(i);
-            }
-        }
+        v.resize(len, 0);
+        v
+    }
+
+    /// Park an `i8` buffer for reuse.
+    pub fn put_i8(&mut self, buf: Vec<i8>) {
+        pool_put(&mut self.pool_i8, buf);
     }
 
     /// `take*` calls so far (reuse diagnostics for tests/benches).
@@ -166,6 +201,23 @@ mod tests {
         let w = sc.take_any(200);
         assert_eq!(w.len(), 200);
         assert!(w[100..].iter().all(|&x| x == 0.0), "growth tail is zeroed");
+    }
+
+    #[test]
+    fn i8_pool_reuses_and_stays_bounded() {
+        let mut sc = Scratch::new();
+        let mut a = sc.take_i8(256);
+        assert_eq!(a.len(), 256);
+        a.iter_mut().for_each(|v| *v = 7);
+        sc.put_i8(a);
+        let b = sc.take_i8(128);
+        assert_eq!(b.len(), 128);
+        assert!(b.capacity() >= 256, "parked i8 buffer should be reused");
+        sc.put_i8(b);
+        for i in 0..4 * MAX_POOLED {
+            sc.put_i8(vec![0; i + 1]);
+        }
+        assert!(sc.pool_i8.len() <= MAX_POOLED);
     }
 
     #[test]

@@ -20,15 +20,59 @@ use anyhow::{bail, Result};
 
 use crate::config::builtin::GN_GROUPS;
 use crate::config::ModelMeta;
+use crate::runtime::ArgRef;
 use crate::tensor::Tensor;
 
 use super::gemm;
 use super::kernels::{
     add_bias, col_sum, gelu_bwd_inplace, gelu_inplace, gelu_into, group_norm_bwd_into,
-    group_norm_fwd_into, layer_norm_bwd, layer_norm_bwd_into, layer_norm_fwd_into, relu,
-    relu_bwd, softmax_bwd_into, softmax_rows, Conv,
+    group_norm_fwd_into, layer_norm_bwd, layer_norm_bwd_into, layer_norm_fwd_into,
+    matmul_i8_into, relu, relu_bwd, softmax_bwd_into, softmax_rows, Conv,
 };
 use super::scratch::Scratch;
+
+/// f32 data of param slot `i`. Quantized slots are GEMM/conv weights
+/// only, so an int8 argument in any other position is a caller bug the
+/// interpreter rejects instead of mis-executing.
+fn fp<'a>(ps: &[ArgRef<'a>], i: usize) -> Result<&'a [f32]> {
+    match ps[i] {
+        ArgRef::F32(t) => Ok(&t.data),
+        ArgRef::Quant(_) => bail!("param {i}: expected an f32 tensor, got an int8 weight"),
+    }
+}
+
+/// Dense `out = x @ w`, dispatching on the weight slot's precision.
+fn matmul_w(
+    sc: &mut Scratch,
+    x: &[f32],
+    w: ArgRef,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    match w {
+        ArgRef::F32(t) => gemm::matmul_into(sc, x, &t.data, m, k, n, out),
+        ArgRef::Quant(q) => matmul_i8_into(sc, x, q, m, k, n, out),
+    }
+}
+
+/// Conv forward, dispatching on the weight slot's precision.
+fn conv_fwd_w(
+    sc: &mut Scratch,
+    cv: &Conv,
+    x: &[f32],
+    w: ArgRef,
+    b: usize,
+    h: usize,
+    wd: usize,
+    y: &mut [f32],
+) {
+    match w {
+        ArgRef::F32(t) => cv.fwd_into(sc, x, &t.data, b, h, wd, y),
+        ArgRef::Quant(q) => cv.fwd_i8_into(sc, x, q, b, h, wd, y),
+    }
+}
 
 /// Static per-segment execution plan.
 pub(crate) enum SegmentDef {
@@ -222,17 +266,19 @@ impl SegmentDef {
         }
     }
 
-    /// Forward: `(params..., x[B,...]) -> y`.
-    pub(crate) fn fwd(&self, ps: &[&Tensor], x: &Tensor, sc: &mut Scratch) -> Result<Tensor> {
+    /// Forward: `(params..., x[B,...]) -> y`. Parameter slots arrive as
+    /// [`ArgRef`]s: GEMM/conv weight slots may be int8 (dispatched to
+    /// the true-int8 core), everything else is f32.
+    pub(crate) fn fwd(&self, ps: &[ArgRef], x: &Tensor, sc: &mut Scratch) -> Result<Tensor> {
         let b = x.batch();
         match self {
             SegmentDef::Stem { h, w, conv } => {
                 let (ho, wo) = conv.out_hw(*h, *w);
                 let mut c1 = sc.take_any(b * ho * wo * conv.cout);
-                conv.fwd_into(sc, &x.data, &ps[0].data, b, *h, *w, &mut c1);
+                conv_fwd_w(sc, conv, &x.data, ps[0], b, *h, *w, &mut c1);
                 let mut y = vec![0.0f32; c1.len()];
                 group_norm_fwd_into(
-                    &c1, b, ho * wo, conv.cout, GN_GROUPS, &ps[1].data, &ps[2].data, &mut y,
+                    &c1, b, ho * wo, conv.cout, GN_GROUPS, fp(ps, 1)?, fp(ps, 2)?, &mut y,
                 );
                 sc.put(c1);
                 relu(&mut y);
@@ -244,27 +290,27 @@ impl SegmentDef {
                 let hw = ho * wo;
                 let len = b * hw * cout;
                 let mut c1 = sc.take_any(len);
-                conv1.fwd_into(sc, &x.data, &ps[0].data, b, *h, *w, &mut c1);
+                conv_fwd_w(sc, conv1, &x.data, ps[0], b, *h, *w, &mut c1);
                 let mut h1 = sc.take(len);
                 group_norm_fwd_into(
-                    &c1, b, hw, cout, GN_GROUPS, &ps[1].data, &ps[2].data, &mut h1,
+                    &c1, b, hw, cout, GN_GROUPS, fp(ps, 1)?, fp(ps, 2)?, &mut h1,
                 );
                 relu(&mut h1);
                 // c1 is dead — reuse it for the second conv's output
-                conv2.fwd_into(sc, &h1, &ps[3].data, b, ho, wo, &mut c1);
+                conv_fwd_w(sc, conv2, &h1, ps[3], b, ho, wo, &mut c1);
                 sc.put(h1);
                 let mut y = vec![0.0f32; len];
                 group_norm_fwd_into(
-                    &c1, b, hw, cout, GN_GROUPS, &ps[4].data, &ps[5].data, &mut y,
+                    &c1, b, hw, cout, GN_GROUPS, fp(ps, 4)?, fp(ps, 5)?, &mut y,
                 );
                 sc.put(c1);
                 match down {
                     Some(cd) => {
                         let mut cdo = sc.take_any(len);
-                        cd.fwd_into(sc, &x.data, &ps[6].data, b, *h, *w, &mut cdo);
+                        conv_fwd_w(sc, cd, &x.data, ps[6], b, *h, *w, &mut cdo);
                         let mut scb = sc.take(len);
                         group_norm_fwd_into(
-                            &cdo, b, hw, cout, GN_GROUPS, &ps[7].data, &ps[8].data, &mut scb,
+                            &cdo, b, hw, cout, GN_GROUPS, fp(ps, 7)?, fp(ps, 8)?, &mut scb,
                         );
                         sc.put(cdo);
                         for (yv, sv) in y.iter_mut().zip(&scb) {
@@ -285,22 +331,22 @@ impl SegmentDef {
                 let mut pooled = sc.take_any(b * c);
                 gap_pool_into(&x.data, b, *hw, *c, &mut pooled);
                 let mut y = vec![0.0f32; b * classes];
-                gemm::matmul_into(sc, &pooled, &ps[0].data, b, *c, *classes, &mut y);
+                matmul_w(sc, &pooled, ps[0], b, *c, *classes, &mut y);
                 sc.put(pooled);
-                add_bias(&mut y, &ps[1].data);
+                add_bias(&mut y, fp(ps, 1)?);
                 Tensor::new(vec![b, *classes], y)
             }
             SegmentDef::HeadVit { tokens, dim, classes } => {
                 let r = b * tokens;
                 let mut hn = sc.take_any(r * dim);
-                layer_norm_fwd_into(&x.data, r, *dim, &ps[0].data, &ps[1].data, &mut hn);
+                layer_norm_fwd_into(&x.data, r, *dim, fp(ps, 0)?, fp(ps, 1)?, &mut hn);
                 let mut pooled = sc.take_any(b * dim);
                 gap_pool_into(&hn, b, *tokens, *dim, &mut pooled); // token mean-pool
                 sc.put(hn);
                 let mut y = vec![0.0f32; b * classes];
-                gemm::matmul_into(sc, &pooled, &ps[2].data, b, *dim, *classes, &mut y);
+                matmul_w(sc, &pooled, ps[2], b, *dim, *classes, &mut y);
                 sc.put(pooled);
-                add_bias(&mut y, &ps[3].data);
+                add_bias(&mut y, fp(ps, 3)?);
                 Tensor::new(vec![b, *classes], y)
             }
             SegmentDef::Embed { img, chans, patch, grid, dim } => {
@@ -309,10 +355,10 @@ impl SegmentDef {
                 let mut xp = sc.take_any(b * tokens * pdim);
                 patchify_into(&x.data, b, *img, *chans, *patch, *grid, &mut xp);
                 let mut y = vec![0.0f32; b * tokens * dim];
-                gemm::matmul_into(sc, &xp, &ps[0].data, b * tokens, pdim, *dim, &mut y);
+                matmul_w(sc, &xp, ps[0], b * tokens, pdim, *dim, &mut y);
                 sc.put(xp);
-                add_bias(&mut y, &ps[1].data);
-                let pos = &ps[2].data;
+                add_bias(&mut y, fp(ps, 1)?);
+                let pos = fp(ps, 2)?;
                 for bi in 0..b {
                     let base = bi * tokens * dim;
                     for (yv, &pv) in y[base..base + tokens * dim].iter_mut().zip(pos) {
@@ -322,7 +368,7 @@ impl SegmentDef {
                 Tensor::new(vec![b, tokens, *dim], y)
             }
             SegmentDef::Encoder { tokens, dim, heads, mlp } => {
-                let y = self.encoder_fwd(ps, &x.data, b, *tokens, *dim, *heads, *mlp, sc);
+                let y = self.encoder_fwd(ps, &x.data, b, *tokens, *dim, *heads, *mlp, sc)?;
                 Tensor::new(vec![b, *tokens, *dim], y)
             }
         }
@@ -581,10 +627,14 @@ impl SegmentDef {
         Ok((grads, Tensor::new(x.shape.clone(), dx)?))
     }
 
+    /// Encoder forward. The four weight GEMMs (qkv, proj, mlp up/down)
+    /// dispatch on their slot's precision; the attention score/context
+    /// GEMMs are activation-activation products and stay f32, mirroring
+    /// the weight-stationary int8 streaming of the hardware.
     #[allow(clippy::too_many_arguments)]
     fn encoder_fwd(
         &self,
-        ps: &[&Tensor],
+        ps: &[ArgRef],
         x: &[f32],
         b: usize,
         tokens: usize,
@@ -592,17 +642,17 @@ impl SegmentDef {
         heads: usize,
         mlp: usize,
         sc: &mut Scratch,
-    ) -> Vec<f32> {
+    ) -> Result<Vec<f32>> {
         let r = b * tokens;
         let d3 = 3 * dim;
         let hd = dim / heads;
         let inv = 1.0 / (hd as f32).sqrt();
         let mut xh = sc.take_any(r * dim);
-        layer_norm_fwd_into(x, r, dim, &ps[0].data, &ps[1].data, &mut xh);
+        layer_norm_fwd_into(x, r, dim, fp(ps, 0)?, fp(ps, 1)?, &mut xh);
         let mut qkv = sc.take_any(r * d3);
-        gemm::matmul_into(sc, &xh, &ps[2].data, r, dim, d3, &mut qkv);
+        matmul_w(sc, &xh, ps[2], r, dim, d3, &mut qkv);
         sc.put(xh);
-        add_bias(&mut qkv, &ps[3].data);
+        add_bias(&mut qkv, fp(ps, 3)?);
         let mut o = sc.take(r * dim); // zeroed: heads scatter-add into it
         let mut q = sc.take_any(tokens * hd);
         let mut kb = sc.take_any(tokens * hd);
@@ -630,28 +680,28 @@ impl SegmentDef {
         sc.put(oh);
         sc.put(qkv);
         let mut x2 = sc.take_any(r * dim); // attention projection, then + x
-        gemm::matmul_into(sc, &o, &ps[4].data, r, dim, dim, &mut x2);
+        matmul_w(sc, &o, ps[4], r, dim, dim, &mut x2);
         sc.put(o);
-        add_bias(&mut x2, &ps[5].data);
+        add_bias(&mut x2, fp(ps, 5)?);
         for (pv, &xv) in x2.iter_mut().zip(x) {
             *pv += xv;
         }
         let mut h2 = sc.take_any(r * dim);
-        layer_norm_fwd_into(&x2, r, dim, &ps[6].data, &ps[7].data, &mut h2);
+        layer_norm_fwd_into(&x2, r, dim, fp(ps, 6)?, fp(ps, 7)?, &mut h2);
         let mut z1 = sc.take_any(r * mlp);
-        gemm::matmul_into(sc, &h2, &ps[8].data, r, dim, mlp, &mut z1);
+        matmul_w(sc, &h2, ps[8], r, dim, mlp, &mut z1);
         sc.put(h2);
-        add_bias(&mut z1, &ps[9].data);
+        add_bias(&mut z1, fp(ps, 9)?);
         gelu_inplace(&mut z1);
         let mut y = vec![0.0f32; r * dim];
-        gemm::matmul_into(sc, &z1, &ps[10].data, r, mlp, dim, &mut y);
+        matmul_w(sc, &z1, ps[10], r, mlp, dim, &mut y);
         sc.put(z1);
-        add_bias(&mut y, &ps[11].data);
+        add_bias(&mut y, fp(ps, 11)?);
         for (yv, xv) in y.iter_mut().zip(&x2) {
             *yv += xv;
         }
         sc.put(x2);
-        y
+        Ok(y)
     }
 
     #[allow(clippy::too_many_arguments)]

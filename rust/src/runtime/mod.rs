@@ -33,7 +33,57 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use crate::config::{ModelMeta, SharedMeta};
+use crate::tensor::quant::QTensor;
 use crate::tensor::Tensor;
+
+/// Numeric precision a forward pass executes in. `F32` is the reference
+/// path; `Int8` is the paper's deployment mode (§IV-A): weights stored
+/// as per-channel int8, GEMM streaming in i8 x i8 -> i32, gradients and
+/// engine IPs in f32 over dequantized bursts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl Precision {
+    /// Element size in bytes (drives the hwsim DDR traffic model).
+    pub fn bytes(self) -> u64 {
+        match self {
+            Precision::F32 => 4,
+            Precision::Int8 => 1,
+        }
+    }
+}
+
+/// Positional module argument: an f32 host tensor, or a pre-quantized
+/// int8 weight with per-output-channel scales. Quantized arguments only
+/// appear in *forward* positions of backends that execute true int8
+/// GEMM; every other module keeps the all-f32 [`ModuleImpl::run`]
+/// contract.
+#[derive(Clone, Copy)]
+pub enum ArgRef<'a> {
+    F32(&'a Tensor),
+    Quant(&'a QTensor),
+}
+
+impl<'a> ArgRef<'a> {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            ArgRef::F32(t) => &t.shape,
+            ArgRef::Quant(q) => &q.shape,
+        }
+    }
+
+    /// The f32 tensor, or `None` for a quantized argument.
+    pub fn f32(&self) -> Option<&'a Tensor> {
+        match *self {
+            ArgRef::F32(t) => Some(t),
+            ArgRef::Quant(_) => None,
+        }
+    }
+}
 
 /// Aggregate compile/run statistics.
 #[derive(Debug, Default, Clone)]
@@ -152,6 +202,17 @@ impl ModuleSpec {
 /// A backend-built module body: positional tensors in, tensors out.
 pub trait ModuleImpl {
     fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Mixed-precision entry: like [`ModuleImpl::run`] but arguments may
+    /// be quantized int8 weights. The default accepts all-f32 argument
+    /// lists only — backends that execute true int8 kernels (the
+    /// CpuBackend forward modules) override it.
+    fn run_mixed(&self, args: &[ArgRef]) -> Result<Vec<Tensor>> {
+        match args.iter().map(|a| a.f32()).collect::<Option<Vec<_>>>() {
+            Some(f32_args) => self.run(&f32_args),
+            None => bail!("this module does not accept int8 arguments"),
+        }
+    }
 }
 
 /// An execution backend: builds module bodies from specs.
@@ -179,6 +240,21 @@ impl Executable {
         let out = self
             .imp
             .run(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut st = self.stats.borrow_mut();
+        st.runs += 1;
+        st.run_ms += t0.elapsed().as_secs_f64() * 1e3;
+        Ok(out)
+    }
+
+    /// Execute with mixed f32 / int8-weight arguments (the true-int8
+    /// forward path). Backends without int8 kernels reject quantized
+    /// arguments cleanly.
+    pub fn run_mixed(&self, args: &[ArgRef]) -> Result<Vec<Tensor>> {
+        let t0 = std::time::Instant::now();
+        let out = self
+            .imp
+            .run_mixed(args)
             .with_context(|| format!("executing {}", self.name))?;
         let mut st = self.stats.borrow_mut();
         st.runs += 1;

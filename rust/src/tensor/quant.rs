@@ -1,11 +1,20 @@
-//! INT8 per-tensor symmetric fake-quantization.
+//! INT8 quantization: the true int8 weight representation plus the
+//! legacy fake-quant oracle.
 //!
 //! The FiCABU prototype targets INT8 models (paper §IV-A: "Unless noted
-//! otherwise, we target INT8 quantized models"). The compiled XLA modules
-//! are f32, so we reproduce the INT8 operating point by quantize→dequantize
-//! of weights (and optionally activations): values are snapped onto the
-//! 256-level grid the hardware would see, and the hwsim charges INT8 MAC
-//! energy. DESIGN.md §2 records this substitution.
+//! otherwise, we target INT8 quantized models"). Since PR 3 the
+//! CpuBackend *executes* that operating point: [`QTensor`] stores a
+//! GEMM/conv weight as per-output-channel symmetric int8 + scales,
+//! activations are quantized per tensor during GEMM panel packing, and
+//! the i8 x i8 -> i32 micro-kernel in `runtime::cpu::gemm` requantizes
+//! once at the store (`acc * a_scale * w_scale[col]`). The f32 master
+//! copy in the `ParamStore` is snapped to the dequantized grid so the
+//! gradient chain differentiates exactly the weights the int8 forward
+//! executes.
+//!
+//! [`fake_quant`] (per-tensor quantize→dequantize in f32) is retained as
+//! a *test oracle* and for the legacy deployment-assumption mode — it is
+//! no longer the execution story.
 
 use super::Tensor;
 
@@ -16,6 +25,86 @@ pub fn scale_for(data: &[f32]) -> f32 {
         1.0
     } else {
         amax / 127.0
+    }
+}
+
+/// Quantize one value given a precomputed reciprocal scale. This is THE
+/// rounding used by the int8 execution path (packing, oracles, weight
+/// stores): multiply by `1/scale`, round half away from zero, saturate
+/// to the symmetric [-127, 127] grid. Tiled kernels and scalar oracles
+/// must share it bit-for-bit.
+#[inline]
+pub fn q8(v: f32, inv_scale: f32) -> i8 {
+    (v * inv_scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// A weight tensor quantized per *output channel* (the trailing axis:
+/// `n` of a dense `[k, n]`, `cout` of an HWIO conv `[kh, kw, cin,
+/// cout]`), symmetric int8. The layout of `data` matches the f32
+/// source, so the same strided views drive the int8 pack seams.
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    pub shape: Vec<usize>,
+    /// Row-major i8 values (same element order as the f32 source).
+    pub data: Vec<i8>,
+    /// One scale per output channel (trailing-dim column).
+    pub scales: Vec<f32>,
+}
+
+impl QTensor {
+    /// Number of output channels (trailing dimension).
+    pub fn cols(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Quantize a rank >= 2 weight tensor per trailing-dim channel.
+    pub fn from_weight(t: &Tensor) -> QTensor {
+        assert!(
+            t.shape.len() >= 2,
+            "per-channel quantization needs rank >= 2, got {:?}",
+            t.shape
+        );
+        let cols = *t.shape.last().unwrap();
+        let rows = t.data.len() / cols;
+        let mut scales = vec![0.0f32; cols];
+        for r in 0..rows {
+            let row = &t.data[r * cols..(r + 1) * cols];
+            for (s, v) in scales.iter_mut().zip(row) {
+                *s = s.max(v.abs());
+            }
+        }
+        for s in scales.iter_mut() {
+            *s = if *s == 0.0 { 1.0 } else { *s / 127.0 };
+        }
+        let inv: Vec<f32> = scales.iter().map(|s| 1.0 / s).collect();
+        let mut data = vec![0i8; t.data.len()];
+        for r in 0..rows {
+            let src = &t.data[r * cols..(r + 1) * cols];
+            let dst = &mut data[r * cols..(r + 1) * cols];
+            for c in 0..cols {
+                dst[c] = q8(src[c], inv[c]);
+            }
+        }
+        QTensor { shape: t.shape.clone(), data, scales }
+    }
+
+    /// Write the dequantized (f32-grid) values into `out` — the master
+    /// weight view the f32 gradient chain consumes.
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        let cols = self.cols();
+        debug_assert_eq!(out.len(), self.data.len());
+        for (drow, qrow) in out.chunks_exact_mut(cols).zip(self.data.chunks_exact(cols)) {
+            for ((d, &q), &s) in drow.iter_mut().zip(qrow).zip(&self.scales) {
+                *d = q as f32 * s;
+            }
+        }
+    }
+
+    /// Dequantized copy (allocating convenience).
+    pub fn dequantize(&self) -> Tensor {
+        let mut data = vec![0.0f32; self.data.len()];
+        self.dequantize_into(&mut data);
+        Tensor { shape: self.shape.clone(), data }
     }
 }
 
@@ -30,7 +119,9 @@ pub fn dequantize(q: &[i8], scale: f32) -> Vec<f32> {
     q.iter().map(|&v| v as f32 * scale).collect()
 }
 
-/// Snap a tensor onto its int8 grid in place; returns the scale.
+/// Snap a tensor onto its per-tensor int8 grid in place; returns the
+/// scale. **Test oracle / legacy mode only** — the execution path
+/// quantizes per channel through [`QTensor`] and runs integer GEMM.
 pub fn fake_quant(t: &mut Tensor) -> f32 {
     let s = scale_for(&t.data);
     for v in t.data.iter_mut() {
@@ -88,6 +179,45 @@ mod tests {
         let s = fake_quant(&mut t);
         assert_eq!(s, 1.0);
         assert!(t.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn qtensor_per_channel_scales_and_roundtrip() {
+        // column 1 is 100x larger than column 0: per-channel scales keep
+        // the small column's resolution
+        let t = Tensor::new(vec![3, 2], vec![0.01, 1.0, -0.02, -2.0, 0.015, 1.5]).unwrap();
+        let q = QTensor::from_weight(&t);
+        assert_eq!(q.cols(), 2);
+        assert!((q.scales[0] - 0.02 / 127.0).abs() < 1e-9);
+        assert!((q.scales[1] - 2.0 / 127.0).abs() < 1e-9);
+        let d = q.dequantize();
+        for (i, (a, b)) in t.data.iter().zip(&d.data).enumerate() {
+            let s = q.scales[i % 2];
+            assert!((a - b).abs() <= s * 0.5 + 1e-7, "{a} vs {b}");
+        }
+        // amax columns hit the grid exactly
+        assert_eq!(q.data[3], -127);
+    }
+
+    #[test]
+    fn qtensor_quantize_is_idempotent_on_grid() {
+        let mut r = Pcg32::seeded(11);
+        let t = Tensor::new(vec![8, 5], r.normal_vec(40, 1.0)).unwrap();
+        let q1 = QTensor::from_weight(&t);
+        let q2 = QTensor::from_weight(&q1.dequantize());
+        assert_eq!(q1.data, q2.data);
+        for (a, b) in q1.scales.iter().zip(&q2.scales) {
+            assert!((a - b).abs() <= 1e-6 * a.abs(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn qtensor_zero_column_uses_unit_scale() {
+        let t = Tensor::new(vec![2, 2], vec![0.0, 3.0, 0.0, -1.0]).unwrap();
+        let q = QTensor::from_weight(&t);
+        assert_eq!(q.scales[0], 1.0);
+        assert_eq!(q.data[0], 0);
+        assert_eq!(q.data[2], 0);
     }
 
     #[test]

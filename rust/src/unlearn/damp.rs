@@ -14,7 +14,10 @@ use crate::tensor::Tensor;
 pub struct DampEngine {
     exe: Rc<Executable>,
     pub tile: usize,
+    /// Real elements streamed (tail padding excluded).
     pub elems_streamed: std::cell::Cell<u64>,
+    /// Zero-pad lanes of tail bursts (cost IP cycles, never move DDR).
+    pub pad_elems: std::cell::Cell<u64>,
 }
 
 /// Result of one segment-level dampening pass.
@@ -30,6 +33,7 @@ impl DampEngine {
             exe: rt.load(&ModuleSpec::Dampen { shared: shared.clone() })?,
             tile: shared.tile,
             elems_streamed: std::cell::Cell::new(0),
+            pad_elems: std::cell::Cell::new(0),
         })
     }
 
@@ -59,25 +63,27 @@ impl DampEngine {
         let alpha_t = Tensor::vec1(vec![alpha]);
         let lambda_t = Tensor::vec1(vec![lambda]);
         let mut stats = DampStats { selected: 0, total: theta.len() as u64 };
+        // burst buffers hoisted out of the tile loop: only the tail tile
+        // rewrites its padding lanes
+        let mut tb = Tensor::vec1(vec![0.0f32; t]);
+        let mut fb = Tensor::vec1(vec![0.0f32; t]);
+        let mut db = Tensor::vec1(vec![1.0f32; t]);
         let mut off = 0;
         while off < theta.len() {
             let n = t.min(theta.len() - off);
-            let mut tb = vec![0.0f32; t];
-            tb[..n].copy_from_slice(&theta[off..off + n]);
-            let mut fb = vec![0.0f32; t]; // pad I_Df = 0 -> unselected
-            fb[..n].copy_from_slice(&i_df[off..off + n]);
-            let mut db = vec![1.0f32; t]; // pad I_D = 1
-            db[..n].copy_from_slice(&i_d[off..off + n]);
-            let out = self.exe.run(&[
-                &Tensor::vec1(tb),
-                &Tensor::vec1(fb),
-                &Tensor::vec1(db),
-                &alpha_t,
-                &lambda_t,
-            ])?;
+            tb.data[..n].copy_from_slice(&theta[off..off + n]);
+            fb.data[..n].copy_from_slice(&i_df[off..off + n]);
+            db.data[..n].copy_from_slice(&i_d[off..off + n]);
+            if n < t {
+                tb.data[n..].fill(0.0);
+                fb.data[n..].fill(0.0); // pad I_Df = 0 -> unselected
+                db.data[n..].fill(1.0); // pad I_D = 1
+            }
+            let out = self.exe.run(&[&tb, &fb, &db, &alpha_t, &lambda_t])?;
             theta[off..off + n].copy_from_slice(&out[0].data[..n]);
             stats.selected += out[1].data[..n].iter().map(|&m| m as u64).sum::<u64>();
-            self.elems_streamed.set(self.elems_streamed.get() + t as u64);
+            self.elems_streamed.set(self.elems_streamed.get() + n as u64);
+            self.pad_elems.set(self.pad_elems.get() + (t - n) as u64);
             off += n;
         }
         Ok(stats)

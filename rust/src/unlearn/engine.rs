@@ -21,9 +21,10 @@
 
 use anyhow::{bail, Result};
 
-use crate::fisher::{concat_seg, FimdEngine, Importance};
+use crate::fisher::{concat_seg_into, FimdEngine, Importance};
 use crate::model::macs::{self, MacLedger};
 use crate::model::{Model, ParamStore};
+use crate::runtime::Precision;
 use crate::tensor::Tensor;
 use crate::unlearn::damp::DampEngine;
 use crate::unlearn::schedule::Schedule;
@@ -38,6 +39,12 @@ pub struct UnlearnConfig {
     pub checkpoints: Vec<usize>,
     /// Target forget accuracy (fraction): random-guess level for the task.
     pub tau: f64,
+    /// Forward/eval precision: `Int8` serves the paper's deployment
+    /// mode (int8 GEMM streaming for Step-0 forward and checkpoint
+    /// partial inference) while the gradient chain (segment VJPs, FIMD)
+    /// stays f32 over the dequantized masters. Requires a store
+    /// prepared with [`ParamStore::quantize_int8`].
+    pub precision: Precision,
 }
 
 impl UnlearnConfig {
@@ -48,15 +55,30 @@ impl UnlearnConfig {
             schedule: Schedule::Uniform,
             checkpoints: vec![],
             tau: 0.0,
+            precision: Precision::F32,
         }
     }
 
     pub fn cau(alpha: f64, lambda: f64, checkpoints: Vec<usize>, tau: f64) -> UnlearnConfig {
-        UnlearnConfig { alpha, lambda, schedule: Schedule::Uniform, checkpoints, tau }
+        UnlearnConfig {
+            alpha,
+            lambda,
+            schedule: Schedule::Uniform,
+            checkpoints,
+            tau,
+            precision: Precision::F32,
+        }
     }
 
     pub fn bd(alpha: f64, lambda: f64, schedule: Schedule) -> UnlearnConfig {
-        UnlearnConfig { alpha, lambda, schedule, checkpoints: vec![], tau: 0.0 }
+        UnlearnConfig {
+            alpha,
+            lambda,
+            schedule,
+            checkpoints: vec![],
+            tau: 0.0,
+            precision: Precision::F32,
+        }
     }
 
     pub fn ficabu(
@@ -66,7 +88,20 @@ impl UnlearnConfig {
         checkpoints: Vec<usize>,
         tau: f64,
     ) -> UnlearnConfig {
-        UnlearnConfig { alpha, lambda, schedule, checkpoints, tau }
+        UnlearnConfig {
+            alpha,
+            lambda,
+            schedule,
+            checkpoints,
+            tau,
+            precision: Precision::F32,
+        }
+    }
+
+    /// Builder: serve forward/eval at the given precision.
+    pub fn with_precision(mut self, precision: Precision) -> UnlearnConfig {
+        self.precision = precision;
+        self
     }
 }
 
@@ -96,11 +131,21 @@ pub struct UnlearnReport {
     pub selected_per_depth: Vec<u64>,
     /// (depth, measured forget accuracy) at every evaluated checkpoint.
     pub checkpoint_trace: Vec<(usize, f64)>,
-    /// Elements streamed through each IP (feeds the hwsim cycle model).
+    /// *Real* elements streamed through each IP (feeds the hwsim
+    /// cycle/traffic model).
     pub fimd_elems: u64,
     pub damp_elems: u64,
+    /// Zero-pad elements the fixed-size IP bursts carried beyond the
+    /// real streams (tail tiles) — pad lanes cost IP cycles but never
+    /// move over DDR.
+    pub fimd_pad_elems: u64,
+    pub damp_pad_elems: u64,
     /// Bytes of activation cache held for checkpoint reuse.
     pub act_cache_bytes: usize,
+    /// Precision the forward/eval GEMM stream actually executed in —
+    /// the hwsim charges int8 MAC energy and 1-byte traffic from this,
+    /// not from a deployment assumption.
+    pub precision: Precision,
 }
 
 pub fn make_onehot(labels: &[usize], classes: usize) -> Tensor {
@@ -135,17 +180,25 @@ pub fn run_unlearning(
     if forget_labels.len() != meta.batch {
         bail!("labels len {} != batch {}", forget_labels.len(), meta.batch);
     }
+    if cfg.precision == Precision::Int8 && !params.is_quantized() {
+        bail!("int8 unlearning requested on an unquantized store (ParamStore::quantize_int8)");
+    }
     let num_mb = meta.batch / mb_size;
     let fimd_start = fimd.elems_streamed.get();
     let damp_start = damp.elems_streamed.get();
+    let fimd_pad_start = fimd.pad_elems.get();
+    let damp_pad_start = damp.pad_elems.get();
 
     let mut report = UnlearnReport {
         selected_per_depth: vec![0; big_l],
+        precision: cfg.precision,
         ..Default::default()
     };
 
     // --- Step 0: one forward pass, cache every segment input -------------
-    let cache = model.forward_cached(params, forget_x)?;
+    // (int8-served: the forward streams int8 GEMM over the quantized
+    // weights; the cached activations feed the f32 gradient chain)
+    let cache = model.forward_cached_prec(params, forget_x, cfg.precision)?;
     report.ledger.forward = macs::full_forward_macs(meta, meta.batch);
     report.act_cache_bytes = cache.bytes();
 
@@ -159,6 +212,11 @@ pub fn run_unlearning(
     }
 
     // --- back-end-first layer loop ---------------------------------------
+    // Burst buffers hoisted out of the loops: segment gradient bursts
+    // and parameter bursts reuse one allocation across all microbatches
+    // and segments.
+    let mut burst: Vec<f32> = Vec::new();
+    let mut theta: Vec<f32> = Vec::new();
     for l in 1..=big_l {
         let k = meta.seg_index(l);
 
@@ -169,7 +227,8 @@ pub fn run_unlearning(
         for mb in 0..num_mb {
             let x_mb = cache.microbatch_input(k, mb, mb_size)?;
             let (grads, gx) = model.segment_bwd(k, params, &x_mb, &gy_state[mb])?;
-            fimd.accumulate(&mut i_df, &concat_seg(&grads), scale)?;
+            concat_seg_into(&grads, &mut burst);
+            fimd.accumulate(&mut i_df, &burst, scale)?;
             gy_state[mb] = gx;
         }
         report.ledger.backward += macs::bwd_macs(meta, k, meta.batch);
@@ -179,9 +238,19 @@ pub fn run_unlearning(
         let s = cfg.schedule.s(l, big_l);
         let alpha_l = (cfg.alpha * s) as f32;
         let lambda_l = (cfg.lambda * s) as f32;
-        let mut theta = concat_seg(&params.seg[k]);
+        concat_seg_into(&params.seg[k], &mut theta);
         let stats = damp.dampen(&mut theta, &i_df, &global.per_seg[k], alpha_l, lambda_l)?;
         scatter_seg(&theta, &mut params.seg[k]);
+        // Keep the int8 copies in lockstep with the edited masters —
+        // only the segment the dampening write-back touched. Gated on
+        // the *store* (not cfg.precision) deliberately: an f32-precision
+        // run over an int8-deployed store must still leave the int8
+        // copies valid (evals auto-detect them), at the cost of
+        // re-snapping edits to the grid. For a pure-f32 ablation arm,
+        // run on an unquantized clone of the store.
+        if params.is_quantized() {
+            params.requantize_segment(k);
+        }
         report.ledger.dampen += macs::dampen_macs(meta, k);
         report.selected_per_depth[l - 1] = stats.selected;
         report.segments_edited = l;
@@ -189,7 +258,7 @@ pub fn run_unlearning(
         // Checkpoint: partial inference from the cached input of this
         // segment through the (now partially dampened) back-end.
         if cfg.checkpoints.contains(&l) {
-            let logits = model.partial_forward(params, k, &cache.inputs[k])?;
+            let logits = model.partial_forward_prec(params, k, &cache.inputs[k], cfg.precision)?;
             report.ledger.checkpoint += macs::partial_inference_macs(meta, k, meta.batch);
             let acc = forget_accuracy(&logits, forget_labels);
             report.checkpoint_trace.push((l, acc));
@@ -202,6 +271,8 @@ pub fn run_unlearning(
 
     report.fimd_elems = fimd.elems_streamed.get() - fimd_start;
     report.damp_elems = damp.elems_streamed.get() - damp_start;
+    report.fimd_pad_elems = fimd.pad_elems.get() - fimd_pad_start;
+    report.damp_pad_elems = damp.pad_elems.get() - damp_pad_start;
     Ok(report)
 }
 

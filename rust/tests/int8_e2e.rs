@@ -1,0 +1,40 @@
+//! End-to-end acceptance for int8 serving: an int8-served FiCABU
+//! unlearning event on a trained model reaches random-guess forget
+//! accuracy with retain accuracy within 1 pp of the f32 path.
+//!
+//! In its own binary because it mutates `FICABU_ARTIFACTS` — tests that
+//! touch the process environment get a dedicated process so no parallel
+//! test reads the environment while it is being mutated (same rule as
+//! `tests/gemm_threads_env.rs`). Trains for 120 steps like the
+//! quickstart example, so this is the slowest test in the suite.
+
+use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
+use ficabu::runtime::Precision;
+
+#[test]
+fn int8_served_unlearning_matches_f32_quality() {
+    let dir = std::env::temp_dir().join("ficabu_int8_e2e_artifacts");
+    std::env::set_var("FICABU_ARTIFACTS", &dir);
+    let opts = PrepareOpts { train_steps: 120, retrain: true, ..PrepareOpts::default() };
+    let mut prep = exp::prepare("rn18slim", DatasetKind::Cifar20, &opts).unwrap();
+    let tau = prep.kind.tau();
+    let class = 3;
+    let f32_res = exp::run_mode(&prep, class, Mode::Ficabu, None).unwrap();
+    assert!(f32_res.df <= tau + 1e-9, "f32 forgetting missed target: {}", f32_res.df);
+
+    // switch the same trained model to int8 serving
+    let meta = prep.model.meta.clone();
+    prep.params.quantize_int8(&meta);
+    prep.precision = Precision::Int8;
+    let i8_res = exp::run_mode(&prep, class, Mode::Ficabu, None).unwrap();
+    let report = i8_res.report.as_ref().unwrap();
+    assert_eq!(report.precision, Precision::Int8);
+    assert!(i8_res.df <= tau + 1e-9, "int8 forgetting missed target: {}", i8_res.df);
+    assert!(
+        (i8_res.dr - f32_res.dr).abs() <= 0.01 + 1e-9,
+        "int8 retain accuracy drifted beyond 1 pp: f32 {} vs int8 {}",
+        f32_res.dr,
+        i8_res.dr
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

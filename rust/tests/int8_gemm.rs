@@ -1,0 +1,145 @@
+//! Property tests for the true-int8 execution path: the tiled int8
+//! GEMM core and fused int8 conv against a scalar
+//! quantize -> integer-accumulate -> requantize oracle (bitwise —
+//! integer accumulation is order-free and the quantization expressions
+//! are shared), thread-count bitwise determinism for the i8 kernel,
+//! and closeness to the f32 reference. The end-to-end int8-served
+//! unlearning test lives in its own binary (`tests/int8_e2e.rs`): it
+//! mutates `FICABU_ARTIFACTS`, and environment-mutating tests get a
+//! dedicated process (see `tests/gemm_threads_env.rs`).
+
+use ficabu::runtime::cpu::gemm;
+use ficabu::runtime::cpu::kernels::{self, naive, Conv};
+use ficabu::runtime::cpu::scratch::Scratch;
+use ficabu::tensor::quant::QTensor;
+use ficabu::tensor::Tensor;
+use ficabu::util::prng::Pcg32;
+
+/// Randomized shapes that exercise every tiling edge: M/N/K not
+/// divisible by MR/NR/KC, odd k (the pair kernel's zero pad row), k=1,
+/// single-row/column operands, and k spanning multiple KC blocks.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 7, 1),
+    (3, 1, 5),
+    (4, 8, 8),
+    (5, 9, 7),
+    (8, 64, 8),
+    (13, 17, 11),
+    (64, 64, 64),
+    (33, 129, 65),
+    (100, 37, 129),
+    (257, 96, 35),
+    (30, 600, 20),
+    (9, 1025, 40),
+];
+
+fn qweight(rng: &mut Pcg32, k: usize, n: usize) -> QTensor {
+    QTensor::from_weight(&Tensor::new(vec![k, n], rng.normal_vec(k * n, 0.5)).unwrap())
+}
+
+#[test]
+fn tiled_int8_matmul_matches_scalar_oracle_bitwise() {
+    let mut rng = Pcg32::seeded(0x18a);
+    let mut sc = Scratch::new();
+    for &(m, k, n) in SHAPES {
+        let x = rng.normal_vec(m * k, 1.0);
+        let wq = qweight(&mut rng, k, n);
+        let want = naive::matmul_i8(&x, &wq.data, &wq.scales, m, k, n);
+        let mut got = vec![0.0f32; m * n];
+        kernels::matmul_i8_into(&mut sc, &x, &wq, m, k, n, &mut got);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "int8 matmul {m}x{k}x{n} diverges from the oracle at [{i}]: {g} vs {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_int8_conv_matches_scalar_oracle_bitwise() {
+    // (kh, kw, cin, cout, stride, b, h, w) — 1x1 kernels, strides,
+    // non-square spatial dims, multi-batch, odd patch dims
+    let cases = [
+        (1, 1, 1, 1, 1, 1, 2, 2),
+        (1, 1, 3, 8, 1, 2, 5, 5),
+        (1, 1, 4, 4, 2, 1, 8, 8),
+        (3, 3, 1, 1, 1, 1, 3, 3),
+        (3, 3, 2, 3, 1, 2, 7, 5),
+        (3, 3, 3, 8, 2, 1, 9, 9),
+        (5, 5, 2, 2, 1, 1, 6, 6),
+    ];
+    let mut rng = Pcg32::seeded(0x18b);
+    let mut sc = Scratch::new();
+    for &(kh, kw, cin, cout, stride, b, h, w) in &cases {
+        let cv = Conv { kh, kw, cin, cout, stride };
+        let x = rng.normal_vec(b * h * w * cin, 1.0);
+        let wq = QTensor::from_weight(
+            &Tensor::new(vec![kh, kw, cin, cout], rng.normal_vec(kh * kw * cin * cout, 0.5))
+                .unwrap(),
+        );
+        let want = naive::conv_fwd_i8(&cv, &x, &wq.data, &wq.scales, b, h, w);
+        let (ho, wo) = cv.out_hw(h, w);
+        let mut got = vec![0.0f32; b * ho * wo * cout];
+        cv.fwd_i8_into(&mut sc, &x, &wq, b, h, w, &mut got);
+        for (i, (g, want_v)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                want_v.to_bits(),
+                "int8 conv {kh}x{kw} s{stride} {cin}->{cout} diverges at [{i}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn int8_thread_count_does_not_change_results() {
+    // big enough to clear the fork threshold
+    let (m, k, n) = (192, 1100, 96);
+    let mut rng = Pcg32::seeded(0x18c);
+    let x = rng.normal_vec(m * k, 1.0);
+    let wq = qweight(&mut rng, k, n);
+    let a_scale = ficabu::tensor::quant::scale_for(&x);
+    let mut sc = Scratch::new();
+    let av = gemm::QuantStrided { data: &x, rs: k, cs: 1, inv_scale: 1.0 / a_scale };
+    let bv = gemm::QStrided { data: &wq.data, rs: n, cs: 1 };
+    let mut y1 = vec![0.0f32; m * n];
+    gemm::gemm_i8_threads(&mut sc, &av, &bv, a_scale, &wq.scales, m, k, n, &mut y1, 1);
+    for threads in [2usize, 3, 4, 7] {
+        let mut yt = vec![0.0f32; m * n];
+        gemm::gemm_i8_threads(&mut sc, &av, &bv, a_scale, &wq.scales, m, k, n, &mut yt, threads);
+        for (i, (u, v)) in y1.iter().zip(&yt).enumerate() {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "threads={threads} diverges at [{i}]: {u} vs {v}"
+            );
+        }
+    }
+}
+
+#[test]
+fn int8_matmul_tracks_f32_reference() {
+    // quantization error bound sanity: int8 result vs the f32 product
+    // of the dequantized weight
+    let (m, k, n) = (40, 96, 24);
+    let mut rng = Pcg32::seeded(0x18d);
+    let mut sc = Scratch::new();
+    let x = rng.normal_vec(m * k, 1.0);
+    let wq = qweight(&mut rng, k, n);
+    let wf = wq.dequantize();
+    let mut f32_out = vec![0.0f32; m * n];
+    gemm::matmul_into(&mut sc, &x, &wf.data, m, k, n, &mut f32_out);
+    let mut i8_out = vec![0.0f32; m * n];
+    kernels::matmul_i8_into(&mut sc, &x, &wq, m, k, n, &mut i8_out);
+    let num: f32 = f32_out
+        .iter()
+        .zip(&i8_out)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum();
+    let den: f32 = f32_out.iter().map(|v| v * v).sum();
+    let rel = (num / den.max(1e-12)).sqrt();
+    assert!(rel < 0.05, "int8 vs f32 relative L2 error {rel}");
+}
