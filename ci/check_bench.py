@@ -1,0 +1,195 @@
+#!/usr/bin/env python3
+"""Validate and compare the repo's BENCH_*.json artifacts.
+
+Subcommands
+-----------
+validate FILE
+    Schema check (suite/git_rev/threads/cases, per-case name/iters/
+    min_ms/mean_ms, unique names) plus per-suite guardrails:
+
+    * suite "runtime": the INT8 guardrail that used to live inline in
+      ci.yml — tiled-int8 GEMM and fused-int8 conv cases must exist, and
+      at the largest shape benched in both precisions the int8 GEMM must
+      not be slower than the f32 tiled GEMM.
+    * suite "serve": paced 1-worker and 4-worker arms and the
+      paced-speedup-4v1 case must exist, and the speedup must clear
+      --min-speedup (default 1.5 — conservative for small CI runners;
+      the acceptance target on dev boxes is >= 2x).
+
+compare BASELINE CURRENT
+    Fail when any case present in both files regressed by more than
+    --max-regress-pct on min_ms (default 25%), with an absolute floor
+    (--abs-floor-ms) so sub-jitter cases cannot trip the gate. A missing
+    BASELINE file is tolerated (first run on a branch has no baseline).
+    Host-bound serving arms and the training-prepare case are skipped:
+    their wall time is dominated by shared-runner noise, not by the code
+    under test.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# compare(): prefixes whose min_ms is runner-noise dominated.
+NOISY_PREFIXES = ("serve/host/", "serve/coalesce-burst", "prepare ")
+
+
+def _fail(msg):
+    print(f"FAIL: {msg}")
+    sys.exit(1)
+
+
+def _load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        _fail(f"{path}: {e}")
+
+
+def _cases_by_name(doc, path):
+    cases = doc.get("cases")
+    if not isinstance(cases, list) or not cases:
+        _fail(f"{path}: 'cases' must be a non-empty list")
+    out = {}
+    for c in cases:
+        for key in ("name", "iters", "min_ms", "mean_ms"):
+            if key not in c:
+                _fail(f"{path}: case {c.get('name', '?')!r} missing {key!r}")
+        if not isinstance(c["min_ms"], (int, float)) or c["min_ms"] < 0:
+            _fail(f"{path}: case {c['name']!r} has bad min_ms {c['min_ms']!r}")
+        if c["name"] in out:
+            _fail(f"{path}: duplicate case name {c['name']!r}")
+        out[c["name"]] = c
+    return out
+
+
+def _check_runtime(cases, path):
+    """INT8 guardrail (moved verbatim in spirit from the old inline step)."""
+    int8 = [n for n in cases if n.startswith("gemm/tiled-int8/")]
+    if not int8:
+        _fail(f"{path}: no gemm/tiled-int8/ cases")
+    if not any(n.startswith("conv/fused-int8/") for n in cases):
+        _fail(f"{path}: no conv/fused-int8/ case")
+    # compare at the largest shape benched in BOTH precisions, so the
+    # check holds under any preset's shape list
+    shared = [
+        (cases["gemm/tiled/" + shape]["min_ms"], shape)
+        for shape in (n[len("gemm/tiled-int8/"):] for n in int8)
+        if "gemm/tiled/" + shape in cases
+    ]
+    if not shared:
+        _fail(f"{path}: no GEMM shape benched in both f32 and int8")
+    f32_ms, shape = max(shared)
+    i8_ms = cases["gemm/tiled-int8/" + shape]["min_ms"]
+    if i8_ms > f32_ms:
+        _fail(
+            f"{path}: int8 tiled GEMM slower than f32 at {shape!r}: "
+            f"{i8_ms:.3f} vs {f32_ms:.3f} ms"
+        )
+    print(
+        f"int8 guardrail OK at {shape!r}: {f32_ms:.3f} ms f32 vs "
+        f"{i8_ms:.3f} ms int8 ({f32_ms / max(i8_ms, 1e-9):.2f}x)"
+    )
+
+
+def _check_serve(cases, path, min_speedup):
+    for name in ("serve/paced/workers=1", "serve/paced/workers=4",
+                 "serve/paced-speedup-4v1"):
+        if name not in cases:
+            _fail(f"{path}: missing case {name!r}")
+    speedup = cases["serve/paced-speedup-4v1"].get("speedup")
+    if not isinstance(speedup, (int, float)):
+        _fail(f"{path}: paced-speedup-4v1 case has no 'speedup' field")
+    if speedup < min_speedup:
+        _fail(
+            f"{path}: paced 4-worker speedup {speedup:.2f}x below the "
+            f"{min_speedup:.2f}x gate"
+        )
+    print(f"serve guardrail OK: paced 4v1 speedup {speedup:.2f}x")
+
+
+def cmd_validate(args):
+    doc = _load(args.file)
+    for key in ("suite", "git_rev", "threads", "cases"):
+        if key not in doc:
+            _fail(f"{args.file}: missing top-level key {key!r}")
+    cases = _cases_by_name(doc, args.file)
+    suite = doc["suite"]
+    if suite == "runtime":
+        _check_runtime(cases, args.file)
+    elif suite == "serve":
+        _check_serve(cases, args.file, args.min_speedup)
+    else:
+        # a renamed suite must not silently disable its guardrails
+        _fail(f"{args.file}: unknown suite {suite!r} (expected runtime|serve)")
+    print(
+        f"OK: {args.file}: suite {suite!r} rev {doc['git_rev']} "
+        f"threads {doc['threads']} with {len(cases)} cases"
+    )
+
+
+def cmd_compare(args):
+    if not os.path.exists(args.baseline):
+        print(
+            f"NOTE: baseline {args.baseline} not found — tolerating "
+            "(first run on this branch has no baseline artifact)"
+        )
+        return
+    base = _cases_by_name(_load(args.baseline), args.baseline)
+    cur = _cases_by_name(_load(args.current), args.current)
+    shared = 0
+    skipped = 0
+    regressions = []
+    for name, c in cur.items():
+        b = base.get(name)
+        if b is None:
+            continue
+        if name.startswith(NOISY_PREFIXES):
+            skipped += 1
+            continue
+        shared += 1
+        limit = b["min_ms"] * (1.0 + args.max_regress_pct / 100.0)
+        if c["min_ms"] > limit and c["min_ms"] - b["min_ms"] > args.abs_floor_ms:
+            regressions.append(
+                f"  {name}: {b['min_ms']:.3f} ms -> {c['min_ms']:.3f} ms "
+                f"(+{100.0 * (c['min_ms'] / b['min_ms'] - 1.0):.1f}%)"
+            )
+    print(
+        f"compared {shared} shared cases ({skipped} noisy skipped, "
+        f"{len(cur) - shared - skipped} new) against {args.baseline}"
+    )
+    if regressions:
+        print(f"FAIL: {len(regressions)} case(s) regressed more than "
+              f"{args.max_regress_pct:.0f}% on min_ms:")
+        for r in regressions:
+            print(r)
+        sys.exit(1)
+    print("regression gate OK")
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    v = sub.add_parser("validate", help="schema + per-suite guardrails")
+    v.add_argument("file")
+    v.add_argument("--min-speedup", type=float, default=1.5,
+                   help="serve suite: minimum paced 4v1 speedup (default 1.5)")
+    v.set_defaults(fn=cmd_validate)
+
+    c = sub.add_parser("compare", help="min_ms regression gate vs a baseline")
+    c.add_argument("baseline")
+    c.add_argument("current")
+    c.add_argument("--max-regress-pct", type=float, default=25.0)
+    c.add_argument("--abs-floor-ms", type=float, default=0.25,
+                   help="ignore regressions smaller than this many ms")
+    c.set_defaults(fn=cmd_compare)
+
+    args = p.parse_args()
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,14 @@
-//! Edge serving scenario (Fig. 1 right): concurrent clients submit
-//! forget-identity requests to the on-device coordinator; the single
-//! Unlearning Engine services them FIFO and reports per-request quality,
-//! MACs, simulated energy, and queue/service latency.
+//! Edge serving scenario: concurrent clients submit forget-identity
+//! requests to a multi-worker unlearning fleet. The dispatcher
+//! coalesces duplicate requests into one execution with fan-out
+//! replies, sheds load when the bounded queue fills, and rolls
+//! per-worker latency histograms up into fleet statistics.
 //!
 //! Run: `cargo run --release --example edge_serving`
 
-use std::time::Instant;
-
-use ficabu::coordinator::{EdgeServer, Request};
+use ficabu::config::SharedMeta;
+use ficabu::coordinator::{Fleet, FleetConfig, Pacing, Reply, WorkerSpec};
 use ficabu::exp::{self, tables::mode_config, DatasetKind, Mode, PrepareOpts};
-use ficabu::hwsim::mem::Precision;
-use ficabu::hwsim::{BaselineProcessor, FicabuProcessor};
 
 fn main() -> anyhow::Result<()> {
     let prep = exp::prepare(
@@ -19,78 +17,88 @@ fn main() -> anyhow::Result<()> {
         &PrepareOpts::default(),
     )?;
     let cfg = mode_config(&prep, Mode::Ficabu, None);
-    let tile = prep.model.meta.tile;
-    let mut server = EdgeServer::new(
-        prep.model,
-        prep.params,
-        prep.global,
-        prep.fimd,
-        prep.damp,
-        prep.train,
+    let spec = WorkerSpec {
+        meta: prep.model.meta.clone(),
+        shared: SharedMeta::resolve()?,
+        params: prep.params,
+        global: prep.global,
+        train: prep.train,
         cfg,
-        FicabuProcessor::new(tile, Precision::Int8),
-        BaselineProcessor::new(tile, Precision::Int8),
-    );
-
-    // three clients, each requesting two identities be forgotten
-    let (tx, rx) = std::sync::mpsc::channel();
-    let mut clients = Vec::new();
-    for c in 0..3usize {
-        let tx = tx.clone();
-        clients.push(std::thread::spawn(move || {
-            let mut replies = Vec::new();
-            for r in 0..2usize {
-                let class = c * 2 + r;
-                let (rtx, rrx) = std::sync::mpsc::channel();
-                tx.send((Instant::now(), Request::Unlearn { class, reply: rtx })).unwrap();
-                replies.push((class, rrx));
-            }
-            replies
-                .into_iter()
-                .map(|(c, r)| (c, r.recv().unwrap()))
-                .collect::<Vec<_>>()
-        }));
-    }
-    // stats probe
-    let stats_rx = {
-        let (rtx, rrx) = std::sync::mpsc::channel();
-        tx.send((Instant::now(), Request::Stats { reply: rtx })).unwrap();
-        rrx
+        precision: prep.precision,
     };
-    drop(tx);
+    let fleet = Fleet::start(
+        spec,
+        FleetConfig {
+            workers: 2,
+            queue_cap: 16,
+            deadline: None,
+            batch_max: 2,
+            pacing: Pacing::Host,
+        },
+    )?;
 
-    server.serve(rx)?;
+    println!("=== edge serving: 3 clients x 2 forget requests on a 2-worker fleet ===\n");
 
-    println!("=== edge serving: 3 clients x 2 forget requests (PinsFace-like) ===\n");
+    // Three clients, two identities each; client 2 repeats client 0's
+    // second identity — if the two requests overlap in the queue they
+    // coalesce into one execution with fan-out replies.
     let mut ok = 0;
-    for client in clients {
-        for (class, reply) in client.join().unwrap() {
-            match reply {
-                Ok(s) => {
-                    ok += 1;
-                    println!(
-                        "identity {class}: Df {:5.1}%  Dr {:5.1}%  stop l={:<8} MACs {:7.4}%  energy {:8.4} mJ ({:6.3}% of SSD)  queue {:6.1} ms  service {:7.1} ms",
-                        100.0 * s.forget_acc,
-                        100.0 * s.retain_acc,
-                        format!("{:?}", s.stop_depth),
-                        s.macs_vs_ssd_pct,
-                        s.sim_energy_mj,
-                        s.sim_energy_vs_ssd_pct,
-                        s.timing.queue_ms,
-                        s.timing.service_ms,
-                    );
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let fleet = &fleet;
+        let mut joins = Vec::new();
+        for c in 0..3usize {
+            joins.push(s.spawn(move || {
+                let classes: [usize; 2] = [c * 2, if c == 2 { 1 } else { c * 2 + 1 }];
+                classes.map(|class| (class, fleet.submit(class).recv()))
+            }));
+        }
+        for j in joins {
+            for (class, reply) in j.join().expect("client thread") {
+                match reply.expect("fleet answers every admitted request") {
+                    Reply::Done(sm) => {
+                        ok += 1;
+                        println!(
+                            "identity {class}: Df {:5.1}%  Dr {:5.1}%  stop l={:<8} MACs {:7.4}%  energy {:8.4} mJ ({:6.3}% of SSD)  sim {:7.1} ms  queue {:6.1} ms  service {:7.1} ms",
+                            100.0 * sm.forget_acc,
+                            100.0 * sm.retain_acc,
+                            format!("{:?}", sm.stop_depth),
+                            sm.macs_vs_ssd_pct,
+                            sm.sim_energy_mj,
+                            sm.sim_energy_vs_ssd_pct,
+                            sm.sim_ms,
+                            sm.timing.queue_ms,
+                            sm.timing.service_ms,
+                        );
+                    }
+                    Reply::Failed(e) => println!("identity {class}: FAILED ({e})"),
+                    Reply::Backpressure { queue_len, queue_cap } => {
+                        println!("identity {class}: shed (queue {queue_len}/{queue_cap})")
+                    }
+                    Reply::Expired { missed_by_ms } => {
+                        println!("identity {class}: expired ({missed_by_ms:.0} ms late)")
+                    }
                 }
-                Err(e) => println!("identity {class}: FAILED ({e})"),
             }
         }
-    }
-    if let Ok(st) = stats_rx.recv() {
-        println!(
-            "\nserver stats at probe: served {} failures {} mean queue {:.1} ms mean service {:.1} ms",
-            st.served, st.failures, st.mean_queue_ms(), st.mean_service_ms()
-        );
-    }
+        Ok(())
+    })?;
+
+    let stats = fleet.shutdown()?;
+    let total = stats.merged();
+    println!(
+        "\nfleet stats: admitted {} coalesced {} served {} failures {} passes {}",
+        stats.admitted, stats.coalesced, total.served, total.failures, total.batches
+    );
+    println!(
+        "latency: queue p50 {:.1} ms p99 {:.1} ms | service p50 {:.1} ms p99 {:.1} ms",
+        total.queue_hist.p50_ms(),
+        total.queue_hist.p99_ms(),
+        total.service_hist.p50_ms(),
+        total.service_hist.p99_ms()
+    );
     assert_eq!(ok, 6, "all requests must succeed");
+    // 6 requests, every one either executed or coalesced onto one
+    assert_eq!(total.served + stats.coalesced, 6);
     println!("edge serving OK");
     Ok(())
 }

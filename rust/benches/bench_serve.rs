@@ -1,0 +1,238 @@
+//! Serving-fleet load generator: drives `coordinator::Fleet` at
+//! configurable worker counts and offered load, and emits
+//! `BENCH_serve.json` (throughput in requests/s plus queue/service
+//! latency percentiles per arm) for CI's regression gate.
+//!
+//! Arms:
+//!
+//! * `serve/paced/...` — every worker is paced to the *simulated*
+//!   FiCABU device latency (`Pacing::SimDevice`, ≥ `FICABU_SERVE_PACE_MS`,
+//!   default 4000 ms): each worker stands in for one 50 MHz device, so
+//!   throughput measures dispatcher/fleet scaling without the host CPU
+//!   as the bottleneck. This is the arm behind the `paced-speedup-4v1`
+//!   headline case.
+//! * `serve/host/...` — unpaced: workers reply as fast as the host
+//!   computes, so scaling here is bounded by host cores.
+//! * `serve/coalesce-burst` — one worker, a burst of identical
+//!   requests: the dispatcher folds them into ~2 executions with
+//!   fan-out replies.
+//!
+//! `FICABU_BENCH_PRESET=smoke` shrinks the request counts for CI.
+
+mod harness;
+
+use std::time::Instant;
+
+use ficabu::config::SharedMeta;
+use ficabu::coordinator::{Fleet, FleetConfig, Pacing, Reply, WorkerSpec};
+use ficabu::exp::tables::mode_config;
+use ficabu::exp::{self, DatasetKind, Mode, Prepared, PrepareOpts};
+use harness::Bench;
+
+const ART: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
+const OUT_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+
+fn pace_floor_ms() -> f64 {
+    std::env::var("FICABU_SERVE_PACE_MS")
+        .ok()
+        .and_then(|s| s.trim().parse::<f64>().ok())
+        .unwrap_or(4000.0)
+}
+
+fn spec_for(prep: &Prepared, shared: &SharedMeta) -> WorkerSpec {
+    WorkerSpec {
+        meta: prep.model.meta.clone(),
+        shared: shared.clone(),
+        params: prep.params.clone(),
+        global: prep.global.clone(),
+        train: prep.train.clone(),
+        cfg: mode_config(prep, Mode::Ficabu, None),
+        precision: prep.precision,
+    }
+}
+
+/// Open-loop burst of `requests` distinct-class requests against a
+/// fresh fleet; returns achieved throughput (requests/s).
+fn run_arm(
+    b: &Bench,
+    prep: &Prepared,
+    shared: &SharedMeta,
+    name: &str,
+    workers: usize,
+    requests: usize,
+    pacing: Pacing,
+) -> anyhow::Result<f64> {
+    let num_classes = prep.model.meta.num_classes;
+    let fleet = Fleet::start(
+        spec_for(prep, shared),
+        FleetConfig {
+            workers,
+            queue_cap: requests + 4,
+            deadline: None,
+            // claim-one passes: even spread across workers, so the arm
+            // measures worker scaling, not claim-order luck
+            batch_max: 1,
+            pacing,
+        },
+    )?;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| fleet.submit(i % num_classes))
+        .collect();
+    let mut done = 0usize;
+    for rx in rxs {
+        match rx.recv() {
+            Ok(Reply::Done(_)) => done += 1,
+            Ok(other) => anyhow::bail!("{name}: unexpected reply {other:?}"),
+            Err(e) => anyhow::bail!("{name}: reply channel closed ({e})"),
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let stats = fleet.shutdown()?;
+    let total = stats.merged();
+    let rps = done as f64 / (wall_ms / 1e3);
+    b.record_case(
+        name,
+        requests,
+        wall_ms,
+        wall_ms / requests as f64,
+        &[
+            ("rps", rps),
+            ("workers", workers as f64),
+            ("queue_p50_ms", total.queue_hist.p50_ms()),
+            ("queue_p99_ms", total.queue_hist.p99_ms()),
+            ("service_p50_ms", total.service_hist.p50_ms()),
+            ("service_p99_ms", total.service_hist.p99_ms()),
+        ],
+    );
+    Ok(rps)
+}
+
+/// A burst of identical-class requests against one worker: measures
+/// coalescing fan-out (k requests, ~2 executions).
+fn run_coalesce_burst(
+    b: &Bench,
+    prep: &Prepared,
+    shared: &SharedMeta,
+    requests: usize,
+) -> anyhow::Result<()> {
+    let fleet = Fleet::start(
+        spec_for(prep, shared),
+        FleetConfig {
+            workers: 1,
+            queue_cap: requests + 4,
+            deadline: None,
+            batch_max: 1,
+            pacing: Pacing::Host,
+        },
+    )?;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests).map(|_| fleet.submit(0)).collect();
+    for rx in rxs {
+        match rx.recv() {
+            Ok(Reply::Done(_)) => {}
+            Ok(other) => anyhow::bail!("coalesce-burst: unexpected reply {other:?}"),
+            Err(e) => anyhow::bail!("coalesce-burst: reply channel closed ({e})"),
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let stats = fleet.shutdown()?;
+    let total = stats.merged();
+    b.record_case(
+        "serve/coalesce-burst",
+        requests,
+        wall_ms,
+        wall_ms / requests as f64,
+        &[
+            ("rps", requests as f64 / (wall_ms / 1e3)),
+            ("executions", total.served as f64),
+            ("coalesced", stats.coalesced as f64),
+        ],
+    );
+    anyhow::ensure!(
+        total.served as usize + stats.coalesced as usize == requests,
+        "every burst request must be executed or coalesced"
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    // artifacts root hosts the run cache (checkpoint + importance);
+    // inventories resolve to the builtins
+    std::env::set_var("FICABU_ARTIFACTS", ART);
+    let smoke = matches!(
+        std::env::var("FICABU_BENCH_PRESET").as_deref(),
+        Ok("smoke")
+    );
+    let b = Bench::new("serve");
+    let floor = pace_floor_ms();
+    println!(
+        "[serve] pace floor {floor:.0} ms (FICABU_SERVE_PACE_MS){}",
+        if smoke { "  [smoke preset]" } else { "" }
+    );
+
+    // PinsFace: the high-similarity task with aggressive early stop —
+    // the paper's bursty forget-request deployment story.
+    let opts = if smoke {
+        PrepareOpts { train_steps: 24, importance_batches: 1, ..Default::default() }
+    } else {
+        PrepareOpts::default()
+    };
+    let prep = b.bench_once("prepare rn18slim/pinsface", || {
+        exp::prepare("rn18slim", DatasetKind::PinsFace, &opts)
+    })?;
+    let shared = SharedMeta::resolve()?;
+
+    // --- paced arms: fleet scaling with one simulated device per worker
+    let paced = Pacing::SimDevice { floor_ms: floor };
+    let paced_requests = if smoke { 8 } else { 16 };
+    let worker_arms: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    let mut paced_rps = Vec::new();
+    for &w in worker_arms {
+        let rps = run_arm(
+            &b,
+            &prep,
+            &shared,
+            &format!("serve/paced/workers={w}"),
+            w,
+            paced_requests,
+            paced,
+        )?;
+        paced_rps.push((w, rps));
+    }
+    let rps_of = |w: usize| paced_rps.iter().find(|(x, _)| *x == w).map(|(_, r)| *r);
+    let rps1 = rps_of(1).unwrap_or(0.0);
+    let rps4 = rps_of(4).unwrap_or(0.0);
+    if rps1 > 0.0 && rps4 > 0.0 {
+        let speedup = rps4 / rps1;
+        b.record_case(
+            "serve/paced-speedup-4v1",
+            1,
+            0.0,
+            0.0,
+            &[("speedup", speedup), ("rps_1w", rps1), ("rps_4w", rps4)],
+        );
+        println!("[serve] paced 4-worker speedup over 1 worker: {speedup:.2}x");
+    }
+
+    // --- host-bound arms: real host scaling (core-count limited)
+    let host_requests = if smoke { 4 } else { 8 };
+    for &w in &[1usize, 4] {
+        run_arm(
+            &b,
+            &prep,
+            &shared,
+            &format!("serve/host/workers={w}"),
+            w,
+            host_requests,
+            Pacing::Host,
+        )?;
+    }
+
+    // --- duplicate-burst coalescing
+    run_coalesce_burst(&b, &prep, &shared, if smoke { 16 } else { 32 })?;
+
+    b.write_json(OUT_JSON)?;
+    println!("wrote {OUT_JSON}");
+    Ok(())
+}

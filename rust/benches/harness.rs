@@ -22,6 +22,9 @@ struct Case {
     min_ms: f64,
     mean_ms: f64,
     flops: Option<f64>,
+    /// Extra numeric fields emitted verbatim into the JSON case (e.g.
+    /// `rps`, latency percentiles for the serving bench).
+    extras: Vec<(String, f64)>,
 }
 
 impl Case {
@@ -76,7 +79,14 @@ impl Bench {
         }
         let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
         let mean = times.iter().sum::<f64>() / times.len() as f64;
-        let case = Case { name: name.to_string(), iters, min_ms: min, mean_ms: mean, flops };
+        let case = Case {
+            name: name.to_string(),
+            iters,
+            min_ms: min,
+            mean_ms: mean,
+            flops,
+            extras: Vec::new(),
+        };
         let gf = match case.gflops() {
             Some(g) => format!("   {g:8.2} GFLOP/s"),
             None => String::new(),
@@ -100,8 +110,39 @@ impl Bench {
             min_ms: ms,
             mean_ms: ms,
             flops: None,
+            extras: Vec::new(),
         });
         out
+    }
+
+    /// Record an externally measured case with extra numeric fields —
+    /// used by the serving bench, where a "case" is one whole load-test
+    /// arm (min/mean ms = wall / per-request time) annotated with
+    /// throughput and latency percentiles.
+    pub fn record_case(
+        &self,
+        name: &str,
+        iters: usize,
+        min_ms: f64,
+        mean_ms: f64,
+        extras: &[(&str, f64)],
+    ) {
+        let mut ex = String::new();
+        for (k, v) in extras {
+            ex.push_str(&format!("  {k} {v:.2}"));
+        }
+        println!(
+            "[{}] {name:44} min {min_ms:9.3} ms   mean {mean_ms:9.3} ms {ex}",
+            self.suite
+        );
+        self.cases.borrow_mut().push(Case {
+            name: name.to_string(),
+            iters,
+            min_ms,
+            mean_ms,
+            flops: None,
+            extras: extras.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
     }
 
     /// Emit every recorded case as a JSON artifact at `path`.
@@ -111,13 +152,17 @@ impl Bench {
             .borrow()
             .iter()
             .map(|c| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("name", Json::Str(c.name.clone())),
                     ("iters", Json::Num(c.iters as f64)),
                     ("min_ms", Json::Num(c.min_ms)),
                     ("mean_ms", Json::Num(c.mean_ms)),
                     ("gflops", c.gflops().map(Json::Num).unwrap_or(Json::Null)),
-                ])
+                ];
+                for (k, v) in &c.extras {
+                    fields.push((k.as_str(), Json::Num(*v)));
+                }
+                Json::obj(fields)
             })
             .collect();
         let root = Json::obj(vec![

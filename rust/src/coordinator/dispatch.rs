@@ -1,0 +1,455 @@
+//! Multi-worker dispatcher: admission control, coalescing, batching.
+//!
+//! The [`Fleet`] owns N worker threads behind one shared FIFO. Because
+//! the compiled modules hold `Rc` handles (not `Send`), a worker's
+//! engine stack is *built inside its thread* from a [`WorkerSpec`] —
+//! plain `Send` data (meta, parameter replica, importance, dataset,
+//! config). Each worker therefore owns a private [`EdgeServer`] replica
+//! whose parameter store drifts independently as it serves edits.
+//!
+//! Request lifecycle:
+//!
+//! 1. **Admission** ([`Fleet::submit`]): a request for a class already
+//!    queued *coalesces* onto that entry (one execution, fan-out
+//!    replies). Otherwise, a full queue sheds the request immediately
+//!    with [`Reply::Backpressure`]; an open slot enqueues it.
+//! 2. **Claim**: an idle worker claims up to `batch_max` entries in one
+//!    lock acquisition (a *pass*), capped to its fair share of the
+//!    backlog (`ceil(queue_len / workers)`) so a burst spreads across
+//!    the fleet instead of riding one early waker. All queued requests
+//!    share one [`UnlearnConfig`], so every pass is compatible by
+//!    construction.
+//! 3. **Deadline shed**: a claimed entry whose deadline has already
+//!    passed is answered with [`Reply::Expired`] without touching the
+//!    engine.
+//! 4. **Service**: the worker runs the unlearning event, optionally
+//!    paces the reply to the simulated device latency ([`Pacing`]), and
+//!    fans the summary out to every coalesced requester.
+//!
+//! [`Fleet::shutdown`] stops admission, then lets the workers drain the
+//! queue deterministically: every admitted request is answered before
+//! the threads exit.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::config::{ModelMeta, SharedMeta};
+use crate::coordinator::queue::{QueueStats, Timing};
+use crate::coordinator::{EdgeServer, Summary};
+use crate::data::Dataset;
+use crate::fisher::Importance;
+use crate::model::ParamStore;
+use crate::runtime::Precision;
+use crate::unlearn::UnlearnConfig;
+
+/// Outcome of one submitted request.
+#[derive(Debug, Clone)]
+pub enum Reply {
+    /// The unlearning event ran; the summary is shared by every request
+    /// coalesced into the execution.
+    Done(Summary),
+    /// The event ran and failed (the error is formatted).
+    Failed(String),
+    /// Shed at admission: the bounded queue was full. Retry later.
+    Backpressure { queue_len: usize, queue_cap: usize },
+    /// Shed at claim time: the deadline had already passed.
+    Expired { missed_by_ms: f64 },
+}
+
+/// Worker pacing policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pacing {
+    /// Reply as fast as the host computes (default).
+    Host,
+    /// Hold each worker to `max(simulated device latency, floor_ms)`:
+    /// every worker stands in for one 50 MHz FiCABU device, so fleet
+    /// throughput measures serving-layer scaling, not host GEMM speed.
+    SimDevice { floor_ms: f64 },
+}
+
+/// Dispatcher tuning. `Default` = single worker, 32-deep queue, no
+/// deadline, passes of up to 4, host pacing.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Worker (= replica) count.
+    pub workers: usize,
+    /// Bounded-queue capacity; admission beyond it sheds with
+    /// [`Reply::Backpressure`].
+    pub queue_cap: usize,
+    /// Default deadline applied at admission (`None` = no deadline).
+    pub deadline: Option<Duration>,
+    /// Max entries one worker claims per pass.
+    pub batch_max: usize,
+    pub pacing: Pacing,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            workers: 1,
+            queue_cap: 32,
+            deadline: None,
+            batch_max: 4,
+            pacing: Pacing::Host,
+        }
+    }
+}
+
+/// Everything a worker thread needs to rebuild its `EdgeServer` replica
+/// in-thread. All fields are plain (`Send`) data; the non-`Send`
+/// compiled modules are constructed by the worker itself.
+#[derive(Clone)]
+pub struct WorkerSpec {
+    pub meta: ModelMeta,
+    pub shared: SharedMeta,
+    pub params: ParamStore,
+    pub global: Importance,
+    pub train: Dataset,
+    pub cfg: UnlearnConfig,
+    pub precision: Precision,
+}
+
+/// The unlearning work a worker performs per request — implemented by
+/// [`EdgeServer`] for production and by test doubles for dispatcher
+/// tests.
+pub trait UnlearnService {
+    fn unlearn(&mut self, class: usize) -> Result<Summary>;
+}
+
+/// Snapshot of fleet-wide serving statistics.
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    pub workers: usize,
+    /// Requests admitted as new queue entries.
+    pub admitted: u64,
+    /// Requests coalesced onto an already-queued entry.
+    pub coalesced: u64,
+    /// Requests shed at admission (queue full).
+    pub shed_backpressure: u64,
+    /// Queue depth at snapshot time.
+    pub queue_depth: usize,
+    pub per_worker: Vec<QueueStats>,
+}
+
+impl FleetStats {
+    /// Fleet-wide rollup of the per-worker stats.
+    pub fn merged(&self) -> QueueStats {
+        let mut total = QueueStats::default();
+        for w in &self.per_worker {
+            total.merge(w);
+        }
+        total
+    }
+}
+
+struct Entry {
+    class: usize,
+    replies: Vec<std::sync::mpsc::Sender<Reply>>,
+    enqueued_at: Instant,
+    deadline: Option<Instant>,
+}
+
+struct DispatchState {
+    queue: VecDeque<Entry>,
+    shutdown: bool,
+    admitted: u64,
+    coalesced: u64,
+    shed_backpressure: u64,
+    per_worker: Vec<QueueStats>,
+}
+
+struct Shared {
+    cfg: FleetConfig,
+    m: Mutex<DispatchState>,
+    cv: Condvar,
+}
+
+/// N `EdgeServer` replicas behind one dispatcher. See the module docs
+/// for the request lifecycle.
+pub struct Fleet {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Fleet {
+    /// Start a production fleet: each worker builds its own
+    /// `EdgeServer` replica from `spec` inside its thread.
+    pub fn start(spec: WorkerSpec, cfg: FleetConfig) -> Result<Fleet> {
+        Self::start_with(cfg, move |wid| EdgeServer::from_spec(&spec, wid))
+    }
+
+    /// Start a fleet over any [`UnlearnService`] factory. The factory
+    /// runs once per worker, *inside* the worker thread (the service
+    /// itself need not be `Send`).
+    pub fn start_with<S, F>(cfg: FleetConfig, factory: F) -> Result<Fleet>
+    where
+        S: UnlearnService + 'static,
+        F: Fn(usize) -> Result<S> + Send + Sync + 'static,
+    {
+        if cfg.workers == 0 || cfg.queue_cap == 0 || cfg.batch_max == 0 {
+            bail!(
+                "fleet config: workers ({}), queue_cap ({}) and batch_max ({}) must all be >= 1",
+                cfg.workers,
+                cfg.queue_cap,
+                cfg.batch_max
+            );
+        }
+        let shared = Arc::new(Shared {
+            m: Mutex::new(DispatchState {
+                queue: VecDeque::new(),
+                shutdown: false,
+                admitted: 0,
+                coalesced: 0,
+                shed_backpressure: 0,
+                per_worker: vec![QueueStats::default(); cfg.workers],
+            }),
+            cv: Condvar::new(),
+            cfg,
+        });
+        let factory = Arc::new(factory);
+        let (ack_tx, ack_rx) = channel::<Result<(), String>>();
+        let mut handles = Vec::with_capacity(shared.cfg.workers);
+        for wid in 0..shared.cfg.workers {
+            let sh = Arc::clone(&shared);
+            let f = Arc::clone(&factory);
+            let ack = ack_tx.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("ficabu-worker-{wid}"))
+                .spawn(move || {
+                    // Build the replica in-thread: compiled modules are
+                    // not Send, only the spec travels. (`*f`: Arc has no
+                    // Fn impl, the closure is called through the deref.)
+                    let svc = match (*f)(wid) {
+                        Ok(s) => {
+                            let _ = ack.send(Ok(()));
+                            s
+                        }
+                        Err(e) => {
+                            let _ = ack.send(Err(format!("{e:#}")));
+                            return;
+                        }
+                    };
+                    // The factory (owning the WorkerSpec's parameter
+                    // store, dataset, importance) is startup-only state:
+                    // release it before serving so the last worker to
+                    // finish startup frees the spec for the fleet's
+                    // lifetime.
+                    drop(f);
+                    worker_loop(wid, &sh, svc);
+                })?;
+            handles.push(h);
+        }
+        drop(ack_tx);
+        // Fail fast if any replica could not be built.
+        let mut startup_err: Option<String> = None;
+        for _ in 0..shared.cfg.workers {
+            match ack_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => startup_err = Some(e),
+                Err(_) => startup_err = Some("worker thread died during startup".to_string()),
+            }
+        }
+        if let Some(e) = startup_err {
+            {
+                let mut st = shared.m.lock().unwrap();
+                st.shutdown = true;
+            }
+            shared.cv.notify_all();
+            for h in handles {
+                let _ = h.join();
+            }
+            bail!("fleet startup failed: {e}");
+        }
+        Ok(Fleet { shared, handles })
+    }
+
+    /// Submit a forget-class request under the fleet's default deadline.
+    /// Returns immediately; the reply arrives on the receiver.
+    pub fn submit(&self, class: usize) -> Receiver<Reply> {
+        self.submit_with_deadline(class, self.shared.cfg.deadline)
+    }
+
+    /// Submit with an explicit deadline (`None` = never sheds).
+    ///
+    /// Admission control runs synchronously on the caller's thread: a
+    /// duplicate of a *queued* class coalesces (requests already being
+    /// executed are not joined — the execution started before this
+    /// request arrived); a full queue replies `Backpressure` without
+    /// enqueueing.
+    pub fn submit_with_deadline(
+        &self,
+        class: usize,
+        deadline: Option<Duration>,
+    ) -> Receiver<Reply> {
+        let (tx, rx) = channel();
+        let now = Instant::now();
+        let abs_deadline = deadline.map(|d| now + d);
+        let mut st = self.shared.m.lock().unwrap();
+        if st.shutdown {
+            let _ = tx.send(Reply::Failed("fleet is shutting down".to_string()));
+            return rx;
+        }
+        if let Some(e) = st.queue.iter_mut().find(|e| e.class == class) {
+            // Coalesce: one execution will fan out to every requester.
+            // The entry keeps the laxest deadline so a late joiner
+            // cannot get an earlier waiter shed.
+            e.deadline = match (e.deadline, abs_deadline) {
+                (Some(a), Some(b)) => Some(a.max(b)),
+                _ => None,
+            };
+            e.replies.push(tx);
+            st.coalesced += 1;
+            return rx;
+        }
+        if st.queue.len() >= self.shared.cfg.queue_cap {
+            st.shed_backpressure += 1;
+            let _ = tx.send(Reply::Backpressure {
+                queue_len: st.queue.len(),
+                queue_cap: self.shared.cfg.queue_cap,
+            });
+            return rx;
+        }
+        st.queue.push_back(Entry {
+            class,
+            replies: vec![tx],
+            enqueued_at: now,
+            deadline: abs_deadline,
+        });
+        st.admitted += 1;
+        drop(st);
+        self.shared.cv.notify_one();
+        rx
+    }
+
+    /// Point-in-time statistics snapshot.
+    pub fn stats(&self) -> FleetStats {
+        snapshot(&self.shared)
+    }
+
+    /// Stop admission, drain the queue (every admitted request is
+    /// answered), join the workers, and return the final statistics.
+    pub fn shutdown(mut self) -> Result<FleetStats> {
+        self.stop_and_join()?;
+        Ok(snapshot(&self.shared))
+    }
+
+    /// Signal shutdown and join every worker (all of them, even if some
+    /// panicked, so the drain guarantee holds for the survivors); report
+    /// a panic only after the whole fleet has stopped.
+    fn stop_and_join(&mut self) -> Result<()> {
+        {
+            let mut st = self.shared.m.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        let mut panicked = 0usize;
+        for h in self.handles.drain(..) {
+            if h.join().is_err() {
+                panicked += 1;
+            }
+        }
+        if panicked > 0 {
+            bail!("{panicked} fleet worker(s) panicked");
+        }
+        Ok(())
+    }
+}
+
+/// Dropping a live fleet must not park the worker threads forever in
+/// `cv.wait` (and leak every replica): drain and join, swallowing any
+/// worker panic — explicit [`Fleet::shutdown`] is the error-reporting
+/// path.
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        let _ = self.stop_and_join();
+    }
+}
+
+fn snapshot(sh: &Shared) -> FleetStats {
+    let st = sh.m.lock().unwrap();
+    FleetStats {
+        workers: st.per_worker.len(),
+        admitted: st.admitted,
+        coalesced: st.coalesced,
+        shed_backpressure: st.shed_backpressure,
+        queue_depth: st.queue.len(),
+        per_worker: st.per_worker.clone(),
+    }
+}
+
+fn worker_loop<S: UnlearnService>(wid: usize, sh: &Shared, mut svc: S) {
+    loop {
+        let mut batch: Vec<Entry> = Vec::new();
+        {
+            let mut st = sh.m.lock().unwrap();
+            loop {
+                if !st.queue.is_empty() {
+                    // Fair-share claim: never take more than this
+                    // worker's share of the backlog, so one early waker
+                    // cannot drain a burst while its peers sit idle —
+                    // batching only amortizes lock traffic once every
+                    // worker is saturated.
+                    let share = st.queue.len().div_ceil(st.per_worker.len());
+                    let n = sh.cfg.batch_max.min(share);
+                    batch.extend(st.queue.drain(..n));
+                    st.per_worker[wid].record_batch(batch.len());
+                    break;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = sh.cv.wait(st).unwrap();
+            }
+        }
+        for entry in batch {
+            serve_entry(wid, sh, &mut svc, entry);
+        }
+    }
+}
+
+fn serve_entry<S: UnlearnService>(wid: usize, sh: &Shared, svc: &mut S, e: Entry) {
+    let queue_ms = e.enqueued_at.elapsed().as_secs_f64() * 1e3;
+    if let Some(dl) = e.deadline {
+        let now = Instant::now();
+        if now > dl {
+            let missed_by_ms = now.duration_since(dl).as_secs_f64() * 1e3;
+            sh.m.lock().unwrap().per_worker[wid].record_shed();
+            for tx in e.replies {
+                let _ = tx.send(Reply::Expired { missed_by_ms });
+            }
+            return;
+        }
+    }
+    let t0 = Instant::now();
+    let out = svc.unlearn(e.class);
+    let mut service_ms = t0.elapsed().as_secs_f64() * 1e3;
+    if let Pacing::SimDevice { floor_ms } = sh.cfg.pacing {
+        if let Ok(s) = &out {
+            let target_ms = s.sim_ms.max(floor_ms);
+            if target_ms > service_ms {
+                std::thread::sleep(Duration::from_secs_f64((target_ms - service_ms) / 1e3));
+            }
+            service_ms = t0.elapsed().as_secs_f64() * 1e3;
+        }
+    }
+    let timing = Timing { queue_ms, service_ms };
+    sh.m.lock().unwrap().per_worker[wid].record(&timing, out.is_ok());
+    match out {
+        Ok(mut s) => {
+            s.timing = timing;
+            for tx in e.replies {
+                let _ = tx.send(Reply::Done(s.clone()));
+            }
+        }
+        Err(err) => {
+            let msg = format!("{err:#}");
+            for tx in e.replies {
+                let _ = tx.send(Reply::Failed(msg.clone()));
+            }
+        }
+    }
+}

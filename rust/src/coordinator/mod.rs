@@ -1,38 +1,61 @@
-//! Edge serving loop: the deployment shape of Fig. 1 (right).
+//! Edge serving layer: a multi-worker unlearning fleet.
 //!
-//! An edge device receives unlearning requests ("forget identity c") from
-//! local producers (sensors/apps) and executes them on-device. PJRT client
-//! handles are not `Send`, so the engine owns one OS thread — exactly one
-//! Unlearning Engine, like the processor — and requests arrive over an
-//! mpsc channel; each carries its own reply channel.
+//! The paper's Fig. 1 (right) deploys one Unlearning Engine on the edge
+//! device. This module grows that shape into a serving fleet for heavy
+//! forget-request traffic:
+//!
+//! ```text
+//!  clients ──► Fleet::submit ──► admission control ──► bounded FIFO
+//!                 │  (coalesce duplicates,              │
+//!                 │   shed on full queue)               ▼
+//!                 │                        workers 0..N (one thread each)
+//!                 ▼                         ├─ EdgeServer replica 0
+//!          Reply receiver ◄── fan-out ──────┤   (own ParamStore + engines)
+//!          (Done | Failed |                 ├─ EdgeServer replica 1
+//!           Backpressure | Expired)         └─ ...
+//! ```
+//!
+//! * [`EdgeServer`] is the per-worker core: one model, one parameter
+//!   replica, one FIMD/Dampening engine pair, one hwsim processor pair.
+//!   Compiled modules hold `Rc` handles (not `Send`), so replicas are
+//!   built *inside* their worker thread from a `Send` [`WorkerSpec`].
+//! * [`Fleet`] (see [`dispatch`]) owns the shared queue: duplicate
+//!   forget requests for one class coalesce into a single execution with
+//!   fan-out replies, workers claim batched passes, a bounded queue
+//!   sheds excess load with [`Reply::Backpressure`], and stale entries
+//!   are shed against their deadline.
+//! * [`QueueStats`] aggregates per-worker latency (mean/max plus
+//!   p50/p95/p99 histograms for queue and service time) and merges into
+//!   the fleet-wide rollup surfaced by [`Fleet::stats`] and the `serve`
+//!   CLI.
+//!
+//! Replica semantics: each worker's parameter store drifts independently
+//! as it applies edits — the fleet models N devices serving a shared
+//! request stream, not N consistent copies of one store. Coalescing is
+//! therefore exact (one execution, one store) while cross-worker
+//! convergence is out of scope here (see ROADMAP sharding).
 
+pub mod dispatch;
 pub mod queue;
 
-pub use queue::{QueueStats, Timing};
+pub use dispatch::{Fleet, FleetConfig, FleetStats, Pacing, Reply, UnlearnService, WorkerSpec};
+pub use queue::{LatencyHistogram, QueueStats, Timing};
 
-use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::data::Dataset;
 use crate::fisher::{FimdEngine, Importance};
 use crate::hwsim::{BaselineProcessor, FicabuProcessor};
 use crate::metrics;
 use crate::model::macs::ssd_ledger;
 use crate::model::{Model, ParamStore};
+use crate::runtime::Runtime;
 use crate::unlearn::{run_unlearning, DampEngine, UnlearnConfig, UnlearnReport};
-use crate::data::Dataset;
 use crate::util::prng::Pcg32;
 
-/// A request to the edge unlearning service.
-pub enum Request {
-    /// Forget one class/identity; reply with the outcome summary.
-    Unlearn { class: usize, reply: Sender<Result<Summary, String>> },
-    /// Read service statistics.
-    Stats { reply: Sender<QueueStats> },
-    Shutdown,
-}
-
+/// Outcome summary of one served unlearning event.
 #[derive(Debug, Clone)]
 pub struct Summary {
     pub class: usize,
@@ -42,10 +65,16 @@ pub struct Summary {
     pub macs_vs_ssd_pct: f64,
     pub sim_energy_mj: f64,
     pub sim_energy_vs_ssd_pct: f64,
+    /// Latency of this event on the simulated FiCABU processor
+    /// (50 MHz prototype), from the hwsim pipeline model.
+    pub sim_ms: f64,
+    /// Filled in by the dispatcher: measured queue + service latency.
     pub timing: Timing,
 }
 
-/// Server state: one trained model + stored global importance + engines.
+/// Per-worker serving core: one trained model + stored global importance
+/// + engine pair + hwsim processors. One `EdgeServer` serves requests
+/// sequentially; concurrency lives in [`Fleet`].
 pub struct EdgeServer {
     pub model: Model,
     pub params: ParamStore,
@@ -57,7 +86,6 @@ pub struct EdgeServer {
     pub ficabu_hw: FicabuProcessor,
     pub baseline_hw: BaselineProcessor,
     pub rng: Pcg32,
-    stats: QueueStats,
 }
 
 impl EdgeServer {
@@ -84,35 +112,43 @@ impl EdgeServer {
             ficabu_hw,
             baseline_hw,
             rng: Pcg32::seeded(0xedbe),
-            stats: QueueStats::default(),
         }
     }
 
-    /// Serve until `Shutdown`. Each unlearning request mutates the live
-    /// parameter store (the device's deployed model).
-    pub fn serve(&mut self, rx: Receiver<(Instant, Request)>) -> Result<()> {
-        while let Ok((enqueued_at, req)) = rx.recv() {
-            match req {
-                Request::Shutdown => break,
-                Request::Stats { reply } => {
-                    let _ = reply.send(self.stats.clone());
-                }
-                Request::Unlearn { class, reply } => {
-                    let queue_ms = enqueued_at.elapsed().as_secs_f64() * 1e3;
-                    let t0 = Instant::now();
-                    let out = self.handle_unlearn(class, queue_ms, t0);
-                    match &out {
-                        Ok(s) => self.stats.record(&s.timing),
-                        Err(_) => self.stats.failures += 1,
-                    }
-                    let _ = reply.send(out.map_err(|e| format!("{e:#}")));
-                }
-            }
-        }
-        Ok(())
+    /// Reseed the forget-batch sampler (used to decorrelate replicas).
+    pub fn with_seed(mut self, seed: u64) -> EdgeServer {
+        self.rng = Pcg32::seeded(seed);
+        self
     }
 
-    fn handle_unlearn(&mut self, class: usize, queue_ms: f64, t0: Instant) -> Result<Summary> {
+    /// Build a replica from a `Send` spec — called inside the worker
+    /// thread, because the compiled modules it creates are not `Send`.
+    /// Replicas are re-entrant by construction: every engine buffer and
+    /// counter is owned per instance, nothing is shared across workers.
+    pub fn from_spec(spec: &WorkerSpec, worker_id: usize) -> Result<EdgeServer> {
+        let rt = Runtime::from_env()?;
+        let model = Model::load(&rt, spec.meta.clone())?;
+        let fimd = FimdEngine::new(&rt, &spec.shared)?;
+        let damp = DampEngine::new(&rt, &spec.shared)?;
+        let tile = spec.meta.tile;
+        Ok(EdgeServer::new(
+            model,
+            spec.params.clone(),
+            spec.global.clone(),
+            fimd,
+            damp,
+            spec.train.clone(),
+            spec.cfg.clone(),
+            FicabuProcessor::new(tile, spec.precision),
+            BaselineProcessor::new(tile, spec.precision),
+        )
+        .with_seed(0xedbe ^ ((worker_id as u64) << 17)))
+    }
+
+    /// Execute one unlearning event against this replica's live
+    /// parameter store and report quality + simulated hardware cost.
+    /// `Summary::timing` is zeroed here; the dispatcher fills it.
+    pub fn unlearn(&mut self, class: usize) -> Result<Summary> {
         let meta = &self.model.meta;
         if class >= meta.num_classes {
             anyhow::bail!("class {class} out of range ({} classes)", meta.num_classes);
@@ -155,7 +191,6 @@ impl EdgeServer {
             ..Default::default()
         };
         let ssd = self.baseline_hw.cost(&ssd_ref_report);
-        let service_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         Ok(Summary {
             class,
@@ -166,14 +201,44 @@ impl EdgeServer {
                 / ssd_ref_report.ledger.editing_total() as f64,
             sim_energy_mj: fic.energy_mj,
             sim_energy_vs_ssd_pct: 100.0 * fic.energy_mj / ssd.energy_mj,
-            timing: Timing { queue_ms, service_ms },
+            sim_ms: fic.seconds * 1e3,
+            timing: Timing::default(),
         })
+    }
+
+    /// Serve requests from an iterator, sequentially, on the caller's
+    /// thread — the single-device deployment of Fig. 1, kept for direct
+    /// embedding. Returns one timed summary per request.
+    pub fn serve_sequential(
+        &mut self,
+        classes: impl IntoIterator<Item = usize>,
+    ) -> Vec<Result<Summary, String>> {
+        classes
+            .into_iter()
+            .map(|class| {
+                let t0 = Instant::now();
+                self.unlearn(class)
+                    .map(|mut s| {
+                        s.timing =
+                            Timing { queue_ms: 0.0, service_ms: t0.elapsed().as_secs_f64() * 1e3 };
+                        s
+                    })
+                    .map_err(|e| format!("{e:#}"))
+            })
+            .collect()
+    }
+}
+
+impl UnlearnService for EdgeServer {
+    fn unlearn(&mut self, class: usize) -> Result<Summary> {
+        EdgeServer::unlearn(self, class)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    // The full server loop is exercised end-to-end by
-    // `examples/edge_serving.rs` and the integration tests; unit tests here
-    // cover the queue statistics (see queue.rs).
+    // Queue statistics are unit-tested in queue.rs; the dispatcher
+    // (coalescing, shedding, drain, stats rollup) in tests/dispatch.rs
+    // against a mock service; the full fleet end-to-end in
+    // examples/edge_serving.rs and benches/bench_serve.rs.
 }

@@ -1,24 +1,150 @@
-//! Request-queue statistics for the edge serving loop.
+//! Request-queue statistics for the serving fleet.
+//!
+//! Each worker owns one [`QueueStats`]; the dispatcher rolls them up with
+//! [`QueueStats::merge`] when a stats probe or shutdown snapshot asks for
+//! the fleet-wide view. Latency distributions are tracked in power-of-two
+//! [`LatencyHistogram`] buckets so p50/p95/p99 survive the merge without
+//! storing per-request samples.
 
+/// Queue + service latency of one completed request (milliseconds).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Timing {
     pub queue_ms: f64,
     pub service_ms: f64,
 }
 
+/// Number of power-of-two latency buckets: bucket 0 is `[0, 1)` ms,
+/// bucket `b >= 1` is `[2^(b-1), 2^b)` ms, and the last bucket absorbs
+/// everything above `2^26` ms (~18 hours), `+inf` included.
+pub const HIST_BUCKETS: usize = 28;
+
+/// Fixed-size log2 latency histogram (milliseconds).
+///
+/// Quantiles are read back as the *upper edge* of the bucket holding
+/// the requested rank: at most 2x above the true value for latencies
+/// >= 1 ms, floored at 1.0 ms below that (sub-millisecond latencies all
+/// share bucket 0) — the usual trade for a mergeable constant-size
+/// histogram.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: [u64; HIST_BUCKETS],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { counts: [0; HIST_BUCKETS] }
+    }
+}
+
+impl LatencyHistogram {
+    fn bucket(ms: f64) -> usize {
+        if ms.is_nan() || ms <= 0.0 {
+            return 0;
+        }
+        if ms.is_infinite() {
+            return HIST_BUCKETS - 1;
+        }
+        let mut b = 0usize;
+        let mut upper = 1.0f64;
+        while ms >= upper && b < HIST_BUCKETS - 1 {
+            upper *= 2.0;
+            b += 1;
+        }
+        b
+    }
+
+    /// Upper edge of bucket `b` in ms.
+    fn upper_edge(b: usize) -> f64 {
+        let mut upper = 1.0f64;
+        for _ in 0..b {
+            upper *= 2.0;
+        }
+        upper
+    }
+
+    pub fn record(&mut self, ms: f64) {
+        self.counts[Self::bucket(ms)] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Latency at quantile `q` in `[0, 1]` (upper bucket edge; 0.0 when
+    /// the histogram is empty).
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // rank of the requested quantile, 1-based, at least 1
+        let target = ((q * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::upper_edge(b);
+            }
+        }
+        Self::upper_edge(HIST_BUCKETS - 1)
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.quantile_ms(0.50)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.quantile_ms(0.95)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.quantile_ms(0.99)
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+    }
+}
+
+/// Per-worker serving statistics.
+///
+/// Failed requests contribute to the timing aggregates exactly like
+/// successful ones (they occupied the queue and the engine just the
+/// same); only deadline sheds stay out of the latency accounting, since
+/// they were never serviced.
 #[derive(Debug, Clone, Default)]
 pub struct QueueStats {
+    /// Requests serviced to a successful reply.
     pub served: u64,
+    /// Requests serviced to an error reply.
     pub failures: u64,
+    /// Requests shed at claim time because their deadline had passed.
+    pub shed_deadline: u64,
+    /// Worker passes (one pass services a claimed batch).
+    pub batches: u64,
+    /// Largest batch claimed in one pass.
+    pub max_batch: u64,
     pub total_queue_ms: f64,
     pub total_service_ms: f64,
     pub max_queue_ms: f64,
     pub max_service_ms: f64,
+    pub queue_hist: LatencyHistogram,
+    pub service_hist: LatencyHistogram,
 }
 
 impl QueueStats {
-    pub fn record(&mut self, t: &Timing) {
-        self.served += 1;
+    /// Record one serviced request. `ok = false` counts a failure, but
+    /// the timing still enters every aggregate: an errored request held
+    /// the engine for its full service time.
+    pub fn record(&mut self, t: &Timing, ok: bool) {
+        if ok {
+            self.served += 1;
+        } else {
+            self.failures += 1;
+        }
         self.total_queue_ms += t.queue_ms;
         self.total_service_ms += t.service_ms;
         if t.queue_ms > self.max_queue_ms {
@@ -27,22 +153,63 @@ impl QueueStats {
         if t.service_ms > self.max_service_ms {
             self.max_service_ms = t.service_ms;
         }
+        self.queue_hist.record(t.queue_ms);
+        self.service_hist.record(t.service_ms);
+    }
+
+    /// Record one batch claim of `n` requests.
+    pub fn record_batch(&mut self, n: usize) {
+        self.batches += 1;
+        if n as u64 > self.max_batch {
+            self.max_batch = n as u64;
+        }
+    }
+
+    /// Record a request shed at claim time (deadline already missed).
+    pub fn record_shed(&mut self) {
+        self.shed_deadline += 1;
+    }
+
+    /// Requests that reached the engine (successes + failures).
+    pub fn completed(&self) -> u64 {
+        self.served + self.failures
     }
 
     pub fn mean_queue_ms(&self) -> f64 {
-        if self.served == 0 {
+        if self.completed() == 0 {
             0.0
         } else {
-            self.total_queue_ms / self.served as f64
+            self.total_queue_ms / self.completed() as f64
         }
     }
 
     pub fn mean_service_ms(&self) -> f64 {
-        if self.served == 0 {
+        if self.completed() == 0 {
             0.0
         } else {
-            self.total_service_ms / self.served as f64
+            self.total_service_ms / self.completed() as f64
         }
+    }
+
+    /// Fold `other` into `self` — the per-worker -> fleet rollup. Counts
+    /// and totals add, maxima take the max, histograms add bucketwise, so
+    /// merged quantiles are exact over the union of the inputs.
+    pub fn merge(&mut self, other: &QueueStats) {
+        self.served += other.served;
+        self.failures += other.failures;
+        self.shed_deadline += other.shed_deadline;
+        self.batches += other.batches;
+        self.max_batch = self.max_batch.max(other.max_batch);
+        self.total_queue_ms += other.total_queue_ms;
+        self.total_service_ms += other.total_service_ms;
+        if other.max_queue_ms > self.max_queue_ms {
+            self.max_queue_ms = other.max_queue_ms;
+        }
+        if other.max_service_ms > self.max_service_ms {
+            self.max_service_ms = other.max_service_ms;
+        }
+        self.queue_hist.merge(&other.queue_hist);
+        self.service_hist.merge(&other.service_hist);
     }
 }
 
@@ -53,8 +220,8 @@ mod tests {
     #[test]
     fn aggregates() {
         let mut s = QueueStats::default();
-        s.record(&Timing { queue_ms: 2.0, service_ms: 10.0 });
-        s.record(&Timing { queue_ms: 4.0, service_ms: 30.0 });
+        s.record(&Timing { queue_ms: 2.0, service_ms: 10.0 }, true);
+        s.record(&Timing { queue_ms: 4.0, service_ms: 30.0 }, true);
         assert_eq!(s.served, 2);
         assert_eq!(s.mean_queue_ms(), 3.0);
         assert_eq!(s.mean_service_ms(), 20.0);
@@ -66,5 +233,86 @@ mod tests {
         let s = QueueStats::default();
         assert_eq!(s.mean_queue_ms(), 0.0);
         assert_eq!(s.mean_service_ms(), 0.0);
+        assert_eq!(s.queue_hist.p50_ms(), 0.0);
+    }
+
+    #[test]
+    fn failures_contribute_to_timing() {
+        let mut s = QueueStats::default();
+        s.record(&Timing { queue_ms: 2.0, service_ms: 10.0 }, true);
+        s.record(&Timing { queue_ms: 6.0, service_ms: 50.0 }, false);
+        assert_eq!(s.served, 1);
+        assert_eq!(s.failures, 1);
+        assert_eq!(s.completed(), 2);
+        // the failed request's latency is visible in every aggregate
+        assert_eq!(s.mean_queue_ms(), 4.0);
+        assert_eq!(s.mean_service_ms(), 30.0);
+        assert_eq!(s.max_service_ms, 50.0);
+        assert_eq!(s.service_hist.count(), 2);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let mut h = LatencyHistogram::default();
+        // bucket 0 = [0,1), bucket 1 = [1,2), bucket 4 = [8,16)
+        h.record(0.5);
+        h.record(1.5);
+        h.record(9.0);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile_ms(0.0), 1.0); // first bucket's upper edge
+        assert_eq!(h.p50_ms(), 2.0);
+        assert_eq!(h.p99_ms(), 16.0);
+        // out-of-range inputs land in the edge buckets without
+        // panicking: NaN/negatives at the bottom, +inf saturates the top
+        h.record(-3.0);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.quantile_ms(1.0), (1u64 << 27) as f64);
+    }
+
+    #[test]
+    fn histogram_merge_matches_union() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        for ms in [0.2, 3.0, 5.0] {
+            a.record(ms);
+        }
+        for ms in [100.0, 200.0] {
+            b.record(ms);
+        }
+        let mut u = LatencyHistogram::default();
+        for ms in [0.2, 3.0, 5.0, 100.0, 200.0] {
+            u.record(ms);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), u.count());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile_ms(q), u.quantile_ms(q));
+        }
+    }
+
+    #[test]
+    fn merge_arithmetic() {
+        let mut a = QueueStats::default();
+        a.record(&Timing { queue_ms: 1.0, service_ms: 10.0 }, true);
+        a.record(&Timing { queue_ms: 3.0, service_ms: 20.0 }, false);
+        a.record_batch(2);
+        a.record_shed();
+        let mut b = QueueStats::default();
+        b.record(&Timing { queue_ms: 5.0, service_ms: 40.0 }, true);
+        b.record_batch(3);
+        a.merge(&b);
+        assert_eq!(a.served, 2);
+        assert_eq!(a.failures, 1);
+        assert_eq!(a.shed_deadline, 1);
+        assert_eq!(a.batches, 2);
+        assert_eq!(a.max_batch, 3);
+        assert_eq!(a.completed(), 3);
+        assert_eq!(a.mean_queue_ms(), 3.0);
+        assert_eq!(a.total_service_ms, 70.0);
+        assert_eq!(a.max_service_ms, 40.0);
+        assert_eq!(a.queue_hist.count(), 3);
+        assert_eq!(a.service_hist.count(), 3);
     }
 }

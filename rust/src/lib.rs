@@ -5,7 +5,9 @@
 //! crate: the unlearning coordinator — back-end-first Context-Adaptive
 //! Unlearning with checkpointed early stop, Balanced Dampening depth
 //! schedule, SSD baseline, INT8 store, the FiCABU processor cycle/energy
-//! simulator, and an edge request loop.
+//! simulator, and a multi-worker serving fleet (bounded queue,
+//! duplicate-request coalescing, deadline shedding — see
+//! [`coordinator`]).
 //!
 //! ## Execution backends
 //!

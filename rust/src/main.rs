@@ -10,10 +10,9 @@
 //! Table/figure regeneration lives in `examples/` (see DESIGN.md §4).
 
 use anyhow::Result;
-use ficabu::config::artifacts_root;
-use ficabu::coordinator::{EdgeServer, Request};
+use ficabu::config::{artifacts_root, SharedMeta};
+use ficabu::coordinator::{Fleet, FleetConfig, Pacing, Reply, WorkerSpec};
 use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
-use ficabu::hwsim::{BaselineProcessor, FicabuProcessor};
 use ficabu::runtime::Runtime;
 use ficabu::util::cli::Args;
 
@@ -59,7 +58,8 @@ fn run() -> Result<()> {
     let mut args = Args::parse(std::env::args().skip(1))?;
     args.declare(&[
         "model", "dataset", "mode", "class", "steps", "lr", "imp-batches", "seed",
-        "retrain", "int8", "verbose", "requests", "clients",
+        "retrain", "int8", "verbose", "requests", "clients", "workers", "queue-cap",
+        "deadline-ms", "batch-max", "pace-sim",
     ]);
     args.finish()?;
     match args.command.as_str() {
@@ -83,6 +83,7 @@ USAGE: ficabu <command> [--key value] [--flag]
            [--steps N --lr F --seed N --retrain --int8 --verbose]
   unlearn  --model M --dataset D --mode ssd|cau|bd|ficabu --class C [--int8]
   serve    --model M --dataset D [--requests N --clients K]
+           [--workers N --queue-cap N --deadline-ms N --batch-max N --pace-sim]
   info     platform + artifact inventory
 
 Tables/figures: cargo run --release --example table1 (table2, table4,
@@ -193,65 +194,123 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let model = a.str_or("model", "rn18slim");
     let kind = dataset_kind(&a.str_or("dataset", "cifar20"))?;
     let n_requests = a.usize_or("requests", 4)?;
-    let n_clients = a.usize_or("clients", 2)?;
+    let n_clients = a.usize_or("clients", 2)?.max(1);
+    let workers = a.usize_or("workers", 1)?;
+    let queue_cap = a.usize_or("queue-cap", 32)?;
+    let deadline_ms = a.usize_or("deadline-ms", 0)?;
+    let batch_max = a.usize_or("batch-max", 4)?;
     let opts = prepare_opts(a)?;
     let prep = exp::prepare(&model, kind, &opts)?;
 
     let cfg = exp::tables::mode_config(&prep, Mode::Ficabu, None);
-    let tile = prep.model.meta.tile;
-    let precision = prep.precision;
-    let mut server = EdgeServer::new(
-        prep.model,
-        prep.params,
-        prep.global,
-        prep.fimd,
-        prep.damp,
-        prep.train,
+    let num_classes = prep.model.meta.num_classes;
+    let spec = WorkerSpec {
+        meta: prep.model.meta.clone(),
+        shared: SharedMeta::resolve()?,
+        params: prep.params,
+        global: prep.global,
+        train: prep.train,
         cfg,
-        FicabuProcessor::new(tile, precision),
-        BaselineProcessor::new(tile, precision),
+        precision: prep.precision,
+    };
+    let fleet_cfg = FleetConfig {
+        workers,
+        queue_cap,
+        deadline: match deadline_ms {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms as u64)),
+        },
+        batch_max,
+        pacing: if a.flag("pace-sim") {
+            Pacing::SimDevice { floor_ms: 0.0 }
+        } else {
+            Pacing::Host
+        },
+    };
+    println!(
+        "serving fleet: {workers} worker(s), queue cap {queue_cap}, deadline {}, batch max {batch_max}",
+        if deadline_ms == 0 { "none".to_string() } else { format!("{deadline_ms} ms") },
     );
+    let fleet = Fleet::start(spec, fleet_cfg)?;
 
-    let (tx, rx) = std::sync::mpsc::channel();
-    let classes: Vec<usize> = (0..n_requests).collect();
-    let mut handles = Vec::new();
-    for c in 0..n_clients {
-        let tx = tx.clone();
-        let my: Vec<usize> = classes.iter().copied().skip(c).step_by(n_clients).collect();
-        handles.push(std::thread::spawn(move || {
-            let mut replies = Vec::new();
-            for class in my {
-                let (rtx, rrx) = std::sync::mpsc::channel();
-                tx.send((std::time::Instant::now(), Request::Unlearn { class, reply: rtx }))
-                    .unwrap();
-                replies.push(rrx);
-            }
-            replies
-                .into_iter()
-                .map(|r| r.recv().unwrap())
-                .collect::<Vec<_>>()
-        }));
-    }
-    drop(tx);
-    server.serve(rx)?;
-    for h in handles {
-        for reply in h.join().unwrap() {
-            match reply {
-                Ok(s) => println!(
-                    "class {:2}: Df {:.1}% Dr {:.1}% stop l={:?} MACs {:.2}% energy {:.3} mJ ({:.2}% of SSD) [queue {:.0} ms service {:.0} ms]",
-                    s.class,
-                    100.0 * s.forget_acc,
-                    100.0 * s.retain_acc,
-                    s.stop_depth,
-                    s.macs_vs_ssd_pct,
-                    s.sim_energy_mj,
-                    s.sim_energy_vs_ssd_pct,
-                    s.timing.queue_ms,
-                    s.timing.service_ms
-                ),
-                Err(e) => println!("request failed: {e}"),
-            }
+    // Each client bursts its share of the request stream, then drains
+    // replies — exercising queueing, coalescing, and backpressure.
+    std::thread::scope(|s| {
+        let fleet = &fleet;
+        for c in 0..n_clients {
+            s.spawn(move || {
+                let pending: Vec<(usize, _)> = (0..n_requests)
+                    .skip(c)
+                    .step_by(n_clients)
+                    .map(|r| {
+                        let class = r % num_classes;
+                        (class, fleet.submit(class))
+                    })
+                    .collect();
+                for (class, rx) in pending {
+                    match rx.recv() {
+                        Ok(Reply::Done(sm)) => println!(
+                            "class {class:2}: Df {:.1}% Dr {:.1}% stop l={:?} MACs {:.2}% energy {:.3} mJ ({:.2}% of SSD) sim {:.0} ms [queue {:.0} ms service {:.0} ms]",
+                            100.0 * sm.forget_acc,
+                            100.0 * sm.retain_acc,
+                            sm.stop_depth,
+                            sm.macs_vs_ssd_pct,
+                            sm.sim_energy_mj,
+                            sm.sim_energy_vs_ssd_pct,
+                            sm.sim_ms,
+                            sm.timing.queue_ms,
+                            sm.timing.service_ms
+                        ),
+                        Ok(Reply::Failed(e)) => println!("class {class:2}: FAILED ({e})"),
+                        Ok(Reply::Backpressure { queue_len, queue_cap }) => println!(
+                            "class {class:2}: BACKPRESSURE (queue {queue_len}/{queue_cap}) — retry later"
+                        ),
+                        Ok(Reply::Expired { missed_by_ms }) => println!(
+                            "class {class:2}: EXPIRED (deadline missed by {missed_by_ms:.0} ms)"
+                        ),
+                        Err(_) => println!("class {class:2}: reply channel closed"),
+                    }
+                }
+            });
         }
+    });
+
+    let stats = fleet.shutdown()?;
+    let total = stats.merged();
+    println!(
+        "\nfleet: admitted {} coalesced {} backpressure-shed {} deadline-shed {}",
+        stats.admitted, stats.coalesced, stats.shed_backpressure, total.shed_deadline
+    );
+    println!(
+        "totals: served {} failures {} passes {} (max batch {})",
+        total.served, total.failures, total.batches, total.max_batch
+    );
+    println!(
+        "queue   latency: mean {:7.1} ms  p50 {:7.1}  p95 {:7.1}  p99 {:7.1}  max {:7.1}",
+        total.mean_queue_ms(),
+        total.queue_hist.p50_ms(),
+        total.queue_hist.p95_ms(),
+        total.queue_hist.p99_ms(),
+        total.max_queue_ms
+    );
+    println!(
+        "service latency: mean {:7.1} ms  p50 {:7.1}  p95 {:7.1}  p99 {:7.1}  max {:7.1}",
+        total.mean_service_ms(),
+        total.service_hist.p50_ms(),
+        total.service_hist.p95_ms(),
+        total.service_hist.p99_ms(),
+        total.max_service_ms
+    );
+    for (w, q) in stats.per_worker.iter().enumerate() {
+        println!(
+            "  worker {w}: served {:3} failed {:2} shed {:2} passes {:3}  service p50 {:7.1} ms p99 {:7.1} ms",
+            q.served,
+            q.failures,
+            q.shed_deadline,
+            q.batches,
+            q.service_hist.p50_ms(),
+            q.service_hist.p99_ms()
+        );
     }
     Ok(())
 }

@@ -5,7 +5,8 @@
 //! engine IPs all run on stock stable Rust with no Python artifacts and
 //! no XLA. Kernels live in [`kernels`] (semantics of
 //! `python/compile/kernels/ref.py`) on top of the tiled multi-threaded
-//! GEMM core in [`gemm`]; per-segment interpreters live in [`segment`].
+//! GEMM core in [`gemm`]; per-segment interpreters live in the private
+//! `segment` module.
 //! Forward modules additionally accept per-channel int8 weights through
 //! the mixed-precision [`ArgRef`] seam and execute them on the true
 //! int8 GEMM core (the paper's §IV-A deployment mode); the gradient

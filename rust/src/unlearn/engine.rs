@@ -29,7 +29,16 @@ use crate::tensor::Tensor;
 use crate::unlearn::damp::DampEngine;
 use crate::unlearn::schedule::Schedule;
 
-#[derive(Debug, Clone)]
+/// Operating-point configuration for one unlearning engine.
+///
+/// The config is plain `Send + Clone` data, and `run_unlearning` keeps
+/// all mutable state in its arguments — so one config can be cloned
+/// into any number of serving replicas (`coordinator::WorkerSpec`) and
+/// executed re-entrantly, one event per replica at a time, with no
+/// shared state between workers. `PartialEq` is the dispatcher's
+/// batch-compatibility check: requests are batchable into one worker
+/// pass exactly when their configs compare equal.
+#[derive(Debug, Clone, PartialEq)]
 pub struct UnlearnConfig {
     pub alpha: f64,
     pub lambda: f64,

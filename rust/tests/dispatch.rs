@@ -1,0 +1,334 @@
+//! Dispatcher behavior tests against a mock [`UnlearnService`] — no
+//! model math, so coalescing, shedding, drain, and the stats rollup are
+//! exercised deterministically.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use ficabu::coordinator::{
+    Fleet, FleetConfig, Pacing, QueueStats, Reply, Summary, Timing, UnlearnService,
+};
+
+/// Mock worker core. Every `unlearn` call announces `(worker, class)` on
+/// `started`, then blocks until the test feeds one token through `gate`.
+/// Class 13 fails after the gate (exercises the failure path).
+struct MockService {
+    wid: usize,
+    started: Sender<(usize, usize)>,
+    gate: Arc<Mutex<Receiver<()>>>,
+    log: Arc<Mutex<Vec<(usize, usize)>>>,
+}
+
+fn mock_summary(class: usize) -> Summary {
+    Summary {
+        class,
+        forget_acc: 0.0,
+        retain_acc: 1.0,
+        stop_depth: Some(1),
+        macs_vs_ssd_pct: 1.0,
+        sim_energy_mj: 0.1,
+        sim_energy_vs_ssd_pct: 1.0,
+        sim_ms: 0.0,
+        timing: Timing::default(),
+    }
+}
+
+impl UnlearnService for MockService {
+    fn unlearn(&mut self, class: usize) -> anyhow::Result<Summary> {
+        let _ = self.started.send((self.wid, class));
+        self.gate
+            .lock()
+            .unwrap()
+            .recv()
+            .map_err(|_| anyhow::anyhow!("gate closed"))?;
+        self.log.lock().unwrap().push((self.wid, class));
+        if class == 13 {
+            anyhow::bail!("boom on class 13");
+        }
+        Ok(mock_summary(class))
+    }
+}
+
+struct Rig {
+    started: Receiver<(usize, usize)>,
+    tokens: Sender<()>,
+    log: Arc<Mutex<Vec<(usize, usize)>>>,
+}
+
+/// Build a fleet of mock workers plus the test-side controls.
+fn mock_fleet(cfg: FleetConfig) -> (Fleet, Rig) {
+    let (started_tx, started_rx) = channel();
+    let (token_tx, token_rx) = channel();
+    let gate = Arc::new(Mutex::new(token_rx));
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let log2 = Arc::clone(&log);
+    let fleet = Fleet::start_with(cfg, move |wid| {
+        Ok(MockService {
+            wid,
+            started: started_tx.clone(),
+            gate: Arc::clone(&gate),
+            log: Arc::clone(&log2),
+        })
+    })
+    .expect("mock fleet starts");
+    (fleet, Rig { started: started_rx, tokens: token_tx, log })
+}
+
+fn executions_of(rig: &Rig, class: usize) -> usize {
+    let log = rig.log.lock().unwrap();
+    log.iter().filter(|(_, c)| *c == class).count()
+}
+
+const STARTED_TIMEOUT: Duration = Duration::from_secs(10);
+
+#[test]
+fn coalescing_fans_out_one_execution() {
+    let (fleet, rig) = mock_fleet(FleetConfig {
+        workers: 1,
+        queue_cap: 8,
+        deadline: None,
+        batch_max: 1,
+        pacing: Pacing::Host,
+    });
+
+    // Occupy the single worker so subsequent submissions stay queued.
+    let rx7 = fleet.submit(7);
+    let (w, c) = rig.started.recv_timeout(STARTED_TIMEOUT).unwrap();
+    assert_eq!((w, c), (0, 7));
+
+    // k identical requests while the worker is busy: the first opens a
+    // queue entry, the other four coalesce onto it.
+    let dup_rxs: Vec<_> = (0..5).map(|_| fleet.submit(3)).collect();
+
+    // Two tokens: finish class 7, then the single coalesced class-3 run.
+    rig.tokens.send(()).unwrap();
+    rig.tokens.send(()).unwrap();
+
+    match rx7.recv().unwrap() {
+        Reply::Done(s) => assert_eq!(s.class, 7),
+        other => panic!("class 7: unexpected reply {other:?}"),
+    }
+    for rx in dup_rxs {
+        match rx.recv().unwrap() {
+            Reply::Done(s) => {
+                // every coalesced requester gets the same execution
+                assert_eq!(s.class, 3);
+                assert!(s.timing.service_ms >= 0.0);
+            }
+            other => panic!("class 3: unexpected reply {other:?}"),
+        }
+    }
+    assert_eq!(executions_of(&rig, 3), 1, "5 duplicate requests -> 1 execution");
+    assert_eq!(executions_of(&rig, 7), 1);
+
+    let stats = fleet.shutdown().unwrap();
+    assert_eq!(stats.admitted, 2);
+    assert_eq!(stats.coalesced, 4);
+    let total = stats.merged();
+    assert_eq!(total.served, 2);
+    assert_eq!(total.failures, 0);
+}
+
+#[test]
+fn bounded_queue_sheds_with_backpressure() {
+    let (fleet, rig) = mock_fleet(FleetConfig {
+        workers: 1,
+        queue_cap: 2,
+        deadline: None,
+        batch_max: 1,
+        pacing: Pacing::Host,
+    });
+
+    // Stall the worker on class 0; fill the queue with classes 1 and 2.
+    let rx0 = fleet.submit(0);
+    rig.started.recv_timeout(STARTED_TIMEOUT).unwrap();
+    let rx1 = fleet.submit(1);
+    let rx2 = fleet.submit(2);
+
+    // The queue is full: a distinct class is shed immediately.
+    let rx3 = fleet.submit(3);
+    match rx3.recv_timeout(Duration::from_secs(1)).unwrap() {
+        Reply::Backpressure { queue_len, queue_cap } => {
+            assert_eq!(queue_len, 2);
+            assert_eq!(queue_cap, 2);
+        }
+        other => panic!("expected backpressure, got {other:?}"),
+    }
+    // ... but a duplicate of a *queued* class still coalesces: the
+    // queue doesn't grow, so coalescing beats shedding under overload.
+    let rx1b = fleet.submit(1);
+
+    for _ in 0..3 {
+        rig.tokens.send(()).unwrap();
+    }
+    for rx in [rx0, rx1, rx2, rx1b] {
+        match rx.recv().unwrap() {
+            Reply::Done(_) => {}
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+
+    let stats = fleet.shutdown().unwrap();
+    assert_eq!(stats.admitted, 3);
+    assert_eq!(stats.coalesced, 1);
+    assert_eq!(stats.shed_backpressure, 1);
+    assert_eq!(stats.merged().served, 3);
+}
+
+#[test]
+fn shutdown_drains_deterministically() {
+    let (fleet, rig) = mock_fleet(FleetConfig {
+        workers: 2,
+        queue_cap: 16,
+        deadline: None,
+        batch_max: 2,
+        pacing: Pacing::Host,
+    });
+
+    // Pre-feed tokens so workers never block; submit six distinct
+    // classes and shut down immediately: every admitted request must
+    // still be answered before the workers exit.
+    for _ in 0..6 {
+        rig.tokens.send(()).unwrap();
+    }
+    let rxs: Vec<_> = (0..6).map(|c| fleet.submit(c)).collect();
+    let stats = fleet.shutdown().unwrap();
+
+    for (c, rx) in rxs.into_iter().enumerate() {
+        match rx.recv().unwrap() {
+            Reply::Done(s) => assert_eq!(s.class, c),
+            other => panic!("class {c}: unexpected reply {other:?}"),
+        }
+    }
+    assert_eq!(stats.admitted, 6);
+    assert_eq!(stats.queue_depth, 0, "drained queue");
+    let total = stats.merged();
+    assert_eq!(total.served, 6);
+    // per-worker -> fleet rollup arithmetic
+    assert_eq!(stats.per_worker.len(), 2);
+    let by_hand: u64 = stats.per_worker.iter().map(|w| w.served).sum();
+    assert_eq!(total.served, by_hand);
+    let hist_total: u64 = stats.per_worker.iter().map(|w| w.service_hist.count()).sum();
+    assert_eq!(total.service_hist.count(), hist_total);
+    assert_eq!(total.batches, stats.per_worker.iter().map(|w| w.batches).sum::<u64>());
+    assert!(total.max_batch <= 2, "batch_max respected");
+    assert!(total.batches >= 3, "6 requests in passes of <= 2");
+}
+
+#[test]
+fn stalled_worker_deadline_sheds_expired_entries() {
+    let (fleet, rig) = mock_fleet(FleetConfig {
+        workers: 1,
+        queue_cap: 8,
+        deadline: None,
+        batch_max: 1,
+        pacing: Pacing::Host,
+    });
+
+    // Stall the worker, then queue a request with a deadline it cannot
+    // meet while stalled.
+    let rx0 = fleet.submit(0);
+    rig.started.recv_timeout(STARTED_TIMEOUT).unwrap();
+    let rx1 = fleet.submit_with_deadline(1, Some(Duration::from_millis(5)));
+    std::thread::sleep(Duration::from_millis(30));
+
+    // Unstall: class 0 completes; class 1 is claimed past its deadline
+    // and shed without touching the engine.
+    rig.tokens.send(()).unwrap();
+    match rx0.recv().unwrap() {
+        Reply::Done(_) => {}
+        other => panic!("unexpected reply {other:?}"),
+    }
+    match rx1.recv().unwrap() {
+        Reply::Expired { missed_by_ms } => assert!(missed_by_ms > 0.0),
+        other => panic!("expected expired, got {other:?}"),
+    }
+    assert_eq!(executions_of(&rig, 1), 0, "shed requests never execute");
+
+    let stats = fleet.shutdown().unwrap();
+    let total = stats.merged();
+    assert_eq!(total.shed_deadline, 1);
+    assert_eq!(total.served, 1);
+    // sheds never reached the engine, so they stay out of the latency
+    // aggregates
+    assert_eq!(total.completed(), 1);
+    assert_eq!(total.service_hist.count(), 1);
+}
+
+#[test]
+fn failed_requests_reply_and_count_into_timing() {
+    let (fleet, rig) = mock_fleet(FleetConfig {
+        workers: 1,
+        queue_cap: 8,
+        deadline: None,
+        batch_max: 4,
+        pacing: Pacing::Host,
+    });
+
+    rig.tokens.send(()).unwrap();
+    rig.tokens.send(()).unwrap();
+    let rx_ok = fleet.submit(2);
+    let rx_bad = fleet.submit(13); // mock fails on 13
+
+    match rx_ok.recv().unwrap() {
+        Reply::Done(s) => assert_eq!(s.class, 2),
+        other => panic!("unexpected reply {other:?}"),
+    }
+    match rx_bad.recv().unwrap() {
+        Reply::Failed(msg) => assert!(msg.contains("boom"), "got: {msg}"),
+        other => panic!("expected failure, got {other:?}"),
+    }
+
+    let stats = fleet.shutdown().unwrap();
+    let total = stats.merged();
+    assert_eq!(total.served, 1);
+    assert_eq!(total.failures, 1);
+    // the failed request's latency is visible in the aggregates
+    assert_eq!(total.completed(), 2);
+    assert_eq!(total.service_hist.count(), 2);
+    assert_eq!(total.queue_hist.count(), 2);
+}
+
+#[test]
+fn worker_startup_failure_fails_fast() {
+    let out = Fleet::start_with(
+        FleetConfig { workers: 2, ..FleetConfig::default() },
+        |wid| -> anyhow::Result<NeverService> {
+            if wid == 1 {
+                anyhow::bail!("no model for worker {wid}");
+            }
+            Ok(NeverService)
+        },
+    );
+    let err = match out {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("startup must fail when a worker cannot build"),
+    };
+    assert!(err.contains("no model"), "got: {err}");
+}
+
+struct NeverService;
+
+impl UnlearnService for NeverService {
+    fn unlearn(&mut self, _class: usize) -> anyhow::Result<Summary> {
+        unreachable!("never dispatched")
+    }
+}
+
+#[test]
+fn fleet_stats_merge_is_queue_stats_merge() {
+    // direct arithmetic check on the rollup helper
+    let mut a = QueueStats::default();
+    a.record(&Timing { queue_ms: 1.0, service_ms: 4.0 }, true);
+    let mut b = QueueStats::default();
+    b.record(&Timing { queue_ms: 3.0, service_ms: 8.0 }, false);
+    let mut merged = QueueStats::default();
+    merged.merge(&a);
+    merged.merge(&b);
+    assert_eq!(merged.served, 1);
+    assert_eq!(merged.failures, 1);
+    assert_eq!(merged.mean_queue_ms(), 2.0);
+    assert_eq!(merged.mean_service_ms(), 6.0);
+    assert_eq!(merged.service_hist.count(), 2);
+}

@@ -3,8 +3,8 @@
 //! The repo builds with zero network access, so instead of a registry
 //! dependency this path crate provides the small `anyhow` surface the
 //! workspace actually uses: [`Error`], [`Result`], the [`Context`]
-//! extension trait for `Result` and `Option`, and the `anyhow!` / `bail!`
-//! macros. Error chains render like anyhow's: `{}` prints the outermost
+//! extension trait for `Result` and `Option`, and the `anyhow!` /
+//! `bail!` / `ensure!` macros. Error chains render like anyhow's: `{}` prints the outermost
 //! context, `{:#}` the full `outer: ...: root` chain, `{:?}` a
 //! "Caused by" listing.
 //!
@@ -130,6 +130,22 @@ macro_rules! bail {
     };
 }
 
+/// Return early with an error if a condition is false (anyhow's
+/// `ensure!`, minus its fancy condition decomposition).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +190,17 @@ mod tests {
         }
         assert!(f(1).is_ok());
         assert_eq!(format!("{:#}", f(-2).unwrap_err()), "negative input -2");
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0);
+            ensure!(x % 2 == 0, "odd input {x}");
+            Ok(x)
+        }
+        assert_eq!(f(4).unwrap(), 4);
+        assert!(format!("{:#}", f(-2).unwrap_err()).contains("x >= 0"));
+        assert_eq!(format!("{:#}", f(3).unwrap_err()), "odd input 3");
     }
 }
