@@ -14,7 +14,9 @@ validate FILE
     * suite "serve": paced 1-worker and 4-worker arms and the
       paced-speedup-4v1 case must exist, and the speedup must clear
       --min-speedup (default 1.5 — conservative for small CI runners;
-      the acceptance target on dev boxes is >= 2x).
+      the acceptance target on dev boxes is >= 2x). At least one
+      serve/spec-* arm (ForgetSpec diversity through the fleet) must
+      exist and cover all three spec shapes.
 
 compare BASELINE CURRENT
     Fail when any case present in both files regressed by more than
@@ -32,7 +34,7 @@ import os
 import sys
 
 # compare(): prefixes whose min_ms is runner-noise dominated.
-NOISY_PREFIXES = ("serve/host/", "serve/coalesce-burst", "prepare ")
+NOISY_PREFIXES = ("serve/host/", "serve/coalesce-burst", "serve/spec-", "prepare ")
 
 
 def _fail(msg):
@@ -107,7 +109,23 @@ def _check_serve(cases, path, min_speedup):
             f"{path}: paced 4-worker speedup {speedup:.2f}x below the "
             f"{min_speedup:.2f}x gate"
         )
-    print(f"serve guardrail OK: paced 4v1 speedup {speedup:.2f}x")
+    # spec-diversity arms: the ForgetSpec grammar must stay benched
+    spec_arms = [n for n in cases if n.startswith("serve/spec-")]
+    if not spec_arms:
+        _fail(f"{path}: no serve/spec-* arm (ForgetSpec diversity unbenched)")
+    mix = cases.get("serve/spec-mix")
+    if mix is None:
+        _fail(f"{path}: missing case 'serve/spec-mix'")
+    for field in ("class_replies", "classes_replies", "samples_replies"):
+        if not isinstance(mix.get(field), (int, float)) or mix[field] <= 0:
+            _fail(
+                f"{path}: serve/spec-mix must serve every spec shape "
+                f"({field} = {mix.get(field)!r})"
+            )
+    print(
+        f"serve guardrail OK: paced 4v1 speedup {speedup:.2f}x, "
+        f"{len(spec_arms)} spec arm(s)"
+    )
 
 
 def cmd_validate(args):

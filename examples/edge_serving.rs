@@ -1,14 +1,16 @@
-//! Edge serving scenario: concurrent clients submit forget-identity
-//! requests to a multi-worker unlearning fleet. The dispatcher
-//! coalesces duplicate requests into one execution with fan-out
-//! replies, sheds load when the bounded queue fills, and rolls
-//! per-worker latency histograms up into fleet statistics.
+//! Edge serving scenario: concurrent clients submit typed forget
+//! requests — single identities, multi-identity events, and per-sample
+//! erasure — to a multi-worker unlearning fleet. The dispatcher
+//! coalesces requests with equal canonical spec keys into one execution
+//! with fan-out replies, sheds load when the bounded queue fills, and
+//! rolls per-worker latency histograms up into fleet statistics.
 //!
 //! Run: `cargo run --release --example edge_serving`
 
 use ficabu::config::SharedMeta;
 use ficabu::coordinator::{Fleet, FleetConfig, Pacing, Reply, WorkerSpec};
 use ficabu::exp::{self, tables::mode_config, DatasetKind, Mode, PrepareOpts};
+use ficabu::unlearn::ForgetSpec;
 
 fn main() -> anyhow::Result<()> {
     let prep = exp::prepare(
@@ -17,6 +19,7 @@ fn main() -> anyhow::Result<()> {
         &PrepareOpts::default(),
     )?;
     let cfg = mode_config(&prep, Mode::Ficabu, None);
+    let erased_samples: Vec<usize> = prep.train.class_indices(9).into_iter().take(6).collect();
     let spec = WorkerSpec {
         meta: prep.model.meta.clone(),
         shared: SharedMeta::resolve()?,
@@ -39,26 +42,35 @@ fn main() -> anyhow::Result<()> {
 
     println!("=== edge serving: 3 clients x 2 forget requests on a 2-worker fleet ===\n");
 
-    // Three clients, two identities each; client 2 repeats client 0's
-    // second identity — if the two requests overlap in the queue they
-    // coalesce into one execution with fan-out replies.
+    // Three clients, two requests each, covering the spec grammar:
+    // client 0 forgets two single identities, client 1 forgets an
+    // identity and a two-identity event, client 2 erases specific
+    // samples and repeats client 0's second identity *as a single-id
+    // multi-class spec* — if the two requests overlap in the queue they
+    // coalesce (canonical keys equal) into one execution with fan-out
+    // replies.
+    let requests: [[ForgetSpec; 2]; 3] = [
+        [ForgetSpec::Class(0), ForgetSpec::Class(1)],
+        [ForgetSpec::Class(2), ForgetSpec::Classes(vec![5, 3])],
+        [ForgetSpec::Samples(erased_samples), ForgetSpec::Classes(vec![1])],
+    ];
     let mut ok = 0;
     std::thread::scope(|s| -> anyhow::Result<()> {
         let fleet = &fleet;
         let mut joins = Vec::new();
-        for c in 0..3usize {
+        for specs in requests {
             joins.push(s.spawn(move || {
-                let classes: [usize; 2] = [c * 2, if c == 2 { 1 } else { c * 2 + 1 }];
-                classes.map(|class| (class, fleet.submit(class).recv()))
+                specs.map(|spec| (spec.clone(), fleet.submit(spec).recv()))
             }));
         }
         for j in joins {
-            for (class, reply) in j.join().expect("client thread") {
+            for (spec, reply) in j.join().expect("client thread") {
                 match reply.expect("fleet answers every admitted request") {
                     Reply::Done(sm) => {
                         ok += 1;
                         println!(
-                            "identity {class}: Df {:5.1}%  Dr {:5.1}%  stop l={:<8} MACs {:7.4}%  energy {:8.4} mJ ({:6.3}% of SSD)  sim {:7.1} ms  queue {:6.1} ms  service {:7.1} ms",
+                            "{:16} Df {:5.1}%  Dr {:5.1}%  stop l={:<8} MACs {:7.4}%  energy {:8.4} mJ ({:6.3}% of SSD)  sim {:7.1} ms  queue {:6.1} ms  service {:7.1} ms",
+                            spec.to_string(),
                             100.0 * sm.forget_acc,
                             100.0 * sm.retain_acc,
                             format!("{:?}", sm.stop_depth),
@@ -70,12 +82,12 @@ fn main() -> anyhow::Result<()> {
                             sm.timing.service_ms,
                         );
                     }
-                    Reply::Failed(e) => println!("identity {class}: FAILED ({e})"),
+                    Reply::Failed(e) => println!("{spec}: FAILED ({e})"),
                     Reply::Backpressure { queue_len, queue_cap } => {
-                        println!("identity {class}: shed (queue {queue_len}/{queue_cap})")
+                        println!("{spec}: shed (queue {queue_len}/{queue_cap})")
                     }
                     Reply::Expired { missed_by_ms } => {
-                        println!("identity {class}: expired ({missed_by_ms:.0} ms late)")
+                        println!("{spec}: expired ({missed_by_ms:.0} ms late)")
                     }
                 }
             }

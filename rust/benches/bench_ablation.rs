@@ -11,10 +11,10 @@
 
 mod harness;
 
-use ficabu::exp::{self, tables::mode_config, DatasetKind, Mode, PrepareOpts};
+use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
 use ficabu::hwsim::mem::Precision;
 use ficabu::hwsim::{BaselineProcessor, FicabuProcessor};
-use ficabu::unlearn::{default_checkpoints, run_unlearning, Schedule, UnlearnConfig};
+use ficabu::unlearn::{default_checkpoints, run_strategy, Bd, Cau, Schedule, Ssd};
 use ficabu::util::prng::Pcg32;
 use harness::Bench;
 
@@ -40,9 +40,9 @@ fn main() {
         let mut params = prep.params.clone();
         let mut rng = Pcg32::seeded(0xab1);
         let (x, labels) = prep.train.forget_batch(0, meta.batch, &mut rng);
-        let cfg = UnlearnConfig::cau(alpha, lambda, cps.clone(), tau);
-        let r = run_unlearning(
-            &prep.model, &mut params, &x, &labels, &prep.global, &prep.fimd, &prep.damp, &cfg,
+        let strat = Cau::new(alpha, lambda, cps.clone(), tau);
+        let r = run_strategy(
+            &prep.model, &mut params, &x, &labels, &prep.global, &prep.fimd, &prep.damp, &strat,
         )
         .unwrap();
         let ssd_macs = ficabu::model::macs::ssd_ledger(&meta, meta.batch).editing_total();
@@ -65,13 +65,13 @@ fn main() {
         let mut params = prep.params.clone();
         let mut rng = Pcg32::seeded(0xab2);
         let (x, labels) = prep.train.forget_batch(1, meta.batch, &mut rng);
-        let cfg = UnlearnConfig::bd(
+        let strat = Bd::new(
             alpha,
             lambda,
             Schedule::Sigmoid { cm: (meta.num_segments() as f64 + 1.0) / 2.0, br },
         );
-        let r = run_unlearning(
-            &prep.model, &mut params, &x, &labels, &prep.global, &prep.fimd, &prep.damp, &cfg,
+        let r = run_strategy(
+            &prep.model, &mut params, &x, &labels, &prep.global, &prep.fimd, &prep.damp, &strat,
         )
         .unwrap();
         let half = meta.num_segments() / 2;
@@ -86,9 +86,9 @@ fn main() {
         let mut params = prep.params.clone();
         let mut rng = Pcg32::seeded(0xab3);
         let (x, labels) = prep.train.forget_batch(2, meta.batch, &mut rng);
-        let cfg = UnlearnConfig::ssd(a, lambda);
-        let r = run_unlearning(
-            &prep.model, &mut params, &x, &labels, &prep.global, &prep.fimd, &prep.damp, &cfg,
+        let strat = Ssd::new(a, lambda);
+        let r = run_strategy(
+            &prep.model, &mut params, &x, &labels, &prep.global, &prep.fimd, &prep.damp, &strat,
         )
         .unwrap();
         let sel: u64 = r.selected_per_depth.iter().sum();
@@ -96,7 +96,7 @@ fn main() {
             .model
             .logits(&params, &x)
             .unwrap();
-        let df = ficabu::unlearn::forget_accuracy(&logits, &labels);
+        let df = ficabu::unlearn::forget_accuracy(&logits, &labels).unwrap();
         println!(
             "  alpha {a:5.1}: selected {sel:7} ({:.3}% of params), forget-batch acc {:.1}%",
             100.0 * sel as f64 / meta.total_params() as f64,
@@ -106,12 +106,13 @@ fn main() {
 
     // --- 4. INT8 vs FP32 hardware cost ----------------------------------
     println!("\n[ablation] precision: simulated cost of one FiCABU run");
-    let cfg = mode_config(&prep, Mode::Ficabu, None);
+    let strat = exp::tables::mode_strategy(&prep, Mode::Ficabu, None);
     let mut params = prep.params.clone();
     let mut rng = Pcg32::seeded(0xab4);
     let (x, labels) = prep.train.forget_batch(3, meta.batch, &mut rng);
-    let r = run_unlearning(
-        &prep.model, &mut params, &x, &labels, &prep.global, &prep.fimd, &prep.damp, &cfg,
+    let r = run_strategy(
+        &prep.model, &mut params, &x, &labels, &prep.global, &prep.fimd, &prep.damp,
+        strat.as_ref(),
     )
     .unwrap();
     for precision in [Precision::Int8, Precision::F32] {

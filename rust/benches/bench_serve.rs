@@ -16,6 +16,10 @@
 //! * `serve/coalesce-burst` — one worker, a burst of identical
 //!   requests: the dispatcher folds them into ~2 executions with
 //!   fan-out replies.
+//! * `serve/spec-mix` — the spec-diversity arm: a stream cycling
+//!   single-class, multi-class, and sample-level `ForgetSpec`s through
+//!   the fleet (host-paced; the single-class paced arms above remain
+//!   the regression-gated scaling story).
 //!
 //! `FICABU_BENCH_PRESET=smoke` shrinks the request counts for CI.
 
@@ -27,6 +31,7 @@ use ficabu::config::SharedMeta;
 use ficabu::coordinator::{Fleet, FleetConfig, Pacing, Reply, WorkerSpec};
 use ficabu::exp::tables::mode_config;
 use ficabu::exp::{self, DatasetKind, Mode, Prepared, PrepareOpts};
+use ficabu::unlearn::ForgetSpec;
 use harness::Bench;
 
 const ART: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
@@ -77,7 +82,7 @@ fn run_arm(
     )?;
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..requests)
-        .map(|i| fleet.submit(i % num_classes))
+        .map(|i| fleet.submit(ForgetSpec::Class(i % num_classes)))
         .collect();
     let mut done = 0usize;
     for rx in rxs {
@@ -127,7 +132,7 @@ fn run_coalesce_burst(
         },
     )?;
     let t0 = Instant::now();
-    let rxs: Vec<_> = (0..requests).map(|_| fleet.submit(0)).collect();
+    let rxs: Vec<_> = (0..requests).map(|_| fleet.submit(ForgetSpec::Class(0))).collect();
     for rx in rxs {
         match rx.recv() {
             Ok(Reply::Done(_)) => {}
@@ -152,6 +157,81 @@ fn run_coalesce_burst(
     anyhow::ensure!(
         total.served as usize + stats.coalesced as usize == requests,
         "every burst request must be executed or coalesced"
+    );
+    Ok(())
+}
+
+/// Spec-diversity arm: a request stream cycling all three `ForgetSpec`
+/// shapes (single class, 2-class event, 8-sample erasure) through a
+/// 2-worker host-paced fleet.
+fn run_spec_mix(
+    b: &Bench,
+    prep: &Prepared,
+    shared: &SharedMeta,
+    requests: usize,
+) -> anyhow::Result<()> {
+    let num_classes = prep.model.meta.num_classes;
+    let sample_pool = |class: usize| -> Vec<usize> {
+        prep.train.class_indices(class).into_iter().take(8).collect()
+    };
+    let cycle = |i: usize| -> ForgetSpec {
+        match i % 3 {
+            0 => ForgetSpec::Class(i % num_classes),
+            1 => ForgetSpec::Classes(vec![i % num_classes, (i + 7) % num_classes]),
+            _ => ForgetSpec::Samples(sample_pool(i % num_classes)),
+        }
+    };
+    let fleet = Fleet::start(
+        spec_for(prep, shared),
+        FleetConfig {
+            workers: 2,
+            queue_cap: requests + 4,
+            deadline: None,
+            batch_max: 1,
+            pacing: Pacing::Host,
+        },
+    )?;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests).map(|i| fleet.submit(cycle(i))).collect();
+    let mut by_kind = [0usize; 3]; // class / classes / samples served
+    for rx in rxs {
+        match rx.recv() {
+            Ok(Reply::Done(sm)) => {
+                by_kind[match sm.spec {
+                    ForgetSpec::Class(_) => 0,
+                    ForgetSpec::Classes(_) => 1,
+                    ForgetSpec::Samples(_) => 2,
+                }] += 1;
+            }
+            Ok(other) => anyhow::bail!("spec-mix: unexpected reply {other:?}"),
+            Err(e) => anyhow::bail!("spec-mix: reply channel closed ({e})"),
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let stats = fleet.shutdown()?;
+    let total = stats.merged();
+    anyhow::ensure!(
+        by_kind.iter().all(|&n| n > 0),
+        "spec-mix must serve every spec shape, got {by_kind:?}"
+    );
+    b.record_case(
+        "serve/spec-mix",
+        requests,
+        wall_ms,
+        wall_ms / requests as f64,
+        &[
+            ("rps", requests as f64 / (wall_ms / 1e3)),
+            ("workers", 2.0),
+            ("class_replies", by_kind[0] as f64),
+            ("classes_replies", by_kind[1] as f64),
+            ("samples_replies", by_kind[2] as f64),
+            ("service_p50_ms", total.service_hist.p50_ms()),
+            ("service_p99_ms", total.service_hist.p99_ms()),
+        ],
+    );
+    println!(
+        "[serve] spec-mix: {requests} requests ({} class / {} classes / {} samples replies)",
+        by_kind[0], by_kind[1], by_kind[2]
     );
     Ok(())
 }
@@ -231,6 +311,9 @@ fn main() -> anyhow::Result<()> {
 
     // --- duplicate-burst coalescing
     run_coalesce_burst(&b, &prep, &shared, if smoke { 16 } else { 32 })?;
+
+    // --- spec-diversity arm (ForgetSpec grammar through the fleet)
+    run_spec_mix(&b, &prep, &shared, if smoke { 6 } else { 12 })?;
 
     b.write_json(OUT_JSON)?;
     println!("wrote {OUT_JSON}");

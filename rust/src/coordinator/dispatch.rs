@@ -9,10 +9,12 @@
 //!
 //! Request lifecycle:
 //!
-//! 1. **Admission** ([`Fleet::submit`]): a request for a class already
-//!    queued *coalesces* onto that entry (one execution, fan-out
-//!    replies). Otherwise, a full queue sheds the request immediately
-//!    with [`Reply::Backpressure`]; an open slot enqueues it.
+//! 1. **Admission** ([`Fleet::submit`]): a request whose canonical
+//!    [`SpecKey`] matches an already-queued entry *coalesces* onto that
+//!    entry (one execution, fan-out replies) — `classes:4,1,1`,
+//!    `classes:1,4`, and a duplicate of either are one queue slot.
+//!    Otherwise, a full queue sheds the request immediately with
+//!    [`Reply::Backpressure`]; an open slot enqueues it.
 //! 2. **Claim**: an idle worker claims up to `batch_max` entries in one
 //!    lock acquisition (a *pass*), capped to its fair share of the
 //!    backlog (`ceil(queue_len / workers)`) so a burst spreads across
@@ -44,7 +46,7 @@ use crate::data::Dataset;
 use crate::fisher::Importance;
 use crate::model::ParamStore;
 use crate::runtime::Precision;
-use crate::unlearn::UnlearnConfig;
+use crate::unlearn::{ForgetSpec, SpecKey, UnlearnConfig};
 
 /// Outcome of one submitted request.
 #[derive(Debug, Clone)]
@@ -114,10 +116,11 @@ pub struct WorkerSpec {
 }
 
 /// The unlearning work a worker performs per request — implemented by
-/// [`EdgeServer`] for production and by test doubles for dispatcher
-/// tests.
+/// [`EdgeServer`] (= `UnlearnSession`) for production and by test
+/// doubles for dispatcher tests. The spec a worker receives is already
+/// canonical (it is the entry's coalescing key).
 pub trait UnlearnService {
-    fn unlearn(&mut self, class: usize) -> Result<Summary>;
+    fn unlearn(&mut self, spec: &ForgetSpec) -> Result<Summary>;
 }
 
 /// Snapshot of fleet-wide serving statistics.
@@ -147,7 +150,8 @@ impl FleetStats {
 }
 
 struct Entry {
-    class: usize,
+    /// Canonical coalescing/routing key; `key.spec()` is what executes.
+    key: SpecKey,
     replies: Vec<std::sync::mpsc::Sender<Reply>>,
     enqueued_at: Instant,
     deadline: Option<Instant>,
@@ -267,24 +271,25 @@ impl Fleet {
         Ok(Fleet { shared, handles })
     }
 
-    /// Submit a forget-class request under the fleet's default deadline.
+    /// Submit a forget request under the fleet's default deadline.
     /// Returns immediately; the reply arrives on the receiver.
-    pub fn submit(&self, class: usize) -> Receiver<Reply> {
-        self.submit_with_deadline(class, self.shared.cfg.deadline)
+    pub fn submit(&self, spec: ForgetSpec) -> Receiver<Reply> {
+        self.submit_with_deadline(spec, self.shared.cfg.deadline)
     }
 
     /// Submit with an explicit deadline (`None` = never sheds).
     ///
     /// Admission control runs synchronously on the caller's thread: a
-    /// duplicate of a *queued* class coalesces (requests already being
-    /// executed are not joined — the execution started before this
-    /// request arrived); a full queue replies `Backpressure` without
-    /// enqueueing.
+    /// request whose canonical [`SpecKey`] matches a *queued* entry
+    /// coalesces (requests already being executed are not joined — the
+    /// execution started before this request arrived); a full queue
+    /// replies `Backpressure` without enqueueing.
     pub fn submit_with_deadline(
         &self,
-        class: usize,
+        spec: ForgetSpec,
         deadline: Option<Duration>,
     ) -> Receiver<Reply> {
+        let key = spec.key();
         let (tx, rx) = channel();
         let now = Instant::now();
         let abs_deadline = deadline.map(|d| now + d);
@@ -293,7 +298,7 @@ impl Fleet {
             let _ = tx.send(Reply::Failed("fleet is shutting down".to_string()));
             return rx;
         }
-        if let Some(e) = st.queue.iter_mut().find(|e| e.class == class) {
+        if let Some(e) = st.queue.iter_mut().find(|e| e.key == key) {
             // Coalesce: one execution will fan out to every requester.
             // The entry keeps the laxest deadline so a late joiner
             // cannot get an earlier waiter shed.
@@ -314,7 +319,7 @@ impl Fleet {
             return rx;
         }
         st.queue.push_back(Entry {
-            class,
+            key,
             replies: vec![tx],
             enqueued_at: now,
             deadline: abs_deadline,
@@ -425,7 +430,7 @@ fn serve_entry<S: UnlearnService>(wid: usize, sh: &Shared, svc: &mut S, e: Entry
         }
     }
     let t0 = Instant::now();
-    let out = svc.unlearn(e.class);
+    let out = svc.unlearn(e.key.spec());
     let mut service_ms = t0.elapsed().as_secs_f64() * 1e3;
     if let Pacing::SimDevice { floor_ms } = sh.cfg.pacing {
         if let Ok(s) = &out {

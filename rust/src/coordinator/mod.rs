@@ -1,29 +1,34 @@
-//! Edge serving layer: a multi-worker unlearning fleet.
+//! Edge serving layer: typed forget requests over a multi-worker
+//! unlearning fleet.
 //!
 //! The paper's Fig. 1 (right) deploys one Unlearning Engine on the edge
 //! device. This module grows that shape into a serving fleet for heavy
-//! forget-request traffic:
+//! forget-request traffic, speaking [`ForgetSpec`] end to end:
 //!
 //! ```text
-//!  clients ──► Fleet::submit ──► admission control ──► bounded FIFO
-//!                 │  (coalesce duplicates,              │
-//!                 │   shed on full queue)               ▼
+//!  clients ──► Fleet::submit(spec) ──► admission control ──► bounded FIFO
+//!                 │   (coalesce on canonical SpecKey,          │
+//!                 │    shed on full queue)                     ▼
 //!                 │                        workers 0..N (one thread each)
-//!                 ▼                         ├─ EdgeServer replica 0
-//!          Reply receiver ◄── fan-out ──────┤   (own ParamStore + engines)
-//!          (Done | Failed |                 ├─ EdgeServer replica 1
-//!           Backpressure | Expired)         └─ ...
+//!                 ▼                         ├─ UnlearnSession replica 0
+//!          Reply receiver ◄── fan-out ──────┤   (own ParamStore + engines
+//!          (Done | Failed |                 ├─ UnlearnSession replica 1
+//!           Backpressure | Expired)         └─ ...          + Strategy)
 //! ```
 //!
-//! * [`EdgeServer`] is the per-worker core: one model, one parameter
-//!   replica, one FIMD/Dampening engine pair, one hwsim processor pair.
-//!   Compiled modules hold `Rc` handles (not `Send`), so replicas are
-//!   built *inside* their worker thread from a `Send` [`WorkerSpec`].
-//! * [`Fleet`] (see [`dispatch`]) owns the shared queue: duplicate
-//!   forget requests for one class coalesce into a single execution with
-//!   fan-out replies, workers claim batched passes, a bounded queue
-//!   sheds excess load with [`Reply::Backpressure`], and stale entries
-//!   are shed against their deadline.
+//! * [`UnlearnSession`] (alias [`EdgeServer`]) is the per-worker core:
+//!   one model, one parameter replica, one FIMD/Dampening engine pair,
+//!   one hwsim processor pair, one pluggable
+//!   [`Strategy`](crate::unlearn::Strategy). Compiled modules hold `Rc`
+//!   handles (not `Send`), so replicas are built *inside* their worker
+//!   thread from a `Send` [`WorkerSpec`].
+//! * [`Fleet`] (see [`dispatch`]) owns the shared queue: requests whose
+//!   canonical [`SpecKey`](crate::unlearn::SpecKey) matches a queued
+//!   entry coalesce into a single execution with fan-out replies
+//!   (`classes:4,1` and `classes:1,4` are one event), workers claim
+//!   batched passes, a bounded queue sheds excess load with
+//!   [`Reply::Backpressure`], and stale entries are shed against their
+//!   deadline.
 //! * [`QueueStats`] aggregates per-worker latency (mean/max plus
 //!   p50/p95/p99 histograms for queue and service time) and merges into
 //!   the fleet-wide rollup surfaced by [`Fleet::stats`] and the `serve`
@@ -37,28 +42,21 @@
 
 pub mod dispatch;
 pub mod queue;
+pub mod session;
 
 pub use dispatch::{Fleet, FleetConfig, FleetStats, Pacing, Reply, UnlearnService, WorkerSpec};
 pub use queue::{LatencyHistogram, QueueStats, Timing};
-
-use std::time::Instant;
+pub use session::{EdgeServer, UnlearnSession, UnlearnSessionBuilder};
 
 use anyhow::Result;
 
-use crate::data::Dataset;
-use crate::fisher::{FimdEngine, Importance};
-use crate::hwsim::{BaselineProcessor, FicabuProcessor};
-use crate::metrics;
-use crate::model::macs::ssd_ledger;
-use crate::model::{Model, ParamStore};
-use crate::runtime::Runtime;
-use crate::unlearn::{run_unlearning, DampEngine, UnlearnConfig, UnlearnReport};
-use crate::util::prng::Pcg32;
+use crate::unlearn::ForgetSpec;
 
 /// Outcome summary of one served unlearning event.
 #[derive(Debug, Clone)]
 pub struct Summary {
-    pub class: usize,
+    /// The canonical request this event executed.
+    pub spec: ForgetSpec,
     pub forget_acc: f64,
     pub retain_acc: f64,
     pub stop_depth: Option<usize>,
@@ -72,173 +70,18 @@ pub struct Summary {
     pub timing: Timing,
 }
 
-/// Per-worker serving core: one trained model + stored global importance
-/// + engine pair + hwsim processors. One `EdgeServer` serves requests
-/// sequentially; concurrency lives in [`Fleet`].
-pub struct EdgeServer {
-    pub model: Model,
-    pub params: ParamStore,
-    pub global: Importance,
-    pub fimd: FimdEngine,
-    pub damp: DampEngine,
-    pub train: Dataset,
-    pub cfg: UnlearnConfig,
-    pub ficabu_hw: FicabuProcessor,
-    pub baseline_hw: BaselineProcessor,
-    pub rng: Pcg32,
-}
-
-impl EdgeServer {
-    #[allow(clippy::too_many_arguments)]
-    pub fn new(
-        model: Model,
-        params: ParamStore,
-        global: Importance,
-        fimd: FimdEngine,
-        damp: DampEngine,
-        train: Dataset,
-        cfg: UnlearnConfig,
-        ficabu_hw: FicabuProcessor,
-        baseline_hw: BaselineProcessor,
-    ) -> EdgeServer {
-        EdgeServer {
-            model,
-            params,
-            global,
-            fimd,
-            damp,
-            train,
-            cfg,
-            ficabu_hw,
-            baseline_hw,
-            rng: Pcg32::seeded(0xedbe),
-        }
-    }
-
-    /// Reseed the forget-batch sampler (used to decorrelate replicas).
-    pub fn with_seed(mut self, seed: u64) -> EdgeServer {
-        self.rng = Pcg32::seeded(seed);
-        self
-    }
-
-    /// Build a replica from a `Send` spec — called inside the worker
-    /// thread, because the compiled modules it creates are not `Send`.
-    /// Replicas are re-entrant by construction: every engine buffer and
-    /// counter is owned per instance, nothing is shared across workers.
-    pub fn from_spec(spec: &WorkerSpec, worker_id: usize) -> Result<EdgeServer> {
-        let rt = Runtime::from_env()?;
-        let model = Model::load(&rt, spec.meta.clone())?;
-        let fimd = FimdEngine::new(&rt, &spec.shared)?;
-        let damp = DampEngine::new(&rt, &spec.shared)?;
-        let tile = spec.meta.tile;
-        Ok(EdgeServer::new(
-            model,
-            spec.params.clone(),
-            spec.global.clone(),
-            fimd,
-            damp,
-            spec.train.clone(),
-            spec.cfg.clone(),
-            FicabuProcessor::new(tile, spec.precision),
-            BaselineProcessor::new(tile, spec.precision),
-        )
-        .with_seed(0xedbe ^ ((worker_id as u64) << 17)))
-    }
-
-    /// Execute one unlearning event against this replica's live
-    /// parameter store and report quality + simulated hardware cost.
-    /// `Summary::timing` is zeroed here; the dispatcher fills it.
-    pub fn unlearn(&mut self, class: usize) -> Result<Summary> {
-        let meta = &self.model.meta;
-        if class >= meta.num_classes {
-            anyhow::bail!("class {class} out of range ({} classes)", meta.num_classes);
-        }
-        let (x, labels) = self.train.forget_batch(class, meta.batch, &mut self.rng);
-        let report: UnlearnReport = run_unlearning(
-            &self.model,
-            &mut self.params,
-            &x,
-            &labels,
-            &self.global,
-            &self.fimd,
-            &self.damp,
-            &self.cfg,
-        )?;
-
-        // post-edit quality readout on a subsample (edge-budget sized)
-        let forget_idx = self.train.class_indices(class);
-        let retain_idx: Vec<usize> = self
-            .train
-            .without_class(class)
-            .into_iter()
-            .step_by(4)
-            .collect();
-        let forget_acc =
-            metrics::eval_accuracy(&self.model, &self.params, &self.train, &forget_idx)?;
-        let retain_acc =
-            metrics::eval_accuracy(&self.model, &self.params, &self.train, &retain_idx)?;
-
-        // hardware cost: this run on FiCABU vs the SSD ledger on baseline
-        // (same executed precision, so the f32-gradient lane penalty and
-        // byte widths apply to both sides of the comparison)
-        let fic = self.ficabu_hw.cost(&report);
-        let ssd_ref_report = UnlearnReport {
-            ledger: ssd_ledger(meta, meta.batch),
-            fimd_elems: meta.total_params() as u64 * (meta.batch / meta.microbatch) as u64,
-            damp_elems: meta.total_params() as u64,
-            act_cache_bytes: report.act_cache_bytes,
-            precision: report.precision,
-            ..Default::default()
-        };
-        let ssd = self.baseline_hw.cost(&ssd_ref_report);
-
-        Ok(Summary {
-            class,
-            forget_acc,
-            retain_acc,
-            stop_depth: report.stop_depth,
-            macs_vs_ssd_pct: 100.0 * report.ledger.editing_total() as f64
-                / ssd_ref_report.ledger.editing_total() as f64,
-            sim_energy_mj: fic.energy_mj,
-            sim_energy_vs_ssd_pct: 100.0 * fic.energy_mj / ssd.energy_mj,
-            sim_ms: fic.seconds * 1e3,
-            timing: Timing::default(),
-        })
-    }
-
-    /// Serve requests from an iterator, sequentially, on the caller's
-    /// thread — the single-device deployment of Fig. 1, kept for direct
-    /// embedding. Returns one timed summary per request.
-    pub fn serve_sequential(
-        &mut self,
-        classes: impl IntoIterator<Item = usize>,
-    ) -> Vec<Result<Summary, String>> {
-        classes
-            .into_iter()
-            .map(|class| {
-                let t0 = Instant::now();
-                self.unlearn(class)
-                    .map(|mut s| {
-                        s.timing =
-                            Timing { queue_ms: 0.0, service_ms: t0.elapsed().as_secs_f64() * 1e3 };
-                        s
-                    })
-                    .map_err(|e| format!("{e:#}"))
-            })
-            .collect()
-    }
-}
-
-impl UnlearnService for EdgeServer {
-    fn unlearn(&mut self, class: usize) -> Result<Summary> {
-        EdgeServer::unlearn(self, class)
+impl UnlearnService for UnlearnSession {
+    fn unlearn(&mut self, spec: &ForgetSpec) -> Result<Summary> {
+        self.forget(spec)
     }
 }
 
 #[cfg(test)]
 mod tests {
     // Queue statistics are unit-tested in queue.rs; the dispatcher
-    // (coalescing, shedding, drain, stats rollup) in tests/dispatch.rs
-    // against a mock service; the full fleet end-to-end in
-    // examples/edge_serving.rs and benches/bench_serve.rs.
+    // (spec-key coalescing, shedding, drain, stats rollup) in
+    // tests/dispatch.rs against a mock service; session + fleet
+    // end-to-end over class / multi-class / sample specs in
+    // tests/spec_e2e.rs, examples/edge_serving.rs and
+    // benches/bench_serve.rs.
 }

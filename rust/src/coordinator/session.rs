@@ -1,0 +1,325 @@
+//! The serving facade: one model + parameter replica + engine pair
+//! behind `session.forget(spec)`.
+//!
+//! [`UnlearnSession`] is what every serving surface is built on — the
+//! fleet's per-worker replica ([`EdgeServer`]), the sequential
+//! single-device loop, the CLI `unlearn`/`serve` subcommands, the
+//! benches. It owns the model, the live parameter store, the stored
+//! global importance, the FIMD/Dampening engines, the hwsim processor
+//! pair, and the pluggable [`Strategy`]; requests arrive as typed
+//! [`ForgetSpec`]s.
+//!
+//! # Example
+//!
+//! Build a session over a builtin topology and forget two classes in
+//! one event (untrained weights and a `tau = 1.0` first-checkpoint stop
+//! keep this fast — a real deployment loads trained params and stored
+//! importance, see `exp::prepare`):
+//!
+//! ```
+//! use ficabu::config::ModelMeta;
+//! use ficabu::coordinator::UnlearnSession;
+//! use ficabu::data::{cifar20_like, DatasetCfg};
+//! use ficabu::fisher::Importance;
+//! use ficabu::model::{Model, ParamStore};
+//! use ficabu::runtime::Runtime;
+//! use ficabu::unlearn::{Cau, ForgetSpec};
+//!
+//! let rt = Runtime::cpu()?;
+//! let meta = ModelMeta::builtin("rn18slim")?;
+//! let model = Model::load(&rt, meta.clone())?;
+//! let params = ParamStore::init(&meta, 42);
+//! let mut global = Importance::zeros_like(&meta);
+//! global.floor(1e-6);
+//! let cfg = DatasetCfg { train_per_class: 4, test_per_class: 1, ..DatasetCfg::cifar20() };
+//! let (train, _) = cifar20_like(&cfg);
+//!
+//! let mut session = UnlearnSession::builder()
+//!     .model(model)
+//!     .params(params)
+//!     .global(global)
+//!     .train(train)
+//!     .strategy(Cau::new(10.0, 1.0, vec![1], 1.0)) // tau = 1.0: stop at depth 1
+//!     .build()?;
+//!
+//! let summary = session.forget(&ForgetSpec::Classes(vec![1, 3]))?;
+//! assert_eq!(summary.stop_depth, Some(1));
+//! assert_eq!(summary.spec, ForgetSpec::Classes(vec![1, 3]));
+//! # anyhow::Ok(())
+//! ```
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::SharedMeta;
+use crate::coordinator::dispatch::WorkerSpec;
+use crate::coordinator::{Summary, Timing};
+use crate::data::Dataset;
+use crate::fisher::{FimdEngine, Importance};
+use crate::hwsim::{BaselineProcessor, FicabuProcessor};
+use crate::metrics;
+use crate::model::macs::ssd_ledger;
+use crate::model::{Model, ParamStore};
+use crate::runtime::{Precision, Runtime};
+use crate::unlearn::{
+    run_strategy, DampEngine, Ficabu, ForgetSpec, Strategy, UnlearnConfig, UnlearnReport,
+};
+use crate::util::prng::Pcg32;
+
+/// Per-worker serving core: one trained model + stored global importance
+/// + engine pair + hwsim processors, executing one [`Strategy`]. One
+/// session serves requests sequentially; concurrency lives in
+/// [`Fleet`](crate::coordinator::Fleet), which runs one of these per
+/// worker thread.
+pub struct UnlearnSession {
+    pub model: Model,
+    pub params: ParamStore,
+    pub global: Importance,
+    pub fimd: FimdEngine,
+    pub damp: DampEngine,
+    pub train: Dataset,
+    strategy: Box<dyn Strategy>,
+    pub ficabu_hw: FicabuProcessor,
+    pub baseline_hw: BaselineProcessor,
+    pub rng: Pcg32,
+}
+
+/// The fleet-facing name for a session: each worker thread builds one
+/// replica from a `Send` [`WorkerSpec`] and serves it sequentially.
+pub type EdgeServer = UnlearnSession;
+
+/// Builder for [`UnlearnSession`]. `model`, `params`, `global`, and
+/// `train` are required; engines default to fresh ones on the
+/// environment's runtime, the strategy defaults to
+/// [`Ficabu::from_config`] over the default [`UnlearnConfig`], and the
+/// hwsim precision defaults to the store's native precision.
+#[derive(Default)]
+pub struct UnlearnSessionBuilder {
+    model: Option<Model>,
+    params: Option<ParamStore>,
+    global: Option<Importance>,
+    engines: Option<(FimdEngine, DampEngine)>,
+    train: Option<Dataset>,
+    strategy: Option<Box<dyn Strategy>>,
+    precision: Option<Precision>,
+    seed: Option<u64>,
+}
+
+impl UnlearnSessionBuilder {
+    pub fn model(mut self, model: Model) -> Self {
+        self.model = Some(model);
+        self
+    }
+
+    pub fn params(mut self, params: ParamStore) -> Self {
+        self.params = Some(params);
+        self
+    }
+
+    /// Stored global importance `I_D`.
+    pub fn global(mut self, global: Importance) -> Self {
+        self.global = Some(global);
+        self
+    }
+
+    /// Reuse existing engines instead of building fresh ones.
+    pub fn engines(mut self, fimd: FimdEngine, damp: DampEngine) -> Self {
+        self.engines = Some((fimd, damp));
+        self
+    }
+
+    /// The training corpus forget batches and eval splits come from.
+    pub fn train(mut self, train: Dataset) -> Self {
+        self.train = Some(train);
+        self
+    }
+
+    /// The unlearning method to execute (see [`Strategy`]).
+    pub fn strategy(mut self, strategy: impl Strategy + 'static) -> Self {
+        self.strategy = Some(Box::new(strategy));
+        self
+    }
+
+    /// Shorthand for [`Self::strategy`] with the default stages over a
+    /// travelled parameter bag (the fleet replica path).
+    pub fn config(self, cfg: UnlearnConfig) -> Self {
+        self.strategy(Ficabu::from_config(cfg))
+    }
+
+    /// hwsim precision (default: the store's native precision).
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = Some(precision);
+        self
+    }
+
+    /// Seed for the forget-batch sampler (decorrelates replicas).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn build(self) -> Result<UnlearnSession> {
+        let model = self.model.context("UnlearnSession: model is required")?;
+        let params = self.params.context("UnlearnSession: params are required")?;
+        let global = self.global.context("UnlearnSession: global importance is required")?;
+        let train = self.train.context("UnlearnSession: train dataset is required")?;
+        params.validate(&model.meta)?;
+        if global.per_seg.len() != model.meta.num_segments() {
+            bail!(
+                "UnlearnSession: importance covers {} segments, model has {}",
+                global.per_seg.len(),
+                model.meta.num_segments()
+            );
+        }
+        let (fimd, damp) = match self.engines {
+            Some(pair) => pair,
+            None => {
+                let rt = Runtime::from_env()?;
+                let shared = SharedMeta::resolve()?;
+                (FimdEngine::new(&rt, &shared)?, DampEngine::new(&rt, &shared)?)
+            }
+        };
+        let strategy = self
+            .strategy
+            .unwrap_or_else(|| Box::new(Ficabu::from_config(UnlearnConfig::default())));
+        let precision = self.precision.unwrap_or_else(|| Model::store_precision(&params));
+        let tile = model.meta.tile;
+        Ok(UnlearnSession {
+            model,
+            params,
+            global,
+            fimd,
+            damp,
+            train,
+            strategy,
+            ficabu_hw: FicabuProcessor::new(tile, precision),
+            baseline_hw: BaselineProcessor::new(tile, precision),
+            rng: Pcg32::seeded(self.seed.unwrap_or(0xedbe)),
+        })
+    }
+}
+
+impl UnlearnSession {
+    pub fn builder() -> UnlearnSessionBuilder {
+        UnlearnSessionBuilder::default()
+    }
+
+    /// Build a replica from a `Send` spec — called inside the worker
+    /// thread, because the compiled modules it creates are not `Send`.
+    /// Replicas are re-entrant by construction: every engine buffer and
+    /// counter is owned per instance, nothing is shared across workers.
+    pub fn from_spec(spec: &WorkerSpec, worker_id: usize) -> Result<UnlearnSession> {
+        let rt = Runtime::from_env()?;
+        let model = Model::load(&rt, spec.meta.clone())?;
+        let fimd = FimdEngine::new(&rt, &spec.shared)?;
+        let damp = DampEngine::new(&rt, &spec.shared)?;
+        UnlearnSession::builder()
+            .model(model)
+            .params(spec.params.clone())
+            .global(spec.global.clone())
+            .engines(fimd, damp)
+            .train(spec.train.clone())
+            .config(spec.cfg.clone())
+            .precision(spec.precision)
+            .seed(0xedbe ^ ((worker_id as u64) << 17))
+            .build()
+    }
+
+    /// Reseed the forget-batch sampler (used to decorrelate replicas).
+    pub fn with_seed(mut self, seed: u64) -> UnlearnSession {
+        self.rng = Pcg32::seeded(seed);
+        self
+    }
+
+    /// The method this session executes.
+    pub fn strategy(&self) -> &dyn Strategy {
+        self.strategy.as_ref()
+    }
+
+    /// The strategy's parameter bag (the fleet's batch-compatibility
+    /// contract).
+    pub fn config(&self) -> &UnlearnConfig {
+        self.strategy.config()
+    }
+
+    /// Execute one unlearning event against this session's live
+    /// parameter store and report quality + simulated hardware cost.
+    /// `Summary::timing` is zeroed here; the dispatcher fills it.
+    pub fn forget(&mut self, spec: &ForgetSpec) -> Result<Summary> {
+        let meta = &self.model.meta;
+        let spec = spec.canonical();
+        // bounds vs the *model head* — pool() below only checks the
+        // dataset's own class count, which may exceed the head's
+        spec.validate(meta.num_classes, self.train.len())?;
+        let pool = spec.pool(&self.train)?;
+        let (x, labels) = self.train.batch_from_pool(&pool, meta.batch, &mut self.rng)?;
+        let report: UnlearnReport = run_strategy(
+            &self.model,
+            &mut self.params,
+            &x,
+            &labels,
+            &self.global,
+            &self.fimd,
+            &self.damp,
+            self.strategy.as_ref(),
+        )?;
+
+        // post-edit quality readout on a subsample (edge-budget sized);
+        // the retain split is the complement of the pool computed above
+        let retain_idx: Vec<usize> =
+            ForgetSpec::retain_of(&pool, self.train.len()).into_iter().step_by(4).collect();
+        let forget_acc = metrics::eval_accuracy(&self.model, &self.params, &self.train, &pool)?;
+        let retain_acc =
+            metrics::eval_accuracy(&self.model, &self.params, &self.train, &retain_idx)?;
+
+        // hardware cost: this run on FiCABU vs the SSD ledger on baseline
+        // (same executed precision, so the f32-gradient lane penalty and
+        // byte widths apply to both sides of the comparison)
+        let fic = self.ficabu_hw.cost(&report);
+        let ssd_ref_report = UnlearnReport {
+            ledger: ssd_ledger(meta, meta.batch),
+            fimd_elems: meta.total_params() as u64 * (meta.batch / meta.microbatch) as u64,
+            damp_elems: meta.total_params() as u64,
+            act_cache_bytes: report.act_cache_bytes,
+            precision: report.precision,
+            ..Default::default()
+        };
+        let ssd = self.baseline_hw.cost(&ssd_ref_report);
+
+        Ok(Summary {
+            spec,
+            forget_acc,
+            retain_acc,
+            stop_depth: report.stop_depth,
+            macs_vs_ssd_pct: 100.0 * report.ledger.editing_total() as f64
+                / ssd_ref_report.ledger.editing_total() as f64,
+            sim_energy_mj: fic.energy_mj,
+            sim_energy_vs_ssd_pct: 100.0 * fic.energy_mj / ssd.energy_mj,
+            sim_ms: fic.seconds * 1e3,
+            timing: Timing::default(),
+        })
+    }
+
+    /// Serve requests from an iterator, sequentially, on the caller's
+    /// thread — the single-device deployment of Fig. 1, kept for direct
+    /// embedding. Returns one timed summary per request.
+    pub fn serve_sequential(
+        &mut self,
+        specs: impl IntoIterator<Item = ForgetSpec>,
+    ) -> Vec<Result<Summary, String>> {
+        specs
+            .into_iter()
+            .map(|spec| {
+                let t0 = Instant::now();
+                self.forget(&spec)
+                    .map(|mut s| {
+                        s.timing =
+                            Timing { queue_ms: 0.0, service_ms: t0.elapsed().as_secs_f64() * 1e3 };
+                        s
+                    })
+                    .map_err(|e| format!("{e:#}"))
+            })
+            .collect()
+    }
+}

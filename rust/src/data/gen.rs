@@ -1,6 +1,8 @@
 //! Procedural image synthesis: smooth fields via bilinear-upsampled noise
 //! grids, class identity split between low- and high-frequency components.
 
+use anyhow::{bail, Result};
+
 use crate::tensor::Tensor;
 use crate::util::prng::Pcg32;
 
@@ -183,10 +185,28 @@ impl Dataset {
     /// A forget batch: `batch` samples of one class (sampled with
     /// replacement if the class has fewer).
     pub fn forget_batch(&self, class: usize, batch: usize, rng: &mut Pcg32) -> (Tensor, Vec<usize>) {
-        let pool = self.class_indices(class);
-        assert!(!pool.is_empty(), "class {class} empty");
+        self.batch_from_pool(&self.class_indices(class), batch, rng)
+            .unwrap_or_else(|e| panic!("forget_batch class {class}: {e}"))
+    }
+
+    /// A forget batch over an explicit index set (sampled with
+    /// replacement): the sampling primitive behind every
+    /// `unlearn::ForgetSpec` variant — single-class, multi-class, and
+    /// per-sample forgetting all reduce to an index pool.
+    pub fn batch_from_pool(
+        &self,
+        pool: &[usize],
+        batch: usize,
+        rng: &mut Pcg32,
+    ) -> Result<(Tensor, Vec<usize>)> {
+        if pool.is_empty() {
+            bail!("forget pool is empty");
+        }
+        if let Some(&i) = pool.iter().find(|&&i| i >= self.len()) {
+            bail!("forget pool index {i} out of range ({} samples)", self.len());
+        }
         let idx: Vec<usize> = (0..batch).map(|_| pool[rng.below(pool.len())]).collect();
-        self.batch(&idx, batch)
+        Ok(self.batch(&idx, batch))
     }
 
     /// Mean pairwise prototype correlation between class means — the
@@ -273,6 +293,29 @@ mod tests {
         let (x, labels) = train.forget_batch(5, 16, &mut rng);
         assert_eq!(x.shape, vec![16, 32, 32, 3]);
         assert!(labels.iter().all(|&l| l == 5));
+    }
+
+    #[test]
+    fn batch_from_pool_samples_only_the_pool() {
+        let cfg = DatasetCfg { train_per_class: 4, test_per_class: 1, ..DatasetCfg::cifar20() };
+        let (train, _) = cifar20_like(&cfg);
+        let mut rng = Pcg32::seeded(9);
+        // mixed-class pool: two samples of class 0, one of class 3
+        let pool = vec![0, 1, 3 * 4];
+        let (x, labels) = train.batch_from_pool(&pool, 16, &mut rng).unwrap();
+        assert_eq!(x.shape[0], 16);
+        assert_eq!(labels.len(), 16);
+        assert!(labels.iter().all(|&l| l == 0 || l == 3), "labels: {labels:?}");
+        assert!(labels.contains(&0) && labels.contains(&3), "replacement should hit both");
+    }
+
+    #[test]
+    fn batch_from_pool_rejects_bad_pools() {
+        let cfg = DatasetCfg { train_per_class: 2, test_per_class: 1, ..DatasetCfg::cifar20() };
+        let (train, _) = cifar20_like(&cfg);
+        let mut rng = Pcg32::seeded(9);
+        assert!(train.batch_from_pool(&[], 8, &mut rng).is_err());
+        assert!(train.batch_from_pool(&[train.len()], 8, &mut rng).is_err());
     }
 
     #[test]

@@ -7,4 +7,4 @@ pub mod prepare;
 pub mod tables;
 
 pub use prepare::{prepare, DatasetKind, PrepareOpts, Prepared};
-pub use tables::{run_mode, ClassResult, Mode};
+pub use tables::{mode_config, mode_strategy, run_mode, run_spec, ClassResult, Mode};

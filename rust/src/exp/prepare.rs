@@ -198,7 +198,7 @@ pub fn train_model(
         let idx = &order[cursor..cursor + meta.batch];
         cursor += meta.batch;
         let (x, labels) = train.batch(idx, meta.batch);
-        let onehot = make_onehot(&labels, meta.num_classes);
+        let onehot = make_onehot(&labels, meta.num_classes)?;
         // cosine-ish decay keeps late training stable on the tiny corpus
         let frac = step as f32 / opts.train_steps.max(1) as f32;
         let lr = opts.lr * (1.0 - 0.9 * frac);
@@ -229,7 +229,7 @@ pub fn global_importance(
     let mut batches = Vec::with_capacity(meta.num_classes);
     for class in 0..meta.num_classes {
         let (x, labels) = train.forget_batch(class, meta.batch, &mut rng);
-        batches.push((x, make_onehot(&labels, meta.num_classes)));
+        batches.push((x, make_onehot(&labels, meta.num_classes)?));
     }
     let mut imp = compute_global_importance(model, params, fimd, &batches)?;
     imp.floor(1e-12);

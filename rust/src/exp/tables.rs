@@ -1,14 +1,15 @@
-//! Per-class unlearning evaluation in every paper mode, with the metric
-//! set of Tables I/II/IV (Dr, Df, MIA, MACs, dDr, RPR, ES).
+//! Per-request unlearning evaluation in every paper mode, with the
+//! metric set of Tables I/II/IV (Dr, Df, MIA, MACs, dDr, RPR, ES).
 
 use anyhow::Result;
 
-use crate::hwsim::{baseline::energy_savings, BaselineProcessor, FicabuProcessor};
 use crate::hwsim::mem::Precision;
+use crate::hwsim::{baseline::energy_savings, BaselineProcessor, FicabuProcessor};
 use crate::metrics::{eval_accuracy, mia_accuracy, per_sample_losses};
 use crate::model::macs::ssd_ledger;
 use crate::unlearn::{
-    default_checkpoints, run_unlearning, Schedule, UnlearnConfig, UnlearnReport,
+    default_checkpoints, run_strategy, Bd, Cau, Ficabu, ForgetSpec, Schedule, Ssd, Strategy,
+    UnlearnConfig, UnlearnReport,
 };
 use crate::util::prng::Pcg32;
 
@@ -37,7 +38,8 @@ impl Mode {
 
 #[derive(Debug, Clone)]
 pub struct ClassResult {
-    pub class: usize,
+    /// The canonical forget request this cell executed.
+    pub spec: ForgetSpec,
     pub mode: Mode,
     /// Retain accuracy (train retain split) in [0,1].
     pub dr: f64,
@@ -63,11 +65,15 @@ pub fn checkpoint_stride(model_name: &str) -> usize {
     }
 }
 
-/// Build the UnlearnConfig for a mode, calibrating the BD sigmoid from an
+/// Build the strategy for a mode, calibrating the BD sigmoid from an
 /// SSD selection profile when needed (paper §III-B procedure). The
 /// forward/eval precision follows the prepared store (int8-served when
 /// `prepare` ran with `int8`).
-pub fn mode_config(prep: &Prepared, mode: Mode, ssd_selection: Option<&[u64]>) -> UnlearnConfig {
+pub fn mode_strategy(
+    prep: &Prepared,
+    mode: Mode,
+    ssd_selection: Option<&[u64]>,
+) -> Box<dyn Strategy> {
     let (alpha, lambda) = prep.kind.ssd_params(&prep.model.meta.name);
     let tau = prep.kind.tau();
     let big_l = prep.model.meta.num_segments();
@@ -76,33 +82,49 @@ pub fn mode_config(prep: &Prepared, mode: Mode, ssd_selection: Option<&[u64]>) -
         Some(s) => Schedule::from_selection_distribution(s, 10.0),
         None => Schedule::Sigmoid { cm: (big_l as f64 + 1.0) / 2.0, br: 10.0 },
     };
-    let cfg = match mode {
-        Mode::Baseline => UnlearnConfig::ssd(alpha, lambda), // unused
-        Mode::Ssd => UnlearnConfig::ssd(alpha, lambda),
-        Mode::Cau => UnlearnConfig::cau(alpha, lambda, cps, tau),
-        Mode::Bd => UnlearnConfig::bd(alpha, lambda, schedule(ssd_selection)),
-        Mode::Ficabu => {
-            UnlearnConfig::ficabu(alpha, lambda, schedule(ssd_selection), cps, tau)
-        }
-    };
-    cfg.with_precision(prep.precision)
+    let p = prep.precision;
+    match mode {
+        // Baseline never runs; SSD's bag doubles as its placeholder.
+        Mode::Baseline | Mode::Ssd => Box::new(Ssd::new(alpha, lambda).with_precision(p)),
+        Mode::Cau => Box::new(Cau::new(alpha, lambda, cps, tau).with_precision(p)),
+        Mode::Bd => Box::new(Bd::new(alpha, lambda, schedule(ssd_selection)).with_precision(p)),
+        Mode::Ficabu => Box::new(
+            Ficabu::new(alpha, lambda, schedule(ssd_selection), cps, tau).with_precision(p),
+        ),
+    }
 }
 
-/// Run one (class, mode) cell: clone the trained parameters, unlearn,
-/// evaluate Dr / Df / MIA / MACs.
-pub fn run_mode(prep: &Prepared, class: usize, mode: Mode,
-                ssd_selection: Option<&[u64]>) -> Result<ClassResult> {
+/// The mode's serializable parameter bag — what travels to fleet
+/// replicas in a `WorkerSpec` (the strategy is rebuilt in-thread).
+pub fn mode_config(prep: &Prepared, mode: Mode, ssd_selection: Option<&[u64]>) -> UnlearnConfig {
+    mode_strategy(prep, mode, ssd_selection).config().clone()
+}
+
+/// Run one (spec, mode) cell: clone the trained parameters, unlearn,
+/// evaluate Dr / Df / MIA / MACs. The forget/retain splits follow the
+/// spec (class, multi-class, or sample-level).
+pub fn run_spec(
+    prep: &Prepared,
+    spec: &ForgetSpec,
+    mode: Mode,
+    ssd_selection: Option<&[u64]>,
+) -> Result<ClassResult> {
     let meta = &prep.model.meta;
+    let spec = spec.canonical();
+    // bounds vs the *model head*; pool() below checks dataset bounds
+    spec.validate(meta.num_classes, prep.train.len())?;
     let mut params = prep.params.clone();
     let ssd_total = ssd_ledger(meta, meta.batch).editing_total();
+    let forget_idx = spec.pool(&prep.train)?;
+    let retain_idx = ForgetSpec::retain_of(&forget_idx, prep.train.len());
 
     let report = if mode == Mode::Baseline {
         None
     } else {
-        let cfg = mode_config(prep, mode, ssd_selection);
-        let mut rng = Pcg32::seeded(0xc1a55 ^ class as u64);
-        let (x, labels) = prep.train.forget_batch(class, meta.batch, &mut rng);
-        Some(run_unlearning(
+        let strategy = mode_strategy(prep, mode, ssd_selection);
+        let mut rng = Pcg32::seeded(0xc1a55 ^ spec.key().hash64());
+        let (x, labels) = prep.train.batch_from_pool(&forget_idx, meta.batch, &mut rng)?;
+        Some(run_strategy(
             &prep.model,
             &mut params,
             &x,
@@ -110,13 +132,11 @@ pub fn run_mode(prep: &Prepared, class: usize, mode: Mode,
             &prep.global,
             &prep.fimd,
             &prep.damp,
-            &cfg,
+            strategy.as_ref(),
         )?)
     };
 
     // evaluation splits
-    let forget_idx = prep.train.class_indices(class);
-    let retain_idx = prep.train.without_class(class);
     let dr = eval_accuracy(&prep.model, &params, &prep.train, &retain_idx)?;
     let df = eval_accuracy(&prep.model, &params, &prep.train, &forget_idx)?;
 
@@ -130,7 +150,7 @@ pub fn run_mode(prep: &Prepared, class: usize, mode: Mode,
 
     let macs = report.as_ref().map(|r| r.ledger.editing_total()).unwrap_or(0);
     Ok(ClassResult {
-        class,
+        spec,
         mode,
         dr,
         df,
@@ -140,6 +160,17 @@ pub fn run_mode(prep: &Prepared, class: usize, mode: Mode,
         stop_depth: report.as_ref().and_then(|r| r.stop_depth),
         report,
     })
+}
+
+/// [`run_spec`] for the paper's per-event shape: one class — what the
+/// table/figure examples iterate.
+pub fn run_mode(
+    prep: &Prepared,
+    class: usize,
+    mode: Mode,
+    ssd_selection: Option<&[u64]>,
+) -> Result<ClassResult> {
+    run_spec(prep, &ForgetSpec::Class(class), mode, ssd_selection)
 }
 
 /// Hardware cost of a result on the FiCABU processor vs SSD on the

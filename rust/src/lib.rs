@@ -6,8 +6,29 @@
 //! Unlearning with checkpointed early stop, Balanced Dampening depth
 //! schedule, SSD baseline, INT8 store, the FiCABU processor cycle/energy
 //! simulator, and a multi-worker serving fleet (bounded queue,
-//! duplicate-request coalescing, deadline shedding — see
+//! spec-key request coalescing, deadline shedding — see
 //! [`coordinator`]).
+//!
+//! ## Unlearning API
+//!
+//! Requests and methods are decoupled:
+//!
+//! * **What** to forget is a typed [`unlearn::ForgetSpec`] — one class,
+//!   several classes in one event, or specific training samples — with
+//!   a canonical [`unlearn::SpecKey`] the serving fleet coalesces and
+//!   routes on.
+//! * **How** to forget is an [`unlearn::Strategy`] — the engine's loop
+//!   is decomposed into forget-Fisher / dampening / early-stop stages
+//!   with the paper's operating points ([`unlearn::Ssd`],
+//!   [`unlearn::Cau`], [`unlearn::Bd`], [`unlearn::Ficabu`]) provided;
+//!   a custom method overrides single stages.
+//! * **Where** it runs is an [`coordinator::UnlearnSession`] — a
+//!   builder-style facade owning model, parameter store, stored
+//!   importance, and engines, exposing `session.forget(&spec)`; the
+//!   [`coordinator::Fleet`] runs one session replica per worker thread.
+//!
+//! See the runnable example on [`coordinator::UnlearnSession`] and the
+//! README's "Unlearning API" section.
 //!
 //! ## Execution backends
 //!

@@ -14,6 +14,7 @@ use ficabu::config::{artifacts_root, SharedMeta};
 use ficabu::coordinator::{Fleet, FleetConfig, Pacing, Reply, WorkerSpec};
 use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
 use ficabu::runtime::Runtime;
+use ficabu::unlearn::ForgetSpec;
 use ficabu::util::cli::Args;
 
 fn main() {
@@ -54,12 +55,34 @@ fn prepare_opts(a: &Args) -> Result<PrepareOpts> {
     })
 }
 
+/// The request of an `unlearn`/`serve` invocation: `--forget <spec>`
+/// (the typed grammar), with `--class C` kept as shorthand for
+/// `--forget class:C`.
+fn forget_specs(a: &Args, default: &str) -> Result<Vec<ForgetSpec>> {
+    if let Some(s) = a.get("forget") {
+        let specs: Vec<ForgetSpec> = s
+            .split(';')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(ForgetSpec::parse)
+            .collect::<Result<_>>()?;
+        if specs.is_empty() {
+            anyhow::bail!("--forget: no specs given");
+        }
+        return Ok(specs);
+    }
+    if let Some(c) = a.get("class") {
+        return Ok(vec![ForgetSpec::parse(&format!("class:{c}"))?]);
+    }
+    Ok(vec![ForgetSpec::parse(default)?])
+}
+
 fn run() -> Result<()> {
     let mut args = Args::parse(std::env::args().skip(1))?;
     args.declare(&[
-        "model", "dataset", "mode", "class", "steps", "lr", "imp-batches", "seed",
-        "retrain", "int8", "verbose", "requests", "clients", "workers", "queue-cap",
-        "deadline-ms", "batch-max", "pace-sim",
+        "model", "dataset", "mode", "class", "forget", "steps", "lr", "imp-batches",
+        "seed", "retrain", "int8", "verbose", "requests", "clients", "workers",
+        "queue-cap", "deadline-ms", "batch-max", "pace-sim",
     ]);
     args.finish()?;
     match args.command.as_str() {
@@ -81,8 +104,11 @@ USAGE: ficabu <command> [--key value] [--flag]
 
   train    --model rn18slim|vitslim --dataset cifar20|pinsface
            [--steps N --lr F --seed N --retrain --int8 --verbose]
-  unlearn  --model M --dataset D --mode ssd|cau|bd|ficabu --class C [--int8]
+  unlearn  --model M --dataset D --mode ssd|cau|bd|ficabu [--int8]
+           --forget class:3 | classes:1,4,7 | samples:0,9,44 | samples:@file
+           (--class C = shorthand for --forget class:C)
   serve    --model M --dataset D [--requests N --clients K]
+           [--forget \"class:0;classes:1,4\" request cycle]
            [--workers N --queue-cap N --deadline-ms N --batch-max N --pace-sim]
   info     platform + artifact inventory
 
@@ -157,21 +183,26 @@ fn cmd_unlearn(a: &Args) -> Result<()> {
     let model = a.str_or("model", "rn18slim");
     let kind = dataset_kind(&a.str_or("dataset", "cifar20"))?;
     let mode = mode_of(&a.str_or("mode", "ficabu"))?;
-    let class = a.usize_or("class", 0)?;
+    let specs = forget_specs(a, "class:0")?;
+    let spec = match specs.as_slice() {
+        [one] => one.clone(),
+        _ => anyhow::bail!("unlearn runs one event; give a single --forget spec"),
+    };
     let opts = prepare_opts(a)?;
     let prep = exp::prepare(&model, kind, &opts)?;
 
     // calibrate BD schedule from an SSD pass when needed
     let ssd_sel = if matches!(mode, Mode::Bd | Mode::Ficabu) {
-        let ssd = exp::run_mode(&prep, class, Mode::Ssd, None)?;
+        let ssd = exp::run_spec(&prep, &spec, Mode::Ssd, None)?;
         ssd.report.map(|r| r.selected_per_depth)
     } else {
         None
     };
-    let res = exp::run_mode(&prep, class, mode, ssd_sel.as_deref())?;
+    let res = exp::run_spec(&prep, &spec, mode, ssd_sel.as_deref())?;
     println!(
-        "{} class {class}: Dr {:.2}% Df {:.2}% MIA {:.2}% MACs {:.2}% of SSD",
+        "{} {}: Dr {:.2}% Df {:.2}% MIA {:.2}% MACs {:.2}% of SSD",
         mode.name(),
+        res.spec,
         100.0 * res.dr,
         100.0 * res.df,
         100.0 * res.mia,
@@ -204,7 +235,13 @@ fn cmd_serve(a: &Args) -> Result<()> {
 
     let cfg = exp::tables::mode_config(&prep, Mode::Ficabu, None);
     let num_classes = prep.model.meta.num_classes;
-    let spec = WorkerSpec {
+    // Request cycle: --forget specs if given, else one spec per class.
+    let cycle: Vec<ForgetSpec> = if a.get("forget").is_some() {
+        forget_specs(a, "class:0")?
+    } else {
+        (0..num_classes).map(ForgetSpec::Class).collect()
+    };
+    let wspec = WorkerSpec {
         meta: prep.model.meta.clone(),
         shared: SharedMeta::resolve()?,
         params: prep.params,
@@ -231,26 +268,27 @@ fn cmd_serve(a: &Args) -> Result<()> {
         "serving fleet: {workers} worker(s), queue cap {queue_cap}, deadline {}, batch max {batch_max}",
         if deadline_ms == 0 { "none".to_string() } else { format!("{deadline_ms} ms") },
     );
-    let fleet = Fleet::start(spec, fleet_cfg)?;
+    let fleet = Fleet::start(wspec, fleet_cfg)?;
 
     // Each client bursts its share of the request stream, then drains
     // replies — exercising queueing, coalescing, and backpressure.
     std::thread::scope(|s| {
         let fleet = &fleet;
+        let cycle = &cycle;
         for c in 0..n_clients {
             s.spawn(move || {
-                let pending: Vec<(usize, _)> = (0..n_requests)
+                let pending: Vec<(ForgetSpec, _)> = (0..n_requests)
                     .skip(c)
                     .step_by(n_clients)
                     .map(|r| {
-                        let class = r % num_classes;
-                        (class, fleet.submit(class))
+                        let spec = cycle[r % cycle.len()].clone();
+                        (spec.clone(), fleet.submit(spec))
                     })
                     .collect();
-                for (class, rx) in pending {
+                for (spec, rx) in pending {
                     match rx.recv() {
                         Ok(Reply::Done(sm)) => println!(
-                            "class {class:2}: Df {:.1}% Dr {:.1}% stop l={:?} MACs {:.2}% energy {:.3} mJ ({:.2}% of SSD) sim {:.0} ms [queue {:.0} ms service {:.0} ms]",
+                            "{spec}: Df {:.1}% Dr {:.1}% stop l={:?} MACs {:.2}% energy {:.3} mJ ({:.2}% of SSD) sim {:.0} ms [queue {:.0} ms service {:.0} ms]",
                             100.0 * sm.forget_acc,
                             100.0 * sm.retain_acc,
                             sm.stop_depth,
@@ -261,14 +299,14 @@ fn cmd_serve(a: &Args) -> Result<()> {
                             sm.timing.queue_ms,
                             sm.timing.service_ms
                         ),
-                        Ok(Reply::Failed(e)) => println!("class {class:2}: FAILED ({e})"),
+                        Ok(Reply::Failed(e)) => println!("{spec}: FAILED ({e})"),
                         Ok(Reply::Backpressure { queue_len, queue_cap }) => println!(
-                            "class {class:2}: BACKPRESSURE (queue {queue_len}/{queue_cap}) — retry later"
+                            "{spec}: BACKPRESSURE (queue {queue_len}/{queue_cap}) — retry later"
                         ),
                         Ok(Reply::Expired { missed_by_ms }) => println!(
-                            "class {class:2}: EXPIRED (deadline missed by {missed_by_ms:.0} ms)"
+                            "{spec}: EXPIRED (deadline missed by {missed_by_ms:.0} ms)"
                         ),
-                        Err(_) => println!("class {class:2}: reply channel closed"),
+                        Err(_) => println!("{spec}: reply channel closed"),
                     }
                 }
             });

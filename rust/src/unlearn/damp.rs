@@ -20,11 +20,25 @@ pub struct DampEngine {
     pub pad_elems: std::cell::Cell<u64>,
 }
 
-/// Result of one segment-level dampening pass.
+/// Result of one segment-level dampening pass — what the
+/// [`Strategy`](crate::unlearn::Strategy) dampening stage returns, so a
+/// custom strategy can react to how aggressive the edit was.
 #[derive(Debug, Clone, Default)]
 pub struct DampStats {
     pub selected: u64,
     pub total: u64,
+}
+
+impl DampStats {
+    /// Fraction of the segment's parameters the selection rule picked
+    /// (0.0 for an empty segment).
+    pub fn selection_ratio(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.selected as f64 / self.total as f64
+        }
+    }
 }
 
 impl DampEngine {
@@ -130,6 +144,13 @@ mod tests {
         let mut t2 = vec![1.0f32; n];
         let s2 = eng.dampen(&mut t2, &i_df, &i_d, 5.0, 1.0).unwrap();
         assert!(s2.selected < s1.selected, "{} vs {}", s2.selected, s1.selected);
+    }
+
+    #[test]
+    fn selection_ratio_guards_empty_segments() {
+        let s = DampStats { selected: 3, total: 12 };
+        assert_eq!(s.selection_ratio(), 0.25);
+        assert_eq!(DampStats::default().selection_ratio(), 0.0);
     }
 
     #[test]

@@ -1,43 +1,49 @@
-//! The unlearning engine — Algorithm 1 with the Balanced Dampening profile.
+//! The unlearning engine — Algorithm 1 decomposed into its stages.
 //!
-//! One implementation covers all four operating points evaluated in the
-//! paper; they differ only in configuration:
+//! The paper's loop walks segments back-end-first (depth l = 1 at the
+//! head). For each segment it streams the per-microbatch gradient chain
+//! through the FIMD module (Fisher of the *original* parameters — the gy
+//! chain for segment l is computed before segment l is dampened, so the
+//! whole chain sees pre-edit weights, exactly like SSD's single-pass
+//! formulation), dampens the segment through the Dampening module with
+//! `S(l)`-scaled `(alpha, lambda)`, and at checkpoints resumes partial
+//! inference from the cached activations to decide early stop.
 //!
-//! | mode     | checkpoints | schedule  | paper artifact |
-//! |----------|-------------|-----------|----------------|
-//! | SSD      | none        | Uniform   | baseline, §II  |
-//! | CAU      | paper grid  | Uniform   | Table I        |
-//! | BD       | none        | Sigmoid   | Table II       |
-//! | FiCABU   | paper grid  | Sigmoid   | Table IV       |
-//!
-//! The loop walks segments back-end-first (depth l = 1 at the head). For
-//! each segment it streams the per-microbatch gradient chain through the
-//! FIMD module (Fisher of the *original* parameters — the gy chain for
-//! segment l is computed before segment l is dampened, so the whole chain
-//! sees pre-edit weights, exactly like SSD's single-pass formulation),
-//! dampens the segment through the Dampening module with `S(l)`-scaled
-//! `(alpha, lambda)`, and at checkpoints resumes partial inference from the
-//! cached activations to decide early stop.
+//! That loop body is split into three stage functions ([`stages`]) —
+//! forget-Fisher estimation, dampening pass, early-stop controller —
+//! which [`run_strategy`] drives through the
+//! [`Strategy`](crate::unlearn::Strategy) trait. The paper's four
+//! operating points (SSD / CAU / BD / FiCABU) are provided strategies
+//! differing only in the [`UnlearnConfig`] bag they consume; a custom
+//! strategy can override any single stage and inherit the rest.
 
 use anyhow::{bail, Result};
 
 use crate::fisher::{concat_seg_into, FimdEngine, Importance};
 use crate::model::macs::{self, MacLedger};
-use crate::model::{Model, ParamStore};
+use crate::model::{ActivationCache, Model, ParamStore};
 use crate::runtime::Precision;
 use crate::tensor::Tensor;
-use crate::unlearn::damp::DampEngine;
+use crate::unlearn::damp::{DampEngine, DampStats};
 use crate::unlearn::schedule::Schedule;
+use crate::unlearn::strategy::Strategy;
 
-/// Operating-point configuration for one unlearning engine.
+/// Operating-point parameter bag for one unlearning engine.
 ///
-/// The config is plain `Send + Clone` data, and `run_unlearning` keeps
-/// all mutable state in its arguments — so one config can be cloned
-/// into any number of serving replicas (`coordinator::WorkerSpec`) and
-/// executed re-entrantly, one event per replica at a time, with no
-/// shared state between workers. `PartialEq` is the dispatcher's
-/// batch-compatibility check: requests are batchable into one worker
-/// pass exactly when their configs compare equal.
+/// The config is plain `Send + Clone` data that a
+/// [`Strategy`](crate::unlearn::Strategy) consumes; all mutable pass
+/// state lives in [`Pass`] — so one config can be cloned into any
+/// number of serving replicas (`coordinator::WorkerSpec`) and executed
+/// re-entrantly, one event per replica at a time, with no shared state
+/// between workers. `PartialEq` is the dispatcher's batch-compatibility
+/// check: requests are batchable into one worker pass exactly when
+/// their configs compare equal.
+///
+/// Build configs through the strategy constructors
+/// ([`Ssd::new`](crate::unlearn::Ssd), [`Cau::new`](crate::unlearn::Cau),
+/// [`Bd::new`](crate::unlearn::Bd),
+/// [`Ficabu::new`](crate::unlearn::Ficabu)) rather than by hand — they
+/// encode which knobs each operating point actually uses.
 #[derive(Debug, Clone, PartialEq)]
 pub struct UnlearnConfig {
     pub alpha: f64,
@@ -56,57 +62,21 @@ pub struct UnlearnConfig {
     pub precision: Precision,
 }
 
+impl Default for UnlearnConfig {
+    /// SSD-shaped defaults: uniform schedule, no checkpoints, f32.
+    fn default() -> UnlearnConfig {
+        UnlearnConfig {
+            alpha: 10.0,
+            lambda: 1.0,
+            schedule: Schedule::Uniform,
+            checkpoints: vec![],
+            tau: 0.0,
+            precision: Precision::F32,
+        }
+    }
+}
+
 impl UnlearnConfig {
-    pub fn ssd(alpha: f64, lambda: f64) -> UnlearnConfig {
-        UnlearnConfig {
-            alpha,
-            lambda,
-            schedule: Schedule::Uniform,
-            checkpoints: vec![],
-            tau: 0.0,
-            precision: Precision::F32,
-        }
-    }
-
-    pub fn cau(alpha: f64, lambda: f64, checkpoints: Vec<usize>, tau: f64) -> UnlearnConfig {
-        UnlearnConfig {
-            alpha,
-            lambda,
-            schedule: Schedule::Uniform,
-            checkpoints,
-            tau,
-            precision: Precision::F32,
-        }
-    }
-
-    pub fn bd(alpha: f64, lambda: f64, schedule: Schedule) -> UnlearnConfig {
-        UnlearnConfig {
-            alpha,
-            lambda,
-            schedule,
-            checkpoints: vec![],
-            tau: 0.0,
-            precision: Precision::F32,
-        }
-    }
-
-    pub fn ficabu(
-        alpha: f64,
-        lambda: f64,
-        schedule: Schedule,
-        checkpoints: Vec<usize>,
-        tau: f64,
-    ) -> UnlearnConfig {
-        UnlearnConfig {
-            alpha,
-            lambda,
-            schedule,
-            checkpoints,
-            tau,
-            precision: Precision::F32,
-        }
-    }
-
     /// Builder: serve forward/eval at the given precision.
     pub fn with_precision(mut self, precision: Precision) -> UnlearnConfig {
         self.precision = precision;
@@ -157,19 +127,273 @@ pub struct UnlearnReport {
     pub precision: Precision,
 }
 
-pub fn make_onehot(labels: &[usize], classes: usize) -> Tensor {
+/// One-hot targets for a label batch; rejects out-of-range labels
+/// instead of writing past the row (the old implementation panicked).
+pub fn make_onehot(labels: &[usize], classes: usize) -> Result<Tensor> {
     let mut t = Tensor::zeros(vec![labels.len(), classes]);
     for (i, &c) in labels.iter().enumerate() {
+        if c >= classes {
+            bail!("label {c} at row {i} out of range ({classes} classes)");
+        }
         t.data[i * classes + c] = 1.0;
     }
-    t
+    Ok(t)
 }
 
-/// Run one unlearning event over a forget batch.
+/// Mutable state of one unlearning pass, threaded through the
+/// [`Strategy`](crate::unlearn::Strategy) stage hooks. Built by
+/// [`run_strategy`]; custom strategies read the public fields and
+/// advance the gradient chain via [`Pass::backprop_microbatch`] (the
+/// chain state itself is private so a stage cannot desynchronize it by
+/// accident — see the stage-1 contract on
+/// [`Strategy::forget_fisher`](crate::unlearn::Strategy::forget_fisher)).
+pub struct Pass<'a> {
+    pub model: &'a Model,
+    pub params: &'a mut ParamStore,
+    pub global: &'a Importance,
+    pub fimd: &'a FimdEngine,
+    pub damp: &'a DampEngine,
+    /// Per-sample forget labels (one per batch row; classes may mix —
+    /// multi-class and sample-level specs land here unchanged).
+    pub labels: &'a [usize],
+    /// Step-0 activation cache: segment inputs + logits, pre-edit.
+    pub cache: ActivationCache,
+    pub report: UnlearnReport,
+    /// Per-microbatch gy chain, advanced by the forget-Fisher stage.
+    gy_state: Vec<Tensor>,
+    /// Hoisted burst buffers reused across microbatches and segments.
+    burst: Vec<f32>,
+    theta: Vec<f32>,
+    fimd_start: (u64, u64),
+    damp_start: (u64, u64),
+}
+
+impl<'a> Pass<'a> {
+    /// Validate the event and run Algorithm 1 Step 0: one cached
+    /// forward pass plus the per-microbatch loss-gradient seeds.
+    #[allow(clippy::too_many_arguments)]
+    fn begin(
+        model: &'a Model,
+        params: &'a mut ParamStore,
+        forget_x: &Tensor,
+        forget_labels: &'a [usize],
+        global: &'a Importance,
+        fimd: &'a FimdEngine,
+        damp: &'a DampEngine,
+        cfg: &UnlearnConfig,
+    ) -> Result<Pass<'a>> {
+        let meta = &model.meta;
+        let big_l = meta.num_segments();
+        let mb_size = meta.microbatch;
+        if forget_x.batch() != meta.batch {
+            bail!("forget batch {} != model batch {}", forget_x.batch(), meta.batch);
+        }
+        if forget_labels.len() != meta.batch {
+            bail!("labels len {} != batch {}", forget_labels.len(), meta.batch);
+        }
+        if cfg.precision == Precision::Int8 && !params.is_quantized() {
+            bail!("int8 unlearning requested on an unquantized store (ParamStore::quantize_int8)");
+        }
+        let num_mb = meta.batch / mb_size;
+
+        let mut report = UnlearnReport {
+            selected_per_depth: vec![0; big_l],
+            precision: cfg.precision,
+            ..Default::default()
+        };
+
+        // --- Step 0: one forward pass, cache every segment input ---------
+        // (int8-served: the forward streams int8 GEMM over the quantized
+        // weights; the cached activations feed the f32 gradient chain)
+        let cache = model.forward_cached_prec(params, forget_x, cfg.precision)?;
+        report.ledger.forward = macs::full_forward_macs(meta, meta.batch);
+        report.act_cache_bytes = cache.bytes();
+
+        // Per-microbatch gradient chain state, seeded at the logits.
+        let onehot = make_onehot(forget_labels, meta.num_classes)?;
+        let mut gy_state: Vec<Tensor> = Vec::with_capacity(num_mb);
+        for mb in 0..num_mb {
+            let logits_mb = cache.microbatch_logits(mb, mb_size)?;
+            let onehot_mb = onehot.slice_batch(mb * mb_size, mb_size)?;
+            gy_state.push(model.loss_grad(&logits_mb, &onehot_mb)?);
+        }
+
+        Ok(Pass {
+            model,
+            params,
+            global,
+            fimd,
+            damp,
+            labels: forget_labels,
+            cache,
+            report,
+            gy_state,
+            burst: Vec::new(),
+            theta: Vec::new(),
+            fimd_start: (fimd.elems_streamed.get(), fimd.pad_elems.get()),
+            damp_start: (damp.elems_streamed.get(), damp.pad_elems.get()),
+        })
+    }
+
+    /// Backpropagate microbatch `mb` through segment `k` and advance
+    /// its gy chain entry, returning the segment's parameter gradients
+    /// (the VJP the default Fisher stage streams).
+    ///
+    /// This is the only way to move the gradient chain, and a stage-1
+    /// override that does not delegate to
+    /// [`stages::forget_fisher`] MUST drive it once per microbatch at
+    /// every depth — otherwise deeper segments would silently see a
+    /// stale chain.
+    pub fn backprop_microbatch(&mut self, k: usize, mb: usize) -> Result<Vec<Tensor>> {
+        let mb_size = self.model.meta.microbatch;
+        let x_mb = self.cache.microbatch_input(k, mb, mb_size)?;
+        let (grads, gx) = self.model.segment_bwd(k, self.params, &x_mb, &self.gy_state[mb])?;
+        self.gy_state[mb] = gx;
+        Ok(grads)
+    }
+
+    fn finish(mut self) -> UnlearnReport {
+        self.report.fimd_elems = self.fimd.elems_streamed.get() - self.fimd_start.0;
+        self.report.fimd_pad_elems = self.fimd.pad_elems.get() - self.fimd_start.1;
+        self.report.damp_elems = self.damp.elems_streamed.get() - self.damp_start.0;
+        self.report.damp_pad_elems = self.damp.pad_elems.get() - self.damp_start.1;
+        self.report
+    }
+}
+
+/// Early-stop controller verdict for one depth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopVerdict {
+    /// Keep editing toward the front-end.
+    Continue,
+    /// Target reached: leave layers l+1..L untouched.
+    Stop,
+}
+
+/// The paper's default stage implementations — the bodies of the
+/// [`Strategy`](crate::unlearn::Strategy) trait's provided methods.
+/// Custom strategies can call these directly for the stages they do
+/// *not* override.
+pub mod stages {
+    use super::*;
+
+    /// Stage 1 — forget-Fisher estimation for depth `l`: stream every
+    /// microbatch's VJP for this segment through the FIMD IP (gradients
+    /// of the *original* parameters — the segment is dampened only
+    /// after its bwd has produced gx) and advance the gy chain.
+    pub fn forget_fisher(pass: &mut Pass<'_>, l: usize) -> Result<Vec<f32>> {
+        let meta = &pass.model.meta;
+        let k = meta.seg_index(l);
+        let num_mb = meta.batch / meta.microbatch;
+        let mut i_df = vec![0.0f32; meta.segments[k].param_count()];
+        let scale = 1.0 / num_mb as f32;
+        for mb in 0..num_mb {
+            let grads = pass.backprop_microbatch(k, mb)?;
+            concat_seg_into(&grads, &mut pass.burst);
+            pass.fimd.accumulate(&mut i_df, &pass.burst, scale)?;
+        }
+        pass.report.ledger.backward += macs::bwd_macs(meta, k, meta.batch);
+        pass.report.ledger.fisher += macs::fisher_macs(meta, k, num_mb);
+        Ok(i_df)
+    }
+
+    /// Stage 2 — Balanced Dampening for depth `l`: scale
+    /// `(alpha, lambda)` by `S(l)`, stream the segment burst through the
+    /// Dampening IP, scatter the edit back, and keep any int8 copies in
+    /// lockstep.
+    pub fn dampen(
+        pass: &mut Pass<'_>,
+        cfg: &UnlearnConfig,
+        l: usize,
+        i_df: &[f32],
+    ) -> Result<DampStats> {
+        let meta = &pass.model.meta;
+        let big_l = meta.num_segments();
+        let k = meta.seg_index(l);
+        let s = cfg.schedule.s(l, big_l);
+        let alpha_l = (cfg.alpha * s) as f32;
+        let lambda_l = (cfg.lambda * s) as f32;
+        concat_seg_into(&pass.params.seg[k], &mut pass.theta);
+        let stats =
+            pass.damp.dampen(&mut pass.theta, i_df, &pass.global.per_seg[k], alpha_l, lambda_l)?;
+        scatter_seg(&pass.theta, &mut pass.params.seg[k])?;
+        // Keep the int8 copies in lockstep with the edited masters —
+        // only the segment the dampening write-back touched. Gated on
+        // the *store* (not cfg.precision) deliberately: an f32-precision
+        // run over an int8-deployed store must still leave the int8
+        // copies valid (evals auto-detect them), at the cost of
+        // re-snapping edits to the grid. For a pure-f32 ablation arm,
+        // run on an unquantized clone of the store.
+        if pass.params.is_quantized() {
+            pass.params.requantize_segment(k);
+        }
+        pass.report.ledger.dampen += macs::dampen_macs(meta, k);
+        pass.report.selected_per_depth[l - 1] = stats.selected;
+        pass.report.segments_edited = l;
+        Ok(stats)
+    }
+
+    /// Stage 3 — Context-Adaptive early stop: at configured checkpoint
+    /// depths, resume partial inference from the cached input of this
+    /// segment through the (now partially dampened) back-end and stop
+    /// once the batch forget accuracy reaches `tau`.
+    pub fn early_stop(pass: &mut Pass<'_>, cfg: &UnlearnConfig, l: usize) -> Result<StopVerdict> {
+        if !cfg.checkpoints.contains(&l) {
+            return Ok(StopVerdict::Continue);
+        }
+        let meta = &pass.model.meta;
+        let k = meta.seg_index(l);
+        let logits =
+            pass.model
+                .partial_forward_prec(pass.params, k, &pass.cache.inputs[k], cfg.precision)?;
+        pass.report.ledger.checkpoint += macs::partial_inference_macs(meta, k, meta.batch);
+        let acc = forget_accuracy(&logits, pass.labels)?;
+        pass.report.checkpoint_trace.push((l, acc));
+        if acc <= cfg.tau {
+            pass.report.stop_depth = Some(l);
+            return Ok(StopVerdict::Stop);
+        }
+        Ok(StopVerdict::Continue)
+    }
+}
+
+/// Run one unlearning event over a forget batch, driving the given
+/// [`Strategy`](crate::unlearn::Strategy) through the stage loop.
 ///
 /// `forget_x` is `[N, ...]` with N = meta.batch; `forget_labels[n]` the
-/// class to forget (per the paper a single class per event). `global` is
-/// the stored `I_D`.
+/// per-sample label to forget (classes may mix within the batch).
+/// `global` is the stored `I_D`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_strategy(
+    model: &Model,
+    params: &mut ParamStore,
+    forget_x: &Tensor,
+    forget_labels: &[usize],
+    global: &Importance,
+    fimd: &FimdEngine,
+    damp: &DampEngine,
+    strategy: &dyn Strategy,
+) -> Result<UnlearnReport> {
+    let cfg = strategy.config();
+    let mut pass =
+        Pass::begin(model, params, forget_x, forget_labels, global, fimd, damp, cfg)?;
+    let big_l = model.meta.num_segments();
+    // --- back-end-first layer loop ---------------------------------------
+    for l in 1..=big_l {
+        let i_df = strategy.forget_fisher(&mut pass, l)?;
+        strategy.dampen(&mut pass, l, &i_df)?;
+        if strategy.early_stop(&mut pass, l)? == StopVerdict::Stop {
+            break;
+        }
+    }
+    Ok(pass.finish())
+}
+
+/// Run one unlearning event with the paper's default stages driven
+/// straight from a config bag (the serving replicas' path: a
+/// [`UnlearnConfig`] travels in a `WorkerSpec`, the strategy is
+/// reconstructed in-thread).
+#[allow(clippy::too_many_arguments)]
 pub fn run_unlearning(
     model: &Model,
     params: &mut ParamStore,
@@ -180,137 +404,49 @@ pub fn run_unlearning(
     damp: &DampEngine,
     cfg: &UnlearnConfig,
 ) -> Result<UnlearnReport> {
-    let meta = &model.meta;
-    let big_l = meta.num_segments();
-    let mb_size = meta.microbatch;
-    if forget_x.batch() != meta.batch {
-        bail!("forget batch {} != model batch {}", forget_x.batch(), meta.batch);
-    }
-    if forget_labels.len() != meta.batch {
-        bail!("labels len {} != batch {}", forget_labels.len(), meta.batch);
-    }
-    if cfg.precision == Precision::Int8 && !params.is_quantized() {
-        bail!("int8 unlearning requested on an unquantized store (ParamStore::quantize_int8)");
-    }
-    let num_mb = meta.batch / mb_size;
-    let fimd_start = fimd.elems_streamed.get();
-    let damp_start = damp.elems_streamed.get();
-    let fimd_pad_start = fimd.pad_elems.get();
-    let damp_pad_start = damp.pad_elems.get();
-
-    let mut report = UnlearnReport {
-        selected_per_depth: vec![0; big_l],
-        precision: cfg.precision,
-        ..Default::default()
-    };
-
-    // --- Step 0: one forward pass, cache every segment input -------------
-    // (int8-served: the forward streams int8 GEMM over the quantized
-    // weights; the cached activations feed the f32 gradient chain)
-    let cache = model.forward_cached_prec(params, forget_x, cfg.precision)?;
-    report.ledger.forward = macs::full_forward_macs(meta, meta.batch);
-    report.act_cache_bytes = cache.bytes();
-
-    // Per-microbatch gradient chain state, seeded at the logits.
-    let onehot = make_onehot(forget_labels, meta.num_classes);
-    let mut gy_state: Vec<Tensor> = Vec::with_capacity(num_mb);
-    for mb in 0..num_mb {
-        let logits_mb = cache.microbatch_logits(mb, mb_size)?;
-        let onehot_mb = onehot.slice_batch(mb * mb_size, mb_size)?;
-        gy_state.push(model.loss_grad(&logits_mb, &onehot_mb)?);
-    }
-
-    // --- back-end-first layer loop ---------------------------------------
-    // Burst buffers hoisted out of the loops: segment gradient bursts
-    // and parameter bursts reuse one allocation across all microbatches
-    // and segments.
-    let mut burst: Vec<f32> = Vec::new();
-    let mut theta: Vec<f32> = Vec::new();
-    for l in 1..=big_l {
-        let k = meta.seg_index(l);
-
-        // Fisher on D_f for this segment (original-parameter gradients:
-        // this segment is dampened only after its bwd has produced gx).
-        let mut i_df = vec![0.0f32; meta.segments[k].param_count()];
-        let scale = 1.0 / num_mb as f32;
-        for mb in 0..num_mb {
-            let x_mb = cache.microbatch_input(k, mb, mb_size)?;
-            let (grads, gx) = model.segment_bwd(k, params, &x_mb, &gy_state[mb])?;
-            concat_seg_into(&grads, &mut burst);
-            fimd.accumulate(&mut i_df, &burst, scale)?;
-            gy_state[mb] = gx;
-        }
-        report.ledger.backward += macs::bwd_macs(meta, k, meta.batch);
-        report.ledger.fisher += macs::fisher_macs(meta, k, num_mb);
-
-        // Balanced Dampening: scale (alpha, lambda) by S(l).
-        let s = cfg.schedule.s(l, big_l);
-        let alpha_l = (cfg.alpha * s) as f32;
-        let lambda_l = (cfg.lambda * s) as f32;
-        concat_seg_into(&params.seg[k], &mut theta);
-        let stats = damp.dampen(&mut theta, &i_df, &global.per_seg[k], alpha_l, lambda_l)?;
-        scatter_seg(&theta, &mut params.seg[k]);
-        // Keep the int8 copies in lockstep with the edited masters —
-        // only the segment the dampening write-back touched. Gated on
-        // the *store* (not cfg.precision) deliberately: an f32-precision
-        // run over an int8-deployed store must still leave the int8
-        // copies valid (evals auto-detect them), at the cost of
-        // re-snapping edits to the grid. For a pure-f32 ablation arm,
-        // run on an unquantized clone of the store.
-        if params.is_quantized() {
-            params.requantize_segment(k);
-        }
-        report.ledger.dampen += macs::dampen_macs(meta, k);
-        report.selected_per_depth[l - 1] = stats.selected;
-        report.segments_edited = l;
-
-        // Checkpoint: partial inference from the cached input of this
-        // segment through the (now partially dampened) back-end.
-        if cfg.checkpoints.contains(&l) {
-            let logits = model.partial_forward_prec(params, k, &cache.inputs[k], cfg.precision)?;
-            report.ledger.checkpoint += macs::partial_inference_macs(meta, k, meta.batch);
-            let acc = forget_accuracy(&logits, forget_labels);
-            report.checkpoint_trace.push((l, acc));
-            if acc <= cfg.tau {
-                report.stop_depth = Some(l);
-                break; // layers l+1..L left untouched
-            }
-        }
-    }
-
-    report.fimd_elems = fimd.elems_streamed.get() - fimd_start;
-    report.damp_elems = damp.elems_streamed.get() - damp_start;
-    report.fimd_pad_elems = fimd.pad_elems.get() - fimd_pad_start;
-    report.damp_pad_elems = damp.pad_elems.get() - damp_pad_start;
-    Ok(report)
+    let strategy = crate::unlearn::Ficabu::from_config(cfg.clone());
+    run_strategy(model, params, forget_x, forget_labels, global, fimd, damp, &strategy)
 }
 
 /// Scatter a segment burst back into its parameter tensors (inverse of
-/// `fisher::concat_seg`).
-pub fn scatter_seg(burst: &[f32], tensors: &mut [Tensor]) {
+/// `fisher::concat_seg`). Rejects a length mismatch instead of silently
+/// truncating (the old implementation only `debug_assert`ed, so a
+/// release build with a short burst would leave the segment tail
+/// stale).
+pub fn scatter_seg(burst: &[f32], tensors: &mut [Tensor]) -> Result<()> {
+    let want: usize = tensors.iter().map(|t| t.len()).sum();
+    if want != burst.len() {
+        bail!("scatter_seg: burst {} != segment params {}", burst.len(), want);
+    }
     let mut off = 0;
     for t in tensors.iter_mut() {
         let n = t.len();
         t.data.copy_from_slice(&burst[off..off + n]);
         off += n;
     }
-    debug_assert_eq!(off, burst.len());
+    Ok(())
 }
 
-/// Batch-mean forget accuracy (Algorithm 1's `partial_inference` readout).
-pub fn forget_accuracy(logits: &Tensor, labels: &[usize]) -> f64 {
+/// Batch-mean forget accuracy (Algorithm 1's `partial_inference`
+/// readout). Errors on an empty or mismatched label set instead of
+/// returning NaN (an empty batch would otherwise poison every
+/// downstream `acc <= tau` comparison as silently-false).
+pub fn forget_accuracy(logits: &Tensor, labels: &[usize]) -> Result<f64> {
+    if labels.is_empty() {
+        bail!("forget_accuracy: empty label set");
+    }
     let preds = logits.argmax_rows();
-    let hits = preds
-        .iter()
-        .zip(labels)
-        .filter(|(p, l)| p == l)
-        .count();
-    hits as f64 / labels.len() as f64
+    if preds.len() != labels.len() {
+        bail!("forget_accuracy: {} logit rows vs {} labels", preds.len(), labels.len());
+    }
+    let hits = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+    Ok(hits as f64 / labels.len() as f64)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::unlearn::{Ficabu, Ssd};
 
     #[test]
     fn default_checkpoint_grids_match_paper() {
@@ -322,37 +458,63 @@ mod tests {
 
     #[test]
     fn onehot_layout() {
-        let t = make_onehot(&[2, 0], 3);
+        let t = make_onehot(&[2, 0], 3).unwrap();
         assert_eq!(t.data, vec![0.0, 0.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn onehot_rejects_out_of_range_label() {
+        let err = make_onehot(&[0, 3], 3).unwrap_err().to_string();
+        assert!(err.contains("label 3"), "got: {err}");
+        // boundary: the last valid label is classes - 1
+        assert!(make_onehot(&[2], 3).is_ok());
     }
 
     #[test]
     fn scatter_roundtrip() {
         let mut ts = vec![Tensor::vec1(vec![0.0; 3]), Tensor::vec1(vec![0.0; 2])];
-        scatter_seg(&[1.0, 2.0, 3.0, 4.0, 5.0], &mut ts);
+        scatter_seg(&[1.0, 2.0, 3.0, 4.0, 5.0], &mut ts).unwrap();
         assert_eq!(ts[0].data, vec![1.0, 2.0, 3.0]);
         assert_eq!(ts[1].data, vec![4.0, 5.0]);
     }
 
     #[test]
-    fn forget_accuracy_counts() {
-        let logits = Tensor::new(vec![2, 3], vec![0.0, 5.0, 0.0, 9.0, 0.0, 0.0]).unwrap();
-        assert_eq!(forget_accuracy(&logits, &[1, 0]), 1.0);
-        assert_eq!(forget_accuracy(&logits, &[1, 2]), 0.5);
+    fn scatter_rejects_length_mismatch() {
+        let mut ts = vec![Tensor::vec1(vec![9.0; 3]), Tensor::vec1(vec![9.0; 2])];
+        // short burst: must error and leave the tensors untouched
+        assert!(scatter_seg(&[1.0, 2.0], &mut ts).is_err());
+        assert!(scatter_seg(&[1.0; 6], &mut ts).is_err());
+        assert_eq!(ts[0].data, vec![9.0; 3]);
+        assert_eq!(ts[1].data, vec![9.0; 2]);
     }
 
     #[test]
-    fn config_modes() {
-        let ssd = UnlearnConfig::ssd(10.0, 1.0);
-        assert!(ssd.checkpoints.is_empty());
-        assert_eq!(ssd.schedule, Schedule::Uniform);
-        let fic = UnlearnConfig::ficabu(
+    fn forget_accuracy_counts() {
+        let logits = Tensor::new(vec![2, 3], vec![0.0, 5.0, 0.0, 9.0, 0.0, 0.0]).unwrap();
+        assert_eq!(forget_accuracy(&logits, &[1, 0]).unwrap(), 1.0);
+        assert_eq!(forget_accuracy(&logits, &[1, 2]).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn forget_accuracy_guards_degenerate_inputs() {
+        let logits = Tensor::new(vec![2, 3], vec![0.0; 6]).unwrap();
+        assert!(forget_accuracy(&logits, &[]).is_err(), "empty labels must not yield NaN");
+        assert!(forget_accuracy(&logits, &[0]).is_err(), "row/label mismatch");
+    }
+
+    #[test]
+    fn strategy_configs_replace_the_constructor_zoo() {
+        let ssd = Ssd::new(10.0, 1.0);
+        assert!(ssd.config().checkpoints.is_empty());
+        assert_eq!(ssd.config().schedule, Schedule::Uniform);
+        let fic = Ficabu::new(
             10.0,
             1.0,
             Schedule::Sigmoid { cm: 5.0, br: 10.0 },
             vec![1, 3],
             0.05,
         );
-        assert!(!fic.checkpoints.is_empty());
+        assert!(!fic.config().checkpoints.is_empty());
+        assert_eq!(fic.config().tau, 0.05);
     }
 }

@@ -1,13 +1,33 @@
-//! The paper's method: SSD substrate + Context-Adaptive Unlearning +
-//! Balanced Dampening, unified in one configurable engine.
+//! The paper's method space: typed forget requests ([`ForgetSpec`])
+//! executed by pluggable [`Strategy`] implementations — SSD substrate,
+//! Context-Adaptive early stop, Balanced Dampening — over one
+//! decomposed stage engine.
+//!
+//! ```
+//! use ficabu::unlearn::{ForgetSpec, Ssd, Strategy};
+//!
+//! // what to forget: typed, canonicalizable, parseable
+//! let spec = ForgetSpec::parse("classes:4,1,4")?;
+//! assert_eq!(spec.canonical(), ForgetSpec::Classes(vec![1, 4]));
+//! assert_eq!(spec.key(), ForgetSpec::Classes(vec![1, 4]).key());
+//!
+//! // how to forget: a strategy over the stage engine
+//! let strategy = Ssd::new(10.0, 1.0);
+//! assert!(strategy.config().checkpoints.is_empty());
+//! # anyhow::Ok(())
+//! ```
 
 pub mod damp;
 pub mod engine;
 pub mod schedule;
+pub mod spec;
+pub mod strategy;
 
 pub use damp::{DampEngine, DampStats};
 pub use engine::{
-    default_checkpoints, forget_accuracy, make_onehot, run_unlearning, UnlearnConfig,
-    UnlearnReport,
+    default_checkpoints, forget_accuracy, make_onehot, run_strategy, run_unlearning, Pass,
+    StopVerdict, UnlearnConfig, UnlearnReport,
 };
 pub use schedule::Schedule;
+pub use spec::{ForgetSpec, SpecKey};
+pub use strategy::{Bd, Cau, Ficabu, Ssd, Strategy};

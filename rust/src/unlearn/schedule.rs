@@ -146,4 +146,74 @@ mod tests {
         // L = 1: S must not NaN
         assert!(Schedule::Sigmoid { cm: 1.0, br: 10.0 }.s(1, 1).is_finite());
     }
+
+    #[test]
+    fn empty_selection_still_yields_a_usable_schedule() {
+        // a failed/skipped SSD calibration pass hands in no per-depth
+        // counts — the fallback must be a finite sigmoid, not a panic
+        let s = Schedule::from_selection_distribution(&[], 10.0);
+        match s {
+            Schedule::Sigmoid { cm, br } => {
+                assert!(cm.is_finite());
+                assert_eq!(br, 10.0);
+            }
+            _ => panic!("expected sigmoid"),
+        }
+        for (l, v) in s.profile(8).iter().enumerate() {
+            assert!(v.is_finite() && *v >= 1.0 - 1e-9, "S({}) = {v}", l + 1);
+        }
+    }
+
+    #[test]
+    fn constant_selection_profile_is_finite() {
+        // all depths equal: smoothed max == min, cm sits mid-array and
+        // the sigmoid still interpolates 1 -> b_r without NaN
+        let s = Schedule::from_selection_distribution(&[7; 10], 10.0);
+        let prof = s.profile(10);
+        assert!(prof.iter().all(|v| v.is_finite()));
+        assert!((prof[0] - 1.0).abs() < 1e-9);
+        assert!((prof[9] - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extreme_br_values() {
+        // b_r = 1: flat profile (BD degenerates to uniform strength)
+        let flat = Schedule::Sigmoid { cm: 5.0, br: 1.0 };
+        for v in flat.profile(12) {
+            assert!((v - 1.0).abs() < 1e-9);
+        }
+        // b_r < 1: *stronger* front-end edits — monotone nonincreasing,
+        // still finite and endpoint-exact
+        let inv = Schedule::Sigmoid { cm: 5.0, br: 0.1 };
+        let prof = inv.profile(12);
+        assert!((prof[0] - 1.0).abs() < 1e-9);
+        assert!((prof[11] - 0.1).abs() < 1e-9);
+        for w in prof.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9);
+        }
+        // huge b_r: no overflow / NaN
+        let big = Schedule::Sigmoid { cm: 5.0, br: 1e12 };
+        assert!(big.profile(12).iter().all(|v| v.is_finite()));
+        assert!((big.s(12, 12) - 1e12).abs() < 1.0);
+    }
+
+    #[test]
+    fn single_segment_model_profile() {
+        // L = 1: sigma(L) == sigma(1) -> the guard returns S = 1
+        let s = Schedule::Sigmoid { cm: 0.5, br: 10.0 };
+        assert_eq!(s.profile(1), vec![1.0]);
+        assert_eq!(Schedule::Uniform.profile(1), vec![1.0]);
+        // calibration from a single-depth selection (< 3 taps branch)
+        let cal = Schedule::from_selection_distribution(&[42], 10.0);
+        match cal {
+            Schedule::Sigmoid { cm, .. } => assert!((cm - 1.0).abs() < 1e-9),
+            _ => panic!("expected sigmoid"),
+        }
+        assert_eq!(cal.profile(1), vec![1.0]);
+    }
+
+    #[test]
+    fn profile_of_zero_segments_is_empty() {
+        assert!(Schedule::Sigmoid { cm: 1.0, br: 10.0 }.profile(0).is_empty());
+    }
 }

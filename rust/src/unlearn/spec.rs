@@ -1,0 +1,330 @@
+//! Typed forget requests: what to unlearn, decoupled from how.
+//!
+//! The paper evaluates single-class events, but real edge deployments
+//! need multi-class and per-example forgetting too (Xia et al., "Edge
+//! Unlearning is Not 'on Edge'!"). [`ForgetSpec`] is the request
+//! grammar every serving surface speaks — [`crate::coordinator`]'s
+//! session/fleet, the CLI (`--forget class:3`, `--forget classes:1,4,7`,
+//! `--forget samples:@file`), and the benches — while the *method* that
+//! executes it stays behind [`crate::unlearn::Strategy`].
+//!
+//! Coalescing in the fleet dispatcher is keyed on [`SpecKey`], the
+//! canonical (sorted, deduped, variant-collapsed) form of a spec plus a
+//! precomputed hash: `classes:4,1,1` and `classes:1,4` are one queue
+//! entry, and `classes:3` is the same request as `class:3`.
+
+use std::fmt;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Dataset;
+
+/// What one unlearning event must forget.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum ForgetSpec {
+    /// Forget one class (the paper's per-event shape).
+    Class(usize),
+    /// Forget several classes in one event.
+    Classes(Vec<usize>),
+    /// Forget specific training samples by dataset index.
+    Samples(Vec<usize>),
+}
+
+impl ForgetSpec {
+    /// Canonical form: id lists sorted and deduped, and a single-class
+    /// `Classes` collapsed to `Class` — two specs describe the same
+    /// request exactly when their canonical forms are equal.
+    pub fn canonical(&self) -> ForgetSpec {
+        let sorted = |ids: &[usize]| {
+            let mut v = ids.to_vec();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        match self {
+            ForgetSpec::Class(c) => ForgetSpec::Class(*c),
+            ForgetSpec::Classes(ids) => {
+                let v = sorted(ids);
+                match v.as_slice() {
+                    [one] => ForgetSpec::Class(*one),
+                    _ => ForgetSpec::Classes(v),
+                }
+            }
+            ForgetSpec::Samples(ids) => ForgetSpec::Samples(sorted(ids)),
+        }
+    }
+
+    /// The dispatcher's coalescing / reply-routing key.
+    pub fn key(&self) -> SpecKey {
+        SpecKey::of(self)
+    }
+
+    /// Parse the CLI grammar: `class:3`, `classes:1,4,7`,
+    /// `samples:0,9,44`, or `samples:@path` (file of whitespace/comma
+    /// separated indices, `#` comments allowed).
+    pub fn parse(s: &str) -> Result<ForgetSpec> {
+        let (tag, body) = s
+            .split_once(':')
+            .with_context(|| format!("forget spec `{s}`: expected `kind:ids`"))?;
+        let ids = |body: &str| -> Result<Vec<usize>> {
+            let v: Vec<usize> = body
+                .split(',')
+                .map(str::trim)
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    t.parse()
+                        .with_context(|| format!("forget spec `{s}`: bad index `{t}`"))
+                })
+                .collect::<Result<_>>()?;
+            if v.is_empty() {
+                bail!("forget spec `{s}`: no indices");
+            }
+            Ok(v)
+        };
+        match tag.trim() {
+            "class" => Ok(ForgetSpec::Class(
+                body.trim()
+                    .parse()
+                    .with_context(|| format!("forget spec `{s}`: bad class id"))?,
+            )),
+            "classes" => Ok(ForgetSpec::Classes(ids(body)?)),
+            "samples" => {
+                let body = body.trim();
+                if let Some(path) = body.strip_prefix('@') {
+                    let text = std::fs::read_to_string(path)
+                        .with_context(|| format!("forget spec `{s}`: reading {path}"))?;
+                    let cleaned: String = text
+                        .lines()
+                        .map(|l| l.split('#').next().unwrap_or(""))
+                        .collect::<Vec<_>>()
+                        .join(",");
+                    Ok(ForgetSpec::Samples(ids(&cleaned.replace(char::is_whitespace, ","))?))
+                } else {
+                    Ok(ForgetSpec::Samples(ids(body)?))
+                }
+            }
+            other => bail!("forget spec `{s}`: unknown kind `{other}` (class | classes | samples)"),
+        }
+    }
+
+    /// Check ids against the serving model/dataset bounds.
+    pub fn validate(&self, num_classes: usize, num_samples: usize) -> Result<()> {
+        match self {
+            ForgetSpec::Class(c) => {
+                if *c >= num_classes {
+                    bail!("forget {self}: class {c} out of range ({num_classes} classes)");
+                }
+            }
+            ForgetSpec::Classes(ids) => {
+                if ids.is_empty() {
+                    bail!("forget {self}: empty class list");
+                }
+                if let Some(c) = ids.iter().find(|&&c| c >= num_classes) {
+                    bail!("forget {self}: class {c} out of range ({num_classes} classes)");
+                }
+            }
+            ForgetSpec::Samples(ids) => {
+                if ids.is_empty() {
+                    bail!("forget {self}: empty sample list");
+                }
+                if let Some(i) = ids.iter().find(|&&i| i >= num_samples) {
+                    bail!("forget {self}: sample {i} out of range ({num_samples} samples)");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The forget set D_f: dataset indices this spec designates.
+    pub fn pool(&self, ds: &Dataset) -> Result<Vec<usize>> {
+        self.validate(ds.num_classes, ds.len())?;
+        let pool = match self.canonical() {
+            ForgetSpec::Class(c) => ds.class_indices(c),
+            ForgetSpec::Classes(ids) => (0..ds.len())
+                .filter(|&i| ids.binary_search(&ds.labels[i]).is_ok())
+                .collect(),
+            ForgetSpec::Samples(ids) => ids,
+        };
+        if pool.is_empty() {
+            bail!("forget {self}: no samples in the dataset match");
+        }
+        Ok(pool)
+    }
+
+    /// The retain set D_r: the complement of [`ForgetSpec::pool`].
+    pub fn retain(&self, ds: &Dataset) -> Result<Vec<usize>> {
+        Ok(Self::retain_of(&self.pool(ds)?, ds.len()))
+    }
+
+    /// The retain complement of an already-computed forget pool —
+    /// callers that hold the [`ForgetSpec::pool`] result avoid a second
+    /// full-dataset scan. `pool` must be sorted (every canonical
+    /// variant's pool is).
+    pub fn retain_of(pool: &[usize], num_samples: usize) -> Vec<usize> {
+        debug_assert!(pool.windows(2).all(|w| w[0] < w[1]), "pool must be sorted/deduped");
+        (0..num_samples).filter(|i| pool.binary_search(i).is_err()).collect()
+    }
+}
+
+impl fmt::Display for ForgetSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let join = |ids: &[usize]| {
+            ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+        };
+        match self {
+            ForgetSpec::Class(c) => write!(f, "class:{c}"),
+            ForgetSpec::Classes(ids) => write!(f, "classes:{}", join(ids)),
+            ForgetSpec::Samples(ids) => write!(f, "samples:{}", join(ids)),
+        }
+    }
+}
+
+/// Canonical queue/coalescing key of a [`ForgetSpec`]: the canonical
+/// spec plus its FNV-1a hash, precomputed so dispatcher queue scans
+/// compare a `u64` first and fall back to the exact spec (no false
+/// coalescing on hash collision).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SpecKey {
+    hash: u64,
+    spec: ForgetSpec,
+}
+
+impl SpecKey {
+    pub fn of(spec: &ForgetSpec) -> SpecKey {
+        let spec = spec.canonical();
+        let (tag, ids): (u64, &[usize]) = match &spec {
+            ForgetSpec::Class(c) => (1, std::slice::from_ref(c)),
+            ForgetSpec::Classes(ids) => (2, ids),
+            ForgetSpec::Samples(ids) => (3, ids),
+        };
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        mix(tag);
+        for &i in ids {
+            mix(i as u64);
+        }
+        SpecKey { hash: h, spec }
+    }
+
+    /// The precomputed FNV-1a hash (also usable as a cheap shard key).
+    pub fn hash64(&self) -> u64 {
+        self.hash
+    }
+
+    /// The canonical spec this key routes.
+    pub fn spec(&self) -> &ForgetSpec {
+        &self.spec
+    }
+}
+
+impl fmt::Display for SpecKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}#{:016x}", self.spec, self.hash)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetCfg;
+
+    fn ds() -> Dataset {
+        let cfg = DatasetCfg { train_per_class: 4, test_per_class: 1, ..DatasetCfg::cifar20() };
+        crate::data::cifar20_like(&cfg).0
+    }
+
+    #[test]
+    fn canonical_sorts_dedupes_and_collapses() {
+        assert_eq!(
+            ForgetSpec::Classes(vec![4, 1, 4, 1]).canonical(),
+            ForgetSpec::Classes(vec![1, 4])
+        );
+        assert_eq!(ForgetSpec::Classes(vec![3, 3]).canonical(), ForgetSpec::Class(3));
+        assert_eq!(
+            ForgetSpec::Samples(vec![9, 2, 9]).canonical(),
+            ForgetSpec::Samples(vec![2, 9])
+        );
+    }
+
+    #[test]
+    fn keys_identify_equivalent_requests() {
+        assert_eq!(ForgetSpec::Classes(vec![4, 1]).key(), ForgetSpec::Classes(vec![1, 4, 4]).key());
+        assert_eq!(ForgetSpec::Classes(vec![7]).key(), ForgetSpec::Class(7).key());
+        assert_ne!(ForgetSpec::Class(1).key(), ForgetSpec::Class(2).key());
+        // same ids, different kind: distinct requests
+        assert_ne!(ForgetSpec::Classes(vec![1, 4]).key(), ForgetSpec::Samples(vec![1, 4]).key());
+    }
+
+    #[test]
+    fn parse_grammar() {
+        assert_eq!(ForgetSpec::parse("class:3").unwrap(), ForgetSpec::Class(3));
+        assert_eq!(
+            ForgetSpec::parse("classes:1,4,7").unwrap(),
+            ForgetSpec::Classes(vec![1, 4, 7])
+        );
+        assert_eq!(
+            ForgetSpec::parse("samples: 0, 9 ,44").unwrap(),
+            ForgetSpec::Samples(vec![0, 9, 44])
+        );
+        assert!(ForgetSpec::parse("class:x").is_err());
+        assert!(ForgetSpec::parse("bogus:1").is_err());
+        assert!(ForgetSpec::parse("classes:").is_err());
+        assert!(ForgetSpec::parse("noseparator").is_err());
+    }
+
+    #[test]
+    fn parse_samples_from_file() {
+        let dir = std::env::temp_dir().join("ficabu_spec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("idx.txt");
+        std::fs::write(&p, "0 5\n9, 12 # keep these\n").unwrap();
+        let spec = ForgetSpec::parse(&format!("samples:@{}", p.display())).unwrap();
+        assert_eq!(spec, ForgetSpec::Samples(vec![0, 5, 9, 12]));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validate_bounds() {
+        assert!(ForgetSpec::Class(19).validate(20, 100).is_ok());
+        assert!(ForgetSpec::Class(20).validate(20, 100).is_err());
+        assert!(ForgetSpec::Classes(vec![]).validate(20, 100).is_err());
+        assert!(ForgetSpec::Samples(vec![99]).validate(20, 100).is_ok());
+        assert!(ForgetSpec::Samples(vec![100]).validate(20, 100).is_err());
+    }
+
+    #[test]
+    fn pools_partition_the_dataset() {
+        let ds = ds();
+        let spec = ForgetSpec::Classes(vec![2, 5]);
+        let pool = spec.pool(&ds).unwrap();
+        assert_eq!(pool.len(), 8, "4 per class x 2 classes");
+        assert!(pool.iter().all(|&i| ds.labels[i] == 2 || ds.labels[i] == 5));
+        let retain = spec.retain(&ds).unwrap();
+        assert_eq!(pool.len() + retain.len(), ds.len());
+        assert!(retain.iter().all(|&i| ds.labels[i] != 2 && ds.labels[i] != 5));
+    }
+
+    #[test]
+    fn sample_pool_is_the_id_list() {
+        let ds = ds();
+        let spec = ForgetSpec::Samples(vec![7, 3, 3]);
+        assert_eq!(spec.pool(&ds).unwrap(), vec![3, 7]);
+        assert_eq!(spec.retain(&ds).unwrap().len(), ds.len() - 2);
+    }
+
+    #[test]
+    fn display_roundtrips_through_parse() {
+        for spec in [
+            ForgetSpec::Class(3),
+            ForgetSpec::Classes(vec![1, 4, 7]),
+            ForgetSpec::Samples(vec![0, 9]),
+        ] {
+            assert_eq!(ForgetSpec::parse(&spec.to_string()).unwrap(), spec);
+        }
+    }
+}

@@ -1,6 +1,6 @@
 //! Dispatcher behavior tests against a mock [`UnlearnService`] — no
-//! model math, so coalescing, shedding, drain, and the stats rollup are
-//! exercised deterministically.
+//! model math, so spec-key coalescing, shedding, drain, and the stats
+//! rollup are exercised deterministically.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -9,20 +9,21 @@ use std::time::Duration;
 use ficabu::coordinator::{
     Fleet, FleetConfig, Pacing, QueueStats, Reply, Summary, Timing, UnlearnService,
 };
+use ficabu::unlearn::ForgetSpec;
 
-/// Mock worker core. Every `unlearn` call announces `(worker, class)` on
+/// Mock worker core. Every `unlearn` call announces `(worker, spec)` on
 /// `started`, then blocks until the test feeds one token through `gate`.
-/// Class 13 fails after the gate (exercises the failure path).
+/// `class:13` fails after the gate (exercises the failure path).
 struct MockService {
     wid: usize,
-    started: Sender<(usize, usize)>,
+    started: Sender<(usize, ForgetSpec)>,
     gate: Arc<Mutex<Receiver<()>>>,
-    log: Arc<Mutex<Vec<(usize, usize)>>>,
+    log: Arc<Mutex<Vec<(usize, ForgetSpec)>>>,
 }
 
-fn mock_summary(class: usize) -> Summary {
+fn mock_summary(spec: &ForgetSpec) -> Summary {
     Summary {
-        class,
+        spec: spec.clone(),
         forget_acc: 0.0,
         retain_acc: 1.0,
         stop_depth: Some(1),
@@ -35,25 +36,25 @@ fn mock_summary(class: usize) -> Summary {
 }
 
 impl UnlearnService for MockService {
-    fn unlearn(&mut self, class: usize) -> anyhow::Result<Summary> {
-        let _ = self.started.send((self.wid, class));
+    fn unlearn(&mut self, spec: &ForgetSpec) -> anyhow::Result<Summary> {
+        let _ = self.started.send((self.wid, spec.clone()));
         self.gate
             .lock()
             .unwrap()
             .recv()
             .map_err(|_| anyhow::anyhow!("gate closed"))?;
-        self.log.lock().unwrap().push((self.wid, class));
-        if class == 13 {
+        self.log.lock().unwrap().push((self.wid, spec.clone()));
+        if *spec == ForgetSpec::Class(13) {
             anyhow::bail!("boom on class 13");
         }
-        Ok(mock_summary(class))
+        Ok(mock_summary(spec))
     }
 }
 
 struct Rig {
-    started: Receiver<(usize, usize)>,
+    started: Receiver<(usize, ForgetSpec)>,
     tokens: Sender<()>,
-    log: Arc<Mutex<Vec<(usize, usize)>>>,
+    log: Arc<Mutex<Vec<(usize, ForgetSpec)>>>,
 }
 
 /// Build a fleet of mock workers plus the test-side controls.
@@ -75,9 +76,10 @@ fn mock_fleet(cfg: FleetConfig) -> (Fleet, Rig) {
     (fleet, Rig { started: started_rx, tokens: token_tx, log })
 }
 
-fn executions_of(rig: &Rig, class: usize) -> usize {
+fn executions_of(rig: &Rig, spec: &ForgetSpec) -> usize {
+    let key = spec.key();
     let log = rig.log.lock().unwrap();
-    log.iter().filter(|(_, c)| *c == class).count()
+    log.iter().filter(|(_, s)| s.key() == key).count()
 }
 
 const STARTED_TIMEOUT: Duration = Duration::from_secs(10);
@@ -93,34 +95,38 @@ fn coalescing_fans_out_one_execution() {
     });
 
     // Occupy the single worker so subsequent submissions stay queued.
-    let rx7 = fleet.submit(7);
-    let (w, c) = rig.started.recv_timeout(STARTED_TIMEOUT).unwrap();
-    assert_eq!((w, c), (0, 7));
+    let rx7 = fleet.submit(ForgetSpec::Class(7));
+    let (w, s) = rig.started.recv_timeout(STARTED_TIMEOUT).unwrap();
+    assert_eq!((w, s), (0, ForgetSpec::Class(7)));
 
     // k identical requests while the worker is busy: the first opens a
     // queue entry, the other four coalesce onto it.
-    let dup_rxs: Vec<_> = (0..5).map(|_| fleet.submit(3)).collect();
+    let dup_rxs: Vec<_> = (0..5).map(|_| fleet.submit(ForgetSpec::Class(3))).collect();
 
     // Two tokens: finish class 7, then the single coalesced class-3 run.
     rig.tokens.send(()).unwrap();
     rig.tokens.send(()).unwrap();
 
     match rx7.recv().unwrap() {
-        Reply::Done(s) => assert_eq!(s.class, 7),
+        Reply::Done(s) => assert_eq!(s.spec, ForgetSpec::Class(7)),
         other => panic!("class 7: unexpected reply {other:?}"),
     }
     for rx in dup_rxs {
         match rx.recv().unwrap() {
             Reply::Done(s) => {
                 // every coalesced requester gets the same execution
-                assert_eq!(s.class, 3);
+                assert_eq!(s.spec, ForgetSpec::Class(3));
                 assert!(s.timing.service_ms >= 0.0);
             }
             other => panic!("class 3: unexpected reply {other:?}"),
         }
     }
-    assert_eq!(executions_of(&rig, 3), 1, "5 duplicate requests -> 1 execution");
-    assert_eq!(executions_of(&rig, 7), 1);
+    assert_eq!(
+        executions_of(&rig, &ForgetSpec::Class(3)),
+        1,
+        "5 duplicate requests -> 1 execution"
+    );
+    assert_eq!(executions_of(&rig, &ForgetSpec::Class(7)), 1);
 
     let stats = fleet.shutdown().unwrap();
     assert_eq!(stats.admitted, 2);
@@ -128,6 +134,56 @@ fn coalescing_fans_out_one_execution() {
     let total = stats.merged();
     assert_eq!(total.served, 2);
     assert_eq!(total.failures, 0);
+}
+
+#[test]
+fn equivalent_specs_coalesce_across_variants() {
+    let (fleet, rig) = mock_fleet(FleetConfig {
+        workers: 1,
+        queue_cap: 8,
+        deadline: None,
+        batch_max: 1,
+        pacing: Pacing::Host,
+    });
+
+    // Stall the worker so everything below queues.
+    let rx0 = fleet.submit(ForgetSpec::Class(0));
+    rig.started.recv_timeout(STARTED_TIMEOUT).unwrap();
+
+    // One canonical multi-class event, requested three different ways.
+    let rx_a = fleet.submit(ForgetSpec::Classes(vec![4, 1]));
+    let rx_b = fleet.submit(ForgetSpec::Classes(vec![1, 4, 4]));
+    // A single-id Classes collapses onto the equivalent Class entry...
+    let rx_c = fleet.submit(ForgetSpec::Class(9));
+    let rx_d = fleet.submit(ForgetSpec::Classes(vec![9]));
+    // ...but the same ids as *samples* are a distinct request.
+    let rx_e = fleet.submit(ForgetSpec::Samples(vec![1, 4]));
+
+    // 4 executions total: class 0, classes{1,4}, class 9, samples{1,4}.
+    for _ in 0..4 {
+        rig.tokens.send(()).unwrap();
+    }
+    for (rx, want) in [
+        (rx0, ForgetSpec::Class(0)),
+        (rx_a, ForgetSpec::Classes(vec![1, 4])),
+        (rx_b, ForgetSpec::Classes(vec![1, 4])),
+        (rx_c, ForgetSpec::Class(9)),
+        (rx_d, ForgetSpec::Class(9)),
+        (rx_e, ForgetSpec::Samples(vec![1, 4])),
+    ] {
+        match rx.recv().unwrap() {
+            Reply::Done(s) => assert_eq!(s.spec, want, "summary routes the canonical spec"),
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert_eq!(executions_of(&rig, &ForgetSpec::Classes(vec![1, 4])), 1);
+    assert_eq!(executions_of(&rig, &ForgetSpec::Class(9)), 1);
+    assert_eq!(executions_of(&rig, &ForgetSpec::Samples(vec![1, 4])), 1);
+
+    let stats = fleet.shutdown().unwrap();
+    assert_eq!(stats.admitted, 4);
+    assert_eq!(stats.coalesced, 2);
+    assert_eq!(stats.merged().served, 4);
 }
 
 #[test]
@@ -141,13 +197,13 @@ fn bounded_queue_sheds_with_backpressure() {
     });
 
     // Stall the worker on class 0; fill the queue with classes 1 and 2.
-    let rx0 = fleet.submit(0);
+    let rx0 = fleet.submit(ForgetSpec::Class(0));
     rig.started.recv_timeout(STARTED_TIMEOUT).unwrap();
-    let rx1 = fleet.submit(1);
-    let rx2 = fleet.submit(2);
+    let rx1 = fleet.submit(ForgetSpec::Class(1));
+    let rx2 = fleet.submit(ForgetSpec::Class(2));
 
-    // The queue is full: a distinct class is shed immediately.
-    let rx3 = fleet.submit(3);
+    // The queue is full: a distinct spec is shed immediately.
+    let rx3 = fleet.submit(ForgetSpec::Class(3));
     match rx3.recv_timeout(Duration::from_secs(1)).unwrap() {
         Reply::Backpressure { queue_len, queue_cap } => {
             assert_eq!(queue_len, 2);
@@ -155,9 +211,9 @@ fn bounded_queue_sheds_with_backpressure() {
         }
         other => panic!("expected backpressure, got {other:?}"),
     }
-    // ... but a duplicate of a *queued* class still coalesces: the
+    // ... but an equivalent of a *queued* spec still coalesces: the
     // queue doesn't grow, so coalescing beats shedding under overload.
-    let rx1b = fleet.submit(1);
+    let rx1b = fleet.submit(ForgetSpec::Classes(vec![1]));
 
     for _ in 0..3 {
         rig.tokens.send(()).unwrap();
@@ -187,17 +243,17 @@ fn shutdown_drains_deterministically() {
     });
 
     // Pre-feed tokens so workers never block; submit six distinct
-    // classes and shut down immediately: every admitted request must
+    // specs and shut down immediately: every admitted request must
     // still be answered before the workers exit.
     for _ in 0..6 {
         rig.tokens.send(()).unwrap();
     }
-    let rxs: Vec<_> = (0..6).map(|c| fleet.submit(c)).collect();
+    let rxs: Vec<_> = (0..6).map(|c| fleet.submit(ForgetSpec::Class(c))).collect();
     let stats = fleet.shutdown().unwrap();
 
     for (c, rx) in rxs.into_iter().enumerate() {
         match rx.recv().unwrap() {
-            Reply::Done(s) => assert_eq!(s.class, c),
+            Reply::Done(s) => assert_eq!(s.spec, ForgetSpec::Class(c)),
             other => panic!("class {c}: unexpected reply {other:?}"),
         }
     }
@@ -228,9 +284,10 @@ fn stalled_worker_deadline_sheds_expired_entries() {
 
     // Stall the worker, then queue a request with a deadline it cannot
     // meet while stalled.
-    let rx0 = fleet.submit(0);
+    let rx0 = fleet.submit(ForgetSpec::Class(0));
     rig.started.recv_timeout(STARTED_TIMEOUT).unwrap();
-    let rx1 = fleet.submit_with_deadline(1, Some(Duration::from_millis(5)));
+    let rx1 =
+        fleet.submit_with_deadline(ForgetSpec::Class(1), Some(Duration::from_millis(5)));
     std::thread::sleep(Duration::from_millis(30));
 
     // Unstall: class 0 completes; class 1 is claimed past its deadline
@@ -244,7 +301,11 @@ fn stalled_worker_deadline_sheds_expired_entries() {
         Reply::Expired { missed_by_ms } => assert!(missed_by_ms > 0.0),
         other => panic!("expected expired, got {other:?}"),
     }
-    assert_eq!(executions_of(&rig, 1), 0, "shed requests never execute");
+    assert_eq!(
+        executions_of(&rig, &ForgetSpec::Class(1)),
+        0,
+        "shed requests never execute"
+    );
 
     let stats = fleet.shutdown().unwrap();
     let total = stats.merged();
@@ -268,11 +329,11 @@ fn failed_requests_reply_and_count_into_timing() {
 
     rig.tokens.send(()).unwrap();
     rig.tokens.send(()).unwrap();
-    let rx_ok = fleet.submit(2);
-    let rx_bad = fleet.submit(13); // mock fails on 13
+    let rx_ok = fleet.submit(ForgetSpec::Class(2));
+    let rx_bad = fleet.submit(ForgetSpec::Class(13)); // mock fails on 13
 
     match rx_ok.recv().unwrap() {
-        Reply::Done(s) => assert_eq!(s.class, 2),
+        Reply::Done(s) => assert_eq!(s.spec, ForgetSpec::Class(2)),
         other => panic!("unexpected reply {other:?}"),
     }
     match rx_bad.recv().unwrap() {
@@ -311,7 +372,7 @@ fn worker_startup_failure_fails_fast() {
 struct NeverService;
 
 impl UnlearnService for NeverService {
-    fn unlearn(&mut self, _class: usize) -> anyhow::Result<Summary> {
+    fn unlearn(&mut self, _spec: &ForgetSpec) -> anyhow::Result<Summary> {
         unreachable!("never dispatched")
     }
 }

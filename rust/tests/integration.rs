@@ -16,7 +16,7 @@ use ficabu::model::macs::ssd_ledger;
 use ficabu::model::{Model, ParamStore};
 use ficabu::runtime::Runtime;
 use ficabu::unlearn::{
-    default_checkpoints, make_onehot, run_unlearning, Schedule, UnlearnConfig,
+    default_checkpoints, make_onehot, run_strategy, Bd, Cau, Schedule, Ssd,
 };
 use ficabu::util::prng::Pcg32;
 
@@ -56,9 +56,8 @@ fn ssd_mode_ledger_matches_analytic_ssd_ledger() {
         g.floor(1.0); // uniform global importance
         g
     };
-    let cfg = UnlearnConfig::ssd(10.0, 1.0);
-    let report = run_unlearning(
-        &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp, &cfg,
+    let report = run_strategy(
+        &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp, &Ssd::new(10.0, 1.0),
     )
     .unwrap();
     // SSD (no checkpoints) must edit every segment and cost exactly the
@@ -77,14 +76,14 @@ fn early_stop_leaves_front_end_untouched() {
     let before = c.params.clone();
     let (x, labels) = forget_batch(&meta, 2, 3);
     // tau = 1.0 -> first checkpoint always satisfies the target
-    let cfg = UnlearnConfig::cau(10.0, 1.0, vec![1], 1.0);
     let global = {
         let mut g = Importance::zeros_like(&meta);
         g.floor(1e-6);
         g
     };
-    let report = run_unlearning(
-        &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp, &cfg,
+    let report = run_strategy(
+        &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp,
+        &Cau::new(10.0, 1.0, vec![1], 1.0),
     )
     .unwrap();
     assert_eq!(report.stop_depth, Some(1));
@@ -108,9 +107,9 @@ fn balanced_dampening_weakens_front_end_edits() {
         let (x, labels) = forget_batch(&meta, 1, 7);
         let mut global = Importance::zeros_like(&meta);
         global.floor(1e-6);
-        let cfg = UnlearnConfig::bd(1.0, 1.0, schedule);
-        run_unlearning(
-            &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp, &cfg,
+        run_strategy(
+            &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp,
+            &Bd::new(1.0, 1.0, schedule),
         )
         .unwrap()
         .selected_per_depth
@@ -138,9 +137,9 @@ fn unlearning_is_deterministic() {
         let (x, labels) = forget_batch(&meta, 4, 11);
         let mut global = Importance::zeros_like(&meta);
         global.floor(1e-6);
-        let cfg = UnlearnConfig::ssd(5.0, 1.0);
-        run_unlearning(
-            &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp, &cfg,
+        run_strategy(
+            &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp,
+            &Ssd::new(5.0, 1.0),
         )
         .unwrap();
         c.params.seg[9][0].data.clone()
@@ -156,9 +155,8 @@ fn dampening_never_increases_magnitude() {
     let (x, labels) = forget_batch(&meta, 0, 13);
     let mut global = Importance::zeros_like(&meta);
     global.floor(1e-6);
-    let cfg = UnlearnConfig::ssd(1.0, 0.5);
-    run_unlearning(
-        &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp, &cfg,
+    run_strategy(
+        &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp, &Ssd::new(1.0, 0.5),
     )
     .unwrap();
     for (sb, sa) in before.seg.iter().zip(&c.params.seg) {
@@ -191,15 +189,14 @@ fn hwsim_costs_track_ledger_scale() {
     let mut global = Importance::zeros_like(&meta);
     global.floor(1e-6);
     // full SSD run vs head-only run
-    let full = run_unlearning(
-        &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp,
-        &UnlearnConfig::ssd(10.0, 1.0),
+    let full = run_strategy(
+        &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp, &Ssd::new(10.0, 1.0),
     )
     .unwrap();
     let mut c2 = ctx("rn18slim");
-    let head_only = run_unlearning(
+    let head_only = run_strategy(
         &c2.model, &mut c2.params, &x, &labels, &global, &c2.fimd, &c2.damp,
-        &UnlearnConfig::cau(10.0, 1.0, vec![1], 1.0),
+        &Cau::new(10.0, 1.0, vec![1], 1.0),
     )
     .unwrap();
     let fic = FicabuProcessor::new(meta.tile, Precision::Int8);
@@ -224,7 +221,7 @@ fn train_step_then_unlearn_composes() {
     for _ in 0..3 {
         let idx = rng.choose_k(train.len(), meta.batch);
         let (x, labels) = train.batch(&idx, meta.batch);
-        let onehot = make_onehot(&labels, meta.num_classes);
+        let onehot = make_onehot(&labels, meta.num_classes).unwrap();
         let loss = c.model.train_step(&mut c.params, &x, &onehot, 0.05).unwrap();
         assert!(loss.is_finite());
     }
@@ -232,9 +229,9 @@ fn train_step_then_unlearn_composes() {
     let mut global = Importance::zeros_like(&meta);
     global.floor(1e-6);
     let cps = default_checkpoints(meta.num_segments(), 2);
-    let report = run_unlearning(
+    let report = run_strategy(
         &c.model, &mut c.params, &x, &labels, &global, &c.fimd, &c.damp,
-        &UnlearnConfig::cau(10.0, 1.0, cps, 0.05),
+        &Cau::new(10.0, 1.0, cps, 0.05),
     )
     .unwrap();
     assert!(report.segments_edited >= 1);

@@ -1,0 +1,168 @@
+//! End-to-end coverage of the typed request surface: multi-class and
+//! sample-level `ForgetSpec`s through `UnlearnSession` (builder +
+//! `forget` + `serve_sequential`) and through the `Fleet` dispatcher
+//! with spec-key coalescing — on untrained builtin models so the suite
+//! stays fast and deterministic.
+
+use ficabu::config::{ModelMeta, SharedMeta};
+use ficabu::coordinator::{
+    Fleet, FleetConfig, Pacing, Reply, UnlearnSession, WorkerSpec,
+};
+use ficabu::data::{cifar20_like, Dataset, DatasetCfg};
+use ficabu::fisher::Importance;
+use ficabu::model::{Model, ParamStore};
+use ficabu::runtime::{Precision, Runtime};
+use ficabu::unlearn::{Cau, ForgetSpec, Ssd, Strategy};
+
+fn train_set() -> Dataset {
+    let cfg = DatasetCfg { train_per_class: 4, test_per_class: 1, ..DatasetCfg::cifar20() };
+    cifar20_like(&cfg).0
+}
+
+fn session(strategy: impl Strategy + 'static, seed: u64) -> UnlearnSession {
+    let rt = Runtime::cpu().unwrap();
+    let meta = ModelMeta::builtin("rn18slim").unwrap();
+    let model = Model::load(&rt, meta.clone()).unwrap();
+    let params = ParamStore::init(&meta, seed);
+    let mut global = Importance::zeros_like(&meta);
+    global.floor(1e-6);
+    UnlearnSession::builder()
+        .model(model)
+        .params(params)
+        .global(global)
+        .train(train_set())
+        .strategy(strategy)
+        .seed(seed)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn session_forgets_a_multi_class_spec() {
+    // alpha = 1 over the 1e-6 importance floor selects aggressively, so
+    // the "parameters changed" assertion below is unambiguous
+    let mut s = session(Ssd::new(1.0, 1.0), 42);
+    let before = s.params.clone();
+    let spec = ForgetSpec::Classes(vec![3, 1, 3]); // unsorted + dup on purpose
+    let sm = s.forget(&spec).unwrap();
+    assert_eq!(sm.spec, ForgetSpec::Classes(vec![1, 3]), "summary carries the canonical spec");
+    assert!(sm.stop_depth.is_none(), "SSD has no early stop");
+    assert!((0.0..=1.0).contains(&sm.forget_acc));
+    assert!((0.0..=1.0).contains(&sm.retain_acc));
+    assert!(sm.macs_vs_ssd_pct > 0.0 && sm.sim_energy_mj > 0.0);
+    // the event actually edited the store
+    let edited = before
+        .seg
+        .iter()
+        .zip(&s.params.seg)
+        .any(|(a, b)| a.iter().zip(b).any(|(ta, tb)| ta.data != tb.data));
+    assert!(edited, "multi-class event must dampen parameters");
+}
+
+#[test]
+fn session_forgets_a_sample_spec() {
+    let meta = ModelMeta::builtin("rn18slim").unwrap();
+    let mut s = session(Cau::new(10.0, 1.0, vec![1], 1.0), 7);
+    // erase four specific samples of class 2 (tau = 1.0 stops at l = 1,
+    // keeping the test cheap)
+    let pool: Vec<usize> = s.train.class_indices(2).into_iter().take(4).collect();
+    let sm = s.forget(&ForgetSpec::Samples(pool.clone())).unwrap();
+    assert_eq!(sm.spec, ForgetSpec::Samples(pool));
+    assert_eq!(sm.stop_depth, Some(1));
+    // only the head segment may differ from a fresh init
+    let fresh = ParamStore::init(&meta, 7);
+    for k in 0..meta.num_segments() - 1 {
+        for (a, b) in fresh.seg[k].iter().zip(&s.params.seg[k]) {
+            assert_eq!(a.data, b.data, "segment {k} modified despite depth-1 stop");
+        }
+    }
+}
+
+#[test]
+fn session_rejects_invalid_specs() {
+    let mut s = session(Ssd::new(10.0, 1.0), 11);
+    let n_classes = s.model.meta.num_classes;
+    let n_samples = s.train.len();
+    assert!(s.forget(&ForgetSpec::Class(n_classes)).is_err());
+    assert!(s.forget(&ForgetSpec::Classes(vec![])).is_err());
+    assert!(s.forget(&ForgetSpec::Classes(vec![0, n_classes])).is_err());
+    assert!(s.forget(&ForgetSpec::Samples(vec![n_samples])).is_err());
+}
+
+#[test]
+fn serve_sequential_times_every_spec() {
+    let mut s = session(Cau::new(10.0, 1.0, vec![1], 1.0), 23);
+    let pool: Vec<usize> = s.train.class_indices(4).into_iter().take(3).collect();
+    let out = s.serve_sequential([
+        ForgetSpec::Class(0),
+        ForgetSpec::Classes(vec![2, 5]),
+        ForgetSpec::Samples(pool),
+    ]);
+    assert_eq!(out.len(), 3);
+    for r in &out {
+        let sm = r.as_ref().expect("sequential serving succeeds");
+        assert!(sm.timing.service_ms >= 0.0);
+    }
+    // a bad request reports, not panics, and later requests still run
+    let out = s.serve_sequential([ForgetSpec::Class(999), ForgetSpec::Class(1)]);
+    assert!(out[0].is_err());
+    assert!(out[1].is_ok());
+}
+
+#[test]
+fn fleet_serves_spec_diversity_with_coalescing() {
+    let meta = ModelMeta::builtin("rn18slim").unwrap();
+    let train = train_set();
+    let mut global = Importance::zeros_like(&meta);
+    global.floor(1e-6);
+    let sample_pool: Vec<usize> = train.class_indices(6).into_iter().take(3).collect();
+    let spec = WorkerSpec {
+        meta: meta.clone(),
+        shared: SharedMeta::builtin(),
+        params: ParamStore::init(&meta, 5),
+        global,
+        train,
+        // tau = 1.0 + head checkpoint: every event stops at depth 1
+        cfg: Cau::new(10.0, 1.0, vec![1], 1.0).into_config(),
+        precision: Precision::F32,
+    };
+    let fleet = Fleet::start(
+        spec,
+        FleetConfig {
+            workers: 1, // single worker: the queue backs up, so equal keys coalesce
+            queue_cap: 16,
+            deadline: None,
+            batch_max: 2,
+            pacing: Pacing::Host,
+        },
+    )
+    .unwrap();
+
+    let submissions = [
+        ForgetSpec::Class(0),
+        ForgetSpec::Classes(vec![4, 1]),
+        ForgetSpec::Classes(vec![1, 4, 4]), // coalesces with the line above (if still queued)
+        ForgetSpec::Samples(sample_pool.clone()),
+        ForgetSpec::Samples(sample_pool),
+    ];
+    let rxs: Vec<_> = submissions.iter().cloned().map(|s| fleet.submit(s)).collect();
+    for (sub, rx) in submissions.iter().zip(rxs) {
+        match rx.recv().unwrap() {
+            Reply::Done(sm) => {
+                assert_eq!(sm.spec, sub.canonical(), "reply routed by canonical key");
+                assert_eq!(sm.stop_depth, Some(1));
+            }
+            other => panic!("{sub}: unexpected reply {other:?}"),
+        }
+    }
+    let stats = fleet.shutdown().unwrap();
+    let total = stats.merged();
+    assert_eq!(
+        total.served + stats.coalesced,
+        5,
+        "every request executed or coalesced (served {}, coalesced {})",
+        total.served,
+        stats.coalesced
+    );
+    assert_eq!(total.failures, 0);
+}

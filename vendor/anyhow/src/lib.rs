@@ -59,7 +59,8 @@ impl fmt::Debug for Error {
                 write!(f, "\n    {i}: {cause}")?;
             }
         }
-        Ok(())
+        // qualified: the crate-root `Ok` helper shadows the prelude here
+        std::result::Result::Ok(())
     }
 }
 
@@ -77,6 +78,14 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
 
 /// `anyhow::Result<T>` — `std::result::Result` with [`Error`] as default.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Equivalent of `Ok(value)` with the error type pinned to
+/// [`Error`] — mirrors `anyhow::Ok`, which makes `?`-using doc tests
+/// and closures inferable without a turbofish.
+#[allow(non_snake_case)]
+pub fn Ok<T>(t: T) -> Result<T> {
+    Result::Ok(t)
+}
 
 /// Extension trait adding `.context(...)` / `.with_context(...)` to
 /// `Result` and `Option`.
@@ -178,6 +187,15 @@ mod tests {
         let e = base.with_context(|| "outer").unwrap_err();
         assert_eq!(format!("{e:#}"), "outer: root 42");
         assert_eq!(e.root_cause(), "root 42");
+    }
+
+    #[test]
+    fn ok_helper_pins_the_error_type() {
+        fn f() -> Result<u32> {
+            let v = crate::Ok(41)?;
+            crate::Ok(v + 1)
+        }
+        assert_eq!(f().unwrap(), 42);
     }
 
     #[test]
