@@ -16,7 +16,10 @@ validate FILE
       --min-speedup (default 1.5 — conservative for small CI runners;
       the acceptance target on dev boxes is >= 2x). At least one
       serve/spec-* arm (ForgetSpec diversity through the fleet) must
-      exist and cover all three spec shapes.
+      exist and cover all three spec shapes. The HTTP front-end must
+      stay benched: a serve/http-loopback/workers=* socket arm plus the
+      parse-lazy / parse-tree pair, with the lazy path scanner at or
+      below the full tree parser on min_ms.
 
 compare BASELINE CURRENT
     Fail when any case present in both files regressed by more than
@@ -122,9 +125,26 @@ def _check_serve(cases, path, min_speedup):
                 f"{path}: serve/spec-mix must serve every spec shape "
                 f"({field} = {mix.get(field)!r})"
             )
+    # HTTP front-end arms: the wire path and its parsing split must stay
+    # benched — a socket arm over loopback plus the lazy-vs-tree pair
+    if not any(n.startswith("serve/http-loopback/workers=") for n in cases):
+        _fail(f"{path}: no serve/http-loopback/workers=* arm "
+              "(HTTP front-end unbenched)")
+    for name in ("serve/http-loopback/parse-lazy",
+                 "serve/http-loopback/parse-tree"):
+        if name not in cases:
+            _fail(f"{path}: missing case {name!r}")
+    lazy = cases["serve/http-loopback/parse-lazy"]["min_ms"]
+    tree = cases["serve/http-loopback/parse-tree"]["min_ms"]
+    if lazy > tree:
+        _fail(
+            f"{path}: lazy path scan ({lazy:.3f} ms) slower than the full "
+            f"tree parse ({tree:.3f} ms) — laziness stopped paying"
+        )
     print(
         f"serve guardrail OK: paced 4v1 speedup {speedup:.2f}x, "
-        f"{len(spec_arms)} spec arm(s)"
+        f"{len(spec_arms)} spec arm(s), lazy scan "
+        f"{tree / max(lazy, 1e-9):.1f}x faster than tree parse"
     )
 
 

@@ -5,12 +5,45 @@
 //! with fan-out replies, sheds load when the bounded queue fills, and
 //! rolls per-worker latency histograms up into fleet statistics.
 //!
+//! Part two puts the *same* fleet on the wire: an HTTP/1.1 front-end is
+//! bound on a loopback port and driven by a hand-rolled socket client —
+//! the JSON request/response contracts (`POST /forget`, `GET /stats`,
+//! `GET /healthz`) end to end, including a 400 for an out-of-range spec.
+//!
 //! Run: `cargo run --release --example edge_serving`
 
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
 use ficabu::config::SharedMeta;
-use ficabu::coordinator::{Fleet, FleetConfig, Pacing, Reply, WorkerSpec};
+use ficabu::coordinator::{
+    Fleet, FleetConfig, HttpConfig, HttpServer, Pacing, Reply, WorkerSpec,
+};
 use ficabu::exp::{self, tables::mode_config, DatasetKind, Mode, PrepareOpts};
 use ficabu::unlearn::ForgetSpec;
+use ficabu::util::json::Json;
+
+/// Minimal one-shot HTTP client: one connection per request
+/// (`Connection: close`), returns the status code and parsed JSON body.
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> anyhow::Result<(u16, Json)> {
+    let mut s = TcpStream::connect(addr)?;
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nhost: edge\r\nconnection: close\r\n\
+         content-length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut text = String::new();
+    s.read_to_string(&mut text)?;
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| anyhow::anyhow!("malformed status line in `{text}`"))?
+        .parse()?;
+    let payload = text.split("\r\n\r\n").nth(1).unwrap_or("").trim();
+    Ok((status, Json::parse(payload)?))
+}
 
 fn main() -> anyhow::Result<()> {
     let prep = exp::prepare(
@@ -19,6 +52,8 @@ fn main() -> anyhow::Result<()> {
         &PrepareOpts::default(),
     )?;
     let cfg = mode_config(&prep, Mode::Ficabu, None);
+    let num_classes = prep.model.meta.num_classes;
+    let num_samples = prep.train.len();
     let erased_samples: Vec<usize> = prep.train.class_indices(9).into_iter().take(6).collect();
     let spec = WorkerSpec {
         meta: prep.model.meta.clone(),
@@ -29,7 +64,7 @@ fn main() -> anyhow::Result<()> {
         cfg,
         precision: prep.precision,
     };
-    let fleet = Fleet::start(
+    let fleet = Arc::new(Fleet::start(
         spec,
         FleetConfig {
             workers: 2,
@@ -38,7 +73,7 @@ fn main() -> anyhow::Result<()> {
             batch_max: 2,
             pacing: Pacing::Host,
         },
-    )?;
+    )?);
 
     println!("=== edge serving: 3 clients x 2 forget requests on a 2-worker fleet ===\n");
 
@@ -94,7 +129,66 @@ fn main() -> anyhow::Result<()> {
         }
         Ok(())
     })?;
+    assert_eq!(ok, 6, "all requests must succeed");
 
+    println!("\n=== over the wire: HTTP front-end on the same fleet ===\n");
+    let srv = HttpServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&fleet),
+        HttpConfig { bounds: Some((num_classes, num_samples)), ..HttpConfig::default() },
+    )?;
+    let addr = srv.local_addr();
+
+    let (status, j) = http(addr, "GET", "/healthz", "")?;
+    println!("GET  /healthz          -> {status} {j}");
+    assert_eq!(status, 200);
+
+    // the CLI grammar as a JSON string...
+    let (status, j) = http(addr, "POST", "/forget", r#"{"spec": "classes:3,5"}"#)?;
+    let sm = j.req("summary")?;
+    println!(
+        "POST /forget classes:3,5 -> {status} spec={} Df {:.1}% service {:.0} ms",
+        sm.req("spec")?.as_str().unwrap_or("?"),
+        100.0 * sm.req("forget_acc")?.as_f64().unwrap_or(f64::NAN),
+        sm.req("service_ms")?.as_f64().unwrap_or(f64::NAN),
+    );
+    assert_eq!(status, 200);
+
+    // ...and the structured object form, with a per-request deadline
+    let (status, j) = http(
+        addr,
+        "POST",
+        "/forget",
+        r#"{"spec": {"class": 7}, "deadline_ms": 600000}"#,
+    )?;
+    println!(
+        "POST /forget class:7     -> {status} code={}",
+        j.req("code")?.as_str().unwrap_or("?")
+    );
+    assert_eq!(status, 200);
+
+    // out-of-range spec: rejected at admission with a machine-readable 400
+    let (status, j) = http(addr, "POST", "/forget", r#"{"spec": "class:9999"}"#)?;
+    println!(
+        "POST /forget class:9999  -> {status} code={} ({})",
+        j.req("code")?.as_str().unwrap_or("?"),
+        j.req("error")?.as_str().unwrap_or("?")
+    );
+    assert_eq!(status, 400);
+
+    let (status, j) = http(addr, "GET", "/stats", "")?;
+    let rollup = j.req("rollup")?;
+    println!(
+        "GET  /stats              -> {status} served={} service_p99_ms={:.0}",
+        rollup.req("served")?.as_i64().unwrap_or(-1),
+        rollup.req("service_p99_ms")?.as_f64().unwrap_or(f64::NAN),
+    );
+    assert_eq!(status, 200);
+
+    srv.shutdown();
+    let fleet = Arc::try_unwrap(fleet)
+        .ok()
+        .expect("http shutdown releases every fleet handle");
     let stats = fleet.shutdown()?;
     let total = stats.merged();
     println!(
@@ -108,9 +202,9 @@ fn main() -> anyhow::Result<()> {
         total.service_hist.p50_ms(),
         total.service_hist.p99_ms()
     );
-    assert_eq!(ok, 6, "all requests must succeed");
-    // 6 requests, every one either executed or coalesced onto one
-    assert_eq!(total.served + stats.coalesced, 6);
+    // 6 in-process requests + 2 wire executions, every one either
+    // executed or coalesced onto one (the 400 never reached the queue)
+    assert_eq!(total.served + stats.coalesced, 8);
     println!("edge serving OK");
     Ok(())
 }

@@ -20,18 +20,32 @@
 //!   single-class, multi-class, and sample-level `ForgetSpec`s through
 //!   the fleet (host-paced; the single-class paced arms above remain
 //!   the regression-gated scaling story).
+//! * `serve/http-loopback/workers=2` — the wire path: the same paced
+//!   fleet behind the HTTP/1.1 front-end, driven by socket clients over
+//!   loopback. Paced like `serve/paced/*`, so it is stable enough to
+//!   ride the regression gate.
+//! * `serve/http-loopback/parse-lazy` vs `.../parse-tree` — request-body
+//!   field extraction: the lazy path scanner (`util::json::scan`) against
+//!   the full tree parser on realistic wire bodies. CI's validate step
+//!   asserts lazy stays at or below tree.
 //!
 //! `FICABU_BENCH_PRESET=smoke` shrinks the request counts for CI.
 
 mod harness;
 
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
 use std::time::Instant;
 
 use ficabu::config::SharedMeta;
-use ficabu::coordinator::{Fleet, FleetConfig, Pacing, Reply, WorkerSpec};
+use ficabu::coordinator::{
+    Fleet, FleetConfig, HttpConfig, HttpServer, Pacing, Reply, WorkerSpec,
+};
 use ficabu::exp::tables::mode_config;
 use ficabu::exp::{self, DatasetKind, Mode, Prepared, PrepareOpts};
 use ficabu::unlearn::ForgetSpec;
+use ficabu::util::json::{scan, Json};
 use harness::Bench;
 
 const ART: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
@@ -96,20 +110,11 @@ fn run_arm(
     let stats = fleet.shutdown()?;
     let total = stats.merged();
     let rps = done as f64 / (wall_ms / 1e3);
-    b.record_case(
-        name,
-        requests,
-        wall_ms,
-        wall_ms / requests as f64,
-        &[
-            ("rps", rps),
-            ("workers", workers as f64),
-            ("queue_p50_ms", total.queue_hist.p50_ms()),
-            ("queue_p99_ms", total.queue_hist.p99_ms()),
-            ("service_p50_ms", total.service_hist.p50_ms()),
-            ("service_p99_ms", total.service_hist.p99_ms()),
-        ],
-    );
+    // percentile_fields() is the shared naming authority: these are the
+    // same field names `GET /stats` serves and `Summary::to_json` feeds
+    let mut extras = vec![("rps", rps), ("workers", workers as f64)];
+    extras.extend(total.percentile_fields());
+    b.record_case(name, requests, wall_ms, wall_ms / requests as f64, &extras);
     Ok(rps)
 }
 
@@ -214,26 +219,162 @@ fn run_spec_mix(
         by_kind.iter().all(|&n| n > 0),
         "spec-mix must serve every spec shape, got {by_kind:?}"
     );
-    b.record_case(
-        "serve/spec-mix",
-        requests,
-        wall_ms,
-        wall_ms / requests as f64,
-        &[
-            ("rps", requests as f64 / (wall_ms / 1e3)),
-            ("workers", 2.0),
-            ("class_replies", by_kind[0] as f64),
-            ("classes_replies", by_kind[1] as f64),
-            ("samples_replies", by_kind[2] as f64),
-            ("service_p50_ms", total.service_hist.p50_ms()),
-            ("service_p99_ms", total.service_hist.p99_ms()),
-        ],
-    );
+    let mut extras = vec![
+        ("rps", requests as f64 / (wall_ms / 1e3)),
+        ("workers", 2.0),
+        ("class_replies", by_kind[0] as f64),
+        ("classes_replies", by_kind[1] as f64),
+        ("samples_replies", by_kind[2] as f64),
+    ];
+    extras.extend(total.percentile_fields());
+    b.record_case("serve/spec-mix", requests, wall_ms, wall_ms / requests as f64, &extras);
     println!(
         "[serve] spec-mix: {requests} requests ({} class / {} classes / {} samples replies)",
         by_kind[0], by_kind[1], by_kind[2]
     );
     Ok(())
+}
+
+/// Minimal one-shot HTTP client: one connection per request
+/// (`Connection: close`); returns the status code and raw body text.
+fn http_round(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> anyhow::Result<(u16, String)> {
+    let mut s = TcpStream::connect(addr)?;
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nhost: bench\r\nconnection: close\r\n\
+         content-length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut text = String::new();
+    s.read_to_string(&mut text)?;
+    let status = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|t| t.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("malformed status line in `{text}`"))?;
+    let payload = text.split("\r\n\r\n").nth(1).unwrap_or("").trim().to_string();
+    Ok((status, payload))
+}
+
+/// Wire arm: the paced fleet behind the HTTP front-end, driven over
+/// loopback sockets — one connection per request, `2 * workers` client
+/// threads so the fleet (not the socket layer) stays the bottleneck.
+fn run_http_arm(
+    b: &Bench,
+    prep: &Prepared,
+    shared: &SharedMeta,
+    workers: usize,
+    requests: usize,
+    pacing: Pacing,
+) -> anyhow::Result<()> {
+    let num_classes = prep.model.meta.num_classes;
+    let fleet = Arc::new(Fleet::start(
+        spec_for(prep, shared),
+        FleetConfig {
+            workers,
+            queue_cap: requests + 4,
+            deadline: None,
+            batch_max: 1,
+            pacing,
+        },
+    )?);
+    let clients = (workers * 2).clamp(1, requests.max(1));
+    let srv = HttpServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&fleet),
+        HttpConfig { threads: clients, ..HttpConfig::default() },
+    )?;
+    let addr = srv.local_addr();
+    let t0 = Instant::now();
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            joins.push(s.spawn(move || -> anyhow::Result<()> {
+                for i in (c..requests).step_by(clients) {
+                    let body = format!(r#"{{"spec": "class:{}"}}"#, i % num_classes);
+                    let (status, reply) = http_round(addr, "POST", "/forget", &body)?;
+                    anyhow::ensure!(status == 200, "http-loopback: status {status} ({reply})");
+                }
+                Ok(())
+            }));
+        }
+        for j in joins {
+            j.join().expect("client thread")?;
+        }
+        Ok(())
+    })?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    srv.shutdown();
+    let fleet = Arc::try_unwrap(fleet).ok().expect("http shutdown releases fleet handles");
+    let stats = fleet.shutdown()?;
+    let total = stats.merged();
+    anyhow::ensure!(
+        total.served as usize + stats.coalesced as usize == requests,
+        "every wire request must be executed or coalesced"
+    );
+    let mut extras = vec![
+        ("rps", requests as f64 / (wall_ms / 1e3)),
+        ("workers", workers as f64),
+        ("clients", clients as f64),
+    ];
+    extras.extend(total.percentile_fields());
+    b.record_case(
+        &format!("serve/http-loopback/workers={workers}"),
+        requests,
+        wall_ms,
+        wall_ms / requests as f64,
+        &extras,
+    );
+    Ok(())
+}
+
+/// Request-body field extraction micro-arms: the lazy path scanner vs
+/// the full tree parser over a batch of realistic wire bodies (control
+/// fields first, then a bulky telemetry payload the admission path
+/// never needs — exactly what laziness skips).
+fn run_parse_arms(b: &Bench) {
+    let bodies: Vec<String> = (0..256)
+        .map(|i| {
+            let trace: Vec<String> =
+                (0..48).map(|t| ((i * 31 + t * 7) % 1000).to_string()).collect();
+            format!(
+                r#"{{"spec": "classes:{},{}", "deadline_ms": {}, "client": "edge-{:03}", "trace": [{}]}}"#,
+                i % 10,
+                (i + 3) % 10,
+                50 + (i % 200),
+                i,
+                trace.join(",")
+            )
+        })
+        .collect();
+    let iters = 40;
+    let lazy_ms = b.bench("serve/http-loopback/parse-lazy", iters, || {
+        let mut sum = 0.0;
+        for body in &bodies {
+            let spec = scan::path(body, &["spec"]).unwrap().unwrap();
+            sum += spec.text().len() as f64;
+            sum += scan::path_f64(body, &["deadline_ms"]).unwrap().unwrap();
+        }
+        sum
+    });
+    let tree_ms = b.bench("serve/http-loopback/parse-tree", iters, || {
+        let mut sum = 0.0;
+        for body in &bodies {
+            let j = Json::parse(body).unwrap();
+            sum += j.get("spec").unwrap().as_str().unwrap().len() as f64;
+            sum += j.get("deadline_ms").unwrap().as_f64().unwrap();
+        }
+        sum
+    });
+    println!(
+        "[serve] lazy path scan vs full tree parse: {:.1}x",
+        tree_ms / lazy_ms.max(1e-9)
+    );
 }
 
 fn main() -> anyhow::Result<()> {
@@ -314,6 +455,12 @@ fn main() -> anyhow::Result<()> {
 
     // --- spec-diversity arm (ForgetSpec grammar through the fleet)
     run_spec_mix(&b, &prep, &shared, if smoke { 6 } else { 12 })?;
+
+    // --- wire path: paced fleet behind the HTTP front-end over loopback
+    run_http_arm(&b, &prep, &shared, 2, if smoke { 6 } else { 12 }, paced)?;
+
+    // --- request-body parsing: lazy path scan vs full tree parse
+    run_parse_arms(&b);
 
     b.write_json(OUT_JSON)?;
     println!("wrote {OUT_JSON}");

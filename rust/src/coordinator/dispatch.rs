@@ -33,6 +33,7 @@
 //! the threads exit.
 
 use std::collections::VecDeque;
+use std::fmt;
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -47,6 +48,7 @@ use crate::fisher::Importance;
 use crate::model::ParamStore;
 use crate::runtime::Precision;
 use crate::unlearn::{ForgetSpec, SpecKey, UnlearnConfig};
+use crate::util::json::Json;
 
 /// Outcome of one submitted request.
 #[derive(Debug, Clone)]
@@ -61,6 +63,58 @@ pub enum Reply {
     /// Shed at claim time: the deadline had already passed.
     Expired { missed_by_ms: f64 },
 }
+
+impl Reply {
+    /// Stable machine-readable discriminant — the one contract shared by
+    /// HTTP response bodies, CLI output, and the serving benches.
+    pub fn code(&self) -> &'static str {
+        match self {
+            Reply::Done(_) => "done",
+            Reply::Failed(_) => "failed",
+            Reply::Backpressure { .. } => "backpressure",
+            Reply::Expired { .. } => "expired",
+        }
+    }
+
+    /// Wire body of this reply: `code` plus the variant's payload
+    /// (`summary` for `done`, `error` for `failed`, queue occupancy for
+    /// `backpressure`, `missed_by_ms` for `expired`).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("code", Json::from(self.code()))];
+        match self {
+            Reply::Done(s) => fields.push(("summary", s.to_json())),
+            Reply::Failed(e) => fields.push(("error", Json::string(e.clone()))),
+            Reply::Backpressure { queue_len, queue_cap } => {
+                fields.push(("queue_len", Json::from(*queue_len)));
+                fields.push(("queue_cap", Json::from(*queue_cap)));
+            }
+            Reply::Expired { missed_by_ms } => {
+                fields.push(("missed_by_ms", Json::from(*missed_by_ms)));
+            }
+        }
+        Json::obj(fields)
+    }
+}
+
+impl fmt::Display for Reply {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Reply::Done(s) => write!(f, "done ({})", s.spec),
+            Reply::Failed(e) => write!(f, "failed: {e}"),
+            Reply::Backpressure { queue_len, queue_cap } => {
+                write!(f, "backpressure: queue {queue_len}/{queue_cap} — retry later")
+            }
+            Reply::Expired { missed_by_ms } => {
+                write!(f, "expired: deadline missed by {missed_by_ms:.0} ms")
+            }
+        }
+    }
+}
+
+/// Every non-`Done` reply is a serving error a caller may want to
+/// propagate with `?` — `Error` makes `Err(reply.into())` and
+/// `anyhow::Error::from(reply)` work without a bespoke error type.
+impl std::error::Error for Reply {}
 
 /// Worker pacing policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -146,6 +200,21 @@ impl FleetStats {
             total.merge(w);
         }
         total
+    }
+
+    /// Wire form served by `GET /stats`: admission counters, the merged
+    /// rollup, and the per-worker breakdown — the same field names
+    /// `bench_serve` records.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::from(self.workers)),
+            ("admitted", Json::from(self.admitted as usize)),
+            ("coalesced", Json::from(self.coalesced as usize)),
+            ("shed_backpressure", Json::from(self.shed_backpressure as usize)),
+            ("queue_depth", Json::from(self.queue_depth)),
+            ("rollup", self.merged().to_json()),
+            ("per_worker", Json::Arr(self.per_worker.iter().map(QueueStats::to_json).collect())),
+        ])
     }
 }
 

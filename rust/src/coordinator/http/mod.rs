@@ -1,0 +1,282 @@
+//! Wire-facing serving API: a zero-dependency HTTP/1.1 front-end on the
+//! [`Fleet`].
+//!
+//! The paper's deployment story puts the unlearning engine on an edge
+//! device that *other* software talks to; this module is that boundary.
+//! No hyper/tokio — the offline vendor tree carries no async stack, and
+//! a blocking [`TcpListener`] pool is the right size for a device that
+//! serves forget requests, not web traffic:
+//!
+//! ```text
+//!  clients ──► TcpListener ──► accept pool (threads × serve_connection)
+//!                                   │  proto::read_request (framed)
+//!                                   ▼
+//!                              routes::handle ──► Fleet::submit ──► Reply
+//!                                   │                 (blocking recv)
+//!                                   ▼
+//!               proto::Response (status from Reply::code, JSON body)
+//! ```
+//!
+//! Endpoints and status mapping live in `routes`; message framing in
+//! `proto`. Each accept thread serves its connection synchronously
+//! (keep-alive included), so `threads` is the concurrent-connection cap
+//! — admission control stays the fleet's job ([`Reply::Backpressure`] →
+//! 429), the HTTP layer never queues.
+//!
+//! Shutdown is deliberate: [`HttpServer::shutdown`] flips the stop flag,
+//! force-closes every registered live connection (unblocking reads
+//! mid-keep-alive), wakes the accept threads with dummy connections, and
+//! joins — so a fleet owner can always regain sole ownership of its
+//! `Arc<Fleet>` afterwards.
+//!
+//! [`Reply::Backpressure`]: crate::coordinator::Reply::Backpressure
+
+mod proto;
+mod routes;
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::dispatch::Fleet;
+
+pub use routes::Bounds;
+
+/// HTTP front-end tuning. `Default` = 2 accept threads, 64 KiB bodies,
+/// no spec bounds (validation deferred to execution).
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Accept-pool size = concurrent-connection cap.
+    pub threads: usize,
+    /// Request body cap; larger bodies answer 413.
+    pub max_body_bytes: usize,
+    /// `(num_classes, num_samples)` to validate specs against at
+    /// admission, so out-of-range requests 400 instead of occupying a
+    /// queue slot to fail.
+    pub bounds: Bounds,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig { threads: 2, max_body_bytes: 64 * 1024, bounds: None }
+    }
+}
+
+/// Shared server state: what a connection needs to serve and what
+/// shutdown needs to interrupt it.
+struct ServerState {
+    fleet: Arc<Fleet>,
+    cfg: HttpConfig,
+    stop: AtomicBool,
+    /// Live connections by id — `try_clone` handles kept so shutdown can
+    /// force-close sockets whose accept thread is blocked in a read.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    next_conn: AtomicU64,
+}
+
+/// The running HTTP front-end. Bind with [`HttpServer::bind`], stop with
+/// [`HttpServer::shutdown`]; dropping without shutdown also stops the
+/// pool (so a panicking test does not leak accept threads).
+pub struct HttpServer {
+    state: Arc<ServerState>,
+    addr: SocketAddr,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:8787`, port `0` for ephemeral) and
+    /// start the accept pool over `fleet`.
+    pub fn bind(addr: &str, fleet: Arc<Fleet>, cfg: HttpConfig) -> Result<HttpServer> {
+        anyhow::ensure!(cfg.threads >= 1, "http config: threads must be >= 1");
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding http listener on {addr}"))?;
+        let local = listener.local_addr()?;
+        let state = Arc::new(ServerState {
+            fleet,
+            cfg,
+            stop: AtomicBool::new(false),
+            conns: Mutex::new(HashMap::new()),
+            next_conn: AtomicU64::new(0),
+        });
+        let mut handles = Vec::with_capacity(state.cfg.threads);
+        for tid in 0..state.cfg.threads {
+            let st = Arc::clone(&state);
+            let l = listener.try_clone()?;
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("ficabu-http-{tid}"))
+                    .spawn(move || accept_loop(&st, &l))?,
+            );
+        }
+        Ok(HttpServer { state, addr: local, handles })
+    }
+
+    /// The bound address (resolves port `0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, force-close live connections, join the pool. The
+    /// fleet is *not* shut down — it outlives its front-end.
+    pub fn shutdown(mut self) {
+        self.stop();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    fn stop(&self) {
+        self.state.stop.store(true, Ordering::SeqCst);
+        // Unblock reads first (connections registered after this sweep
+        // observe the stop flag before their first read — see
+        // serve_connection), then unblock the accepts.
+        for (_, conn) in self.state.conns.lock().unwrap().drain() {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+        for _ in 0..self.handles.len() {
+            let _ = TcpStream::connect(self.addr);
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        if !self.handles.is_empty() {
+            self.stop();
+            for h in self.handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn accept_loop(st: &ServerState, listener: &TcpListener) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            // Transient (ECONNABORTED etc.): keep accepting — unless the
+            // server is stopping, where an error may mean the listener
+            // itself is gone.
+            Err(_) => {
+                if st.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if st.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // Socket errors are per-connection: drop it, keep accepting.
+        let _ = serve_connection(st, stream);
+        if st.stop.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+}
+
+/// Serve one connection until close: register it for shutdown, then
+/// request/response until the peer closes, errors, opts out of
+/// keep-alive, or the server stops.
+fn serve_connection(st: &ServerState, stream: TcpStream) -> std::io::Result<()> {
+    let id = st.next_conn.fetch_add(1, Ordering::Relaxed);
+    st.conns.lock().unwrap().insert(id, stream.try_clone()?);
+    let out = serve_requests(st, stream);
+    st.conns.lock().unwrap().remove(&id);
+    out
+}
+
+fn serve_requests(st: &ServerState, mut stream: TcpStream) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    loop {
+        // Ordering with `stop()`: the registry sweep happens *after* the
+        // flag is set, so either this load sees the stop or the sweep
+        // sees the registered socket and unblocks the read below.
+        if st.stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let req = match proto::read_request(&mut reader, st.cfg.max_body_bytes) {
+            Ok(None) => return Ok(()),
+            Ok(Some(r)) => r,
+            Err(proto::ProtoError::Bad(msg)) => {
+                let resp = routes::error(400, "bad_request", msg, None);
+                return resp.write_to(&mut stream, false);
+            }
+            Err(proto::ProtoError::TooLarge { limit }) => {
+                let msg = format!("body exceeds {limit} bytes");
+                let resp = routes::error(413, "payload_too_large", msg, None);
+                return resp.write_to(&mut stream, false);
+            }
+            Err(proto::ProtoError::Io(e)) => return Err(e),
+        };
+        let keep_alive = req.keep_alive() && !st.stop.load(Ordering::SeqCst);
+        let resp = routes::handle(&req, &st.fleet, st.cfg.bounds);
+        resp.write_to(&mut stream, keep_alive)?;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Request/response behavior over a real socket (including shutdown
+    // mid-connection and backpressure) lives in tests/http_e2e.rs; here
+    // we pin the lifecycle basics that don't need a client.
+    use super::*;
+    use crate::coordinator::queue::Timing;
+    use crate::coordinator::{FleetConfig, Summary, UnlearnService};
+    use crate::unlearn::ForgetSpec;
+
+    struct Echo;
+    impl UnlearnService for Echo {
+        fn unlearn(&mut self, spec: &ForgetSpec) -> Result<Summary> {
+            Ok(Summary {
+                spec: spec.clone(),
+                forget_acc: 0.0,
+                retain_acc: 1.0,
+                stop_depth: None,
+                macs_vs_ssd_pct: 10.0,
+                sim_energy_mj: 1.0,
+                sim_energy_vs_ssd_pct: 8.0,
+                sim_ms: 0.0,
+                timing: Timing { queue_ms: 0.0, service_ms: 0.0 },
+            })
+        }
+    }
+
+    #[test]
+    fn binds_ephemeral_and_shuts_down() {
+        let fleet = Arc::new(Fleet::start_with(FleetConfig::default(), |_| Ok(Echo)).unwrap());
+        let srv = HttpServer::bind("127.0.0.1:0", Arc::clone(&fleet), HttpConfig::default())
+            .unwrap();
+        assert_ne!(srv.local_addr().port(), 0);
+        srv.shutdown();
+        // the front-end released its fleet handles: we are the sole owner
+        let fleet = Arc::try_unwrap(fleet).ok().expect("server retained fleet handles");
+        fleet.shutdown().unwrap();
+    }
+
+    #[test]
+    fn rejects_zero_threads() {
+        let fleet = Arc::new(Fleet::start_with(FleetConfig::default(), |_| Ok(Echo)).unwrap());
+        let cfg = HttpConfig { threads: 0, ..HttpConfig::default() };
+        assert!(HttpServer::bind("127.0.0.1:0", fleet, cfg).is_err());
+    }
+
+    #[test]
+    fn drop_without_shutdown_stops_the_pool() {
+        let fleet = Arc::new(Fleet::start_with(FleetConfig::default(), |_| Ok(Echo)).unwrap());
+        {
+            let _srv =
+                HttpServer::bind("127.0.0.1:0", Arc::clone(&fleet), HttpConfig::default())
+                    .unwrap();
+        }
+        assert!(Arc::try_unwrap(fleet).is_ok());
+    }
+}

@@ -1,0 +1,325 @@
+//! HTTP/1.1 message framing over std I/O — no hyper, no tokio.
+//!
+//! The subset a forget-request endpoint needs: request line + headers +
+//! `Content-Length` bodies in, status line + headers + body out, with
+//! keep-alive. Chunked transfer encoding is rejected (411/400), header
+//! and body sizes are capped, and all parsing is byte-exact so malformed
+//! requests fail with a reason instead of hanging the connection.
+
+use std::io::{BufRead, Read, Write};
+
+/// Cap on the request head (request line + headers).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// How much of an over-limit body is drained before answering 413.
+/// Closing a socket with unread bytes in its receive buffer resets the
+/// connection, which can discard the un-flushed response; draining what
+/// the client already sent (bounded — an abusive declared length still
+/// just closes) lets the 413 reach the peer.
+const MAX_DRAIN_BYTES: usize = 256 * 1024;
+
+/// One parsed request. Header names are lowercased on ingest; the
+/// target keeps its raw form (`/forget`, `/stats?verbose=1`, ...).
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub target: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header with this (lowercase) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// The target's path component (query string stripped).
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or(&self.target)
+    }
+
+    /// Keep-alive semantics: HTTP/1.1 defaults to persistent unless the
+    /// client sent `Connection: close`.
+    pub fn keep_alive(&self) -> bool {
+        !matches!(self.header("connection"), Some(v) if v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Framing failure while reading one request.
+#[derive(Debug)]
+pub enum ProtoError {
+    /// Malformed head or body framing — answer 400 and close.
+    Bad(String),
+    /// Body exceeds the configured cap — answer 413 and close.
+    TooLarge { limit: usize },
+    /// Socket error or EOF mid-message — just drop the connection.
+    Io(std::io::Error),
+}
+
+impl From<std::io::Error> for ProtoError {
+    fn from(e: std::io::Error) -> ProtoError {
+        ProtoError::Io(e)
+    }
+}
+
+/// Read one request off the connection. `Ok(None)` on clean EOF before
+/// any request bytes (the peer closed an idle keep-alive connection).
+pub fn read_request(
+    r: &mut impl BufRead,
+    max_body_bytes: usize,
+) -> Result<Option<Request>, ProtoError> {
+    let line = match read_line(r, true)? {
+        None => return Ok(None),
+        Some(l) => l,
+    };
+    let mut parts = line.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) => (m.to_string(), t.to_string(), v),
+        _ => return Err(ProtoError::Bad(format!("malformed request line `{line}`"))),
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(ProtoError::Bad(format!("unsupported version `{version}`")));
+    }
+    let mut headers = Vec::new();
+    let mut head_bytes = line.len();
+    loop {
+        let line = match read_line(r, false)? {
+            None => return Err(ProtoError::Io(std::io::ErrorKind::UnexpectedEof.into())),
+            Some(l) => l,
+        };
+        if line.is_empty() {
+            break;
+        }
+        head_bytes += line.len();
+        if head_bytes > MAX_HEAD_BYTES {
+            return Err(ProtoError::Bad(format!("request head exceeds {MAX_HEAD_BYTES} bytes")));
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| ProtoError::Bad(format!("malformed header `{line}`")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let find = |name: &str| headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str());
+    if find("transfer-encoding").is_some() {
+        return Err(ProtoError::Bad("chunked transfer encoding is not supported".to_string()));
+    }
+    let body = match find("content-length") {
+        None => Vec::new(),
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| ProtoError::Bad(format!("bad content-length `{v}`")))?;
+            if n > max_body_bytes {
+                let drain = n.min(MAX_DRAIN_BYTES) as u64;
+                let _ = std::io::copy(&mut r.by_ref().take(drain), &mut std::io::sink());
+                return Err(ProtoError::TooLarge { limit: max_body_bytes });
+            }
+            let mut buf = vec![0u8; n];
+            r.read_exact(&mut buf)?;
+            buf
+        }
+    };
+    Ok(Some(Request { method, target, headers, body }))
+}
+
+/// Read one CRLF-terminated line (tolerating bare LF). `Ok(None)` on
+/// EOF; when `eof_ok_at_start` is false an EOF before any byte is still
+/// `None` and the caller decides.
+fn read_line(r: &mut impl BufRead, _eof_ok_at_start: bool) -> Result<Option<String>, ProtoError> {
+    let mut buf = Vec::with_capacity(64);
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(ProtoError::Io(std::io::ErrorKind::UnexpectedEof.into()));
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                    return Ok(Some(String::from_utf8(buf).map_err(|_| {
+                        ProtoError::Bad("non-UTF-8 bytes in request head".to_string())
+                    })?));
+                }
+                if buf.len() > MAX_HEAD_BYTES {
+                    return Err(ProtoError::Bad(format!(
+                        "header line exceeds {MAX_HEAD_BYTES} bytes"
+                    )));
+                }
+                buf.push(byte[0]);
+            }
+            Err(e) => return Err(ProtoError::Io(e)),
+        }
+    }
+}
+
+/// One response, written with `Content-Length` framing.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(&'static str, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A JSON response with `Content-Type: application/json`.
+    pub fn json(status: u16, body: &crate::util::json::Json) -> Response {
+        let mut text = String::new();
+        body.write(&mut text);
+        text.push('\n');
+        Response {
+            status,
+            headers: vec![("content-type", "application/json".to_string())],
+            body: text.into_bytes(),
+        }
+    }
+
+    /// Add a header (chainable).
+    pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Response {
+        self.headers.push((name, value.into()));
+        self
+    }
+
+    /// Serialize onto the socket. `keep_alive` controls the
+    /// `Connection` header; the caller closes the stream accordingly.
+    pub fn write_to(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
+        let mut head = format!("HTTP/1.1 {} {}\r\n", self.status, reason(self.status));
+        for (k, v) in &self.headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str(&format!("content-length: {}\r\n", self.body.len()));
+        head.push_str(if keep_alive {
+            "connection: keep-alive\r\n\r\n"
+        } else {
+            "connection: close\r\n\r\n"
+        });
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Reason phrase for every status this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::io::BufReader;
+
+    fn req(raw: &str) -> Result<Option<Request>, ProtoError> {
+        read_request(&mut BufReader::new(raw.as_bytes()), 1024)
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let r = req(
+            "POST /forget HTTP/1.1\r\nHost: x\r\nContent-Length: 18\r\n\r\n{\"spec\":\"class:3\"}",
+        );
+        let r = r.unwrap().unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path(), "/forget");
+        assert_eq!(r.header("host"), Some("x"));
+        assert_eq!(std::str::from_utf8(&r.body).unwrap(), "{\"spec\":\"class:3\"}");
+        assert!(r.keep_alive());
+    }
+
+    #[test]
+    fn exact_content_length_and_query_split() {
+        let body = r#"{"spec":"class:3"}"#;
+        let raw = format!(
+            "POST /forget?src=test HTTP/1.1\r\ncontent-length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let r = req(&raw).unwrap().unwrap();
+        assert_eq!(r.path(), "/forget");
+        assert_eq!(std::str::from_utf8(&r.body).unwrap(), body);
+        assert!(!r.keep_alive());
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(req("").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_heads_are_bad_requests() {
+        assert!(matches!(req("GET\r\n\r\n"), Err(ProtoError::Bad(_))));
+        assert!(matches!(req("GET / HTTP/2\r\n\r\n"), Err(ProtoError::Bad(_))));
+        assert!(matches!(
+            req("GET / HTTP/1.1\r\nno-colon-here\r\n\r\n"),
+            Err(ProtoError::Bad(_))
+        ));
+        assert!(matches!(
+            req("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(ProtoError::Bad(_))
+        ));
+        assert!(matches!(
+            req("POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n"),
+            Err(ProtoError::Bad(_))
+        ));
+    }
+
+    #[test]
+    fn oversized_bodies_are_too_large() {
+        let r = req("POST / HTTP/1.1\r\nContent-Length: 99999\r\n\r\n");
+        assert!(matches!(r, Err(ProtoError::TooLarge { limit: 1024 })));
+        // an over-limit body that already arrived is drained, so the 413
+        // can be written before the socket closes without a reset
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: 2000\r\n\r\n{}", "x".repeat(2000));
+        let mut rd = BufReader::new(raw.as_bytes());
+        assert!(matches!(read_request(&mut rd, 1024), Err(ProtoError::TooLarge { limit: 1024 })));
+        let mut rest = Vec::new();
+        rd.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "drained {} of 2000 body bytes", 2000 - rest.len());
+    }
+
+    #[test]
+    fn truncated_body_is_io_error() {
+        let r = req("POST / HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort");
+        assert!(matches!(r, Err(ProtoError::Io(_))));
+    }
+
+    #[test]
+    fn bare_lf_lines_are_tolerated() {
+        let r = req("GET /healthz HTTP/1.1\nhost: y\n\n").unwrap().unwrap();
+        assert_eq!(r.path(), "/healthz");
+        assert_eq!(r.header("host"), Some("y"));
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let resp = Response::json(429, &Json::obj(vec![("code", Json::from("backpressure"))]))
+            .with_header("retry-after", "1");
+        let mut out = Vec::new();
+        resp.write_to(&mut out, false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("content-type: application/json\r\n"));
+        assert!(text.contains("retry-after: 1\r\n"));
+        assert!(text.contains("connection: close\r\n\r\n"));
+        let body = text.split("\r\n\r\n").nth(1).unwrap();
+        assert_eq!(Json::parse(body.trim()).unwrap().get("code").unwrap().as_str(),
+            Some("backpressure"));
+    }
+}

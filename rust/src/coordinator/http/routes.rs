@@ -1,0 +1,292 @@
+//! Request routing: the three-endpoint JSON contract over the [`Fleet`].
+//!
+//! | route           | reply                                             |
+//! |-----------------|---------------------------------------------------|
+//! | `POST /forget`  | the [`Reply`] wire body; status from its code     |
+//! | `GET /stats`    | the fleet's percentile rollup, as JSON            |
+//! | `GET /healthz`  | `{"ok":true,...}` fleet liveness                  |
+//!
+//! `/forget` bodies are scanned lazily ([`scan::path`]) for the two
+//! fields the admission path needs — `spec` (the CLI grammar string or
+//! the [`ForgetSpec::to_json`] object form) and `deadline_ms` (absent =
+//! fleet default, `0` = no deadline) — every other byte is skipped, not
+//! parsed. Malformed bodies answer 400 with the machine-readable shape
+//! `{"code","error","offset","context"}` so clients can point at the
+//! offending byte.
+
+use std::time::Duration;
+
+use crate::coordinator::dispatch::{Fleet, Reply};
+use crate::unlearn::ForgetSpec;
+use crate::util::json::{scan, Json, JsonError};
+
+use super::proto::{Request, Response};
+
+/// Dataset bounds the HTTP layer validates specs against:
+/// `(num_classes, num_samples)`. `None` defers validation to execution.
+pub type Bounds = Option<(usize, usize)>;
+
+/// Dispatch one parsed request against the fleet.
+pub(super) fn handle(req: &Request, fleet: &Fleet, bounds: Bounds) -> Response {
+    match (req.method.as_str(), req.path()) {
+        ("POST", "/forget") => forget(req, fleet, bounds),
+        ("GET", "/stats") => Response::json(200, &fleet.stats().to_json()),
+        ("GET", "/healthz") => {
+            let s = fleet.stats();
+            Response::json(
+                200,
+                &Json::obj(vec![
+                    ("ok", Json::from(true)),
+                    ("workers", Json::from(s.workers)),
+                    ("queue_depth", Json::from(s.queue_depth)),
+                ]),
+            )
+        }
+        (_, "/forget") => method_not_allowed(req, "POST"),
+        (_, "/stats" | "/healthz") => method_not_allowed(req, "GET"),
+        _ => error(404, "not_found", format!("no route `{}`", req.path()), None),
+    }
+}
+
+/// `POST /forget`: extract `spec` + `deadline_ms`, admit, and block on
+/// the fleet's reply (the HTTP contract is synchronous: one request, one
+/// final outcome).
+fn forget(req: &Request, fleet: &Fleet, bounds: Bounds) -> Response {
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(b) => b,
+        Err(e) => {
+            return error(
+                400,
+                "bad_request",
+                "body is not UTF-8",
+                Some((e.valid_up_to(), String::new())),
+            )
+        }
+    };
+    let raw = match scan::path(body, &["spec"]) {
+        Err(e) => return bad_json(e),
+        Ok(None) => return error(400, "invalid_spec", "missing `spec` field", None),
+        Ok(Some(raw)) => raw,
+    };
+    let spec = match raw.parse().map_err(BodyError::Json).and_then(|j| {
+        ForgetSpec::from_json(&j).map_err(|e| BodyError::Spec(format!("{e:#}"), raw.offset()))
+    }) {
+        Ok(s) => s,
+        Err(BodyError::Json(e)) => return bad_json(e),
+        Err(BodyError::Spec(msg, off)) => {
+            return error(400, "invalid_spec", msg, Some((off, String::new())))
+        }
+    };
+    if let Some((num_classes, num_samples)) = bounds {
+        if let Err(e) = spec.validate(num_classes, num_samples) {
+            let at = Some((raw.offset(), String::new()));
+            return error(400, "invalid_spec", format!("{e:#}"), at);
+        }
+    }
+    let rx = match scan::path_f64(body, &["deadline_ms"]) {
+        Err(e) => return bad_json(e),
+        Ok(Some(ms)) if ms < 0.0 || ms.is_nan() => {
+            let msg = format!("`deadline_ms` must be >= 0, got {ms}");
+            return error(400, "bad_request", msg, None);
+        }
+        // explicit 0 = no deadline, overriding any fleet default
+        Ok(Some(ms)) if ms == 0.0 => fleet.submit_with_deadline(spec, None),
+        Ok(Some(ms)) => fleet.submit_with_deadline(spec, Some(Duration::from_secs_f64(ms / 1e3))),
+        Ok(None) => fleet.submit(spec),
+    };
+    match rx.recv() {
+        Ok(reply) => {
+            let status = match &reply {
+                Reply::Done(_) => 200,
+                Reply::Failed(_) => 500,
+                Reply::Backpressure { .. } => 429,
+                Reply::Expired { .. } => 504,
+            };
+            let resp = Response::json(status, &reply.to_json());
+            if status == 429 {
+                resp.with_header("retry-after", "1")
+            } else {
+                resp
+            }
+        }
+        // the worker dropped the reply channel without answering — only
+        // possible if its thread died mid-service
+        Err(_) => error(500, "failed", "fleet dropped the request", None),
+    }
+}
+
+enum BodyError {
+    Json(JsonError),
+    Spec(String, usize),
+}
+
+fn method_not_allowed(req: &Request, allow: &'static str) -> Response {
+    let msg = format!("{} {} is not routable; allow: {allow}", req.method, req.path());
+    error(405, "method_not_allowed", msg, None).with_header("allow", allow)
+}
+
+fn bad_json(e: JsonError) -> Response {
+    let ctx = e.context.clone();
+    error(400, "bad_request", e.msg, Some((e.pos, ctx)))
+}
+
+/// The machine-readable error body shared by every non-reply failure:
+/// `code` (stable discriminant), `error` (human text), and — when the
+/// failure points at request bytes — `offset` (+ `context` when the
+/// scanner captured surrounding input).
+pub(super) fn error(
+    status: u16,
+    code: &str,
+    msg: impl Into<String>,
+    at: Option<(usize, String)>,
+) -> Response {
+    let mut fields = vec![("code", Json::from(code)), ("error", Json::string(msg))];
+    if let Some((offset, context)) = at {
+        fields.push(("offset", Json::from(offset)));
+        if !context.is_empty() {
+            fields.push(("context", Json::string(context)));
+        }
+    }
+    Response::json(status, &Json::obj(fields))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::queue::Timing;
+    use crate::coordinator::{FleetConfig, Summary, UnlearnService};
+    use anyhow::Result;
+
+    /// Service double: echoes the canonical spec back in a summary.
+    struct Echo;
+    impl UnlearnService for Echo {
+        fn unlearn(&mut self, spec: &ForgetSpec) -> Result<Summary> {
+            Ok(Summary {
+                spec: spec.clone(),
+                forget_acc: 0.02,
+                retain_acc: 0.9,
+                stop_depth: Some(1),
+                macs_vs_ssd_pct: 11.0,
+                sim_energy_mj: 1.0,
+                sim_energy_vs_ssd_pct: 8.0,
+                sim_ms: 0.0,
+                timing: Timing { queue_ms: 0.0, service_ms: 0.0 },
+            })
+        }
+    }
+
+    fn fleet() -> Fleet {
+        Fleet::start_with(FleetConfig::default(), |_| Ok(Echo)).unwrap()
+    }
+
+    fn req(method: &str, target: &str, body: &str) -> Request {
+        Request {
+            method: method.to_string(),
+            target: target.to_string(),
+            headers: vec![],
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn body(resp: &Response) -> Json {
+        Json::parse(std::str::from_utf8(&resp.body).unwrap().trim()).unwrap()
+    }
+
+    #[test]
+    fn healthz_reports_liveness() {
+        let f = fleet();
+        let resp = handle(&req("GET", "/healthz", ""), &f, None);
+        assert_eq!(resp.status, 200);
+        let j = body(&resp);
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("workers").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn stats_serves_the_fleet_rollup() {
+        let f = fleet();
+        let resp = handle(&req("GET", "/stats", ""), &f, None);
+        assert_eq!(resp.status, 200);
+        let j = body(&resp);
+        assert!(j.get("rollup").unwrap().get("queue_p99_ms").is_some());
+        assert_eq!(j.get("per_worker").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn forget_string_spec_round_trips() {
+        let f = fleet();
+        let resp = handle(&req("POST", "/forget", r#"{"spec": "class:3"}"#), &f, None);
+        assert_eq!(resp.status, 200, "{:?}", body(&resp));
+        let j = body(&resp);
+        assert_eq!(j.get("code").unwrap().as_str(), Some("done"));
+        assert_eq!(j.get("summary").unwrap().get("spec").unwrap().as_str(), Some("class:3"));
+    }
+
+    #[test]
+    fn forget_object_spec_is_canonicalized() {
+        let f = fleet();
+        let resp =
+            handle(&req("POST", "/forget", r#"{"spec": {"classes": [4, 1, 1]}}"#), &f, None);
+        assert_eq!(resp.status, 200);
+        let j = body(&resp);
+        assert_eq!(j.get("summary").unwrap().get("spec").unwrap().as_str(), Some("classes:1,4"));
+    }
+
+    #[test]
+    fn missing_and_invalid_specs_are_400() {
+        let f = fleet();
+        let resp = handle(&req("POST", "/forget", r#"{"other": 1}"#), &f, None);
+        assert_eq!(resp.status, 400);
+        assert_eq!(body(&resp).get("code").unwrap().as_str(), Some("invalid_spec"));
+
+        let resp = handle(&req("POST", "/forget", r#"{"spec": "bogus"}"#), &f, None);
+        assert_eq!(resp.status, 400);
+        let j = body(&resp);
+        assert_eq!(j.get("code").unwrap().as_str(), Some("invalid_spec"));
+        // the offset points at the spec value in the request body
+        assert_eq!(j.get("offset").unwrap().as_i64(), Some(9));
+    }
+
+    #[test]
+    fn malformed_json_carries_offset_and_context() {
+        let f = fleet();
+        let resp = handle(&req("POST", "/forget", r#"{"spec": bogus}"#), &f, None);
+        assert_eq!(resp.status, 400);
+        let j = body(&resp);
+        assert_eq!(j.get("code").unwrap().as_str(), Some("bad_request"));
+        assert_eq!(j.get("offset").unwrap().as_i64(), Some(9));
+        assert!(j.get("context").unwrap().as_str().unwrap().contains("bogus"));
+    }
+
+    #[test]
+    fn bounds_validation_rejects_out_of_range_specs() {
+        let f = fleet();
+        let resp = handle(&req("POST", "/forget", r#"{"spec": "class:99"}"#), &f, Some((10, 100)));
+        assert_eq!(resp.status, 400);
+        let j = body(&resp);
+        assert_eq!(j.get("code").unwrap().as_str(), Some("invalid_spec"));
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("out of range"));
+    }
+
+    #[test]
+    fn bad_deadlines_are_400() {
+        let f = fleet();
+        let r = req("POST", "/forget", r#"{"spec": "class:1", "deadline_ms": "soon"}"#);
+        let resp = handle(&r, &f, None);
+        assert_eq!(resp.status, 400);
+        assert!(body(&resp).get("error").unwrap().as_str().unwrap().contains("deadline_ms"));
+
+        let r = req("POST", "/forget", r#"{"spec": "class:1", "deadline_ms": -5}"#);
+        assert_eq!(handle(&r, &f, None).status, 400);
+    }
+
+    #[test]
+    fn unknown_routes_and_methods() {
+        let f = fleet();
+        assert_eq!(handle(&req("GET", "/nope", ""), &f, None).status, 404);
+        let resp = handle(&req("DELETE", "/forget", ""), &f, None);
+        assert_eq!(resp.status, 405);
+        assert!(resp.headers.iter().any(|(k, v)| *k == "allow" && v == "POST"));
+        assert_eq!(handle(&req("POST", "/stats", ""), &f, None).status, 405);
+    }
+}

@@ -33,6 +33,10 @@
 //!   p50/p95/p99 histograms for queue and service time) and merges into
 //!   the fleet-wide rollup surfaced by [`Fleet::stats`] and the `serve`
 //!   CLI.
+//! * [`HttpServer`] (see [`http`]) puts the fleet on the wire: a
+//!   zero-dependency HTTP/1.1 front-end speaking the JSON contracts
+//!   (`POST /forget`, `GET /stats`, `GET /healthz`) with [`Reply`]
+//!   outcomes mapped onto status codes (429 backpressure, 504 expired).
 //!
 //! Replica semantics: each worker's parameter store drifts independently
 //! as it applies edits — the fleet models N devices serving a shared
@@ -41,16 +45,19 @@
 //! convergence is out of scope here (see ROADMAP sharding).
 
 pub mod dispatch;
+pub mod http;
 pub mod queue;
 pub mod session;
 
 pub use dispatch::{Fleet, FleetConfig, FleetStats, Pacing, Reply, UnlearnService, WorkerSpec};
+pub use http::{HttpConfig, HttpServer};
 pub use queue::{LatencyHistogram, QueueStats, Timing};
 pub use session::{EdgeServer, UnlearnSession, UnlearnSessionBuilder};
 
 use anyhow::Result;
 
 use crate::unlearn::ForgetSpec;
+use crate::util::json::Json;
 
 /// Outcome summary of one served unlearning event.
 #[derive(Debug, Clone)]
@@ -70,6 +77,31 @@ pub struct Summary {
     pub timing: Timing,
 }
 
+impl Summary {
+    /// Wire form of the summary — the `summary` payload of a `done`
+    /// reply on the HTTP surface, with the spec in its canonical string
+    /// grammar (`"classes:1,4"`, accepted back by
+    /// [`ForgetSpec::from_json`]) and the measured timing flattened to
+    /// `queue_ms`/`service_ms`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("spec", Json::string(self.spec.to_string())),
+            ("forget_acc", Json::from(self.forget_acc)),
+            ("retain_acc", Json::from(self.retain_acc)),
+            (
+                "stop_depth",
+                self.stop_depth.map(Json::from).unwrap_or(Json::Null),
+            ),
+            ("macs_vs_ssd_pct", Json::from(self.macs_vs_ssd_pct)),
+            ("sim_energy_mj", Json::from(self.sim_energy_mj)),
+            ("sim_energy_vs_ssd_pct", Json::from(self.sim_energy_vs_ssd_pct)),
+            ("sim_ms", Json::from(self.sim_ms)),
+            ("queue_ms", Json::from(self.timing.queue_ms)),
+            ("service_ms", Json::from(self.timing.service_ms)),
+        ])
+    }
+}
+
 impl UnlearnService for UnlearnSession {
     fn unlearn(&mut self, spec: &ForgetSpec) -> Result<Summary> {
         self.forget(spec)
@@ -83,5 +115,88 @@ mod tests {
     // tests/dispatch.rs against a mock service; session + fleet
     // end-to-end over class / multi-class / sample specs in
     // tests/spec_e2e.rs, examples/edge_serving.rs and
-    // benches/bench_serve.rs.
+    // benches/bench_serve.rs; the HTTP front-end over a real loopback
+    // socket in tests/http_e2e.rs.
+    use super::*;
+
+    fn summary() -> Summary {
+        Summary {
+            spec: ForgetSpec::Classes(vec![1, 4]),
+            forget_acc: 0.05,
+            retain_acc: 0.91,
+            stop_depth: Some(2),
+            macs_vs_ssd_pct: 12.5,
+            sim_energy_mj: 1.25,
+            sim_energy_vs_ssd_pct: 9.0,
+            sim_ms: 430.0,
+            timing: Timing { queue_ms: 3.0, service_ms: 80.0 },
+        }
+    }
+
+    #[test]
+    fn reply_codes_are_stable() {
+        // wire contract: these strings are what clients switch on
+        assert_eq!(Reply::Done(summary()).code(), "done");
+        assert_eq!(Reply::Failed("x".into()).code(), "failed");
+        assert_eq!(Reply::Backpressure { queue_len: 3, queue_cap: 3 }.code(), "backpressure");
+        assert_eq!(Reply::Expired { missed_by_ms: 7.0 }.code(), "expired");
+    }
+
+    #[test]
+    fn reply_error_impl_propagates() {
+        let e = anyhow::Error::from(Reply::Backpressure { queue_len: 2, queue_cap: 2 });
+        assert!(e.to_string().contains("backpressure"));
+        assert!(Reply::Expired { missed_by_ms: 12.0 }.to_string().contains("12 ms"));
+    }
+
+    #[test]
+    fn summary_json_carries_the_canonical_spec_and_timing() {
+        let j = summary().to_json();
+        assert_eq!(j.get("spec").unwrap().as_str(), Some("classes:1,4"));
+        assert_eq!(
+            crate::unlearn::ForgetSpec::from_json(j.get("spec").unwrap()).unwrap(),
+            ForgetSpec::Classes(vec![1, 4])
+        );
+        assert_eq!(j.get("stop_depth").unwrap().as_i64(), Some(2));
+        assert_eq!(j.get("queue_ms").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("service_ms").unwrap().as_f64(), Some(80.0));
+    }
+
+    #[test]
+    fn reply_json_matches_code() {
+        let j = Reply::Done(summary()).to_json();
+        assert_eq!(j.get("code").unwrap().as_str(), Some("done"));
+        assert!(j.get("summary").unwrap().get("forget_acc").is_some());
+        let j = Reply::Backpressure { queue_len: 5, queue_cap: 8 }.to_json();
+        assert_eq!(j.get("code").unwrap().as_str(), Some("backpressure"));
+        assert_eq!(j.get("queue_len").unwrap().as_i64(), Some(5));
+        assert_eq!(j.get("queue_cap").unwrap().as_i64(), Some(8));
+        let j = Reply::Expired { missed_by_ms: 6.5 }.to_json();
+        assert_eq!(j.get("missed_by_ms").unwrap().as_f64(), Some(6.5));
+        let j = Reply::Failed("boom".into()).to_json();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("boom"));
+    }
+
+    #[test]
+    fn stats_json_uses_the_bench_field_names() {
+        let mut q = QueueStats::default();
+        q.record(&Timing { queue_ms: 2.0, service_ms: 40.0 }, true);
+        let j = q.to_json();
+        // percentile_fields() is the naming authority bench_serve shares
+        for (name, _) in q.percentile_fields() {
+            assert!(j.get(name).is_some(), "missing {name}");
+        }
+        let fs = FleetStats {
+            workers: 1,
+            admitted: 1,
+            coalesced: 0,
+            shed_backpressure: 0,
+            queue_depth: 0,
+            per_worker: vec![q],
+        };
+        let j = fs.to_json();
+        assert_eq!(j.get("workers").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("rollup").unwrap().get("served").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("per_worker").unwrap().as_arr().unwrap().len(), 1);
+    }
 }

@@ -5,6 +5,12 @@
 //! the fleet-wide view. Latency distributions are tracked in power-of-two
 //! [`LatencyHistogram`] buckets so p50/p95/p99 survive the merge without
 //! storing per-request samples.
+//!
+//! [`QueueStats::percentile_fields`] is the single naming authority for
+//! the percentile readout: `bench_serve` arms and the HTTP `GET /stats`
+//! body both emit exactly these names.
+
+use crate::util::json::Json;
 
 /// Queue + service latency of one completed request (milliseconds).
 #[derive(Debug, Clone, Copy, Default)]
@@ -189,6 +195,38 @@ impl QueueStats {
         } else {
             self.total_service_ms / self.completed() as f64
         }
+    }
+
+    /// The percentile readout under its wire names — the exact fields
+    /// `bench_serve` records per arm and `GET /stats` serves, so the
+    /// bench artifact and the HTTP surface cannot drift apart.
+    pub fn percentile_fields(&self) -> [(&'static str, f64); 4] {
+        [
+            ("queue_p50_ms", self.queue_hist.p50_ms()),
+            ("queue_p99_ms", self.queue_hist.p99_ms()),
+            ("service_p50_ms", self.service_hist.p50_ms()),
+            ("service_p99_ms", self.service_hist.p99_ms()),
+        ]
+    }
+
+    /// Wire form of this stats block (counters, means, maxima, and the
+    /// [`QueueStats::percentile_fields`] readout).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("served", Json::from(self.served as usize)),
+            ("failures", Json::from(self.failures as usize)),
+            ("shed_deadline", Json::from(self.shed_deadline as usize)),
+            ("batches", Json::from(self.batches as usize)),
+            ("max_batch", Json::from(self.max_batch as usize)),
+            ("mean_queue_ms", Json::from(self.mean_queue_ms())),
+            ("mean_service_ms", Json::from(self.mean_service_ms())),
+            ("max_queue_ms", Json::from(self.max_queue_ms)),
+            ("max_service_ms", Json::from(self.max_service_ms)),
+        ];
+        for (k, v) in self.percentile_fields() {
+            fields.push((k, Json::from(v)));
+        }
+        Json::obj(fields)
     }
 
     /// Fold `other` into `self` — the per-worker -> fleet rollup. Counts

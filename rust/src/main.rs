@@ -4,14 +4,16 @@
 //!   train      train a model on a synthetic dataset and cache the
 //!              checkpoint + stored global importance
 //!   unlearn    run one unlearning event (ssd | cau | bd | ficabu)
-//!   serve      edge request-loop demo (threads + channels)
+//!   serve      edge request-loop demo (threads + channels), or — with
+//!              `--http ADDR` — a wire-facing HTTP/1.1 front-end
+//!              (`POST /forget`, `GET /stats`, `GET /healthz`)
 //!   info       runtime/platform and artifact inventory
 //!
 //! Table/figure regeneration lives in `examples/` (see DESIGN.md §4).
 
 use anyhow::Result;
 use ficabu::config::{artifacts_root, SharedMeta};
-use ficabu::coordinator::{Fleet, FleetConfig, Pacing, Reply, WorkerSpec};
+use ficabu::coordinator::{Fleet, FleetConfig, HttpConfig, HttpServer, Pacing, Reply, WorkerSpec};
 use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
 use ficabu::runtime::Runtime;
 use ficabu::unlearn::ForgetSpec;
@@ -82,7 +84,7 @@ fn run() -> Result<()> {
     args.declare(&[
         "model", "dataset", "mode", "class", "forget", "steps", "lr", "imp-batches",
         "seed", "retrain", "int8", "verbose", "requests", "clients", "workers",
-        "queue-cap", "deadline-ms", "batch-max", "pace-sim",
+        "queue-cap", "deadline-ms", "batch-max", "pace-sim", "http", "http-threads",
     ]);
     args.finish()?;
     match args.command.as_str() {
@@ -110,6 +112,8 @@ USAGE: ficabu <command> [--key value] [--flag]
   serve    --model M --dataset D [--requests N --clients K]
            [--forget \"class:0;classes:1,4\" request cycle]
            [--workers N --queue-cap N --deadline-ms N --batch-max N --pace-sim]
+           [--http ADDR [--http-threads N]  serve over HTTP instead of the
+            in-process client loop; e.g. --http 127.0.0.1:8787]
   info     platform + artifact inventory
 
 Tables/figures: cargo run --release --example table1 (table2, table4,
@@ -235,6 +239,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
 
     let cfg = exp::tables::mode_config(&prep, Mode::Ficabu, None);
     let num_classes = prep.model.meta.num_classes;
+    let num_samples = prep.train.len();
     // Request cycle: --forget specs if given, else one spec per class.
     let cycle: Vec<ForgetSpec> = if a.get("forget").is_some() {
         forget_specs(a, "class:0")?
@@ -269,6 +274,26 @@ fn cmd_serve(a: &Args) -> Result<()> {
         if deadline_ms == 0 { "none".to_string() } else { format!("{deadline_ms} ms") },
     );
     let fleet = Fleet::start(wspec, fleet_cfg)?;
+
+    // Wire mode: put the fleet on a socket and serve until the process
+    // is stopped (^C / kill). Requests arrive over HTTP, so the
+    // in-process client loop below does not run.
+    if let Some(addr) = a.get("http") {
+        let fleet = std::sync::Arc::new(fleet);
+        let http_cfg = HttpConfig {
+            threads: a.usize_or("http-threads", 2)?.max(1),
+            bounds: Some((num_classes, num_samples)),
+            ..HttpConfig::default()
+        };
+        let srv = HttpServer::bind(addr, std::sync::Arc::clone(&fleet), http_cfg)?;
+        println!(
+            "http: listening on {} (POST /forget | GET /stats | GET /healthz)",
+            srv.local_addr()
+        );
+        loop {
+            std::thread::park();
+        }
+    }
 
     // Each client bursts its share of the request stream, then drains
     // replies — exercising queueing, coalescing, and backpressure.

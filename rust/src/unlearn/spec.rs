@@ -18,6 +18,7 @@ use std::fmt;
 use anyhow::{bail, Context, Result};
 
 use crate::data::Dataset;
+use crate::util::json::Json;
 
 /// What one unlearning event must forget.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -105,6 +106,60 @@ impl ForgetSpec {
             }
             other => bail!("forget spec `{s}`: unknown kind `{other}` (class | classes | samples)"),
         }
+    }
+
+    /// Wire form of the spec: `{"class":3}`, `{"classes":[1,4]}`, or
+    /// `{"samples":[0,9]}` — the JSON view of the CLI grammar, used by
+    /// the HTTP `/forget` contract and [`Summary`](crate::coordinator::Summary)
+    /// bodies. [`ForgetSpec::from_json`] inverts it.
+    pub fn to_json(&self) -> Json {
+        let nums = |ids: &[usize]| Json::Arr(ids.iter().map(|&i| Json::from(i)).collect());
+        match self {
+            ForgetSpec::Class(c) => Json::obj(vec![("class", Json::from(*c))]),
+            ForgetSpec::Classes(ids) => Json::obj(vec![("classes", nums(ids))]),
+            ForgetSpec::Samples(ids) => Json::obj(vec![("samples", nums(ids))]),
+        }
+    }
+
+    /// Parse the wire form: either the [`ForgetSpec::to_json`] object
+    /// shape or a JSON string holding the CLI grammar (`"classes:1,4"`)
+    /// — the two are one typed API. The result is canonical (sorted,
+    /// deduped, variant-collapsed), mirroring what admission keys on.
+    pub fn from_json(j: &Json) -> Result<ForgetSpec> {
+        let ids = |v: &Json, what: &str| -> Result<Vec<usize>> {
+            let arr = v
+                .as_arr()
+                .with_context(|| format!("forget spec: `{what}` must be an array of indices"))?;
+            if arr.is_empty() {
+                bail!("forget spec: `{what}` is empty");
+            }
+            arr.iter()
+                .map(|x| {
+                    x.as_i64()
+                        .filter(|&i| i >= 0)
+                        .map(|i| i as usize)
+                        .with_context(|| format!("forget spec: `{what}` has a non-index entry {x}"))
+                })
+                .collect()
+        };
+        let spec = match j {
+            Json::Str(s) => ForgetSpec::parse(s)?,
+            Json::Obj(kv) => match kv.as_slice() {
+                [(k, v)] if k.as_str() == "class" => ForgetSpec::Class(
+                    v.as_i64()
+                        .filter(|&c| c >= 0)
+                        .map(|c| c as usize)
+                        .with_context(|| format!("forget spec: `class` must be an index, got {v}"))?,
+                ),
+                [(k, v)] if k.as_str() == "classes" => ForgetSpec::Classes(ids(v, "classes")?),
+                [(k, v)] if k.as_str() == "samples" => ForgetSpec::Samples(ids(v, "samples")?),
+                _ => bail!(
+                    "forget spec: expected exactly one of `class`, `classes`, `samples`, got {j}"
+                ),
+            },
+            other => bail!("forget spec: expected a string or object, got {other}"),
+        };
+        Ok(spec.canonical())
     }
 
     /// Check ids against the serving model/dataset bounds.
@@ -232,6 +287,7 @@ impl fmt::Display for SpecKey {
 mod tests {
     use super::*;
     use crate::data::DatasetCfg;
+    use crate::util::json::Json;
 
     fn ds() -> Dataset {
         let cfg = DatasetCfg { train_per_class: 4, test_per_class: 1, ..DatasetCfg::cifar20() };
@@ -315,6 +371,54 @@ mod tests {
         let spec = ForgetSpec::Samples(vec![7, 3, 3]);
         assert_eq!(spec.pool(&ds).unwrap(), vec![3, 7]);
         assert_eq!(spec.retain(&ds).unwrap().len(), ds.len() - 2);
+    }
+
+    #[test]
+    fn json_roundtrips_canonically() {
+        // property: from_json(to_json(s)) == s.canonical(), across shapes
+        // including non-canonical id lists
+        for spec in [
+            ForgetSpec::Class(3),
+            ForgetSpec::Classes(vec![1, 4, 7]),
+            ForgetSpec::Classes(vec![4, 1, 4, 1]),
+            ForgetSpec::Classes(vec![9]),
+            ForgetSpec::Samples(vec![9, 2, 9]),
+            ForgetSpec::Samples(vec![0]),
+        ] {
+            let j = spec.to_json();
+            assert_eq!(ForgetSpec::from_json(&j).unwrap(), spec.canonical(), "via {j}");
+            // and the emitted text re-parses to the same wire object
+            let text = j.to_string();
+            let j2 = Json::parse(&text).unwrap();
+            assert_eq!(ForgetSpec::from_json(&j2).unwrap(), spec.canonical(), "via text {text}");
+        }
+    }
+
+    #[test]
+    fn from_json_accepts_the_cli_grammar_as_a_string() {
+        let j = Json::parse(r#""classes:4,1,4""#).unwrap();
+        assert_eq!(ForgetSpec::from_json(&j).unwrap(), ForgetSpec::Classes(vec![1, 4]));
+        let j = Json::parse(r#""class:7""#).unwrap();
+        assert_eq!(ForgetSpec::from_json(&j).unwrap(), ForgetSpec::Class(7));
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_shapes() {
+        for bad in [
+            "42",                           // not a string/object
+            "{}",                           // no variant key
+            r#"{"class": "three"}"#,        // class not an index
+            r#"{"class": -1}"#,             // negative index
+            r#"{"class": 1.5}"#,            // fractional index
+            r#"{"classes": []}"#,           // empty id list
+            r#"{"classes": 3}"#,            // ids not an array
+            r#"{"samples": [1, "x"]}"#,     // non-index entry
+            r#"{"class": 1, "classes": [2]}"#, // ambiguous
+            r#""bogus:1""#,                 // unknown CLI kind
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ForgetSpec::from_json(&j).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

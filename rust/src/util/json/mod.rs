@@ -5,6 +5,13 @@
 //! implementation. It supports the full JSON grammar minus `\u` surrogate
 //! pairs (sufficient for our ASCII artifacts) and preserves object key
 //! order, which keeps emitted reports diffable.
+//!
+//! [`scan`] adds a lazy path-scanning layer (miniserde/ADR-002 style):
+//! extracting one or two fields from a request body skips over every
+//! other value byte-by-byte instead of building a tree, which is what
+//! the HTTP admission path uses.
+
+pub mod scan;
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -21,15 +28,42 @@ pub enum Json {
     Obj(Vec<(String, Json)>),
 }
 
+/// Parse/scan failure: the byte offset where the input stopped making
+/// sense, plus a short snippet of the surrounding bytes so wire-facing
+/// 400 bodies can say *where* a request was malformed.
 #[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
+    /// Up to [`CONTEXT_BYTES`] of input around `pos` (lossy UTF-8).
+    pub context: String,
+}
+
+/// Bytes of input quoted around the error position in
+/// [`JsonError::context`].
+pub const CONTEXT_BYTES: usize = 24;
+
+impl JsonError {
+    /// Build an error at `pos`, quoting the surrounding input.
+    pub fn at(pos: usize, msg: impl Into<String>, src: &[u8]) -> JsonError {
+        let lo = pos.saturating_sub(CONTEXT_BYTES / 2);
+        let hi = (pos + CONTEXT_BYTES / 2).min(src.len());
+        let context = String::from_utf8_lossy(&src[lo.min(src.len())..hi]).into_owned();
+        JsonError { pos, msg: msg.into(), context }
+    }
 }
 
 impl fmt::Display for JsonError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+        if self.context.is_empty() {
+            write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+        } else {
+            write!(
+                f,
+                "json parse error at byte {}: {} (near `{}`)",
+                self.pos, self.msg, self.context
+            )
+        }
     }
 }
 
@@ -64,6 +98,27 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Integer read: `Some` only for numbers that are exactly an `i64`
+    /// (no fractional part, in range) — the wire layer must not silently
+    /// truncate `3.7` or `1e20` into an index.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            // `i64::MAX as f64` rounds up to 2^63, so the upper bound is
+            // exclusive; `i64::MIN as f64` is exactly -2^63.
+            Json::Num(n) if n.fract() == 0.0 && *n >= i64::MIN as f64 && *n < i64::MAX as f64 => {
+                Some(*n as i64)
+            }
             _ => None,
         }
     }
@@ -107,6 +162,13 @@ impl Json {
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+
+    /// String constructor (emission helper). The writer escapes quotes,
+    /// backslashes, and every control character, so arbitrary text —
+    /// error messages quoting raw request bytes included — round-trips.
+    pub fn string(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
 }
 
 impl From<f64> for Json {
@@ -137,7 +199,7 @@ struct Parser<'a> {
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
-        JsonError { pos: self.pos, msg: msg.to_string() }
+        JsonError::at(self.pos, msg, self.b)
     }
 
     fn peek(&self) -> Option<u8> {
@@ -426,5 +488,39 @@ mod tests {
     fn usize_list() {
         let j = Json::parse("[32, 32, 3]").unwrap();
         assert_eq!(j.usize_list().unwrap(), vec![32, 32, 3]);
+    }
+
+    #[test]
+    fn bool_and_i64_getters() {
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert_eq!(Json::Num(1.0).as_bool(), None);
+        assert_eq!(Json::Num(42.0).as_i64(), Some(42));
+        assert_eq!(Json::Num(-7.0).as_i64(), Some(-7));
+        // fractional and out-of-range numbers are not integers
+        assert_eq!(Json::Num(3.7).as_i64(), None);
+        assert_eq!(Json::Num(1e20).as_i64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_i64(), None);
+        assert_eq!(Json::Str("5".into()).as_i64(), None);
+    }
+
+    #[test]
+    fn string_constructor_escapes_control_chars_on_write() {
+        let j = Json::string("tab\there \"quoted\" \\ nl\n bell\u{7} nul\u{0}");
+        let emitted = j.to_string();
+        assert_eq!(
+            emitted,
+            "\"tab\\there \\\"quoted\\\" \\\\ nl\\n bell\\u0007 nul\\u0000\""
+        );
+        // escape-correct: the emitted text parses back to the same value
+        assert_eq!(Json::parse(&emitted).unwrap(), j);
+    }
+
+    #[test]
+    fn errors_carry_offset_and_context() {
+        let e = Json::parse(r#"{"spec": bogus}"#).unwrap_err();
+        assert_eq!(e.pos, 9);
+        assert!(e.context.contains("bogus"), "context = {:?}", e.context);
+        let shown = e.to_string();
+        assert!(shown.contains("byte 9") && shown.contains("bogus"), "{shown}");
     }
 }

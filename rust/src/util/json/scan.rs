@@ -1,0 +1,372 @@
+//! Lazy JSON path scanning: pull one field out of a document without
+//! building a tree.
+//!
+//! The HTTP admission path needs exactly two fields (`spec`,
+//! `deadline_ms`) out of each request body. [`Json::parse`] would
+//! allocate a `String`/`Vec` per node of the whole document first;
+//! [`path`] instead walks the bytes, comparing keys in place and
+//! *skipping* every value that is not on the requested path (strings are
+//! framed without unescaping, containers without materializing), then
+//! returns the raw text span of the target. Only that fragment is ever
+//! parsed — the miniserde + lazy-scan split of ADR-002, where partial
+//! field extraction is an order of magnitude cheaper than tree building
+//! (`serve/http-loopback/parse-*` in `bench_serve` measures ours).
+//!
+//! The laziness is a real trade: bytes *after* the target are never
+//! inspected, so a structurally broken sibling behind it goes unnoticed.
+//! Errors on the traversed prefix carry the document byte offset and
+//! context like the full parser's.
+
+use super::{Json, JsonError};
+
+/// A value located by [`path`]: the raw JSON text of the value plus its
+/// byte offset in the scanned document.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Raw<'a> {
+    text: &'a str,
+    offset: usize,
+}
+
+impl<'a> Raw<'a> {
+    /// The value's raw JSON text (e.g. `"class:3"` including quotes, or
+    /// `{"classes":[1,4]}`).
+    pub fn text(&self) -> &'a str {
+        self.text
+    }
+
+    /// Byte offset of the value within the scanned document.
+    pub fn offset(&self) -> usize {
+        self.offset
+    }
+
+    /// Parse just this fragment into a [`Json`] tree. Error offsets are
+    /// rebased onto the enclosing document.
+    pub fn parse(&self) -> Result<Json, JsonError> {
+        Json::parse(self.text).map_err(|mut e| {
+            e.pos += self.offset;
+            e
+        })
+    }
+
+    /// The fragment as a number, if it is a JSON number literal.
+    pub fn as_f64(&self) -> Option<f64> {
+        let first = self.text.bytes().next()?;
+        if first == b'-' || first.is_ascii_digit() {
+            self.text.parse().ok()
+        } else {
+            None
+        }
+    }
+
+    /// The fragment as an exact integer (plain integer literals only —
+    /// `3.0`/`4e2` are rejected, matching [`Json::as_i64`]'s intent).
+    pub fn as_i64(&self) -> Option<i64> {
+        self.text.parse().ok()
+    }
+
+    /// The fragment as an unescaped string, if it is a JSON string
+    /// (`None` for other value kinds or invalid escapes).
+    pub fn as_str(&self) -> Option<String> {
+        if !self.text.starts_with('"') {
+            return None;
+        }
+        match self.parse().ok()? {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Scan `src` for the value at `keys` (object keys, outermost first)
+/// without building a tree. `Ok(None)` when any key on the path is
+/// absent; an error only if the bytes the scan had to traverse are
+/// malformed.
+pub fn path<'a>(src: &'a str, keys: &[&str]) -> Result<Option<Raw<'a>>, JsonError> {
+    let mut s = Skip { b: src.as_bytes(), pos: 0 };
+    for k in keys {
+        if s.find(k)?.is_none() {
+            return Ok(None);
+        }
+    }
+    s.ws();
+    let start = s.pos;
+    s.value()?;
+    // value boundaries are always ASCII token edges, so byte slicing
+    // the source str cannot split a UTF-8 character
+    Ok(Some(Raw { text: &src[start..s.pos], offset: start }))
+}
+
+/// [`path`] + number read; an error (with offset) if the field exists
+/// but is not a number.
+pub fn path_f64(src: &str, keys: &[&str]) -> Result<Option<f64>, JsonError> {
+    match path(src, keys)? {
+        None => Ok(None),
+        Some(raw) => raw.as_f64().map(Some).ok_or_else(|| {
+            JsonError::at(
+                raw.offset(),
+                format!("`{}` is not a number", keys.join(".")),
+                src.as_bytes(),
+            )
+        }),
+    }
+}
+
+/// [`path`] + string read; an error (with offset) if the field exists
+/// but is not a string.
+pub fn path_str(src: &str, keys: &[&str]) -> Result<Option<String>, JsonError> {
+    match path(src, keys)? {
+        None => Ok(None),
+        Some(raw) => raw.as_str().map(Some).ok_or_else(|| {
+            JsonError::at(
+                raw.offset(),
+                format!("`{}` is not a string", keys.join(".")),
+                src.as_bytes(),
+            )
+        }),
+    }
+}
+
+/// Byte walker that frames values without materializing them.
+struct Skip<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Skip<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError::at(self.pos, msg, self.b)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected `{}`", c as char)))
+        }
+    }
+
+    /// Enter the object at the cursor and position on the value of
+    /// `key`; `Ok(None)` if the key is absent (cursor then past the
+    /// object). Keys are compared on raw bytes — escaped keys never
+    /// match, which is fine for our plain-ASCII wire contracts.
+    fn find(&mut self, key: &str) -> Result<Option<()>, JsonError> {
+        self.ws();
+        self.expect(b'{')?;
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(None);
+        }
+        loop {
+            self.ws();
+            let kstart = self.pos;
+            self.string()?;
+            let raw_key = &self.b[kstart + 1..self.pos - 1];
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            if raw_key == key.as_bytes() {
+                return Ok(Some(()));
+            }
+            self.value()?;
+            self.ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(None),
+                _ => {
+                    self.pos = self.pos.saturating_sub(1);
+                    return Err(self.err("expected `,` or `}`"));
+                }
+            }
+        }
+    }
+
+    /// Skip one complete value of any kind.
+    fn value(&mut self) -> Result<(), JsonError> {
+        self.ws();
+        match self.peek().ok_or_else(|| self.err("eof"))? {
+            b'"' => self.string(),
+            b'{' => self.container(b'{', b'}'),
+            b'[' => self.container(b'[', b']'),
+            b't' => self.lit("true"),
+            b'f' => self.lit("false"),
+            b'n' => self.lit("null"),
+            b'-' | b'0'..=b'9' => {
+                self.pos += 1;
+                while matches!(
+                    self.peek(),
+                    Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+                ) {
+                    self.pos += 1;
+                }
+                Ok(())
+            }
+            c => Err(self.err(&format!("unexpected byte `{}`", c as char))),
+        }
+    }
+
+    /// Skip a string: only framing matters, so an escape skips exactly
+    /// one byte (the byte after `\` is never a bare `"`).
+    fn string(&mut self) -> Result<(), JsonError> {
+        self.expect(b'"')?;
+        loop {
+            match self.bump().ok_or_else(|| self.err("eof in string"))? {
+                b'"' => return Ok(()),
+                b'\\' => {
+                    self.bump().ok_or_else(|| self.err("eof in escape"))?;
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Skip a `{...}` / `[...]` container by depth counting; strings
+    /// inside are framed properly so braces in text don't miscount.
+    fn container(&mut self, open: u8, close: u8) -> Result<(), JsonError> {
+        self.expect(open)?;
+        let mut depth = 1usize;
+        while depth > 0 {
+            match self.peek().ok_or_else(|| self.err("eof in container"))? {
+                b'"' => self.string()?,
+                c if c == open => {
+                    depth += 1;
+                    self.pos += 1;
+                }
+                c if c == close => {
+                    depth -= 1;
+                    self.pos += 1;
+                }
+                // the sibling bracket kind frames itself recursively so
+                // `[{`/`}]` nesting cannot confuse the count
+                b'{' => self.container(b'{', b'}')?,
+                b'[' => self.container(b'[', b']')?,
+                _ => self.pos += 1,
+            }
+        }
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str) -> Result<(), JsonError> {
+        if self.b[self.pos..].starts_with(s.as_bytes()) {
+            self.pos += s.len();
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected `{s}`")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BODY: &str = r#"{
+        "client": {"id": "edge-17", "note": "b}r[ace \" soup"},
+        "tags": [1, [2, {"x": "}"}], 3],
+        "spec": "classes:4,1",
+        "deadline_ms": 250,
+        "nested": {"deep": {"leaf": true}}
+    }"#;
+
+    #[test]
+    fn scans_top_level_fields_past_decoys() {
+        assert_eq!(path_str(BODY, &["spec"]).unwrap().as_deref(), Some("classes:4,1"));
+        assert_eq!(path_f64(BODY, &["deadline_ms"]).unwrap(), Some(250.0));
+    }
+
+    #[test]
+    fn scans_nested_paths() {
+        let raw = path(BODY, &["nested", "deep", "leaf"]).unwrap().unwrap();
+        assert_eq!(raw.text(), "true");
+        assert_eq!(path(BODY, &["client", "id"]).unwrap().unwrap().as_str().unwrap(), "edge-17");
+    }
+
+    #[test]
+    fn absent_keys_are_none_not_errors() {
+        assert_eq!(path(BODY, &["missing"]).unwrap(), None);
+        assert_eq!(path(BODY, &["nested", "missing"]).unwrap(), None);
+        assert_eq!(path("{}", &["spec"]).unwrap(), None);
+    }
+
+    #[test]
+    fn raw_fragment_parses_with_document_offsets() {
+        let raw = path(BODY, &["tags"]).unwrap().unwrap();
+        let j = raw.parse().unwrap();
+        assert_eq!(j.as_arr().unwrap().len(), 3);
+        // offsets point into the original document
+        assert_eq!(&BODY[raw.offset()..raw.offset() + 1], "[");
+    }
+
+    #[test]
+    fn object_valued_target() {
+        let raw = path(r#"{"spec": {"classes": [4, 1]}}"#, &["spec"]).unwrap().unwrap();
+        assert_eq!(raw.text(), r#"{"classes": [4, 1]}"#);
+        assert!(raw.as_str().is_none());
+        assert_eq!(raw.parse().unwrap().get("classes").unwrap().usize_list().unwrap(), vec![4, 1]);
+    }
+
+    #[test]
+    fn escaped_strings_frame_correctly() {
+        let src = r#"{"a": "quote \" and brace } inside", "b": 7}"#;
+        assert_eq!(path_f64(src, &["b"]).unwrap(), Some(7.0));
+        assert_eq!(path_str(src, &["a"]).unwrap().unwrap(), "quote \" and brace } inside");
+    }
+
+    #[test]
+    fn type_mismatch_errors_carry_offsets() {
+        let src = r#"{"deadline_ms": "soon"}"#;
+        let e = path_f64(src, &["deadline_ms"]).unwrap_err();
+        assert_eq!(e.pos, 16);
+        assert!(e.msg.contains("deadline_ms"));
+        let e = path_str(src, &["deadline_ms"]).unwrap();
+        assert_eq!(e, Some("soon".to_string()));
+    }
+
+    #[test]
+    fn malformed_prefix_errors_offset() {
+        let e = path(r#"{"a": nope, "spec": 1}"#, &["spec"]).unwrap_err();
+        assert_eq!(e.pos, 6);
+        assert!(!e.context.is_empty());
+        assert!(path("[1,2]", &["spec"]).is_err(), "top level must be an object");
+        assert!(path(r#"{"spec""#, &["spec"]).is_err());
+    }
+
+    #[test]
+    fn bytes_after_the_target_are_not_inspected() {
+        // lazy trade: garbage behind the target goes unnoticed
+        let src = r#"{"spec": "class:3", "broken": nope}"#;
+        assert_eq!(path_str(src, &["spec"]).unwrap().as_deref(), Some("class:3"));
+    }
+
+    #[test]
+    fn agrees_with_the_tree_parser() {
+        let j = Json::parse(BODY).unwrap();
+        assert_eq!(
+            path_str(BODY, &["spec"]).unwrap().as_deref(),
+            j.get("spec").and_then(|v| v.as_str())
+        );
+        assert_eq!(
+            path_f64(BODY, &["deadline_ms"]).unwrap(),
+            j.get("deadline_ms").and_then(|v| v.as_f64())
+        );
+    }
+}

@@ -1,0 +1,337 @@
+//! End-to-end tests of the HTTP front-end over real loopback sockets:
+//! a mock-service fleet behind `HttpServer`, driven by a hand-rolled
+//! client. Covers the full wire contract — forget round-trips (200 +
+//! summary), 429 with `Retry-After` under backpressure, 504 past a
+//! deadline, machine-readable 400s with byte offsets, 404/405/413/500,
+//! keep-alive framing, and clean shutdown mid-connection.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use ficabu::coordinator::{
+    Fleet, FleetConfig, HttpConfig, HttpServer, Summary, Timing, UnlearnService,
+};
+use ficabu::unlearn::ForgetSpec;
+use ficabu::util::json::Json;
+
+/// Mock worker core (same shape as tests/dispatch.rs): every `unlearn`
+/// call announces itself on `started`, then blocks until the test feeds
+/// one token through `gate`. `class:13` fails after the gate.
+struct MockService {
+    wid: usize,
+    started: Sender<(usize, ForgetSpec)>,
+    gate: Arc<Mutex<Receiver<()>>>,
+}
+
+impl UnlearnService for MockService {
+    fn unlearn(&mut self, spec: &ForgetSpec) -> anyhow::Result<Summary> {
+        let _ = self.started.send((self.wid, spec.clone()));
+        self.gate
+            .lock()
+            .unwrap()
+            .recv()
+            .map_err(|_| anyhow::anyhow!("gate closed"))?;
+        if *spec == ForgetSpec::Class(13) {
+            anyhow::bail!("boom on class 13");
+        }
+        Ok(Summary {
+            spec: spec.clone(),
+            forget_acc: 0.04,
+            retain_acc: 0.92,
+            stop_depth: Some(2),
+            macs_vs_ssd_pct: 12.0,
+            sim_energy_mj: 1.1,
+            sim_energy_vs_ssd_pct: 9.0,
+            sim_ms: 0.0,
+            timing: Timing::default(),
+        })
+    }
+}
+
+struct Rig {
+    started: Receiver<(usize, ForgetSpec)>,
+    tokens: Sender<()>,
+}
+
+const STARTED_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A mock fleet behind a bound HTTP server on an ephemeral port.
+fn serve(fleet_cfg: FleetConfig, http_cfg: HttpConfig) -> (HttpServer, Arc<Fleet>, Rig) {
+    let (started_tx, started_rx) = channel();
+    let (token_tx, token_rx) = channel();
+    let gate = Arc::new(Mutex::new(token_rx));
+    let fleet = Arc::new(
+        Fleet::start_with(fleet_cfg, move |wid| {
+            Ok(MockService { wid, started: started_tx.clone(), gate: Arc::clone(&gate) })
+        })
+        .expect("mock fleet starts"),
+    );
+    let srv = HttpServer::bind("127.0.0.1:0", Arc::clone(&fleet), http_cfg)
+        .expect("server binds an ephemeral port");
+    (srv, fleet, Rig { started: started_rx, tokens: token_tx })
+}
+
+/// Tear down server then fleet, asserting the front-end released every
+/// fleet handle.
+fn teardown(srv: HttpServer, fleet: Arc<Fleet>) {
+    srv.shutdown();
+    let fleet = Arc::try_unwrap(fleet)
+        .ok()
+        .expect("http shutdown releases every fleet handle");
+    fleet.shutdown().expect("fleet drains");
+}
+
+fn write_request(s: &mut TcpStream, method: &str, path: &str, body: &str) {
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nhost: e2e\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("request written");
+}
+
+/// Read one framed response off a keep-alive connection.
+fn read_response(r: &mut BufReader<TcpStream>) -> (u16, Vec<(String, String)>, Json) {
+    let mut line = String::new();
+    r.read_line(&mut line).expect("status line");
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|t| t.parse().ok())
+        .unwrap_or_else(|| panic!("malformed status line {line:?}"));
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).expect("header line");
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let (k, v) = h.split_once(':').expect("name: value");
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let len: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse().expect("numeric content-length"))
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).expect("framed body");
+    let body = Json::parse(String::from_utf8(body).expect("utf8 body").trim())
+        .expect("json body");
+    (status, headers, body)
+}
+
+/// One-shot request on a fresh connection.
+fn roundtrip(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let (status, _, json) = roundtrip_headers(addr, method, path, body);
+    (status, json)
+}
+
+fn roundtrip_headers(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, Vec<(String, String)>, Json) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    write_request(&mut s, method, path, body);
+    let mut r = BufReader::new(s);
+    read_response(&mut r)
+}
+
+#[test]
+fn forget_round_trips_with_summary_and_keep_alive() {
+    let (srv, fleet, rig) = serve(FleetConfig::default(), HttpConfig::default());
+    let addr = srv.local_addr();
+    rig.tokens.send(()).unwrap();
+    rig.tokens.send(()).unwrap();
+
+    // two requests over ONE connection: keep-alive framing must hold
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let mut r = BufReader::new(s.try_clone().expect("clone"));
+    write_request(&mut s, "POST", "/forget", r#"{"spec": "classes:4,1"}"#);
+    let (status, _, j) = read_response(&mut r);
+    assert_eq!(status, 200, "body: {j}");
+    assert_eq!(j.get("code").unwrap().as_str(), Some("done"));
+    let sm = j.get("summary").unwrap();
+    // the summary carries the canonical spec, not the submitted order
+    assert_eq!(sm.get("spec").unwrap().as_str(), Some("classes:1,4"));
+    assert_eq!(sm.get("stop_depth").unwrap().as_i64(), Some(2));
+    assert!(sm.get("service_ms").unwrap().as_f64().unwrap() >= 0.0);
+
+    write_request(&mut s, "GET", "/healthz", "");
+    let (status, _, j) = read_response(&mut r);
+    assert_eq!(status, 200);
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+
+    // structured spec form + stats on fresh connections
+    let (status, j) = roundtrip(addr, "POST", "/forget", r#"{"spec": {"class": 5}}"#);
+    assert_eq!(status, 200, "body: {j}");
+    let (status, j) = roundtrip(addr, "GET", "/stats", "");
+    assert_eq!(status, 200);
+    assert_eq!(j.get("rollup").unwrap().get("served").unwrap().as_i64(), Some(2));
+    assert!(j.get("rollup").unwrap().get("queue_p99_ms").is_some());
+
+    teardown(srv, fleet);
+}
+
+#[test]
+fn stalled_fleet_backpressure_is_429_with_retry_after() {
+    let cfg = FleetConfig { queue_cap: 1, ..FleetConfig::default() };
+    let (srv, fleet, rig) = serve(cfg, HttpConfig::default());
+    let addr = srv.local_addr();
+
+    // stall the single worker, then fill the 1-deep queue directly
+    let rx0 = fleet.submit(ForgetSpec::Class(0));
+    rig.started.recv_timeout(STARTED_TIMEOUT).unwrap();
+    let rx1 = fleet.submit(ForgetSpec::Class(1));
+
+    // a distinct wire request must shed immediately with 429
+    let (status, headers, j) = roundtrip_headers(addr, "POST", "/forget", r#"{"spec": "class:2"}"#);
+    assert_eq!(status, 429, "body: {j}");
+    assert!(
+        headers.iter().any(|(k, v)| k == "retry-after" && v == "1"),
+        "missing retry-after in {headers:?}"
+    );
+    assert_eq!(j.get("code").unwrap().as_str(), Some("backpressure"));
+    assert_eq!(j.get("queue_len").unwrap().as_i64(), Some(1));
+    assert_eq!(j.get("queue_cap").unwrap().as_i64(), Some(1));
+
+    rig.tokens.send(()).unwrap();
+    rig.tokens.send(()).unwrap();
+    rx0.recv().unwrap();
+    rx1.recv().unwrap();
+    teardown(srv, fleet);
+}
+
+#[test]
+fn missed_deadline_is_504() {
+    let (srv, fleet, rig) = serve(FleetConfig::default(), HttpConfig::default());
+    let addr = srv.local_addr();
+
+    // stall the worker so the wire request waits in the queue past its
+    // deadline; release the stall only once the wire request is provably
+    // admitted (admission starts its 5 ms clock), then 30 ms later
+    let rx0 = fleet.submit(ForgetSpec::Class(0));
+    rig.started.recv_timeout(STARTED_TIMEOUT).unwrap();
+    let tokens = rig.tokens.clone();
+    let watch = Arc::clone(&fleet);
+    let release = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        while watch.stats().admitted < 2 && t0.elapsed() < STARTED_TIMEOUT {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        std::thread::sleep(Duration::from_millis(30));
+        tokens.send(()).unwrap();
+    });
+
+    let body = r#"{"spec": "class:1", "deadline_ms": 5}"#;
+    let (status, j) = roundtrip(addr, "POST", "/forget", body);
+    assert_eq!(status, 504, "body: {j}");
+    assert_eq!(j.get("code").unwrap().as_str(), Some("expired"));
+    assert!(j.get("missed_by_ms").unwrap().as_f64().unwrap() > 0.0);
+
+    release.join().unwrap();
+    rx0.recv().unwrap();
+    teardown(srv, fleet);
+}
+
+#[test]
+fn bad_requests_answer_machine_readable_400s() {
+    let http_cfg = HttpConfig { bounds: Some((10, 100)), ..HttpConfig::default() };
+    let (srv, fleet, _rig) = serve(FleetConfig::default(), http_cfg);
+    let addr = srv.local_addr();
+
+    // malformed JSON: offset + context point at the offending byte
+    let (status, j) = roundtrip(addr, "POST", "/forget", r#"{"spec": bogus}"#);
+    assert_eq!(status, 400);
+    assert_eq!(j.get("code").unwrap().as_str(), Some("bad_request"));
+    assert_eq!(j.get("offset").unwrap().as_i64(), Some(9));
+    assert!(j.get("context").unwrap().as_str().unwrap().contains("bogus"));
+
+    // well-formed but invalid spec: offset points at the spec value
+    let (status, j) = roundtrip(addr, "POST", "/forget", r#"{"spec": "nope:1"}"#);
+    assert_eq!(status, 400);
+    assert_eq!(j.get("code").unwrap().as_str(), Some("invalid_spec"));
+    assert_eq!(j.get("offset").unwrap().as_i64(), Some(9));
+
+    // in-grammar but out of the dataset's range: rejected at admission
+    let (status, j) = roundtrip(addr, "POST", "/forget", r#"{"spec": "class:42"}"#);
+    assert_eq!(status, 400);
+    assert_eq!(j.get("code").unwrap().as_str(), Some("invalid_spec"));
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("out of range"));
+
+    // missing spec entirely
+    let (status, j) = roundtrip(addr, "POST", "/forget", r#"{"deadline_ms": 4}"#);
+    assert_eq!(status, 400);
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("missing `spec`"));
+
+    teardown(srv, fleet);
+}
+
+#[test]
+fn unknown_routes_methods_and_oversized_bodies() {
+    let http_cfg = HttpConfig { max_body_bytes: 64, ..HttpConfig::default() };
+    let (srv, fleet, rig) = serve(FleetConfig::default(), http_cfg);
+    let addr = srv.local_addr();
+
+    let (status, j) = roundtrip(addr, "GET", "/nope", "");
+    assert_eq!(status, 404);
+    assert_eq!(j.get("code").unwrap().as_str(), Some("not_found"));
+
+    let (status, headers, j) = roundtrip_headers(addr, "DELETE", "/forget", "");
+    assert_eq!(status, 405, "body: {j}");
+    assert!(headers.iter().any(|(k, v)| k == "allow" && v == "POST"));
+
+    let big = format!(r#"{{"spec": "class:1", "pad": "{}"}}"#, "x".repeat(128));
+    let (status, j) = roundtrip(addr, "POST", "/forget", &big);
+    assert_eq!(status, 413);
+    assert_eq!(j.get("code").unwrap().as_str(), Some("payload_too_large"));
+
+    // an execution failure maps to 500 with the formatted error
+    rig.tokens.send(()).unwrap();
+    let (status, j) = roundtrip(addr, "POST", "/forget", r#"{"spec": "class:13"}"#);
+    assert_eq!(status, 500);
+    assert_eq!(j.get("code").unwrap().as_str(), Some("failed"));
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("boom"));
+
+    teardown(srv, fleet);
+}
+
+#[test]
+fn shutdown_mid_connection_unblocks_the_client() {
+    let (srv, fleet, rig) = serve(FleetConfig::default(), HttpConfig::default());
+    let addr = srv.local_addr();
+    rig.tokens.send(()).unwrap();
+
+    // a live keep-alive connection, idle after one served request: the
+    // server side is blocked reading the next request head
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let mut r = BufReader::new(s.try_clone().expect("clone"));
+    write_request(&mut s, "POST", "/forget", r#"{"spec": "class:3"}"#);
+    let (status, _, _) = read_response(&mut r);
+    assert_eq!(status, 200);
+
+    // shutdown must not wait for the idle peer: it force-closes the
+    // registered connection and joins the accept pool promptly
+    let t0 = Instant::now();
+    srv.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "shutdown hung on an idle keep-alive connection"
+    );
+
+    // the client sees the close as EOF (or a reset), never a hang
+    let mut rest = Vec::new();
+    let _ = r.read_to_end(&mut rest);
+    assert!(rest.is_empty(), "no bytes after shutdown, got {}", rest.len());
+
+    let fleet = Arc::try_unwrap(fleet)
+        .ok()
+        .expect("http shutdown releases every fleet handle");
+    fleet.shutdown().expect("fleet drains");
+}
