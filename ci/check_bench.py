@@ -18,8 +18,8 @@ validate FILE
       serve/spec-* arm (ForgetSpec diversity through the fleet) must
       exist and cover all three spec shapes. The HTTP front-end must
       stay benched: a serve/http-loopback/workers=* socket arm plus the
-      parse-lazy / parse-tree pair, with the lazy path scanner at or
-      below the full tree parser on min_ms.
+      parse-lazy / parse-tree pair, with the lazy path scanner within a
+      25% noise margin of the full tree parser on min_ms.
 
 compare BASELINE CURRENT
     Fail when any case present in both files regressed by more than
@@ -134,12 +134,17 @@ def _check_serve(cases, path, min_speedup):
                  "serve/http-loopback/parse-tree"):
         if name not in cases:
             _fail(f"{path}: missing case {name!r}")
+    # Tolerance matches the compare gate's 25%: on smoke presets and
+    # noisy shared runners these microbenchmark minima can jitter past
+    # each other, so only a clear inversion fails (on dev boxes the
+    # scanner is ~an order of magnitude ahead, nowhere near the margin).
     lazy = cases["serve/http-loopback/parse-lazy"]["min_ms"]
     tree = cases["serve/http-loopback/parse-tree"]["min_ms"]
-    if lazy > tree:
+    if lazy > tree * 1.25:
         _fail(
-            f"{path}: lazy path scan ({lazy:.3f} ms) slower than the full "
-            f"tree parse ({tree:.3f} ms) — laziness stopped paying"
+            f"{path}: lazy path scan ({lazy:.3f} ms) clearly slower than the "
+            f"full tree parse ({tree:.3f} ms, +25% margin) — laziness "
+            "stopped paying"
         )
     print(
         f"serve guardrail OK: paced 4v1 speedup {speedup:.2f}x, "

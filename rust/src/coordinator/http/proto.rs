@@ -24,6 +24,8 @@ const MAX_DRAIN_BYTES: usize = 256 * 1024;
 pub struct Request {
     pub method: String,
     pub target: String,
+    /// `false` for HTTP/1.0, whose connection semantics differ.
+    pub http11: bool,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
 }
@@ -39,10 +41,16 @@ impl Request {
         self.target.split('?').next().unwrap_or(&self.target)
     }
 
-    /// Keep-alive semantics: HTTP/1.1 defaults to persistent unless the
-    /// client sent `Connection: close`.
+    /// Keep-alive semantics per version: HTTP/1.1 defaults to
+    /// persistent unless the client sent `Connection: close`; HTTP/1.0
+    /// defaults to close unless it sent `Connection: keep-alive` (a
+    /// plain 1.0 client would otherwise hang waiting for EOF).
     pub fn keep_alive(&self) -> bool {
-        !matches!(self.header("connection"), Some(v) if v.eq_ignore_ascii_case("close"))
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+            _ => self.http11,
+        }
     }
 }
 
@@ -104,6 +112,12 @@ pub fn read_request(
     if find("transfer-encoding").is_some() {
         return Err(ProtoError::Bad("chunked transfer encoding is not supported".to_string()));
     }
+    // RFC 9112 §6.3: duplicate Content-Length is a framing ambiguity
+    // (request-smuggling vector behind a proxy that honors the other
+    // occurrence) — reject outright rather than pick one.
+    if headers.iter().filter(|(k, _)| k == "content-length").count() > 1 {
+        return Err(ProtoError::Bad("duplicate content-length header".to_string()));
+    }
     let body = match find("content-length") {
         None => Vec::new(),
         Some(v) => {
@@ -120,7 +134,7 @@ pub fn read_request(
             buf
         }
     };
-    Ok(Some(Request { method, target, headers, body }))
+    Ok(Some(Request { method, target, http11: version == "HTTP/1.1", headers, body }))
 }
 
 /// Read one CRLF-terminated line (tolerating bare LF). `Ok(None)` on
@@ -260,6 +274,28 @@ mod tests {
     #[test]
     fn clean_eof_is_none() {
         assert!(req("").unwrap().is_none());
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let r = req("GET /healthz HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!r.http11);
+        assert!(!r.keep_alive(), "a plain 1.0 client expects EOF framing");
+        // explicit opt-in persists
+        let r = req("GET /healthz HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n").unwrap().unwrap();
+        assert!(r.keep_alive());
+        let r = req("GET /healthz HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert!(r.http11 && r.keep_alive());
+    }
+
+    #[test]
+    fn duplicate_content_length_is_rejected() {
+        let r = req("POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 5\r\n\r\nhello");
+        assert!(matches!(r, Err(ProtoError::Bad(_))));
+        // even when the values agree: the duplication itself is the
+        // smuggling vector
+        let r = req("POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nhi");
+        assert!(matches!(r, Err(ProtoError::Bad(_))));
     }
 
     #[test]

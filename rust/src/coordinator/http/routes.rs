@@ -26,6 +26,13 @@ use super::proto::{Request, Response};
 /// `(num_classes, num_samples)`. `None` defers validation to execution.
 pub type Bounds = Option<(usize, usize)>;
 
+/// Upper bound on a request's `deadline_ms` (one year). Anything larger
+/// is not a deadline a client means seriously, and the cap keeps the
+/// value safely inside `Duration::from_secs_f64`'s domain — unbounded
+/// input (`1e308`, or `1e999` = infinity after parse) would panic there,
+/// and a panic on the accept path kills an accept thread for good.
+const MAX_DEADLINE_MS: f64 = 365.0 * 24.0 * 3600.0 * 1e3;
+
 /// Dispatch one parsed request against the fleet.
 pub(super) fn handle(req: &Request, fleet: &Fleet, bounds: Bounds) -> Response {
     match (req.method.as_str(), req.path()) {
@@ -85,8 +92,8 @@ fn forget(req: &Request, fleet: &Fleet, bounds: Bounds) -> Response {
     }
     let rx = match scan::path_f64(body, &["deadline_ms"]) {
         Err(e) => return bad_json(e),
-        Ok(Some(ms)) if ms < 0.0 || ms.is_nan() => {
-            let msg = format!("`deadline_ms` must be >= 0, got {ms}");
+        Ok(Some(ms)) if !ms.is_finite() || ms < 0.0 || ms > MAX_DEADLINE_MS => {
+            let msg = format!("`deadline_ms` must be in [0, {MAX_DEADLINE_MS:.0}], got {ms}");
             return error(400, "bad_request", msg, None);
         }
         // explicit 0 = no deadline, overriding any fleet default
@@ -183,6 +190,7 @@ mod tests {
         Request {
             method: method.to_string(),
             target: target.to_string(),
+            http11: true,
             headers: vec![],
             body: body.as_bytes().to_vec(),
         }
@@ -278,6 +286,15 @@ mod tests {
 
         let r = req("POST", "/forget", r#"{"spec": "class:1", "deadline_ms": -5}"#);
         assert_eq!(handle(&r, &f, None).status, 400);
+
+        // out-of-Duration-domain values must 400, not panic the thread:
+        // 1e999 saturates to +inf on parse, 1e308 is finite but overflows
+        // Duration, NaN is unordered past a `< 0` guard
+        for ms in ["1e999", "1e308", "NaN"] {
+            let body = format!(r#"{{"spec": "class:1", "deadline_ms": {ms}}}"#);
+            let resp = handle(&req("POST", "/forget", &body), &f, None);
+            assert_eq!(resp.status, 400, "deadline_ms = {ms}");
+        }
     }
 
     #[test]

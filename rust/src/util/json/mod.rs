@@ -43,6 +43,13 @@ pub struct JsonError {
 /// [`JsonError::context`].
 pub const CONTEXT_BYTES: usize = 24;
 
+/// Maximum container nesting accepted by [`Json::parse`] and the
+/// [`scan`] skipper. Attacker-controlled request bodies can nest one
+/// level per two bytes (`[{[{...`), and unbounded recursion turns that
+/// into a stack overflow — which aborts the whole process, not just a
+/// thread. 128 is far beyond any real wire payload of ours.
+pub const MAX_DEPTH: usize = 128;
+
 impl JsonError {
     /// Build an error at `pos`, quoting the surrounding input.
     pub fn at(pos: usize, msg: impl Into<String>, src: &[u8]) -> JsonError {
@@ -73,7 +80,7 @@ impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), pos: 0 };
         p.skip_ws();
-        let v = p.value()?;
+        let v = p.value(0)?;
         p.skip_ws();
         if p.pos != p.b.len() {
             return Err(p.err("trailing data"));
@@ -238,15 +245,21 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, JsonError> {
+    /// `depth` counts enclosing containers; recursion is bounded by
+    /// [`MAX_DEPTH`] so hostile nesting errors instead of blowing the
+    /// thread stack (fatal: overflow aborts the process).
+    fn value(&mut self, depth: usize) -> Result<Json, JsonError> {
         self.skip_ws();
+        if depth > MAX_DEPTH {
+            return Err(self.err(&format!("nesting deeper than {MAX_DEPTH}")));
+        }
         match self.peek().ok_or_else(|| self.err("eof"))? {
             b'n' => self.lit("null", Json::Null),
             b't' => self.lit("true", Json::Bool(true)),
             b'f' => self.lit("false", Json::Bool(false)),
             b'"' => Ok(Json::Str(self.string()?)),
-            b'[' => self.array(),
-            b'{' => self.object(),
+            b'[' => self.array(depth),
+            b'{' => self.object(depth),
             b'-' | b'0'..=b'9' => self.number(),
             c => Err(self.err(&format!("unexpected byte `{}`", c as char))),
         }
@@ -318,7 +331,7 @@ impl<'a> Parser<'a> {
             .map_err(|_| self.err("bad number"))
     }
 
-    fn array(&mut self) -> Result<Json, JsonError> {
+    fn array(&mut self, depth: usize) -> Result<Json, JsonError> {
         self.expect(b'[')?;
         let mut out = Vec::new();
         self.skip_ws();
@@ -327,7 +340,7 @@ impl<'a> Parser<'a> {
             return Ok(Json::Arr(out));
         }
         loop {
-            out.push(self.value()?);
+            out.push(self.value(depth + 1)?);
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
@@ -337,7 +350,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, JsonError> {
+    fn object(&mut self, depth: usize) -> Result<Json, JsonError> {
         self.expect(b'{')?;
         let mut out = Vec::new();
         self.skip_ws();
@@ -350,7 +363,7 @@ impl<'a> Parser<'a> {
             let k = self.string()?;
             self.skip_ws();
             self.expect(b':')?;
-            let v = self.value()?;
+            let v = self.value(depth + 1)?;
             out.push((k, v));
             self.skip_ws();
             match self.bump() {
@@ -472,6 +485,18 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        // within the cap: parses fine
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        // a 64 KiB-body-sized hostile nest must be a JsonError, not a
+        // stack overflow (which would abort the process)
+        let hostile = "[{\"a\":".repeat(8 * 1024);
+        let e = Json::parse(&hostile).unwrap_err();
+        assert!(e.msg.contains("nesting"), "{}", e.msg);
     }
 
     #[test]

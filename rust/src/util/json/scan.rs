@@ -17,7 +17,7 @@
 //! Errors on the traversed prefix carry the document byte offset and
 //! context like the full parser's.
 
-use super::{Json, JsonError};
+use super::{Json, JsonError, MAX_DEPTH};
 
 /// A value located by [`path`]: the raw JSON text of the value plus its
 /// byte offset in the scanned document.
@@ -205,8 +205,7 @@ impl<'a> Skip<'a> {
         self.ws();
         match self.peek().ok_or_else(|| self.err("eof"))? {
             b'"' => self.string(),
-            b'{' => self.container(b'{', b'}'),
-            b'[' => self.container(b'[', b']'),
+            b'{' | b'[' => self.container(),
             b't' => self.lit("true"),
             b'f' => self.lit("false"),
             b'n' => self.lit("null"),
@@ -239,30 +238,35 @@ impl<'a> Skip<'a> {
         }
     }
 
-    /// Skip a `{...}` / `[...]` container by depth counting; strings
+    /// Skip the `{...}` / `[...]` container at the cursor. Iterative —
+    /// an explicit stack of expected closers, not recursion, so hostile
+    /// nesting (`[{[{...` one level per two body bytes) cannot overflow
+    /// the thread stack; past [`MAX_DEPTH`] it is an error. Strings
     /// inside are framed properly so braces in text don't miscount.
-    fn container(&mut self, open: u8, close: u8) -> Result<(), JsonError> {
-        self.expect(open)?;
-        let mut depth = 1usize;
-        while depth > 0 {
+    fn container(&mut self) -> Result<(), JsonError> {
+        let mut closers = Vec::new();
+        loop {
             match self.peek().ok_or_else(|| self.err("eof in container"))? {
                 b'"' => self.string()?,
-                c if c == open => {
-                    depth += 1;
+                c @ (b'{' | b'[') => {
+                    if closers.len() >= MAX_DEPTH {
+                        return Err(self.err(&format!("nesting deeper than {MAX_DEPTH}")));
+                    }
+                    closers.push(if c == b'{' { b'}' } else { b']' });
                     self.pos += 1;
                 }
-                c if c == close => {
-                    depth -= 1;
+                c @ (b'}' | b']') => {
+                    if closers.pop() != Some(c) {
+                        return Err(self.err(&format!("mismatched `{}`", c as char)));
+                    }
                     self.pos += 1;
+                    if closers.is_empty() {
+                        return Ok(());
+                    }
                 }
-                // the sibling bracket kind frames itself recursively so
-                // `[{`/`}]` nesting cannot confuse the count
-                b'{' => self.container(b'{', b'}')?,
-                b'[' => self.container(b'[', b']')?,
                 _ => self.pos += 1,
             }
         }
-        Ok(())
     }
 
     fn lit(&mut self, s: &str) -> Result<(), JsonError> {
@@ -348,6 +352,23 @@ mod tests {
         assert!(!e.context.is_empty());
         assert!(path("[1,2]", &["spec"]).is_err(), "top level must be an object");
         assert!(path(r#"{"spec""#, &["spec"]).is_err());
+    }
+
+    #[test]
+    fn hostile_nesting_is_an_error_not_a_stack_overflow() {
+        // one container level per ~6 bytes, scaled to the 64 KiB default
+        // body cap: skipping this must error, not abort the process
+        let deep = format!(r#"{{"a": {}null, "spec": 1}}"#, r#"[{"x":"#.repeat(16 * 1024));
+        let e = path(&deep, &["spec"]).unwrap_err();
+        assert!(e.msg.contains("nesting"), "{}", e.msg);
+        // within the cap, deep-but-sane nesting still skips fine
+        let ok = format!(r#"{{"a": {}1{}, "spec": 7}}"#, "[".repeat(100), "]".repeat(100));
+        assert_eq!(path_f64(&ok, &["spec"]).unwrap(), Some(7.0));
+    }
+
+    #[test]
+    fn mismatched_brackets_error_while_skipping() {
+        assert!(path(r#"{"a": [1, 2}, "spec": 1}"#, &["spec"]).is_err());
     }
 
     #[test]

@@ -303,6 +303,55 @@ fn unknown_routes_methods_and_oversized_bodies() {
 }
 
 #[test]
+fn http10_gets_close_framing() {
+    let (srv, fleet, _rig) = serve(FleetConfig::default(), HttpConfig::default());
+    let addr = srv.local_addr();
+
+    // a plain 1.0 client relies on EOF framing: the server must answer
+    // `connection: close` and actually close, not hold keep-alive
+    let mut s = TcpStream::connect(addr).expect("connect");
+    write!(s, "GET /healthz HTTP/1.0\r\nhost: e2e\r\n\r\n").expect("request written");
+    let mut r = BufReader::new(s);
+    let (status, headers, _) = read_response(&mut r);
+    assert_eq!(status, 200);
+    assert!(
+        headers.iter().any(|(k, v)| k == "connection" && v == "close"),
+        "HTTP/1.0 default must be close, got {headers:?}"
+    );
+    let mut rest = Vec::new();
+    r.read_to_end(&mut rest).expect("EOF after a 1.0 response");
+    assert!(rest.is_empty());
+
+    teardown(srv, fleet);
+}
+
+#[test]
+fn hostile_payloads_answer_400_and_the_server_survives() {
+    let (srv, fleet, rig) = serve(FleetConfig::default(), HttpConfig::default());
+    let addr = srv.local_addr();
+
+    // deadline values outside Duration's domain used to panic the accept
+    // thread (permanently with the default 2-thread pool); deeply nested
+    // bodies used to overflow the scanner's stack and abort the process
+    for _ in 0..3 {
+        let body = r#"{"spec": "class:1", "deadline_ms": 1e999}"#;
+        let (status, j) = roundtrip(addr, "POST", "/forget", body);
+        assert_eq!(status, 400, "body: {j}");
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("deadline_ms"));
+    }
+    let nested = format!(r#"{{"spec": {}null}}"#, r#"[{"x":"#.repeat(5_000));
+    let (status, j) = roundtrip(addr, "POST", "/forget", &nested);
+    assert_eq!(status, 400, "body: {j}");
+
+    // both accept threads are still alive and serving
+    rig.tokens.send(()).unwrap();
+    let (status, j) = roundtrip(addr, "POST", "/forget", r#"{"spec": "class:1"}"#);
+    assert_eq!(status, 200, "body: {j}");
+
+    teardown(srv, fleet);
+}
+
+#[test]
 fn shutdown_mid_connection_unblocks_the_client() {
     let (srv, fleet, rig) = serve(FleetConfig::default(), HttpConfig::default());
     let addr = srv.local_addr();
