@@ -19,7 +19,10 @@ validate FILE
       exist and cover all three spec shapes. The HTTP front-end must
       stay benched: a serve/http-loopback/workers=* socket arm plus the
       parse-lazy / parse-tree pair, with the lazy path scanner within a
-      25% noise margin of the full tree parser on min_ms.
+      25% noise margin of the full tree parser on min_ms. A serve/chaos-*
+      arm must exist, must actually have injected faults (failed and
+      respawns > 0), and must keep >= 50% of the fault-free paced
+      4-worker arm's rps.
 
 compare BASELINE CURRENT
     Fail when any case present in both files regressed by more than
@@ -37,7 +40,13 @@ import os
 import sys
 
 # compare(): prefixes whose min_ms is runner-noise dominated.
-NOISY_PREFIXES = ("serve/host/", "serve/coalesce-burst", "serve/spec-", "prepare ")
+NOISY_PREFIXES = (
+    "serve/host/",
+    "serve/coalesce-burst",
+    "serve/spec-",
+    "serve/chaos-",
+    "prepare ",
+)
 
 
 def _fail(msg):
@@ -146,10 +155,36 @@ def _check_serve(cases, path, min_speedup):
             f"full tree parse ({tree:.3f} ms, +25% margin) — laziness "
             "stopped paying"
         )
+    # chaos arm: supervision must stay benched, and a fleet absorbing
+    # injected panics (plus the respawns they cost) must keep at least
+    # half the fault-free paced arm's throughput
+    chaos_arms = [n for n in cases if n.startswith("serve/chaos-")]
+    if not chaos_arms:
+        _fail(f"{path}: no serve/chaos-* arm (panic supervision unbenched)")
+    chaos = cases[chaos_arms[0]]
+    chaos_rps = chaos.get("rps")
+    if not isinstance(chaos_rps, (int, float)) or chaos_rps <= 0:
+        _fail(f"{path}: {chaos_arms[0]!r} has no positive 'rps' field")
+    for field in ("failed", "respawns"):
+        if not isinstance(chaos.get(field), (int, float)) or chaos[field] <= 0:
+            _fail(
+                f"{path}: {chaos_arms[0]!r} injected no faults "
+                f"({field} = {chaos.get(field)!r}) — the chaos arm ran fault-free"
+            )
+    paced_rps = cases["serve/paced/workers=4"].get("rps")
+    if not isinstance(paced_rps, (int, float)) or paced_rps <= 0:
+        _fail(f"{path}: serve/paced/workers=4 has no positive 'rps' field")
+    if chaos_rps < 0.5 * paced_rps:
+        _fail(
+            f"{path}: chaos throughput {chaos_rps:.3f} rps below half the "
+            f"fault-free paced arm ({paced_rps:.3f} rps) — respawns are "
+            "eating the fleet"
+        )
     print(
         f"serve guardrail OK: paced 4v1 speedup {speedup:.2f}x, "
         f"{len(spec_arms)} spec arm(s), lazy scan "
-        f"{tree / max(lazy, 1e-9):.1f}x faster than tree parse"
+        f"{tree / max(lazy, 1e-9):.1f}x faster than tree parse, "
+        f"chaos at {chaos_rps / paced_rps:.2f}x of fault-free throughput"
     )
 
 

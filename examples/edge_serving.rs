@@ -72,6 +72,7 @@ fn main() -> anyhow::Result<()> {
             deadline: None,
             batch_max: 2,
             pacing: Pacing::Host,
+            respawn_giveup: 5,
         },
     )?);
 

@@ -28,6 +28,11 @@
 //!   field extraction: the lazy path scanner (`util::json::scan`) against
 //!   the full tree parser on realistic wire bodies. CI's validate step
 //!   asserts lazy stays at or below tree.
+//! * `serve/chaos-paced/workers=4` — the paced 4-worker arm under a
+//!   `testkit::faults` plan injecting engine panics mid-dampen: panicked
+//!   requests answer `Failed`, the worker respawns, and CI's validate
+//!   step asserts chaos throughput stays at or above half the
+//!   fault-free paced arm.
 //!
 //! `FICABU_BENCH_PRESET=smoke` shrinks the request counts for CI.
 
@@ -44,6 +49,7 @@ use ficabu::coordinator::{
 };
 use ficabu::exp::tables::mode_config;
 use ficabu::exp::{self, DatasetKind, Mode, Prepared, PrepareOpts};
+use ficabu::testkit::faults;
 use ficabu::unlearn::ForgetSpec;
 use ficabu::util::json::{scan, Json};
 use harness::Bench;
@@ -92,6 +98,7 @@ fn run_arm(
             // measures worker scaling, not claim-order luck
             batch_max: 1,
             pacing,
+            respawn_giveup: 5,
         },
     )?;
     let t0 = Instant::now();
@@ -134,6 +141,7 @@ fn run_coalesce_burst(
             deadline: None,
             batch_max: 1,
             pacing: Pacing::Host,
+            respawn_giveup: 5,
         },
     )?;
     let t0 = Instant::now();
@@ -194,6 +202,7 @@ fn run_spec_mix(
             deadline: None,
             batch_max: 1,
             pacing: Pacing::Host,
+            respawn_giveup: 5,
         },
     )?;
     let t0 = Instant::now();
@@ -281,6 +290,7 @@ fn run_http_arm(
             deadline: None,
             batch_max: 1,
             pacing,
+            respawn_giveup: 5,
         },
     )?);
     let clients = (workers * 2).clamp(1, requests.max(1));
@@ -329,6 +339,101 @@ fn run_http_arm(
         wall_ms,
         wall_ms / requests as f64,
         &extras,
+    );
+    Ok(())
+}
+
+/// Chaos arm: the paced fleet under an injected-panic fault plan.
+/// Panicked requests answer `Failed` (unpaced) and cost their worker a
+/// respawn; everything else rides the normal paced path. The validate
+/// gate asserts chaos throughput ≥ half the fault-free paced arm.
+fn run_chaos_arm(
+    b: &Bench,
+    prep: &Prepared,
+    shared: &SharedMeta,
+    workers: usize,
+    requests: usize,
+    pacing: Pacing,
+    plan: &str,
+) -> anyhow::Result<()> {
+    faults::arm(plan)?;
+    // Injected panics are the point of this arm: silence the default
+    // hook's per-panic backtrace spam for the duration.
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let out = chaos_arm_body(b, prep, shared, workers, requests, pacing, plan);
+    std::panic::set_hook(hook);
+    faults::clear();
+    out
+}
+
+fn chaos_arm_body(
+    b: &Bench,
+    prep: &Prepared,
+    shared: &SharedMeta,
+    workers: usize,
+    requests: usize,
+    pacing: Pacing,
+    plan: &str,
+) -> anyhow::Result<()> {
+    let num_classes = prep.model.meta.num_classes;
+    let fleet = Fleet::start(
+        spec_for(prep, shared),
+        FleetConfig {
+            workers,
+            queue_cap: requests + 4,
+            deadline: None,
+            batch_max: 1,
+            pacing,
+            respawn_giveup: 5,
+        },
+    )?;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| fleet.submit(ForgetSpec::Class(i % num_classes)))
+        .collect();
+    let (mut done, mut failed) = (0usize, 0usize);
+    for rx in rxs {
+        match rx.recv() {
+            Ok(Reply::Done(_)) => done += 1,
+            Ok(Reply::Failed(msg)) => {
+                anyhow::ensure!(
+                    msg.contains("injected fault"),
+                    "chaos: unexpected real failure: {msg}"
+                );
+                failed += 1;
+            }
+            Ok(other) => anyhow::bail!("chaos: unexpected reply {other:?}"),
+            Err(e) => anyhow::bail!("chaos: reply channel dropped without an answer ({e})"),
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let stats = fleet.shutdown()?;
+    let total = stats.merged();
+    anyhow::ensure!(done + failed == requests, "every chaos request is answered");
+    anyhow::ensure!(failed >= 1, "plan `{plan}` injected no panic over {requests} requests");
+    anyhow::ensure!(done >= 1, "chaos arm must still serve successes");
+    anyhow::ensure!(total.respawns >= 1, "a panicked worker must respawn");
+    let rps = requests as f64 / (wall_ms / 1e3);
+    let mut extras = vec![
+        ("rps", rps),
+        ("workers", workers as f64),
+        ("done", done as f64),
+        ("failed", failed as f64),
+        ("panics", total.panics as f64),
+        ("respawns", total.respawns as f64),
+    ];
+    extras.extend(total.percentile_fields());
+    b.record_case(
+        &format!("serve/chaos-paced/workers={workers}"),
+        requests,
+        wall_ms,
+        wall_ms / requests as f64,
+        &extras,
+    );
+    println!(
+        "[serve] chaos ({plan}): {done} done / {failed} failed, {} panics, {} respawns",
+        total.panics, total.respawns
     );
     Ok(())
 }
@@ -458,6 +563,15 @@ fn main() -> anyhow::Result<()> {
 
     // --- wire path: paced fleet behind the HTTP front-end over loopback
     run_http_arm(&b, &prep, &shared, 2, if smoke { 6 } else { 12 }, paced)?;
+
+    // --- chaos arm: the paced 4-worker fleet under injected panics.
+    // One-shot Nth triggers, not `everyN`: requests run a data-dependent
+    // number of dampen depths, so a periodic trigger could in principle
+    // panic every request; fixed hit counts keep the failed/done split
+    // deterministic (each pass hits `dampen` at least once, so with
+    // `requests` >= the largest N every trigger is guaranteed to fire).
+    let chaos_plan = if smoke { "dampen:2:panic" } else { "dampen:3:panic;dampen:11:panic" };
+    run_chaos_arm(&b, &prep, &shared, 4, paced_requests, paced, chaos_plan)?;
 
     // --- request-body parsing: lazy path scan vs full tree parse
     run_parse_arms(&b);

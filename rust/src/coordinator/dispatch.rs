@@ -31,9 +31,23 @@
 //! [`Fleet::shutdown`] stops admission, then lets the workers drain the
 //! queue deterministically: every admitted request is answered before
 //! the threads exit.
+//!
+//! **Supervision.** A panic inside the unlearning engine is not fatal:
+//! `serve_entry` catches it, answers every fanned-out requester with
+//! [`Reply::Failed`] (panic payload in the message), pushes the rest of
+//! the claimed batch back to the queue front, and the worker thread —
+//! which doubles as its own supervisor — discards the (possibly
+//! corrupted) replica and rebuilds a fresh one from the retained
+//! factory under capped exponential backoff (10 ms · 2^n, capped at
+//! 1 s). After [`FleetConfig::respawn_giveup`] consecutive build
+//! failures the worker is declared dead; when every worker is dead the
+//! queue is drained with `Failed` replies and later submissions fail at
+//! admission. [`FleetStats::alive`] plus per-worker `panics`/`respawns`
+//! counters expose the supervision state to `/stats` and `/healthz`.
 
 use std::collections::VecDeque;
 use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -141,6 +155,9 @@ pub struct FleetConfig {
     /// Max entries one worker claims per pass.
     pub batch_max: usize,
     pub pacing: Pacing,
+    /// Consecutive replica-build failures after which a panicked
+    /// worker's supervisor stops respawning and declares it dead.
+    pub respawn_giveup: usize,
 }
 
 impl Default for FleetConfig {
@@ -151,8 +168,23 @@ impl Default for FleetConfig {
             deadline: None,
             batch_max: 4,
             pacing: Pacing::Host,
+            respawn_giveup: 5,
         }
     }
+}
+
+/// Supervision backoff: base · 2^attempt, capped.
+const RESPAWN_BACKOFF_BASE_MS: u64 = 10;
+const RESPAWN_BACKOFF_CAP_MS: u64 = 1000;
+
+/// Lifecycle of one worker replica as seen by the supervisor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WorkerStatus {
+    Alive,
+    /// Panicked; its supervisor is rebuilding the replica.
+    Respawning,
+    /// Respawn gave up (or the thread exited); never serves again.
+    Dead,
 }
 
 /// Everything a worker thread needs to rebuild its `EdgeServer` replica
@@ -181,6 +213,9 @@ pub trait UnlearnService {
 #[derive(Debug, Clone)]
 pub struct FleetStats {
     pub workers: usize,
+    /// Workers currently alive (not panicked-and-respawning, not dead).
+    /// `alive < workers` is the degraded state `/healthz` reports as 503.
+    pub alive: usize,
     /// Requests admitted as new queue entries.
     pub admitted: u64,
     /// Requests coalesced onto an already-queued entry.
@@ -208,6 +243,7 @@ impl FleetStats {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("workers", Json::from(self.workers)),
+            ("alive", Json::from(self.alive)),
             ("admitted", Json::from(self.admitted as usize)),
             ("coalesced", Json::from(self.coalesced as usize)),
             ("shed_backpressure", Json::from(self.shed_backpressure as usize)),
@@ -233,6 +269,7 @@ struct DispatchState {
     coalesced: u64,
     shed_backpressure: u64,
     per_worker: Vec<QueueStats>,
+    status: Vec<WorkerStatus>,
 }
 
 struct Shared {
@@ -263,12 +300,15 @@ impl Fleet {
         S: UnlearnService + 'static,
         F: Fn(usize) -> Result<S> + Send + Sync + 'static,
     {
-        if cfg.workers == 0 || cfg.queue_cap == 0 || cfg.batch_max == 0 {
+        if cfg.workers == 0 || cfg.queue_cap == 0 || cfg.batch_max == 0 || cfg.respawn_giveup == 0
+        {
             bail!(
-                "fleet config: workers ({}), queue_cap ({}) and batch_max ({}) must all be >= 1",
+                "fleet config: workers ({}), queue_cap ({}), batch_max ({}) and \
+                 respawn_giveup ({}) must all be >= 1",
                 cfg.workers,
                 cfg.queue_cap,
-                cfg.batch_max
+                cfg.batch_max,
+                cfg.respawn_giveup
             );
         }
         let shared = Arc::new(Shared {
@@ -279,6 +319,7 @@ impl Fleet {
                 coalesced: 0,
                 shed_backpressure: 0,
                 per_worker: vec![QueueStats::default(); cfg.workers],
+                status: vec![WorkerStatus::Alive; cfg.workers],
             }),
             cv: Condvar::new(),
             cfg,
@@ -296,7 +337,9 @@ impl Fleet {
                     // Build the replica in-thread: compiled modules are
                     // not Send, only the spec travels. (`*f`: Arc has no
                     // Fn impl, the closure is called through the deref.)
-                    let svc = match (*f)(wid) {
+                    // The factory is retained for the fleet's lifetime:
+                    // it is the respawn source after a panic.
+                    let mut svc = match (*f)(wid) {
                         Ok(s) => {
                             let _ = ack.send(Ok(()));
                             s
@@ -306,13 +349,29 @@ impl Fleet {
                             return;
                         }
                     };
-                    // The factory (owning the WorkerSpec's parameter
-                    // store, dataset, importance) is startup-only state:
-                    // release it before serving so the last worker to
-                    // finish startup frees the spec for the fleet's
-                    // lifetime.
-                    drop(f);
-                    worker_loop(wid, &sh, svc);
+                    // The worker thread is its own supervisor: serve
+                    // until shutdown, and on an engine panic discard the
+                    // replica and rebuild under backoff.
+                    loop {
+                        match worker_loop(wid, &sh, &mut svc) {
+                            WorkerExit::Shutdown => return,
+                            WorkerExit::Panicked => {
+                                set_status(&sh, wid, WorkerStatus::Respawning);
+                                match respawn(wid, &sh, &*f) {
+                                    Some(fresh) => {
+                                        svc = fresh;
+                                        let mut st = sh.m.lock().unwrap();
+                                        st.status[wid] = WorkerStatus::Alive;
+                                        st.per_worker[wid].respawns += 1;
+                                    }
+                                    None => {
+                                        declare_dead(&sh, wid);
+                                        return;
+                                    }
+                                }
+                            }
+                        }
+                    }
                 })?;
             handles.push(h);
         }
@@ -365,6 +424,12 @@ impl Fleet {
         let mut st = self.shared.m.lock().unwrap();
         if st.shutdown {
             let _ = tx.send(Reply::Failed("fleet is shutting down".to_string()));
+            return rx;
+        }
+        if st.status.iter().all(|s| *s == WorkerStatus::Dead) {
+            let _ = tx.send(Reply::Failed(
+                "no live fleet workers (every replica died and respawn gave up)".to_string(),
+            ));
             return rx;
         }
         if let Some(e) = st.queue.iter_mut().find(|e| e.key == key) {
@@ -426,6 +491,20 @@ impl Fleet {
                 panicked += 1;
             }
         }
+        // Engine panics are caught in-thread, so the only way entries
+        // survive the workers' drain is every worker having died (or a
+        // dispatcher bug); answer them rather than dropping the senders.
+        let leftovers: Vec<Entry> = {
+            let mut st = self.shared.m.lock().unwrap();
+            st.queue.drain(..).collect()
+        };
+        for e in leftovers {
+            for tx in e.replies {
+                let _ = tx.send(Reply::Failed(
+                    "fleet stopped before this request was served".to_string(),
+                ));
+            }
+        }
         if panicked > 0 {
             bail!("{panicked} fleet worker(s) panicked");
         }
@@ -447,6 +526,7 @@ fn snapshot(sh: &Shared) -> FleetStats {
     let st = sh.m.lock().unwrap();
     FleetStats {
         workers: st.per_worker.len(),
+        alive: st.status.iter().filter(|s| **s == WorkerStatus::Alive).count(),
         admitted: st.admitted,
         coalesced: st.coalesced,
         shed_backpressure: st.shed_backpressure,
@@ -455,7 +535,73 @@ fn snapshot(sh: &Shared) -> FleetStats {
     }
 }
 
-fn worker_loop<S: UnlearnService>(wid: usize, sh: &Shared, mut svc: S) {
+/// Why a worker's serve loop returned to its supervisor.
+enum WorkerExit {
+    Shutdown,
+    /// The service panicked mid-request; the replica must be rebuilt.
+    Panicked,
+}
+
+/// What happened to one served entry.
+enum ServeOutcome {
+    Answered,
+    Panicked,
+}
+
+fn set_status(sh: &Shared, wid: usize, status: WorkerStatus) {
+    sh.m.lock().unwrap().status[wid] = status;
+}
+
+/// Mark `wid` dead; if it was the last non-dead worker, drain the queue
+/// with `Failed` replies — nothing will ever claim those entries again.
+fn declare_dead(sh: &Shared, wid: usize) {
+    let leftovers: Vec<Entry> = {
+        let mut st = sh.m.lock().unwrap();
+        st.status[wid] = WorkerStatus::Dead;
+        if st.status.iter().all(|s| *s == WorkerStatus::Dead) {
+            st.queue.drain(..).collect()
+        } else {
+            Vec::new()
+        }
+    };
+    for e in leftovers {
+        for tx in e.replies {
+            let _ = tx.send(Reply::Failed(
+                "no live fleet workers (every replica died and respawn gave up)".to_string(),
+            ));
+        }
+    }
+}
+
+/// Rebuild a replica after a panic: sleep the capped exponential
+/// backoff, then try the factory — a factory error *or panic* counts as
+/// one consecutive failure. Returns `None` after
+/// [`FleetConfig::respawn_giveup`] failures or on fleet shutdown.
+fn respawn<S, F>(wid: usize, sh: &Shared, f: &F) -> Option<S>
+where
+    F: Fn(usize) -> Result<S>,
+{
+    for attempt in 0..sh.cfg.respawn_giveup {
+        let ms = RESPAWN_BACKOFF_BASE_MS
+            .saturating_mul(1u64 << attempt.min(20) as u32)
+            .min(RESPAWN_BACKOFF_CAP_MS);
+        std::thread::sleep(Duration::from_millis(ms));
+        if sh.m.lock().unwrap().shutdown {
+            return None;
+        }
+        // `respawn` fault seam: lets chaos tests and CI force build
+        // failures without a failing factory.
+        let built = catch_unwind(AssertUnwindSafe(|| {
+            crate::testkit::faults::hit("respawn").and_then(|()| f(wid))
+        }));
+        if let Ok(Ok(svc)) = built {
+            return Some(svc);
+        }
+    }
+    None
+}
+
+fn worker_loop<S: UnlearnService>(wid: usize, sh: &Shared, svc: &mut S) -> WorkerExit {
     loop {
         let mut batch: Vec<Entry> = Vec::new();
         {
@@ -474,18 +620,44 @@ fn worker_loop<S: UnlearnService>(wid: usize, sh: &Shared, mut svc: S) {
                     break;
                 }
                 if st.shutdown {
-                    return;
+                    return WorkerExit::Shutdown;
                 }
                 st = sh.cv.wait(st).unwrap();
             }
         }
-        for entry in batch {
-            serve_entry(wid, sh, &mut svc, entry);
+        let mut it = batch.into_iter();
+        while let Some(entry) = it.next() {
+            if let ServeOutcome::Panicked = serve_entry(wid, sh, svc, entry) {
+                // the replica may be corrupted: hand the rest of the
+                // claimed batch back (in order, at the front) for the
+                // respawned replica or a peer to serve
+                let rest: Vec<Entry> = it.collect();
+                if !rest.is_empty() {
+                    let mut st = sh.m.lock().unwrap();
+                    for e in rest.into_iter().rev() {
+                        st.queue.push_front(e);
+                    }
+                    drop(st);
+                    sh.cv.notify_all();
+                }
+                return WorkerExit::Panicked;
+            }
         }
     }
 }
 
-fn serve_entry<S: UnlearnService>(wid: usize, sh: &Shared, svc: &mut S, e: Entry) {
+/// Best-effort text of a panic payload for the `Failed` reply.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn serve_entry<S: UnlearnService>(wid: usize, sh: &Shared, svc: &mut S, e: Entry) -> ServeOutcome {
     let queue_ms = e.enqueued_at.elapsed().as_secs_f64() * 1e3;
     if let Some(dl) = e.deadline {
         let now = Instant::now();
@@ -495,11 +667,32 @@ fn serve_entry<S: UnlearnService>(wid: usize, sh: &Shared, svc: &mut S, e: Entry
             for tx in e.replies {
                 let _ = tx.send(Reply::Expired { missed_by_ms });
             }
-            return;
+            return ServeOutcome::Answered;
         }
     }
     let t0 = Instant::now();
-    let out = svc.unlearn(e.key.spec());
+    // Panic isolation: a panicking engine answers its requesters and
+    // costs one replica, never the reply channels or the whole fleet.
+    let out = match catch_unwind(AssertUnwindSafe(|| svc.unlearn(e.key.spec()))) {
+        Ok(result) => result,
+        Err(payload) => {
+            let service_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let timing = Timing { queue_ms, service_ms };
+            {
+                // the in-flight request counts as a failure: it held the
+                // engine for its full service time and got an error reply
+                let mut st = sh.m.lock().unwrap();
+                st.per_worker[wid].record(&timing, false);
+                st.per_worker[wid].panics += 1;
+            }
+            let msg =
+                format!("worker {wid} panicked mid-request: {}", panic_message(&*payload));
+            for tx in e.replies {
+                let _ = tx.send(Reply::Failed(msg.clone()));
+            }
+            return ServeOutcome::Panicked;
+        }
+    };
     let mut service_ms = t0.elapsed().as_secs_f64() * 1e3;
     if let Pacing::SimDevice { floor_ms } = sh.cfg.pacing {
         if let Ok(s) = &out {
@@ -526,4 +719,5 @@ fn serve_entry<S: UnlearnService>(wid: usize, sh: &Shared, svc: &mut S, e: Entry
             }
         }
     }
+    ServeOutcome::Answered
 }

@@ -23,6 +23,12 @@
 //! — admission control stays the fleet's job ([`Reply::Backpressure`] →
 //! 429), the HTTP layer never queues.
 //!
+//! Health is supervision-aware: `GET /healthz` answers 200 only while
+//! every fleet worker is alive, and 503 with
+//! `{"ok":false,"alive":k,"workers":n}` while any worker is dead or
+//! respawning after a panic — the signal a load balancer uses to drain
+//! a degraded device.
+//!
 //! Shutdown is deliberate: [`HttpServer::shutdown`] flips the stop flag,
 //! force-closes every registered live connection (unblocking reads
 //! mid-keep-alive), wakes the accept threads with dummy connections, and
@@ -245,6 +251,7 @@ mod tests {
                 sim_energy_mj: 1.0,
                 sim_energy_vs_ssd_pct: 8.0,
                 sim_ms: 0.0,
+                rolled_back: false,
                 timing: Timing { queue_ms: 0.0, service_ms: 0.0 },
             })
         }

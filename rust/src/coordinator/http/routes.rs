@@ -4,7 +4,7 @@
 //! |-----------------|---------------------------------------------------|
 //! | `POST /forget`  | the [`Reply`] wire body; status from its code     |
 //! | `GET /stats`    | the fleet's percentile rollup, as JSON            |
-//! | `GET /healthz`  | `{"ok":true,...}` fleet liveness                  |
+//! | `GET /healthz`  | fleet liveness: 200 `{"ok":true,...}`, 503 degraded |
 //!
 //! `/forget` bodies are scanned lazily ([`scan::path`]) for the two
 //! fields the admission path needs — `spec` (the CLI grammar string or
@@ -39,11 +39,16 @@ pub(super) fn handle(req: &Request, fleet: &Fleet, bounds: Bounds) -> Response {
         ("POST", "/forget") => forget(req, fleet, bounds),
         ("GET", "/stats") => Response::json(200, &fleet.stats().to_json()),
         ("GET", "/healthz") => {
+            // Degraded contract: any dead or respawning worker answers
+            // 503 so a load balancer can drain the device; 200 only
+            // with the full fleet alive.
             let s = fleet.stats();
+            let ok = s.alive == s.workers;
             Response::json(
-                200,
+                if ok { 200 } else { 503 },
                 &Json::obj(vec![
-                    ("ok", Json::from(true)),
+                    ("ok", Json::from(ok)),
+                    ("alive", Json::from(s.alive)),
                     ("workers", Json::from(s.workers)),
                     ("queue_depth", Json::from(s.queue_depth)),
                 ]),
@@ -116,9 +121,15 @@ fn forget(req: &Request, fleet: &Fleet, bounds: Bounds) -> Response {
                 resp
             }
         }
-        // the worker dropped the reply channel without answering — only
-        // possible if its thread died mid-service
-        Err(_) => error(500, "failed", "fleet dropped the request", None),
+        // the worker dropped the reply channel without answering —
+        // engine panics are caught and answered, so this is a worker
+        // thread dying outright (or a dispatcher bug)
+        Err(_) => error(
+            500,
+            "worker-lost",
+            "the worker serving this request died before answering",
+            None,
+        ),
     }
 }
 
@@ -177,6 +188,7 @@ mod tests {
                 sim_energy_mj: 1.0,
                 sim_energy_vs_ssd_pct: 8.0,
                 sim_ms: 0.0,
+                rolled_back: false,
                 timing: Timing { queue_ms: 0.0, service_ms: 0.0 },
             })
         }
@@ -207,7 +219,49 @@ mod tests {
         assert_eq!(resp.status, 200);
         let j = body(&resp);
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("alive").unwrap().as_i64(), Some(1));
         assert_eq!(j.get("workers").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn healthz_degrades_to_503_when_a_worker_dies() {
+        // single worker whose first request panics, with a factory that
+        // only ever builds once — the respawn fails until give-up and
+        // the fleet degrades permanently
+        struct PanicOnce;
+        impl UnlearnService for PanicOnce {
+            fn unlearn(&mut self, _spec: &ForgetSpec) -> Result<Summary> {
+                panic!("replica poisoned");
+            }
+        }
+        let built = std::sync::atomic::AtomicUsize::new(0);
+        let f = Fleet::start_with(
+            FleetConfig { respawn_giveup: 1, ..FleetConfig::default() },
+            move |_| {
+                if built.fetch_add(1, std::sync::atomic::Ordering::SeqCst) == 0 {
+                    Ok(PanicOnce)
+                } else {
+                    anyhow::bail!("no spare replica")
+                }
+            },
+        )
+        .unwrap();
+        let reply = f.submit(ForgetSpec::Class(1)).recv().unwrap();
+        assert!(matches!(&reply, Reply::Failed(e) if e.contains("panicked")), "{reply:?}");
+        // wait out the respawn window (one ~10ms backoff attempt)
+        let t0 = std::time::Instant::now();
+        loop {
+            let resp = handle(&req("GET", "/healthz", ""), &f, None);
+            if resp.status == 503 {
+                let j = body(&resp);
+                assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+                assert_eq!(j.get("alive").unwrap().as_i64(), Some(0));
+                assert_eq!(j.get("workers").unwrap().as_i64(), Some(1));
+                break;
+            }
+            assert!(t0.elapsed() < std::time::Duration::from_secs(10), "healthz never degraded");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
     }
 
     #[test]

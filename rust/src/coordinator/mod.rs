@@ -73,6 +73,11 @@ pub struct Summary {
     /// Latency of this event on the simulated FiCABU processor
     /// (50 MHz prototype), from the hwsim pipeline model.
     pub sim_ms: f64,
+    /// Whether the event's parameter edits were rolled back (always
+    /// `false` on a `done` reply today — a failed event reports the
+    /// rollback in its error message — but carried on the wire contract
+    /// so partial-success modes can express it).
+    pub rolled_back: bool,
     /// Filled in by the dispatcher: measured queue + service latency.
     pub timing: Timing,
 }
@@ -96,6 +101,7 @@ impl Summary {
             ("sim_energy_mj", Json::from(self.sim_energy_mj)),
             ("sim_energy_vs_ssd_pct", Json::from(self.sim_energy_vs_ssd_pct)),
             ("sim_ms", Json::from(self.sim_ms)),
+            ("rolled_back", Json::from(self.rolled_back)),
             ("queue_ms", Json::from(self.timing.queue_ms)),
             ("service_ms", Json::from(self.timing.service_ms)),
         ])
@@ -129,6 +135,7 @@ mod tests {
             sim_energy_mj: 1.25,
             sim_energy_vs_ssd_pct: 9.0,
             sim_ms: 430.0,
+            rolled_back: false,
             timing: Timing { queue_ms: 3.0, service_ms: 80.0 },
         }
     }
@@ -188,6 +195,7 @@ mod tests {
         }
         let fs = FleetStats {
             workers: 1,
+            alive: 1,
             admitted: 1,
             coalesced: 0,
             shed_backpressure: 0,

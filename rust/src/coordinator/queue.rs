@@ -129,6 +129,13 @@ pub struct QueueStats {
     pub failures: u64,
     /// Requests shed at claim time because their deadline had passed.
     pub shed_deadline: u64,
+    /// Requests whose execution panicked (each also counts as a
+    /// failure; the panic is caught, the reply is `Failed`, and the
+    /// worker replica is respawned).
+    pub panics: u64,
+    /// Times this worker's replica was successfully rebuilt after a
+    /// panic.
+    pub respawns: u64,
     /// Worker passes (one pass services a claimed batch).
     pub batches: u64,
     /// Largest batch claimed in one pass.
@@ -216,6 +223,8 @@ impl QueueStats {
             ("served", Json::from(self.served as usize)),
             ("failures", Json::from(self.failures as usize)),
             ("shed_deadline", Json::from(self.shed_deadline as usize)),
+            ("panics", Json::from(self.panics as usize)),
+            ("respawns", Json::from(self.respawns as usize)),
             ("batches", Json::from(self.batches as usize)),
             ("max_batch", Json::from(self.max_batch as usize)),
             ("mean_queue_ms", Json::from(self.mean_queue_ms())),
@@ -236,6 +245,8 @@ impl QueueStats {
         self.served += other.served;
         self.failures += other.failures;
         self.shed_deadline += other.shed_deadline;
+        self.panics += other.panics;
+        self.respawns += other.respawns;
         self.batches += other.batches;
         self.max_batch = self.max_batch.max(other.max_batch);
         self.total_queue_ms += other.total_queue_ms;
@@ -337,13 +348,17 @@ mod tests {
         a.record(&Timing { queue_ms: 3.0, service_ms: 20.0 }, false);
         a.record_batch(2);
         a.record_shed();
+        a.panics += 1;
         let mut b = QueueStats::default();
         b.record(&Timing { queue_ms: 5.0, service_ms: 40.0 }, true);
         b.record_batch(3);
+        b.respawns += 2;
         a.merge(&b);
         assert_eq!(a.served, 2);
         assert_eq!(a.failures, 1);
         assert_eq!(a.shed_deadline, 1);
+        assert_eq!(a.panics, 1);
+        assert_eq!(a.respawns, 2);
         assert_eq!(a.batches, 2);
         assert_eq!(a.max_batch, 3);
         assert_eq!(a.completed(), 3);

@@ -297,6 +297,7 @@ impl UnlearnSession {
             sim_energy_mj: fic.energy_mj,
             sim_energy_vs_ssd_pct: 100.0 * fic.energy_mj / ssd.energy_mj,
             sim_ms: fic.seconds * 1e3,
+            rolled_back: report.rolled_back,
             timing: Timing::default(),
         })
     }

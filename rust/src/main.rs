@@ -234,6 +234,12 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let queue_cap = a.usize_or("queue-cap", 32)?;
     let deadline_ms = a.usize_or("deadline-ms", 0)?;
     let batch_max = a.usize_or("batch-max", 4)?;
+    // Chaos/CI seam: arm an injected-fault plan before any request is
+    // served (e.g. FICABU_FAULTS="dampen:1:panic;respawn:every1:error"
+    // drives /healthz into its degraded 503 state).
+    if let Some(plan) = ficabu::testkit::faults::arm_from_env()? {
+        println!("fault plan armed from {}: {plan}", ficabu::testkit::faults::ENV_VAR);
+    }
     let opts = prepare_opts(a)?;
     let prep = exp::prepare(&model, kind, &opts)?;
 
@@ -268,6 +274,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
         } else {
             Pacing::Host
         },
+        ..FleetConfig::default()
     };
     println!(
         "serving fleet: {workers} worker(s), queue cap {queue_cap}, deadline {}, batch max {batch_max}",
@@ -331,7 +338,12 @@ fn cmd_serve(a: &Args) -> Result<()> {
                         Ok(Reply::Expired { missed_by_ms }) => println!(
                             "{spec}: EXPIRED (deadline missed by {missed_by_ms:.0} ms)"
                         ),
-                        Err(_) => println!("{spec}: reply channel closed"),
+                        // engine panics are caught and answered, so a
+                        // dropped channel means the worker thread itself
+                        // died without answering
+                        Err(_) => println!(
+                            "{spec}: WORKER LOST (reply channel dropped before an answer)"
+                        ),
                     }
                 }
             });
@@ -341,12 +353,17 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let stats = fleet.shutdown()?;
     let total = stats.merged();
     println!(
-        "\nfleet: admitted {} coalesced {} backpressure-shed {} deadline-shed {}",
-        stats.admitted, stats.coalesced, stats.shed_backpressure, total.shed_deadline
+        "\nfleet: admitted {} coalesced {} backpressure-shed {} deadline-shed {} alive {}/{}",
+        stats.admitted,
+        stats.coalesced,
+        stats.shed_backpressure,
+        total.shed_deadline,
+        stats.alive,
+        stats.workers
     );
     println!(
-        "totals: served {} failures {} passes {} (max batch {})",
-        total.served, total.failures, total.batches, total.max_batch
+        "totals: served {} failures {} panics {} respawns {} passes {} (max batch {})",
+        total.served, total.failures, total.panics, total.respawns, total.batches, total.max_batch
     );
     println!(
         "queue   latency: mean {:7.1} ms  p50 {:7.1}  p95 {:7.1}  p99 {:7.1}  max {:7.1}",

@@ -123,6 +123,35 @@ impl ParamStore {
         self.quant.is_some()
     }
 
+    // --- transactional segment snapshots -----------------------------------
+
+    /// Capture segment `k`'s pre-image: the f32 masters *and* (on an
+    /// int8 store) the int8 weight copies. [`ParamStore::restore_segment`]
+    /// puts both back bit for bit — stronger than re-deriving the int8
+    /// copies via [`ParamStore::requantize_segment`], because restoring
+    /// the captured copies cannot depend on quantization round-trips.
+    pub fn snapshot_segment(&self, k: usize) -> SegmentSnapshot {
+        SegmentSnapshot {
+            tensors: self.seg[k].clone(),
+            quant: self.quant.as_ref().map(|q| q[k].clone()),
+        }
+    }
+
+    /// Restore segment `k` from a snapshot taken on this store: masters
+    /// and int8 copies are bitwise identical to capture time afterwards.
+    pub fn restore_segment(&mut self, k: usize, snap: SegmentSnapshot) {
+        debug_assert_eq!(self.seg[k].len(), snap.tensors.len(), "snapshot arity mismatch");
+        self.seg[k] = snap.tensors;
+        match (self.quant.as_mut(), snap.quant) {
+            (Some(q), Some(qs)) => q[k] = qs,
+            (None, None) => {}
+            // quantization state changed between capture and restore —
+            // impossible from the unlearning engine (which never toggles
+            // it mid-pass); keep whichever side still exists.
+            _ => debug_assert!(false, "snapshot quantization state mismatch"),
+        }
+    }
+
     /// Int8 weight slots of segment `k` (`None` on an f32 store).
     pub fn qseg(&self, k: usize) -> Option<&[Option<QTensor>]> {
         self.quant.as_ref().map(|q| q[k].as_slice())
@@ -206,6 +235,14 @@ impl ParamStore {
         }
         Ok(())
     }
+}
+
+/// Pre-image of one segment, captured by [`ParamStore::snapshot_segment`]
+/// before a dampening write-back and restored on error/panic so a
+/// replica rolls back to its exact pre-request parameters.
+pub struct SegmentSnapshot {
+    tensors: Vec<Tensor>,
+    quant: Option<Vec<Option<QTensor>>>,
 }
 
 /// Quantize one parameter slot if it is a GEMM/conv weight; snap the
@@ -371,6 +408,40 @@ mod tests {
         let cloned: Vec<Tensor> = ps.flat().into_iter().cloned().collect();
         ps.set_flat(cloned).unwrap();
         assert!(!ps.is_quantized());
+    }
+
+    #[test]
+    fn segment_snapshot_restores_bitwise_f32_and_int8() {
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
+        for int8 in [false, true] {
+            let mut ps = ParamStore::init(&meta, 31);
+            if int8 {
+                ps.quantize_int8(&meta);
+            }
+            let before: Vec<Vec<f32>> = ps.seg[2].iter().map(|t| t.data.clone()).collect();
+            let qbefore: Option<Vec<Option<Vec<f32>>>> = ps
+                .qseg(2)
+                .map(|q| q.iter().map(|s| s.as_ref().map(|qt| qt.dequantize().data)).collect());
+            let snap = ps.snapshot_segment(2);
+            for t in ps.seg[2].iter_mut() {
+                for v in t.data.iter_mut() {
+                    *v = v.mul_add(0.75, 0.01);
+                }
+            }
+            if int8 {
+                ps.requantize_segment(2);
+            }
+            assert_ne!(ps.seg[2][0].data, before[0], "edit must actually change params");
+            ps.restore_segment(2, snap);
+            for (t, b) in ps.seg[2].iter().zip(&before) {
+                assert!(t.data.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+            let qafter: Option<Vec<Option<Vec<f32>>>> = ps
+                .qseg(2)
+                .map(|q| q.iter().map(|s| s.as_ref().map(|qt| qt.dequantize().data)).collect());
+            assert_eq!(qbefore, qafter, "int8 copies must restore too");
+            ps.validate(&meta).unwrap();
+        }
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! Deterministic fault injection for chaos tests and benches.
+//!
+//! Production stage code calls [`hit`] at well-known *sites* (stage
+//! boundaries such as `"forget_fisher"`, `"dampen"`, `"early_stop"`,
+//! and the fleet's `"respawn"` build path). When no plan is armed the
+//! call is a single relaxed atomic load — effectively free — so the
+//! seam can stay compiled into release builds.
+//!
+//! A plan is a `;`-separated list of faults in a tiny grammar:
+//!
+//! ```text
+//! site:TRIGGER:ACTION
+//!
+//! TRIGGER  ::=  <n>        fire once, on the n-th hit of the site (1-based)
+//!           |   every<n>   fire on every n-th hit of the site
+//! ACTION   ::=  panic      panic! at the site
+//!           |   error      return an injected anyhow error
+//!           |   delay:<ms> sleep for <ms> milliseconds, then continue
+//! ```
+//!
+//! Examples: `dampen:3:panic` (panic at the 3rd dampened segment),
+//! `early_stop:2:error` (error from the 2nd early-stop check),
+//! `forget_fisher:1:delay:50`, `dampen:every4:panic;respawn:every1:error`.
+//!
+//! The plan and its per-site hit counters are **process-global**:
+//! tests that arm a plan must serialize against each other (see
+//! `tests/chaos_e2e.rs`) and [`clear`] it when done. The serve CLI
+//! arms a plan from the `FICABU_FAULTS` environment variable via
+//! [`arm_from_env`] so CI can drive a server into degraded states.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Environment variable read by [`arm_from_env`].
+pub const ENV_VAR: &str = "FICABU_FAULTS";
+
+// Fast-path gate: `hit` is a relaxed load of this flag unless a plan is
+// armed. The plan itself lives behind a Mutex (hits are rare and slow
+// by design once armed).
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Plan>> = Mutex::new(None);
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Action {
+    Panic,
+    Error,
+    DelayMs(u64),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Trigger {
+    /// Fire exactly once, on the n-th hit (1-based).
+    Nth(u64),
+    /// Fire on every n-th hit.
+    Every(u64),
+}
+
+impl Trigger {
+    fn fires(self, hit_count: u64) -> bool {
+        match self {
+            Trigger::Nth(n) => hit_count == n,
+            Trigger::Every(n) => hit_count % n == 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Fault {
+    site: String,
+    trigger: Trigger,
+    action: Action,
+}
+
+#[derive(Debug)]
+struct Plan {
+    faults: Vec<Fault>,
+    /// Per-site hit counters, shared by every fault on that site.
+    hits: HashMap<String, u64>,
+}
+
+// Injected panics deliberately poison nothing (the guard is dropped
+// before the panic fires), but a panic elsewhere while the lock is held
+// must not wedge the whole seam — recover the inner value.
+fn lock() -> MutexGuard<'static, Option<Plan>> {
+    PLAN.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn parse(plan: &str) -> Result<Vec<Fault>> {
+    let mut faults = Vec::new();
+    for clause in plan.split(';') {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = clause.split(':').collect();
+        if parts.len() < 3 {
+            bail!("fault clause `{clause}`: expected site:TRIGGER:ACTION");
+        }
+        let site = parts[0].trim();
+        if site.is_empty() {
+            bail!("fault clause `{clause}`: empty site");
+        }
+        let trig = parts[1].trim();
+        let trigger = if let Some(n) = trig.strip_prefix("every") {
+            let n: u64 = n
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault clause `{clause}`: bad trigger `{trig}`"))?;
+            if n == 0 {
+                bail!("fault clause `{clause}`: `every0` never fires");
+            }
+            Trigger::Every(n)
+        } else {
+            let n: u64 = trig
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault clause `{clause}`: bad trigger `{trig}`"))?;
+            if n == 0 {
+                bail!("fault clause `{clause}`: hit counts are 1-based");
+            }
+            Trigger::Nth(n)
+        };
+        let action = match (parts[2].trim(), parts.get(3)) {
+            ("panic", None) => Action::Panic,
+            ("error", None) => Action::Error,
+            ("delay", Some(ms)) => Action::DelayMs(ms.trim().parse().map_err(|_| {
+                anyhow::anyhow!("fault clause `{clause}`: bad delay `{ms}` (want ms)")
+            })?),
+            _ => bail!(
+                "fault clause `{clause}`: unknown action `{}` (want panic|error|delay:<ms>)",
+                parts[2..].join(":")
+            ),
+        };
+        faults.push(Fault { site: site.to_string(), trigger, action });
+    }
+    if faults.is_empty() {
+        bail!("fault plan `{plan}` contains no clauses");
+    }
+    Ok(faults)
+}
+
+/// Arm a fault plan for the whole process, replacing any previous plan
+/// and resetting all hit counters. See the module docs for the grammar.
+pub fn arm(plan: &str) -> Result<()> {
+    let faults = parse(plan)?;
+    *lock() = Some(Plan { faults, hits: HashMap::new() });
+    ARMED.store(true, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Arm from the `FICABU_FAULTS` environment variable. Returns the plan
+/// string when one was armed, `None` when the variable is unset/empty,
+/// and an error when it is set but unparsable (a typo'd chaos run must
+/// not silently become a fault-free one).
+pub fn arm_from_env() -> Result<Option<String>> {
+    match std::env::var(ENV_VAR) {
+        Ok(s) if !s.trim().is_empty() => {
+            arm(&s)?;
+            Ok(Some(s))
+        }
+        _ => Ok(None),
+    }
+}
+
+/// Disarm: drop the plan and counters. `hit` goes back to its
+/// single-atomic-load fast path.
+pub fn clear() {
+    ARMED.store(false, Ordering::SeqCst);
+    *lock() = None;
+}
+
+/// How many times `site` has been hit under the current plan (0 when
+/// disarmed). Lets tests assert a seam was actually exercised.
+pub fn hits(site: &str) -> u64 {
+    lock().as_ref().and_then(|p| p.hits.get(site).copied()).unwrap_or(0)
+}
+
+/// Fault seam: call at a stage boundary. Free when disarmed; when a
+/// plan is armed, counts the hit and performs the first matching
+/// fault's action — `Err` for `error`, `panic!` for `panic` (with the
+/// plan lock released first, so the plan is never poisoned), a sleep
+/// for `delay`.
+#[inline]
+pub fn hit(site: &str) -> Result<()> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    hit_armed(site)
+}
+
+#[cold]
+fn hit_armed(site: &str) -> Result<()> {
+    let action = {
+        let mut guard = lock();
+        let Some(plan) = guard.as_mut() else { return Ok(()) };
+        let count = plan.hits.entry(site.to_string()).or_insert(0);
+        *count += 1;
+        let n = *count;
+        plan.faults
+            .iter()
+            .find(|f| f.site == site && f.trigger.fires(n))
+            .map(|f| (f.action, n))
+    };
+    match action {
+        None => Ok(()),
+        Some((Action::DelayMs(ms), _)) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(())
+        }
+        Some((Action::Error, n)) => bail!("injected fault: error at `{site}` (hit {n})"),
+        Some((Action::Panic, n)) => panic!("injected fault: panic at `{site}` (hit {n})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The plan is process-global; every test in this module serializes
+    // on one lock and clears the plan before releasing it.
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    fn serial() -> MutexGuard<'static, ()> {
+        SERIAL.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    #[test]
+    fn disarmed_is_a_no_op() {
+        let _g = serial();
+        clear();
+        assert!(hit("dampen").is_ok());
+        assert_eq!(hits("dampen"), 0);
+    }
+
+    #[test]
+    fn nth_trigger_fires_once() {
+        let _g = serial();
+        arm("dampen:2:error").unwrap();
+        assert!(hit("dampen").is_ok());
+        let e = hit("dampen").unwrap_err();
+        assert!(format!("{e:#}").contains("injected fault"), "{e:#}");
+        assert!(hit("dampen").is_ok(), "Nth is one-shot");
+        assert!(hit("forget_fisher").is_ok(), "other sites untouched");
+        assert_eq!(hits("dampen"), 3);
+        clear();
+    }
+
+    #[test]
+    fn every_trigger_repeats() {
+        let _g = serial();
+        arm("s:every2:error").unwrap();
+        let fired: Vec<bool> = (0..6).map(|_| hit("s").is_err()).collect();
+        assert_eq!(fired, [false, true, false, true, false, true]);
+        clear();
+    }
+
+    #[test]
+    fn panic_action_panics_without_poisoning_the_plan() {
+        let _g = serial();
+        arm("s:1:panic;s:3:error").unwrap();
+        let p = std::panic::catch_unwind(|| hit("s")).unwrap_err();
+        let msg = p.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("injected fault: panic at `s`"), "{msg}");
+        // the seam stays usable after the panic: hit 2 passes, hit 3 errors
+        assert!(hit("s").is_ok());
+        assert!(hit("s").is_err());
+        clear();
+    }
+
+    #[test]
+    fn delay_action_sleeps_then_continues() {
+        let _g = serial();
+        arm("s:1:delay:30").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(hit("s").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        clear();
+    }
+
+    #[test]
+    fn plan_grammar_rejects_garbage() {
+        for bad in [
+            "",
+            "dampen",
+            "dampen:panic",
+            "dampen:0:panic",
+            "dampen:every0:panic",
+            "dampen:x:panic",
+            "dampen:1:explode",
+            "dampen:1:delay:soon",
+            ":1:panic",
+        ] {
+            assert!(parse(bad).is_err(), "`{bad}` should not parse");
+        }
+        assert_eq!(parse("a:1:panic; b:every3:delay:50 ;c:2:error").unwrap().len(), 3);
+    }
+}

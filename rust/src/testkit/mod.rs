@@ -1,9 +1,14 @@
-//! Seeded property-testing harness (no `proptest` in the vendor tree).
+//! Test instrumentation compiled into the library: a seeded
+//! property-testing harness (no `proptest` in the vendor tree) and the
+//! [`faults`] deterministic fault-injection seam used by chaos tests,
+//! the chaos bench arm, and CI's degraded-health smoke.
 //!
-//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated inputs;
-//! on failure it reports the seed + case index so the exact input can be
-//! replayed, and performs a simple halving shrink when the generator
-//! supports resizing.
+//! `prop::check(name, cases, gen, prop)` runs `prop` on `cases` generated
+//! inputs; on failure it reports the seed + case index so the exact input
+//! can be replayed, and performs a simple halving shrink when the
+//! generator supports resizing.
+
+pub mod faults;
 
 pub mod prop {
     use crate::util::prng::Pcg32;

@@ -16,14 +16,25 @@
 //! operating points (SSD / CAU / BD / FiCABU) are provided strategies
 //! differing only in the [`UnlearnConfig`] bag they consume; a custom
 //! strategy can override any single stage and inherit the rest.
+//!
+//! An unlearning event is **transactional**: [`stages::dampen`] journals
+//! each segment's pre-image ([`Pass::snapshot_segment`]) before writing
+//! it, and [`run_strategy`] restores the journal on any error *or panic*
+//! between begin and finish — so a replica whose request fails is
+//! bitwise back to its pre-request parameters (f32 masters and int8
+//! copies alike), never left half-dampened.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 
 use anyhow::{bail, Result};
 
 use crate::fisher::{concat_seg_into, FimdEngine, Importance};
 use crate::model::macs::{self, MacLedger};
+use crate::model::params::SegmentSnapshot;
 use crate::model::{ActivationCache, Model, ParamStore};
 use crate::runtime::Precision;
 use crate::tensor::Tensor;
+use crate::testkit::faults;
 use crate::unlearn::damp::{DampEngine, DampStats};
 use crate::unlearn::schedule::Schedule;
 use crate::unlearn::strategy::Strategy;
@@ -125,6 +136,11 @@ pub struct UnlearnReport {
     /// the hwsim charges int8 MAC energy and 1-byte traffic from this,
     /// not from a deployment assumption.
     pub precision: Precision,
+    /// Whether the event failed mid-pass and the engine restored every
+    /// journaled segment to its pre-request state. Always `false` on a
+    /// successful pass; carried on the error path via the wire-facing
+    /// `Summary` contract.
+    pub rolled_back: bool,
 }
 
 /// One-hot targets for a label batch; rejects out-of-range labels
@@ -159,6 +175,10 @@ pub struct Pass<'a> {
     /// Step-0 activation cache: segment inputs + logits, pre-edit.
     pub cache: ActivationCache,
     pub report: UnlearnReport,
+    /// Transaction journal: pre-images of every segment written this
+    /// pass, captured by [`Pass::snapshot_segment`] before the first
+    /// write and replayed by [`run_strategy`] on error/panic.
+    journal: Vec<(usize, SegmentSnapshot)>,
     /// Per-microbatch gy chain, advanced by the forget-Fisher stage.
     gy_state: Vec<Tensor>,
     /// Hoisted burst buffers reused across microbatches and segments.
@@ -227,6 +247,7 @@ impl<'a> Pass<'a> {
             labels: forget_labels,
             cache,
             report,
+            journal: Vec::new(),
             gy_state,
             burst: Vec::new(),
             theta: Vec::new(),
@@ -250,6 +271,26 @@ impl<'a> Pass<'a> {
         let (grads, gx) = self.model.segment_bwd(k, self.params, &x_mb, &self.gy_state[mb])?;
         self.gy_state[mb] = gx;
         Ok(grads)
+    }
+
+    /// Journal segment `k`'s pre-image before writing it (idempotent
+    /// per pass: only the first call for a segment captures). A custom
+    /// stage-2 override that edits `params` directly MUST call this
+    /// before its first write to keep the engine's rollback guarantee.
+    pub fn snapshot_segment(&mut self, k: usize) {
+        if self.journal.iter().any(|(j, _)| *j == k) {
+            return;
+        }
+        self.journal.push((k, self.params.snapshot_segment(k)));
+    }
+
+    /// Restore every journaled segment (newest first) to its pre-pass
+    /// state and mark the report rolled back.
+    fn rollback(&mut self) {
+        for (k, snap) in self.journal.drain(..).rev() {
+            self.params.restore_segment(k, snap);
+        }
+        self.report.rolled_back = true;
     }
 
     fn finish(mut self) -> UnlearnReport {
@@ -282,6 +323,7 @@ pub mod stages {
     /// of the *original* parameters — the segment is dampened only
     /// after its bwd has produced gx) and advance the gy chain.
     pub fn forget_fisher(pass: &mut Pass<'_>, l: usize) -> Result<Vec<f32>> {
+        faults::hit("forget_fisher")?;
         let meta = &pass.model.meta;
         let k = meta.seg_index(l);
         let num_mb = meta.batch / meta.microbatch;
@@ -307,6 +349,7 @@ pub mod stages {
         l: usize,
         i_df: &[f32],
     ) -> Result<DampStats> {
+        faults::hit("dampen")?;
         let meta = &pass.model.meta;
         let big_l = meta.num_segments();
         let k = meta.seg_index(l);
@@ -316,6 +359,9 @@ pub mod stages {
         concat_seg_into(&pass.params.seg[k], &mut pass.theta);
         let stats =
             pass.damp.dampen(&mut pass.theta, i_df, &pass.global.per_seg[k], alpha_l, lambda_l)?;
+        // journal the pre-image before the first write to this segment,
+        // so a later failure anywhere in the pass can roll it back
+        pass.snapshot_segment(k);
         scatter_seg(&pass.theta, &mut pass.params.seg[k])?;
         // Keep the int8 copies in lockstep with the edited masters —
         // only the segment the dampening write-back touched. Gated on
@@ -338,6 +384,9 @@ pub mod stages {
     /// segment through the (now partially dampened) back-end and stop
     /// once the batch forget accuracy reaches `tau`.
     pub fn early_stop(pass: &mut Pass<'_>, cfg: &UnlearnConfig, l: usize) -> Result<StopVerdict> {
+        // seam fires at every depth, before the checkpoint-grid gate, so
+        // a fault plan can target the n-th stop *check* on any strategy
+        faults::hit("early_stop")?;
         if !cfg.checkpoints.contains(&l) {
             return Ok(StopVerdict::Continue);
         }
@@ -378,15 +427,32 @@ pub fn run_strategy(
     let mut pass =
         Pass::begin(model, params, forget_x, forget_labels, global, fimd, damp, cfg)?;
     let big_l = model.meta.num_segments();
-    // --- back-end-first layer loop ---------------------------------------
-    for l in 1..=big_l {
-        let i_df = strategy.forget_fisher(&mut pass, l)?;
-        strategy.dampen(&mut pass, l, &i_df)?;
-        if strategy.early_stop(&mut pass, l)? == StopVerdict::Stop {
-            break;
+    // --- back-end-first layer loop, run as a transaction ------------------
+    // Any error or panic after begin rolls the journaled segments back
+    // before propagating, so the caller's ParamStore is bitwise its
+    // pre-request self. AssertUnwindSafe: on unwind the pass state is
+    // only ever touched by `rollback`, which replays whole pre-images.
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        for l in 1..=big_l {
+            let i_df = strategy.forget_fisher(&mut pass, l)?;
+            strategy.dampen(&mut pass, l, &i_df)?;
+            if strategy.early_stop(&mut pass, l)? == StopVerdict::Stop {
+                break;
+            }
+        }
+        anyhow::Ok(())
+    }));
+    match outcome {
+        Ok(Ok(())) => Ok(pass.finish()),
+        Ok(Err(e)) => {
+            pass.rollback();
+            Err(e.context("unlearning event failed; replica rolled back to pre-request params"))
+        }
+        Err(payload) => {
+            pass.rollback();
+            resume_unwind(payload)
         }
     }
-    Ok(pass.finish())
 }
 
 /// Run one unlearning event with the paper's default stages driven

@@ -1,0 +1,248 @@
+//! Chaos end-to-end tests: deterministic fault plans
+//! (`testkit::faults`) driven through the real engine and fleet.
+//!
+//! Covers the transactional-unlearning guarantee (a mid-pass error or
+//! panic leaves the replica's `ParamStore` bitwise identical to its
+//! pre-request state, f32 masters and int8 copies alike) and the fleet
+//! acceptance path: panic mid-dampen → `Reply::Failed` (no hung or
+//! dropped receivers) → worker respawn → retried request `Done`.
+//!
+//! The fault plan is process-global, so every test here serializes on
+//! one lock and clears the plan before releasing it.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use ficabu::config::{ModelMeta, SharedMeta};
+use ficabu::coordinator::{
+    Fleet, FleetConfig, Pacing, Reply, Summary, UnlearnService, UnlearnSession, WorkerSpec,
+};
+use ficabu::data::{cifar20_like, Dataset, DatasetCfg};
+use ficabu::fisher::Importance;
+use ficabu::metrics;
+use ficabu::model::{Model, ParamStore};
+use ficabu::runtime::{Precision, Runtime};
+use ficabu::testkit::faults;
+use ficabu::unlearn::{ForgetSpec, Ssd};
+
+static CHAOS: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    CHAOS.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn train_set() -> Dataset {
+    let cfg = DatasetCfg { train_per_class: 4, test_per_class: 1, ..DatasetCfg::cifar20() };
+    cifar20_like(&cfg).0
+}
+
+/// Session over an untrained builtin model. `int8` additionally deploys
+/// the store's true-int8 copies and serves forward/eval in int8.
+fn session(seed: u64, int8: bool) -> UnlearnSession {
+    let rt = Runtime::cpu().unwrap();
+    let meta = ModelMeta::builtin("rn18slim").unwrap();
+    let model = Model::load(&rt, meta.clone()).unwrap();
+    let mut params = ParamStore::init(&meta, seed);
+    if int8 {
+        params.quantize_int8(&meta);
+    }
+    let mut global = Importance::zeros_like(&meta);
+    global.floor(1e-6);
+    let precision = if int8 { Precision::Int8 } else { Precision::F32 };
+    UnlearnSession::builder()
+        .model(model)
+        .params(params)
+        .global(global)
+        .train(train_set())
+        .config(Ssd::new(1.0, 1.0).into_config().with_precision(precision))
+        .seed(seed)
+        .build()
+        .unwrap()
+}
+
+/// FNV-1a-style fingerprint over the store's f32 bit patterns.
+fn fingerprint(params: &ParamStore) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for t in params.flat() {
+        for v in &t.data {
+            h ^= u64::from(v.to_bits());
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Bitwise store equality: f32 masters and (when present) the int8
+/// copies' dequantized values.
+fn assert_store_bitwise_eq(a: &ParamStore, b: &ParamStore) {
+    let (fa, fb) = (a.flat(), b.flat());
+    assert_eq!(fa.len(), fb.len());
+    for (ta, tb) in fa.iter().zip(&fb) {
+        assert_eq!(ta.data.len(), tb.data.len());
+        assert!(
+            ta.data.iter().zip(&tb.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "f32 masters differ"
+        );
+    }
+    assert_eq!(a.is_quantized(), b.is_quantized());
+    for k in 0..a.seg.len() {
+        match (a.qseg(k), b.qseg(k)) {
+            (None, None) => {}
+            (Some(qa), Some(qb)) => {
+                for (sa, sb) in qa.iter().zip(qb) {
+                    match (sa, sb) {
+                        (None, None) => {}
+                        (Some(qta), Some(qtb)) => {
+                            let (da, db) = (qta.dequantize().data, qtb.dequantize().data);
+                            assert!(
+                                da.iter().zip(&db).all(|(x, y)| x.to_bits() == y.to_bits()),
+                                "int8 copies differ in segment {k}"
+                            );
+                        }
+                        _ => panic!("quantized slot shape differs in segment {k}"),
+                    }
+                }
+            }
+            _ => panic!("quantization state differs in segment {k}"),
+        }
+    }
+}
+
+/// Mid-pass injected error: the event fails, and the replica is bitwise
+/// back to its pre-request parameters — accuracy readouts included.
+fn mid_pass_error_rolls_back_bitwise(int8: bool) {
+    let mut s = session(42, int8);
+    let pristine = s.params.clone();
+    let pool = s.train.class_indices(3);
+    let forget_before =
+        metrics::eval_accuracy(&s.model, &s.params, &s.train, &pool).unwrap();
+
+    // Depths 1 and 2 dampen (journaling their pre-images); depth 3 errors.
+    faults::arm("dampen:3:error").unwrap();
+    let err = s.forget(&ForgetSpec::Class(3)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected fault"), "got: {msg}");
+    assert!(msg.contains("rolled back"), "got: {msg}");
+    assert_eq!(faults::hits("dampen"), 3, "fault plan was exercised");
+    faults::clear();
+
+    assert_store_bitwise_eq(&pristine, &s.params);
+    let forget_after =
+        metrics::eval_accuracy(&s.model, &s.params, &s.train, &pool).unwrap();
+    assert_eq!(forget_before, forget_after, "rollback preserves the accuracy readout");
+
+    // The rolled-back replica still serves: the same request now succeeds
+    // and reports a clean (non-rolled-back) summary.
+    let sm = s.forget(&ForgetSpec::Class(3)).unwrap();
+    assert!(!sm.rolled_back);
+}
+
+#[test]
+fn mid_pass_error_rolls_back_bitwise_f32() {
+    let _g = serial();
+    faults::clear();
+    mid_pass_error_rolls_back_bitwise(false);
+}
+
+#[test]
+fn mid_pass_error_rolls_back_bitwise_int8() {
+    let _g = serial();
+    faults::clear();
+    mid_pass_error_rolls_back_bitwise(true);
+}
+
+/// Fleet worker wrapper that fingerprints its replica's parameters
+/// after every request — panic or not — so the test can observe the
+/// rollback from outside the worker thread.
+struct Probe {
+    inner: UnlearnSession,
+    log: Arc<Mutex<Vec<u64>>>,
+}
+
+impl UnlearnService for Probe {
+    fn unlearn(&mut self, spec: &ForgetSpec) -> anyhow::Result<Summary> {
+        let out = catch_unwind(AssertUnwindSafe(|| self.inner.forget(spec)));
+        self.log.lock().unwrap().push(fingerprint(&self.inner.params));
+        match out {
+            Ok(r) => r,
+            Err(payload) => resume_unwind(payload),
+        }
+    }
+}
+
+#[test]
+fn fleet_survives_a_panic_mid_dampen() {
+    let _g = serial();
+    faults::clear();
+
+    let meta = ModelMeta::builtin("rn18slim").unwrap();
+    let mut global = Importance::zeros_like(&meta);
+    global.floor(1e-6);
+    let wspec = WorkerSpec {
+        meta: meta.clone(),
+        shared: SharedMeta::builtin(),
+        params: ParamStore::init(&meta, 5),
+        global,
+        train: train_set(),
+        cfg: Ssd::new(1.0, 1.0).into_config(),
+        precision: Precision::F32,
+    };
+    // Fingerprint log: one entry per replica build (from the factory)
+    // and one per served request (from the probe).
+    let log: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let log2 = Arc::clone(&log);
+    let fleet = Fleet::start_with(
+        FleetConfig {
+            workers: 1,
+            queue_cap: 8,
+            deadline: None,
+            batch_max: 1,
+            pacing: Pacing::Host,
+            respawn_giveup: 5,
+        },
+        move |wid| {
+            let inner = UnlearnSession::from_spec(&wspec, wid)?;
+            log2.lock().unwrap().push(fingerprint(&inner.params));
+            Ok(Probe { inner, log: Arc::clone(&log2) })
+        },
+    )
+    .unwrap();
+
+    // The 2nd dampened segment of the first request panics.
+    faults::arm("dampen:2:panic").unwrap();
+    let rx = fleet.submit(ForgetSpec::Class(3));
+    match rx.recv().unwrap() {
+        Reply::Failed(msg) => {
+            assert!(msg.contains("panicked"), "got: {msg}");
+            assert!(msg.contains("injected fault"), "got: {msg}");
+        }
+        other => panic!("expected failure, got {other:?}"),
+    }
+
+    // Retry after the respawn: the one-shot fault already fired, so the
+    // same request now completes on the fresh replica.
+    let rx = fleet.submit(ForgetSpec::Class(3));
+    match rx.recv().unwrap() {
+        Reply::Done(sm) => {
+            assert_eq!(sm.spec, ForgetSpec::Class(3));
+            assert!(!sm.rolled_back);
+        }
+        other => panic!("retry: unexpected reply {other:?}"),
+    }
+    faults::clear();
+
+    // [build 0, post-panic, build 1 (respawn), post-done]
+    let fps = log.lock().unwrap().clone();
+    assert_eq!(fps.len(), 4, "2 builds + 2 served requests, got {fps:?}");
+    assert_eq!(fps[1], fps[0], "panicked request rolled back bitwise");
+    assert_eq!(fps[2], fps[0], "respawned replica rebuilds the same params");
+    assert_ne!(fps[3], fps[0], "the successful event edits parameters");
+
+    let stats = fleet.shutdown().unwrap();
+    assert_eq!(stats.alive, 1);
+    let total = stats.merged();
+    assert_eq!(total.panics, 1);
+    assert_eq!(total.respawns, 1);
+    assert_eq!(total.served, 1);
+    assert_eq!(total.failures, 1);
+}

@@ -2,6 +2,7 @@
 //! model math, so spec-key coalescing, shedding, drain, and the stats
 //! rollup are exercised deterministically.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -13,7 +14,8 @@ use ficabu::unlearn::ForgetSpec;
 
 /// Mock worker core. Every `unlearn` call announces `(worker, spec)` on
 /// `started`, then blocks until the test feeds one token through `gate`.
-/// `class:13` fails after the gate (exercises the failure path).
+/// `class:13` fails after the gate (exercises the failure path);
+/// `class:66` panics after the gate (exercises panic isolation).
 struct MockService {
     wid: usize,
     started: Sender<(usize, ForgetSpec)>,
@@ -31,6 +33,7 @@ fn mock_summary(spec: &ForgetSpec) -> Summary {
         sim_energy_mj: 0.1,
         sim_energy_vs_ssd_pct: 1.0,
         sim_ms: 0.0,
+        rolled_back: false,
         timing: Timing::default(),
     }
 }
@@ -46,6 +49,9 @@ impl UnlearnService for MockService {
         self.log.lock().unwrap().push((self.wid, spec.clone()));
         if *spec == ForgetSpec::Class(13) {
             anyhow::bail!("boom on class 13");
+        }
+        if *spec == ForgetSpec::Class(66) {
+            panic!("mock engine panicked on class 66");
         }
         Ok(mock_summary(spec))
     }
@@ -92,6 +98,7 @@ fn coalescing_fans_out_one_execution() {
         deadline: None,
         batch_max: 1,
         pacing: Pacing::Host,
+        respawn_giveup: 5,
     });
 
     // Occupy the single worker so subsequent submissions stay queued.
@@ -144,6 +151,7 @@ fn equivalent_specs_coalesce_across_variants() {
         deadline: None,
         batch_max: 1,
         pacing: Pacing::Host,
+        respawn_giveup: 5,
     });
 
     // Stall the worker so everything below queues.
@@ -194,6 +202,7 @@ fn bounded_queue_sheds_with_backpressure() {
         deadline: None,
         batch_max: 1,
         pacing: Pacing::Host,
+        respawn_giveup: 5,
     });
 
     // Stall the worker on class 0; fill the queue with classes 1 and 2.
@@ -240,6 +249,7 @@ fn shutdown_drains_deterministically() {
         deadline: None,
         batch_max: 2,
         pacing: Pacing::Host,
+        respawn_giveup: 5,
     });
 
     // Pre-feed tokens so workers never block; submit six distinct
@@ -280,6 +290,7 @@ fn stalled_worker_deadline_sheds_expired_entries() {
         deadline: None,
         batch_max: 1,
         pacing: Pacing::Host,
+        respawn_giveup: 5,
     });
 
     // Stall the worker, then queue a request with a deadline it cannot
@@ -325,6 +336,7 @@ fn failed_requests_reply_and_count_into_timing() {
         deadline: None,
         batch_max: 4,
         pacing: Pacing::Host,
+        respawn_giveup: 5,
     });
 
     rig.tokens.send(()).unwrap();
@@ -374,6 +386,117 @@ struct NeverService;
 impl UnlearnService for NeverService {
     fn unlearn(&mut self, _spec: &ForgetSpec) -> anyhow::Result<Summary> {
         unreachable!("never dispatched")
+    }
+}
+
+#[test]
+fn panic_is_isolated_and_worker_respawns() {
+    let (fleet, rig) = mock_fleet(FleetConfig {
+        workers: 1,
+        queue_cap: 8,
+        deadline: None,
+        batch_max: 4,
+        pacing: Pacing::Host,
+        respawn_giveup: 5,
+    });
+
+    // Stall the worker on class 0, then queue a poison request (the
+    // mock panics on class 66) followed by two healthy ones.
+    let rx0 = fleet.submit(ForgetSpec::Class(0));
+    rig.started.recv_timeout(STARTED_TIMEOUT).unwrap();
+    let rx66 = fleet.submit(ForgetSpec::Class(66));
+    let rx1 = fleet.submit(ForgetSpec::Class(1));
+    let rx2 = fleet.submit(ForgetSpec::Class(2));
+    for _ in 0..4 {
+        rig.tokens.send(()).unwrap();
+    }
+
+    match rx0.recv().unwrap() {
+        Reply::Done(s) => assert_eq!(s.spec, ForgetSpec::Class(0)),
+        other => panic!("class 0: unexpected reply {other:?}"),
+    }
+    // The poisoned request is answered, not hung: its reply names the
+    // panic instead of dropping the sender.
+    match rx66.recv().unwrap() {
+        Reply::Failed(msg) => {
+            assert!(msg.contains("panicked"), "got: {msg}");
+            assert!(msg.contains("class 66"), "payload text travels: {msg}");
+        }
+        other => panic!("class 66: expected failure, got {other:?}"),
+    }
+    // The rest of the panicked worker's claimed batch is re-queued and
+    // served by the respawned replica — nothing is lost with it.
+    for (rx, c) in [(rx1, 1), (rx2, 2)] {
+        match rx.recv().unwrap() {
+            Reply::Done(s) => assert_eq!(s.spec, ForgetSpec::Class(c)),
+            other => panic!("class {c}: unexpected reply {other:?}"),
+        }
+    }
+    let live = fleet.stats();
+    assert_eq!(live.alive, 1, "respawned worker is alive again");
+
+    let stats = fleet.shutdown().unwrap();
+    assert_eq!(stats.admitted, 4);
+    let total = stats.merged();
+    assert_eq!(total.served, 3);
+    assert_eq!(total.failures, 1, "the in-flight request counts as a failure");
+    assert_eq!(total.panics, 1);
+    assert_eq!(total.respawns, 1);
+}
+
+#[test]
+fn dead_fleet_fails_fast_after_respawn_gives_up() {
+    // One replica that panics on every request, and a factory with no
+    // spare: the single respawnable build is the initial one.
+    let builds = Arc::new(AtomicUsize::new(0));
+    let b = Arc::clone(&builds);
+    let fleet = Fleet::start_with(
+        FleetConfig { workers: 1, respawn_giveup: 2, ..FleetConfig::default() },
+        move |_wid| {
+            if b.fetch_add(1, Ordering::SeqCst) == 0 {
+                Ok(AlwaysPanics)
+            } else {
+                anyhow::bail!("no spare replica")
+            }
+        },
+    )
+    .unwrap();
+
+    let rx = fleet.submit(ForgetSpec::Class(1));
+    match rx.recv().unwrap() {
+        Reply::Failed(msg) => assert!(msg.contains("panicked"), "got: {msg}"),
+        other => panic!("expected failure, got {other:?}"),
+    }
+
+    // Respawn tries `respawn_giveup` times (one initial build + two
+    // retries = 3 factory calls), then declares the worker dead.
+    let t0 = std::time::Instant::now();
+    while fleet.stats().alive != 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker never died");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(builds.load(Ordering::SeqCst), 3);
+
+    // A dead fleet fails at admission instead of queueing forever.
+    let rx = fleet.submit(ForgetSpec::Class(2));
+    match rx.recv_timeout(Duration::from_secs(1)).unwrap() {
+        Reply::Failed(msg) => assert!(msg.contains("no live fleet workers"), "got: {msg}"),
+        other => panic!("expected failure, got {other:?}"),
+    }
+
+    let stats = fleet.shutdown().unwrap();
+    assert_eq!(stats.alive, 0);
+    assert_eq!(stats.admitted, 1, "the dead-fleet submission is never admitted");
+    let total = stats.merged();
+    assert_eq!(total.panics, 1);
+    assert_eq!(total.respawns, 0, "give-up means no successful respawn");
+}
+
+struct AlwaysPanics;
+
+impl UnlearnService for AlwaysPanics {
+    fn unlearn(&mut self, _spec: &ForgetSpec) -> anyhow::Result<Summary> {
+        panic!("replica poisoned")
     }
 }
 

@@ -46,6 +46,7 @@ impl UnlearnService for MockService {
             sim_energy_mj: 1.1,
             sim_energy_vs_ssd_pct: 9.0,
             sim_ms: 0.0,
+            rolled_back: false,
             timing: Timing::default(),
         })
     }

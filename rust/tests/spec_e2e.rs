@@ -134,6 +134,7 @@ fn fleet_serves_spec_diversity_with_coalescing() {
             deadline: None,
             batch_max: 2,
             pacing: Pacing::Host,
+            respawn_giveup: 5,
         },
     )
     .unwrap();
