@@ -22,7 +22,10 @@ validate FILE
       25% noise margin of the full tree parser on min_ms. A serve/chaos-*
       arm must exist, must actually have injected faults (failed and
       respawns > 0), and must keep >= 50% of the fault-free paced
-      4-worker arm's rps.
+      4-worker arm's rps. A serve/wal-paced/* arm (write-ahead ledger +
+      checkpoints on) must exist, must actually have ledgered (wal_seq
+      > 0), and must keep >= 80% of the fault-free paced 4-worker arm's
+      rps.
 
 compare BASELINE CURRENT
     Fail when any case present in both files regressed by more than
@@ -45,6 +48,7 @@ NOISY_PREFIXES = (
     "serve/coalesce-burst",
     "serve/spec-",
     "serve/chaos-",
+    "serve/wal-paced",
     "prepare ",
 )
 
@@ -180,11 +184,33 @@ def _check_serve(cases, path, min_speedup):
             f"fault-free paced arm ({paced_rps:.3f} rps) — respawns are "
             "eating the fleet"
         )
+    # durability arm: the write-ahead ledger must stay benched, must
+    # actually ledger, and fsync-per-request must ride the paced
+    # envelope rather than dominate it
+    wal_arms = [n for n in cases if n.startswith("serve/wal-paced")]
+    if not wal_arms:
+        _fail(f"{path}: no serve/wal-paced* arm (durability unbenched)")
+    wal = cases[wal_arms[0]]
+    wal_rps = wal.get("rps")
+    if not isinstance(wal_rps, (int, float)) or wal_rps <= 0:
+        _fail(f"{path}: {wal_arms[0]!r} has no positive 'rps' field")
+    if not isinstance(wal.get("wal_seq"), (int, float)) or wal["wal_seq"] <= 0:
+        _fail(
+            f"{path}: {wal_arms[0]!r} ledgered nothing "
+            f"(wal_seq = {wal.get('wal_seq')!r}) — the durable arm ran dry"
+        )
+    if wal_rps < 0.8 * paced_rps:
+        _fail(
+            f"{path}: durable throughput {wal_rps:.3f} rps below 80% of the "
+            f"fault-free paced arm ({paced_rps:.3f} rps) — the ledger fsyncs "
+            "are dominating the paced envelope"
+        )
     print(
         f"serve guardrail OK: paced 4v1 speedup {speedup:.2f}x, "
         f"{len(spec_arms)} spec arm(s), lazy scan "
         f"{tree / max(lazy, 1e-9):.1f}x faster than tree parse, "
-        f"chaos at {chaos_rps / paced_rps:.2f}x of fault-free throughput"
+        f"chaos at {chaos_rps / paced_rps:.2f}x and durable at "
+        f"{wal_rps / paced_rps:.2f}x of fault-free throughput"
     )
 
 

@@ -33,6 +33,10 @@
 //!   requests answer `Failed`, the worker respawns, and CI's validate
 //!   step asserts chaos throughput stays at or above half the
 //!   fault-free paced arm.
+//! * `serve/wal-paced/workers=4` — the paced 4-worker arm with the
+//!   durability subsystem on (fsync'd write-ahead ledger + periodic
+//!   parameter checkpoints); CI's validate step asserts it keeps ≥ 80%
+//!   of the fault-free paced throughput.
 //!
 //! `FICABU_BENCH_PRESET=smoke` shrinks the request counts for CI.
 
@@ -45,7 +49,7 @@ use std::time::Instant;
 
 use ficabu::config::SharedMeta;
 use ficabu::coordinator::{
-    Fleet, FleetConfig, HttpConfig, HttpServer, Pacing, Reply, WorkerSpec,
+    DurabilityConfig, Fleet, FleetConfig, HttpConfig, HttpServer, Pacing, Reply, WorkerSpec,
 };
 use ficabu::exp::tables::mode_config;
 use ficabu::exp::{self, DatasetKind, Mode, Prepared, PrepareOpts};
@@ -438,6 +442,78 @@ fn chaos_arm_body(
     Ok(())
 }
 
+/// Durability arm: the paced fleet with the write-ahead ledger on — an
+/// fsync per admission and completion, plus a parameter checkpoint
+/// every 8 completions. The validate gate asserts wal-paced throughput
+/// stays at or above 80% of the fault-free paced arm: durability must
+/// ride the paced envelope, not dominate it.
+fn run_wal_arm(
+    b: &Bench,
+    prep: &Prepared,
+    shared: &SharedMeta,
+    workers: usize,
+    requests: usize,
+    pacing: Pacing,
+) -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join(format!("ficabu_bench_wal_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let num_classes = prep.model.meta.num_classes;
+    let fleet = Fleet::start_durable(
+        spec_for(prep, shared),
+        FleetConfig {
+            workers,
+            queue_cap: requests + 4,
+            deadline: None,
+            batch_max: 1,
+            pacing,
+            respawn_giveup: 5,
+        },
+        DurabilityConfig { dir: dir.clone(), checkpoint_every: 8 },
+    )?;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| fleet.submit(ForgetSpec::Class(i % num_classes)))
+        .collect();
+    let mut done = 0usize;
+    for rx in rxs {
+        match rx.recv() {
+            Ok(Reply::Done(_)) => done += 1,
+            Ok(other) => anyhow::bail!("wal-paced: unexpected reply {other:?}"),
+            Err(e) => anyhow::bail!("wal-paced: reply channel closed ({e})"),
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let stats = fleet.shutdown()?;
+    let dur = stats.durability.expect("durable fleet reports durability stats");
+    anyhow::ensure!(
+        dur.wal_seq as usize == requests,
+        "every request gets its own ledger record ({} != {requests})",
+        dur.wal_seq
+    );
+    let total = stats.merged();
+    let rps = done as f64 / (wall_ms / 1e3);
+    let mut extras = vec![
+        ("rps", rps),
+        ("workers", workers as f64),
+        ("wal_seq", dur.wal_seq as f64),
+        ("checkpoints", dur.checkpoints as f64),
+    ];
+    extras.extend(total.percentile_fields());
+    b.record_case(
+        &format!("serve/wal-paced/workers={workers}"),
+        requests,
+        wall_ms,
+        wall_ms / requests as f64,
+        &extras,
+    );
+    println!(
+        "[serve] wal-paced: {done} done, ledger seq {} / {} checkpoint(s)",
+        dur.wal_seq, dur.checkpoints
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
 /// Request-body field extraction micro-arms: the lazy path scanner vs
 /// the full tree parser over a batch of realistic wire bodies (control
 /// fields first, then a bulky telemetry payload the admission path
@@ -572,6 +648,9 @@ fn main() -> anyhow::Result<()> {
     // `requests` >= the largest N every trigger is guaranteed to fire).
     let chaos_plan = if smoke { "dampen:2:panic" } else { "dampen:3:panic;dampen:11:panic" };
     run_chaos_arm(&b, &prep, &shared, 4, paced_requests, paced, chaos_plan)?;
+
+    // --- durability arm: the same paced 4-worker fleet, ledger on
+    run_wal_arm(&b, &prep, &shared, 4, paced_requests, paced)?;
 
     // --- request-body parsing: lazy path scan vs full tree parse
     run_parse_arms(&b);

@@ -1,0 +1,384 @@
+//! Atomic parameter checkpoints for the durable serving fleet.
+//!
+//! A checkpoint is the full post-unlearn [`ParamStore`] — f32 masters
+//! *and* the per-slot int8 weight copies when the store serves int8 —
+//! plus the ledger generation and covering sequence number (every
+//! successful completion with `seq <= covering_seq` of that generation
+//! is baked into the parameters). Files are named
+//! `ckpt-<generation>-<covering_seq>.fcp` with zero-padded fields so
+//! lexicographic order is (generation, seq) order.
+//!
+//! Writes are atomic: the body is written to a `.tmp` sibling, fsync'd,
+//! renamed over the final name, and the directory is fsync'd — a crash
+//! mid-write leaves a stale `.tmp` that is never loaded and is swept by
+//! the next successful write. [`load_latest`] walks candidates newest
+//! first and returns the first whose magic and CRC32 validate, so a
+//! torn or bit-flipped checkpoint degrades to the previous one instead
+//! of poisoning recovery.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::wal::crc32;
+use crate::model::ParamStore;
+use crate::tensor::quant::QTensor;
+use crate::tensor::Tensor;
+use crate::testkit::faults;
+
+const MAGIC: &[u8; 8] = b"FICABUC1";
+const PREFIX: &str = "ckpt-";
+const SUFFIX: &str = ".fcp";
+
+/// One decoded checkpoint.
+pub struct Checkpoint {
+    pub params: ParamStore,
+    /// Ledger generation the covering seq refers to.
+    pub generation: u64,
+    /// Every `Done` completion with `seq <= covering_seq` (same
+    /// generation) is contained in `params`.
+    pub covering_seq: u64,
+}
+
+fn file_name(generation: u64, covering_seq: u64) -> String {
+    format!("{PREFIX}{generation:010}-{covering_seq:010}{SUFFIX}")
+}
+
+/// Atomically write a checkpoint into `dir` and prune older ones.
+/// Returns the final path. Fault site: `checkpoint`.
+pub fn write(dir: &Path, store: &ParamStore, generation: u64, covering_seq: u64) -> Result<PathBuf> {
+    faults::hit("checkpoint")?;
+    let body = encode(store, generation, covering_seq);
+    let name = file_name(generation, covering_seq);
+    let path = dir.join(&name);
+    let tmp = dir.join(format!("{name}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        use std::io::Write as _;
+        f.write_all(&body)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, &path)?;
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    prune_older(dir, &name);
+    Ok(path)
+}
+
+/// Load the newest checkpoint in `dir` that validates (magic + CRC32 +
+/// decode), skipping corrupt or torn candidates with a note on stderr.
+/// `.tmp` leftovers are never considered.
+pub fn load_latest(dir: &Path) -> Result<Option<Checkpoint>> {
+    let mut names = list_checkpoints(dir)?;
+    names.sort();
+    for name in names.iter().rev() {
+        let path = dir.join(name);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        match decode(&bytes) {
+            Ok(c) => return Ok(Some(c)),
+            Err(e) => eprintln!("ficabu: skipping invalid checkpoint {}: {e:#}", path.display()),
+        }
+    }
+    Ok(None)
+}
+
+fn list_checkpoints(dir: &Path) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    let rd = match std::fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(names),
+        Err(e) => return Err(e).with_context(|| format!("listing {}", dir.display())),
+    };
+    for entry in rd {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.starts_with(PREFIX) && name.ends_with(SUFFIX) {
+            names.push(name);
+        }
+    }
+    Ok(names)
+}
+
+/// Remove every checkpoint older (lexicographically smaller) than
+/// `keep`, plus stale `.tmp` files. Best-effort — failures are ignored;
+/// a leftover file only wastes disk, never correctness.
+fn prune_older(dir: &Path, keep: &str) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let stale_ckpt = name.starts_with(PREFIX) && name.ends_with(SUFFIX) && name.as_str() < keep;
+        let stale_tmp = name.starts_with(PREFIX) && name.ends_with(".tmp") && name != format!("{keep}.tmp");
+        if stale_ckpt || stale_tmp {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
+// --- codec --------------------------------------------------------------
+//
+// magic (8) | crc32(body) u32 LE | body
+// body: generation u64 | covering_seq u64 | nseg u32 |
+//       per segment: nparam u32, per param: rank u32, dims u32...,
+//                    f32 LE data |
+//       quantized u8 | if 1, per segment, per slot:
+//           present u8 | if 1: rank u32, dims u32..., nscales u32,
+//                        scales f32 LE, data i8 raw
+
+fn encode(store: &ParamStore, generation: u64, covering_seq: u64) -> Vec<u8> {
+    let mut body = Vec::new();
+    body.extend_from_slice(&generation.to_le_bytes());
+    body.extend_from_slice(&covering_seq.to_le_bytes());
+    body.extend_from_slice(&(store.seg.len() as u32).to_le_bytes());
+    for s in &store.seg {
+        body.extend_from_slice(&(s.len() as u32).to_le_bytes());
+        for t in s {
+            push_shape(&mut body, &t.shape);
+            for v in &t.data {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    let quantized = store.is_quantized();
+    body.push(u8::from(quantized));
+    if quantized {
+        for k in 0..store.seg.len() {
+            for slot in store.qseg(k).unwrap() {
+                match slot {
+                    None => body.push(0u8),
+                    Some(q) => {
+                        body.push(1u8);
+                        push_shape(&mut body, &q.shape);
+                        body.extend_from_slice(&(q.scales.len() as u32).to_le_bytes());
+                        for v in &q.scales {
+                            body.extend_from_slice(&v.to_le_bytes());
+                        }
+                        // i8 round-trips through u8 bit-exactly
+                        body.extend(q.data.iter().map(|&v| v as u8));
+                    }
+                }
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(body.len() + 12);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&crc32(&body).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+    if bytes.len() < 12 || &bytes[..8] != MAGIC {
+        bail!("bad checkpoint magic");
+    }
+    let crc = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    let body = &bytes[12..];
+    if crc32(body) != crc {
+        bail!("checkpoint CRC mismatch");
+    }
+    let mut pos = 0usize;
+    let generation = read_u64(body, &mut pos)?;
+    let covering_seq = read_u64(body, &mut pos)?;
+    let nseg = read_u32(body, &mut pos)? as usize;
+    let mut seg = Vec::with_capacity(nseg);
+    for _ in 0..nseg {
+        let np = read_u32(body, &mut pos)? as usize;
+        let mut ps = Vec::with_capacity(np);
+        for _ in 0..np {
+            let shape = read_shape(body, &mut pos)?;
+            let n: usize = shape.iter().product();
+            let raw = take(body, &mut pos, n * 4)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            ps.push(Tensor::new(shape, data)?);
+        }
+        seg.push(ps);
+    }
+    let quantized = *take(body, &mut pos, 1)?.first().unwrap() != 0;
+    let quant = if quantized {
+        let mut qseg = Vec::with_capacity(seg.len());
+        for s in &seg {
+            let mut qs = Vec::with_capacity(s.len());
+            for _ in 0..s.len() {
+                let present = *take(body, &mut pos, 1)?.first().unwrap() != 0;
+                if !present {
+                    qs.push(None);
+                    continue;
+                }
+                let shape = read_shape(body, &mut pos)?;
+                let nscales = read_u32(body, &mut pos)? as usize;
+                let raw = take(body, &mut pos, nscales * 4)?;
+                let scales = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                let n: usize = shape.iter().product();
+                let data = take(body, &mut pos, n)?.iter().map(|&v| v as i8).collect();
+                qs.push(Some(QTensor { shape, data, scales }));
+            }
+            qseg.push(qs);
+        }
+        Some(qseg)
+    } else {
+        None
+    };
+    if pos != body.len() {
+        bail!("checkpoint has {} trailing bytes", body.len() - pos);
+    }
+    Ok(Checkpoint { params: ParamStore::from_parts(seg, quant)?, generation, covering_seq })
+}
+
+fn push_shape(buf: &mut Vec<u8>, shape: &[usize]) {
+    buf.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+    for &d in shape {
+        buf.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+}
+
+fn read_shape(b: &[u8], pos: &mut usize) -> Result<Vec<usize>> {
+    let rank = read_u32(b, pos)? as usize;
+    if rank > 8 {
+        bail!("implausible tensor rank {rank}");
+    }
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        shape.push(read_u32(b, pos)? as usize);
+    }
+    Ok(shape)
+}
+
+fn take<'a>(b: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if *pos + n > b.len() {
+        bail!("checkpoint truncated at byte {pos}");
+    }
+    let s = &b[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
+
+fn read_u32(b: &[u8], pos: &mut usize) -> Result<u32> {
+    let r = take(b, pos, 4)?;
+    Ok(u32::from_le_bytes([r[0], r[1], r[2], r[3]]))
+}
+
+fn read_u64(b: &[u8], pos: &mut usize) -> Result<u64> {
+    let r = take(b, pos, 8)?;
+    Ok(u64::from_le_bytes(r.try_into().unwrap()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelMeta;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ficabu_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn assert_bitwise_eq(a: &ParamStore, b: &ParamStore) {
+        let (fa, fb) = (a.flat(), b.flat());
+        assert_eq!(fa.len(), fb.len());
+        for (x, y) in fa.iter().zip(&fb) {
+            assert_eq!(x.shape, y.shape);
+            assert!(x.data.iter().zip(&y.data).all(|(p, q)| p.to_bits() == q.to_bits()));
+        }
+        for k in 0..a.seg.len() {
+            match (a.qseg(k), b.qseg(k)) {
+                (None, None) => {}
+                (Some(qa), Some(qb)) => {
+                    for (sa, sb) in qa.iter().zip(qb) {
+                        match (sa, sb) {
+                            (None, None) => {}
+                            (Some(x), Some(y)) => {
+                                assert_eq!(x.shape, y.shape);
+                                assert_eq!(x.data, y.data);
+                                assert!(x
+                                    .scales
+                                    .iter()
+                                    .zip(&y.scales)
+                                    .all(|(p, q)| p.to_bits() == q.to_bits()));
+                            }
+                            _ => panic!("int8 slot presence differs"),
+                        }
+                    }
+                }
+                _ => panic!("quantization state differs"),
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_f32_and_int8() {
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
+        for int8 in [false, true] {
+            let dir = tmpdir(if int8 { "rt8" } else { "rt32" });
+            let mut store = ParamStore::init(&meta, 11);
+            if int8 {
+                store.quantize_int8(&meta);
+            }
+            write(&dir, &store, 2, 7).unwrap();
+            let c = load_latest(&dir).unwrap().expect("checkpoint present");
+            assert_eq!((c.generation, c.covering_seq), (2, 7));
+            assert_eq!(c.params.is_quantized(), int8);
+            assert_bitwise_eq(&store, &c.params);
+            c.params.validate(&meta).unwrap();
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn newest_wins_and_older_are_pruned() {
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
+        let dir = tmpdir("newest");
+        let s1 = ParamStore::init(&meta, 1);
+        let s2 = ParamStore::init(&meta, 2);
+        write(&dir, &s1, 1, 3).unwrap();
+        write(&dir, &s2, 1, 8).unwrap();
+        let c = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(c.covering_seq, 8);
+        assert_bitwise_eq(&s2, &c.params);
+        assert_eq!(list_checkpoints(&dir).unwrap().len(), 1, "older checkpoint pruned");
+        // a later generation with a smaller seq still wins
+        write(&dir, &s1, 2, 1).unwrap();
+        let c = load_latest(&dir).unwrap().unwrap();
+        assert_eq!((c.generation, c.covering_seq), (2, 1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_previous() {
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
+        let dir = tmpdir("corrupt");
+        let good = ParamStore::init(&meta, 5);
+        write(&dir, &good, 1, 4).unwrap();
+        // a "newer" file that is pure garbage, plus a torn .tmp
+        std::fs::write(dir.join(file_name(1, 9)), b"garbage").unwrap();
+        std::fs::write(dir.join(format!("{}.tmp", file_name(1, 12))), b"half").unwrap();
+        let c = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(c.covering_seq, 4, "falls back past the corrupt newest");
+        assert_bitwise_eq(&good, &c.params);
+        // bit flip inside a valid file: CRC catches it
+        let path = dir.join(file_name(1, 4));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n / 2] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        std::fs::remove_file(dir.join(file_name(1, 9))).unwrap();
+        assert!(load_latest(&dir).unwrap().is_none(), "no valid checkpoint left");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_empty_not_error() {
+        let dir = std::env::temp_dir().join(format!("ficabu_ckpt_none_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(load_latest(&dir).unwrap().is_none());
+    }
+}

@@ -44,6 +44,22 @@
 //! queue is drained with `Failed` replies and later submissions fail at
 //! admission. [`FleetStats::alive`] plus per-worker `panics`/`respawns`
 //! counters expose the supervision state to `/stats` and `/healthz`.
+//!
+//! **Durability.** A fleet started via [`Fleet::start_durable`] writes a
+//! crash-safe audit trail (see [`wal`](crate::coordinator::wal)):
+//! admission appends an fsync'd `Accepted` ledger record *before* the
+//! caller gets a queue slot (a ledger error fails the request — no slot
+//! without a record), workers append `Completed` records and checkpoint
+//! the post-unlearn [`ParamStore`] every `checkpoint_every` successful
+//! completions *before* replying, and startup replays every entry whose
+//! completion (or covering checkpoint) did not make it to disk. A
+//! respawned replica is *tainted* — it lost the edits its predecessor
+//! served — so it never writes checkpoints; recovery replays the
+//! requests its lost completions left uncovered. The exact contract
+//! (recovered store bitwise equal to an uninterrupted run) holds for
+//! single-worker fleets, the paper's one-device deployment; multi-worker
+//! durable fleets checkpoint whichever replica completed last and the
+//! ledger remains an exact record of accepted/completed work.
 
 use std::collections::VecDeque;
 use std::fmt;
@@ -56,6 +72,9 @@ use anyhow::{bail, Result};
 
 use crate::config::{ModelMeta, SharedMeta};
 use crate::coordinator::queue::{QueueStats, Timing};
+use crate::coordinator::wal::{
+    config_fingerprint, Disposition, Durability, DurabilityConfig, DurabilityStats,
+};
 use crate::coordinator::{EdgeServer, Summary};
 use crate::data::Dataset;
 use crate::fisher::Importance;
@@ -207,6 +226,14 @@ pub struct WorkerSpec {
 /// canonical (it is the entry's coalescing key).
 pub trait UnlearnService {
     fn unlearn(&mut self, spec: &ForgetSpec) -> Result<Summary>;
+
+    /// The replica's live parameter store, when it has one — what a
+    /// durable fleet checkpoints after a completed pass. Test doubles
+    /// without real parameters keep the default `None` (their
+    /// completions are still ledgered; only checkpoints are skipped).
+    fn params(&self) -> Option<&ParamStore> {
+        None
+    }
 }
 
 /// Snapshot of fleet-wide serving statistics.
@@ -225,6 +252,8 @@ pub struct FleetStats {
     /// Queue depth at snapshot time.
     pub queue_depth: usize,
     pub per_worker: Vec<QueueStats>,
+    /// Ledger/checkpoint counters (`None` on a non-durable fleet).
+    pub durability: Option<DurabilityStats>,
 }
 
 impl FleetStats {
@@ -250,6 +279,7 @@ impl FleetStats {
             ("queue_depth", Json::from(self.queue_depth)),
             ("rollup", self.merged().to_json()),
             ("per_worker", Json::Arr(self.per_worker.iter().map(QueueStats::to_json).collect())),
+            ("durability", self.durability.as_ref().map_or(Json::Null, DurabilityStats::to_json)),
         ])
     }
 }
@@ -260,6 +290,10 @@ struct Entry {
     replies: Vec<std::sync::mpsc::Sender<Reply>>,
     enqueued_at: Instant,
     deadline: Option<Instant>,
+    /// Ledger seqs of every durable submission coalesced into this
+    /// entry (empty on a non-durable fleet). Each gets its own
+    /// `Completed` record when the entry is answered.
+    wal_seqs: Vec<u64>,
 }
 
 struct DispatchState {
@@ -276,6 +310,23 @@ struct Shared {
     cfg: FleetConfig,
     m: Mutex<DispatchState>,
     cv: Condvar,
+    /// Durable ledger + checkpoints (`None` = in-memory-only fleet).
+    dur: Option<Arc<Durability>>,
+    /// Fingerprint of the fleet's `UnlearnConfig`, recorded in
+    /// `Accepted` ledger entries (0 for service factories without one).
+    config_hash: u64,
+}
+
+/// Per-replica durability state, owned by the worker thread.
+#[derive(Default)]
+struct ReplicaDur {
+    /// A respawned replica lost its predecessor's served edits: it must
+    /// never checkpoint (a checkpoint from it would claim coverage of
+    /// completions whose edits it does not contain). Recovery replays
+    /// the uncovered entries instead.
+    tainted: bool,
+    /// Highest ledger seq this replica completed successfully.
+    last_done_seq: Option<u64>,
 }
 
 /// N `EdgeServer` replicas behind one dispatcher. See the module docs
@@ -292,10 +343,59 @@ impl Fleet {
         Self::start_with(cfg, move |wid| EdgeServer::from_spec(&spec, wid))
     }
 
+    /// Start a durable production fleet: open-or-recover the write-ahead
+    /// ledger in `dcfg.dir`, seed every replica from the newest valid
+    /// parameter checkpoint (when one exists), and re-enqueue the
+    /// recovered replay set through normal admission. See the module
+    /// docs ("Durability") for the contract.
+    pub fn start_durable(spec: WorkerSpec, cfg: FleetConfig, dcfg: DurabilityConfig) -> Result<Fleet> {
+        let config_hash = config_fingerprint(&spec.cfg);
+        let rec = Durability::open_or_recover(&dcfg)?;
+        let mut spec = spec;
+        if let Some(params) = rec.params {
+            params.validate(&spec.meta)?;
+            spec.params = params;
+        }
+        Self::start_inner(
+            cfg,
+            move |wid| EdgeServer::from_spec(&spec, wid),
+            Some(Arc::new(rec.durability)),
+            config_hash,
+            rec.replay,
+        )
+    }
+
+    /// Durable fleet over an arbitrary service factory (dispatcher tests
+    /// and benches). Checkpoint recovery still runs, but the recovered
+    /// parameters are discarded — the factory owns replica construction
+    /// — and `Accepted` records carry a zero config fingerprint.
+    pub fn start_with_durable<S, F>(cfg: FleetConfig, factory: F, dcfg: DurabilityConfig) -> Result<Fleet>
+    where
+        S: UnlearnService + 'static,
+        F: Fn(usize) -> Result<S> + Send + Sync + 'static,
+    {
+        let rec = Durability::open_or_recover(&dcfg)?;
+        Self::start_inner(cfg, factory, Some(Arc::new(rec.durability)), 0, rec.replay)
+    }
+
     /// Start a fleet over any [`UnlearnService`] factory. The factory
     /// runs once per worker, *inside* the worker thread (the service
     /// itself need not be `Send`).
     pub fn start_with<S, F>(cfg: FleetConfig, factory: F) -> Result<Fleet>
+    where
+        S: UnlearnService + 'static,
+        F: Fn(usize) -> Result<S> + Send + Sync + 'static,
+    {
+        Self::start_inner(cfg, factory, None, 0, Vec::new())
+    }
+
+    fn start_inner<S, F>(
+        cfg: FleetConfig,
+        factory: F,
+        dur: Option<Arc<Durability>>,
+        config_hash: u64,
+        replay: Vec<(u64, ForgetSpec)>,
+    ) -> Result<Fleet>
     where
         S: UnlearnService + 'static,
         F: Fn(usize) -> Result<S> + Send + Sync + 'static,
@@ -311,11 +411,26 @@ impl Fleet {
                 cfg.respawn_giveup
             );
         }
+        // Recovered entries enter the queue before any worker spawns —
+        // replay rides the normal claim/serve path, just with no reply
+        // receivers. They count as admitted: they were, in a prior life.
+        let now = Instant::now();
+        let mut queue = VecDeque::new();
+        for (seq, spec) in replay {
+            queue.push_back(Entry {
+                key: spec.key(),
+                replies: Vec::new(),
+                enqueued_at: now,
+                deadline: None,
+                wal_seqs: vec![seq],
+            });
+        }
+        let admitted = queue.len() as u64;
         let shared = Arc::new(Shared {
             m: Mutex::new(DispatchState {
-                queue: VecDeque::new(),
+                queue,
                 shutdown: false,
-                admitted: 0,
+                admitted,
                 coalesced: 0,
                 shed_backpressure: 0,
                 per_worker: vec![QueueStats::default(); cfg.workers],
@@ -323,6 +438,8 @@ impl Fleet {
             }),
             cv: Condvar::new(),
             cfg,
+            dur,
+            config_hash,
         });
         let factory = Arc::new(factory);
         let (ack_tx, ack_rx) = channel::<Result<(), String>>();
@@ -352,14 +469,22 @@ impl Fleet {
                     // The worker thread is its own supervisor: serve
                     // until shutdown, and on an engine panic discard the
                     // replica and rebuild under backoff.
+                    let mut rdur = ReplicaDur::default();
                     loop {
-                        match worker_loop(wid, &sh, &mut svc) {
-                            WorkerExit::Shutdown => return,
+                        match worker_loop(wid, &sh, &mut svc, &mut rdur) {
+                            WorkerExit::Shutdown => {
+                                final_checkpoint(&sh, &svc, &rdur);
+                                return;
+                            }
                             WorkerExit::Panicked => {
                                 set_status(&sh, wid, WorkerStatus::Respawning);
                                 match respawn(wid, &sh, &*f) {
                                     Some(fresh) => {
                                         svc = fresh;
+                                        // the fresh replica starts from
+                                        // factory params: edits served by
+                                        // its predecessor are gone
+                                        rdur.tainted = true;
                                         let mut st = sh.m.lock().unwrap();
                                         st.status[wid] = WorkerStatus::Alive;
                                         st.per_worker[wid].respawns += 1;
@@ -435,12 +560,22 @@ impl Fleet {
         if let Some(e) = st.queue.iter_mut().find(|e| e.key == key) {
             // Coalesce: one execution will fan out to every requester.
             // The entry keeps the laxest deadline so a late joiner
-            // cannot get an earlier waiter shed.
+            // cannot get an earlier waiter shed. On a durable fleet the
+            // joiner still gets its own ledger record — the ledger is a
+            // per-request audit trail, not a per-execution one.
+            let wal_seq = match self.log_accepted(&key, deadline) {
+                Ok(seq) => seq,
+                Err(reply) => {
+                    let _ = tx.send(reply);
+                    return rx;
+                }
+            };
             e.deadline = match (e.deadline, abs_deadline) {
                 (Some(a), Some(b)) => Some(a.max(b)),
                 _ => None,
             };
             e.replies.push(tx);
+            e.wal_seqs.extend(wal_seq);
             st.coalesced += 1;
             return rx;
         }
@@ -452,16 +587,44 @@ impl Fleet {
             });
             return rx;
         }
+        // Durable admission: the `Accepted` record is fsync'd *before*
+        // the caller gets its slot; if the ledger cannot be written the
+        // request fails closed (accepting it would make the crash-replay
+        // guarantee a lie). Shed requests above never reach the ledger —
+        // they were refused, not accepted.
+        let wal_seq = match self.log_accepted(&key, deadline) {
+            Ok(seq) => seq,
+            Err(reply) => {
+                let _ = tx.send(reply);
+                return rx;
+            }
+        };
         st.queue.push_back(Entry {
             key,
             replies: vec![tx],
             enqueued_at: now,
             deadline: abs_deadline,
+            wal_seqs: wal_seq.into_iter().collect(),
         });
         st.admitted += 1;
         drop(st);
         self.shared.cv.notify_one();
         rx
+    }
+
+    /// Durable-admission helper: append an `Accepted` record when the
+    /// fleet has a ledger. `Ok(None)` on a non-durable fleet; `Err`
+    /// carries the fail-closed reply for a ledger write failure.
+    fn log_accepted(
+        &self,
+        key: &SpecKey,
+        deadline: Option<Duration>,
+    ) -> std::result::Result<Option<u64>, Reply> {
+        let Some(dur) = &self.shared.dur else { return Ok(None) };
+        match dur.log_accepted(key.spec(), self.shared.config_hash, deadline) {
+            Ok(seq) => Ok(Some(seq)),
+            Err(e) => Err(Reply::Failed(format!("{e:#}"))),
+        }
     }
 
     /// Point-in-time statistics snapshot.
@@ -532,6 +695,7 @@ fn snapshot(sh: &Shared) -> FleetStats {
         shed_backpressure: st.shed_backpressure,
         queue_depth: st.queue.len(),
         per_worker: st.per_worker.clone(),
+        durability: sh.dur.as_ref().map(|d| d.stats()),
     }
 }
 
@@ -601,7 +765,32 @@ where
     None
 }
 
-fn worker_loop<S: UnlearnService>(wid: usize, sh: &Shared, svc: &mut S) -> WorkerExit {
+/// Flush a final checkpoint at clean shutdown so a restart needs no
+/// replay. Skipped for tainted replicas (see [`ReplicaDur::tainted`]),
+/// replicas that completed nothing, services without parameters, and
+/// when the cadence already checkpointed this replica's last
+/// completion.
+fn final_checkpoint<S: UnlearnService>(sh: &Shared, svc: &S, rd: &ReplicaDur) {
+    let Some(dur) = &sh.dur else { return };
+    if rd.tainted {
+        return;
+    }
+    let Some(seq) = rd.last_done_seq else { return };
+    if dur.last_checkpoint_seq() >= seq {
+        return;
+    }
+    let Some(store) = svc.params() else { return };
+    if let Err(e) = dur.write_checkpoint(store, seq) {
+        eprintln!("ficabu: final checkpoint failed: {e:#}");
+    }
+}
+
+fn worker_loop<S: UnlearnService>(
+    wid: usize,
+    sh: &Shared,
+    svc: &mut S,
+    rd: &mut ReplicaDur,
+) -> WorkerExit {
     loop {
         let mut batch: Vec<Entry> = Vec::new();
         {
@@ -627,7 +816,7 @@ fn worker_loop<S: UnlearnService>(wid: usize, sh: &Shared, svc: &mut S) -> Worke
         }
         let mut it = batch.into_iter();
         while let Some(entry) = it.next() {
-            if let ServeOutcome::Panicked = serve_entry(wid, sh, svc, entry) {
+            if let ServeOutcome::Panicked = serve_entry(wid, sh, svc, rd, entry) {
                 // the replica may be corrupted: hand the rest of the
                 // claimed batch back (in order, at the front) for the
                 // respawned replica or a peer to serve
@@ -657,13 +846,31 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-fn serve_entry<S: UnlearnService>(wid: usize, sh: &Shared, svc: &mut S, e: Entry) -> ServeOutcome {
+/// Ledger a non-`Done` completion (durable fleets only). Failed and
+/// expired entries changed no parameters — the engine is transactional
+/// — so they are completions that recovery must *not* replay.
+fn log_completion_unchanged(sh: &Shared, seqs: &[u64], disposition: Disposition, rolled_back: bool) {
+    if let Some(dur) = &sh.dur {
+        if !seqs.is_empty() {
+            dur.log_completed(seqs, disposition, rolled_back, -1.0, -1.0);
+        }
+    }
+}
+
+fn serve_entry<S: UnlearnService>(
+    wid: usize,
+    sh: &Shared,
+    svc: &mut S,
+    rd: &mut ReplicaDur,
+    e: Entry,
+) -> ServeOutcome {
     let queue_ms = e.enqueued_at.elapsed().as_secs_f64() * 1e3;
     if let Some(dl) = e.deadline {
         let now = Instant::now();
         if now > dl {
             let missed_by_ms = now.duration_since(dl).as_secs_f64() * 1e3;
             sh.m.lock().unwrap().per_worker[wid].record_shed();
+            log_completion_unchanged(sh, &e.wal_seqs, Disposition::Expired, false);
             for tx in e.replies {
                 let _ = tx.send(Reply::Expired { missed_by_ms });
             }
@@ -685,6 +892,9 @@ fn serve_entry<S: UnlearnService>(wid: usize, sh: &Shared, svc: &mut S, e: Entry
                 st.per_worker[wid].record(&timing, false);
                 st.per_worker[wid].panics += 1;
             }
+            // the engine's journal restored the segment pre-images
+            // before the panic propagated: rolled_back is truthful
+            log_completion_unchanged(sh, &e.wal_seqs, Disposition::Failed, true);
             let msg =
                 format!("worker {wid} panicked mid-request: {}", panic_message(&*payload));
             for tx in e.replies {
@@ -708,11 +918,41 @@ fn serve_entry<S: UnlearnService>(wid: usize, sh: &Shared, svc: &mut S, e: Entry
     match out {
         Ok(mut s) => {
             s.timing = timing;
+            s.wal_seq = e.wal_seqs.iter().copied().min();
+            // Durable ordering: `Completed` records, then (when due) the
+            // covering checkpoint, then the replies. Completion-before-
+            // checkpoint means a crash between the two replays onto the
+            // *previous* checkpoint (exactly-once parameter state);
+            // checkpoint-before-reply means an answered `done` is never
+            // silently lost. A crash before the reply re-runs the entry
+            // — at-least-once toward the caller, exactly-once on disk.
+            if let Some(dur) = &sh.dur {
+                if !e.wal_seqs.is_empty() {
+                    let due = dur.log_completed(
+                        &e.wal_seqs,
+                        Disposition::Done,
+                        s.rolled_back,
+                        s.forget_acc,
+                        s.retain_acc,
+                    );
+                    let covering = e.wal_seqs.iter().copied().max().unwrap();
+                    rd.last_done_seq = Some(rd.last_done_seq.map_or(covering, |p| p.max(covering)));
+                    if due && !rd.tainted {
+                        if let Some(store) = svc.params() {
+                            if let Err(err) = dur.write_checkpoint(store, rd.last_done_seq.unwrap())
+                            {
+                                eprintln!("ficabu: checkpoint failed (serving continues): {err:#}");
+                            }
+                        }
+                    }
+                }
+            }
             for tx in e.replies {
                 let _ = tx.send(Reply::Done(s.clone()));
             }
         }
         Err(err) => {
+            log_completion_unchanged(sh, &e.wal_seqs, Disposition::Failed, true);
             let msg = format!("{err:#}");
             for tx in e.replies {
                 let _ = tx.send(Reply::Failed(msg.clone()));

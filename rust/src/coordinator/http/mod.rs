@@ -253,6 +253,7 @@ mod tests {
                 sim_ms: 0.0,
                 rolled_back: false,
                 timing: Timing { queue_ms: 0.0, service_ms: 0.0 },
+                wal_seq: None,
             })
         }
     }

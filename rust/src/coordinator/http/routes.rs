@@ -190,6 +190,7 @@ mod tests {
                 sim_ms: 0.0,
                 rolled_back: false,
                 timing: Timing { queue_ms: 0.0, service_ms: 0.0 },
+                wal_seq: None,
             })
         }
     }
@@ -272,6 +273,40 @@ mod tests {
         let j = body(&resp);
         assert!(j.get("rollup").unwrap().get("queue_p99_ms").is_some());
         assert_eq!(j.get("per_worker").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn stats_exposes_supervision_and_durability_on_the_wire() {
+        // supervision counters on a plain fleet; durability is null
+        let f = fleet();
+        let j = body(&handle(&req("GET", "/stats", ""), &f, None));
+        assert_eq!(j.get("alive").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("rollup").unwrap().get("panics").unwrap().as_i64(), Some(0));
+        assert_eq!(j.get("rollup").unwrap().get("respawns").unwrap().as_i64(), Some(0));
+        assert!(matches!(j.get("durability"), Some(Json::Null)));
+        drop(f);
+
+        // a durable fleet serves its ledger counters
+        let dir = std::env::temp_dir()
+            .join(format!("ficabu_routes_durable_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let f = Fleet::start_with_durable(
+            FleetConfig::default(),
+            |_| Ok(Echo),
+            crate::coordinator::DurabilityConfig { dir: dir.clone(), checkpoint_every: 1 },
+        )
+        .unwrap();
+        let reply = f.submit(ForgetSpec::Class(2)).recv().unwrap();
+        assert!(matches!(reply, Reply::Done(_)), "{reply:?}");
+        let j = body(&handle(&req("GET", "/stats", ""), &f, None));
+        let d = j.get("durability").unwrap();
+        assert_eq!(d.get("wal_seq").unwrap().as_i64(), Some(1));
+        assert_eq!(d.get("replayed").unwrap().as_i64(), Some(0));
+        // Echo has no params: completions are ledgered, checkpoints skipped
+        assert_eq!(d.get("checkpoints").unwrap().as_i64(), Some(0));
+        assert!(d.get("generation").unwrap().as_i64().unwrap() >= 1);
+        drop(f);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

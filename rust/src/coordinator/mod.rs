@@ -44,15 +44,18 @@
 //! therefore exact (one execution, one store) while cross-worker
 //! convergence is out of scope here (see ROADMAP sharding).
 
+pub mod checkpoint;
 pub mod dispatch;
 pub mod http;
 pub mod queue;
 pub mod session;
+pub mod wal;
 
 pub use dispatch::{Fleet, FleetConfig, FleetStats, Pacing, Reply, UnlearnService, WorkerSpec};
 pub use http::{HttpConfig, HttpServer};
 pub use queue::{LatencyHistogram, QueueStats, Timing};
 pub use session::{EdgeServer, UnlearnSession, UnlearnSessionBuilder};
+pub use wal::{Durability, DurabilityConfig, DurabilityStats};
 
 use anyhow::Result;
 
@@ -80,6 +83,10 @@ pub struct Summary {
     pub rolled_back: bool,
     /// Filled in by the dispatcher: measured queue + service latency.
     pub timing: Timing,
+    /// Ledger sequence number of the request (lowest across coalesced
+    /// submissions) on a durable fleet; `None` otherwise. A caller can
+    /// quote it against the ledger as proof its request was recorded.
+    pub wal_seq: Option<u64>,
 }
 
 impl Summary {
@@ -104,6 +111,7 @@ impl Summary {
             ("rolled_back", Json::from(self.rolled_back)),
             ("queue_ms", Json::from(self.timing.queue_ms)),
             ("service_ms", Json::from(self.timing.service_ms)),
+            ("wal_seq", self.wal_seq.map(|s| Json::from(s as usize)).unwrap_or(Json::Null)),
         ])
     }
 }
@@ -111,6 +119,10 @@ impl Summary {
 impl UnlearnService for UnlearnSession {
     fn unlearn(&mut self, spec: &ForgetSpec) -> Result<Summary> {
         self.forget(spec)
+    }
+
+    fn params(&self) -> Option<&crate::model::ParamStore> {
+        Some(&self.params)
     }
 }
 
@@ -137,6 +149,7 @@ mod tests {
             sim_ms: 430.0,
             rolled_back: false,
             timing: Timing { queue_ms: 3.0, service_ms: 80.0 },
+            wal_seq: None,
         }
     }
 
@@ -201,10 +214,31 @@ mod tests {
             shed_backpressure: 0,
             queue_depth: 0,
             per_worker: vec![q],
+            durability: None,
         };
         let j = fs.to_json();
         assert_eq!(j.get("workers").unwrap().as_i64(), Some(1));
         assert_eq!(j.get("rollup").unwrap().get("served").unwrap().as_i64(), Some(1));
         assert_eq!(j.get("per_worker").unwrap().as_arr().unwrap().len(), 1);
+        // supervision + durability are part of the wire contract
+        assert_eq!(j.get("alive").unwrap().as_i64(), Some(1));
+        assert!(j.get("rollup").unwrap().get("panics").is_some());
+        assert!(j.get("rollup").unwrap().get("respawns").is_some());
+        assert!(matches!(j.get("durability"), Some(Json::Null)), "null when not durable");
+        let durable = FleetStats {
+            durability: Some(DurabilityStats {
+                generation: 2,
+                wal_seq: 7,
+                replayed: 1,
+                checkpoints: 3,
+            }),
+            ..fs
+        };
+        let d = durable.to_json();
+        let d = d.get("durability").unwrap();
+        assert_eq!(d.get("generation").unwrap().as_i64(), Some(2));
+        assert_eq!(d.get("wal_seq").unwrap().as_i64(), Some(7));
+        assert_eq!(d.get("replayed").unwrap().as_i64(), Some(1));
+        assert_eq!(d.get("checkpoints").unwrap().as_i64(), Some(3));
     }
 }

@@ -82,7 +82,12 @@ pub struct UnlearnSession {
     strategy: Box<dyn Strategy>,
     pub ficabu_hw: FicabuProcessor,
     pub baseline_hw: BaselineProcessor,
-    pub rng: Pcg32,
+    /// Base seed of the forget-batch sampler. Each request draws from a
+    /// fresh `Pcg32` seeded by `seed ^ spec-key hash`, so the batch is a
+    /// pure function of (session seed, canonical spec): replicas stay
+    /// decorrelated by seed, and a crash-recovery replay of the same
+    /// spec reproduces the exact same edit.
+    seed: u64,
 }
 
 /// The fleet-facing name for a session: each worker thread builds one
@@ -195,7 +200,7 @@ impl UnlearnSessionBuilder {
             strategy,
             ficabu_hw: FicabuProcessor::new(tile, precision),
             baseline_hw: BaselineProcessor::new(tile, precision),
-            rng: Pcg32::seeded(self.seed.unwrap_or(0xedbe)),
+            seed: self.seed.unwrap_or(0xedbe),
         })
     }
 }
@@ -228,7 +233,7 @@ impl UnlearnSession {
 
     /// Reseed the forget-batch sampler (used to decorrelate replicas).
     pub fn with_seed(mut self, seed: u64) -> UnlearnSession {
-        self.rng = Pcg32::seeded(seed);
+        self.seed = seed;
         self
     }
 
@@ -253,7 +258,10 @@ impl UnlearnSession {
         // dataset's own class count, which may exceed the head's
         spec.validate(meta.num_classes, self.train.len())?;
         let pool = spec.pool(&self.train)?;
-        let (x, labels) = self.train.batch_from_pool(&pool, meta.batch, &mut self.rng)?;
+        // Per-request sampler: deterministic in (seed, spec) — required
+        // for durable replay to reproduce the pre-crash edit bitwise.
+        let mut rng = Pcg32::seeded(self.seed ^ spec.key().hash64());
+        let (x, labels) = self.train.batch_from_pool(&pool, meta.batch, &mut rng)?;
         let report: UnlearnReport = run_strategy(
             &self.model,
             &mut self.params,
@@ -299,6 +307,7 @@ impl UnlearnSession {
             sim_ms: fic.seconds * 1e3,
             rolled_back: report.rolled_back,
             timing: Timing::default(),
+            wal_seq: None,
         })
     }
 

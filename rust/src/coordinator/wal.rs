@@ -1,0 +1,868 @@
+//! Durable write-ahead ledger for the serving fleet.
+//!
+//! The ledger turns the fleet from a cache into a system of record: a
+//! forget request is *accepted* only after an [`Record::Accepted`] entry
+//! is on disk (length-prefixed, CRC32-checksummed, `fsync`'d), and is
+//! *completed* only once the matching [`Record::Completed`] entry is —
+//! so a power loss or `kill -9` can lose in-memory state, never the
+//! fact that a request was admitted. [`Durability::open_or_recover`]
+//! reloads the newest valid parameter checkpoint
+//! ([`checkpoint`](crate::coordinator::checkpoint)) and re-enqueues
+//! every accepted-but-not-completed request through the normal fleet
+//! admission path.
+//!
+//! # On-disk layout
+//!
+//! One file per ledger (`wal.log` inside the `--durable` directory):
+//!
+//! ```text
+//! header:  "FICABUW1" | generation u64 LE | crc32(generation bytes) u32 LE
+//! record:  len u32 LE | crc32(payload) u32 LE | payload (len bytes)
+//!
+//! payload (Accepted):  0x01 | seq u64 | config_hash u64 |
+//!                      deadline_ms f64 (NaN = none) |
+//!                      spec_len u32 | canonical spec string bytes
+//! payload (Completed): 0x02 | seq u64 | disposition u8 | rolled_back u8 |
+//!                      forget_acc f64 | retain_acc f64
+//! ```
+//!
+//! All integers are little-endian. Every append is one
+//! `write_all` + `fsync` (`File::sync_data`), in admission order.
+//!
+//! # Torn-write semantics
+//!
+//! A crash can leave at most one partial frame at the *tail* of the
+//! file (appends are sequential and synced). On open, records are
+//! scanned front to back and the scan stops at the first frame that is
+//! short (fewer than 8 header bytes or fewer than `len` payload bytes),
+//! has an implausible length (0 or > 16 MiB), fails its CRC32, or does
+//! not decode to a known record type. Everything before that point is
+//! the durable prefix; everything at and after it is discarded —
+//! [`Wal::open_append`] physically truncates the file there, and
+//! recovery rewrites the ledger wholesale. A torn or corrupt record can
+//! therefore only ever drop the *suffix* it begins, never a record
+//! before it, and a partially-written `Accepted` entry is equivalent to
+//! the request never having been admitted (its caller never got a queue
+//! slot: the slot is granted only after the `fsync` returns).
+//!
+//! # Recovery contract
+//!
+//! Let `C` be the covering sequence number embedded in the newest valid
+//! checkpoint of the *same ledger generation* (0 when there is no
+//! checkpoint or it is from an older generation). An accepted entry is
+//! re-enqueued when it has no completion record, or when it completed
+//! successfully with `seq > C` (its edits post-date the checkpoint and
+//! were lost with the process). Entries that completed as `failed` or
+//! `expired` changed no parameters (the engine is transactional) and
+//! were answered, so they are not replayed. Replay is idempotent per
+//! canonical [`SpecKey`](crate::unlearn::SpecKey): duplicates collapse
+//! to one entry, and the forget batch of a request is a pure function
+//! of (worker seed, spec), so replaying an event reproduces the same
+//! edit. Recovery then *rewrites* the ledger atomically (tempfile +
+//! fsync + rename) with a bumped generation containing one fresh
+//! `Accepted` record per replayed entry — so a second crash before the
+//! replays complete recovers them again.
+//!
+//! Fault seams for chaos tests: `wal_append` (every ledger append),
+//! `checkpoint` (every checkpoint write), `replay` (every re-enqueued
+//! entry during recovery) — see [`testkit::faults`](crate::testkit::faults).
+
+use std::collections::{HashMap, HashSet};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::checkpoint;
+use crate::model::ParamStore;
+use crate::testkit::faults;
+use crate::unlearn::{ForgetSpec, UnlearnConfig};
+use crate::util::json::Json;
+
+/// Ledger file name inside the durable directory.
+pub const LEDGER_FILE: &str = "wal.log";
+
+const LEDGER_MAGIC: &[u8; 8] = b"FICABUW1";
+const HEADER_LEN: u64 = 8 + 8 + 4;
+/// Upper bound on one record payload — anything larger is treated as
+/// corruption (the largest legitimate payload is a sample-level spec).
+const MAX_RECORD: u32 = 16 << 20;
+
+// --- CRC32 (IEEE 802.3, reflected) -------------------------------------
+
+fn crc32_table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    })
+}
+
+/// CRC32 checksum (IEEE 802.3 polynomial) over `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let t = crc32_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = t[((c ^ u32::from(b)) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// --- records ------------------------------------------------------------
+
+/// How a completed entry left the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Disposition {
+    /// The unlearning pass committed its edits.
+    Done,
+    /// The pass errored or panicked; the replica rolled back.
+    Failed,
+    /// Shed at claim time (deadline passed); the engine never ran.
+    Expired,
+}
+
+impl Disposition {
+    fn code(self) -> u8 {
+        match self {
+            Disposition::Done => 0,
+            Disposition::Failed => 1,
+            Disposition::Expired => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Disposition> {
+        Ok(match c {
+            0 => Disposition::Done,
+            1 => Disposition::Failed,
+            2 => Disposition::Expired,
+            _ => bail!("unknown disposition code {c}"),
+        })
+    }
+}
+
+/// One ledger entry. `Accepted` precedes the caller's queue slot;
+/// `Completed` follows the pass outcome (and precedes the reply).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Record {
+    Accepted {
+        seq: u64,
+        /// Canonical request (the coalescing key's spec).
+        spec: ForgetSpec,
+        /// Fingerprint of the fleet's [`UnlearnConfig`] at admission —
+        /// an audit field; recovery does not interpret it.
+        config_hash: u64,
+        /// Admission deadline in ms (`None` = no deadline). Replayed
+        /// entries are re-admitted without one: the original deadline
+        /// predates the crash and the regulator wants completion.
+        deadline_ms: Option<f64>,
+    },
+    Completed {
+        seq: u64,
+        disposition: Disposition,
+        rolled_back: bool,
+        /// Post-edit accuracy readouts (`-1.0` when the pass did not
+        /// produce them, i.e. any non-`Done` disposition).
+        forget_acc: f64,
+        retain_acc: f64,
+    },
+}
+
+impl Record {
+    pub fn seq(&self) -> u64 {
+        match self {
+            Record::Accepted { seq, .. } | Record::Completed { seq, .. } => *seq,
+        }
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        match self {
+            Record::Accepted { seq, spec, config_hash, deadline_ms } => {
+                b.push(1u8);
+                b.extend_from_slice(&seq.to_le_bytes());
+                b.extend_from_slice(&config_hash.to_le_bytes());
+                b.extend_from_slice(&deadline_ms.unwrap_or(f64::NAN).to_le_bytes());
+                let s = spec.to_string();
+                b.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                b.extend_from_slice(s.as_bytes());
+            }
+            Record::Completed { seq, disposition, rolled_back, forget_acc, retain_acc } => {
+                b.push(2u8);
+                b.extend_from_slice(&seq.to_le_bytes());
+                b.push(disposition.code());
+                b.push(u8::from(*rolled_back));
+                b.extend_from_slice(&forget_acc.to_le_bytes());
+                b.extend_from_slice(&retain_acc.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    fn decode(payload: &[u8]) -> Result<Record> {
+        let mut pos = 0usize;
+        let tag = *take(payload, &mut pos, 1)?.first().unwrap();
+        Ok(match tag {
+            1 => {
+                let seq = read_u64(payload, &mut pos)?;
+                let config_hash = read_u64(payload, &mut pos)?;
+                let ms = read_f64(payload, &mut pos)?;
+                let n = read_u32(payload, &mut pos)? as usize;
+                let raw = take(payload, &mut pos, n)?;
+                let text = std::str::from_utf8(raw).context("spec is not utf-8")?;
+                Record::Accepted {
+                    seq,
+                    spec: ForgetSpec::parse(text)?,
+                    config_hash,
+                    deadline_ms: if ms.is_nan() { None } else { Some(ms) },
+                }
+            }
+            2 => {
+                let seq = read_u64(payload, &mut pos)?;
+                let disposition = Disposition::from_code(*take(payload, &mut pos, 1)?.first().unwrap())?;
+                let rolled_back = *take(payload, &mut pos, 1)?.first().unwrap() != 0;
+                let forget_acc = read_f64(payload, &mut pos)?;
+                let retain_acc = read_f64(payload, &mut pos)?;
+                Record::Completed { seq, disposition, rolled_back, forget_acc, retain_acc }
+            }
+            t => bail!("unknown record type {t}"),
+        })
+    }
+}
+
+fn take<'a>(b: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if *pos + n > b.len() {
+        bail!("record truncated at byte {pos}");
+    }
+    let s = &b[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
+
+fn read_u32(b: &[u8], pos: &mut usize) -> Result<u32> {
+    let r = take(b, pos, 4)?;
+    Ok(u32::from_le_bytes([r[0], r[1], r[2], r[3]]))
+}
+
+fn read_u64(b: &[u8], pos: &mut usize) -> Result<u64> {
+    let r = take(b, pos, 8)?;
+    Ok(u64::from_le_bytes(r.try_into().unwrap()))
+}
+
+fn read_f64(b: &[u8], pos: &mut usize) -> Result<f64> {
+    Ok(f64::from_bits(read_u64(b, pos)?))
+}
+
+// --- ledger scan --------------------------------------------------------
+
+/// Result of scanning a ledger file under the torn-write rules (see the
+/// module docs): the valid record prefix plus where it ends.
+#[derive(Debug)]
+pub struct LedgerScan {
+    pub generation: u64,
+    pub records: Vec<Record>,
+    /// Byte length of the valid prefix (header included).
+    pub valid_len: u64,
+    /// Whether bytes past `valid_len` were found (torn tail/corruption).
+    pub truncated: bool,
+}
+
+/// Scan `path`, stopping at the first torn or corrupt frame. An
+/// unreadable *header* yields an empty generation-0 scan (the whole
+/// file is treated as lost; recovery rewrites it with a bumped
+/// generation).
+pub fn read_ledger(path: &Path) -> Result<LedgerScan> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading ledger {}", path.display()))?;
+    let header_ok = bytes.len() >= HEADER_LEN as usize
+        && &bytes[..8] == LEDGER_MAGIC
+        && crc32(&bytes[8..16]) == u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+    if !header_ok {
+        return Ok(LedgerScan { generation: 0, records: Vec::new(), valid_len: 0, truncated: true });
+    }
+    let generation = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let mut records = Vec::new();
+    let mut pos = HEADER_LEN as usize;
+    loop {
+        if pos + 8 > bytes.len() {
+            break; // clean end (pos == len) or short frame header
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if len == 0 || len > MAX_RECORD {
+            break;
+        }
+        let end = pos + 8 + len as usize;
+        if end > bytes.len() {
+            break; // torn payload
+        }
+        let payload = &bytes[pos + 8..end];
+        if crc32(payload) != crc {
+            break;
+        }
+        let Ok(rec) = Record::decode(payload) else {
+            break; // checksummed but unknown shape: stop, same as torn
+        };
+        records.push(rec);
+        pos = end;
+    }
+    Ok(LedgerScan {
+        generation,
+        records,
+        valid_len: pos as u64,
+        truncated: pos < bytes.len(),
+    })
+}
+
+/// Atomically replace the ledger at `path` with a fresh one holding
+/// `records` under `generation` (tempfile + fsync + rename + dir fsync).
+pub fn write_replacing(path: &Path, generation: u64, records: &[Record]) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(LEDGER_MAGIC);
+    buf.extend_from_slice(&generation.to_le_bytes());
+    buf.extend_from_slice(&crc32(&generation.to_le_bytes()).to_le_bytes());
+    for rec in records {
+        frame_into(&mut buf, rec);
+    }
+    let tmp = path.with_extension("log.tmp");
+    {
+        let mut f = File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&buf)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    sync_dir(path.parent().unwrap_or(Path::new(".")));
+    Ok(())
+}
+
+fn frame_into(buf: &mut Vec<u8>, rec: &Record) {
+    let payload = rec.encode();
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&crc32(&payload).to_le_bytes());
+    buf.extend_from_slice(&payload);
+}
+
+/// Best-effort directory fsync so a rename survives power loss.
+fn sync_dir(dir: &Path) {
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+// --- the ledger handle --------------------------------------------------
+
+struct WalInner {
+    file: File,
+    next_seq: u64,
+}
+
+/// Append handle over one ledger file. Appends are serialized through
+/// an internal lock and each is `fsync`'d before returning, so sequence
+/// numbers on disk are in admission order.
+pub struct Wal {
+    path: PathBuf,
+    generation: u64,
+    inner: Mutex<WalInner>,
+}
+
+impl Wal {
+    /// Open an existing ledger for appending: scan it, physically
+    /// truncate any torn tail, and continue the sequence numbering
+    /// after the highest valid record. Fails on an unreadable header —
+    /// that state is recovered by [`Durability::open_or_recover`].
+    pub fn open_append(path: impl AsRef<Path>) -> Result<(Wal, Vec<Record>)> {
+        let path = path.as_ref().to_path_buf();
+        let scan = read_ledger(&path)?;
+        if scan.valid_len < HEADER_LEN {
+            bail!("ledger {} has a corrupt header; run recovery", path.display());
+        }
+        let file = OpenOptions::new().append(true).open(&path)?;
+        if scan.truncated {
+            file.set_len(scan.valid_len)?;
+            file.sync_all()?;
+        }
+        let next_seq = scan.records.iter().map(Record::seq).max().unwrap_or(0) + 1;
+        Ok((
+            Wal {
+                path,
+                generation: scan.generation,
+                inner: Mutex::new(WalInner { file, next_seq }),
+            },
+            scan.records,
+        ))
+    }
+
+    fn lock(&self) -> MutexGuard<'_, WalInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Highest sequence number assigned so far (0 = none).
+    pub fn last_seq(&self) -> u64 {
+        self.lock().next_seq - 1
+    }
+
+    fn append_locked(inner: &mut WalInner, rec: &Record) -> Result<()> {
+        faults::hit("wal_append")?;
+        let mut frame = Vec::new();
+        frame_into(&mut frame, rec);
+        inner.file.write_all(&frame)?;
+        inner.file.sync_data()?;
+        Ok(())
+    }
+
+    /// Append an `Accepted` record and return its sequence number. The
+    /// record is on disk (fsync'd) when this returns.
+    pub fn append_accepted(
+        &self,
+        spec: &ForgetSpec,
+        config_hash: u64,
+        deadline: Option<Duration>,
+    ) -> Result<u64> {
+        let mut inner = self.lock();
+        let seq = inner.next_seq;
+        let rec = Record::Accepted {
+            seq,
+            spec: spec.canonical(),
+            config_hash,
+            deadline_ms: deadline.map(|d| d.as_secs_f64() * 1e3),
+        };
+        Self::append_locked(&mut inner, &rec)?;
+        inner.next_seq = seq + 1;
+        Ok(seq)
+    }
+
+    /// Append a `Completed` record for `seq`.
+    pub fn append_completed(
+        &self,
+        seq: u64,
+        disposition: Disposition,
+        rolled_back: bool,
+        forget_acc: f64,
+        retain_acc: f64,
+    ) -> Result<()> {
+        let mut inner = self.lock();
+        let rec = Record::Completed { seq, disposition, rolled_back, forget_acc, retain_acc };
+        Self::append_locked(&mut inner, &rec)
+    }
+}
+
+// --- durability orchestration -------------------------------------------
+
+/// Where and how often the fleet persists.
+#[derive(Debug, Clone)]
+pub struct DurabilityConfig {
+    /// Directory holding the ledger and parameter checkpoints.
+    pub dir: PathBuf,
+    /// Checkpoint the serving store every N successful completions
+    /// (>= 1). A final checkpoint is also flushed at clean shutdown.
+    pub checkpoint_every: u64,
+}
+
+/// Counters surfaced by `GET /stats` and the `serve` CLI summary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DurabilityStats {
+    pub generation: u64,
+    /// Highest ledger sequence number assigned (0 = none yet).
+    pub wal_seq: u64,
+    /// Entries re-enqueued by recovery at startup.
+    pub replayed: u64,
+    /// Parameter checkpoints written this process.
+    pub checkpoints: u64,
+}
+
+impl DurabilityStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("generation", Json::from(self.generation as usize)),
+            ("wal_seq", Json::from(self.wal_seq as usize)),
+            ("replayed", Json::from(self.replayed as usize)),
+            ("checkpoints", Json::from(self.checkpoints as usize)),
+        ])
+    }
+}
+
+/// Outcome of [`Durability::open_or_recover`].
+pub struct Recovered {
+    pub durability: Durability,
+    /// Parameter store of the newest valid checkpoint, when one exists
+    /// — the fleet's replicas must start from it.
+    pub params: Option<ParamStore>,
+    /// Entries to re-enqueue, in ledger order: (fresh ledger seq,
+    /// canonical spec). Their `Accepted` records are already durable.
+    pub replay: Vec<(u64, ForgetSpec)>,
+}
+
+/// The fleet's durable state: one write-ahead ledger plus the parameter
+/// checkpoint cadence. Shared across admission (caller threads) and
+/// completion (worker threads).
+pub struct Durability {
+    wal: Wal,
+    dir: PathBuf,
+    checkpoint_every: u64,
+    replayed: u64,
+    /// Successful completions since start (checkpoint cadence).
+    done_entries: AtomicU64,
+    checkpoints: AtomicU64,
+    /// Covering seq of the last checkpoint written this process (0 =
+    /// none), so shutdown skips a redundant final flush.
+    last_ckpt_seq: AtomicU64,
+    /// Serializes checkpoint writes across workers.
+    ckpt_write: Mutex<()>,
+}
+
+impl Durability {
+    /// Open the durable directory, recovering if a previous process
+    /// died: load the newest valid checkpoint, scan the ledger under
+    /// the torn-write rules, compute the replay set, and atomically
+    /// rewrite the ledger (bumped generation) with one fresh `Accepted`
+    /// record per replayed entry.
+    pub fn open_or_recover(cfg: &DurabilityConfig) -> Result<Recovered> {
+        ensure!(cfg.checkpoint_every >= 1, "checkpoint_every must be >= 1");
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating durable dir {}", cfg.dir.display()))?;
+        let ckpt = checkpoint::load_latest(&cfg.dir)?;
+        let path = cfg.dir.join(LEDGER_FILE);
+        let scan = if path.exists() {
+            read_ledger(&path)?
+        } else {
+            LedgerScan { generation: 0, records: Vec::new(), valid_len: 0, truncated: false }
+        };
+
+        // Covering seq is only meaningful against the same ledger
+        // generation; an older-generation checkpoint covers none of the
+        // current ledger's completions (conservative: replay them all).
+        let ckpt_gen = ckpt.as_ref().map(|c| c.generation).unwrap_or(0);
+        let covering = match &ckpt {
+            Some(c) if c.generation == scan.generation => c.covering_seq,
+            _ => 0,
+        };
+
+        let mut completed: HashMap<u64, Disposition> = HashMap::new();
+        for rec in &scan.records {
+            if let Record::Completed { seq, disposition, .. } = rec {
+                completed.insert(*seq, *disposition);
+            }
+        }
+        let mut seen_keys: HashSet<u64> = HashSet::new();
+        let mut fresh: Vec<Record> = Vec::new();
+        let mut replay: Vec<(u64, ForgetSpec)> = Vec::new();
+        for rec in &scan.records {
+            let Record::Accepted { seq, spec, config_hash, .. } = rec else { continue };
+            let replayable = match completed.get(seq) {
+                None => true,
+                Some(Disposition::Done) => *seq > covering,
+                Some(_) => false, // failed/expired: answered, no edits
+            };
+            if !replayable {
+                continue;
+            }
+            faults::hit("replay")?;
+            if !seen_keys.insert(spec.key().hash64()) {
+                continue; // idempotent per canonical SpecKey
+            }
+            let new_seq = fresh.len() as u64 + 1;
+            fresh.push(Record::Accepted {
+                seq: new_seq,
+                spec: spec.clone(),
+                config_hash: *config_hash,
+                deadline_ms: None,
+            });
+            replay.push((new_seq, spec.canonical()));
+        }
+
+        let generation = scan.generation.max(ckpt_gen) + 1;
+        write_replacing(&path, generation, &fresh)?;
+        let (wal, _) = Wal::open_append(&path)?;
+        Ok(Recovered {
+            durability: Durability {
+                wal,
+                dir: cfg.dir.clone(),
+                checkpoint_every: cfg.checkpoint_every,
+                replayed: replay.len() as u64,
+                done_entries: AtomicU64::new(0),
+                checkpoints: AtomicU64::new(0),
+                last_ckpt_seq: AtomicU64::new(0),
+                ckpt_write: Mutex::new(()),
+            },
+            params: ckpt.map(|c| c.params),
+            replay,
+        })
+    }
+
+    /// Durable admission: append `Accepted` (fsync'd) and return its
+    /// seq. An error here must fail the request — no slot without a
+    /// ledger record.
+    pub fn log_accepted(
+        &self,
+        spec: &ForgetSpec,
+        config_hash: u64,
+        deadline: Option<Duration>,
+    ) -> Result<u64> {
+        self.wal.append_accepted(spec, config_hash, deadline).context("durable admission")
+    }
+
+    /// Record completion of one queue entry (every coalesced seq gets
+    /// its own `Completed` record). Append errors are reported and
+    /// swallowed: a missing completion only means the entry is replayed
+    /// after a crash (at-least-once, idempotent). Returns whether a
+    /// parameter checkpoint is due under the configured cadence.
+    pub fn log_completed(
+        &self,
+        seqs: &[u64],
+        disposition: Disposition,
+        rolled_back: bool,
+        forget_acc: f64,
+        retain_acc: f64,
+    ) -> bool {
+        for &seq in seqs {
+            if let Err(e) =
+                self.wal.append_completed(seq, disposition, rolled_back, forget_acc, retain_acc)
+            {
+                eprintln!("ficabu: ledger completion append failed for seq {seq}: {e:#}");
+            }
+        }
+        if disposition != Disposition::Done {
+            return false;
+        }
+        let done = self.done_entries.fetch_add(1, Ordering::SeqCst) + 1;
+        done % self.checkpoint_every == 0
+    }
+
+    /// Atomically checkpoint `store` as covering every successful
+    /// completion up to `covering_seq` of the current generation.
+    pub fn write_checkpoint(&self, store: &ParamStore, covering_seq: u64) -> Result<()> {
+        let _g = self.ckpt_write.lock().unwrap_or_else(PoisonError::into_inner);
+        checkpoint::write(&self.dir, store, self.wal.generation(), covering_seq)?;
+        self.checkpoints.fetch_add(1, Ordering::SeqCst);
+        self.last_ckpt_seq.store(covering_seq, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Covering seq of the last checkpoint written this process (0 =
+    /// none yet).
+    pub fn last_checkpoint_seq(&self) -> u64 {
+        self.last_ckpt_seq.load(Ordering::SeqCst)
+    }
+
+    pub fn stats(&self) -> DurabilityStats {
+        DurabilityStats {
+            generation: self.wal.generation(),
+            wal_seq: self.wal.last_seq(),
+            replayed: self.replayed,
+            checkpoints: self.checkpoints.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// Stable fingerprint of an [`UnlearnConfig`] recorded in `Accepted`
+/// entries — an audit field tying a ledger line to the operating point
+/// that served it (FNV-1a over the config's debug rendering).
+pub fn config_fingerprint(cfg: &UnlearnConfig) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in format!("{cfg:?}").bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ficabu_wal_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // IEEE 802.3 reference values
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        let recs = [
+            Record::Accepted {
+                seq: 7,
+                spec: ForgetSpec::Classes(vec![1, 4]),
+                config_hash: 0xdead_beef,
+                deadline_ms: Some(250.0),
+            },
+            Record::Accepted {
+                seq: 8,
+                spec: ForgetSpec::Samples(vec![0, 9, 44]),
+                config_hash: 1,
+                deadline_ms: None,
+            },
+            Record::Completed {
+                seq: 7,
+                disposition: Disposition::Done,
+                rolled_back: false,
+                forget_acc: 0.05,
+                retain_acc: 0.91,
+            },
+            Record::Completed {
+                seq: 8,
+                disposition: Disposition::Expired,
+                rolled_back: false,
+                forget_acc: -1.0,
+                retain_acc: -1.0,
+            },
+        ];
+        for r in &recs {
+            assert_eq!(&Record::decode(&r.encode()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn append_scan_roundtrip_and_seq_continuity() {
+        let dir = tmpdir("roundtrip");
+        let path = dir.join(LEDGER_FILE);
+        write_replacing(&path, 3, &[]).unwrap();
+        let (wal, recs) = Wal::open_append(&path).unwrap();
+        assert!(recs.is_empty());
+        assert_eq!(wal.generation(), 3);
+        let s1 = wal.append_accepted(&ForgetSpec::Class(2), 11, None).unwrap();
+        let s2 = wal
+            .append_accepted(&ForgetSpec::Classes(vec![4, 1]), 11, Some(Duration::from_millis(9)))
+            .unwrap();
+        wal.append_completed(s1, Disposition::Done, false, 0.04, 0.9).unwrap();
+        assert_eq!((s1, s2), (1, 2));
+        assert_eq!(wal.last_seq(), 2);
+        drop(wal);
+
+        let (wal, recs) = Wal::open_append(&path).unwrap();
+        assert_eq!(recs.len(), 3);
+        // canonicalized on write: classes:4,1 -> classes:1,4
+        assert!(matches!(
+            &recs[1],
+            Record::Accepted { seq: 2, spec: ForgetSpec::Classes(v), .. } if v == &[1, 4]
+        ));
+        // numbering continues after the highest valid record
+        assert_eq!(wal.append_accepted(&ForgetSpec::Class(0), 0, None).unwrap(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_prefix_survives() {
+        let dir = tmpdir("torn");
+        let path = dir.join(LEDGER_FILE);
+        write_replacing(&path, 1, &[]).unwrap();
+        let (wal, _) = Wal::open_append(&path).unwrap();
+        wal.append_accepted(&ForgetSpec::Class(1), 0, None).unwrap();
+        wal.append_accepted(&ForgetSpec::Class(2), 0, None).unwrap();
+        drop(wal);
+        let whole = std::fs::read(&path).unwrap();
+
+        // (a) torn mid-payload: claim 64 bytes, provide 5
+        let mut torn = whole.clone();
+        torn.extend_from_slice(&64u32.to_le_bytes());
+        torn.extend_from_slice(&0u32.to_le_bytes());
+        torn.extend_from_slice(b"abcde");
+        std::fs::write(&path, &torn).unwrap();
+        let scan = read_ledger(&path).unwrap();
+        assert_eq!(scan.records.len(), 2);
+        assert!(scan.truncated);
+        let (wal, recs) = Wal::open_append(&path).unwrap();
+        assert_eq!(recs.len(), 2);
+        drop(wal);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), whole.len() as u64, "tail cut");
+
+        // (b) bit flip inside the *second* record's payload: the first
+        // record survives, the flipped one and everything after it drop
+        let mut flipped = whole.clone();
+        let n = flipped.len();
+        flipped[n - 3] ^= 0x40;
+        std::fs::write(&path, &flipped).unwrap();
+        let scan = read_ledger(&path).unwrap();
+        assert_eq!(scan.records.len(), 1);
+        assert!(scan.truncated);
+
+        // (c) corrupt header: the whole file is treated as lost
+        let mut bad = whole;
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        let scan = read_ledger(&path).unwrap();
+        assert_eq!(scan.generation, 0);
+        assert!(scan.records.is_empty());
+        assert!(Wal::open_append(&path).is_err(), "append refuses a corrupt header");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recovery_replays_only_unfinished_and_post_checkpoint_entries() {
+        let dir = tmpdir("recover");
+        let cfg = DurabilityConfig { dir: dir.clone(), checkpoint_every: 1 };
+        // Ledger: seq1 done, seq2 failed, seq3 done, seq4 accepted-only,
+        // seq5 accepted-only duplicate of seq4's canonical key.
+        let recs = vec![
+            Record::Accepted { seq: 1, spec: ForgetSpec::Class(1), config_hash: 9, deadline_ms: None },
+            Record::Completed { seq: 1, disposition: Disposition::Done, rolled_back: false, forget_acc: 0.1, retain_acc: 0.9 },
+            Record::Accepted { seq: 2, spec: ForgetSpec::Class(2), config_hash: 9, deadline_ms: Some(5.0) },
+            Record::Completed { seq: 2, disposition: Disposition::Failed, rolled_back: true, forget_acc: -1.0, retain_acc: -1.0 },
+            Record::Accepted { seq: 3, spec: ForgetSpec::Class(3), config_hash: 9, deadline_ms: None },
+            Record::Completed { seq: 3, disposition: Disposition::Done, rolled_back: false, forget_acc: 0.1, retain_acc: 0.9 },
+            Record::Accepted { seq: 4, spec: ForgetSpec::Classes(vec![5, 6]), config_hash: 9, deadline_ms: None },
+            Record::Accepted { seq: 5, spec: ForgetSpec::Classes(vec![6, 5, 5]), config_hash: 9, deadline_ms: None },
+        ];
+        write_replacing(&dir.join(LEDGER_FILE), 4, &recs).unwrap();
+        // Checkpoint of generation 4 covering seq 1: seq 3's edits are
+        // lost with the process, so it must be replayed; seq 1 must not.
+        let meta = crate::config::ModelMeta::builtin("rn18slim").unwrap();
+        let store = ParamStore::init(&meta, 3);
+        checkpoint::write(&dir, &store, 4, 1).unwrap();
+
+        let rec = Durability::open_or_recover(&cfg).unwrap();
+        let specs: Vec<&ForgetSpec> = rec.replay.iter().map(|(_, s)| s).collect();
+        assert_eq!(
+            specs,
+            [&ForgetSpec::Class(3), &ForgetSpec::Classes(vec![5, 6])],
+            "replay = post-checkpoint done + accepted-without-completed, deduped by key"
+        );
+        assert_eq!(rec.replay[0].0, 1, "fresh ledger renumbers from 1");
+        assert!(rec.params.is_some());
+        let st = rec.durability.stats();
+        assert_eq!(st.generation, 5, "generation bumps past ledger and checkpoint");
+        assert_eq!(st.replayed, 2);
+        assert_eq!(st.wal_seq, 2, "fresh ledger holds exactly the replay records");
+        // A second recovery before the replays complete finds them again.
+        drop(rec);
+        let rec2 = Durability::open_or_recover(&cfg).unwrap();
+        assert_eq!(rec2.durability.stats().replayed, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn config_fingerprint_is_stable_and_discriminating() {
+        let a = UnlearnConfig::default();
+        let mut b = UnlearnConfig::default();
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&a));
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
+        b.alpha += 1.0;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
+    }
+}

@@ -13,7 +13,9 @@
 
 use anyhow::Result;
 use ficabu::config::{artifacts_root, SharedMeta};
-use ficabu::coordinator::{Fleet, FleetConfig, HttpConfig, HttpServer, Pacing, Reply, WorkerSpec};
+use ficabu::coordinator::{
+    DurabilityConfig, Fleet, FleetConfig, HttpConfig, HttpServer, Pacing, Reply, WorkerSpec,
+};
 use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
 use ficabu::runtime::Runtime;
 use ficabu::unlearn::ForgetSpec;
@@ -85,6 +87,7 @@ fn run() -> Result<()> {
         "model", "dataset", "mode", "class", "forget", "steps", "lr", "imp-batches",
         "seed", "retrain", "int8", "verbose", "requests", "clients", "workers",
         "queue-cap", "deadline-ms", "batch-max", "pace-sim", "http", "http-threads",
+        "durable", "checkpoint-every",
     ]);
     args.finish()?;
     match args.command.as_str() {
@@ -114,6 +117,9 @@ USAGE: ficabu <command> [--key value] [--flag]
            [--workers N --queue-cap N --deadline-ms N --batch-max N --pace-sim]
            [--http ADDR [--http-threads N]  serve over HTTP instead of the
             in-process client loop; e.g. --http 127.0.0.1:8787]
+           [--durable DIR [--checkpoint-every N]  crash-safe serving:
+            write-ahead ledger + parameter checkpoints in DIR; on start,
+            recover and replay unfinished requests]
   info     platform + artifact inventory
 
 Tables/figures: cargo run --release --example table1 (table2, table4,
@@ -280,7 +286,28 @@ fn cmd_serve(a: &Args) -> Result<()> {
         "serving fleet: {workers} worker(s), queue cap {queue_cap}, deadline {}, batch max {batch_max}",
         if deadline_ms == 0 { "none".to_string() } else { format!("{deadline_ms} ms") },
     );
-    let fleet = Fleet::start(wspec, fleet_cfg)?;
+    let fleet = match a.get("durable") {
+        Some(dir) => {
+            let dcfg = DurabilityConfig {
+                dir: std::path::PathBuf::from(dir),
+                checkpoint_every: a.usize_or("checkpoint-every", 1)?.max(1) as u64,
+            };
+            println!(
+                "durable: ledger + checkpoints in {} (checkpoint every {} completions)",
+                dcfg.dir.display(),
+                dcfg.checkpoint_every
+            );
+            let fleet = Fleet::start_durable(wspec, fleet_cfg, dcfg)?;
+            if let Some(d) = fleet.stats().durability {
+                println!(
+                    "durable: generation {} wal seq {} replayed {}",
+                    d.generation, d.wal_seq, d.replayed
+                );
+            }
+            fleet
+        }
+        None => Fleet::start(wspec, fleet_cfg)?,
+    };
 
     // Wire mode: put the fleet on a socket and serve until the process
     // is stopped (^C / kill). Requests arrive over HTTP, so the
@@ -365,6 +392,12 @@ fn cmd_serve(a: &Args) -> Result<()> {
         "totals: served {} failures {} panics {} respawns {} passes {} (max batch {})",
         total.served, total.failures, total.panics, total.respawns, total.batches, total.max_batch
     );
+    if let Some(d) = &stats.durability {
+        println!(
+            "durable: generation {} wal seq {} replayed {} checkpoints {}",
+            d.generation, d.wal_seq, d.replayed, d.checkpoints
+        );
+    }
     println!(
         "queue   latency: mean {:7.1} ms  p50 {:7.1}  p95 {:7.1}  p99 {:7.1}  max {:7.1}",
         total.mean_queue_ms(),

@@ -157,6 +157,21 @@ impl ParamStore {
         self.quant.as_ref().map(|q| q[k].as_slice())
     }
 
+    /// Reassemble a store from raw parts (the durability checkpoint
+    /// loader). `quant`, when present, must be in lockstep with `seg` —
+    /// same segment count and slot count per segment.
+    pub(crate) fn from_parts(
+        seg: Vec<Vec<Tensor>>,
+        quant: Option<Vec<Vec<Option<QTensor>>>>,
+    ) -> Result<ParamStore> {
+        if let Some(q) = &quant {
+            if q.len() != seg.len() || q.iter().zip(&seg).any(|(qs, s)| qs.len() != s.len()) {
+                bail!("from_parts: int8 copies not in lockstep with segments");
+            }
+        }
+        Ok(ParamStore { seg, quant })
+    }
+
     // --- checkpoint io -----------------------------------------------------
 
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {

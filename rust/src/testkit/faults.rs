@@ -38,6 +38,16 @@ use anyhow::{bail, Result};
 /// Environment variable read by [`arm_from_env`].
 pub const ENV_VAR: &str = "FICABU_FAULTS";
 
+/// Every site compiled into the codebase. [`arm`] rejects a plan naming
+/// any other site (a typo'd `FICABU_FAULTS` must not silently become a
+/// fault-free chaos run); sites starting with `test_` are exempt so
+/// unit tests can use scratch sites. Keep in sync with the `hit` call
+/// sites: engine stages (`forget_fisher`, `dampen`, `early_stop`), the
+/// fleet's `respawn` build path, and the durability seams
+/// (`wal_append`, `checkpoint`, `replay`).
+pub const SITES: &[&str] =
+    &["forget_fisher", "dampen", "early_stop", "respawn", "wal_append", "checkpoint", "replay"];
+
 // Fast-path gate: `hit` is a relaxed load of this flag unless a plan is
 // armed. The plan itself lives behind a Mutex (hits are rare and slow
 // by design once armed).
@@ -103,6 +113,13 @@ fn parse(plan: &str) -> Result<Vec<Fault>> {
         let site = parts[0].trim();
         if site.is_empty() {
             bail!("fault clause `{clause}`: empty site");
+        }
+        if !SITES.contains(&site) && !site.starts_with("test_") {
+            bail!(
+                "fault clause `{clause}`: unknown site `{site}` (valid sites: {}; `test_*` names \
+                 are reserved for tests)",
+                SITES.join(", ")
+            );
         }
         let trig = parts[1].trim();
         let trigger = if let Some(n) = trig.strip_prefix("every") {
@@ -250,8 +267,8 @@ mod tests {
     #[test]
     fn every_trigger_repeats() {
         let _g = serial();
-        arm("s:every2:error").unwrap();
-        let fired: Vec<bool> = (0..6).map(|_| hit("s").is_err()).collect();
+        arm("test_s:every2:error").unwrap();
+        let fired: Vec<bool> = (0..6).map(|_| hit("test_s").is_err()).collect();
         assert_eq!(fired, [false, true, false, true, false, true]);
         clear();
     }
@@ -259,22 +276,22 @@ mod tests {
     #[test]
     fn panic_action_panics_without_poisoning_the_plan() {
         let _g = serial();
-        arm("s:1:panic;s:3:error").unwrap();
-        let p = std::panic::catch_unwind(|| hit("s")).unwrap_err();
+        arm("test_s:1:panic;test_s:3:error").unwrap();
+        let p = std::panic::catch_unwind(|| hit("test_s")).unwrap_err();
         let msg = p.downcast_ref::<String>().cloned().unwrap_or_default();
-        assert!(msg.contains("injected fault: panic at `s`"), "{msg}");
+        assert!(msg.contains("injected fault: panic at `test_s`"), "{msg}");
         // the seam stays usable after the panic: hit 2 passes, hit 3 errors
-        assert!(hit("s").is_ok());
-        assert!(hit("s").is_err());
+        assert!(hit("test_s").is_ok());
+        assert!(hit("test_s").is_err());
         clear();
     }
 
     #[test]
     fn delay_action_sleeps_then_continues() {
         let _g = serial();
-        arm("s:1:delay:30").unwrap();
+        arm("test_s:1:delay:30").unwrap();
         let t0 = std::time::Instant::now();
-        assert!(hit("s").is_ok());
+        assert!(hit("test_s").is_ok());
         assert!(t0.elapsed() >= Duration::from_millis(25));
         clear();
     }
@@ -294,6 +311,24 @@ mod tests {
         ] {
             assert!(parse(bad).is_err(), "`{bad}` should not parse");
         }
-        assert_eq!(parse("a:1:panic; b:every3:delay:50 ;c:2:error").unwrap().len(), 3);
+        assert_eq!(
+            parse("test_a:1:panic; test_b:every3:delay:50 ;dampen:2:error").unwrap().len(),
+            3
+        );
+    }
+
+    #[test]
+    fn unknown_sites_are_rejected_with_the_valid_list() {
+        let e = parse("dampenn:1:panic").unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("unknown site `dampenn`"), "{msg}");
+        for site in SITES {
+            assert!(msg.contains(site), "error must list `{site}`: {msg}");
+        }
+        // every registered site parses; test_ names stay available
+        for site in SITES {
+            assert!(parse(&format!("{site}:1:error")).is_ok());
+        }
+        assert!(parse("test_anything:1:error").is_ok());
     }
 }

@@ -10,12 +10,16 @@
 //! The fault plan is process-global, so every test here serializes on
 //! one lock and clears the plan before releasing it.
 
+use std::io::Write;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
 
 use ficabu::config::{ModelMeta, SharedMeta};
 use ficabu::coordinator::{
-    Fleet, FleetConfig, Pacing, Reply, Summary, UnlearnService, UnlearnSession, WorkerSpec,
+    checkpoint, wal, DurabilityConfig, Fleet, FleetConfig, Pacing, Reply, Summary,
+    UnlearnService, UnlearnSession, WorkerSpec,
 };
 use ficabu::data::{cifar20_like, Dataset, DatasetCfg};
 use ficabu::fisher::Importance;
@@ -245,4 +249,197 @@ fn fleet_survives_a_panic_mid_dampen() {
     assert_eq!(total.respawns, 1);
     assert_eq!(total.served, 1);
     assert_eq!(total.failures, 1);
+}
+
+// --- durability ---------------------------------------------------------
+
+fn durable_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("ficabu_chaos_wal_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn durable_wspec(seed: u64) -> WorkerSpec {
+    let meta = ModelMeta::builtin("rn18slim").unwrap();
+    let mut global = Importance::zeros_like(&meta);
+    global.floor(1e-6);
+    WorkerSpec {
+        meta: meta.clone(),
+        shared: SharedMeta::builtin(),
+        params: ParamStore::init(&meta, seed),
+        global,
+        train: train_set(),
+        cfg: Ssd::new(1.0, 1.0).into_config(),
+        precision: Precision::F32,
+    }
+}
+
+/// One-worker durable production fleet, checkpointing every completion.
+fn durable_fleet(dir: &Path) -> Fleet {
+    Fleet::start_durable(
+        durable_wspec(5),
+        FleetConfig {
+            workers: 1,
+            queue_cap: 8,
+            deadline: None,
+            batch_max: 1,
+            pacing: Pacing::Host,
+            respawn_giveup: 5,
+        },
+        DurabilityConfig { dir: dir.to_path_buf(), checkpoint_every: 1 },
+    )
+    .unwrap()
+}
+
+/// Replayed entries have no reply channel; poll the rollup instead.
+fn wait_served(fleet: &Fleet, n: u64) {
+    let t0 = Instant::now();
+    while fleet.stats().merged().served < n {
+        assert!(t0.elapsed() < Duration::from_secs(120), "replayed work never completed");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// The headline durability guarantee: kill the process after a request
+/// is accepted (fsync'd) but before it is served — leaving a torn frame
+/// behind for good measure — restart, and the recovered store ends
+/// bitwise identical to a run that was never interrupted.
+#[test]
+fn kill_and_restart_replays_to_the_uninterrupted_store() {
+    let _g = serial();
+    faults::clear();
+    let dir_a = durable_dir("reference");
+    let dir_b = durable_dir("crashed");
+    let spec1 = ForgetSpec::Class(3);
+    let spec2 = ForgetSpec::Classes(vec![1, 4]);
+
+    // Reference run: both events, no interruption.
+    {
+        let fleet = durable_fleet(&dir_a);
+        for spec in [&spec1, &spec2] {
+            match fleet.submit(spec.clone()).recv().unwrap() {
+                Reply::Done(sm) => assert!(!sm.rolled_back),
+                other => panic!("reference {spec}: unexpected reply {other:?}"),
+            }
+        }
+        let stats = fleet.shutdown().unwrap();
+        assert_eq!(stats.durability.unwrap().checkpoints, 2);
+    }
+
+    // Crashed run: the first event completes; the second is accepted on
+    // disk but the process "dies" before serving it. The crash is
+    // simulated exactly as a kill would leave the ledger: an `Accepted`
+    // record with no completion, then a torn half-written frame.
+    {
+        let fleet = durable_fleet(&dir_b);
+        match fleet.submit(spec1.clone()).recv().unwrap() {
+            Reply::Done(_) => {}
+            other => panic!("crashed run, event 1: unexpected reply {other:?}"),
+        }
+        fleet.shutdown().unwrap();
+
+        let ledger = dir_b.join(wal::LEDGER_FILE);
+        let (w, _tail) = wal::Wal::open_append(&ledger).unwrap();
+        w.append_accepted(&spec2, 0, None).unwrap();
+        drop(w);
+        let mut f = std::fs::OpenOptions::new().append(true).open(&ledger).unwrap();
+        // frame header promising 64 payload bytes, followed by 3
+        f.write_all(&[64, 0, 0, 0, 0xde, 0xad, 0xbe, 0xef, 1, 2, 3]).unwrap();
+    }
+
+    // Restart: the torn tail is dropped, the unserved event replays.
+    {
+        let fleet = durable_fleet(&dir_b);
+        assert_eq!(fleet.stats().durability.unwrap().replayed, 1);
+        wait_served(&fleet, 1);
+        let stats = fleet.shutdown().unwrap();
+        assert_eq!(stats.merged().served, 1);
+        assert_eq!(stats.merged().failures, 0);
+    }
+
+    let a = checkpoint::load_latest(&dir_a).unwrap().expect("reference checkpoint");
+    let b = checkpoint::load_latest(&dir_b).unwrap().expect("recovered checkpoint");
+    assert_store_bitwise_eq(&a.params, &b.params);
+
+    // The rewritten ledger carries the replayed completion with a real
+    // post-edit accuracy readout (failed entries log the -1 sentinel
+    // instead), proof the unlearning pass actually ran after recovery.
+    let scan = wal::read_ledger(&dir_b.join(wal::LEDGER_FILE)).unwrap();
+    assert!(!scan.truncated);
+    let done: Vec<(u64, f64)> = scan
+        .records
+        .iter()
+        .filter_map(|r| match r {
+            wal::Record::Completed {
+                seq,
+                disposition: wal::Disposition::Done,
+                forget_acc,
+                ..
+            } => Some((*seq, *forget_acc)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(done.len(), 1, "exactly the replayed event completed, got {done:?}");
+    assert!(
+        (0.0..=1.0).contains(&done[0].1),
+        "replayed event ledgers a real accuracy readout, got {}",
+        done[0].1
+    );
+
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+/// A crash *during* checkpointing must never surface partial state: the
+/// loader skips garbage and torn files and lands on the last checkpoint
+/// that was fully written, and recovery replays what it left uncovered.
+#[test]
+fn interrupted_checkpoint_never_loads_partial_state() {
+    let _g = serial();
+    faults::clear();
+    let dir = durable_dir("ckpt_crash");
+
+    {
+        let fleet = durable_fleet(&dir);
+        match fleet.submit(ForgetSpec::Class(2)).recv().unwrap() {
+            Reply::Done(_) => {}
+            other => panic!("event 1: unexpected reply {other:?}"),
+        }
+        // Every checkpoint attempt from here on dies mid-write —
+        // including the final one at shutdown.
+        faults::arm("checkpoint:every1:error").unwrap();
+        match fleet.submit(ForgetSpec::Class(7)).recv().unwrap() {
+            // the pass itself commits; only its checkpoint is lost
+            Reply::Done(sm) => assert!(!sm.rolled_back),
+            other => panic!("event 2: unexpected reply {other:?}"),
+        }
+        let stats = fleet.shutdown().unwrap();
+        faults::clear();
+        assert_eq!(stats.durability.unwrap().checkpoints, 1, "only checkpoint 1 landed");
+    }
+
+    // Adversarial debris, as an interrupted writer would leave behind:
+    // a lexicographically-newer checkpoint full of garbage and a torn
+    // tempfile.
+    std::fs::write(dir.join("ckpt-0000000001-0000000099.fcp"), b"FICABUC1 but not really")
+        .unwrap();
+    std::fs::write(dir.join("ckpt-0000000001-0000000100.fcp.tmp"), [0u8; 7]).unwrap();
+
+    // The loader lands on the last fully-written checkpoint.
+    let ck = checkpoint::load_latest(&dir).unwrap().expect("valid checkpoint survives");
+    assert_eq!((ck.generation, ck.covering_seq), (1, 1));
+
+    // Restart: the completion the failed checkpoint left uncovered
+    // (seq 2) replays on top of the surviving state and the recovered
+    // fleet checkpoints again under the bumped generation.
+    let fleet = durable_fleet(&dir);
+    assert_eq!(fleet.stats().durability.unwrap().replayed, 1);
+    wait_served(&fleet, 1);
+    let stats = fleet.shutdown().unwrap();
+    assert_eq!(stats.durability.unwrap().checkpoints, 1);
+    let ck = checkpoint::load_latest(&dir).unwrap().expect("post-recovery checkpoint");
+    assert_eq!(ck.generation, 2);
+
+    let _ = std::fs::remove_dir_all(&dir);
 }

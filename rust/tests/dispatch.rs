@@ -7,9 +7,12 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use ficabu::coordinator::wal::{self, Disposition, Record};
 use ficabu::coordinator::{
-    Fleet, FleetConfig, Pacing, QueueStats, Reply, Summary, Timing, UnlearnService,
+    DurabilityConfig, Fleet, FleetConfig, Pacing, QueueStats, Reply, Summary, Timing,
+    UnlearnService,
 };
+use ficabu::testkit::faults;
 use ficabu::unlearn::ForgetSpec;
 
 /// Mock worker core. Every `unlearn` call announces `(worker, spec)` on
@@ -35,6 +38,7 @@ fn mock_summary(spec: &ForgetSpec) -> Summary {
         sim_ms: 0.0,
         rolled_back: false,
         timing: Timing::default(),
+        wal_seq: None,
     }
 }
 
@@ -498,6 +502,199 @@ impl UnlearnService for AlwaysPanics {
     fn unlearn(&mut self, _spec: &ForgetSpec) -> anyhow::Result<Summary> {
         panic!("replica poisoned")
     }
+}
+
+// --- durability ---------------------------------------------------------
+//
+// Fault sites are process-global, so the durable tests (one of which arms
+// a `wal_append` fault) serialize among themselves: a concurrently
+// running durable test would otherwise steal the armed fault's first hit.
+static DURABLE_SERIAL: Mutex<()> = Mutex::new(());
+
+fn durable_dir(tag: &str) -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("ficabu_dispatch_wal_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// `mock_fleet` over a durable start: same controls, plus a ledger.
+fn mock_fleet_durable(cfg: FleetConfig, dcfg: DurabilityConfig) -> (Fleet, Rig) {
+    let (started_tx, started_rx) = channel();
+    let (token_tx, token_rx) = channel();
+    let gate = Arc::new(Mutex::new(token_rx));
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let log2 = Arc::clone(&log);
+    let fleet = Fleet::start_with_durable(
+        cfg,
+        move |wid| {
+            Ok(MockService {
+                wid,
+                started: started_tx.clone(),
+                gate: Arc::clone(&gate),
+                log: Arc::clone(&log2),
+            })
+        },
+        dcfg,
+    )
+    .expect("durable mock fleet starts");
+    (fleet, Rig { started: started_rx, tokens: token_tx, log })
+}
+
+#[test]
+fn durable_fleet_ledgers_completions_and_replays_after_crash() {
+    let _serial = DURABLE_SERIAL.lock().unwrap();
+    faults::clear();
+    let dir = durable_dir("replay");
+    let dcfg = DurabilityConfig { dir: dir.clone(), checkpoint_every: 1 };
+    let cfg = FleetConfig {
+        workers: 1,
+        queue_cap: 8,
+        deadline: None,
+        batch_max: 1,
+        pacing: Pacing::Host,
+        respawn_giveup: 5,
+    };
+
+    // Run 1: one success, one engine failure, clean shutdown.
+    {
+        let (fleet, rig) = mock_fleet_durable(cfg.clone(), dcfg.clone());
+        rig.tokens.send(()).unwrap();
+        rig.tokens.send(()).unwrap();
+        let rx_ok = fleet.submit(ForgetSpec::Class(2));
+        let rx_bad = fleet.submit(ForgetSpec::Class(13)); // mock fails on 13
+        match rx_ok.recv().unwrap() {
+            Reply::Done(s) => {
+                assert_eq!(s.wal_seq, Some(1), "summary carries its ledger seq");
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+        match rx_bad.recv().unwrap() {
+            Reply::Failed(msg) => assert!(msg.contains("boom"), "got: {msg}"),
+            other => panic!("expected failure, got {other:?}"),
+        }
+        let stats = fleet.shutdown().unwrap();
+        let dur = stats.durability.expect("durable fleet reports durability stats");
+        assert_eq!(dur.generation, 1);
+        assert_eq!(dur.wal_seq, 2);
+        assert_eq!(dur.replayed, 0);
+        assert_eq!(dur.checkpoints, 0, "mock service has no params to checkpoint");
+    }
+
+    // Simulate a crash after admission: an `Accepted` record with no
+    // `Completed` (exactly what a kill between fsync and the pass leaves).
+    {
+        let (w, _tail) = wal::Wal::open_append(dir.join(wal::LEDGER_FILE)).unwrap();
+        w.append_accepted(&ForgetSpec::Class(5), 0, None).unwrap();
+    }
+
+    // Run 2: recovery replays the unfinished entry AND the completed-but-
+    // uncovered one (no checkpoint ever covered seq 1), never the failure
+    // (the engine rolled it back; there is nothing to restore).
+    let (fleet, rig) = mock_fleet_durable(cfg, dcfg);
+    let dur = fleet.stats().durability.unwrap();
+    assert_eq!(dur.replayed, 2, "done-but-uncovered + accepted-only");
+    assert_eq!(dur.generation, 2, "recovery bumps the ledger generation");
+
+    rig.tokens.send(()).unwrap();
+    rig.tokens.send(()).unwrap();
+    let (_, s1) = rig.started.recv_timeout(STARTED_TIMEOUT).unwrap();
+    let (_, s2) = rig.started.recv_timeout(STARTED_TIMEOUT).unwrap();
+    assert_eq!((s1, s2), (ForgetSpec::Class(2), ForgetSpec::Class(5)), "ledger order");
+
+    // New work resumes numbering after the renumbered replay set.
+    rig.tokens.send(()).unwrap();
+    let rx = fleet.submit(ForgetSpec::Class(6));
+    match rx.recv().unwrap() {
+        Reply::Done(s) => assert_eq!(s.wal_seq, Some(3)),
+        other => panic!("unexpected reply {other:?}"),
+    }
+
+    let stats = fleet.shutdown().unwrap();
+    assert_eq!(stats.admitted, 3, "2 replayed + 1 new");
+    assert_eq!(stats.merged().served, 3);
+    let dur = stats.durability.unwrap();
+    assert_eq!(dur.wal_seq, 3);
+
+    // The rewritten ledger is a complete audit: every accepted entry has
+    // a matching `Done` completion.
+    let scan = wal::read_ledger(&dir.join(wal::LEDGER_FILE)).unwrap();
+    assert_eq!(scan.generation, 2);
+    assert!(!scan.truncated);
+    let accepted: Vec<_> = scan
+        .records
+        .iter()
+        .filter_map(|r| match r {
+            Record::Accepted { seq, spec, .. } => Some((*seq, spec.clone())),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        accepted,
+        vec![
+            (1, ForgetSpec::Class(2)),
+            (2, ForgetSpec::Class(5)),
+            (3, ForgetSpec::Class(6)),
+        ]
+    );
+    let done: Vec<u64> = scan
+        .records
+        .iter()
+        .filter_map(|r| match r {
+            Record::Completed { seq, disposition: Disposition::Done, .. } => Some(*seq),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(done, vec![1, 2, 3]);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn durable_admission_fails_closed_on_ledger_error() {
+    let _serial = DURABLE_SERIAL.lock().unwrap();
+    faults::clear();
+    let dir = durable_dir("fail_closed");
+    let (fleet, rig) = mock_fleet_durable(
+        FleetConfig {
+            workers: 1,
+            queue_cap: 8,
+            deadline: None,
+            batch_max: 1,
+            pacing: Pacing::Host,
+            respawn_giveup: 5,
+        },
+        DurabilityConfig { dir: dir.clone(), checkpoint_every: 1 },
+    );
+
+    // First ledger append errors: the request must fail closed — no
+    // queue slot without a durable `Accepted` record.
+    faults::arm("wal_append:1:error").unwrap();
+    let rx = fleet.submit(ForgetSpec::Class(1));
+    match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+        Reply::Failed(msg) => assert!(msg.contains("injected fault"), "got: {msg}"),
+        other => panic!("expected fail-closed reply, got {other:?}"),
+    }
+    assert_eq!(
+        executions_of(&rig, &ForgetSpec::Class(1)),
+        0,
+        "a request refused by the ledger never reaches the engine"
+    );
+    faults::clear();
+
+    // With the ledger healthy again the same request goes through.
+    rig.tokens.send(()).unwrap();
+    let rx = fleet.submit(ForgetSpec::Class(1));
+    match rx.recv().unwrap() {
+        Reply::Done(s) => assert_eq!(s.wal_seq, Some(1), "the refused attempt burned no seq"),
+        other => panic!("unexpected reply {other:?}"),
+    }
+
+    let stats = fleet.shutdown().unwrap();
+    assert_eq!(stats.admitted, 1, "the fail-closed submission was never admitted");
+    assert_eq!(stats.durability.unwrap().wal_seq, 1);
+
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -48,6 +48,7 @@ impl UnlearnService for MockService {
             sim_ms: 0.0,
             rolled_back: false,
             timing: Timing::default(),
+            wal_seq: None,
         })
     }
 }
