@@ -443,10 +443,11 @@ fn chaos_arm_body(
 }
 
 /// Durability arm: the paced fleet with the write-ahead ledger on — an
-/// fsync per admission and completion, plus a parameter checkpoint
-/// every 8 completions. The validate gate asserts wal-paced throughput
-/// stays at or above 80% of the fault-free paced arm: durability must
-/// ride the paced envelope, not dominate it.
+/// fsync per admission and completion, plus (single-worker runs only;
+/// multi-worker durable fleets never checkpoint) a parameter
+/// checkpoint every 8 completions. The validate gate asserts wal-paced
+/// throughput stays at or above 80% of the fault-free paced arm:
+/// durability must ride the paced envelope, not dominate it.
 fn run_wal_arm(
     b: &Bench,
     prep: &Prepared,

@@ -2,11 +2,14 @@
 //!
 //! A checkpoint is the full post-unlearn [`ParamStore`] — f32 masters
 //! *and* the per-slot int8 weight copies when the store serves int8 —
-//! plus the ledger generation and covering sequence number (every
-//! successful completion with `seq <= covering_seq` of that generation
-//! is baked into the parameters). Files are named
-//! `ckpt-<generation>-<covering_seq>.fcp` with zero-padded fields so
-//! lexicographic order is (generation, seq) order.
+//! plus the ledger generation and the scope it covers: the covering
+//! sequence number and the `pending` seq list (every successful
+//! completion with `seq <= covering_seq` of that generation that is
+//! *not* listed as pending is baked into the parameters; pending seqs
+//! were accepted but had no completion on disk at snapshot time, so
+//! their edits — if they complete later — are not contained). Files
+//! are named `ckpt-<generation>-<covering_seq>.fcp` with zero-padded
+//! fields so lexicographic order is (generation, seq) order.
 //!
 //! Writes are atomic: the body is written to a `.tmp` sibling, fsync'd,
 //! renamed over the final name, and the directory is fsync'd — a crash
@@ -26,18 +29,22 @@ use crate::tensor::quant::QTensor;
 use crate::tensor::Tensor;
 use crate::testkit::faults;
 
-const MAGIC: &[u8; 8] = b"FICABUC1";
+const MAGIC: &[u8; 8] = b"FICABUC2";
 const PREFIX: &str = "ckpt-";
 const SUFFIX: &str = ".fcp";
 
 /// One decoded checkpoint.
 pub struct Checkpoint {
     pub params: ParamStore,
-    /// Ledger generation the covering seq refers to.
+    /// Ledger generation the scope refers to.
     pub generation: u64,
     /// Every `Done` completion with `seq <= covering_seq` (same
-    /// generation) is contained in `params`.
+    /// generation) that is not in `pending` is contained in `params`.
     pub covering_seq: u64,
+    /// Seqs accepted but not completed on disk when the scope was
+    /// snapshotted; their edits are *not* in `params` even when their
+    /// seq is below the covering seq.
+    pub pending: Vec<u64>,
 }
 
 fn file_name(generation: u64, covering_seq: u64) -> String {
@@ -46,9 +53,15 @@ fn file_name(generation: u64, covering_seq: u64) -> String {
 
 /// Atomically write a checkpoint into `dir` and prune older ones.
 /// Returns the final path. Fault site: `checkpoint`.
-pub fn write(dir: &Path, store: &ParamStore, generation: u64, covering_seq: u64) -> Result<PathBuf> {
+pub fn write(
+    dir: &Path,
+    store: &ParamStore,
+    generation: u64,
+    covering_seq: u64,
+    pending: &[u64],
+) -> Result<PathBuf> {
     faults::hit("checkpoint")?;
-    let body = encode(store, generation, covering_seq);
+    let body = encode(store, generation, covering_seq, pending);
     let name = file_name(generation, covering_seq);
     let path = dir.join(&name);
     let tmp = dir.join(format!("{name}.tmp"));
@@ -120,17 +133,22 @@ fn prune_older(dir: &Path, keep: &str) {
 // --- codec --------------------------------------------------------------
 //
 // magic (8) | crc32(body) u32 LE | body
-// body: generation u64 | covering_seq u64 | nseg u32 |
+// body: generation u64 | covering_seq u64 |
+//       npending u32, pending seqs u64 LE... | nseg u32 |
 //       per segment: nparam u32, per param: rank u32, dims u32...,
 //                    f32 LE data |
 //       quantized u8 | if 1, per segment, per slot:
 //           present u8 | if 1: rank u32, dims u32..., nscales u32,
 //                        scales f32 LE, data i8 raw
 
-fn encode(store: &ParamStore, generation: u64, covering_seq: u64) -> Vec<u8> {
+fn encode(store: &ParamStore, generation: u64, covering_seq: u64, pending: &[u64]) -> Vec<u8> {
     let mut body = Vec::new();
     body.extend_from_slice(&generation.to_le_bytes());
     body.extend_from_slice(&covering_seq.to_le_bytes());
+    body.extend_from_slice(&(pending.len() as u32).to_le_bytes());
+    for &seq in pending {
+        body.extend_from_slice(&seq.to_le_bytes());
+    }
     body.extend_from_slice(&(store.seg.len() as u32).to_le_bytes());
     for s in &store.seg {
         body.extend_from_slice(&(s.len() as u32).to_le_bytes());
@@ -181,6 +199,14 @@ fn decode(bytes: &[u8]) -> Result<Checkpoint> {
     let mut pos = 0usize;
     let generation = read_u64(body, &mut pos)?;
     let covering_seq = read_u64(body, &mut pos)?;
+    let npending = read_u32(body, &mut pos)? as usize;
+    if npending > (body.len() - pos) / 8 {
+        bail!("implausible pending count {npending}");
+    }
+    let mut pending = Vec::with_capacity(npending);
+    for _ in 0..npending {
+        pending.push(read_u64(body, &mut pos)?);
+    }
     let nseg = read_u32(body, &mut pos)? as usize;
     let mut seg = Vec::with_capacity(nseg);
     for _ in 0..nseg {
@@ -229,7 +255,7 @@ fn decode(bytes: &[u8]) -> Result<Checkpoint> {
     if pos != body.len() {
         bail!("checkpoint has {} trailing bytes", body.len() - pos);
     }
-    Ok(Checkpoint { params: ParamStore::from_parts(seg, quant)?, generation, covering_seq })
+    Ok(Checkpoint { params: ParamStore::from_parts(seg, quant)?, generation, covering_seq, pending })
 }
 
 fn push_shape(buf: &mut Vec<u8>, shape: &[usize]) {
@@ -323,9 +349,10 @@ mod tests {
             if int8 {
                 store.quantize_int8(&meta);
             }
-            write(&dir, &store, 2, 7).unwrap();
+            write(&dir, &store, 2, 7, &[3, 6]).unwrap();
             let c = load_latest(&dir).unwrap().expect("checkpoint present");
             assert_eq!((c.generation, c.covering_seq), (2, 7));
+            assert_eq!(c.pending, [3, 6]);
             assert_eq!(c.params.is_quantized(), int8);
             assert_bitwise_eq(&store, &c.params);
             c.params.validate(&meta).unwrap();
@@ -339,14 +366,14 @@ mod tests {
         let dir = tmpdir("newest");
         let s1 = ParamStore::init(&meta, 1);
         let s2 = ParamStore::init(&meta, 2);
-        write(&dir, &s1, 1, 3).unwrap();
-        write(&dir, &s2, 1, 8).unwrap();
+        write(&dir, &s1, 1, 3, &[]).unwrap();
+        write(&dir, &s2, 1, 8, &[]).unwrap();
         let c = load_latest(&dir).unwrap().unwrap();
         assert_eq!(c.covering_seq, 8);
         assert_bitwise_eq(&s2, &c.params);
         assert_eq!(list_checkpoints(&dir).unwrap().len(), 1, "older checkpoint pruned");
         // a later generation with a smaller seq still wins
-        write(&dir, &s1, 2, 1).unwrap();
+        write(&dir, &s1, 2, 1, &[]).unwrap();
         let c = load_latest(&dir).unwrap().unwrap();
         assert_eq!((c.generation, c.covering_seq), (2, 1));
         std::fs::remove_dir_all(&dir).ok();
@@ -357,7 +384,7 @@ mod tests {
         let meta = ModelMeta::builtin("rn18slim").unwrap();
         let dir = tmpdir("corrupt");
         let good = ParamStore::init(&meta, 5);
-        write(&dir, &good, 1, 4).unwrap();
+        write(&dir, &good, 1, 4, &[]).unwrap();
         // a "newer" file that is pure garbage, plus a torn .tmp
         std::fs::write(dir.join(file_name(1, 9)), b"garbage").unwrap();
         std::fs::write(dir.join(format!("{}.tmp", file_name(1, 12))), b"half").unwrap();

@@ -49,17 +49,25 @@
 //! crash-safe audit trail (see [`wal`](crate::coordinator::wal)):
 //! admission appends an fsync'd `Accepted` ledger record *before* the
 //! caller gets a queue slot (a ledger error fails the request — no slot
-//! without a record), workers append `Completed` records and checkpoint
-//! the post-unlearn [`ParamStore`] every `checkpoint_every` successful
-//! completions *before* replying, and startup replays every entry whose
-//! completion (or covering checkpoint) did not make it to disk. A
-//! respawned replica is *tainted* — it lost the edits its predecessor
-//! served — so it never writes checkpoints; recovery replays the
-//! requests its lost completions left uncovered. The exact contract
-//! (recovered store bitwise equal to an uninterrupted run) holds for
-//! single-worker fleets, the paper's one-device deployment; multi-worker
-//! durable fleets checkpoint whichever replica completed last and the
-//! ledger remains an exact record of accepted/completed work.
+//! without a record; the append itself runs with the dispatch lock
+//! released, held to a reservation, so disk latency never stalls the
+//! workers' claim path), workers append `Completed` records and
+//! checkpoint the post-unlearn [`ParamStore`] every `checkpoint_every`
+//! successful completions *before* replying, and startup replays every
+//! entry whose completion (or covering checkpoint scope) did not make
+//! it to disk. A replica is *tainted* — barred from checkpointing —
+//! when its store and the ledger can disagree: after a respawn (the
+//! fresh replica lost the edits its predecessor served) and after a
+//! `Done` completion append fails (the store holds an edit the ledger
+//! will replay); recovery replays the affected entries onto the last
+//! good checkpoint instead. The exact contract (recovered store bitwise
+//! equal to an uninterrupted run) holds for single-worker fleets, the
+//! paper's one-device deployment. Multi-worker durable fleets never
+//! checkpoint at all — replicas drift independently, so no single store
+//! covers the ledger — and recovery therefore replays the full ledger
+//! (every accepted entry without a `failed`/`expired` completion) onto
+//! factory parameters; the ledger remains an exact record of
+//! accepted/completed work.
 
 use std::collections::VecDeque;
 use std::fmt;
@@ -302,6 +310,11 @@ struct DispatchState {
     admitted: u64,
     coalesced: u64,
     shed_backpressure: u64,
+    /// Queue slots held by admissions whose ledger append is in flight
+    /// (the dispatch lock is released around the fsync). Counted
+    /// against `queue_cap` so concurrent submitters cannot oversubscribe
+    /// the queue while a slow disk stalls phase 2.
+    reserved: usize,
     per_worker: Vec<QueueStats>,
     status: Vec<WorkerStatus>,
 }
@@ -320,13 +333,17 @@ struct Shared {
 /// Per-replica durability state, owned by the worker thread.
 #[derive(Default)]
 struct ReplicaDur {
-    /// A respawned replica lost its predecessor's served edits: it must
-    /// never checkpoint (a checkpoint from it would claim coverage of
-    /// completions whose edits it does not contain). Recovery replays
-    /// the uncovered entries instead.
+    /// The replica must never checkpoint again: its store and the
+    /// ledger can disagree. Set after a respawn (the fresh replica lost
+    /// its predecessor's served edits, so a checkpoint would claim
+    /// completions it does not contain) and after a `Done` completion
+    /// append fails (the store holds an edit the ledger will replay, so
+    /// a checkpoint would get it applied twice). Recovery replays the
+    /// affected entries instead.
     tainted: bool,
-    /// Highest ledger seq this replica completed successfully.
-    last_done_seq: Option<u64>,
+    /// Whether this replica completed at least one pass successfully
+    /// (gates the final checkpoint at shutdown).
+    done_any: bool,
 }
 
 /// N `EdgeServer` replicas behind one dispatcher. See the module docs
@@ -346,8 +363,10 @@ impl Fleet {
     /// Start a durable production fleet: open-or-recover the write-ahead
     /// ledger in `dcfg.dir`, seed every replica from the newest valid
     /// parameter checkpoint (when one exists), and re-enqueue the
-    /// recovered replay set through normal admission. See the module
-    /// docs ("Durability") for the contract.
+    /// recovered replay set through normal admission. With
+    /// `cfg.workers > 1` the fleet never writes checkpoints and
+    /// recovery replays the full ledger. See the module docs
+    /// ("Durability") for the contract.
     pub fn start_durable(spec: WorkerSpec, cfg: FleetConfig, dcfg: DurabilityConfig) -> Result<Fleet> {
         let config_hash = config_fingerprint(&spec.cfg);
         let rec = Durability::open_or_recover(&dcfg)?;
@@ -433,6 +452,7 @@ impl Fleet {
                 admitted,
                 coalesced: 0,
                 shed_backpressure: 0,
+                reserved: 0,
                 per_worker: vec![QueueStats::default(); cfg.workers],
                 status: vec![WorkerStatus::Alive; cfg.workers],
             }),
@@ -537,6 +557,15 @@ impl Fleet {
     /// coalesces (requests already being executed are not joined — the
     /// execution started before this request arrived); a full queue
     /// replies `Backpressure` without enqueueing.
+    ///
+    /// On a durable fleet the `Accepted` record is fsync'd *before* the
+    /// caller gets its slot; if the ledger cannot be written the request
+    /// fails closed (accepting it would make the crash-replay guarantee
+    /// a lie). Refused requests — shutdown, dead fleet, backpressure —
+    /// never reach the ledger. The append itself runs with the dispatch
+    /// lock *released* (the slot is held by a reservation meanwhile), so
+    /// fsync latency stalls at most other admissions, never the workers'
+    /// claim path or stats snapshots.
     pub fn submit_with_deadline(
         &self,
         spec: ForgetSpec,
@@ -546,15 +575,46 @@ impl Fleet {
         let (tx, rx) = channel();
         let now = Instant::now();
         let abs_deadline = deadline.map(|d| now + d);
-        let mut st = self.shared.m.lock().unwrap();
-        if st.shutdown {
-            let _ = tx.send(Reply::Failed("fleet is shutting down".to_string()));
-            return rx;
+        // Phase 1: admission decision under the dispatch lock — refuse
+        // (nothing ledgered) or reserve a slot. No disk I/O here.
+        {
+            let mut st = self.shared.m.lock().unwrap();
+            if let Some(reply) = admission_refusal(&st, &self.shared.cfg, &key) {
+                if matches!(reply, Reply::Backpressure { .. }) {
+                    st.shed_backpressure += 1;
+                }
+                let _ = tx.send(reply);
+                return rx;
+            }
+            st.reserved += 1;
         }
-        if st.status.iter().all(|s| *s == WorkerStatus::Dead) {
-            let _ = tx.send(Reply::Failed(
-                "no live fleet workers (every replica died and respawn gave up)".to_string(),
-            ));
+        // Phase 2: durable admission, dispatch lock released. The
+        // ledger serializes appends under its own lock.
+        let wal_seq = match self.log_accepted(&key, deadline) {
+            Ok(seq) => seq,
+            Err(reply) => {
+                self.shared.m.lock().unwrap().reserved -= 1;
+                let _ = tx.send(reply);
+                return rx;
+            }
+        };
+        // Phase 3: take the slot. The queue may have changed during the
+        // append: a coalesce target may have appeared (join it) or been
+        // claimed (enqueue a fresh entry — the queue can transiently
+        // exceed `queue_cap` by the coalescing admissions in flight,
+        // since a ledgered request must not be refused).
+        let mut st = self.shared.m.lock().unwrap();
+        st.reserved -= 1;
+        if st.shutdown || st.status.iter().all(|s| *s == WorkerStatus::Dead) {
+            // The fleet stopped while the record was being fsync'd. The
+            // `Accepted` entry is durable with no completion, so the
+            // next durable start replays it; tell the caller it was not
+            // served now.
+            let _ = tx.send(Reply::Failed(if st.shutdown {
+                "fleet is shutting down".to_string()
+            } else {
+                "no live fleet workers (every replica died and respawn gave up)".to_string()
+            }));
             return rx;
         }
         if let Some(e) = st.queue.iter_mut().find(|e| e.key == key) {
@@ -563,13 +623,6 @@ impl Fleet {
             // cannot get an earlier waiter shed. On a durable fleet the
             // joiner still gets its own ledger record — the ledger is a
             // per-request audit trail, not a per-execution one.
-            let wal_seq = match self.log_accepted(&key, deadline) {
-                Ok(seq) => seq,
-                Err(reply) => {
-                    let _ = tx.send(reply);
-                    return rx;
-                }
-            };
             e.deadline = match (e.deadline, abs_deadline) {
                 (Some(a), Some(b)) => Some(a.max(b)),
                 _ => None,
@@ -579,26 +632,6 @@ impl Fleet {
             st.coalesced += 1;
             return rx;
         }
-        if st.queue.len() >= self.shared.cfg.queue_cap {
-            st.shed_backpressure += 1;
-            let _ = tx.send(Reply::Backpressure {
-                queue_len: st.queue.len(),
-                queue_cap: self.shared.cfg.queue_cap,
-            });
-            return rx;
-        }
-        // Durable admission: the `Accepted` record is fsync'd *before*
-        // the caller gets its slot; if the ledger cannot be written the
-        // request fails closed (accepting it would make the crash-replay
-        // guarantee a lie). Shed requests above never reach the ledger —
-        // they were refused, not accepted.
-        let wal_seq = match self.log_accepted(&key, deadline) {
-            Ok(seq) => seq,
-            Err(reply) => {
-                let _ = tx.send(reply);
-                return rx;
-            }
-        };
         st.queue.push_back(Entry {
             key,
             replies: vec![tx],
@@ -685,6 +718,26 @@ impl Drop for Fleet {
     }
 }
 
+/// Phase-1 admission check, under the dispatch lock: the refusal reply
+/// when this request cannot be admitted right now, `None` when it may
+/// proceed (coalesce or reserve). A request with a queued coalesce
+/// target is never backpressure-shed — joining needs no slot.
+fn admission_refusal(st: &DispatchState, cfg: &FleetConfig, key: &SpecKey) -> Option<Reply> {
+    if st.shutdown {
+        return Some(Reply::Failed("fleet is shutting down".to_string()));
+    }
+    if st.status.iter().all(|s| *s == WorkerStatus::Dead) {
+        return Some(Reply::Failed(
+            "no live fleet workers (every replica died and respawn gave up)".to_string(),
+        ));
+    }
+    let coalesces = st.queue.iter().any(|e| e.key == *key);
+    if !coalesces && st.queue.len() + st.reserved >= cfg.queue_cap {
+        return Some(Reply::Backpressure { queue_len: st.queue.len(), queue_cap: cfg.queue_cap });
+    }
+    None
+}
+
 fn snapshot(sh: &Shared) -> FleetStats {
     let st = sh.m.lock().unwrap();
     FleetStats {
@@ -766,21 +819,18 @@ where
 }
 
 /// Flush a final checkpoint at clean shutdown so a restart needs no
-/// replay. Skipped for tainted replicas (see [`ReplicaDur::tainted`]),
-/// replicas that completed nothing, services without parameters, and
-/// when the cadence already checkpointed this replica's last
-/// completion.
+/// replay. Skipped for multi-worker fleets (replicas drift; no single
+/// store covers the ledger), tainted replicas (see
+/// [`ReplicaDur::tainted`]), replicas that completed nothing, services
+/// without parameters, and when the cadence already checkpointed the
+/// current ledger scope.
 fn final_checkpoint<S: UnlearnService>(sh: &Shared, svc: &S, rd: &ReplicaDur) {
     let Some(dur) = &sh.dur else { return };
-    if rd.tainted {
-        return;
-    }
-    let Some(seq) = rd.last_done_seq else { return };
-    if dur.last_checkpoint_seq() >= seq {
+    if sh.cfg.workers > 1 || rd.tainted || !rd.done_any || dur.checkpoint_current() {
         return;
     }
     let Some(store) = svc.params() else { return };
-    if let Err(e) = dur.write_checkpoint(store, seq) {
+    if let Err(e) = dur.write_checkpoint(store) {
         eprintln!("ficabu: final checkpoint failed: {e:#}");
     }
 }
@@ -928,19 +978,33 @@ fn serve_entry<S: UnlearnService>(
             // — at-least-once toward the caller, exactly-once on disk.
             if let Some(dur) = &sh.dur {
                 if !e.wal_seqs.is_empty() {
-                    let due = dur.log_completed(
+                    let logged = dur.log_completed(
                         &e.wal_seqs,
                         Disposition::Done,
                         s.rolled_back,
                         s.forget_acc,
                         s.retain_acc,
                     );
-                    let covering = e.wal_seqs.iter().copied().max().unwrap();
-                    rd.last_done_seq = Some(rd.last_done_seq.map_or(covering, |p| p.max(covering)));
-                    if due && !rd.tainted {
+                    rd.done_any = true;
+                    if !logged.logged {
+                        // The store now holds an edit the ledger will
+                        // replay; any future checkpoint from this
+                        // replica would get the pass applied twice (see
+                        // ReplicaDur::tainted). Recovery replays the
+                        // entry onto the last good checkpoint instead.
+                        rd.tainted = true;
+                        eprintln!(
+                            "ficabu: worker {wid} replica tainted (completion not ledgered); \
+                             checkpointing disabled until restart"
+                        );
+                    }
+                    // Checkpoints are single-worker only: with several
+                    // replicas drifting independently no one store
+                    // covers the ledger, so a multi-worker durable
+                    // fleet relies on full replay instead.
+                    if logged.checkpoint_due && !rd.tainted && sh.cfg.workers == 1 {
                         if let Some(store) = svc.params() {
-                            if let Err(err) = dur.write_checkpoint(store, rd.last_done_seq.unwrap())
-                            {
+                            if let Err(err) = dur.write_checkpoint(store) {
                                 eprintln!("ficabu: checkpoint failed (serving continues): {err:#}");
                             }
                         }

@@ -47,14 +47,25 @@
 //!
 //! # Recovery contract
 //!
-//! Let `C` be the covering sequence number embedded in the newest valid
-//! checkpoint of the *same ledger generation* (0 when there is no
-//! checkpoint or it is from an older generation). An accepted entry is
-//! re-enqueued when it has no completion record, or when it completed
-//! successfully with `seq > C` (its edits post-date the checkpoint and
-//! were lost with the process). Entries that completed as `failed` or
-//! `expired` changed no parameters (the engine is transactional) and
-//! were answered, so they are not replayed. Replay is idempotent per
+//! A checkpoint embeds its exact *scope*: the covering sequence number
+//! `C` (the highest seq assigned when the snapshot was taken) plus the
+//! `pending` list — every seq that was accepted but had no completion
+//! on disk at that instant. The scope is snapshotted atomically under
+//! the ledger's append lock, so a completion that races the checkpoint
+//! is either inside the scope or listed as pending — never silently
+//! claimed. This matters because completions are not ordered by seq:
+//! a request coalesced onto an earlier queue entry completes (with a
+//! high seq) while an entry admitted between them (lower seq) is still
+//! queued, so "everything `<= C`" alone would claim edits the
+//! checkpoint does not contain. Against the newest valid checkpoint of
+//! the *same ledger generation* (`C = 0`, empty pending, when there is
+//! no checkpoint or it is from an older generation), an accepted entry
+//! is re-enqueued when it has no completion record, or when it
+//! completed successfully with `seq > C` or `seq` in the pending list
+//! (its edits are not in the checkpoint and were lost with the
+//! process). Entries that completed as `failed` or `expired` changed
+//! no parameters (the engine is transactional) and were answered, so
+//! they are not replayed. Replay is idempotent per
 //! canonical [`SpecKey`](crate::unlearn::SpecKey): duplicates collapse
 //! to one entry, and the forget batch of a request is a pure function
 //! of (worker seed, spec), so replaying an event reproduces the same
@@ -67,7 +78,7 @@
 //! `checkpoint` (every checkpoint write), `replay` (every re-enqueued
 //! entry during recovery) — see [`testkit::faults`](crate::testkit::faults).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeSet, HashMap, HashSet};
 use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -364,6 +375,10 @@ fn sync_dir(dir: &Path) {
 struct WalInner {
     file: File,
     next_seq: u64,
+    /// Accepted seqs with no completion record on disk — the `pending`
+    /// half of a checkpoint's scope. Kept under the same lock as the
+    /// appends so scope snapshots are consistent with the file.
+    outstanding: BTreeSet<u64>,
 }
 
 /// Append handle over one ledger file. Appends are serialized through
@@ -392,11 +407,22 @@ impl Wal {
             file.sync_all()?;
         }
         let next_seq = scan.records.iter().map(Record::seq).max().unwrap_or(0) + 1;
+        let mut outstanding = BTreeSet::new();
+        for rec in &scan.records {
+            match rec {
+                Record::Accepted { seq, .. } => {
+                    outstanding.insert(*seq);
+                }
+                Record::Completed { seq, .. } => {
+                    outstanding.remove(seq);
+                }
+            }
+        }
         Ok((
             Wal {
                 path,
                 generation: scan.generation,
-                inner: Mutex::new(WalInner { file, next_seq }),
+                inner: Mutex::new(WalInner { file, next_seq, outstanding }),
             },
             scan.records,
         ))
@@ -446,10 +472,13 @@ impl Wal {
         };
         Self::append_locked(&mut inner, &rec)?;
         inner.next_seq = seq + 1;
+        inner.outstanding.insert(seq);
         Ok(seq)
     }
 
-    /// Append a `Completed` record for `seq`.
+    /// Append a `Completed` record for `seq`. On failure `seq` stays
+    /// outstanding: it will appear in the pending list of any later
+    /// checkpoint scope and replay after a crash.
     pub fn append_completed(
         &self,
         seq: u64,
@@ -460,7 +489,20 @@ impl Wal {
     ) -> Result<()> {
         let mut inner = self.lock();
         let rec = Record::Completed { seq, disposition, rolled_back, forget_acc, retain_acc };
-        Self::append_locked(&mut inner, &rec)
+        Self::append_locked(&mut inner, &rec)?;
+        inner.outstanding.remove(&seq);
+        Ok(())
+    }
+
+    /// Consistent checkpoint scope, snapshotted under the append lock:
+    /// `(covering, pending)` where `covering` is the highest seq
+    /// assigned so far and `pending` lists every accepted seq with no
+    /// completion on disk. A checkpoint stamped with this scope claims
+    /// exactly the `Done` completions with `seq <= covering` that are
+    /// not pending.
+    pub fn checkpoint_scope(&self) -> (u64, Vec<u64>) {
+        let inner = self.lock();
+        (inner.next_seq - 1, inner.outstanding.iter().copied().collect())
     }
 }
 
@@ -510,6 +552,18 @@ pub struct Recovered {
     pub replay: Vec<(u64, ForgetSpec)>,
 }
 
+/// Outcome of [`Durability::log_completed`].
+pub struct CompletionLog {
+    /// A parameter checkpoint is due under the configured cadence.
+    pub checkpoint_due: bool,
+    /// Every completion record reached disk. When false the affected
+    /// seqs stay outstanding (they replay after a crash), so a replica
+    /// whose *successful* pass went unrecorded must stop checkpointing:
+    /// its store contains the edit while the scope would list the seq
+    /// as pending, and recovery would apply the pass a second time.
+    pub logged: bool,
+}
+
 /// The fleet's durable state: one write-ahead ledger plus the parameter
 /// checkpoint cadence. Shared across admission (caller threads) and
 /// completion (worker threads).
@@ -521,11 +575,10 @@ pub struct Durability {
     /// Successful completions since start (checkpoint cadence).
     done_entries: AtomicU64,
     checkpoints: AtomicU64,
-    /// Covering seq of the last checkpoint written this process (0 =
-    /// none), so shutdown skips a redundant final flush.
-    last_ckpt_seq: AtomicU64,
-    /// Serializes checkpoint writes across workers.
-    ckpt_write: Mutex<()>,
+    /// Scope of the last checkpoint written this process (`None` =
+    /// none yet), so shutdown skips a redundant final flush. Doubles as
+    /// the lock serializing checkpoint writes.
+    ckpt_scope: Mutex<Option<(u64, Vec<u64>)>>,
 }
 
 impl Durability {
@@ -546,13 +599,16 @@ impl Durability {
             LedgerScan { generation: 0, records: Vec::new(), valid_len: 0, truncated: false }
         };
 
-        // Covering seq is only meaningful against the same ledger
-        // generation; an older-generation checkpoint covers none of the
-        // current ledger's completions (conservative: replay them all).
+        // A checkpoint's scope is only meaningful against the same
+        // ledger generation; an older-generation checkpoint covers none
+        // of the current ledger's completions (conservative: replay
+        // them all).
         let ckpt_gen = ckpt.as_ref().map(|c| c.generation).unwrap_or(0);
-        let covering = match &ckpt {
-            Some(c) if c.generation == scan.generation => c.covering_seq,
-            _ => 0,
+        let (covering, ckpt_pending): (u64, HashSet<u64>) = match &ckpt {
+            Some(c) if c.generation == scan.generation => {
+                (c.covering_seq, c.pending.iter().copied().collect())
+            }
+            _ => (0, HashSet::new()),
         };
 
         let mut completed: HashMap<u64, Disposition> = HashMap::new();
@@ -568,7 +624,10 @@ impl Durability {
             let Record::Accepted { seq, spec, config_hash, .. } = rec else { continue };
             let replayable = match completed.get(seq) {
                 None => true,
-                Some(Disposition::Done) => *seq > covering,
+                // A `Done` seq is in the checkpoint iff it is inside
+                // the scope: at or below the covering seq and not
+                // pending when the snapshot was taken.
+                Some(Disposition::Done) => *seq > covering || ckpt_pending.contains(seq),
                 Some(_) => false, // failed/expired: answered, no edits
             };
             if !replayable {
@@ -599,8 +658,7 @@ impl Durability {
                 replayed: replay.len() as u64,
                 done_entries: AtomicU64::new(0),
                 checkpoints: AtomicU64::new(0),
-                last_ckpt_seq: AtomicU64::new(0),
-                ckpt_write: Mutex::new(()),
+                ckpt_scope: Mutex::new(None),
             },
             params: ckpt.map(|c| c.params),
             replay,
@@ -620,10 +678,12 @@ impl Durability {
     }
 
     /// Record completion of one queue entry (every coalesced seq gets
-    /// its own `Completed` record). Append errors are reported and
-    /// swallowed: a missing completion only means the entry is replayed
-    /// after a crash (at-least-once, idempotent). Returns whether a
-    /// parameter checkpoint is due under the configured cadence.
+    /// its own `Completed` record). Append errors are reported, not
+    /// propagated — a missing completion means the entry is replayed
+    /// after a crash (at-least-once, idempotent) — but
+    /// [`CompletionLog::logged`] tells the completing replica whether
+    /// all records landed, because a lost *successful* completion must
+    /// also stop that replica's checkpoints (see the field docs).
     pub fn log_completed(
         &self,
         seqs: &[u64],
@@ -631,35 +691,43 @@ impl Durability {
         rolled_back: bool,
         forget_acc: f64,
         retain_acc: f64,
-    ) -> bool {
+    ) -> CompletionLog {
+        let mut logged = true;
         for &seq in seqs {
             if let Err(e) =
                 self.wal.append_completed(seq, disposition, rolled_back, forget_acc, retain_acc)
             {
+                logged = false;
                 eprintln!("ficabu: ledger completion append failed for seq {seq}: {e:#}");
             }
         }
         if disposition != Disposition::Done {
-            return false;
+            return CompletionLog { checkpoint_due: false, logged };
         }
         let done = self.done_entries.fetch_add(1, Ordering::SeqCst) + 1;
-        done % self.checkpoint_every == 0
+        CompletionLog { checkpoint_due: done % self.checkpoint_every == 0, logged }
     }
 
-    /// Atomically checkpoint `store` as covering every successful
-    /// completion up to `covering_seq` of the current generation.
-    pub fn write_checkpoint(&self, store: &ParamStore, covering_seq: u64) -> Result<()> {
-        let _g = self.ckpt_write.lock().unwrap_or_else(PoisonError::into_inner);
-        checkpoint::write(&self.dir, store, self.wal.generation(), covering_seq)?;
+    /// Atomically checkpoint `store` under the ledger's current scope
+    /// (covering seq + pending list, snapshotted under the append
+    /// lock). The caller asserts that `store` contains the edit of
+    /// every `Done` completion on disk — true for the single replica of
+    /// an untainted one-worker fleet.
+    pub fn write_checkpoint(&self, store: &ParamStore) -> Result<()> {
+        let mut last = self.ckpt_scope.lock().unwrap_or_else(PoisonError::into_inner);
+        let (covering, pending) = self.wal.checkpoint_scope();
+        checkpoint::write(&self.dir, store, self.wal.generation(), covering, &pending)?;
         self.checkpoints.fetch_add(1, Ordering::SeqCst);
-        self.last_ckpt_seq.store(covering_seq, Ordering::SeqCst);
+        *last = Some((covering, pending));
         Ok(())
     }
 
-    /// Covering seq of the last checkpoint written this process (0 =
-    /// none yet).
-    pub fn last_checkpoint_seq(&self) -> u64 {
-        self.last_ckpt_seq.load(Ordering::SeqCst)
+    /// Whether the last checkpoint written this process already
+    /// captures the current ledger scope (nothing accepted or completed
+    /// since) — lets clean shutdown skip a redundant final flush.
+    pub fn checkpoint_current(&self) -> bool {
+        let last = self.ckpt_scope.lock().unwrap_or_else(PoisonError::into_inner);
+        last.as_ref() == Some(&self.wal.checkpoint_scope())
     }
 
     pub fn stats(&self) -> DurabilityStats {
@@ -834,7 +902,7 @@ mod tests {
         // lost with the process, so it must be replayed; seq 1 must not.
         let meta = crate::config::ModelMeta::builtin("rn18slim").unwrap();
         let store = ParamStore::init(&meta, 3);
-        checkpoint::write(&dir, &store, 4, 1).unwrap();
+        checkpoint::write(&dir, &store, 4, 1, &[]).unwrap();
 
         let rec = Durability::open_or_recover(&cfg).unwrap();
         let specs: Vec<&ForgetSpec> = rec.replay.iter().map(|(_, s)| s).collect();
@@ -853,6 +921,63 @@ mod tests {
         drop(rec);
         let rec2 = Durability::open_or_recover(&cfg).unwrap();
         assert_eq!(rec2.durability.stats().replayed, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_scope_tracks_outstanding_accepted_seqs() {
+        let dir = tmpdir("scope");
+        let path = dir.join(LEDGER_FILE);
+        let recs = vec![
+            Record::Accepted { seq: 1, spec: ForgetSpec::Class(1), config_hash: 0, deadline_ms: None },
+            Record::Accepted { seq: 2, spec: ForgetSpec::Class(2), config_hash: 0, deadline_ms: None },
+            Record::Completed { seq: 1, disposition: Disposition::Done, rolled_back: false, forget_acc: 0.1, retain_acc: 0.9 },
+        ];
+        write_replacing(&path, 1, &recs).unwrap();
+        // open_append seeds the outstanding set from the scanned records
+        let (wal, _) = Wal::open_append(&path).unwrap();
+        assert_eq!(wal.checkpoint_scope(), (2, vec![2]));
+        let s3 = wal.append_accepted(&ForgetSpec::Class(3), 0, None).unwrap();
+        assert_eq!(wal.checkpoint_scope(), (3, vec![2, 3]));
+        wal.append_completed(s3, Disposition::Done, false, 0.1, 0.9).unwrap();
+        assert_eq!(wal.checkpoint_scope(), (3, vec![2]));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The coalesce race: a joiner's high seq completes with an earlier
+    /// entry while a lower seq is still queued. The checkpoint must not
+    /// claim the queued seq — and once it completes *after* the
+    /// checkpoint, recovery must replay it even though its seq is below
+    /// the covering seq.
+    #[test]
+    fn pending_seqs_below_covering_are_replayed() {
+        let dir = tmpdir("pending");
+        let cfg = DurabilityConfig { dir: dir.clone(), checkpoint_every: 1 };
+        let meta = crate::config::ModelMeta::builtin("rn18slim").unwrap();
+        let store = ParamStore::init(&meta, 3);
+        {
+            let d = Durability::open_or_recover(&cfg).unwrap().durability;
+            // A (seq 1) and B (seq 2) admitted; a duplicate of A
+            // coalesces onto A's queue entry (seq 3). The worker serves
+            // A first: seqs 1 and 3 complete in one pass and the
+            // checkpoint lands while B is still queued.
+            let a = d.log_accepted(&ForgetSpec::Class(1), 0, None).unwrap();
+            let b = d.log_accepted(&ForgetSpec::Class(2), 0, None).unwrap();
+            let j = d.log_accepted(&ForgetSpec::Class(1), 0, None).unwrap();
+            assert_eq!((a, b, j), (1, 2, 3));
+            d.log_completed(&[a, j], Disposition::Done, false, 0.1, 0.9);
+            d.write_checkpoint(&store).unwrap();
+            // B completes after the checkpoint; the process dies before
+            // the next one.
+            d.log_completed(&[b], Disposition::Done, false, 0.1, 0.9);
+        }
+        let ck = checkpoint::load_latest(&dir).unwrap().unwrap();
+        assert_eq!((ck.covering_seq, ck.pending.as_slice()), (3, &[2u64][..]));
+        // B's edits are absent from the checkpoint even though its seq
+        // is below the covering seq: recovery replays it, and only it.
+        let rec = Durability::open_or_recover(&cfg).unwrap();
+        let specs: Vec<&ForgetSpec> = rec.replay.iter().map(|(_, s)| s).collect();
+        assert_eq!(specs, [&ForgetSpec::Class(2)]);
         std::fs::remove_dir_all(&dir).ok();
     }
 

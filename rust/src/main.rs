@@ -297,6 +297,12 @@ fn cmd_serve(a: &Args) -> Result<()> {
                 dcfg.dir.display(),
                 dcfg.checkpoint_every
             );
+            if workers > 1 {
+                println!(
+                    "durable: {workers} workers — replicas drift independently, so \
+                     checkpoints are disabled and recovery replays the full ledger"
+                );
+            }
             let fleet = Fleet::start_durable(wspec, fleet_cfg, dcfg)?;
             if let Some(d) = fleet.stats().durability {
                 println!(

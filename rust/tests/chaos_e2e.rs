@@ -275,12 +275,12 @@ fn durable_wspec(seed: u64) -> WorkerSpec {
     }
 }
 
-/// One-worker durable production fleet, checkpointing every completion.
-fn durable_fleet(dir: &Path) -> Fleet {
+/// Durable production fleet, checkpointing every completion.
+fn durable_fleet_n(dir: &Path, workers: usize) -> Fleet {
     Fleet::start_durable(
         durable_wspec(5),
         FleetConfig {
-            workers: 1,
+            workers,
             queue_cap: 8,
             deadline: None,
             batch_max: 1,
@@ -290,6 +290,11 @@ fn durable_fleet(dir: &Path) -> Fleet {
         DurabilityConfig { dir: dir.to_path_buf(), checkpoint_every: 1 },
     )
     .unwrap()
+}
+
+/// One-worker durable production fleet, checkpointing every completion.
+fn durable_fleet(dir: &Path) -> Fleet {
+    durable_fleet_n(dir, 1)
 }
 
 /// Replayed entries have no reply channel; poll the rollup instead.
@@ -440,6 +445,121 @@ fn interrupted_checkpoint_never_loads_partial_state() {
     assert_eq!(stats.durability.unwrap().checkpoints, 1);
     let ck = checkpoint::load_latest(&dir).unwrap().expect("post-recovery checkpoint");
     assert_eq!(ck.generation, 2);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A `Done` completion whose ledger append fails taints the replica:
+/// its store holds an edit the ledger will replay, so writing another
+/// checkpoint from it would get that pass applied twice. The fleet must
+/// stop checkpointing (including the final flush), let recovery replay
+/// the unledgered entry onto the *last good* checkpoint, and still end
+/// bitwise identical to an uninterrupted run.
+#[test]
+fn failed_completion_append_taints_the_checkpoint_and_replays() {
+    let _g = serial();
+    faults::clear();
+    let dir_a = durable_dir("taint_reference");
+    let dir_b = durable_dir("taint_crashed");
+    let spec1 = ForgetSpec::Class(3);
+    let spec2 = ForgetSpec::Class(7);
+
+    // Reference run: both events, no interruption.
+    {
+        let fleet = durable_fleet(&dir_a);
+        for spec in [&spec1, &spec2] {
+            match fleet.submit(spec.clone()).recv().unwrap() {
+                Reply::Done(sm) => assert!(!sm.rolled_back),
+                other => panic!("reference {spec}: unexpected reply {other:?}"),
+            }
+        }
+        let stats = fleet.shutdown().unwrap();
+        assert_eq!(stats.durability.unwrap().checkpoints, 2);
+    }
+
+    // Tainted run: event 1 lands cleanly (checkpoint 1). For event 2
+    // the *second* ledger append after arming fails — hit 1 is its
+    // `Accepted` record (must succeed: the request needs its slot), hit
+    // 2 is its `Done` completion. The pass itself commits and the
+    // caller is answered, but the completion never reaches disk.
+    {
+        let fleet = durable_fleet(&dir_b);
+        match fleet.submit(spec1.clone()).recv().unwrap() {
+            Reply::Done(_) => {}
+            other => panic!("tainted run, event 1: unexpected reply {other:?}"),
+        }
+        faults::arm("wal_append:2:error").unwrap();
+        match fleet.submit(spec2.clone()).recv().unwrap() {
+            Reply::Done(sm) => {
+                assert!(!sm.rolled_back);
+                assert_eq!(sm.wal_seq, Some(2));
+            }
+            other => panic!("tainted run, event 2: unexpected reply {other:?}"),
+        }
+        let stats = fleet.shutdown().unwrap();
+        faults::clear();
+        // checkpoint_every = 1, yet neither event 2's cadence checkpoint
+        // nor the final shutdown flush ran: the replica is tainted.
+        assert_eq!(stats.durability.unwrap().checkpoints, 1);
+    }
+
+    // The surviving checkpoint covers exactly event 1.
+    let ck = checkpoint::load_latest(&dir_b).unwrap().expect("last good checkpoint");
+    assert_eq!((ck.generation, ck.covering_seq), (1, 1));
+
+    // Restart: event 2 is accepted-without-completed on disk, so it
+    // replays onto the last good checkpoint — once, not twice.
+    {
+        let fleet = durable_fleet(&dir_b);
+        assert_eq!(fleet.stats().durability.unwrap().replayed, 1);
+        wait_served(&fleet, 1);
+        let stats = fleet.shutdown().unwrap();
+        assert_eq!(stats.merged().served, 1);
+        assert_eq!(stats.durability.unwrap().checkpoints, 1);
+    }
+
+    let a = checkpoint::load_latest(&dir_a).unwrap().expect("reference checkpoint");
+    let b = checkpoint::load_latest(&dir_b).unwrap().expect("recovered checkpoint");
+    assert_store_bitwise_eq(&a.params, &b.params);
+
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+/// With several replicas drifting independently no single store covers
+/// the ledger, so a multi-worker durable fleet must never write a
+/// checkpoint — recovery replays the full ledger instead.
+#[test]
+fn multi_worker_durable_fleet_never_checkpoints_and_replays_everything() {
+    let _g = serial();
+    faults::clear();
+    let dir = durable_dir("multiworker");
+
+    {
+        let fleet = durable_fleet_n(&dir, 2);
+        for spec in [ForgetSpec::Class(1), ForgetSpec::Class(4)] {
+            match fleet.submit(spec.clone()).recv().unwrap() {
+                Reply::Done(sm) => assert!(!sm.rolled_back),
+                other => panic!("{spec}: unexpected reply {other:?}"),
+            }
+        }
+        let stats = fleet.shutdown().unwrap();
+        // checkpoint_every = 1 and two clean completions, yet no
+        // checkpoint: cadence and final flush are both workers==1 only.
+        assert_eq!(stats.durability.unwrap().checkpoints, 0);
+    }
+    assert!(checkpoint::load_latest(&dir).unwrap().is_none(), "no checkpoint on disk");
+
+    // Restart: with no checkpoint the covering scope is empty, so every
+    // `Done` entry in the ledger replays.
+    {
+        let fleet = durable_fleet_n(&dir, 2);
+        assert_eq!(fleet.stats().durability.unwrap().replayed, 2);
+        wait_served(&fleet, 2);
+        let stats = fleet.shutdown().unwrap();
+        assert_eq!(stats.merged().served, 2);
+        assert_eq!(stats.durability.unwrap().checkpoints, 0);
+    }
 
     let _ = std::fs::remove_dir_all(&dir);
 }
