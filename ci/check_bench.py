@@ -25,7 +25,12 @@ validate FILE
       4-worker arm's rps. A serve/wal-paced/* arm (write-ahead ledger +
       checkpoints on) must exist, must actually have ledgered (wal_seq
       > 0), and must keep >= 80% of the fault-free paced 4-worker arm's
-      rps.
+      rps. A serve/multi-tenant/workers=* arm (model registry) must
+      exist with graph_builds <= models (workers share Arc'd compiled
+      graphs — no per-worker rebuild), and a
+      serve/registry-spinup/workers=* arm must exist with
+      graph_builds_at_start == 0 (starting registry workers compiles
+      nothing).
 
 compare BASELINE CURRENT
     Fail when any case present in both files regressed by more than
@@ -49,6 +54,7 @@ NOISY_PREFIXES = (
     "serve/spec-",
     "serve/chaos-",
     "serve/wal-paced",
+    "serve/registry-spinup",
     "prepare ",
 )
 
@@ -205,12 +211,48 @@ def _check_serve(cases, path, min_speedup):
             f"fault-free paced arm ({paced_rps:.3f} rps) — the ledger fsyncs "
             "are dominating the paced envelope"
         )
+    # multi-tenant arm: the model registry must stay benched — several
+    # models behind one fleet with compiled graphs Arc-shared (builds
+    # bounded by the model count, no matter how many workers serve), and
+    # registry worker spin-up must stay O(1) (the spin-up case compiles
+    # nothing)
+    mt_arms = [n for n in cases if n.startswith("serve/multi-tenant/workers=")]
+    if not mt_arms:
+        _fail(f"{path}: no serve/multi-tenant/workers=* arm "
+              "(model registry unbenched)")
+    mt = cases[mt_arms[0]]
+    models = mt.get("models")
+    builds = mt.get("graph_builds")
+    if not isinstance(models, (int, float)) or models < 2:
+        _fail(f"{path}: {mt_arms[0]!r} must host >= 2 models "
+              f"(models = {models!r})")
+    if not isinstance(builds, (int, float)) or builds <= 0:
+        _fail(f"{path}: {mt_arms[0]!r} has no positive 'graph_builds' field")
+    if builds > models:
+        _fail(
+            f"{path}: {mt_arms[0]!r} rebuilt shared graphs: {builds:.0f} "
+            f"builds for {models:.0f} models — workers must share the "
+            "registry's compiled graphs, not rebuild per worker"
+        )
+    spin_arms = [n for n in cases
+                 if n.startswith("serve/registry-spinup/workers=")]
+    if not spin_arms:
+        _fail(f"{path}: no serve/registry-spinup/workers=* arm "
+              "(registry worker spin-up unbenched)")
+    spin = cases[spin_arms[0]]
+    if spin.get("graph_builds_at_start") != 0:
+        _fail(
+            f"{path}: {spin_arms[0]!r} compiled during spin-up "
+            f"(graph_builds_at_start = {spin.get('graph_builds_at_start')!r}) "
+            "— registry worker startup must not build graphs"
+        )
     print(
         f"serve guardrail OK: paced 4v1 speedup {speedup:.2f}x, "
         f"{len(spec_arms)} spec arm(s), lazy scan "
         f"{tree / max(lazy, 1e-9):.1f}x faster than tree parse, "
         f"chaos at {chaos_rps / paced_rps:.2f}x and durable at "
-        f"{wal_rps / paced_rps:.2f}x of fault-free throughput"
+        f"{wal_rps / paced_rps:.2f}x of fault-free throughput, "
+        f"{models:.0f}-model registry at {builds:.0f} graph build(s)"
     )
 
 

@@ -37,6 +37,14 @@
 //!   durability subsystem on (fsync'd write-ahead ledger + periodic
 //!   parameter checkpoints); CI's validate step asserts it keeps ≥ 80%
 //!   of the fault-free paced throughput.
+//! * `serve/multi-tenant/workers=4` — two models (distinct operating
+//!   points) behind one registry fleet, mixed load addressed per model.
+//!   CI's validate step gates the `graph_builds` extra: compiled graphs
+//!   are `Arc`-shared, so builds == models no matter the worker count.
+//! * `serve/registry-spinup/workers=4` — wall time of
+//!   `Fleet::start_registry` alone: registry workers are O(1) to start
+//!   (no per-worker replica build), pinned by `graph_builds_at_start`
+//!   staying 0.
 //!
 //! `FICABU_BENCH_PRESET=smoke` shrinks the request counts for CI.
 
@@ -49,10 +57,12 @@ use std::time::Instant;
 
 use ficabu::config::SharedMeta;
 use ficabu::coordinator::{
-    DurabilityConfig, Fleet, FleetConfig, HttpConfig, HttpServer, Pacing, Reply, WorkerSpec,
+    DurabilityConfig, Fleet, FleetConfig, HttpConfig, HttpServer, ModelId, ModelRegistry, Pacing,
+    Reply, WorkerSpec,
 };
 use ficabu::exp::tables::mode_config;
 use ficabu::exp::{self, DatasetKind, Mode, Prepared, PrepareOpts};
+use ficabu::runtime::Runtime;
 use ficabu::testkit::faults;
 use ficabu::unlearn::ForgetSpec;
 use ficabu::util::json::{scan, Json};
@@ -515,6 +525,117 @@ fn run_wal_arm(
     Ok(())
 }
 
+/// Multi-tenant arm: two models with distinct operating points behind
+/// one registry fleet, driven with a mixed, model-addressed load. Two
+/// cases come out of one run:
+///
+/// * `serve/registry-spinup/workers=N` — wall time of
+///   `Fleet::start_registry` alone. Registry workers are O(1): they
+///   borrow `Arc`-shared compiled graphs instead of building replicas,
+///   so spin-up compiles nothing (`graph_builds_at_start` stays 0).
+/// * `serve/multi-tenant/workers=N` — paced throughput of the mixed
+///   load, with the shared-build counter as the `graph_builds` extra:
+///   graphs compile once per model per process, never per worker.
+fn run_multi_tenant_arm(
+    b: &Bench,
+    prep: &Prepared,
+    shared: &SharedMeta,
+    workers: usize,
+    requests: usize,
+    pacing: Pacing,
+) -> anyhow::Result<()> {
+    let num_classes = prep.model.meta.num_classes;
+    let tenant_a = ModelId::new("tenant-a")?;
+    let tenant_b = ModelId::new("tenant-b")?;
+    let reg = ModelRegistry::new(Runtime::cpu()?);
+    reg.register(tenant_a.clone(), spec_for(prep, shared))?;
+    // Same master, different operating point: tenant-b doubles the
+    // dampening strength, so the tenants never share a batch key.
+    let mut spec_b = spec_for(prep, shared);
+    spec_b.cfg.alpha *= 2.0;
+    reg.register(tenant_b.clone(), spec_b)?;
+    let reg = Arc::new(reg);
+
+    let t_up = Instant::now();
+    let fleet = Fleet::start_registry(
+        Arc::clone(&reg),
+        FleetConfig {
+            workers,
+            queue_cap: requests + 4,
+            deadline: None,
+            batch_max: 1,
+            pacing,
+            respawn_giveup: 5,
+        },
+    )?;
+    let spinup_ms = t_up.elapsed().as_secs_f64() * 1e3;
+    let builds_at_start = reg.builds();
+    anyhow::ensure!(
+        builds_at_start == 0,
+        "registry worker spin-up must not compile graphs ({builds_at_start} builds)"
+    );
+    b.record_case(
+        &format!("serve/registry-spinup/workers={workers}"),
+        workers,
+        spinup_ms,
+        spinup_ms / workers as f64,
+        &[
+            ("workers", workers as f64),
+            ("graph_builds_at_start", builds_at_start as f64),
+        ],
+    );
+
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            let model = if i % 2 == 0 { tenant_a.clone() } else { tenant_b.clone() };
+            fleet.submit_to(model, ForgetSpec::Class(i % num_classes), None)
+        })
+        .collect();
+    let mut done = 0usize;
+    for rx in rxs {
+        match rx.recv() {
+            Ok(Reply::Done(_)) => done += 1,
+            Ok(other) => anyhow::bail!("multi-tenant: unexpected reply {other:?}"),
+            Err(e) => anyhow::bail!("multi-tenant: reply channel closed ({e})"),
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let stats = fleet.shutdown()?;
+    anyhow::ensure!(
+        stats.per_model.len() == 2,
+        "both tenants must be served, got {} rollup rows",
+        stats.per_model.len()
+    );
+    let builds = reg.builds();
+    anyhow::ensure!(
+        builds == 2,
+        "graphs compile once per model, not per worker ({builds} builds for 2 models)"
+    );
+    let total = stats.merged();
+    let rps = done as f64 / (wall_ms / 1e3);
+    let mut extras = vec![
+        ("rps", rps),
+        ("workers", workers as f64),
+        ("models", 2.0),
+        ("graph_builds", builds as f64),
+        ("spinup_ms", spinup_ms),
+    ];
+    extras.extend(total.percentile_fields());
+    b.record_case(
+        &format!("serve/multi-tenant/workers={workers}"),
+        requests,
+        wall_ms,
+        wall_ms / requests as f64,
+        &extras,
+    );
+    println!(
+        "[serve] multi-tenant: {done} done across 2 models, {builds} graph builds, \
+         spin-up {spinup_ms:.1} ms"
+    );
+    Ok(())
+}
+
 /// Request-body field extraction micro-arms: the lazy path scanner vs
 /// the full tree parser over a batch of realistic wire bodies (control
 /// fields first, then a bulky telemetry payload the admission path
@@ -652,6 +773,10 @@ fn main() -> anyhow::Result<()> {
 
     // --- durability arm: the same paced 4-worker fleet, ledger on
     run_wal_arm(&b, &prep, &shared, 4, paced_requests, paced)?;
+
+    // --- multi-tenant arm: two models behind one registry fleet, plus
+    // the registry worker spin-up case
+    run_multi_tenant_arm(&b, &prep, &shared, 4, paced_requests, paced)?;
 
     // --- request-body parsing: lazy path scan vs full tree parse
     run_parse_arms(&b);

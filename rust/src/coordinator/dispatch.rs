@@ -1,26 +1,40 @@
-//! Multi-worker dispatcher: admission control, coalescing, batching.
+//! Multi-worker dispatcher: admission control, coalescing, batching,
+//! model-addressed routing.
 //!
-//! The [`Fleet`] owns N worker threads behind one shared FIFO. Because
-//! the compiled modules hold `Rc` handles (not `Send`), a worker's
-//! engine stack is *built inside its thread* from a [`WorkerSpec`] —
-//! plain `Send` data (meta, parameter replica, importance, dataset,
-//! config). Each worker therefore owns a private [`EdgeServer`] replica
-//! whose parameter store drifts independently as it serves edits.
+//! The [`Fleet`] owns N worker threads behind one shared FIFO. Two
+//! serving shapes exist:
+//!
+//! - **Legacy replica fleets** ([`Fleet::start`]): each worker builds a
+//!   private [`EdgeServer`] replica from a [`WorkerSpec`] — its
+//!   parameter store drifts independently as it serves edits. Compiled
+//!   modules are immutable `Send + Sync` programs, so the per-worker
+//!   build cost is mostly cloning the parameter bag (module loads hit
+//!   the shared runtime cache).
+//! - **Registry fleets** ([`Fleet::start_registry`]): workers are
+//!   O(1)-startup [`RegistryWorker`]s borrowing `Arc`-shared compiled
+//!   models from a [`ModelRegistry`] — one fleet hosts many models,
+//!   graphs compile once per process (never per worker), and every
+//!   request edits a private copy-on-write overlay of the addressed
+//!   model's frozen master.
 //!
 //! Request lifecycle:
 //!
-//! 1. **Admission** ([`Fleet::submit`]): a request whose canonical
-//!    [`SpecKey`] matches an already-queued entry *coalesces* onto that
-//!    entry (one execution, fan-out replies) — `classes:4,1,1`,
-//!    `classes:1,4`, and a duplicate of either are one queue slot.
-//!    Otherwise, a full queue sheds the request immediately with
-//!    [`Reply::Backpressure`]; an open slot enqueues it.
+//! 1. **Admission** ([`Fleet::submit_to`]; [`Fleet::submit`] resolves
+//!    the fleet's sole model first): a request whose [`BatchKey`] —
+//!    `(model, config fingerprint, canonical SpecKey)` — matches an
+//!    already-queued entry *coalesces* onto that entry (one execution,
+//!    fan-out replies) — `classes:4,1,1`, `classes:1,4`, and a
+//!    duplicate of either are one queue slot, but the same spec for two
+//!    tenants stays two entries. Otherwise, a full queue sheds the
+//!    request immediately with [`Reply::Backpressure`]; an open slot
+//!    enqueues it.
 //! 2. **Claim**: an idle worker claims up to `batch_max` entries in one
 //!    lock acquisition (a *pass*), capped to its fair share of the
 //!    backlog (`ceil(queue_len / workers)`) so a burst spreads across
-//!    the fleet instead of riding one early waker. All queued requests
-//!    share one [`UnlearnConfig`], so every pass is compatible by
-//!    construction.
+//!    the fleet instead of riding one early waker. A pass may freely
+//!    mix models and configs: each entry carries its whole routing key,
+//!    so there is no fleet-wide config-compatibility contract (the old
+//!    `UnlearnConfig: PartialEq` batch gate is retired).
 //! 3. **Deadline shed**: a claimed entry whose deadline has already
 //!    passed is answered with [`Reply::Expired`] without touching the
 //!    engine.
@@ -67,7 +81,12 @@
 //! covers the ledger — and recovery therefore replays the full ledger
 //! (every accepted entry without a `failed`/`expired` completion) onto
 //! factory parameters; the ledger remains an exact record of
-//! accepted/completed work.
+//! accepted/completed work. Registry fleets
+//! ([`Fleet::start_registry_durable`]) never checkpoint either — their
+//! masters are frozen and per-request deltas are discarded, so
+//! durability is ledger-replay only: every `Accepted` record carries
+//! its model id, recovery routes replays through the registry, and a
+//! ledger referencing an unregistered model fails startup loudly.
 
 use std::collections::VecDeque;
 use std::fmt;
@@ -80,6 +99,7 @@ use anyhow::{bail, Result};
 
 use crate::config::{ModelMeta, SharedMeta};
 use crate::coordinator::queue::{QueueStats, Timing};
+use crate::coordinator::registry::{ModelId, ModelInfo, ModelRegistry, RegistryWorker};
 use crate::coordinator::wal::{
     config_fingerprint, Disposition, Durability, DurabilityConfig, DurabilityStats,
 };
@@ -87,7 +107,7 @@ use crate::coordinator::{EdgeServer, Summary};
 use crate::data::Dataset;
 use crate::fisher::Importance;
 use crate::model::ParamStore;
-use crate::runtime::Precision;
+use crate::runtime::{meta_fingerprint, Precision};
 use crate::unlearn::{ForgetSpec, SpecKey, UnlearnConfig};
 use crate::util::json::Json;
 
@@ -228,17 +248,45 @@ pub struct WorkerSpec {
     pub precision: Precision,
 }
 
+/// Coalescing/batch key of one queue entry: which model, under which
+/// operating point, forgetting what. Two requests share an execution
+/// iff all three halves match — the same spec for two tenants, or the
+/// same tenant across a config change, stays two entries. This key is
+/// the whole batch-compatibility story: a claimed pass mixes keys
+/// freely because each entry routes itself.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub model: ModelId,
+    /// [`config_fingerprint`] of the model's `UnlearnConfig`.
+    pub config_hash: u64,
+    /// Canonical spec; `spec.spec()` is what executes.
+    pub spec: SpecKey,
+}
+
 /// The unlearning work a worker performs per request — implemented by
-/// [`EdgeServer`] (= `UnlearnSession`) for production and by test
-/// doubles for dispatcher tests. The spec a worker receives is already
-/// canonical (it is the entry's coalescing key).
+/// [`EdgeServer`] (= `UnlearnSession`) and [`RegistryWorker`] for
+/// production and by test doubles for dispatcher tests. The spec a
+/// worker receives is already canonical (it is the entry's coalescing
+/// key).
 pub trait UnlearnService {
     fn unlearn(&mut self, spec: &ForgetSpec) -> Result<Summary>;
+
+    /// Model-addressed entry point — what the dispatcher calls. The
+    /// default ignores the model id and serves the service's only
+    /// model, so single-model services and test doubles implement just
+    /// [`UnlearnService::unlearn`]; [`RegistryWorker`] overrides this
+    /// to route through its registry.
+    fn unlearn_model(&mut self, _model: &ModelId, spec: &ForgetSpec) -> Result<Summary> {
+        self.unlearn(spec)
+    }
 
     /// The replica's live parameter store, when it has one — what a
     /// durable fleet checkpoints after a completed pass. Test doubles
     /// without real parameters keep the default `None` (their
     /// completions are still ledgered; only checkpoints are skipped).
+    /// Registry workers also keep the default: their masters are frozen
+    /// and per-request deltas die with the summary, so there is nothing
+    /// a checkpoint could cover.
     fn params(&self) -> Option<&ParamStore> {
         None
     }
@@ -260,6 +308,9 @@ pub struct FleetStats {
     /// Queue depth at snapshot time.
     pub queue_depth: usize,
     pub per_worker: Vec<QueueStats>,
+    /// Per-model serving rollup, keyed by model id, in first-served
+    /// order. One entry per model that has had a request claimed.
+    pub per_model: Vec<(ModelId, QueueStats)>,
     /// Ledger/checkpoint counters (`None` on a non-durable fleet).
     pub durability: Option<DurabilityStats>,
 }
@@ -287,14 +338,24 @@ impl FleetStats {
             ("queue_depth", Json::from(self.queue_depth)),
             ("rollup", self.merged().to_json()),
             ("per_worker", Json::Arr(self.per_worker.iter().map(QueueStats::to_json).collect())),
+            (
+                "per_model",
+                Json::Obj(
+                    self.per_model
+                        .iter()
+                        .map(|(id, q)| (id.to_string(), q.to_json()))
+                        .collect(),
+                ),
+            ),
             ("durability", self.durability.as_ref().map_or(Json::Null, DurabilityStats::to_json)),
         ])
     }
 }
 
 struct Entry {
-    /// Canonical coalescing/routing key; `key.spec()` is what executes.
-    key: SpecKey,
+    /// Coalescing/routing key; `key.spec.spec()` is what executes, on
+    /// the model `key.model` addresses.
+    key: BatchKey,
     replies: Vec<std::sync::mpsc::Sender<Reply>>,
     enqueued_at: Instant,
     deadline: Option<Instant>,
@@ -316,6 +377,8 @@ struct DispatchState {
     /// the queue while a slow disk stalls phase 2.
     reserved: usize,
     per_worker: Vec<QueueStats>,
+    /// Per-model serving stats, first-served order (find-or-insert).
+    per_model: Vec<(ModelId, QueueStats)>,
     status: Vec<WorkerStatus>,
 }
 
@@ -325,9 +388,17 @@ struct Shared {
     cv: Condvar,
     /// Durable ledger + checkpoints (`None` = in-memory-only fleet).
     dur: Option<Arc<Durability>>,
-    /// Fingerprint of the fleet's `UnlearnConfig`, recorded in
-    /// `Accepted` ledger entries (0 for service factories without one).
+    /// Fingerprint of the fleet's single `UnlearnConfig` on a
+    /// registry-less fleet (0 for service factories without one);
+    /// registry fleets resolve the hash per model at admission.
     config_hash: u64,
+    /// Model registry (`None` = single-model fleet addressed as
+    /// [`ModelId::default`]).
+    registry: Option<Arc<ModelRegistry>>,
+    /// `GET /models` row for a registry-less production fleet,
+    /// synthesized from its [`WorkerSpec`] (`None` for service-factory
+    /// fleets, whose listing is empty).
+    static_info: Option<ModelInfo>,
 }
 
 /// Per-replica durability state, owned by the worker thread.
@@ -346,6 +417,20 @@ struct ReplicaDur {
     done_any: bool,
 }
 
+/// `GET /models` row for a registry-less production fleet: the sole
+/// model is addressed as [`ModelId::default`], its spec key is the
+/// fingerprint of the worker spec's graph metadata, and it is always
+/// warm (every replica holds it compiled).
+fn static_model_info(spec: &WorkerSpec, config_hash: u64) -> ModelInfo {
+    ModelInfo {
+        id: ModelId::default(),
+        spec_key: format!("{:016x}", meta_fingerprint(&spec.meta)),
+        config_hash,
+        precision: spec.precision,
+        warm: true,
+    }
+}
+
 /// N `EdgeServer` replicas behind one dispatcher. See the module docs
 /// for the request lifecycle.
 pub struct Fleet {
@@ -355,9 +440,63 @@ pub struct Fleet {
 
 impl Fleet {
     /// Start a production fleet: each worker builds its own
-    /// `EdgeServer` replica from `spec` inside its thread.
+    /// `EdgeServer` replica from `spec` inside its thread. The fleet
+    /// hosts the single model [`ModelId::default`].
     pub fn start(spec: WorkerSpec, cfg: FleetConfig) -> Result<Fleet> {
-        Self::start_with(cfg, move |wid| EdgeServer::from_spec(&spec, wid))
+        let config_hash = config_fingerprint(&spec.cfg);
+        let info = static_model_info(&spec, config_hash);
+        Self::start_inner(
+            cfg,
+            move |wid| EdgeServer::from_spec(&spec, wid),
+            None,
+            config_hash,
+            Vec::new(),
+            None,
+            Some(info),
+        )
+    }
+
+    /// Start a registry fleet: one [`RegistryWorker`] per worker thread,
+    /// all borrowing `Arc`-shared compiled models from `registry`.
+    /// Worker construction is O(1) — graphs compile once per process on
+    /// first use ([`ModelRegistry::builds`] pins this). Address requests
+    /// with [`Fleet::submit_to`]; [`Fleet::submit`] works while the
+    /// registry holds exactly one model.
+    pub fn start_registry(registry: Arc<ModelRegistry>, cfg: FleetConfig) -> Result<Fleet> {
+        let reg = Arc::clone(&registry);
+        Self::start_inner(
+            cfg,
+            move |wid| Ok(RegistryWorker::new(Arc::clone(&reg), wid)),
+            None,
+            0,
+            Vec::new(),
+            Some(registry),
+            None,
+        )
+    }
+
+    /// Durable registry fleet: ledger-replay-only durability (registry
+    /// masters are frozen and per-request deltas are discarded, so
+    /// there is no drifting store to checkpoint — any checkpoint found
+    /// in `dcfg.dir` is ignored). Every replayed entry is routed
+    /// through `registry`; a ledger referencing an unregistered model
+    /// fails startup loudly.
+    pub fn start_registry_durable(
+        registry: Arc<ModelRegistry>,
+        cfg: FleetConfig,
+        dcfg: DurabilityConfig,
+    ) -> Result<Fleet> {
+        let rec = Durability::open_or_recover(&dcfg)?;
+        let reg = Arc::clone(&registry);
+        Self::start_inner(
+            cfg,
+            move |wid| Ok(RegistryWorker::new(Arc::clone(&reg), wid)),
+            Some(Arc::new(rec.durability)),
+            0,
+            rec.replay,
+            Some(registry),
+            None,
+        )
     }
 
     /// Start a durable production fleet: open-or-recover the write-ahead
@@ -375,12 +514,15 @@ impl Fleet {
             params.validate(&spec.meta)?;
             spec.params = params;
         }
+        let info = static_model_info(&spec, config_hash);
         Self::start_inner(
             cfg,
             move |wid| EdgeServer::from_spec(&spec, wid),
             Some(Arc::new(rec.durability)),
             config_hash,
             rec.replay,
+            None,
+            Some(info),
         )
     }
 
@@ -394,7 +536,7 @@ impl Fleet {
         F: Fn(usize) -> Result<S> + Send + Sync + 'static,
     {
         let rec = Durability::open_or_recover(&dcfg)?;
-        Self::start_inner(cfg, factory, Some(Arc::new(rec.durability)), 0, rec.replay)
+        Self::start_inner(cfg, factory, Some(Arc::new(rec.durability)), 0, rec.replay, None, None)
     }
 
     /// Start a fleet over any [`UnlearnService`] factory. The factory
@@ -405,7 +547,7 @@ impl Fleet {
         S: UnlearnService + 'static,
         F: Fn(usize) -> Result<S> + Send + Sync + 'static,
     {
-        Self::start_inner(cfg, factory, None, 0, Vec::new())
+        Self::start_inner(cfg, factory, None, 0, Vec::new(), None, None)
     }
 
     fn start_inner<S, F>(
@@ -413,7 +555,9 @@ impl Fleet {
         factory: F,
         dur: Option<Arc<Durability>>,
         config_hash: u64,
-        replay: Vec<(u64, ForgetSpec)>,
+        replay: Vec<(u64, ModelId, ForgetSpec)>,
+        registry: Option<Arc<ModelRegistry>>,
+        static_info: Option<ModelInfo>,
     ) -> Result<Fleet>
     where
         S: UnlearnService + 'static,
@@ -433,11 +577,34 @@ impl Fleet {
         // Recovered entries enter the queue before any worker spawns —
         // replay rides the normal claim/serve path, just with no reply
         // receivers. They count as admitted: they were, in a prior life.
+        // Every replayed model id is validated first: an unroutable
+        // ledger must fail startup loudly, not drop admitted requests.
         let now = Instant::now();
         let mut queue = VecDeque::new();
-        for (seq, spec) in replay {
+        for (seq, model, spec) in replay {
+            let entry_hash = match &registry {
+                Some(reg) => {
+                    if !reg.contains(&model) {
+                        bail!(
+                            "recovery: ledger entry (seq {seq}) addresses model {model}, \
+                             which is not registered; register it or move the ledger aside"
+                        );
+                    }
+                    reg.config_hash(&model).unwrap_or(0)
+                }
+                None => {
+                    if model != ModelId::default() {
+                        bail!(
+                            "recovery: ledger entry (seq {seq}) addresses model {model}, \
+                             but this fleet hosts only the default model; start a registry \
+                             fleet or move the ledger aside"
+                        );
+                    }
+                    config_hash
+                }
+            };
             queue.push_back(Entry {
-                key: spec.key(),
+                key: BatchKey { model, config_hash: entry_hash, spec: spec.key() },
                 replies: Vec::new(),
                 enqueued_at: now,
                 deadline: None,
@@ -454,12 +621,15 @@ impl Fleet {
                 shed_backpressure: 0,
                 reserved: 0,
                 per_worker: vec![QueueStats::default(); cfg.workers],
+                per_model: Vec::new(),
                 status: vec![WorkerStatus::Alive; cfg.workers],
             }),
             cv: Condvar::new(),
             cfg,
             dur,
             config_hash,
+            registry,
+            static_info,
         });
         let factory = Arc::new(factory);
         let (ack_tx, ack_rx) = channel::<Result<(), String>>();
@@ -471,8 +641,7 @@ impl Fleet {
             let h = std::thread::Builder::new()
                 .name(format!("ficabu-worker-{wid}"))
                 .spawn(move || {
-                    // Build the replica in-thread: compiled modules are
-                    // not Send, only the spec travels. (`*f`: Arc has no
+                    // Build the service in-thread. (`*f`: Arc has no
                     // Fn impl, the closure is called through the deref.)
                     // The factory is retained for the fleet's lifetime:
                     // it is the respawn source after a panic.
@@ -544,35 +713,112 @@ impl Fleet {
         Ok(Fleet { shared, handles })
     }
 
+    /// Whether `id` is servable by this fleet: registered in the
+    /// registry, or the default id on a single-model fleet.
+    pub fn has_model(&self, id: &ModelId) -> bool {
+        match &self.shared.registry {
+            Some(reg) => reg.contains(id),
+            None => *id == ModelId::default(),
+        }
+    }
+
+    /// The model a model-less submission resolves to: the registry's
+    /// sole entry, or the default id on a registry-less fleet. `None`
+    /// when the registry hosts zero or several models — the caller must
+    /// address one explicitly.
+    pub fn sole_model(&self) -> Option<ModelId> {
+        match &self.shared.registry {
+            Some(reg) => reg.sole(),
+            None => Some(ModelId::default()),
+        }
+    }
+
+    /// `GET /models` rows: the registry listing, or the synthesized row
+    /// of a registry-less production fleet (empty for service-factory
+    /// fleets, which have no model metadata to list).
+    pub fn models_info(&self) -> Vec<ModelInfo> {
+        match &self.shared.registry {
+            Some(reg) => reg.list(),
+            None => self.shared.static_info.iter().cloned().collect(),
+        }
+    }
+
+    /// The batch key's config half for `id` (registry lookup, or the
+    /// fleet-wide fingerprint on a registry-less fleet).
+    fn config_hash_for(&self, id: &ModelId) -> u64 {
+        match &self.shared.registry {
+            Some(reg) => reg.config_hash(id).unwrap_or(0),
+            None => self.shared.config_hash,
+        }
+    }
+
+    /// The admission deadline applied when a submission does not carry
+    /// one ([`FleetConfig::deadline`]); `None` = no deadline.
+    pub fn default_deadline(&self) -> Option<Duration> {
+        self.shared.cfg.deadline
+    }
+
     /// Submit a forget request under the fleet's default deadline.
     /// Returns immediately; the reply arrives on the receiver.
     pub fn submit(&self, spec: ForgetSpec) -> Receiver<Reply> {
         self.submit_with_deadline(spec, self.shared.cfg.deadline)
     }
 
-    /// Submit with an explicit deadline (`None` = never sheds).
-    ///
-    /// Admission control runs synchronously on the caller's thread: a
-    /// request whose canonical [`SpecKey`] matches a *queued* entry
-    /// coalesces (requests already being executed are not joined — the
-    /// execution started before this request arrived); a full queue
-    /// replies `Backpressure` without enqueueing.
-    ///
-    /// On a durable fleet the `Accepted` record is fsync'd *before* the
-    /// caller gets its slot; if the ledger cannot be written the request
-    /// fails closed (accepting it would make the crash-replay guarantee
-    /// a lie). Refused requests — shutdown, dead fleet, backpressure —
-    /// never reach the ledger. The append itself runs with the dispatch
-    /// lock *released* (the slot is held by a reservation meanwhile), so
-    /// fsync latency stalls at most other admissions, never the workers'
-    /// claim path or stats snapshots.
+    /// Model-less submission: resolves [`Fleet::sole_model`] and fails
+    /// immediately (`Reply::Failed`) when the fleet hosts several
+    /// models — ambiguity is the caller's to resolve, via
+    /// [`Fleet::submit_to`].
     pub fn submit_with_deadline(
         &self,
         spec: ForgetSpec,
         deadline: Option<Duration>,
     ) -> Receiver<Reply> {
-        let key = spec.key();
+        match self.sole_model() {
+            Some(model) => self.submit_to(model, spec, deadline),
+            None => {
+                let (tx, rx) = channel();
+                let _ = tx.send(Reply::Failed(
+                    "fleet hosts multiple models; address one explicitly".to_string(),
+                ));
+                rx
+            }
+        }
+    }
+
+    /// Submit a forget request against a specific model, with an
+    /// explicit deadline (`None` = never sheds).
+    ///
+    /// Admission control runs synchronously on the caller's thread: a
+    /// request whose [`BatchKey`] — (model, config fingerprint,
+    /// canonical [`SpecKey`]) — matches a *queued* entry coalesces
+    /// (requests already being executed are not joined — the execution
+    /// started before this request arrived); a full queue replies
+    /// `Backpressure` without enqueueing; an unknown model fails
+    /// immediately (the HTTP layer turns this case into a 404 before
+    /// submitting).
+    ///
+    /// On a durable fleet the `Accepted` record — carrying the model id
+    /// — is fsync'd *before* the caller gets its slot; if the ledger
+    /// cannot be written the request fails closed (accepting it would
+    /// make the crash-replay guarantee a lie). Refused requests —
+    /// shutdown, dead fleet, backpressure, unknown model — never reach
+    /// the ledger. The append itself runs with the dispatch lock
+    /// *released* (the slot is held by a reservation meanwhile), so
+    /// fsync latency stalls at most other admissions, never the workers'
+    /// claim path or stats snapshots.
+    pub fn submit_to(
+        &self,
+        model: ModelId,
+        spec: ForgetSpec,
+        deadline: Option<Duration>,
+    ) -> Receiver<Reply> {
         let (tx, rx) = channel();
+        if !self.has_model(&model) {
+            let _ = tx.send(Reply::Failed(format!("unknown model {model}")));
+            return rx;
+        }
+        let key =
+            BatchKey { config_hash: self.config_hash_for(&model), model, spec: spec.key() };
         let now = Instant::now();
         let abs_deadline = deadline.map(|d| now + d);
         // Phase 1: admission decision under the dispatch lock — refuse
@@ -645,16 +891,17 @@ impl Fleet {
         rx
     }
 
-    /// Durable-admission helper: append an `Accepted` record when the
-    /// fleet has a ledger. `Ok(None)` on a non-durable fleet; `Err`
-    /// carries the fail-closed reply for a ledger write failure.
+    /// Durable-admission helper: append an `Accepted` record — model
+    /// id, spec, and the model's config fingerprint — when the fleet
+    /// has a ledger. `Ok(None)` on a non-durable fleet; `Err` carries
+    /// the fail-closed reply for a ledger write failure.
     fn log_accepted(
         &self,
-        key: &SpecKey,
+        key: &BatchKey,
         deadline: Option<Duration>,
     ) -> std::result::Result<Option<u64>, Reply> {
         let Some(dur) = &self.shared.dur else { return Ok(None) };
-        match dur.log_accepted(key.spec(), self.shared.config_hash, deadline) {
+        match dur.log_accepted(&key.model, key.spec.spec(), key.config_hash, deadline) {
             Ok(seq) => Ok(Some(seq)),
             Err(e) => Err(Reply::Failed(format!("{e:#}"))),
         }
@@ -722,7 +969,7 @@ impl Drop for Fleet {
 /// when this request cannot be admitted right now, `None` when it may
 /// proceed (coalesce or reserve). A request with a queued coalesce
 /// target is never backpressure-shed — joining needs no slot.
-fn admission_refusal(st: &DispatchState, cfg: &FleetConfig, key: &SpecKey) -> Option<Reply> {
+fn admission_refusal(st: &DispatchState, cfg: &FleetConfig, key: &BatchKey) -> Option<Reply> {
     if st.shutdown {
         return Some(Reply::Failed("fleet is shutting down".to_string()));
     }
@@ -748,8 +995,21 @@ fn snapshot(sh: &Shared) -> FleetStats {
         shed_backpressure: st.shed_backpressure,
         queue_depth: st.queue.len(),
         per_worker: st.per_worker.clone(),
+        per_model: st.per_model.clone(),
         durability: sh.dur.as_ref().map(|d| d.stats()),
     }
+}
+
+/// Find-or-insert the per-model stats row for `id`.
+fn model_stats<'a>(
+    per_model: &'a mut Vec<(ModelId, QueueStats)>,
+    id: &ModelId,
+) -> &'a mut QueueStats {
+    if let Some(i) = per_model.iter().position(|(m, _)| m == id) {
+        return &mut per_model[i].1;
+    }
+    per_model.push((id.clone(), QueueStats::default()));
+    &mut per_model.last_mut().unwrap().1
 }
 
 /// Why a worker's serve loop returned to its supervisor.
@@ -919,7 +1179,11 @@ fn serve_entry<S: UnlearnService>(
         let now = Instant::now();
         if now > dl {
             let missed_by_ms = now.duration_since(dl).as_secs_f64() * 1e3;
-            sh.m.lock().unwrap().per_worker[wid].record_shed();
+            {
+                let mut st = sh.m.lock().unwrap();
+                st.per_worker[wid].record_shed();
+                model_stats(&mut st.per_model, &e.key.model).record_shed();
+            }
             log_completion_unchanged(sh, &e.wal_seqs, Disposition::Expired, false);
             for tx in e.replies {
                 let _ = tx.send(Reply::Expired { missed_by_ms });
@@ -930,7 +1194,8 @@ fn serve_entry<S: UnlearnService>(
     let t0 = Instant::now();
     // Panic isolation: a panicking engine answers its requesters and
     // costs one replica, never the reply channels or the whole fleet.
-    let out = match catch_unwind(AssertUnwindSafe(|| svc.unlearn(e.key.spec()))) {
+    let call = catch_unwind(AssertUnwindSafe(|| svc.unlearn_model(&e.key.model, e.key.spec.spec())));
+    let out = match call {
         Ok(result) => result,
         Err(payload) => {
             let service_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -941,6 +1206,9 @@ fn serve_entry<S: UnlearnService>(
                 let mut st = sh.m.lock().unwrap();
                 st.per_worker[wid].record(&timing, false);
                 st.per_worker[wid].panics += 1;
+                let ms = model_stats(&mut st.per_model, &e.key.model);
+                ms.record(&timing, false);
+                ms.panics += 1;
             }
             // the engine's journal restored the segment pre-images
             // before the panic propagated: rolled_back is truthful
@@ -964,9 +1232,17 @@ fn serve_entry<S: UnlearnService>(
         }
     }
     let timing = Timing { queue_ms, service_ms };
-    sh.m.lock().unwrap().per_worker[wid].record(&timing, out.is_ok());
+    {
+        let mut st = sh.m.lock().unwrap();
+        st.per_worker[wid].record(&timing, out.is_ok());
+        model_stats(&mut st.per_model, &e.key.model).record(&timing, out.is_ok());
+    }
     match out {
         Ok(mut s) => {
+            // the batch key is authoritative for the reply's tenancy
+            // fields, whatever the service stamped
+            s.model = e.key.model.clone();
+            s.config_hash = e.key.config_hash;
             s.timing = timing;
             s.wal_seq = e.wal_seqs.iter().copied().min();
             // Durable ordering: `Completed` records, then (when due) the

@@ -243,6 +243,8 @@ mod tests {
     impl UnlearnService for Echo {
         fn unlearn(&mut self, spec: &ForgetSpec) -> Result<Summary> {
             Ok(Summary {
+                model: crate::coordinator::ModelId::default(),
+                config_hash: 0,
                 spec: spec.clone(),
                 forget_acc: 0.0,
                 retain_acc: 1.0,

@@ -1,22 +1,28 @@
-//! Request routing: the three-endpoint JSON contract over the [`Fleet`].
+//! Request routing: the JSON contract over the [`Fleet`].
 //!
-//! | route           | reply                                             |
-//! |-----------------|---------------------------------------------------|
-//! | `POST /forget`  | the [`Reply`] wire body; status from its code     |
-//! | `GET /stats`    | the fleet's percentile rollup, as JSON            |
-//! | `GET /healthz`  | fleet liveness: 200 `{"ok":true,...}`, 503 degraded |
+//! | route                      | reply                                             |
+//! |----------------------------|---------------------------------------------------|
+//! | `POST /forget`             | the [`Reply`] wire body; status from its code     |
+//! | `POST /models/{id}/forget` | same, addressed to one registered model           |
+//! | `GET /models`              | `{"models":[{id,spec_key,config_hash,precision,warm}]}` |
+//! | `GET /stats`               | the fleet's percentile rollup, as JSON            |
+//! | `GET /healthz`             | fleet liveness: 200 `{"ok":true,...}`, 503 degraded |
 //!
-//! `/forget` bodies are scanned lazily ([`scan::path`]) for the two
-//! fields the admission path needs — `spec` (the CLI grammar string or
-//! the [`ForgetSpec::to_json`] object form) and `deadline_ms` (absent =
-//! fleet default, `0` = no deadline) — every other byte is skipped, not
-//! parsed. Malformed bodies answer 400 with the machine-readable shape
+//! Forget bodies are scanned lazily ([`scan::path`]) for the fields the
+//! admission path needs — `spec` (the CLI grammar string or the
+//! [`ForgetSpec::to_json`] object form), `deadline_ms` (absent = fleet
+//! default, `0` = no deadline), and on the legacy `/forget` route an
+//! optional `model` string (absent = the fleet's sole model; 400 when
+//! several are registered) — every other byte is skipped, not parsed.
+//! Malformed bodies answer 400 with the machine-readable shape
 //! `{"code","error","offset","context"}` so clients can point at the
-//! offending byte.
+//! offending byte; addressing a model the registry does not hold
+//! answers 404 `{"code":"unknown-model",...}`.
 
 use std::time::Duration;
 
 use crate::coordinator::dispatch::{Fleet, Reply};
+use crate::coordinator::registry::{ModelId, ModelInfo};
 use crate::unlearn::ForgetSpec;
 use crate::util::json::{scan, Json, JsonError};
 
@@ -36,7 +42,11 @@ const MAX_DEADLINE_MS: f64 = 365.0 * 24.0 * 3600.0 * 1e3;
 /// Dispatch one parsed request against the fleet.
 pub(super) fn handle(req: &Request, fleet: &Fleet, bounds: Bounds) -> Response {
     match (req.method.as_str(), req.path()) {
-        ("POST", "/forget") => forget(req, fleet, bounds),
+        ("POST", "/forget") => forget(req, fleet, bounds, None),
+        ("GET", "/models") => {
+            let rows = fleet.models_info().iter().map(ModelInfo::to_json).collect();
+            Response::json(200, &Json::obj(vec![("models", Json::Arr(rows))]))
+        }
         ("GET", "/stats") => Response::json(200, &fleet.stats().to_json()),
         ("GET", "/healthz") => {
             // Degraded contract: any dead or respawning worker answers
@@ -55,15 +65,27 @@ pub(super) fn handle(req: &Request, fleet: &Fleet, bounds: Bounds) -> Response {
             )
         }
         (_, "/forget") => method_not_allowed(req, "POST"),
-        (_, "/stats" | "/healthz") => method_not_allowed(req, "GET"),
-        _ => error(404, "not_found", format!("no route `{}`", req.path()), None),
+        (_, "/stats" | "/healthz" | "/models") => method_not_allowed(req, "GET"),
+        (method, path) => {
+            // `/models/{id}/forget`: the model-addressed submission route.
+            match path.strip_prefix("/models/").and_then(|rest| rest.strip_suffix("/forget")) {
+                Some(_) if method != "POST" => method_not_allowed(req, "POST"),
+                Some(id) => match ModelId::new(id) {
+                    Ok(model) => forget(req, fleet, bounds, Some(model)),
+                    Err(e) => error(400, "invalid_model", format!("{e:#}"), None),
+                },
+                None => error(404, "not_found", format!("no route `{path}`"), None),
+            }
+        }
     }
 }
 
-/// `POST /forget`: extract `spec` + `deadline_ms`, admit, and block on
-/// the fleet's reply (the HTTP contract is synchronous: one request, one
-/// final outcome).
-fn forget(req: &Request, fleet: &Fleet, bounds: Bounds) -> Response {
+/// `POST /forget` and `POST /models/{id}/forget`: extract `spec` +
+/// `deadline_ms`, resolve the target model (`route_model` from the
+/// path, or the legacy route's optional `model` body field, or the
+/// fleet's sole model), admit, and block on the fleet's reply (the HTTP
+/// contract is synchronous: one request, one final outcome).
+fn forget(req: &Request, fleet: &Fleet, bounds: Bounds, route_model: Option<ModelId>) -> Response {
     let body = match std::str::from_utf8(&req.body) {
         Ok(b) => b,
         Err(e) => {
@@ -95,6 +117,48 @@ fn forget(req: &Request, fleet: &Fleet, bounds: Bounds) -> Response {
             return error(400, "invalid_spec", format!("{e:#}"), at);
         }
     }
+    let model = match route_model {
+        Some(m) => m,
+        None => match scan::path(body, &["model"]) {
+            Err(e) => return bad_json(e),
+            Ok(Some(raw)) => {
+                let at = Some((raw.offset(), String::new()));
+                let j = match raw.parse() {
+                    Ok(j) => j,
+                    Err(e) => return bad_json(e),
+                };
+                let Some(s) = j.as_str() else {
+                    return error(400, "invalid_model", "`model` must be a string", at);
+                };
+                match ModelId::new(s) {
+                    Ok(m) => m,
+                    Err(e) => return error(400, "invalid_model", format!("{e:#}"), at),
+                }
+            }
+            // a model-less legacy submission only works while the fleet
+            // hosts exactly one model — ambiguity is a client error
+            Ok(None) => match fleet.sole_model() {
+                Some(m) => m,
+                None => {
+                    return error(
+                        400,
+                        "ambiguous_model",
+                        "fleet hosts multiple models; POST /models/{id}/forget \
+                         or set the `model` field",
+                        None,
+                    )
+                }
+            },
+        },
+    };
+    if !fleet.has_model(&model) {
+        return error(
+            404,
+            "unknown-model",
+            format!("model {model} is not registered; GET /models lists what is"),
+            None,
+        );
+    }
     let rx = match scan::path_f64(body, &["deadline_ms"]) {
         Err(e) => return bad_json(e),
         Ok(Some(ms)) if !ms.is_finite() || ms < 0.0 || ms > MAX_DEADLINE_MS => {
@@ -102,9 +166,11 @@ fn forget(req: &Request, fleet: &Fleet, bounds: Bounds) -> Response {
             return error(400, "bad_request", msg, None);
         }
         // explicit 0 = no deadline, overriding any fleet default
-        Ok(Some(ms)) if ms == 0.0 => fleet.submit_with_deadline(spec, None),
-        Ok(Some(ms)) => fleet.submit_with_deadline(spec, Some(Duration::from_secs_f64(ms / 1e3))),
-        Ok(None) => fleet.submit(spec),
+        Ok(Some(ms)) if ms == 0.0 => fleet.submit_to(model, spec, None),
+        Ok(Some(ms)) => {
+            fleet.submit_to(model, spec, Some(Duration::from_secs_f64(ms / 1e3)))
+        }
+        Ok(None) => fleet.submit_to(model, spec, fleet.default_deadline()),
     };
     match rx.recv() {
         Ok(reply) => {
@@ -180,6 +246,8 @@ mod tests {
     impl UnlearnService for Echo {
         fn unlearn(&mut self, spec: &ForgetSpec) -> Result<Summary> {
             Ok(Summary {
+                model: ModelId::default(),
+                config_hash: 0,
                 spec: spec.clone(),
                 forget_acc: 0.02,
                 retain_acc: 0.9,
@@ -394,5 +462,61 @@ mod tests {
         assert_eq!(resp.status, 405);
         assert!(resp.headers.iter().any(|(k, v)| *k == "allow" && v == "POST"));
         assert_eq!(handle(&req("POST", "/stats", ""), &f, None).status, 405);
+        assert_eq!(handle(&req("POST", "/models", ""), &f, None).status, 405);
+        assert_eq!(handle(&req("GET", "/models/x/forget", ""), &f, None).status, 405);
+        // /models/{id} without the /forget leaf is not a route
+        assert_eq!(handle(&req("POST", "/models/x", ""), &f, None).status, 404);
+    }
+
+    #[test]
+    fn model_routes_on_a_single_model_fleet() {
+        let f = fleet();
+        // service-factory fleets have no model metadata to list
+        let resp = handle(&req("GET", "/models", ""), &f, None);
+        assert_eq!(resp.status, 200);
+        assert_eq!(body(&resp).get("models").unwrap().as_arr().unwrap().len(), 0);
+        // ...but still serve the default model under its address
+        let resp =
+            handle(&req("POST", "/models/default/forget", r#"{"spec": "class:2"}"#), &f, None);
+        assert_eq!(resp.status, 200, "{:?}", body(&resp));
+        let j = body(&resp);
+        assert_eq!(j.get("summary").unwrap().get("model").unwrap().as_str(), Some("default"));
+    }
+
+    #[test]
+    fn unknown_model_is_a_machine_readable_404() {
+        let f = fleet();
+        for r in [
+            req("POST", "/models/tenant-b/forget", r#"{"spec": "class:1"}"#),
+            req("POST", "/forget", r#"{"spec": "class:1", "model": "tenant-b"}"#),
+        ] {
+            let resp = handle(&r, &f, None);
+            assert_eq!(resp.status, 404, "{} {}", r.method, r.target);
+            let j = body(&resp);
+            assert_eq!(j.get("code").unwrap().as_str(), Some("unknown-model"));
+            assert!(j.get("error").unwrap().as_str().unwrap().contains("tenant-b"));
+        }
+    }
+
+    #[test]
+    fn invalid_model_ids_are_400() {
+        let f = fleet();
+        // path id with a character outside [A-Za-z0-9._-]
+        let resp = handle(&req("POST", "/models/bad%20id/forget", r#"{"spec":"class:1"}"#), &f, None);
+        assert_eq!(resp.status, 400);
+        assert_eq!(body(&resp).get("code").unwrap().as_str(), Some("invalid_model"));
+        // body model must be a JSON string
+        let resp = handle(&req("POST", "/forget", r#"{"spec":"class:1","model":7}"#), &f, None);
+        assert_eq!(resp.status, 400);
+        assert_eq!(body(&resp).get("code").unwrap().as_str(), Some("invalid_model"));
+    }
+
+    #[test]
+    fn body_model_field_addresses_the_default_model() {
+        let f = fleet();
+        let r = req("POST", "/forget", r#"{"spec": "class:4", "model": "default"}"#);
+        let resp = handle(&r, &f, None);
+        assert_eq!(resp.status, 200, "{:?}", body(&resp));
+        assert_eq!(body(&resp).get("code").unwrap().as_str(), Some("done"));
     }
 }

@@ -19,16 +19,23 @@
 //! * [`UnlearnSession`] (alias [`EdgeServer`]) is the per-worker core:
 //!   one model, one parameter replica, one FIMD/Dampening engine pair,
 //!   one hwsim processor pair, one pluggable
-//!   [`Strategy`](crate::unlearn::Strategy). Compiled modules hold `Rc`
-//!   handles (not `Send`), so replicas are built *inside* their worker
-//!   thread from a `Send` [`WorkerSpec`].
+//!   [`Strategy`](crate::unlearn::Strategy). Compiled modules are
+//!   immutable `Send + Sync` programs behind `Arc`, shared through the
+//!   runtime's executable cache; replicas are still built inside their
+//!   worker thread from a `Send` [`WorkerSpec`] because each owns a
+//!   drifting parameter store.
+//! * [`ModelRegistry`] (see [`registry`]) is the multi-tenant shape:
+//!   `ModelId`-keyed `Arc`-shared compiled models behind one fleet,
+//!   O(1) worker spin-up ([`RegistryWorker`]), per-request copy-on-write
+//!   parameter deltas against frozen masters, warm/cold eviction.
 //! * [`Fleet`] (see [`dispatch`]) owns the shared queue: requests whose
-//!   canonical [`SpecKey`](crate::unlearn::SpecKey) matches a queued
+//!   [`BatchKey`](dispatch::BatchKey) — (model, config fingerprint,
+//!   canonical [`SpecKey`](crate::unlearn::SpecKey)) — matches a queued
 //!   entry coalesce into a single execution with fan-out replies
-//!   (`classes:4,1` and `classes:1,4` are one event), workers claim
-//!   batched passes, a bounded queue sheds excess load with
-//!   [`Reply::Backpressure`], and stale entries are shed against their
-//!   deadline.
+//!   (`classes:4,1` and `classes:1,4` on one model are one event),
+//!   workers claim batched passes that may mix tenants freely, a
+//!   bounded queue sheds excess load with [`Reply::Backpressure`], and
+//!   stale entries are shed against their deadline.
 //! * [`QueueStats`] aggregates per-worker latency (mean/max plus
 //!   p50/p95/p99 histograms for queue and service time) and merges into
 //!   the fleet-wide rollup surfaced by [`Fleet::stats`] and the `serve`
@@ -48,12 +55,16 @@ pub mod checkpoint;
 pub mod dispatch;
 pub mod http;
 pub mod queue;
+pub mod registry;
 pub mod session;
 pub mod wal;
 
-pub use dispatch::{Fleet, FleetConfig, FleetStats, Pacing, Reply, UnlearnService, WorkerSpec};
+pub use dispatch::{
+    BatchKey, Fleet, FleetConfig, FleetStats, Pacing, Reply, UnlearnService, WorkerSpec,
+};
 pub use http::{HttpConfig, HttpServer};
 pub use queue::{LatencyHistogram, QueueStats, Timing};
+pub use registry::{CompiledModel, ModelId, ModelInfo, ModelRegistry, RegistryWorker};
 pub use session::{EdgeServer, UnlearnSession, UnlearnSessionBuilder};
 pub use wal::{Durability, DurabilityConfig, DurabilityStats};
 
@@ -65,6 +76,14 @@ use crate::util::json::Json;
 /// Outcome summary of one served unlearning event.
 #[derive(Debug, Clone)]
 pub struct Summary {
+    /// The model this event ran against. Single-model fleets report the
+    /// default id; registry fleets stamp the addressed tenant.
+    pub model: ModelId,
+    /// FNV-1a fingerprint of the serving
+    /// [`UnlearnConfig`](crate::unlearn::UnlearnConfig) the event
+    /// executed under — the same hash the dispatcher coalesces on and
+    /// the ledger records.
+    pub config_hash: u64,
     /// The canonical request this event executed.
     pub spec: ForgetSpec,
     pub forget_acc: f64,
@@ -97,6 +116,8 @@ impl Summary {
     /// `queue_ms`/`service_ms`.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("model", Json::string(self.model.to_string())),
+            ("config_hash", Json::string(format!("{:016x}", self.config_hash))),
             ("spec", Json::string(self.spec.to_string())),
             ("forget_acc", Json::from(self.forget_acc)),
             ("retain_acc", Json::from(self.retain_acc)),
@@ -139,6 +160,8 @@ mod tests {
 
     fn summary() -> Summary {
         Summary {
+            model: ModelId::default(),
+            config_hash: 0xdead_beef_0042_0007,
             spec: ForgetSpec::Classes(vec![1, 4]),
             forget_acc: 0.05,
             retain_acc: 0.91,
@@ -180,6 +203,9 @@ mod tests {
         assert_eq!(j.get("stop_depth").unwrap().as_i64(), Some(2));
         assert_eq!(j.get("queue_ms").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("service_ms").unwrap().as_f64(), Some(80.0));
+        // tenancy fields: model id + config fingerprint as fixed-width hex
+        assert_eq!(j.get("model").unwrap().as_str(), Some("default"));
+        assert_eq!(j.get("config_hash").unwrap().as_str(), Some("deadbeef00420007"));
     }
 
     #[test]
@@ -214,12 +240,14 @@ mod tests {
             shed_backpressure: 0,
             queue_depth: 0,
             per_worker: vec![q],
+            per_model: vec![],
             durability: None,
         };
         let j = fs.to_json();
         assert_eq!(j.get("workers").unwrap().as_i64(), Some(1));
         assert_eq!(j.get("rollup").unwrap().get("served").unwrap().as_i64(), Some(1));
         assert_eq!(j.get("per_worker").unwrap().as_arr().unwrap().len(), 1);
+        assert!(j.get("per_model").is_some(), "per-model rollup is on the wire");
         // supervision + durability are part of the wire contract
         assert_eq!(j.get("alive").unwrap().as_i64(), Some(1));
         assert!(j.get("rollup").unwrap().get("panics").is_some());

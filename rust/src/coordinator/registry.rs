@@ -1,0 +1,540 @@
+//! Multi-tenant model registry: `ModelId`-addressed, `Arc`-shared
+//! compiled models behind one fleet.
+//!
+//! The registry is the tenancy seam of the serving layer. Each entry
+//! pairs a *cold seed* (meta, frozen master parameters, stored global
+//! importance, training corpus, operating-point config) with an
+//! optional *warm* [`CompiledModel`] — the compiled graph plus
+//! `Arc`-frozen masters that every fleet worker shares. Because
+//! compiled modules are immutable `Send + Sync` programs
+//! (`Arc<Executable>`, see [`runtime`](crate::runtime)), warming a
+//! model compiles it **once per process**, not once per worker:
+//! [`RegistryWorker`]s spin up in O(1) and borrow the shared graph on
+//! first use. The [`ModelRegistry::builds`] counter increments only
+//! when a graph is actually compiled, so tests and CI can pin the
+//! no-per-worker-rebuild guarantee directly.
+//!
+//! Parameter semantics differ from the legacy per-worker replica: a
+//! registry model's master store is **frozen** behind `Arc`. Each
+//! request edits a private [`CowParams`](crate::model::CowParams)
+//! overlay whose segment deltas are discarded after the summary is
+//! taken, so a request's post-unlearn parameters are a pure function of
+//! (worker seed, spec, master) — bitwise identical to a dedicated
+//! single-model run, regardless of how tenants interleave.
+//!
+//! Warm entries are bounded by a warm capacity
+//! ([`ModelRegistry::with_warm_cap`]): warming one model beyond the cap
+//! evicts the least-recently-used other entry back to cold. Eviction
+//! only drops the registry's own `Arc` — workers mid-request keep
+//! serving their pinned graph and pick up the re-warmed one (checked
+//! via `Arc::ptr_eq`) on their next request for that model.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::SharedMeta;
+use crate::coordinator::dispatch::{UnlearnService, WorkerSpec};
+use crate::coordinator::session::{execute_forget, ForgetContext};
+use crate::coordinator::wal::config_fingerprint;
+use crate::coordinator::Summary;
+use crate::data::Dataset;
+use crate::fisher::{FimdEngine, Importance};
+use crate::hwsim::{BaselineProcessor, FicabuProcessor};
+use crate::model::{CowParams, Model, ParamStore};
+use crate::runtime::{meta_fingerprint, Precision, Runtime};
+use crate::unlearn::{DampEngine, Ficabu, ForgetSpec};
+
+/// Longest accepted model id (also the wire-path segment bound).
+pub const MODEL_ID_MAX_LEN: usize = 64;
+
+/// Validated tenant/model identifier: 1–64 chars of
+/// `[A-Za-z0-9._-]`. The default id (`"default"`) is what a
+/// registry-less fleet serves and what the legacy `POST /forget` body
+/// resolves to when the fleet hosts a single model.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelId(String);
+
+impl ModelId {
+    pub fn new(id: impl Into<String>) -> Result<ModelId> {
+        let id = id.into();
+        if id.is_empty() || id.len() > MODEL_ID_MAX_LEN {
+            bail!("model id must be 1..={MODEL_ID_MAX_LEN} chars, got {}", id.len());
+        }
+        if !id.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'.' || b == b'_' || b == b'-') {
+            bail!("model id {id:?} has chars outside [A-Za-z0-9._-]");
+        }
+        Ok(ModelId(id))
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl Default for ModelId {
+    fn default() -> ModelId {
+        ModelId("default".to_string())
+    }
+}
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// One warm model: the compiled graph plus everything a worker needs to
+/// serve it, all shared immutably across the fleet. The master store is
+/// frozen — per-request edits live in a [`CowParams`] overlay.
+pub struct CompiledModel {
+    pub id: ModelId,
+    pub model: Model,
+    /// Frozen master parameters every request's CoW overlay reads from.
+    pub master: Arc<ParamStore>,
+    pub global: Arc<Importance>,
+    pub train: Arc<Dataset>,
+    pub cfg: crate::unlearn::UnlearnConfig,
+    /// [`config_fingerprint`] of `cfg` — the batch key's config half.
+    pub config_hash: u64,
+    pub precision: Precision,
+    pub shared: SharedMeta,
+}
+
+/// Registry listing row (`GET /models`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub id: ModelId,
+    /// Hex of the model topology fingerprint
+    /// ([`meta_fingerprint`]) — the identity compiled modules cache
+    /// under.
+    pub spec_key: String,
+    pub config_hash: u64,
+    pub precision: Precision,
+    /// Whether the compiled graph is currently resident.
+    pub warm: bool,
+}
+
+impl ModelInfo {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("id", Json::string(self.id.to_string())),
+            ("spec_key", Json::string(self.spec_key.clone())),
+            ("config_hash", Json::string(format!("{:016x}", self.config_hash))),
+            ("precision", Json::string(precision_name(self.precision))),
+            ("warm", Json::from(self.warm)),
+        ])
+    }
+}
+
+fn precision_name(p: Precision) -> &'static str {
+    match p {
+        Precision::F32 => "f32",
+        Precision::Int8 => "int8",
+    }
+}
+
+/// Cold half of a registry entry: the `Send` data a [`CompiledModel`]
+/// is built from (the same bag a legacy worker replica travels as).
+struct ModelSeed {
+    spec: WorkerSpec,
+    master: Arc<ParamStore>,
+    global: Arc<Importance>,
+    train: Arc<Dataset>,
+    config_hash: u64,
+    precision: Precision,
+}
+
+struct Slot {
+    seed: ModelSeed,
+    compiled: Option<Arc<CompiledModel>>,
+    /// Registry tick of the last `get` — the LRU eviction order.
+    last_used: u64,
+}
+
+struct Inner {
+    entries: HashMap<ModelId, Slot>,
+    tick: u64,
+}
+
+/// `ModelId`-keyed registry of compiled models, shared by every fleet
+/// worker behind an `Arc`. See the module docs for the warm/cold and
+/// copy-on-write semantics.
+///
+/// All methods take `&self`; the registry is `Send + Sync` and safe to
+/// share across worker threads. Compilation happens under the internal
+/// lock, so a model is compiled exactly once per warm cycle no matter
+/// how many workers race to warm it.
+pub struct ModelRegistry {
+    rt: Runtime,
+    inner: Mutex<Inner>,
+    /// Graph compilations performed (register never compiles; `get` on
+    /// a cold entry does, including re-warms after eviction). The
+    /// shared-build counter CI pins: serving N workers × one model must
+    /// leave this at 1.
+    builds: AtomicU64,
+    warm_cap: usize,
+}
+
+/// Default bound on concurrently-warm models.
+pub const DEFAULT_WARM_CAP: usize = 8;
+
+impl ModelRegistry {
+    /// Registry over the given runtime (the runtime's executable cache
+    /// is what makes cross-model module sharing possible).
+    pub fn new(rt: Runtime) -> ModelRegistry {
+        ModelRegistry {
+            rt,
+            inner: Mutex::new(Inner { entries: HashMap::new(), tick: 0 }),
+            builds: AtomicU64::new(0),
+            warm_cap: DEFAULT_WARM_CAP,
+        }
+    }
+
+    /// Bound the number of concurrently-warm models (>= 1). Warming
+    /// past the cap evicts the least-recently-used other entry.
+    pub fn with_warm_cap(mut self, cap: usize) -> ModelRegistry {
+        self.warm_cap = cap.max(1);
+        self
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Register a model under `id` from the same `Send` bag a legacy
+    /// worker replica is built from. Registration is cold — no
+    /// compilation happens until the first [`ModelRegistry::get`].
+    /// Fails on a duplicate id.
+    pub fn register(&self, id: ModelId, spec: WorkerSpec) -> Result<()> {
+        spec.params.validate(&spec.meta)?;
+        if spec.global.per_seg.len() != spec.meta.num_segments() {
+            bail!(
+                "model {id}: importance covers {} segments, model has {}",
+                spec.global.per_seg.len(),
+                spec.meta.num_segments()
+            );
+        }
+        let mut inner = self.lock();
+        if inner.entries.contains_key(&id) {
+            bail!("model {id} is already registered");
+        }
+        let seed = ModelSeed {
+            master: Arc::new(spec.params.clone()),
+            global: Arc::new(spec.global.clone()),
+            train: Arc::new(spec.train.clone()),
+            config_hash: config_fingerprint(&spec.cfg),
+            precision: spec.precision,
+            spec,
+        };
+        inner.entries.insert(id, Slot { seed, compiled: None, last_used: 0 });
+        Ok(())
+    }
+
+    /// Fetch (warming if cold) the compiled model for `id`. Warm hits
+    /// are an `Arc` clone under the lock; cold entries compile the
+    /// graph here — the only place [`ModelRegistry::builds`] advances —
+    /// and may evict the LRU warm entry beyond the warm cap.
+    pub fn get(&self, id: &ModelId) -> Result<Arc<CompiledModel>> {
+        let mut inner = self.lock();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let slot = inner
+            .entries
+            .get_mut(id)
+            .with_context(|| format!("unknown model {id}"))?;
+        slot.last_used = tick;
+        if let Some(c) = &slot.compiled {
+            return Ok(Arc::clone(c));
+        }
+        let seed = &slot.seed;
+        let model = Model::load(&self.rt, seed.spec.meta.clone())?;
+        self.builds.fetch_add(1, Ordering::SeqCst);
+        let compiled = Arc::new(CompiledModel {
+            id: id.clone(),
+            model,
+            master: Arc::clone(&seed.master),
+            global: Arc::clone(&seed.global),
+            train: Arc::clone(&seed.train),
+            cfg: seed.spec.cfg.clone(),
+            config_hash: seed.config_hash,
+            precision: seed.precision,
+            shared: seed.spec.shared.clone(),
+        });
+        slot.compiled = Some(Arc::clone(&compiled));
+        // Evict the LRU warm entries beyond the cap (never the one just
+        // warmed: it has the newest tick).
+        while inner.entries.values().filter(|s| s.compiled.is_some()).count() > self.warm_cap {
+            let lru = inner
+                .entries
+                .iter()
+                .filter(|(_, s)| s.compiled.is_some())
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k.clone());
+            match lru {
+                Some(k) => inner.entries.get_mut(&k).unwrap().compiled = None,
+                None => break,
+            }
+        }
+        Ok(compiled)
+    }
+
+    /// Demote `id` to cold, dropping the registry's handle on its
+    /// compiled graph. Returns whether it was warm. Workers holding the
+    /// `Arc` keep serving; their next request re-warms.
+    pub fn evict(&self, id: &ModelId) -> bool {
+        let mut inner = self.lock();
+        match inner.entries.get_mut(id) {
+            Some(slot) => slot.compiled.take().is_some(),
+            None => false,
+        }
+    }
+
+    pub fn contains(&self, id: &ModelId) -> bool {
+        self.lock().entries.contains_key(id)
+    }
+
+    /// The sole registered model, when exactly one is (what a
+    /// model-less legacy `POST /forget` resolves to).
+    pub fn sole(&self) -> Option<ModelId> {
+        let inner = self.lock();
+        if inner.entries.len() == 1 {
+            inner.entries.keys().next().cloned()
+        } else {
+            None
+        }
+    }
+
+    /// Config fingerprint of `id`'s operating point, if registered.
+    pub fn config_hash(&self, id: &ModelId) -> Option<u64> {
+        self.lock().entries.get(id).map(|s| s.seed.config_hash)
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Registry listing, sorted by id (`GET /models`).
+    pub fn list(&self) -> Vec<ModelInfo> {
+        let inner = self.lock();
+        let mut rows: Vec<ModelInfo> = inner
+            .entries
+            .iter()
+            .map(|(id, slot)| ModelInfo {
+                id: id.clone(),
+                spec_key: format!("{:016x}", meta_fingerprint(&slot.seed.spec.meta)),
+                config_hash: slot.seed.config_hash,
+                precision: slot.seed.precision,
+                warm: slot.compiled.is_some(),
+            })
+            .collect();
+        rows.sort_by(|a, b| a.id.cmp(&b.id));
+        rows
+    }
+
+    /// Graph compilations so far — the shared-build counter. One model
+    /// served by any number of workers holds this at 1 until an
+    /// eviction forces a re-warm.
+    pub fn builds(&self) -> u64 {
+        self.builds.load(Ordering::SeqCst)
+    }
+
+    /// The runtime whose executable cache backs every compiled model.
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+/// Per-model engine state a [`RegistryWorker`] keeps between requests:
+/// the pinned compiled model plus the (cheap, cache-hitting) engine
+/// pair and hwsim processors. Rebuilt when the registry's entry no
+/// longer matches the pin (`Arc::ptr_eq`), i.e. after evict + re-warm.
+struct ModelEngines {
+    entry: Arc<CompiledModel>,
+    fimd: FimdEngine,
+    damp: DampEngine,
+    strategy: Ficabu,
+    ficabu_hw: FicabuProcessor,
+    baseline_hw: BaselineProcessor,
+}
+
+/// The registry-backed fleet worker: a thin, O(1)-startup service that
+/// borrows shared compiled graphs from a [`ModelRegistry`] and serves
+/// each request against a fresh [`CowParams`] overlay of the model's
+/// frozen master. Construction compiles nothing; engines materialize
+/// per model on first request (module loads hit the shared runtime
+/// cache).
+pub struct RegistryWorker {
+    registry: Arc<ModelRegistry>,
+    /// Forget-batch sampler seed, identical to the legacy replica's
+    /// (`0xedbe ^ (worker_id << 17)`), so a registry run is bitwise
+    /// comparable to a dedicated single-model fleet of the same shape.
+    seed: u64,
+    engines: HashMap<ModelId, ModelEngines>,
+}
+
+impl RegistryWorker {
+    pub fn new(registry: Arc<ModelRegistry>, worker_id: usize) -> RegistryWorker {
+        RegistryWorker {
+            registry,
+            seed: 0xedbe ^ ((worker_id as u64) << 17),
+            engines: HashMap::new(),
+        }
+    }
+
+    fn engines_for(&mut self, id: &ModelId) -> Result<&mut ModelEngines> {
+        let entry = self.registry.get(id)?;
+        let stale = match self.engines.get(id) {
+            Some(e) => !Arc::ptr_eq(&e.entry, &entry),
+            None => true,
+        };
+        if stale {
+            let rt = self.registry.runtime();
+            let fimd = FimdEngine::new(rt, &entry.shared)?;
+            let damp = DampEngine::new(rt, &entry.shared)?;
+            let strategy = Ficabu::from_config(entry.cfg.clone());
+            let tile = entry.model.meta.tile;
+            let ficabu_hw = FicabuProcessor::new(tile, entry.precision);
+            let baseline_hw = BaselineProcessor::new(tile, entry.precision);
+            self.engines.insert(
+                id.clone(),
+                ModelEngines { entry, fimd, damp, strategy, ficabu_hw, baseline_hw },
+            );
+        }
+        Ok(self.engines.get_mut(id).expect("just inserted"))
+    }
+}
+
+impl UnlearnService for RegistryWorker {
+    /// Model-less entry point: resolves the registry's sole model (the
+    /// dispatcher always calls [`UnlearnService::unlearn_model`]).
+    fn unlearn(&mut self, spec: &ForgetSpec) -> Result<Summary> {
+        let id = self
+            .registry
+            .sole()
+            .context("fleet hosts multiple models; address one with unlearn_model")?;
+        self.unlearn_model(&id, spec)
+    }
+
+    fn unlearn_model(&mut self, model: &ModelId, spec: &ForgetSpec) -> Result<Summary> {
+        let seed = self.seed;
+        let eng = self.engines_for(model)?;
+        // Fresh overlay per request: reads fall through to the frozen
+        // master, writes stay private, the delta dies with the summary.
+        let mut params = CowParams::new(Arc::clone(&eng.entry.master));
+        let ctx = ForgetContext {
+            model: &eng.entry.model,
+            global: &eng.entry.global,
+            fimd: &eng.fimd,
+            damp: &eng.damp,
+            train: &eng.entry.train,
+            strategy: &eng.strategy,
+            ficabu_hw: &eng.ficabu_hw,
+            baseline_hw: &eng.baseline_hw,
+            seed,
+        };
+        let mut s = execute_forget(&ctx, &mut params, spec)?;
+        s.model = model.clone();
+        s.config_hash = eng.entry.config_hash;
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelMeta;
+    use crate::data::{cifar20_like, DatasetCfg};
+    use crate::unlearn::UnlearnConfig;
+
+    fn spec_for(seed: u64) -> WorkerSpec {
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
+        let params = ParamStore::init(&meta, seed);
+        let mut global = Importance::zeros_like(&meta);
+        global.floor(1e-6);
+        let cfg = DatasetCfg { train_per_class: 4, test_per_class: 1, ..DatasetCfg::cifar20() };
+        let (train, _) = cifar20_like(&cfg);
+        WorkerSpec {
+            shared: SharedMeta::builtin(),
+            params,
+            global,
+            train,
+            cfg: UnlearnConfig::default(),
+            precision: Precision::F32,
+            meta,
+        }
+    }
+
+    #[test]
+    fn model_id_validation() {
+        assert!(ModelId::new("tenant-7.v2_a").is_ok());
+        assert!(ModelId::new("").is_err());
+        assert!(ModelId::new("a/b").is_err());
+        assert!(ModelId::new("x".repeat(MODEL_ID_MAX_LEN + 1)).is_err());
+        assert_eq!(ModelId::default().as_str(), "default");
+    }
+
+    #[test]
+    fn register_is_cold_and_get_compiles_once() {
+        let reg = ModelRegistry::new(Runtime::cpu().unwrap());
+        let id = ModelId::new("m1").unwrap();
+        reg.register(id.clone(), spec_for(11)).unwrap();
+        assert_eq!(reg.builds(), 0, "registration must not compile");
+        assert!(!reg.list()[0].warm);
+        let a = reg.get(&id).unwrap();
+        let b = reg.get(&id).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "warm hits share one compiled model");
+        assert_eq!(reg.builds(), 1, "one build no matter how many gets");
+        assert!(reg.list()[0].warm);
+        assert!(reg.register(id.clone(), spec_for(11)).is_err(), "duplicate id");
+        assert!(reg.get(&ModelId::new("nope").unwrap()).is_err());
+    }
+
+    #[test]
+    fn evict_rewarns_with_a_fresh_arc_and_counts_the_build() {
+        let reg = ModelRegistry::new(Runtime::cpu().unwrap());
+        let id = ModelId::new("m1").unwrap();
+        reg.register(id.clone(), spec_for(13)).unwrap();
+        let a = reg.get(&id).unwrap();
+        assert!(reg.evict(&id));
+        assert!(!reg.evict(&id), "already cold");
+        assert!(!reg.list()[0].warm);
+        let b = reg.get(&id).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "re-warm builds a fresh entry");
+        assert_eq!(reg.builds(), 2);
+        // the evicted Arc stays serviceable for a pinned worker
+        assert_eq!(a.model.meta.name, b.model.meta.name);
+    }
+
+    #[test]
+    fn warm_cap_evicts_lru() {
+        let reg = ModelRegistry::new(Runtime::cpu().unwrap()).with_warm_cap(1);
+        let m1 = ModelId::new("m1").unwrap();
+        let m2 = ModelId::new("m2").unwrap();
+        reg.register(m1.clone(), spec_for(1)).unwrap();
+        reg.register(m2.clone(), spec_for(2)).unwrap();
+        reg.get(&m1).unwrap();
+        reg.get(&m2).unwrap();
+        let warm: Vec<bool> = reg.list().iter().map(|i| i.warm).collect();
+        assert_eq!(warm, vec![false, true], "warming m2 evicted LRU m1");
+    }
+
+    #[test]
+    fn sole_resolves_only_single_entry_registries() {
+        let reg = ModelRegistry::new(Runtime::cpu().unwrap());
+        assert_eq!(reg.sole(), None);
+        let m1 = ModelId::new("m1").unwrap();
+        reg.register(m1.clone(), spec_for(1)).unwrap();
+        assert_eq!(reg.sole(), Some(m1));
+        reg.register(ModelId::new("m2").unwrap(), spec_for(2)).unwrap();
+        assert_eq!(reg.sole(), None);
+    }
+}

@@ -54,13 +54,15 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::SharedMeta;
 use crate::coordinator::dispatch::WorkerSpec;
+use crate::coordinator::registry::ModelId;
+use crate::coordinator::wal::config_fingerprint;
 use crate::coordinator::{Summary, Timing};
 use crate::data::Dataset;
 use crate::fisher::{FimdEngine, Importance};
 use crate::hwsim::{BaselineProcessor, FicabuProcessor};
 use crate::metrics;
 use crate::model::macs::ssd_ledger;
-use crate::model::{Model, ParamStore};
+use crate::model::{Model, ParamAccess, ParamStore};
 use crate::runtime::{Precision, Runtime};
 use crate::unlearn::{
     run_strategy, DampEngine, Ficabu, ForgetSpec, Strategy, UnlearnConfig, UnlearnReport,
@@ -211,9 +213,12 @@ impl UnlearnSession {
     }
 
     /// Build a replica from a `Send` spec — called inside the worker
-    /// thread, because the compiled modules it creates are not `Send`.
-    /// Replicas are re-entrant by construction: every engine buffer and
-    /// counter is owned per instance, nothing is shared across workers.
+    /// thread. Compiled modules are immutable `Send + Sync` programs
+    /// nowadays (the registry path shares one graph across workers);
+    /// the legacy replica still clones its *parameter store* per worker
+    /// because it edits parameters in place. Replicas are re-entrant by
+    /// construction: every engine buffer and counter is owned per
+    /// instance, nothing is shared across workers.
     pub fn from_spec(spec: &WorkerSpec, worker_id: usize) -> Result<UnlearnSession> {
         let rt = Runtime::from_env()?;
         let model = Model::load(&rt, spec.meta.clone())?;
@@ -242,8 +247,9 @@ impl UnlearnSession {
         self.strategy.as_ref()
     }
 
-    /// The strategy's parameter bag (the fleet's batch-compatibility
-    /// contract).
+    /// The strategy's serializable parameter bag. Its fingerprint
+    /// ([`config_fingerprint`]) is the `config_hash` stamped on every
+    /// [`Summary`] and used in the fleet's batch key.
     pub fn config(&self) -> &UnlearnConfig {
         self.strategy.config()
     }
@@ -252,63 +258,20 @@ impl UnlearnSession {
     /// parameter store and report quality + simulated hardware cost.
     /// `Summary::timing` is zeroed here; the dispatcher fills it.
     pub fn forget(&mut self, spec: &ForgetSpec) -> Result<Summary> {
-        let meta = &self.model.meta;
-        let spec = spec.canonical();
-        // bounds vs the *model head* — pool() below only checks the
-        // dataset's own class count, which may exceed the head's
-        spec.validate(meta.num_classes, self.train.len())?;
-        let pool = spec.pool(&self.train)?;
-        // Per-request sampler: deterministic in (seed, spec) — required
-        // for durable replay to reproduce the pre-crash edit bitwise.
-        let mut rng = Pcg32::seeded(self.seed ^ spec.key().hash64());
-        let (x, labels) = self.train.batch_from_pool(&pool, meta.batch, &mut rng)?;
-        let report: UnlearnReport = run_strategy(
-            &self.model,
-            &mut self.params,
-            &x,
-            &labels,
-            &self.global,
-            &self.fimd,
-            &self.damp,
-            self.strategy.as_ref(),
-        )?;
-
-        // post-edit quality readout on a subsample (edge-budget sized);
-        // the retain split is the complement of the pool computed above
-        let retain_idx: Vec<usize> =
-            ForgetSpec::retain_of(&pool, self.train.len()).into_iter().step_by(4).collect();
-        let forget_acc = metrics::eval_accuracy(&self.model, &self.params, &self.train, &pool)?;
-        let retain_acc =
-            metrics::eval_accuracy(&self.model, &self.params, &self.train, &retain_idx)?;
-
-        // hardware cost: this run on FiCABU vs the SSD ledger on baseline
-        // (same executed precision, so the f32-gradient lane penalty and
-        // byte widths apply to both sides of the comparison)
-        let fic = self.ficabu_hw.cost(&report);
-        let ssd_ref_report = UnlearnReport {
-            ledger: ssd_ledger(meta, meta.batch),
-            fimd_elems: meta.total_params() as u64 * (meta.batch / meta.microbatch) as u64,
-            damp_elems: meta.total_params() as u64,
-            act_cache_bytes: report.act_cache_bytes,
-            precision: report.precision,
-            ..Default::default()
+        let ctx = ForgetContext {
+            model: &self.model,
+            global: &self.global,
+            fimd: &self.fimd,
+            damp: &self.damp,
+            train: &self.train,
+            strategy: self.strategy.as_ref(),
+            ficabu_hw: &self.ficabu_hw,
+            baseline_hw: &self.baseline_hw,
+            seed: self.seed,
         };
-        let ssd = self.baseline_hw.cost(&ssd_ref_report);
-
-        Ok(Summary {
-            spec,
-            forget_acc,
-            retain_acc,
-            stop_depth: report.stop_depth,
-            macs_vs_ssd_pct: 100.0 * report.ledger.editing_total() as f64
-                / ssd_ref_report.ledger.editing_total() as f64,
-            sim_energy_mj: fic.energy_mj,
-            sim_energy_vs_ssd_pct: 100.0 * fic.energy_mj / ssd.energy_mj,
-            sim_ms: fic.seconds * 1e3,
-            rolled_back: report.rolled_back,
-            timing: Timing::default(),
-            wal_seq: None,
-        })
+        let mut s = execute_forget(&ctx, &mut self.params, spec)?;
+        s.config_hash = config_fingerprint(self.strategy.config());
+        Ok(s)
     }
 
     /// Serve requests from an iterator, sequentially, on the caller's
@@ -332,4 +295,92 @@ impl UnlearnSession {
             })
             .collect()
     }
+}
+
+/// Borrowed view of everything one forget execution needs *besides* the
+/// parameters being edited. Both serving cores build one per request:
+/// [`UnlearnSession`] over its owned drifting [`ParamStore`], and
+/// [`RegistryWorker`](crate::coordinator::registry::RegistryWorker)
+/// over a per-request [`CowParams`](crate::model::CowParams) overlay of
+/// a frozen `Arc` master.
+pub(crate) struct ForgetContext<'a> {
+    pub model: &'a Model,
+    pub global: &'a Importance,
+    pub fimd: &'a FimdEngine,
+    pub damp: &'a DampEngine,
+    pub train: &'a Dataset,
+    pub strategy: &'a dyn Strategy,
+    pub ficabu_hw: &'a FicabuProcessor,
+    pub baseline_hw: &'a BaselineProcessor,
+    pub seed: u64,
+}
+
+/// One unlearning event against `params` (owned store or CoW overlay —
+/// any [`ParamAccess`]): sample the forget batch, run the strategy,
+/// read out quality, and cost the run on the hwsim pair. The returned
+/// [`Summary`] carries the default model id and a zero `config_hash`;
+/// callers stamp their own tenancy fields.
+pub(crate) fn execute_forget(
+    ctx: &ForgetContext<'_>,
+    params: &mut dyn ParamAccess,
+    spec: &ForgetSpec,
+) -> Result<Summary> {
+    let meta = &ctx.model.meta;
+    let spec = spec.canonical();
+    // bounds vs the *model head* — pool() below only checks the
+    // dataset's own class count, which may exceed the head's
+    spec.validate(meta.num_classes, ctx.train.len())?;
+    let pool = spec.pool(ctx.train)?;
+    // Per-request sampler: deterministic in (seed, spec) — required
+    // for durable replay to reproduce the pre-crash edit bitwise.
+    let mut rng = Pcg32::seeded(ctx.seed ^ spec.key().hash64());
+    let (x, labels) = ctx.train.batch_from_pool(&pool, meta.batch, &mut rng)?;
+    let report: UnlearnReport = run_strategy(
+        ctx.model,
+        params,
+        &x,
+        &labels,
+        ctx.global,
+        ctx.fimd,
+        ctx.damp,
+        ctx.strategy,
+    )?;
+
+    // post-edit quality readout on a subsample (edge-budget sized);
+    // the retain split is the complement of the pool computed above
+    let retain_idx: Vec<usize> =
+        ForgetSpec::retain_of(&pool, ctx.train.len()).into_iter().step_by(4).collect();
+    let forget_acc = metrics::eval_accuracy(ctx.model, &*params, ctx.train, &pool)?;
+    let retain_acc = metrics::eval_accuracy(ctx.model, &*params, ctx.train, &retain_idx)?;
+
+    // hardware cost: this run on FiCABU vs the SSD ledger on baseline
+    // (same executed precision, so the f32-gradient lane penalty and
+    // byte widths apply to both sides of the comparison)
+    let fic = ctx.ficabu_hw.cost(&report);
+    let ssd_ref_report = UnlearnReport {
+        ledger: ssd_ledger(meta, meta.batch),
+        fimd_elems: meta.total_params() as u64 * (meta.batch / meta.microbatch) as u64,
+        damp_elems: meta.total_params() as u64,
+        act_cache_bytes: report.act_cache_bytes,
+        precision: report.precision,
+        ..Default::default()
+    };
+    let ssd = ctx.baseline_hw.cost(&ssd_ref_report);
+
+    Ok(Summary {
+        spec,
+        model: ModelId::default(),
+        config_hash: 0,
+        forget_acc,
+        retain_acc,
+        stop_depth: report.stop_depth,
+        macs_vs_ssd_pct: 100.0 * report.ledger.editing_total() as f64
+            / ssd_ref_report.ledger.editing_total() as f64,
+        sim_energy_mj: fic.energy_mj,
+        sim_energy_vs_ssd_pct: 100.0 * fic.energy_mj / ssd.energy_mj,
+        sim_ms: fic.seconds * 1e3,
+        rolled_back: report.rolled_back,
+        timing: Timing::default(),
+        wal_seq: None,
+    })
 }

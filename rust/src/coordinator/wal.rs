@@ -16,15 +16,21 @@
 //! One file per ledger (`wal.log` inside the `--durable` directory):
 //!
 //! ```text
-//! header:  "FICABUW1" | generation u64 LE | crc32(generation bytes) u32 LE
+//! header:  "FICABUW2" | generation u64 LE | crc32(generation bytes) u32 LE
 //! record:  len u32 LE | crc32(payload) u32 LE | payload (len bytes)
 //!
 //! payload (Accepted):  0x01 | seq u64 | config_hash u64 |
 //!                      deadline_ms f64 (NaN = none) |
+//!                      model_len u32 | model id bytes |
 //!                      spec_len u32 | canonical spec string bytes
 //! payload (Completed): 0x02 | seq u64 | disposition u8 | rolled_back u8 |
 //!                      forget_acc f64 | retain_acc f64
 //! ```
+//!
+//! `FICABUW2` added the model id to `Accepted` records (multi-tenant
+//! registry serving). A `FICABUW1` ledger predates model-addressed
+//! records, so its entries cannot be routed: [`read_ledger`] refuses it
+//! loudly instead of silently treating it as lost.
 //!
 //! All integers are little-endian. Every append is one
 //! `write_all` + `fsync` (`File::sync_data`), in admission order.
@@ -65,11 +71,11 @@
 //! (its edits are not in the checkpoint and were lost with the
 //! process). Entries that completed as `failed` or `expired` changed
 //! no parameters (the engine is transactional) and were answered, so
-//! they are not replayed. Replay is idempotent per
-//! canonical [`SpecKey`](crate::unlearn::SpecKey): duplicates collapse
-//! to one entry, and the forget batch of a request is a pure function
-//! of (worker seed, spec), so replaying an event reproduces the same
-//! edit. Recovery then *rewrites* the ledger atomically (tempfile +
+//! they are not replayed. Replay is idempotent per (model id, canonical
+//! [`SpecKey`](crate::unlearn::SpecKey)): duplicates collapse to one
+//! entry — two tenants forgetting the same class stay distinct — and
+//! the forget batch of a request is a pure function of (worker seed,
+//! spec), so replaying an event reproduces the same edit. Recovery then *rewrites* the ledger atomically (tempfile +
 //! fsync + rename) with a bumped generation containing one fresh
 //! `Accepted` record per replayed entry — so a second crash before the
 //! replays complete recovers them again.
@@ -89,6 +95,7 @@ use std::time::Duration;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::checkpoint;
+use crate::coordinator::registry::ModelId;
 use crate::model::ParamStore;
 use crate::testkit::faults;
 use crate::unlearn::{ForgetSpec, UnlearnConfig};
@@ -97,7 +104,10 @@ use crate::util::json::Json;
 /// Ledger file name inside the durable directory.
 pub const LEDGER_FILE: &str = "wal.log";
 
-const LEDGER_MAGIC: &[u8; 8] = b"FICABUW1";
+const LEDGER_MAGIC: &[u8; 8] = b"FICABUW2";
+/// Pre-registry magic: `Accepted` records carried no model id. Refused
+/// loudly — see the module docs.
+const LEDGER_MAGIC_V1: &[u8; 8] = b"FICABUW1";
 const HEADER_LEN: u64 = 8 + 8 + 4;
 /// Upper bound on one record payload — anything larger is treated as
 /// corruption (the largest legitimate payload is a sample-level spec).
@@ -168,10 +178,15 @@ impl Disposition {
 pub enum Record {
     Accepted {
         seq: u64,
+        /// Which registered model the request addresses (the default id
+        /// for a registry-less fleet). Recovery routes the replay
+        /// through the registry, so a ledger referencing an
+        /// unregistered model fails startup loudly.
+        model: ModelId,
         /// Canonical request (the coalescing key's spec).
         spec: ForgetSpec,
-        /// Fingerprint of the fleet's [`UnlearnConfig`] at admission —
-        /// an audit field; recovery does not interpret it.
+        /// Fingerprint of the addressed model's [`UnlearnConfig`] at
+        /// admission — an audit field; recovery does not interpret it.
         config_hash: u64,
         /// Admission deadline in ms (`None` = no deadline). Replayed
         /// entries are re-admitted without one: the original deadline
@@ -199,11 +214,14 @@ impl Record {
     fn encode(&self) -> Vec<u8> {
         let mut b = Vec::new();
         match self {
-            Record::Accepted { seq, spec, config_hash, deadline_ms } => {
+            Record::Accepted { seq, model, spec, config_hash, deadline_ms } => {
                 b.push(1u8);
                 b.extend_from_slice(&seq.to_le_bytes());
                 b.extend_from_slice(&config_hash.to_le_bytes());
                 b.extend_from_slice(&deadline_ms.unwrap_or(f64::NAN).to_le_bytes());
+                let m = model.as_str();
+                b.extend_from_slice(&(m.len() as u32).to_le_bytes());
+                b.extend_from_slice(m.as_bytes());
                 let s = spec.to_string();
                 b.extend_from_slice(&(s.len() as u32).to_le_bytes());
                 b.extend_from_slice(s.as_bytes());
@@ -228,11 +246,15 @@ impl Record {
                 let seq = read_u64(payload, &mut pos)?;
                 let config_hash = read_u64(payload, &mut pos)?;
                 let ms = read_f64(payload, &mut pos)?;
+                let m = read_u32(payload, &mut pos)? as usize;
+                let raw = take(payload, &mut pos, m)?;
+                let model = std::str::from_utf8(raw).context("model id is not utf-8")?;
                 let n = read_u32(payload, &mut pos)? as usize;
                 let raw = take(payload, &mut pos, n)?;
                 let text = std::str::from_utf8(raw).context("spec is not utf-8")?;
                 Record::Accepted {
                     seq,
+                    model: ModelId::new(model)?,
                     spec: ForgetSpec::parse(text)?,
                     config_hash,
                     deadline_ms: if ms.is_nan() { None } else { Some(ms) },
@@ -295,6 +317,13 @@ pub struct LedgerScan {
 pub fn read_ledger(path: &Path) -> Result<LedgerScan> {
     let bytes =
         std::fs::read(path).with_context(|| format!("reading ledger {}", path.display()))?;
+    if bytes.len() >= 8 && &bytes[..8] == LEDGER_MAGIC_V1 {
+        bail!(
+            "ledger {} is FICABUW1 (pre-registry): its records carry no model id and \
+             cannot be routed; migrate or remove it before serving",
+            path.display()
+        );
+    }
     let header_ok = bytes.len() >= HEADER_LEN as usize
         && &bytes[..8] == LEDGER_MAGIC
         && crc32(&bytes[8..16]) == u32::from_le_bytes(bytes[16..20].try_into().unwrap());
@@ -458,6 +487,7 @@ impl Wal {
     /// record is on disk (fsync'd) when this returns.
     pub fn append_accepted(
         &self,
+        model: &ModelId,
         spec: &ForgetSpec,
         config_hash: u64,
         deadline: Option<Duration>,
@@ -466,6 +496,7 @@ impl Wal {
         let seq = inner.next_seq;
         let rec = Record::Accepted {
             seq,
+            model: model.clone(),
             spec: spec.canonical(),
             config_hash,
             deadline_ms: deadline.map(|d| d.as_secs_f64() * 1e3),
@@ -548,8 +579,10 @@ pub struct Recovered {
     /// — the fleet's replicas must start from it.
     pub params: Option<ParamStore>,
     /// Entries to re-enqueue, in ledger order: (fresh ledger seq,
-    /// canonical spec). Their `Accepted` records are already durable.
-    pub replay: Vec<(u64, ForgetSpec)>,
+    /// model id, canonical spec). Their `Accepted` records are already
+    /// durable. The dispatcher validates every model id against its
+    /// registry before seeding the queue — an unknown id fails startup.
+    pub replay: Vec<(u64, ModelId, ForgetSpec)>,
 }
 
 /// Outcome of [`Durability::log_completed`].
@@ -617,11 +650,11 @@ impl Durability {
                 completed.insert(*seq, *disposition);
             }
         }
-        let mut seen_keys: HashSet<u64> = HashSet::new();
+        let mut seen_keys: HashSet<(ModelId, u64)> = HashSet::new();
         let mut fresh: Vec<Record> = Vec::new();
-        let mut replay: Vec<(u64, ForgetSpec)> = Vec::new();
+        let mut replay: Vec<(u64, ModelId, ForgetSpec)> = Vec::new();
         for rec in &scan.records {
-            let Record::Accepted { seq, spec, config_hash, .. } = rec else { continue };
+            let Record::Accepted { seq, model, spec, config_hash, .. } = rec else { continue };
             let replayable = match completed.get(seq) {
                 None => true,
                 // A `Done` seq is in the checkpoint iff it is inside
@@ -634,17 +667,20 @@ impl Durability {
                 continue;
             }
             faults::hit("replay")?;
-            if !seen_keys.insert(spec.key().hash64()) {
-                continue; // idempotent per canonical SpecKey
+            // idempotent per (model, canonical SpecKey): two tenants
+            // forgetting the same class are distinct replays
+            if !seen_keys.insert((model.clone(), spec.key().hash64())) {
+                continue;
             }
             let new_seq = fresh.len() as u64 + 1;
             fresh.push(Record::Accepted {
                 seq: new_seq,
+                model: model.clone(),
                 spec: spec.clone(),
                 config_hash: *config_hash,
                 deadline_ms: None,
             });
-            replay.push((new_seq, spec.canonical()));
+            replay.push((new_seq, model.clone(), spec.canonical()));
         }
 
         let generation = scan.generation.max(ckpt_gen) + 1;
@@ -670,11 +706,12 @@ impl Durability {
     /// ledger record.
     pub fn log_accepted(
         &self,
+        model: &ModelId,
         spec: &ForgetSpec,
         config_hash: u64,
         deadline: Option<Duration>,
     ) -> Result<u64> {
-        self.wal.append_accepted(spec, config_hash, deadline).context("durable admission")
+        self.wal.append_accepted(model, spec, config_hash, deadline).context("durable admission")
     }
 
     /// Record completion of one queue entry (every coalesced seq gets
@@ -776,12 +813,14 @@ mod tests {
         let recs = [
             Record::Accepted {
                 seq: 7,
+                model: ModelId::default(),
                 spec: ForgetSpec::Classes(vec![1, 4]),
                 config_hash: 0xdead_beef,
                 deadline_ms: Some(250.0),
             },
             Record::Accepted {
                 seq: 8,
+                model: ModelId::new("tenant-b.v2").unwrap(),
                 spec: ForgetSpec::Samples(vec![0, 9, 44]),
                 config_hash: 1,
                 deadline_ms: None,
@@ -814,9 +853,15 @@ mod tests {
         let (wal, recs) = Wal::open_append(&path).unwrap();
         assert!(recs.is_empty());
         assert_eq!(wal.generation(), 3);
-        let s1 = wal.append_accepted(&ForgetSpec::Class(2), 11, None).unwrap();
+        let m = ModelId::default();
+        let s1 = wal.append_accepted(&m, &ForgetSpec::Class(2), 11, None).unwrap();
         let s2 = wal
-            .append_accepted(&ForgetSpec::Classes(vec![4, 1]), 11, Some(Duration::from_millis(9)))
+            .append_accepted(
+                &m,
+                &ForgetSpec::Classes(vec![4, 1]),
+                11,
+                Some(Duration::from_millis(9)),
+            )
             .unwrap();
         wal.append_completed(s1, Disposition::Done, false, 0.04, 0.9).unwrap();
         assert_eq!((s1, s2), (1, 2));
@@ -831,7 +876,7 @@ mod tests {
             Record::Accepted { seq: 2, spec: ForgetSpec::Classes(v), .. } if v == &[1, 4]
         ));
         // numbering continues after the highest valid record
-        assert_eq!(wal.append_accepted(&ForgetSpec::Class(0), 0, None).unwrap(), 3);
+        assert_eq!(wal.append_accepted(&m, &ForgetSpec::Class(0), 0, None).unwrap(), 3);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -841,8 +886,9 @@ mod tests {
         let path = dir.join(LEDGER_FILE);
         write_replacing(&path, 1, &[]).unwrap();
         let (wal, _) = Wal::open_append(&path).unwrap();
-        wal.append_accepted(&ForgetSpec::Class(1), 0, None).unwrap();
-        wal.append_accepted(&ForgetSpec::Class(2), 0, None).unwrap();
+        let m = ModelId::default();
+        wal.append_accepted(&m, &ForgetSpec::Class(1), 0, None).unwrap();
+        wal.append_accepted(&m, &ForgetSpec::Class(2), 0, None).unwrap();
         drop(wal);
         let whole = std::fs::read(&path).unwrap();
 
@@ -887,15 +933,16 @@ mod tests {
         let cfg = DurabilityConfig { dir: dir.clone(), checkpoint_every: 1 };
         // Ledger: seq1 done, seq2 failed, seq3 done, seq4 accepted-only,
         // seq5 accepted-only duplicate of seq4's canonical key.
+        let m = ModelId::default();
         let recs = vec![
-            Record::Accepted { seq: 1, spec: ForgetSpec::Class(1), config_hash: 9, deadline_ms: None },
+            Record::Accepted { seq: 1, model: m.clone(), spec: ForgetSpec::Class(1), config_hash: 9, deadline_ms: None },
             Record::Completed { seq: 1, disposition: Disposition::Done, rolled_back: false, forget_acc: 0.1, retain_acc: 0.9 },
-            Record::Accepted { seq: 2, spec: ForgetSpec::Class(2), config_hash: 9, deadline_ms: Some(5.0) },
+            Record::Accepted { seq: 2, model: m.clone(), spec: ForgetSpec::Class(2), config_hash: 9, deadline_ms: Some(5.0) },
             Record::Completed { seq: 2, disposition: Disposition::Failed, rolled_back: true, forget_acc: -1.0, retain_acc: -1.0 },
-            Record::Accepted { seq: 3, spec: ForgetSpec::Class(3), config_hash: 9, deadline_ms: None },
+            Record::Accepted { seq: 3, model: m.clone(), spec: ForgetSpec::Class(3), config_hash: 9, deadline_ms: None },
             Record::Completed { seq: 3, disposition: Disposition::Done, rolled_back: false, forget_acc: 0.1, retain_acc: 0.9 },
-            Record::Accepted { seq: 4, spec: ForgetSpec::Classes(vec![5, 6]), config_hash: 9, deadline_ms: None },
-            Record::Accepted { seq: 5, spec: ForgetSpec::Classes(vec![6, 5, 5]), config_hash: 9, deadline_ms: None },
+            Record::Accepted { seq: 4, model: m.clone(), spec: ForgetSpec::Classes(vec![5, 6]), config_hash: 9, deadline_ms: None },
+            Record::Accepted { seq: 5, model: m.clone(), spec: ForgetSpec::Classes(vec![6, 5, 5]), config_hash: 9, deadline_ms: None },
         ];
         write_replacing(&dir.join(LEDGER_FILE), 4, &recs).unwrap();
         // Checkpoint of generation 4 covering seq 1: seq 3's edits are
@@ -905,12 +952,13 @@ mod tests {
         checkpoint::write(&dir, &store, 4, 1, &[]).unwrap();
 
         let rec = Durability::open_or_recover(&cfg).unwrap();
-        let specs: Vec<&ForgetSpec> = rec.replay.iter().map(|(_, s)| s).collect();
+        let specs: Vec<&ForgetSpec> = rec.replay.iter().map(|(_, _, s)| s).collect();
         assert_eq!(
             specs,
             [&ForgetSpec::Class(3), &ForgetSpec::Classes(vec![5, 6])],
             "replay = post-checkpoint done + accepted-without-completed, deduped by key"
         );
+        assert!(rec.replay.iter().all(|(_, id, _)| *id == m), "model ids survive replay");
         assert_eq!(rec.replay[0].0, 1, "fresh ledger renumbers from 1");
         assert!(rec.params.is_some());
         let st = rec.durability.stats();
@@ -928,16 +976,17 @@ mod tests {
     fn checkpoint_scope_tracks_outstanding_accepted_seqs() {
         let dir = tmpdir("scope");
         let path = dir.join(LEDGER_FILE);
+        let m = ModelId::default();
         let recs = vec![
-            Record::Accepted { seq: 1, spec: ForgetSpec::Class(1), config_hash: 0, deadline_ms: None },
-            Record::Accepted { seq: 2, spec: ForgetSpec::Class(2), config_hash: 0, deadline_ms: None },
+            Record::Accepted { seq: 1, model: m.clone(), spec: ForgetSpec::Class(1), config_hash: 0, deadline_ms: None },
+            Record::Accepted { seq: 2, model: m.clone(), spec: ForgetSpec::Class(2), config_hash: 0, deadline_ms: None },
             Record::Completed { seq: 1, disposition: Disposition::Done, rolled_back: false, forget_acc: 0.1, retain_acc: 0.9 },
         ];
         write_replacing(&path, 1, &recs).unwrap();
         // open_append seeds the outstanding set from the scanned records
         let (wal, _) = Wal::open_append(&path).unwrap();
         assert_eq!(wal.checkpoint_scope(), (2, vec![2]));
-        let s3 = wal.append_accepted(&ForgetSpec::Class(3), 0, None).unwrap();
+        let s3 = wal.append_accepted(&m, &ForgetSpec::Class(3), 0, None).unwrap();
         assert_eq!(wal.checkpoint_scope(), (3, vec![2, 3]));
         wal.append_completed(s3, Disposition::Done, false, 0.1, 0.9).unwrap();
         assert_eq!(wal.checkpoint_scope(), (3, vec![2]));
@@ -961,9 +1010,10 @@ mod tests {
             // coalesces onto A's queue entry (seq 3). The worker serves
             // A first: seqs 1 and 3 complete in one pass and the
             // checkpoint lands while B is still queued.
-            let a = d.log_accepted(&ForgetSpec::Class(1), 0, None).unwrap();
-            let b = d.log_accepted(&ForgetSpec::Class(2), 0, None).unwrap();
-            let j = d.log_accepted(&ForgetSpec::Class(1), 0, None).unwrap();
+            let m = ModelId::default();
+            let a = d.log_accepted(&m, &ForgetSpec::Class(1), 0, None).unwrap();
+            let b = d.log_accepted(&m, &ForgetSpec::Class(2), 0, None).unwrap();
+            let j = d.log_accepted(&m, &ForgetSpec::Class(1), 0, None).unwrap();
             assert_eq!((a, b, j), (1, 2, 3));
             d.log_completed(&[a, j], Disposition::Done, false, 0.1, 0.9);
             d.write_checkpoint(&store).unwrap();
@@ -976,8 +1026,59 @@ mod tests {
         // B's edits are absent from the checkpoint even though its seq
         // is below the covering seq: recovery replays it, and only it.
         let rec = Durability::open_or_recover(&cfg).unwrap();
-        let specs: Vec<&ForgetSpec> = rec.replay.iter().map(|(_, s)| s).collect();
+        let specs: Vec<&ForgetSpec> = rec.replay.iter().map(|(_, _, s)| s).collect();
         assert_eq!(specs, [&ForgetSpec::Class(2)]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Two tenants forgetting the same class must stay distinct under
+    /// replay dedup — the key is (model, spec key), not spec key alone.
+    #[test]
+    fn replay_dedup_is_per_model() {
+        let dir = tmpdir("tenants");
+        let cfg = DurabilityConfig { dir: dir.clone(), checkpoint_every: 1 };
+        let ma = ModelId::new("tenant-a").unwrap();
+        let mb = ModelId::new("tenant-b").unwrap();
+        let recs = vec![
+            Record::Accepted { seq: 1, model: ma.clone(), spec: ForgetSpec::Class(7), config_hash: 1, deadline_ms: None },
+            Record::Accepted { seq: 2, model: mb.clone(), spec: ForgetSpec::Class(7), config_hash: 2, deadline_ms: None },
+            Record::Accepted { seq: 3, model: ma.clone(), spec: ForgetSpec::Class(7), config_hash: 1, deadline_ms: None },
+        ];
+        write_replacing(&dir.join(LEDGER_FILE), 1, &recs).unwrap();
+        let rec = Durability::open_or_recover(&cfg).unwrap();
+        let got: Vec<(&ModelId, &ForgetSpec)> =
+            rec.replay.iter().map(|(_, id, s)| (id, s)).collect();
+        assert_eq!(
+            got,
+            [(&ma, &ForgetSpec::Class(7)), (&mb, &ForgetSpec::Class(7))],
+            "same spec for two models replays twice; same (model, spec) collapses"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A pre-registry (FICABUW1) ledger is refused loudly — its records
+    /// carry no model id, so treating it as lost would silently drop
+    /// admitted requests.
+    #[test]
+    fn v1_ledger_is_refused_loudly() {
+        let dir = tmpdir("v1");
+        let path = dir.join(LEDGER_FILE);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(LEDGER_MAGIC_V1);
+        buf.extend_from_slice(&1u64.to_le_bytes());
+        buf.extend_from_slice(&crc32(&1u64.to_le_bytes()).to_le_bytes());
+        std::fs::write(&path, &buf).unwrap();
+        let err = read_ledger(&path).unwrap_err();
+        assert!(err.to_string().contains("FICABUW1"), "{err:#}");
+        assert!(Wal::open_append(&path).is_err());
+        assert!(
+            Durability::open_or_recover(&DurabilityConfig {
+                dir: dir.clone(),
+                checkpoint_every: 1
+            })
+            .is_err(),
+            "recovery must not silently rewrite a pre-registry ledger"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -7,7 +7,7 @@
 //! `I_i = E[(d ln p(D_f|theta) / d theta_i)^2]`, accumulated as
 //! `acc += scale * g^2` per microbatch.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -124,7 +124,7 @@ pub fn concat_seg(tensors: &[Tensor]) -> Vec<f32> {
 /// module. Tiles are fixed-size bursts; the tail is zero-padded (padding
 /// squares to zero, so accumulation is exact).
 pub struct FimdEngine {
-    exe: Rc<Executable>,
+    exe: Arc<Executable>,
     pub tile: usize,
     /// *Real* elements streamed (feeds the hwsim cycle/traffic model).
     pub elems_streamed: std::cell::Cell<u64>,

@@ -4,12 +4,12 @@
 use anyhow::Result;
 
 use crate::data::Dataset;
-use crate::model::{Model, ParamStore};
+use crate::model::{Model, ParamAccess};
 
 /// Top-1 accuracy over the given sample indices.
 pub fn eval_accuracy(
     model: &Model,
-    params: &ParamStore,
+    params: &dyn ParamAccess,
     ds: &Dataset,
     idx: &[usize],
 ) -> Result<f64> {
@@ -36,7 +36,7 @@ pub fn eval_accuracy(
 /// quantity the MIA thresholds).
 pub fn per_sample_losses(
     model: &Model,
-    params: &ParamStore,
+    params: &dyn ParamAccess,
     ds: &Dataset,
     idx: &[usize],
 ) -> Result<Vec<f32>> {

@@ -7,22 +7,29 @@
 //!   train_step: (all params..., x, onehot, lr) -> (new params..., loss)
 //!   loss_grad:  (logits, onehot)        -> (dlogits,)
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::ModelMeta;
+use crate::model::params::ParamAccess;
 use crate::model::{ActivationCache, ParamStore};
 use crate::runtime::{ArgRef, Executable, ModuleSpec, Precision, Runtime};
 use crate::tensor::Tensor;
 
+/// A model's compiled modules. Every executable is an immutable
+/// `Send + Sync` program behind `Arc`, so a `Model` (and anything built
+/// on it, e.g. a registry's `CompiledModel`) can be shared across fleet
+/// worker threads without a per-worker rebuild. Read paths take the
+/// parameters as `&dyn ParamAccess`, so the same graph serves an owned
+/// drifting [`ParamStore`] and a per-request copy-on-write overlay.
 pub struct Model {
     pub meta: ModelMeta,
-    fwd: Vec<Rc<Executable>>,
-    bwd: Vec<Rc<Executable>>,
-    logits_exe: Rc<Executable>,
-    train_step_exe: Rc<Executable>,
-    loss_grad_exe: Rc<Executable>,
+    fwd: Vec<Arc<Executable>>,
+    bwd: Vec<Arc<Executable>>,
+    logits_exe: Arc<Executable>,
+    train_step_exe: Arc<Executable>,
+    loss_grad_exe: Arc<Executable>,
 }
 
 impl Model {
@@ -45,7 +52,7 @@ impl Model {
     }
 
     /// Serving precision implied by the store: quantized -> int8.
-    pub fn store_precision(params: &ParamStore) -> Precision {
+    pub fn store_precision(params: &dyn ParamAccess) -> Precision {
         if params.is_quantized() {
             Precision::Int8
         } else {
@@ -55,9 +62,10 @@ impl Model {
 
     /// Parameter arguments of segment `k` at the requested precision:
     /// int8 weight slots where the store has them, f32 otherwise.
-    fn seg_args<'a>(params: &'a ParamStore, k: usize, prec: Precision) -> Vec<ArgRef<'a>> {
+    fn seg_args<'a>(params: &'a dyn ParamAccess, k: usize, prec: Precision) -> Vec<ArgRef<'a>> {
         match (prec, params.qseg(k)) {
-            (Precision::Int8, Some(qs)) => params.seg[k]
+            (Precision::Int8, Some(qs)) => params
+                .seg(k)
                 .iter()
                 .zip(qs)
                 .map(|(t, q)| match q {
@@ -65,11 +73,11 @@ impl Model {
                     None => ArgRef::F32(t),
                 })
                 .collect(),
-            _ => params.seg[k].iter().map(ArgRef::F32).collect(),
+            _ => params.seg(k).iter().map(ArgRef::F32).collect(),
         }
     }
 
-    fn check_precision(params: &ParamStore, prec: Precision) -> Result<()> {
+    fn check_precision(params: &dyn ParamAccess, prec: Precision) -> Result<()> {
         if prec == Precision::Int8 && !params.is_quantized() {
             bail!("int8 forward requested on an unquantized store (ParamStore::quantize_int8)");
         }
@@ -78,12 +86,17 @@ impl Model {
 
     /// Whole-model forward through the fused `logits` module (batch =
     /// meta.batch), at the store's native precision.
-    pub fn logits(&self, params: &ParamStore, x: &Tensor) -> Result<Tensor> {
+    pub fn logits(&self, params: &dyn ParamAccess, x: &Tensor) -> Result<Tensor> {
         self.logits_prec(params, x, Self::store_precision(params))
     }
 
     /// [`Model::logits`] at an explicit precision.
-    pub fn logits_prec(&self, params: &ParamStore, x: &Tensor, prec: Precision) -> Result<Tensor> {
+    pub fn logits_prec(
+        &self,
+        params: &dyn ParamAccess,
+        x: &Tensor,
+        prec: Precision,
+    ) -> Result<Tensor> {
         Self::check_precision(params, prec)?;
         let mut args: Vec<ArgRef> = Vec::new();
         for k in 0..self.num_segments() {
@@ -96,14 +109,14 @@ impl Model {
 
     /// Segment-by-segment forward that caches each segment's input —
     /// Algorithm 1 Step 0 — at the store's native precision.
-    pub fn forward_cached(&self, params: &ParamStore, x: &Tensor) -> Result<ActivationCache> {
+    pub fn forward_cached(&self, params: &dyn ParamAccess, x: &Tensor) -> Result<ActivationCache> {
         self.forward_cached_prec(params, x, Self::store_precision(params))
     }
 
     /// [`Model::forward_cached`] at an explicit precision.
     pub fn forward_cached_prec(
         &self,
-        params: &ParamStore,
+        params: &dyn ParamAccess,
         x: &Tensor,
         prec: Precision,
     ) -> Result<ActivationCache> {
@@ -125,7 +138,7 @@ impl Model {
     /// *current* (possibly dampened) parameters.
     pub fn partial_forward(
         &self,
-        params: &ParamStore,
+        params: &dyn ParamAccess,
         from_seg: usize,
         act: &Tensor,
     ) -> Result<Tensor> {
@@ -135,7 +148,7 @@ impl Model {
     /// [`Model::partial_forward`] at an explicit precision.
     pub fn partial_forward_prec(
         &self,
-        params: &ParamStore,
+        params: &dyn ParamAccess,
         from_seg: usize,
         act: &Tensor,
         prec: Precision,
@@ -158,11 +171,11 @@ impl Model {
     pub fn segment_bwd(
         &self,
         k: usize,
-        params: &ParamStore,
+        params: &dyn ParamAccess,
         x_mb: &Tensor,
         gy: &Tensor,
     ) -> Result<(Vec<Tensor>, Tensor)> {
-        let mut args: Vec<&Tensor> = params.seg[k].iter().collect();
+        let mut args: Vec<&Tensor> = params.seg(k).iter().collect();
         args.push(x_mb);
         args.push(gy);
         let mut out = self.bwd[k].run(&args)?;

@@ -8,4 +8,4 @@ pub mod params;
 
 pub use acts::ActivationCache;
 pub use graph::Model;
-pub use params::ParamStore;
+pub use params::{CowParams, ParamAccess, ParamStore, SegmentSnapshot};

@@ -6,9 +6,21 @@
 //! trains — Python never produces parameter values). Checkpoints are a
 //! small self-describing binary format so trained models can be reused
 //! across CLI invocations (`artifacts/runs/<model>.fcb`).
+//!
+//! Two views of parameters exist behind the [`ParamAccess`] seam:
+//!
+//! * [`ParamStore`] — the owned, drifting store a legacy single-model
+//!   replica edits in place.
+//! * [`CowParams`] — a per-request copy-on-write overlay against a
+//!   frozen `Arc<ParamStore>` master: reads fall through to the master,
+//!   the first write to a segment materializes a private delta of just
+//!   that segment. This is what multi-tenant registry workers serve
+//!   with — the master never changes, so every request's result is
+//!   independent of interleaving.
 
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -109,12 +121,7 @@ impl ParamStore {
     /// No-op on an f32 store.
     pub fn requantize_segment(&mut self, k: usize) {
         if let Some(quant) = &mut self.quant {
-            for (t, q) in self.seg[k].iter_mut().zip(&mut quant[k]) {
-                if let Some(qt) = q {
-                    *qt = QTensor::from_weight(t);
-                    qt.dequantize_into(&mut t.data);
-                }
-            }
+            requantize_row(&mut self.seg[k], &mut quant[k]);
         }
     }
 
@@ -258,6 +265,192 @@ impl ParamStore {
 pub struct SegmentSnapshot {
     tensors: Vec<Tensor>,
     quant: Option<Vec<Option<QTensor>>>,
+}
+
+/// Re-derive the int8 copies of one segment row and snap the f32
+/// masters onto the dequantized grid — the dampening write-back
+/// invariant, shared by the owned store and the CoW overlay.
+fn requantize_row(tensors: &mut [Tensor], quant: &mut [Option<QTensor>]) {
+    for (t, q) in tensors.iter_mut().zip(quant.iter_mut()) {
+        if let Some(qt) = q {
+            *qt = QTensor::from_weight(t);
+            qt.dequantize_into(&mut t.data);
+        }
+    }
+}
+
+/// Uniform parameter view the execution layer reads and the unlearning
+/// engine edits — implemented by the owned [`ParamStore`] (legacy
+/// drifting replicas) and by [`CowParams`] (per-request deltas over a
+/// frozen shared master). Everything the model graph, metrics, and
+/// engine stages need, and nothing that pins the storage strategy.
+pub trait ParamAccess {
+    fn num_segments(&self) -> usize;
+
+    /// Segment `k`'s f32 parameter tensors (meta order).
+    fn seg(&self, k: usize) -> &[Tensor];
+
+    /// Segment `k`'s int8 weight slots (`None` on an f32 store).
+    fn qseg(&self, k: usize) -> Option<&[Option<QTensor>]>;
+
+    /// Whether int8 weight copies are carried (store serves int8).
+    fn is_quantized(&self) -> bool;
+
+    /// Mutable access to segment `k`'s f32 tensors (the dampening
+    /// scatter destination). On a CoW view this materializes the
+    /// segment's private delta.
+    fn seg_mut(&mut self, k: usize) -> &mut [Tensor];
+
+    /// Capture segment `k`'s pre-image (f32 masters + int8 copies).
+    fn snapshot_segment(&self, k: usize) -> SegmentSnapshot;
+
+    /// Restore segment `k` bit for bit from a snapshot of this view.
+    fn restore_segment(&mut self, k: usize, snap: SegmentSnapshot);
+
+    /// Re-derive segment `k`'s int8 copies after an f32 edit; no-op on
+    /// an f32 store.
+    fn requantize_segment(&mut self, k: usize);
+}
+
+impl ParamAccess for ParamStore {
+    fn num_segments(&self) -> usize {
+        self.seg.len()
+    }
+
+    fn seg(&self, k: usize) -> &[Tensor] {
+        &self.seg[k]
+    }
+
+    fn qseg(&self, k: usize) -> Option<&[Option<QTensor>]> {
+        ParamStore::qseg(self, k)
+    }
+
+    fn is_quantized(&self) -> bool {
+        ParamStore::is_quantized(self)
+    }
+
+    fn seg_mut(&mut self, k: usize) -> &mut [Tensor] {
+        &mut self.seg[k]
+    }
+
+    fn snapshot_segment(&self, k: usize) -> SegmentSnapshot {
+        ParamStore::snapshot_segment(self, k)
+    }
+
+    fn restore_segment(&mut self, k: usize, snap: SegmentSnapshot) {
+        ParamStore::restore_segment(self, k, snap)
+    }
+
+    fn requantize_segment(&mut self, k: usize) {
+        ParamStore::requantize_segment(self, k)
+    }
+}
+
+/// Materialized private copy of one segment in a [`CowParams`] view.
+struct SegmentDelta {
+    tensors: Vec<Tensor>,
+    /// `Some` exactly when the master is quantized (lockstep invariant).
+    quant: Option<Vec<Option<QTensor>>>,
+}
+
+/// Copy-on-write parameter view over a frozen shared master.
+///
+/// Reads fall through to the `Arc<ParamStore>` master until a segment
+/// is first written ([`ParamAccess::seg_mut`] /
+/// [`ParamAccess::restore_segment`]), which clones exactly that
+/// segment (f32 masters plus its int8 copies) into a private delta.
+/// The master is never mutated, so N requests against one master are
+/// bitwise independent of each other and of their interleaving — each
+/// produces the same post-unlearn segment deltas it would have produced
+/// alone. Dropping the view discards the deltas; [`CowParams::touched`]
+/// enumerates them first if a caller wants to persist or inspect the
+/// edit.
+pub struct CowParams {
+    master: Arc<ParamStore>,
+    delta: Vec<Option<SegmentDelta>>,
+}
+
+impl CowParams {
+    pub fn new(master: Arc<ParamStore>) -> CowParams {
+        let n = master.seg.len();
+        CowParams { master, delta: (0..n).map(|_| None).collect() }
+    }
+
+    /// The frozen master this view overlays.
+    pub fn master(&self) -> &Arc<ParamStore> {
+        &self.master
+    }
+
+    /// Indices of segments with a materialized delta (i.e. written to).
+    pub fn touched(&self) -> Vec<usize> {
+        (0..self.delta.len()).filter(|&k| self.delta[k].is_some()).collect()
+    }
+
+    fn materialize(&mut self, k: usize) -> &mut SegmentDelta {
+        let slot = &mut self.delta[k];
+        if slot.is_none() {
+            *slot = Some(SegmentDelta {
+                tensors: self.master.seg[k].clone(),
+                quant: self.master.quant.as_ref().map(|q| q[k].clone()),
+            });
+        }
+        slot.as_mut().unwrap()
+    }
+}
+
+impl ParamAccess for CowParams {
+    fn num_segments(&self) -> usize {
+        self.delta.len()
+    }
+
+    fn seg(&self, k: usize) -> &[Tensor] {
+        match &self.delta[k] {
+            Some(d) => &d.tensors,
+            None => &self.master.seg[k],
+        }
+    }
+
+    fn qseg(&self, k: usize) -> Option<&[Option<QTensor>]> {
+        if !self.master.is_quantized() {
+            return None;
+        }
+        match &self.delta[k] {
+            Some(d) => d.quant.as_deref(),
+            None => ParamStore::qseg(&self.master, k),
+        }
+    }
+
+    fn is_quantized(&self) -> bool {
+        self.master.is_quantized()
+    }
+
+    fn seg_mut(&mut self, k: usize) -> &mut [Tensor] {
+        &mut self.materialize(k).tensors
+    }
+
+    fn snapshot_segment(&self, k: usize) -> SegmentSnapshot {
+        SegmentSnapshot {
+            tensors: self.seg(k).to_vec(),
+            quant: self.qseg(k).map(|q| q.to_vec()),
+        }
+    }
+
+    fn restore_segment(&mut self, k: usize, snap: SegmentSnapshot) {
+        let d = self.materialize(k);
+        debug_assert_eq!(d.tensors.len(), snap.tensors.len(), "snapshot arity mismatch");
+        d.tensors = snap.tensors;
+        d.quant = snap.quant;
+    }
+
+    fn requantize_segment(&mut self, k: usize) {
+        if !self.master.is_quantized() {
+            return;
+        }
+        let d = self.materialize(k);
+        if let Some(q) = &mut d.quant {
+            requantize_row(&mut d.tensors, q);
+        }
+    }
 }
 
 /// Quantize one parameter slot if it is a GEMM/conv weight; snap the
@@ -456,6 +649,82 @@ mod tests {
                 .map(|q| q.iter().map(|s| s.as_ref().map(|qt| qt.dequantize().data)).collect());
             assert_eq!(qbefore, qafter, "int8 copies must restore too");
             ps.validate(&meta).unwrap();
+        }
+    }
+
+    #[test]
+    fn cow_overlay_isolates_writes_from_master_and_siblings() {
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
+        for int8 in [false, true] {
+            let mut master = ParamStore::init(&meta, 41);
+            if int8 {
+                master.quantize_int8(&meta);
+            }
+            let frozen: Vec<Vec<f32>> =
+                master.seg.iter().flat_map(|s| s.iter().map(|t| t.data.clone())).collect();
+            let master = Arc::new(master);
+            let mut a = CowParams::new(Arc::clone(&master));
+            let mut b = CowParams::new(Arc::clone(&master));
+            assert_eq!(a.num_segments(), meta.num_segments());
+            assert!(a.touched().is_empty());
+            // reads fall through to the master
+            assert_eq!(ParamAccess::seg(&a, 1)[0].data, master.seg[1][0].data);
+            assert_eq!(a.is_quantized(), int8);
+            // a's write materializes only segment 1 and is invisible to
+            // the master and to b
+            for t in a.seg_mut(1).iter_mut() {
+                for v in t.data.iter_mut() {
+                    *v = v.mul_add(0.5, 0.25);
+                }
+            }
+            if int8 {
+                ParamAccess::requantize_segment(&mut a, 1);
+                let q = ParamAccess::qseg(&a, 1).unwrap();
+                let qt = q.iter().flatten().next().unwrap();
+                let slot = q.iter().position(|s| s.is_some()).unwrap();
+                assert_eq!(qt.dequantize().data, ParamAccess::seg(&a, 1)[slot].data);
+            }
+            assert_eq!(a.touched(), vec![1]);
+            assert_ne!(ParamAccess::seg(&a, 1)[0].data, master.seg[1][0].data);
+            assert_eq!(ParamAccess::seg(&b, 1)[0].data, master.seg[1][0].data);
+            let after: Vec<Vec<f32>> =
+                master.seg.iter().flat_map(|s| s.iter().map(|t| t.data.clone())).collect();
+            assert_eq!(frozen, after, "master must stay frozen");
+            // snapshot/restore round-trips bitwise on the overlay
+            let snap = ParamAccess::snapshot_segment(&a, 1);
+            for t in a.seg_mut(1).iter_mut() {
+                t.data.iter_mut().for_each(|v| *v += 1.0);
+            }
+            ParamAccess::restore_segment(&mut a, 1, snap);
+            if int8 {
+                // restoring b's untouched segment snapshot round-trips too
+                let snap_b = ParamAccess::snapshot_segment(&b, 2);
+                ParamAccess::restore_segment(&mut b, 2, snap_b);
+                assert_eq!(ParamAccess::seg(&b, 2)[0].data, master.seg[2][0].data);
+            }
+        }
+    }
+
+    #[test]
+    fn cow_delta_matches_dedicated_store_edit_bitwise() {
+        // the acceptance shape: the same deterministic edit applied
+        // through a CoW overlay and through an owned store clone must
+        // produce bitwise-identical parameters
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
+        let master = Arc::new(ParamStore::init(&meta, 43));
+        let mut owned = (*master).clone();
+        let mut cow = CowParams::new(Arc::clone(&master));
+        let edit = |ps: &mut dyn ParamAccess| {
+            for t in ps.seg_mut(3).iter_mut() {
+                for (i, v) in t.data.iter_mut().enumerate() {
+                    *v = v.mul_add(0.9, (i % 7) as f32 * 1e-3);
+                }
+            }
+        };
+        edit(&mut owned);
+        edit(&mut cow);
+        for (x, y) in owned.seg[3].iter().zip(ParamAccess::seg(&cow, 3)) {
+            assert!(x.data.iter().zip(&y.data).all(|(a, b)| a.to_bits() == b.to_bits()));
         }
     }
 

@@ -11,10 +11,12 @@
 //! the mixed-precision [`ArgRef`] seam and execute them on the true
 //! int8 GEMM core (the paper's §IV-A deployment mode); the gradient
 //! chain stays f32.
-//! The backend owns one [`scratch::Scratch`] arena shared by every
-//! module it compiles, so im2col panels, packed GEMM panels, and
-//! activation/grad temporaries are reused across segments and steps
-//! instead of reallocated. Every module validates arity and shapes
+//! Module bodies draw im2col panels, packed GEMM panels, and
+//! activation/grad temporaries from the calling thread's
+//! [`scratch::Scratch`] arena ([`scratch::with`]), so buffers are reused
+//! across segments and steps instead of reallocated — and the compiled
+//! modules themselves stay immutable `Send + Sync` data, shareable
+//! across fleet workers. Every module validates arity and shapes
 //! before touching data — an edge device fails loudly, never UB
 //! (`tests/failure_injection`).
 
@@ -26,9 +28,6 @@ pub mod kernels;
 pub mod scratch;
 mod segment;
 
-use std::cell::RefCell;
-use std::rc::Rc;
-
 use anyhow::{bail, Result};
 
 use crate::config::{ModelMeta, SegmentMeta};
@@ -39,13 +38,11 @@ use scratch::Scratch;
 use segment::SegmentDef;
 
 /// The interpreter backend. All module state is built at `compile` time
-/// from the spec's inventory; the only runtime state is the shared
-/// scratch arena (the `Runtime` is single-threaded, so a `RefCell` is
-/// the whole synchronization story).
+/// from the spec's inventory; mutable per-call state (the scratch
+/// arena) is per *executing thread*, never per module, so everything
+/// this backend builds is plain `Send + Sync` data.
 #[derive(Debug, Default)]
-pub struct CpuBackend {
-    scratch: Rc<RefCell<Scratch>>,
-}
+pub struct CpuBackend;
 
 impl CpuBackend {
     pub fn new() -> CpuBackend {
@@ -59,34 +56,25 @@ impl Backend for CpuBackend {
     }
 
     fn compile(&self, spec: &ModuleSpec) -> Result<Box<dyn ModuleImpl>> {
-        let sc = &self.scratch;
         Ok(match spec {
             ModuleSpec::SegmentFwd { meta, seg } => {
                 let def = SegmentDef::from_meta(meta, *seg)?; // bounds-checks seg
-                Box::new(SegmentFwdModule {
-                    seg: meta.segments[*seg].clone(),
-                    def,
-                    scratch: sc.clone(),
-                })
+                Box::new(SegmentFwdModule { seg: meta.segments[*seg].clone(), def })
             }
             ModuleSpec::SegmentBwd { meta, seg } => {
                 let def = SegmentDef::from_meta(meta, *seg)?;
-                Box::new(SegmentBwdModule {
-                    seg: meta.segments[*seg].clone(),
-                    def,
-                    scratch: sc.clone(),
-                })
+                Box::new(SegmentBwdModule { seg: meta.segments[*seg].clone(), def })
             }
-            ModuleSpec::Logits { meta } => Box::new(LogitsModule::new(meta, sc.clone())?),
+            ModuleSpec::Logits { meta } => Box::new(LogitsModule::new(meta)?),
             ModuleSpec::TrainStep { meta } => Box::new(TrainStepModule {
-                chain: LogitsModule::new(meta, sc.clone())?,
+                chain: LogitsModule::new(meta)?,
             }),
             ModuleSpec::LossGrad { meta } => Box::new(LossGradModule {
                 classes: meta.num_classes,
             }),
             ModuleSpec::Fimd { shared } => Box::new(FimdModule { tile: shared.tile }),
             ModuleSpec::Dampen { shared } => Box::new(DampenModule { tile: shared.tile }),
-            ModuleSpec::Gemm { .. } => Box::new(GemmModule { scratch: sc.clone() }),
+            ModuleSpec::Gemm { .. } => Box::new(GemmModule),
         })
     }
 }
@@ -179,7 +167,6 @@ fn check_scalarish(t: &Tensor, what: &str) -> Result<f32> {
 struct SegmentFwdModule {
     seg: SegmentMeta,
     def: SegmentDef,
-    scratch: Rc<RefCell<Scratch>>,
 }
 
 impl ModuleImpl for SegmentFwdModule {
@@ -197,8 +184,7 @@ impl ModuleImpl for SegmentFwdModule {
             None => bail!("fwd[{}]: x must be f32", self.seg.name),
         };
         check_batched(x, &self.seg.in_shape, "x")?;
-        let mut sc = self.scratch.borrow_mut();
-        let y = self.def.fwd(&args[..np], x, &mut sc)?;
+        let y = scratch::with(|sc| self.def.fwd(&args[..np], x, sc))?;
         Ok(vec![y])
     }
 }
@@ -206,7 +192,6 @@ impl ModuleImpl for SegmentFwdModule {
 struct SegmentBwdModule {
     seg: SegmentMeta,
     def: SegmentDef,
-    scratch: Rc<RefCell<Scratch>>,
 }
 
 impl ModuleImpl for SegmentBwdModule {
@@ -219,8 +204,8 @@ impl ModuleImpl for SegmentBwdModule {
         if b != b2 {
             bail!("bwd[{}]: x batch {b} != gy batch {b2}", self.seg.name);
         }
-        let mut sc = self.scratch.borrow_mut();
-        let (mut grads, gx) = self.def.bwd(&args[..np], args[np], args[np + 1], &mut sc)?;
+        let (mut grads, gx) =
+            scratch::with(|sc| self.def.bwd(&args[..np], args[np], args[np + 1], sc))?;
         grads.push(gx);
         Ok(grads)
     }
@@ -235,16 +220,15 @@ struct LogitsModule {
     meta: ModelMeta,
     defs: Vec<SegmentDef>,
     param_count: usize,
-    scratch: Rc<RefCell<Scratch>>,
 }
 
 impl LogitsModule {
-    fn new(meta: &ModelMeta, scratch: Rc<RefCell<Scratch>>) -> Result<LogitsModule> {
+    fn new(meta: &ModelMeta) -> Result<LogitsModule> {
         let defs = (0..meta.num_segments())
             .map(|k| SegmentDef::from_meta(meta, k))
             .collect::<Result<Vec<_>>>()?;
         let param_count = meta.segments.iter().map(|s| s.params.len()).sum();
-        Ok(LogitsModule { meta: meta.clone(), defs, param_count, scratch })
+        Ok(LogitsModule { meta: meta.clone(), defs, param_count })
     }
 
     fn check_all_params(&self, args: &[ArgRef]) -> Result<()> {
@@ -291,8 +275,7 @@ impl ModuleImpl for LogitsModule {
             None => bail!("logits: x must be f32"),
         };
         check_batched(x, &self.meta.input_shape, "x")?;
-        let mut sc = self.scratch.borrow_mut();
-        let logits = self.forward(&args[..self.param_count], x, None, &mut sc)?;
+        let logits = scratch::with(|sc| self.forward(&args[..self.param_count], x, None, sc))?;
         Ok(vec![logits])
     }
 }
@@ -319,9 +302,9 @@ impl ModuleImpl for TrainStepModule {
             bail!("train_step: onehot batch {} != x batch {b}", onehot.batch());
         }
 
-        let mut sc = self.chain.scratch.borrow_mut();
+        scratch::with(|sc| {
         let mut inputs = Vec::with_capacity(meta.num_segments());
-        let logits = self.chain.forward(&margs, x, Some(&mut inputs), &mut sc)?;
+        let logits = self.chain.forward(&margs, x, Some(&mut inputs), sc)?;
 
         // mean NLL + dlogits via log-sum-exp (model.py cross_entropy)
         let classes = meta.num_classes;
@@ -353,7 +336,7 @@ impl ModuleImpl for TrainStepModule {
         for k in (0..meta.num_segments()).rev() {
             let np = meta.segments[k].params.len();
             let ps = &args[offsets[k]..offsets[k] + np];
-            let (grads, gx) = self.chain.defs[k].bwd(ps, &inputs[k], &gy, &mut sc)?;
+            let (grads, gx) = self.chain.defs[k].bwd(ps, &inputs[k], &gy, sc)?;
             gy = gx;
             new_params[k] = ps
                 .iter()
@@ -368,6 +351,7 @@ impl ModuleImpl for TrainStepModule {
         let mut out: Vec<Tensor> = new_params.into_iter().flatten().collect();
         out.push(Tensor::scalar(loss));
         Ok(out)
+        })
     }
 }
 
@@ -438,9 +422,7 @@ impl ModuleImpl for DampenModule {
 }
 
 /// Patch-GEMM engine demo: plain 2-D `x @ y` on the tiled core.
-struct GemmModule {
-    scratch: Rc<RefCell<Scratch>>,
-}
+struct GemmModule;
 
 impl ModuleImpl for GemmModule {
     fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
@@ -451,8 +433,7 @@ impl ModuleImpl for GemmModule {
         }
         let (m, k, n) = (x.shape[0], x.shape[1], y.shape[1]);
         let mut out = vec![0.0f32; m * n];
-        let mut sc = self.scratch.borrow_mut();
-        gemm::matmul_into(&mut sc, &x.data, &y.data, m, k, n, &mut out);
+        scratch::with(|sc| gemm::matmul_into(sc, &x.data, &y.data, m, k, n, &mut out));
         Ok(vec![Tensor::new(vec![m, n], out)?])
     }
 }

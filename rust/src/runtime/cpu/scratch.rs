@@ -3,16 +3,37 @@
 //! Every forward/VJP interpreter pass used to allocate a fresh `Vec` for
 //! each im2col patch matrix, packed GEMM panel, and activation/grad
 //! temporary. Under the per-layer unlearning loop those allocations
-//! recur with identical sizes thousands of times, so the backend now
-//! owns one [`Scratch`] pool (behind a `RefCell`, matching the
-//! single-threaded `Runtime`) and the interpreters `take`/`put` buffers
-//! from it instead. Buffers are handed out as plain `Vec<f32>` so a
-//! caller can still keep one (e.g. to move into an output `Tensor`) —
-//! anything not `put` back simply stops being pooled.
+//! recur with identical sizes thousands of times, so the interpreters
+//! `take`/`put` buffers from a [`Scratch`] pool instead. Buffers are
+//! handed out as plain `Vec<f32>` so a caller can still keep one (e.g.
+//! to move into an output `Tensor`) — anything not `put` back simply
+//! stops being pooled.
 //!
-//! Not thread-safe by design: the GEMM worker threads never touch the
-//! arena; the packed-B panel is taken before the fork and returned after
-//! the join.
+//! The pool is **per worker thread** ([`with`]), not baked into the
+//! compiled modules: module bodies are immutable `Send + Sync` programs
+//! shared across fleet workers behind `Arc<Executable>`, so each thread
+//! that executes them brings its own arena. A worker's pool converges to
+//! the buffer sizes of the models *it* serves; threads never contend.
+//! The GEMM worker threads still never touch the arena — the packed-B
+//! panel is taken before the fork and returned after the join.
+
+use std::cell::RefCell;
+
+thread_local! {
+    /// The calling thread's scratch arena (one per fleet worker / test
+    /// thread, created on first use).
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
+
+/// Run `f` with the calling thread's [`Scratch`] arena.
+///
+/// The arena is borrowed for the duration of `f`; module bodies take it
+/// once at their entry point and thread `&mut Scratch` through their
+/// kernels (nested `with` calls would panic on the `RefCell`, exactly
+/// like the nested `borrow_mut` of the old backend-owned arena).
+pub fn with<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    SCRATCH.with(|sc| f(&mut sc.borrow_mut()))
+}
 
 /// Upper bound on parked buffers; beyond this the smallest is dropped so
 /// the pool converges to the few large panel/activation sizes that

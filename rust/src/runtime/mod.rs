@@ -26,9 +26,8 @@ pub mod cpu;
 #[cfg(feature = "backend-xla")]
 pub mod xla;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -123,8 +122,9 @@ pub enum ModuleSpec {
 /// the *content* of the spec, not just the model name: two inventories
 /// sharing a name (e.g. a builtin and a differently-exported artifact
 /// meta) would otherwise alias in the executable cache and silently run
-/// each other's modules.
-fn meta_fingerprint(meta: &ModelMeta) -> u64 {
+/// each other's modules. Also the `spec_key` identity the model
+/// registry lists per tenant (`GET /models`).
+pub fn meta_fingerprint(meta: &ModelMeta) -> u64 {
     use std::hash::{Hash, Hasher};
     let mut h = std::collections::hash_map::DefaultHasher::new();
     meta.dir.hash(&mut h);
@@ -200,7 +200,12 @@ impl ModuleSpec {
 }
 
 /// A backend-built module body: positional tensors in, tensors out.
-pub trait ModuleImpl {
+///
+/// `Send + Sync` is part of the contract: compiled module bodies are
+/// immutable programs shared across fleet workers behind
+/// `Arc<Executable>`, so per-call mutable state (scratch arenas) must
+/// live outside the module (see `cpu::scratch`).
+pub trait ModuleImpl: Send + Sync {
     fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>>;
 
     /// Mixed-precision entry: like [`ModuleImpl::run`] but arguments may
@@ -216,7 +221,7 @@ pub trait ModuleImpl {
 }
 
 /// An execution backend: builds module bodies from specs.
-pub trait Backend {
+pub trait Backend: Send + Sync {
     fn name(&self) -> &'static str;
     fn compile(&self, spec: &ModuleSpec) -> Result<Box<dyn ModuleImpl>>;
 }
@@ -226,12 +231,12 @@ pub trait Backend {
 pub struct Executable {
     pub name: String,
     imp: Box<dyn ModuleImpl>,
-    stats: RefCell<ExecStats>,
+    stats: Mutex<ExecStats>,
 }
 
 impl Executable {
     pub(crate) fn new(name: String, imp: Box<dyn ModuleImpl>) -> Executable {
-        Executable { name, imp, stats: RefCell::new(ExecStats::default()) }
+        Executable { name, imp, stats: Mutex::new(ExecStats::default()) }
     }
 
     /// Execute with host tensors; returns the output tuple as tensors.
@@ -241,7 +246,7 @@ impl Executable {
             .imp
             .run(args)
             .with_context(|| format!("executing {}", self.name))?;
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().unwrap();
         st.runs += 1;
         st.run_ms += t0.elapsed().as_secs_f64() * 1e3;
         Ok(out)
@@ -256,26 +261,30 @@ impl Executable {
             .imp
             .run_mixed(args)
             .with_context(|| format!("executing {}", self.name))?;
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().unwrap();
         st.runs += 1;
         st.run_ms += t0.elapsed().as_secs_f64() * 1e3;
         Ok(out)
     }
 
     pub fn stats(&self) -> ExecStats {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 }
 
 /// A backend plus an executable cache.
 ///
-/// Deliberately `!Sync`: execution handles are owned by the coordinator
-/// thread, matching the single Unlearning Engine of the processor; the
-/// request-facing threads talk to it via channels (`coordinator`).
+/// `Send + Sync`: compiled modules are immutable programs behind
+/// `Arc<Executable>`, so one runtime (and its cache) is shared by every
+/// fleet worker and by the model registry — a worker that warms a model
+/// pays module construction once per *process*, not once per replica.
+/// The cache lock is held only around lookup/insert, never across a
+/// backend compile's execution of user code paths (`load` re-checks
+/// after compiling, so two racing compilers converge on one entry).
 pub struct Runtime {
     backend: Box<dyn Backend>,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
-    stats: RefCell<ExecStats>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    stats: Mutex<ExecStats>,
 }
 
 impl Runtime {
@@ -308,8 +317,8 @@ impl Runtime {
     pub fn with_backend(backend: Box<dyn Backend>) -> Runtime {
         Runtime {
             backend,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(ExecStats::default()),
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(ExecStats::default()),
         }
     }
 
@@ -318,35 +327,37 @@ impl Runtime {
     }
 
     /// Build (or fetch from cache) the module for a spec.
-    pub fn load(&self, spec: &ModuleSpec) -> Result<Rc<Executable>> {
+    pub fn load(&self, spec: &ModuleSpec) -> Result<Arc<Executable>> {
         let key = spec.key();
-        if let Some(exe) = self.cache.borrow().get(&key) {
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
             return Ok(exe.clone());
         }
+        // Compile outside the cache lock so a slow build never blocks
+        // cache hits on other modules; a concurrent compile of the same
+        // spec loses the entry race below and its duplicate is dropped.
         let t0 = std::time::Instant::now();
         let imp = self
             .backend
             .compile(spec)
             .with_context(|| format!("compiling {}", spec.label()))?;
         {
-            let mut st = self.stats.borrow_mut();
+            let mut st = self.stats.lock().unwrap();
             st.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
             st.compiles += 1;
         }
-        let exe = Rc::new(Executable::new(spec.label(), imp));
-        self.cache.borrow_mut().insert(key, exe.clone());
-        Ok(exe)
+        let exe = Arc::new(Executable::new(spec.label(), imp));
+        Ok(self.cache.lock().unwrap().entry(key).or_insert(exe).clone())
     }
 
     pub fn cached_modules(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap().len()
     }
 
     /// Aggregate runtime statistics (compile count/time plus run stats
     /// summed over every cached [`Executable`]).
     pub fn stats(&self) -> ExecStats {
-        let mut s = self.stats.borrow().clone();
-        for exe in self.cache.borrow().values() {
+        let mut s = self.stats.lock().unwrap().clone();
+        for exe in self.cache.lock().unwrap().values() {
             let e = exe.stats();
             s.runs += e.runs;
             s.run_ms += e.run_ms;
@@ -388,7 +399,7 @@ mod tests {
         let spec = ModuleSpec::Dampen { shared: shared() };
         let a = rt.load(&spec).unwrap();
         let b = rt.load(&spec).unwrap();
-        assert!(Rc::ptr_eq(&a, &b));
+        assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(rt.cached_modules(), 1);
         assert_eq!(rt.stats().compiles, 1);
     }

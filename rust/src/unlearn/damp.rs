@@ -3,7 +3,7 @@
 //! Balanced-Dampening scaled `(alpha, lambda)` supplied per segment by the
 //! coordinator (the IP itself is layer-agnostic, like the RTL).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -12,7 +12,7 @@ use crate::runtime::{Executable, ModuleSpec, Runtime};
 use crate::tensor::Tensor;
 
 pub struct DampEngine {
-    exe: Rc<Executable>,
+    exe: Arc<Executable>,
     pub tile: usize,
     /// Real elements streamed (tail padding excluded).
     pub elems_streamed: std::cell::Cell<u64>,

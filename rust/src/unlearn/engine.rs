@@ -30,8 +30,8 @@ use anyhow::{bail, Result};
 
 use crate::fisher::{concat_seg_into, FimdEngine, Importance};
 use crate::model::macs::{self, MacLedger};
-use crate::model::params::SegmentSnapshot;
-use crate::model::{ActivationCache, Model, ParamStore};
+use crate::model::params::{ParamAccess, SegmentSnapshot};
+use crate::model::{ActivationCache, Model};
 use crate::runtime::Precision;
 use crate::tensor::Tensor;
 use crate::testkit::faults;
@@ -46,9 +46,11 @@ use crate::unlearn::strategy::Strategy;
 /// state lives in [`Pass`] — so one config can be cloned into any
 /// number of serving replicas (`coordinator::WorkerSpec`) and executed
 /// re-entrantly, one event per replica at a time, with no shared state
-/// between workers. `PartialEq` is the dispatcher's batch-compatibility
-/// check: requests are batchable into one worker pass exactly when
-/// their configs compare equal.
+/// between workers. Batch compatibility in the fleet is keyed by the
+/// config's *fingerprint* (`coordinator::wal::config_fingerprint`) as
+/// part of the `(model, config_hash, spec)` batch key — a claimed batch
+/// may mix configs and tenants freely; `PartialEq` remains derived for
+/// tests but carries no dispatch semantics.
 ///
 /// Build configs through the strategy constructors
 /// ([`Ssd::new`](crate::unlearn::Ssd), [`Cau::new`](crate::unlearn::Cau),
@@ -165,7 +167,11 @@ pub fn make_onehot(labels: &[usize], classes: usize) -> Result<Tensor> {
 /// [`Strategy::forget_fisher`](crate::unlearn::Strategy::forget_fisher)).
 pub struct Pass<'a> {
     pub model: &'a Model,
-    pub params: &'a mut ParamStore,
+    /// The parameter view this pass edits: an owned drifting
+    /// [`ParamStore`](crate::model::ParamStore) for the legacy session
+    /// path, or a per-request [`CowParams`](crate::model::CowParams)
+    /// overlay in the registry fleet.
+    pub params: &'a mut dyn ParamAccess,
     pub global: &'a Importance,
     pub fimd: &'a FimdEngine,
     pub damp: &'a DampEngine,
@@ -194,7 +200,7 @@ impl<'a> Pass<'a> {
     #[allow(clippy::too_many_arguments)]
     fn begin(
         model: &'a Model,
-        params: &'a mut ParamStore,
+        params: &'a mut dyn ParamAccess,
         forget_x: &Tensor,
         forget_labels: &'a [usize],
         global: &'a Importance,
@@ -225,7 +231,7 @@ impl<'a> Pass<'a> {
         // --- Step 0: one forward pass, cache every segment input ---------
         // (int8-served: the forward streams int8 GEMM over the quantized
         // weights; the cached activations feed the f32 gradient chain)
-        let cache = model.forward_cached_prec(params, forget_x, cfg.precision)?;
+        let cache = model.forward_cached_prec(&*params, forget_x, cfg.precision)?;
         report.ledger.forward = macs::full_forward_macs(meta, meta.batch);
         report.act_cache_bytes = cache.bytes();
 
@@ -268,7 +274,7 @@ impl<'a> Pass<'a> {
     pub fn backprop_microbatch(&mut self, k: usize, mb: usize) -> Result<Vec<Tensor>> {
         let mb_size = self.model.meta.microbatch;
         let x_mb = self.cache.microbatch_input(k, mb, mb_size)?;
-        let (grads, gx) = self.model.segment_bwd(k, self.params, &x_mb, &self.gy_state[mb])?;
+        let (grads, gx) = self.model.segment_bwd(k, &*self.params, &x_mb, &self.gy_state[mb])?;
         self.gy_state[mb] = gx;
         Ok(grads)
     }
@@ -356,13 +362,13 @@ pub mod stages {
         let s = cfg.schedule.s(l, big_l);
         let alpha_l = (cfg.alpha * s) as f32;
         let lambda_l = (cfg.lambda * s) as f32;
-        concat_seg_into(&pass.params.seg[k], &mut pass.theta);
+        concat_seg_into(pass.params.seg(k), &mut pass.theta);
         let stats =
             pass.damp.dampen(&mut pass.theta, i_df, &pass.global.per_seg[k], alpha_l, lambda_l)?;
         // journal the pre-image before the first write to this segment,
         // so a later failure anywhere in the pass can roll it back
         pass.snapshot_segment(k);
-        scatter_seg(&pass.theta, &mut pass.params.seg[k])?;
+        scatter_seg(&pass.theta, pass.params.seg_mut(k))?;
         // Keep the int8 copies in lockstep with the edited masters —
         // only the segment the dampening write-back touched. Gated on
         // the *store* (not cfg.precision) deliberately: an f32-precision
@@ -392,9 +398,12 @@ pub mod stages {
         }
         let meta = &pass.model.meta;
         let k = meta.seg_index(l);
-        let logits =
-            pass.model
-                .partial_forward_prec(pass.params, k, &pass.cache.inputs[k], cfg.precision)?;
+        let logits = pass.model.partial_forward_prec(
+            &*pass.params,
+            k,
+            &pass.cache.inputs[k],
+            cfg.precision,
+        )?;
         pass.report.ledger.checkpoint += macs::partial_inference_macs(meta, k, meta.batch);
         let acc = forget_accuracy(&logits, pass.labels)?;
         pass.report.checkpoint_trace.push((l, acc));
@@ -415,7 +424,7 @@ pub mod stages {
 #[allow(clippy::too_many_arguments)]
 pub fn run_strategy(
     model: &Model,
-    params: &mut ParamStore,
+    params: &mut dyn ParamAccess,
     forget_x: &Tensor,
     forget_labels: &[usize],
     global: &Importance,
@@ -462,7 +471,7 @@ pub fn run_strategy(
 #[allow(clippy::too_many_arguments)]
 pub fn run_unlearning(
     model: &Model,
-    params: &mut ParamStore,
+    params: &mut dyn ParamAccess,
     forget_x: &Tensor,
     forget_labels: &[usize],
     global: &Importance,

@@ -17,9 +17,10 @@
 //! | [`Ficabu`] | paper grid  | Sigmoid   | Table IV       |
 //!
 //! All four consume the same serializable [`UnlearnConfig`] parameter
-//! bag — the fleet's `PartialEq` batch-compatibility contract — so any
-//! of them travels to worker replicas as plain data
-//! ([`Ficabu::from_config`] rebuilds the strategy in-thread).
+//! bag — the fleet coalesces on its fingerprint
+//! (`coordinator::wal::config_fingerprint`) — so any of them travels to
+//! worker replicas as plain data ([`Ficabu::from_config`] rebuilds the
+//! strategy in-thread).
 
 use anyhow::Result;
 
@@ -38,9 +39,10 @@ pub trait Strategy {
     /// Human-readable method name (reports, logs).
     fn name(&self) -> &str;
 
-    /// The serializable parameter bag this strategy consumes. Two
-    /// requests are batchable into one fleet worker pass exactly when
-    /// their configs compare equal.
+    /// The serializable parameter bag this strategy consumes. The fleet
+    /// fingerprints it into the request's batch key: two requests
+    /// coalesce into one execution only when their config fingerprints
+    /// (and model and spec) match.
     fn config(&self) -> &UnlearnConfig;
 
     /// Stage 1 — per-segment forget-Fisher estimate at depth `l`.

@@ -18,7 +18,7 @@ use std::time::{Duration, Instant};
 
 use ficabu::config::{ModelMeta, SharedMeta};
 use ficabu::coordinator::{
-    checkpoint, wal, DurabilityConfig, Fleet, FleetConfig, Pacing, Reply, Summary,
+    checkpoint, wal, DurabilityConfig, Fleet, FleetConfig, ModelId, Pacing, Reply, Summary,
     UnlearnService, UnlearnSession, WorkerSpec,
 };
 use ficabu::data::{cifar20_like, Dataset, DatasetCfg};
@@ -346,7 +346,7 @@ fn kill_and_restart_replays_to_the_uninterrupted_store() {
 
         let ledger = dir_b.join(wal::LEDGER_FILE);
         let (w, _tail) = wal::Wal::open_append(&ledger).unwrap();
-        w.append_accepted(&spec2, 0, None).unwrap();
+        w.append_accepted(&ModelId::default(), &spec2, 0, None).unwrap();
         drop(w);
         let mut f = std::fs::OpenOptions::new().append(true).open(&ledger).unwrap();
         // frame header promising 64 payload bytes, followed by 3

@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use ficabu::coordinator::wal::{self, Disposition, Record};
 use ficabu::coordinator::{
-    DurabilityConfig, Fleet, FleetConfig, Pacing, QueueStats, Reply, Summary, Timing,
+    DurabilityConfig, Fleet, FleetConfig, ModelId, Pacing, QueueStats, Reply, Summary, Timing,
     UnlearnService,
 };
 use ficabu::testkit::faults;
@@ -28,6 +28,8 @@ struct MockService {
 
 fn mock_summary(spec: &ForgetSpec) -> Summary {
     Summary {
+        model: ModelId::default(),
+        config_hash: 0,
         spec: spec.clone(),
         forget_acc: 0.0,
         retain_acc: 1.0,
@@ -585,7 +587,7 @@ fn durable_fleet_ledgers_completions_and_replays_after_crash() {
     // `Completed` (exactly what a kill between fsync and the pass leaves).
     {
         let (w, _tail) = wal::Wal::open_append(dir.join(wal::LEDGER_FILE)).unwrap();
-        w.append_accepted(&ForgetSpec::Class(5), 0, None).unwrap();
+        w.append_accepted(&ModelId::default(), &ForgetSpec::Class(5), 0, None).unwrap();
     }
 
     // Run 2: recovery replays the unfinished entry AND the completed-but-
@@ -695,6 +697,38 @@ fn durable_admission_fails_closed_on_ledger_error() {
     assert_eq!(stats.durability.unwrap().wal_seq, 1);
 
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn model_addressed_submission_on_a_single_model_fleet() {
+    let (fleet, rig) = mock_fleet(FleetConfig::default());
+    rig.tokens.send(()).unwrap();
+
+    // the default id addresses the fleet's only model; the reply's
+    // tenancy fields come from the batch key, not the service
+    let rx = fleet.submit_to(ModelId::default(), ForgetSpec::Class(3), None);
+    match rx.recv().unwrap() {
+        Reply::Done(s) => {
+            assert_eq!(s.model, ModelId::default());
+            assert_eq!(s.config_hash, 0, "service-factory fleets have no config");
+        }
+        other => panic!("unexpected reply {other:?}"),
+    }
+
+    // unknown ids fail before admission — nothing queued, nothing counted
+    let rx = fleet.submit_to(ModelId::new("ghost").unwrap(), ForgetSpec::Class(4), None);
+    match rx.recv_timeout(Duration::from_secs(1)).unwrap() {
+        Reply::Failed(msg) => assert!(msg.contains("unknown model"), "got: {msg}"),
+        other => panic!("expected failure, got {other:?}"),
+    }
+    assert_eq!(executions_of(&rig, &ForgetSpec::Class(4)), 0);
+
+    let stats = fleet.shutdown().unwrap();
+    assert_eq!(stats.admitted, 1);
+    // the per-model rollup has exactly the served model's row
+    assert_eq!(stats.per_model.len(), 1);
+    assert_eq!(stats.per_model[0].0, ModelId::default());
+    assert_eq!(stats.per_model[0].1.served, 1);
 }
 
 #[test]

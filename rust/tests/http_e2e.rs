@@ -11,10 +11,16 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use ficabu::config::{ModelMeta, SharedMeta};
 use ficabu::coordinator::{
-    Fleet, FleetConfig, HttpConfig, HttpServer, Summary, Timing, UnlearnService,
+    Fleet, FleetConfig, HttpConfig, HttpServer, ModelId, Summary, Timing, UnlearnService,
+    WorkerSpec,
 };
-use ficabu::unlearn::ForgetSpec;
+use ficabu::data::{cifar20_like, DatasetCfg};
+use ficabu::fisher::Importance;
+use ficabu::model::ParamStore;
+use ficabu::runtime::Precision;
+use ficabu::unlearn::{ForgetSpec, UnlearnConfig};
 use ficabu::util::json::Json;
 
 /// Mock worker core (same shape as tests/dispatch.rs): every `unlearn`
@@ -38,6 +44,8 @@ impl UnlearnService for MockService {
             anyhow::bail!("boom on class 13");
         }
         Ok(Summary {
+            model: ModelId::default(),
+            config_hash: 0,
             spec: spec.clone(),
             forget_acc: 0.04,
             retain_acc: 0.92,
@@ -349,6 +357,80 @@ fn hostile_payloads_answer_400_and_the_server_survives() {
     rig.tokens.send(()).unwrap();
     let (status, j) = roundtrip(addr, "POST", "/forget", r#"{"spec": "class:1"}"#);
     assert_eq!(status, 200, "body: {j}");
+
+    teardown(srv, fleet);
+}
+
+#[test]
+fn tenancy_routes_over_the_wire() {
+    let (srv, fleet, rig) = serve(FleetConfig::default(), HttpConfig::default());
+    let addr = srv.local_addr();
+    rig.tokens.send(()).unwrap();
+
+    // the model-addressed route serves the fleet's default model, and
+    // the summary carries the tenancy fields the batch key stamped
+    let (status, j) = roundtrip(addr, "POST", "/models/default/forget", r#"{"spec": "class:2"}"#);
+    assert_eq!(status, 200, "body: {j}");
+    let sm = j.get("summary").unwrap();
+    assert_eq!(sm.get("model").unwrap().as_str(), Some("default"));
+    assert_eq!(sm.get("config_hash").unwrap().as_str(), Some("0000000000000000"));
+
+    // unknown model: machine-readable 404, never admitted
+    let (status, j) = roundtrip(addr, "POST", "/models/tenant-z/forget", r#"{"spec": "class:2"}"#);
+    assert_eq!(status, 404, "body: {j}");
+    assert_eq!(j.get("code").unwrap().as_str(), Some("unknown-model"));
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("tenant-z"));
+
+    // the legacy route accepts an optional `model` body field
+    rig.tokens.send(()).unwrap();
+    let body = r#"{"spec": "class:3", "model": "default"}"#;
+    let (status, j) = roundtrip(addr, "POST", "/forget", body);
+    assert_eq!(status, 200, "body: {j}");
+    let body = r#"{"spec": "class:3", "model": "tenant-z"}"#;
+    let (status, j) = roundtrip(addr, "POST", "/forget", body);
+    assert_eq!(status, 404, "body: {j}");
+    assert_eq!(j.get("code").unwrap().as_str(), Some("unknown-model"));
+
+    // service-factory fleets have no model metadata to list
+    let (status, j) = roundtrip(addr, "GET", "/models", "");
+    assert_eq!(status, 200);
+    assert_eq!(j.get("models").unwrap().as_arr().unwrap().len(), 0);
+
+    teardown(srv, fleet);
+}
+
+#[test]
+fn models_listing_fields_are_pinned_on_a_production_fleet() {
+    // a real single-model fleet synthesizes its own `GET /models` row
+    let meta = ModelMeta::builtin("rn18slim").unwrap();
+    let mut global = Importance::zeros_like(&meta);
+    global.floor(1e-6);
+    let dcfg = DatasetCfg { train_per_class: 4, test_per_class: 1, ..DatasetCfg::cifar20() };
+    let (train, _) = cifar20_like(&dcfg);
+    let wspec = WorkerSpec {
+        meta: meta.clone(),
+        shared: SharedMeta::builtin(),
+        params: ParamStore::init(&meta, 3),
+        global,
+        train,
+        cfg: UnlearnConfig::default(),
+        precision: Precision::F32,
+    };
+    let fleet = Arc::new(Fleet::start(wspec, FleetConfig::default()).expect("fleet starts"));
+    let srv = HttpServer::bind("127.0.0.1:0", Arc::clone(&fleet), HttpConfig::default())
+        .expect("server binds");
+
+    let (status, j) = roundtrip(srv.local_addr(), "GET", "/models", "");
+    assert_eq!(status, 200);
+    let rows = j.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 1);
+    let row = &rows[0];
+    // wire pin: every field a client switches on, with their formats
+    assert_eq!(row.get("id").unwrap().as_str(), Some("default"));
+    assert_eq!(row.get("spec_key").unwrap().as_str().unwrap().len(), 16);
+    assert_eq!(row.get("config_hash").unwrap().as_str().unwrap().len(), 16);
+    assert_eq!(row.get("precision").unwrap().as_str(), Some("f32"));
+    assert_eq!(row.get("warm").unwrap().as_bool(), Some(true));
 
     teardown(srv, fleet);
 }

@@ -1,0 +1,334 @@
+//! Multi-tenant serving end-to-end: two models behind one fleet.
+//!
+//! These tests run the real pipeline (rn18slim on a small cifar20-like
+//! dataset) through [`ModelRegistry`]-backed fleets and pin the four
+//! guarantees the registry design makes:
+//!
+//! 1. **Tenancy**: interleaved forgets against two models with
+//!    different `UnlearnConfig`s each come back stamped with their own
+//!    model id and config fingerprint, and never coalesce across
+//!    tenants.
+//! 2. **Copy-on-write**: a registry run is bitwise identical to a
+//!    dedicated single-model fleet of the same shape, and *stays*
+//!    bitwise identical on repeat requests — the frozen master never
+//!    drifts the way a legacy replica's private store does.
+//! 3. **Eviction**: a model evicted by the warm-LRU cap re-warms
+//!    transparently through the serving path and reproduces its
+//!    pre-eviction results bit for bit.
+//! 4. **Shared compilation**: worker spin-up is O(1) — graphs compile
+//!    once per process on first use, never per worker — and durable
+//!    replay routes model-addressed ledger entries through the
+//!    registry, mixing tenants in a single claimed batch.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use ficabu::config::{ModelMeta, SharedMeta};
+use ficabu::coordinator::wal::{self, Wal};
+use ficabu::coordinator::{
+    DurabilityConfig, Fleet, FleetConfig, ModelId, ModelRegistry, Reply, Summary, WorkerSpec,
+};
+use ficabu::data::{cifar20_like, DatasetCfg};
+use ficabu::fisher::Importance;
+use ficabu::model::ParamStore;
+use ficabu::runtime::{Precision, Runtime};
+use ficabu::unlearn::{ForgetSpec, Ssd, UnlearnConfig};
+
+/// A real (small) worker spec: rn18slim, deterministic params from
+/// `seed`, 4 train / 1 test sample per class.
+fn wspec(seed: u64, cfg: UnlearnConfig) -> WorkerSpec {
+    let meta = ModelMeta::builtin("rn18slim").unwrap();
+    let params = ParamStore::init(&meta, seed);
+    let mut global = Importance::zeros_like(&meta);
+    global.floor(1e-6);
+    let dcfg = DatasetCfg { train_per_class: 4, test_per_class: 1, ..DatasetCfg::cifar20() };
+    let (train, _) = cifar20_like(&dcfg);
+    WorkerSpec {
+        meta,
+        shared: SharedMeta::builtin(),
+        params,
+        global,
+        train,
+        cfg,
+        precision: Precision::F32,
+    }
+}
+
+/// Two tenants with distinct masters *and* distinct serving configs, so
+/// their batch keys differ in both the model and the config half.
+fn two_tenant_registry() -> (Arc<ModelRegistry>, ModelId, ModelId) {
+    let reg = ModelRegistry::new(Runtime::cpu().unwrap());
+    let a = ModelId::new("tenant-a").unwrap();
+    let b = ModelId::new("tenant-b").unwrap();
+    reg.register(a.clone(), wspec(11, UnlearnConfig::default())).unwrap();
+    reg.register(b.clone(), wspec(22, Ssd::new(4.0, 0.8).into_config())).unwrap();
+    (Arc::new(reg), a, b)
+}
+
+fn done(rx: Receiver<Reply>) -> Summary {
+    match rx.recv().unwrap() {
+        Reply::Done(s) => s,
+        other => panic!("expected Done, got {other:?}"),
+    }
+}
+
+/// Bitwise comparison of everything the unlearning event *computed*
+/// (tenancy stamps and measured timing excluded: the former is the
+/// address under test elsewhere, the latter is wall-clock).
+fn assert_bitwise(a: &Summary, b: &Summary, what: &str) {
+    assert_eq!(a.spec, b.spec, "{what}: spec");
+    assert_eq!(a.forget_acc.to_bits(), b.forget_acc.to_bits(), "{what}: forget_acc");
+    assert_eq!(a.retain_acc.to_bits(), b.retain_acc.to_bits(), "{what}: retain_acc");
+    assert_eq!(a.stop_depth, b.stop_depth, "{what}: stop_depth");
+    assert_eq!(
+        a.macs_vs_ssd_pct.to_bits(),
+        b.macs_vs_ssd_pct.to_bits(),
+        "{what}: macs_vs_ssd_pct"
+    );
+    assert_eq!(a.sim_energy_mj.to_bits(), b.sim_energy_mj.to_bits(), "{what}: sim_energy_mj");
+    assert_eq!(
+        a.sim_energy_vs_ssd_pct.to_bits(),
+        b.sim_energy_vs_ssd_pct.to_bits(),
+        "{what}: sim_energy_vs_ssd_pct"
+    );
+    assert_eq!(a.sim_ms.to_bits(), b.sim_ms.to_bits(), "{what}: sim_ms");
+    assert_eq!(a.rolled_back, b.rolled_back, "{what}: rolled_back");
+}
+
+fn wal_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ficabu_registry_wal_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn two_tenants_interleave_on_one_fleet_without_cross_coalescing() {
+    let (reg, a, b) = two_tenant_registry();
+    let hash_a = reg.config_hash(&a).unwrap();
+    let hash_b = reg.config_hash(&b).unwrap();
+    assert_ne!(hash_a, hash_b, "distinct configs must fingerprint apart");
+
+    let fleet = Fleet::start_registry(
+        Arc::clone(&reg),
+        FleetConfig { workers: 2, queue_cap: 16, ..FleetConfig::default() },
+    )
+    .unwrap();
+
+    // Interleave the tenants, including the *same* spec for both — the
+    // shared spec must stay two entries (two executions), because the
+    // batch key carries the model.
+    let order = [
+        (a.clone(), ForgetSpec::Class(0)),
+        (b.clone(), ForgetSpec::Class(0)),
+        (a.clone(), ForgetSpec::Class(1)),
+        (b.clone(), ForgetSpec::Class(1)),
+        (a.clone(), ForgetSpec::Class(9)),
+        (b.clone(), ForgetSpec::Class(9)),
+    ];
+    let rxs: Vec<_> = order
+        .iter()
+        .map(|(m, s)| fleet.submit_to(m.clone(), s.clone(), None))
+        .collect();
+    for ((model, spec), rx) in order.iter().zip(rxs) {
+        let s = done(rx);
+        assert_eq!(&s.model, model, "summary stamps the addressed tenant");
+        assert_eq!(s.spec, *spec);
+        let want = if *model == a { hash_a } else { hash_b };
+        assert_eq!(s.config_hash, want, "summary stamps the tenant's config fingerprint");
+    }
+
+    let stats = fleet.shutdown().unwrap();
+    assert_eq!(stats.admitted, 6, "every (model, spec) pair is its own entry");
+    assert_eq!(stats.coalesced, 0, "the same spec never coalesces across tenants");
+    assert_eq!(stats.per_model.len(), 2, "one rollup row per tenant");
+    for (id, q) in &stats.per_model {
+        assert_eq!(q.served, 3, "tenant {id} served its three requests");
+        assert_eq!(q.failures, 0);
+    }
+}
+
+#[test]
+fn registry_run_is_bitwise_equal_to_a_dedicated_fleet_and_never_drifts() {
+    let base = wspec(5, UnlearnConfig::default());
+
+    let reg = ModelRegistry::new(Runtime::cpu().unwrap());
+    reg.register(ModelId::default(), base.clone()).unwrap();
+    let reg_fleet = Fleet::start_registry(
+        Arc::new(reg),
+        FleetConfig { workers: 1, ..FleetConfig::default() },
+    )
+    .unwrap();
+    let dedicated =
+        Fleet::start(base, FleetConfig { workers: 1, ..FleetConfig::default() }).unwrap();
+
+    // Same worker id, same seed, same master: the CoW overlay must
+    // reproduce the dedicated replica's edits bit for bit.
+    let s_reg = done(reg_fleet.submit_to(ModelId::default(), ForgetSpec::Class(3), None));
+    let s_ded = done(dedicated.submit(ForgetSpec::Class(3)));
+    assert_bitwise(&s_reg, &s_ded, "registry vs dedicated");
+    assert_eq!(s_reg.model, s_ded.model);
+    assert_eq!(s_reg.config_hash, s_ded.config_hash, "both fingerprint the same config");
+
+    // Repeat request on the registry fleet: deltas died with the first
+    // summary and the master is frozen, so the answer is identical. (A
+    // legacy replica would serve the repeat against its already-edited
+    // private store.)
+    let s_again = done(reg_fleet.submit_to(ModelId::default(), ForgetSpec::Class(3), None));
+    assert_bitwise(&s_reg, &s_again, "repeat on a frozen master");
+
+    reg_fleet.shutdown().unwrap();
+    dedicated.shutdown().unwrap();
+}
+
+#[test]
+fn eviction_and_rewarm_round_trip_through_the_serving_path() {
+    let reg = ModelRegistry::new(Runtime::cpu().unwrap()).with_warm_cap(1);
+    let a = ModelId::new("tenant-a").unwrap();
+    let b = ModelId::new("tenant-b").unwrap();
+    reg.register(a.clone(), wspec(11, UnlearnConfig::default())).unwrap();
+    reg.register(b.clone(), wspec(22, UnlearnConfig::default())).unwrap();
+    let reg = Arc::new(reg);
+
+    let fleet = Fleet::start_registry(
+        Arc::clone(&reg),
+        FleetConfig { workers: 1, ..FleetConfig::default() },
+    )
+    .unwrap();
+
+    let warm_flags = |reg: &ModelRegistry| -> Vec<bool> {
+        reg.list().iter().map(|m| m.warm).collect() // sorted by id: [a, b]
+    };
+
+    let first = done(fleet.submit_to(a.clone(), ForgetSpec::Class(1), None));
+    assert_eq!(reg.builds(), 1);
+    assert_eq!(warm_flags(&reg), [true, false]);
+
+    // Serving b exceeds the warm cap of 1 and evicts a.
+    done(fleet.submit_to(b.clone(), ForgetSpec::Class(1), None));
+    assert_eq!(reg.builds(), 2);
+    assert_eq!(warm_flags(&reg), [false, true]);
+
+    // Serving a again re-warms it through the normal path — and because
+    // the master is frozen, the rebuilt graph answers bit for bit what
+    // the evicted one did.
+    let again = done(fleet.submit_to(a.clone(), ForgetSpec::Class(1), None));
+    assert_eq!(reg.builds(), 3, "re-warm is a counted rebuild");
+    assert_eq!(warm_flags(&reg), [true, false]);
+    assert_bitwise(&first, &again, "pre- vs post-eviction");
+
+    fleet.shutdown().unwrap();
+}
+
+#[test]
+fn worker_spinup_never_rebuilds_shared_graphs() {
+    let (reg, a, b) = two_tenant_registry();
+    let fleet = Fleet::start_registry(
+        Arc::clone(&reg),
+        FleetConfig { workers: 4, queue_cap: 16, ..FleetConfig::default() },
+    )
+    .unwrap();
+    assert_eq!(reg.builds(), 0, "spinning up 4 workers compiles nothing");
+
+    let rxs: Vec<_> = (0..4usize)
+        .map(|c| {
+            let m = if c % 2 == 0 { a.clone() } else { b.clone() };
+            fleet.submit_to(m, ForgetSpec::Class(c), None)
+        })
+        .collect();
+    for rx in rxs {
+        done(rx);
+    }
+    fleet.shutdown().unwrap();
+    assert_eq!(
+        reg.builds(),
+        2,
+        "4 workers x 2 models compile exactly once per model, not per worker"
+    );
+}
+
+#[test]
+fn durable_replay_routes_tenants_and_mixes_them_in_one_claim() {
+    let dir = wal_dir("replay");
+    let (reg, a, b) = two_tenant_registry();
+    let hash_a = reg.config_hash(&a).unwrap();
+    let hash_b = reg.config_hash(&b).unwrap();
+
+    // Run 1 creates the ledger, serves nothing, shuts down clean.
+    Fleet::start_registry_durable(
+        Arc::clone(&reg),
+        FleetConfig { workers: 1, ..FleetConfig::default() },
+        DurabilityConfig { dir: dir.clone(), checkpoint_every: 8 },
+    )
+    .unwrap()
+    .shutdown()
+    .unwrap();
+
+    // Simulate a crash after admission: accepted records with no
+    // completions. The same spec appears for both tenants (two distinct
+    // batch keys) and twice for tenant-a (one key — recovery dedups).
+    {
+        let (w, _tail) = Wal::open_append(dir.join(wal::LEDGER_FILE)).unwrap();
+        w.append_accepted(&a, &ForgetSpec::Class(7), hash_a, None).unwrap();
+        w.append_accepted(&b, &ForgetSpec::Class(7), hash_b, None).unwrap();
+        w.append_accepted(&a, &ForgetSpec::Class(7), hash_a, None).unwrap();
+    }
+
+    // Run 2: replay pre-seeds the queue before the single worker
+    // spawns, so its first pass claims both tenants' entries in one
+    // lock acquisition — a mixed batch.
+    let fleet = Fleet::start_registry_durable(
+        Arc::clone(&reg),
+        FleetConfig { workers: 1, batch_max: 4, ..FleetConfig::default() },
+        DurabilityConfig { dir: dir.clone(), checkpoint_every: 8 },
+    )
+    .unwrap();
+    let stats = fleet.shutdown().unwrap();
+
+    let dur = stats.durability.expect("durable fleet reports ledger counters");
+    assert_eq!(dur.replayed, 2, "3 accepted records, 2 batch keys");
+    assert_eq!(stats.admitted, 2);
+    assert_eq!(stats.merged().max_batch, 2, "one claim took both tenants");
+    assert_eq!(stats.per_model.len(), 2);
+    for (id, q) in &stats.per_model {
+        assert_eq!(q.served, 1, "tenant {id} replayed exactly once");
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn ledger_addressing_an_unregistered_model_fails_startup_loudly() {
+    let dir = wal_dir("unknown");
+    let reg = ModelRegistry::new(Runtime::cpu().unwrap());
+    let a = ModelId::new("tenant-a").unwrap();
+    reg.register(a.clone(), wspec(11, UnlearnConfig::default())).unwrap();
+    let reg = Arc::new(reg);
+
+    Fleet::start_registry_durable(
+        Arc::clone(&reg),
+        FleetConfig { workers: 1, ..FleetConfig::default() },
+        DurabilityConfig { dir: dir.clone(), checkpoint_every: 8 },
+    )
+    .unwrap()
+    .shutdown()
+    .unwrap();
+    {
+        let (w, _tail) = Wal::open_append(dir.join(wal::LEDGER_FILE)).unwrap();
+        w.append_accepted(&ModelId::new("tenant-b").unwrap(), &ForgetSpec::Class(2), 0, None)
+            .unwrap();
+    }
+
+    let err = Fleet::start_registry_durable(
+        Arc::clone(&reg),
+        FleetConfig { workers: 1, ..FleetConfig::default() },
+        DurabilityConfig { dir: dir.clone(), checkpoint_every: 8 },
+    )
+    .err()
+    .expect("an unroutable ledger must refuse startup");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("tenant-b"), "error names the model: {msg}");
+    assert!(msg.contains("not registered"), "error says why: {msg}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
