@@ -25,7 +25,11 @@ validate FILE
       4-worker arm's rps. A serve/wal-paced/* arm (write-ahead ledger +
       checkpoints on) must exist, must actually have ledgered (wal_seq
       > 0), and must keep >= 80% of the fault-free paced 4-worker arm's
-      rps. A serve/multi-tenant/workers=* arm (model registry) must
+      rps. A serve/audited-paced/* arm (hash-chained audit log + MIA
+      attestation riding every completion) must exist, must actually
+      have attested (attested > 0, chain_len > 0), and must keep >= 90%
+      of the fault-free paced 4-worker arm's rps.
+      A serve/multi-tenant/workers=* arm (model registry) must
       exist with graph_builds <= models (workers share Arc'd compiled
       graphs — no per-worker rebuild), and a
       serve/registry-spinup/workers=* arm must exist with
@@ -54,6 +58,7 @@ NOISY_PREFIXES = (
     "serve/spec-",
     "serve/chaos-",
     "serve/wal-paced",
+    "serve/audited-paced",
     "serve/registry-spinup",
     "prepare ",
 )
@@ -211,6 +216,29 @@ def _check_serve(cases, path, min_speedup):
             f"fault-free paced arm ({paced_rps:.3f} rps) — the ledger fsyncs "
             "are dominating the paced envelope"
         )
+    # audited arm: the hash-chained audit log and the per-forget MIA
+    # attestation probes must stay benched, must actually attest, and
+    # must ride the paced envelope (>= 90% of fault-free throughput —
+    # the probes are O(eval), the chain append is one fsync'd frame)
+    audited_arms = [n for n in cases if n.startswith("serve/audited-paced")]
+    if not audited_arms:
+        _fail(f"{path}: no serve/audited-paced* arm (audit chain unbenched)")
+    audited = cases[audited_arms[0]]
+    audited_rps = audited.get("rps")
+    if not isinstance(audited_rps, (int, float)) or audited_rps <= 0:
+        _fail(f"{path}: {audited_arms[0]!r} has no positive 'rps' field")
+    for field in ("attested", "chain_len"):
+        if not isinstance(audited.get(field), (int, float)) or audited[field] <= 0:
+            _fail(
+                f"{path}: {audited_arms[0]!r} recorded no audit evidence "
+                f"({field} = {audited.get(field)!r}) — the audited arm ran dry"
+            )
+    if audited_rps < 0.9 * paced_rps:
+        _fail(
+            f"{path}: audited throughput {audited_rps:.3f} rps below 90% of "
+            f"the fault-free paced arm ({paced_rps:.3f} rps) — the audit "
+            "chain or the attestation probes are dominating the envelope"
+        )
     # multi-tenant arm: the model registry must stay benched — several
     # models behind one fleet with compiled graphs Arc-shared (builds
     # bounded by the model count, no matter how many workers serve), and
@@ -250,8 +278,10 @@ def _check_serve(cases, path, min_speedup):
         f"serve guardrail OK: paced 4v1 speedup {speedup:.2f}x, "
         f"{len(spec_arms)} spec arm(s), lazy scan "
         f"{tree / max(lazy, 1e-9):.1f}x faster than tree parse, "
-        f"chaos at {chaos_rps / paced_rps:.2f}x and durable at "
-        f"{wal_rps / paced_rps:.2f}x of fault-free throughput, "
+        f"chaos at {chaos_rps / paced_rps:.2f}x, durable at "
+        f"{wal_rps / paced_rps:.2f}x, and audited at "
+        f"{audited_rps / paced_rps:.2f}x of fault-free throughput "
+        f"({audited['attested']:.0f} attested link(s)), "
         f"{models:.0f}-model registry at {builds:.0f} graph build(s)"
     )
 

@@ -37,6 +37,11 @@
 //!   durability subsystem on (fsync'd write-ahead ledger + periodic
 //!   parameter checkpoints); CI's validate step asserts it keeps ≥ 80%
 //!   of the fault-free paced throughput.
+//! * `serve/audited-paced/workers=4` — the wal-paced arm with the full
+//!   audit pipeline measured: hash-chained `audit.log` appends and the
+//!   per-forget MIA attestation probes ride every completion, and the
+//!   chain is offline-verified after shutdown. CI's validate step
+//!   asserts it keeps ≥ 90% of the fault-free paced throughput.
 //! * `serve/multi-tenant/workers=4` — two models (distinct operating
 //!   points) behind one registry fleet, mixed load addressed per model.
 //!   CI's validate step gates the `graph_builds` extra: compiled graphs
@@ -525,6 +530,92 @@ fn run_wal_arm(
     Ok(())
 }
 
+/// Audited-durability arm: identical load to `run_wal_arm`, but the
+/// case is gated on the *audit* cost riding every completion — the MIA
+/// attestation probes in the engine, the hash-chained `audit.log`
+/// append under the pair lock, and (after shutdown) a full offline
+/// chain verification. `attested` counts links carrying evidence;
+/// `chain_len` is the verified chain length.
+fn run_audited_arm(
+    b: &Bench,
+    prep: &Prepared,
+    shared: &SharedMeta,
+    workers: usize,
+    requests: usize,
+    pacing: Pacing,
+) -> anyhow::Result<()> {
+    let dir =
+        std::env::temp_dir().join(format!("ficabu_bench_audit_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let num_classes = prep.model.meta.num_classes;
+    let fleet = Fleet::start_durable(
+        spec_for(prep, shared),
+        FleetConfig {
+            workers,
+            queue_cap: requests + 4,
+            deadline: None,
+            batch_max: 1,
+            pacing,
+            respawn_giveup: 5,
+        },
+        DurabilityConfig { dir: dir.clone(), checkpoint_every: 8 },
+    )?;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| fleet.submit(ForgetSpec::Class(i % num_classes)))
+        .collect();
+    let mut done = 0usize;
+    for rx in rxs {
+        match rx.recv() {
+            Ok(Reply::Done(_)) => done += 1,
+            Ok(other) => anyhow::bail!("audited-paced: unexpected reply {other:?}"),
+            Err(e) => anyhow::bail!("audited-paced: reply channel closed ({e})"),
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let chain = fleet.audit_chain(&ModelId::default());
+    let stats = fleet.shutdown()?;
+    let report = ficabu::audit::verify_dir(&dir)?;
+    // Identical specs coalesce into one execution (one link answering
+    // several requests), so the chain may be shorter than the request
+    // count — but never empty, and disk must agree with memory.
+    anyhow::ensure!(
+        !report.records.is_empty() && chain.len() == report.records.len(),
+        "every completed execution appends one verifiable chain link \
+         ({} on disk, {} in memory, {requests} requests)",
+        report.records.len(),
+        chain.len()
+    );
+    let attested = report.records.iter().filter(|r| r.attest.is_some()).count();
+    anyhow::ensure!(
+        attested == report.records.len(),
+        "real engine executions always attest ({attested} of {})",
+        report.records.len()
+    );
+    let total = stats.merged();
+    let rps = done as f64 / (wall_ms / 1e3);
+    let mut extras = vec![
+        ("rps", rps),
+        ("workers", workers as f64),
+        ("attested", attested as f64),
+        ("chain_len", report.records.len() as f64),
+    ];
+    extras.extend(total.percentile_fields());
+    b.record_case(
+        &format!("serve/audited-paced/workers={workers}"),
+        requests,
+        wall_ms,
+        wall_ms / requests as f64,
+        &extras,
+    );
+    println!(
+        "[serve] audited-paced: {done} done, chain {} link(s), {attested} attested, verified",
+        report.records.len()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
 /// Multi-tenant arm: two models with distinct operating points behind
 /// one registry fleet, driven with a mixed, model-addressed load. Two
 /// cases come out of one run:
@@ -773,6 +864,9 @@ fn main() -> anyhow::Result<()> {
 
     // --- durability arm: the same paced 4-worker fleet, ledger on
     run_wal_arm(&b, &prep, &shared, 4, paced_requests, paced)?;
+
+    // --- audited arm: ledger + hash-chained audit log + MIA attestation
+    run_audited_arm(&b, &prep, &shared, 4, paced_requests, paced)?;
 
     // --- multi-tenant arm: two models behind one registry fleet, plus
     // the registry worker spin-up case

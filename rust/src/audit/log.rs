@@ -1,0 +1,370 @@
+//! Durable per-model audit chains: the `audit.log` file beside the WAL.
+//!
+//! # On-disk layout
+//!
+//! ```text
+//! header:  "FICABUA1"
+//! record:  len u32 LE | crc32(payload) u32 LE | payload (len bytes)
+//! payload: the record's full canonical JSON ([`AuditRecord::to_json`])
+//! ```
+//!
+//! Framing and torn-write semantics are exactly the WAL's
+//! ([`wal`](crate::coordinator::wal)): appends are sequential
+//! `write_all` + fsync, a crash can tear at most the tail, and a scan
+//! stops at the first frame that is short, implausibly sized, fails its
+//! CRC32, or does not decode to a schema-valid record. Unlike the WAL
+//! there is no generation word — the chain deliberately survives ledger
+//! generations (recovery re-enters it instead of rewriting it).
+//!
+//! # Taint semantics
+//!
+//! An append that cannot reach disk (I/O error, `audit_append` fault)
+//! must not block the reply path and must not silently drop the link:
+//! the record enters the *in-memory* chain with `tainted: true`, later
+//! links chain their `prev_hash` over it, and the on-disk chain keeps a
+//! permanent, detectable hole at that position — `audit verify` fails
+//! loudly there, which is the flag. Checkpoint [`ChainHead`]s are
+//! computed from persisted links only.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::wal::crc32;
+use crate::coordinator::ModelId;
+use crate::testkit::faults;
+
+use super::{AuditRecord, ChainHead};
+
+/// Audit chain file name inside the durable directory.
+pub const AUDIT_FILE: &str = "audit.log";
+
+const MAGIC: &[u8; 8] = b"FICABUA1";
+/// Upper bound on one framed record — larger is treated as corruption.
+const MAX_RECORD: u32 = 16 << 20;
+
+/// Result of scanning an `audit.log` under the torn-write rules: the
+/// valid record prefix plus where it ends.
+#[derive(Debug)]
+pub struct AuditScan {
+    /// Schema-valid records in file order.
+    pub records: Vec<AuditRecord>,
+    /// Byte length of the valid prefix (header included).
+    pub valid_len: u64,
+    /// Whether bytes past `valid_len` were found (torn tail/corruption).
+    pub truncated: bool,
+}
+
+/// Scan `path` front to back, stopping at the first torn or corrupt
+/// frame. A missing or wrong header is a loud error: appends never
+/// touch the header after creation, so a bad one is disk corruption of
+/// the proof record, not a crash artifact — it must not read as an
+/// empty chain.
+pub fn read_log(path: &Path) -> Result<AuditScan> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading audit log {}", path.display()))?;
+    if bytes.len() < 8 || &bytes[..8] != MAGIC {
+        bail!("audit log {} has a corrupt or missing FICABUA1 header", path.display());
+    }
+    let mut records = Vec::new();
+    let mut pos = 8usize;
+    loop {
+        if pos + 8 > bytes.len() {
+            break; // clean end or short frame header
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if len == 0 || len > MAX_RECORD {
+            break;
+        }
+        let end = pos + 8 + len as usize;
+        if end > bytes.len() {
+            break; // torn payload
+        }
+        let payload = &bytes[pos + 8..end];
+        if crc32(payload) != crc {
+            break;
+        }
+        let Ok(text) = std::str::from_utf8(payload) else { break };
+        let Ok(json) = crate::util::json::Json::parse(text) else { break };
+        let Ok(rec) = AuditRecord::from_json(&json) else {
+            break; // checksummed but schema-invalid: stop, same as torn
+        };
+        records.push(rec);
+        pos = end;
+    }
+    Ok(AuditScan { records, valid_len: pos as u64, truncated: pos < bytes.len() })
+}
+
+/// Atomically replace the log at `path` with exactly `records` (tmp +
+/// fsync + rename + dir fsync) — recovery's orphan truncation.
+pub fn write_replacing(path: &Path, records: &[AuditRecord]) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    for rec in records {
+        frame_into(&mut buf, rec);
+    }
+    let tmp = path.with_extension("log.tmp");
+    {
+        let mut f = File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&buf)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    crate::coordinator::wal::sync_dir(path.parent().unwrap_or(Path::new(".")));
+    Ok(())
+}
+
+fn frame_into(buf: &mut Vec<u8>, rec: &AuditRecord) {
+    let payload = rec.to_json().to_string().into_bytes();
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&crc32(&payload).to_le_bytes());
+    buf.extend_from_slice(&payload);
+}
+
+#[derive(Default)]
+struct ModelChain {
+    /// The full in-memory chain, tainted links included — this is what
+    /// later links' `prev_hash` covers and what the fleet serves over
+    /// `GET /models/{id}/audit`.
+    records: Vec<AuditRecord>,
+    /// `(chain_seq, core_hash)` of the newest *persisted* link — the
+    /// checkpoint anchor.
+    persisted: Option<(u64, u64)>,
+}
+
+/// Append handle over one `audit.log` plus the in-memory per-model
+/// chains. Not internally locked: the owner
+/// ([`Durability`](crate::coordinator::Durability)) serializes access,
+/// and the same lock pairs each audit append with its WAL `Completed`
+/// append so a crash leaves at most one trailing orphan record.
+pub struct AuditLog {
+    path: PathBuf,
+    file: File,
+    chains: BTreeMap<String, ModelChain>,
+}
+
+impl AuditLog {
+    /// Open (or create) the log for appending: scan it, physically
+    /// truncate any torn tail, and seed the in-memory chains from the
+    /// persisted records.
+    pub fn open_append(path: impl AsRef<Path>) -> Result<AuditLog> {
+        let path = path.as_ref().to_path_buf();
+        if !path.exists() {
+            let mut f =
+                File::create(&path).with_context(|| format!("creating {}", path.display()))?;
+            f.write_all(MAGIC)?;
+            f.sync_all()?;
+            crate::coordinator::wal::sync_dir(path.parent().unwrap_or(Path::new(".")));
+        }
+        let scan = read_log(&path)?;
+        let file = OpenOptions::new().append(true).open(&path)?;
+        if scan.truncated {
+            file.set_len(scan.valid_len)?;
+            file.sync_all()?;
+        }
+        let mut chains: BTreeMap<String, ModelChain> = BTreeMap::new();
+        for rec in scan.records {
+            let chain = chains.entry(rec.model.as_str().to_string()).or_default();
+            chain.persisted = Some((rec.chain_seq, rec.core_hash()));
+            chain.records.push(rec);
+        }
+        Ok(AuditLog { path, file, chains })
+    }
+
+    /// Path of the underlying file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record: stamp `chain_seq`/`prev_hash` from the
+    /// in-memory chain, then persist (framed + fsync'd). A persist
+    /// failure taints the record instead of erroring — the link stays
+    /// in the chain, flagged, and the caller's reply path continues.
+    /// Returns the stamped record.
+    pub fn append(&mut self, mut rec: AuditRecord) -> AuditRecord {
+        let (chain_seq, prev_hash) = match self.chains.get(rec.model.as_str()) {
+            Some(c) => match c.records.last() {
+                Some(last) => (last.chain_seq + 1, last.core_hash()),
+                None => (1, AuditRecord::genesis_hash(&rec.model)),
+            },
+            None => (1, AuditRecord::genesis_hash(&rec.model)),
+        };
+        rec.chain_seq = chain_seq;
+        rec.prev_hash = prev_hash;
+        rec.tainted = false;
+        if let Err(e) = self.persist(&rec) {
+            rec.tainted = true;
+            eprintln!(
+                "ficabu: audit append failed for model {} chain seq {chain_seq} \
+                 (link tainted, serving continues): {e:#}",
+                rec.model
+            );
+        }
+        let chain = self.chains.entry(rec.model.as_str().to_string()).or_default();
+        if !rec.tainted {
+            chain.persisted = Some((rec.chain_seq, rec.core_hash()));
+        }
+        chain.records.push(rec.clone());
+        rec
+    }
+
+    fn persist(&mut self, rec: &AuditRecord) -> Result<()> {
+        faults::hit("audit_append")?;
+        let mut frame = Vec::new();
+        frame_into(&mut frame, rec);
+        self.file.write_all(&frame)?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+
+    /// The in-memory chain of one model (tainted links included);
+    /// empty when the model has no links.
+    pub fn chain(&self, model: &ModelId) -> Vec<AuditRecord> {
+        self.chains.get(model.as_str()).map(|c| c.records.clone()).unwrap_or_default()
+    }
+
+    /// Ids of every model with at least one link, in sorted order.
+    pub fn models(&self) -> Vec<ModelId> {
+        self.chains
+            .keys()
+            .filter_map(|id| ModelId::new(id.as_str()).ok())
+            .collect()
+    }
+
+    /// Per-model heads over *persisted* links only — what checkpoints
+    /// embed. Models whose every link is tainted have no head yet.
+    pub fn heads(&self) -> Vec<ChainHead> {
+        self.chains
+            .iter()
+            .filter_map(|(id, c)| {
+                let (chain_len, head_hash) = c.persisted?;
+                Some(ChainHead { model: ModelId::new(id.as_str()).ok()?, chain_len, head_hash })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audit::test_record;
+    use std::sync::{Mutex, MutexGuard, PoisonError};
+
+    // `faults` plans are process-global; serialize the arming tests.
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    fn serial() -> MutexGuard<'static, ()> {
+        SERIAL.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ficabu_audit_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn append_reopen_roundtrip_chains_per_model() {
+        let dir = tmpdir("roundtrip");
+        let path = dir.join(AUDIT_FILE);
+        let mut log = AuditLog::open_append(&path).unwrap();
+        let a1 = log.append(test_record("tenant-a", 0, 0));
+        let b1 = log.append(test_record("tenant-b", 0, 0));
+        let a2 = log.append(test_record("tenant-a", 0, 0));
+        assert_eq!((a1.chain_seq, b1.chain_seq, a2.chain_seq), (1, 1, 2));
+        assert_eq!(a1.prev_hash, AuditRecord::genesis_hash(&a1.model));
+        assert_eq!(a2.prev_hash, a1.core_hash());
+        assert_eq!(b1.prev_hash, AuditRecord::genesis_hash(&b1.model));
+        drop(log);
+
+        let log = AuditLog::open_append(&path).unwrap();
+        let a = ModelId::new("tenant-a").unwrap();
+        let chain = log.chain(&a);
+        assert_eq!(chain.len(), 2);
+        assert_eq!(chain[1].prev_hash, chain[0].core_hash());
+        assert_eq!(log.models().len(), 2);
+        let heads = log.heads();
+        let ha = heads.iter().find(|h| h.model == a).unwrap();
+        assert_eq!((ha.chain_len, ha.head_hash), (2, a2.core_hash()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_on_reopen() {
+        let dir = tmpdir("torn");
+        let path = dir.join(AUDIT_FILE);
+        let mut log = AuditLog::open_append(&path).unwrap();
+        log.append(test_record("default", 0, 0));
+        log.append(test_record("default", 0, 0));
+        drop(log);
+        let whole = std::fs::read(&path).unwrap();
+        let mut torn = whole.clone();
+        torn.extend_from_slice(&[64, 0, 0, 0, 0xde, 0xad, 0xbe, 0xef, 1, 2, 3]);
+        std::fs::write(&path, &torn).unwrap();
+        let scan = read_log(&path).unwrap();
+        assert_eq!(scan.records.len(), 2);
+        assert!(scan.truncated);
+        let log = AuditLog::open_append(&path).unwrap();
+        assert_eq!(log.chain(&ModelId::default()).len(), 2);
+        drop(log);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), whole.len() as u64, "tail cut");
+        // corrupt header refuses loudly — proof files never read empty
+        let mut bad = whole;
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(read_log(&path).is_err());
+        assert!(AuditLog::open_append(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_append_taints_the_link_and_the_chain_continues() {
+        let _g = serial();
+        let dir = tmpdir("taint");
+        let path = dir.join(AUDIT_FILE);
+        let mut log = AuditLog::open_append(&path).unwrap();
+        let r1 = log.append(test_record("default", 0, 0));
+        faults::arm("audit_append:1:error").unwrap();
+        let r2 = log.append(test_record("default", 0, 0));
+        faults::clear();
+        let r3 = log.append(test_record("default", 0, 0));
+        assert!(!r1.tainted && r2.tainted && !r3.tainted);
+        // the tainted link is flagged, never dropped: it sits in the
+        // in-memory chain and r3 chains over it
+        let chain = log.chain(&ModelId::default());
+        assert_eq!(chain.len(), 3);
+        assert!(chain[1].tainted);
+        assert_eq!(r3.prev_hash, r2.core_hash());
+        assert_eq!(r3.chain_seq, 3);
+        // heads anchor on persisted links only
+        let heads = log.heads();
+        assert_eq!(heads[0].chain_len, 3, "r3 is persisted");
+        drop(log);
+        // on disk: links 1 and 3 — a permanent, detectable hole at 2
+        let scan = read_log(&path).unwrap();
+        assert_eq!(scan.records.len(), 2);
+        assert_eq!(scan.records[1].chain_seq, 3);
+        assert_ne!(scan.records[1].prev_hash, scan.records[0].core_hash());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_replacing_rewrites_exactly() {
+        let dir = tmpdir("replace");
+        let path = dir.join(AUDIT_FILE);
+        let mut log = AuditLog::open_append(&path).unwrap();
+        let r1 = log.append(test_record("default", 0, 0));
+        log.append(test_record("default", 0, 0));
+        drop(log);
+        write_replacing(&path, &[r1.clone()]).unwrap();
+        let scan = read_log(&path).unwrap();
+        assert_eq!(scan.records, vec![r1]);
+        assert!(!scan.truncated);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

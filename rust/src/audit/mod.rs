@@ -1,0 +1,411 @@
+//! Verifiable unlearning: hash-chained audit records with MIA attestation.
+//!
+//! Privacy regulation is the paper's motive, and a deployed right-to-be-
+//! forgotten endpoint must *prove* forgetting, not merely perform it.
+//! This module is the "prove" pillar next to serve (the fleet) and
+//! survive (the WAL): every completed forget emits an [`AuditRecord`] —
+//! the canonical spec, tenancy (model id + config fingerprint), build
+//! identity (git rev), executed precision, seed, before/after quality,
+//! and a membership-inference [`Attestation`]
+//! ([`ThresholdAttack`](crate::metrics::ThresholdAttack) member-rate on
+//! the forget set before vs after the edit) — serialized as canonical
+//! JSON and hash-chained per model:
+//!
+//! ```text
+//! record 1            record 2            record 3
+//! prev = fnv64(model) prev = H(record 1)  prev = H(record 2)   ...
+//! ```
+//!
+//! where `H` is FNV-1a 64 over the record's canonical *core* JSON (the
+//! record minus its durability coordinates `wal_seq`/`wal_gen`/`tainted` —
+//! recovery rewrites the ledger with fresh sequence numbers, so those
+//! coordinates are generation-local while the chain must hash
+//! identically across a crash; CRC framing in the log still detects any
+//! on-disk byte damage, see [`log`]).
+//!
+//! The chain lives in three places:
+//!
+//! * `audit.log` beside the WAL ([`log::AuditLog`], CRC-framed like
+//!   `wal.rs`), appended *before* the WAL `Completed` record under one
+//!   lock so a crash leaves at most one trailing orphan;
+//! * every durability checkpoint (`FICABUC3`) embeds the per-model
+//!   [`ChainHead`]s at checkpoint time;
+//! * [`ParamStore::save_with_provenance`](crate::model::ParamStore::save_with_provenance)
+//!   embeds the head record in shipped parameter files.
+//!
+//! [`verify`] re-validates all of it offline (`ficabu audit
+//! list|verify|prove`); the fleet surfaces chains live over
+//! `GET /models/{id}/audit`.
+
+pub mod log;
+pub mod verify;
+
+pub use log::{AuditLog, AuditScan, AUDIT_FILE};
+pub use verify::{prove, verify_dir, verify_records, VerifyReport};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::ModelId;
+use crate::unlearn::ForgetSpec;
+use crate::util::json::Json;
+
+/// FNV-1a 64 — the crate's fingerprint hash (same parameters as the
+/// dispatcher's config fingerprint), here over canonical record bytes.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Build identity stamped into every record: `FICABU_GIT_REV` when set
+/// (hermetic builds, tests), else `git rev-parse --short=12 HEAD`, else
+/// `"unknown"`. Resolved once per process.
+pub fn git_rev() -> &'static str {
+    use std::sync::OnceLock;
+    static REV: OnceLock<String> = OnceLock::new();
+    REV.get_or_init(|| {
+        if let Ok(v) = std::env::var("FICABU_GIT_REV") {
+            let v = v.trim().to_string();
+            if !v.is_empty() {
+                return v;
+            }
+        }
+        std::process::Command::new("git")
+            .args(["rev-parse", "--short=12", "HEAD"])
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .and_then(|o| String::from_utf8(o.stdout).ok())
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .unwrap_or_else(|| "unknown".to_string())
+    })
+}
+
+/// Membership-inference attestation of one forget: the threshold attack
+/// is calibrated *after* the edit (members = retain losses, non-members
+/// = forget losses) and probes the forget set's pre- and post-edit
+/// losses. Successful unlearning drives `mia_after` below `mia_before`
+/// — the drop is the evidence an auditor checks per link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Attestation {
+    /// Strategy name that executed the forget (e.g. `"FiCABU"`).
+    pub strategy: String,
+    /// Executed numeric precision (`"f32"` / `"int8"`).
+    pub precision: String,
+    /// The worker's sampling seed (with the spec key, it pins the batch).
+    pub seed: u64,
+    /// Forget-set accuracy before the edit.
+    pub forget_acc_before: f64,
+    /// Retain-subsample accuracy before the edit.
+    pub retain_acc_before: f64,
+    /// Member-rate of the forget set's pre-edit losses.
+    pub mia_before: f64,
+    /// Member-rate of the forget set's post-edit losses.
+    pub mia_after: f64,
+}
+
+impl Attestation {
+    /// Canonical JSON (fixed key order — the hashed wire form).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("strategy", Json::string(self.strategy.clone())),
+            ("precision", Json::string(self.precision.clone())),
+            ("seed", Json::string(format!("{:016x}", self.seed))),
+            ("forget_acc_before", Json::from(self.forget_acc_before)),
+            ("retain_acc_before", Json::from(self.retain_acc_before)),
+            ("mia_before", Json::from(self.mia_before)),
+            ("mia_after", Json::from(self.mia_after)),
+        ])
+    }
+
+    /// Schema-checked decode of [`Attestation::to_json`].
+    pub fn from_json(j: &Json) -> Result<Attestation> {
+        let str_field = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .with_context(|| format!("attestation: missing string `{k}`"))
+        };
+        let num = |k: &str| -> Result<f64> {
+            j.get(k).and_then(Json::as_f64).with_context(|| format!("attestation: missing number `{k}`"))
+        };
+        Ok(Attestation {
+            strategy: str_field("strategy")?,
+            precision: str_field("precision")?,
+            seed: hex64(&str_field("seed")?).context("attestation: bad seed")?,
+            forget_acc_before: num("forget_acc_before")?,
+            retain_acc_before: num("retain_acc_before")?,
+            mia_before: num("mia_before")?,
+            mia_after: num("mia_after")?,
+        })
+    }
+}
+
+/// One link of a model's audit chain: everything an auditor needs to
+/// re-derive "what was forgotten, by which build, with what evidence".
+///
+/// `chain_seq`/`prev_hash` are stamped by [`AuditLog::append`];
+/// `wal_seq`/`wal_gen`/`tainted` are durability coordinates excluded
+/// from the chain hash (see the module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditRecord {
+    /// The model this forget ran against.
+    pub model: ModelId,
+    /// 1-based position in this model's chain.
+    pub chain_seq: u64,
+    /// Core hash of the previous link; `fnv64(model id)` for link 1.
+    pub prev_hash: u64,
+    /// The canonical request that was executed.
+    pub spec: ForgetSpec,
+    /// FNV-1a fingerprint of the serving `UnlearnConfig`.
+    pub config_hash: u64,
+    /// Build identity at record time ([`git_rev`]).
+    pub git_rev: String,
+    /// Whether the engine rolled the edit back.
+    pub rolled_back: bool,
+    /// Ledger sequence of the completing WAL record (generation-local;
+    /// `None` for records produced outside a durable fleet).
+    pub wal_seq: Option<u64>,
+    /// Ledger generation `wal_seq` belongs to (0 outside a durable
+    /// fleet). Recovery uses it to tell which trailing records were
+    /// written against the ledger being recovered; like `wal_seq` it is
+    /// excluded from the chain hash.
+    pub wal_gen: u64,
+    /// `true` when the durable append of this record failed: the link
+    /// exists in memory and in later records' `prev_hash` but not on
+    /// disk — flagged, never silently dropped.
+    pub tainted: bool,
+    /// Forget-set accuracy after the edit.
+    pub forget_acc: f64,
+    /// Retain-subsample accuracy after the edit.
+    pub retain_acc: f64,
+    /// Membership-inference evidence; `None` when the serving core
+    /// could not probe (e.g. a mock service).
+    pub attest: Option<Attestation>,
+}
+
+impl AuditRecord {
+    /// Genesis `prev_hash` of a model's chain (link 1 points here).
+    pub fn genesis_hash(model: &ModelId) -> u64 {
+        fnv64(model.as_str().as_bytes())
+    }
+
+    /// Full canonical JSON — the framed wire form in `audit.log`.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = self.core_pairs();
+        pairs.push((
+            "wal_seq",
+            self.wal_seq.map(|s| Json::from(s as usize)).unwrap_or(Json::Null),
+        ));
+        pairs.push(("wal_gen", Json::from(self.wal_gen as usize)));
+        pairs.push(("tainted", Json::from(self.tainted)));
+        Json::obj(pairs)
+    }
+
+    fn core_pairs(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("model", Json::string(self.model.to_string())),
+            ("chain_seq", Json::from(self.chain_seq as usize)),
+            ("prev_hash", Json::string(format!("{:016x}", self.prev_hash))),
+            ("spec", Json::string(self.spec.to_string())),
+            ("config_hash", Json::string(format!("{:016x}", self.config_hash))),
+            ("git_rev", Json::string(self.git_rev.clone())),
+            ("rolled_back", Json::from(self.rolled_back)),
+            ("forget_acc", Json::from(self.forget_acc)),
+            ("retain_acc", Json::from(self.retain_acc)),
+            ("attest", self.attest.as_ref().map(Attestation::to_json).unwrap_or(Json::Null)),
+        ]
+    }
+
+    /// The hashed core: the record minus `wal_seq`/`wal_gen`/`tainted`
+    /// (see the module docs for why durability coordinates stay out of
+    /// the chain).
+    pub fn core_json(&self) -> Json {
+        Json::obj(self.core_pairs())
+    }
+
+    /// FNV-1a 64 over the canonical core JSON — what the next link's
+    /// `prev_hash` must equal.
+    pub fn core_hash(&self) -> u64 {
+        fnv64(self.core_json().to_string().as_bytes())
+    }
+
+    /// Schema-checked decode of [`AuditRecord::to_json`]. Every field is
+    /// required (`wal_seq`/`attest` may be `null`); unknown specs, bad
+    /// hex, or missing keys are loud errors — this *is* the offline
+    /// schema check `audit verify` applies per record.
+    pub fn from_json(j: &Json) -> Result<AuditRecord> {
+        let str_field = |k: &str| -> Result<&str> {
+            j.get(k).and_then(Json::as_str).with_context(|| format!("audit record: missing string `{k}`"))
+        };
+        let num = |k: &str| -> Result<f64> {
+            j.get(k).and_then(Json::as_f64).with_context(|| format!("audit record: missing number `{k}`"))
+        };
+        let boolean = |k: &str| -> Result<bool> {
+            j.get(k).and_then(Json::as_bool).with_context(|| format!("audit record: missing bool `{k}`"))
+        };
+        let chain_seq = num("chain_seq")?;
+        if chain_seq < 1.0 || chain_seq.fract() != 0.0 {
+            bail!("audit record: chain_seq must be a positive integer, got {chain_seq}");
+        }
+        let wal_seq = match j.get("wal_seq") {
+            Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_i64()
+                    .filter(|&s| s >= 0)
+                    .context("audit record: wal_seq must be a non-negative integer or null")?
+                    as u64,
+            ),
+            None => bail!("audit record: missing `wal_seq`"),
+        };
+        let wal_gen = num("wal_gen")?;
+        if wal_gen < 0.0 || wal_gen.fract() != 0.0 {
+            bail!("audit record: wal_gen must be a non-negative integer, got {wal_gen}");
+        }
+        let attest = match j.get("attest") {
+            Some(Json::Null) => None,
+            Some(v) => Some(Attestation::from_json(v)?),
+            None => bail!("audit record: missing `attest`"),
+        };
+        Ok(AuditRecord {
+            model: ModelId::new(str_field("model")?).context("audit record: bad model id")?,
+            chain_seq: chain_seq as u64,
+            prev_hash: hex64(str_field("prev_hash")?).context("audit record: bad prev_hash")?,
+            spec: ForgetSpec::parse(str_field("spec")?).context("audit record: bad spec")?,
+            config_hash: hex64(str_field("config_hash")?).context("audit record: bad config_hash")?,
+            git_rev: str_field("git_rev")?.to_string(),
+            rolled_back: boolean("rolled_back")?,
+            wal_seq,
+            wal_gen: wal_gen as u64,
+            tainted: boolean("tainted")?,
+            forget_acc: num("forget_acc")?,
+            retain_acc: num("retain_acc")?,
+            attest,
+        })
+    }
+}
+
+/// Head of one model's chain at a point in time — what checkpoints
+/// embed: re-anchoring recovery can check the log still contains this
+/// exact link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChainHead {
+    /// The model whose chain this head summarizes.
+    pub model: ModelId,
+    /// `chain_seq` of the newest durably-persisted link.
+    pub chain_len: u64,
+    /// [`AuditRecord::core_hash`] of that link.
+    pub head_hash: u64,
+}
+
+/// 16-hex-digit string → u64 (the record wire form of 64-bit hashes).
+fn hex64(s: &str) -> Result<u64> {
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        bail!("expected 16 hex digits, got `{s}`");
+    }
+    u64::from_str_radix(s, 16).map_err(|e| anyhow::anyhow!("bad hex `{s}`: {e}"))
+}
+
+/// Shared test fixture for the audit submodules' unit tests.
+#[cfg(test)]
+pub(crate) fn test_record(model: &str, chain_seq: u64, prev_hash: u64) -> AuditRecord {
+    AuditRecord {
+        model: ModelId::new(model).unwrap(),
+        chain_seq,
+        prev_hash,
+        spec: ForgetSpec::Class(chain_seq as usize % 7),
+        config_hash: 0xdead_beef_0042_0007,
+        git_rev: "abc123def456".to_string(),
+        rolled_back: false,
+        wal_seq: Some(chain_seq),
+        wal_gen: 1,
+        tainted: false,
+        forget_acc: 0.05,
+        retain_acc: 0.9,
+        attest: Some(Attestation {
+            strategy: "FiCABU".to_string(),
+            precision: "f32".to_string(),
+            seed: 0xedbe,
+            forget_acc_before: 0.88,
+            retain_acc_before: 0.91,
+            mia_before: 0.75,
+            mia_after: 0.1,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(model: &str, chain_seq: u64, prev_hash: u64) -> AuditRecord {
+        test_record(model, chain_seq, prev_hash)
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let r = record("default", 3, 0x0123_4567_89ab_cdef);
+        let j = r.to_json().to_string();
+        let back = AuditRecord::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, r);
+        // canonical: re-render of the decoded record is byte-identical
+        assert_eq!(back.to_json().to_string(), j);
+        assert_eq!(back.core_hash(), r.core_hash());
+    }
+
+    #[test]
+    fn core_hash_ignores_durability_coordinates() {
+        let r = record("default", 1, AuditRecord::genesis_hash(&ModelId::default()));
+        let mut replayed = r.clone();
+        replayed.wal_seq = Some(99);
+        replayed.wal_gen = 12;
+        assert_eq!(r.core_hash(), replayed.core_hash(), "fresh ledger seqs must not fork the chain");
+        let mut t = r.clone();
+        t.tainted = true;
+        assert_eq!(r.core_hash(), t.core_hash());
+        // ... but every core field is covered
+        let mut forged = r.clone();
+        forged.forget_acc += 1e-9;
+        assert_ne!(r.core_hash(), forged.core_hash());
+        let mut forged = r;
+        forged.git_rev = "ffffffffffff".to_string();
+        assert_ne!(forged.core_hash(), record("default", 1, forged.prev_hash).core_hash());
+    }
+
+    #[test]
+    fn schema_check_rejects_missing_and_malformed_fields() {
+        let good = record("default", 1, 7).to_json().to_string();
+        let j = Json::parse(&good).unwrap();
+        assert!(AuditRecord::from_json(&j).is_ok());
+        for broken in [
+            good.replace("\"chain_seq\":1", "\"chain_seq\":0"),
+            good.replace("\"chain_seq\":1", "\"chain_seq\":1.5"),
+            good.replace("prev_hash", "prev_hsah"),
+            good.replace("\"spec\":\"class:1\"", "\"spec\":\"klass:1\""),
+            good.replace("\"tainted\":false", "\"tainted\":0"),
+            good.replace("\"wal_seq\":1", "\"wal_seq\":-4"),
+        ] {
+            let parsed = Json::parse(&broken).unwrap();
+            assert!(AuditRecord::from_json(&parsed).is_err(), "should reject: {broken}");
+        }
+    }
+
+    #[test]
+    fn hex64_is_strict() {
+        assert_eq!(hex64("00000000000000ff").unwrap(), 0xff);
+        assert!(hex64("ff").is_err());
+        assert!(hex64("00000000000000zz").is_err());
+        assert!(hex64("00000000000000ff0").is_err());
+    }
+
+    #[test]
+    fn git_rev_env_override() {
+        // process-global OnceLock: only assert the shape, not the source
+        let rev = git_rev();
+        assert!(!rev.is_empty());
+    }
+}

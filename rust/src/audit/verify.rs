@@ -1,0 +1,272 @@
+//! Offline chain verification and proof extraction.
+//!
+//! [`verify_dir`] re-validates a durable directory's audit state with
+//! no server running: every `audit.log` frame (CRC + schema), every
+//! hash link per model chain, and — when a checkpoint exists — that the
+//! checkpoint's embedded [`ChainHead`]s anchor to links the log
+//! actually contains. Failures name the first broken record by its
+//! position so an operator can jump straight to the forged, reordered,
+//! or damaged link. [`prove`] answers "prove spec X was forgotten on
+//! model M" by returning the verified links that executed X.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::checkpoint;
+use crate::coordinator::ModelId;
+use crate::testkit::faults;
+use crate::unlearn::ForgetSpec;
+
+use super::log::{read_log, AUDIT_FILE};
+use super::{AuditRecord, ChainHead};
+
+/// Outcome of [`verify_dir`]: the verified records plus per-model heads.
+#[derive(Debug)]
+pub struct VerifyReport {
+    /// Every verified record, in file order.
+    pub records: Vec<AuditRecord>,
+    /// Verified head of each model's chain.
+    pub heads: Vec<ChainHead>,
+    /// Whether a checkpoint was present and its embedded heads anchored.
+    pub checkpoint_checked: bool,
+}
+
+/// Verify the hash links of `records` (file order). Per model, the
+/// first link's `prev_hash` must equal the genesis hash, `chain_seq`
+/// must run 1, 2, 3, ... with no gap or repeat, and every later link's
+/// `prev_hash` must equal the previous link's core hash. Errors name
+/// the first broken record by its 1-based file position and chain seq.
+pub fn verify_records(records: &[AuditRecord]) -> Result<Vec<ChainHead>> {
+    let mut state: HashMap<String, (u64, u64)> = HashMap::new(); // id -> (next seq, expected prev)
+    for (idx, rec) in records.iter().enumerate() {
+        let pos = idx + 1;
+        let (want_seq, want_prev) = state
+            .get(rec.model.as_str())
+            .copied()
+            .unwrap_or((1, AuditRecord::genesis_hash(&rec.model)));
+        if rec.chain_seq != want_seq {
+            bail!(
+                "audit chain broken at record {pos} (model {}): chain seq {} where {want_seq} \
+                 expected — link {want_seq} is missing, duplicated, or out of order",
+                rec.model,
+                rec.chain_seq
+            );
+        }
+        if rec.prev_hash != want_prev {
+            bail!(
+                "audit chain broken at record {pos} (model {}, chain seq {}): prev_hash \
+                 {:016x} does not match the previous link's hash {want_prev:016x} — forged or \
+                 tampered link",
+                rec.model,
+                rec.chain_seq,
+                rec.prev_hash
+            );
+        }
+        state.insert(rec.model.as_str().to_string(), (want_seq + 1, rec.core_hash()));
+    }
+    let mut heads: Vec<ChainHead> = state
+        .into_iter()
+        .map(|(id, (next_seq, head_hash))| {
+            Ok(ChainHead {
+                model: ModelId::new(id)?,
+                chain_len: next_seq - 1,
+                head_hash,
+            })
+        })
+        .collect::<Result<_>>()?;
+    heads.sort_by(|a, b| a.model.as_str().cmp(b.model.as_str()));
+    Ok(heads)
+}
+
+/// Verify a durable directory offline: frame-scan `audit.log` (a torn
+/// or bit-flipped frame fails, naming the first bad record), check
+/// every hash link ([`verify_records`]), and anchor the newest
+/// checkpoint's embedded heads against the log.
+pub fn verify_dir(dir: &Path) -> Result<VerifyReport> {
+    faults::hit("audit_verify")?;
+    let path = dir.join(AUDIT_FILE);
+    if !path.exists() {
+        bail!("no {AUDIT_FILE} in {} — nothing to verify", dir.display());
+    }
+    let scan = read_log(&path)?;
+    if scan.truncated {
+        bail!(
+            "audit log {}: record {} is torn or corrupt (CRC/schema failure); the valid \
+             chain ends after record {}",
+            path.display(),
+            scan.records.len() + 1,
+            scan.records.len()
+        );
+    }
+    let heads = verify_records(&scan.records)?;
+    let mut checkpoint_checked = false;
+    if let Some(ckpt) = checkpoint::load_latest(dir)? {
+        for anchor in &ckpt.audit {
+            let found = scan.records.iter().any(|r| {
+                r.model == anchor.model
+                    && r.chain_seq == anchor.chain_len
+                    && r.core_hash() == anchor.head_hash
+            });
+            if !found {
+                bail!(
+                    "checkpoint anchors model {} at chain seq {} (hash {:016x}) but the audit \
+                     log contains no such link — log and checkpoint diverged",
+                    anchor.model,
+                    anchor.chain_len,
+                    anchor.head_hash
+                );
+            }
+        }
+        checkpoint_checked = true;
+    }
+    Ok(VerifyReport { records: scan.records, heads, checkpoint_checked })
+}
+
+/// Prove `spec` was forgotten: verify the directory, then return the
+/// chain links that executed the spec's canonical key (optionally
+/// restricted to one model), newest last. Rolled-back executions are
+/// not proof and are excluded. Errors when the chain holds no such
+/// link.
+pub fn prove(
+    dir: &Path,
+    model: Option<&ModelId>,
+    spec: &ForgetSpec,
+) -> Result<Vec<AuditRecord>> {
+    let report = verify_dir(dir).context("cannot prove against an unverifiable chain")?;
+    let key = spec.canonical().key().hash64();
+    let links: Vec<AuditRecord> = report
+        .records
+        .into_iter()
+        .filter(|r| {
+            r.spec.key().hash64() == key
+                && !r.rolled_back
+                && model.map(|m| r.model == *m).unwrap_or(true)
+        })
+        .collect();
+    if links.is_empty() {
+        bail!(
+            "no verified audit link proves `{}`{} — the chain does not record that forget",
+            spec.canonical(),
+            model.map(|m| format!(" on model {m}")).unwrap_or_default()
+        );
+    }
+    Ok(links)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audit::log::{write_replacing, AuditLog};
+    use crate::audit::test_record;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ficabu_verify_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// A valid three-link chain (specs class:1..class:3) in a fresh dir.
+    fn chained_dir(tag: &str) -> (PathBuf, Vec<AuditRecord>) {
+        let dir = tmpdir(tag);
+        let mut log = AuditLog::open_append(dir.join(AUDIT_FILE)).unwrap();
+        let recs: Vec<AuditRecord> =
+            (1..=3).map(|i| log.append(test_record("default", i, 0))).collect();
+        (dir, recs)
+    }
+
+    #[test]
+    fn valid_chain_verifies_with_heads() {
+        let (dir, recs) = chained_dir("ok");
+        let report = verify_dir(&dir).unwrap();
+        assert_eq!(report.records.len(), 3);
+        assert!(!report.checkpoint_checked, "no checkpoint in this dir");
+        assert_eq!(report.heads.len(), 1);
+        assert_eq!(report.heads[0].chain_len, 3);
+        assert_eq!(report.heads[0].head_hash, recs[2].core_hash());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_tail_record_is_named() {
+        let (dir, _) = chained_dir("torn");
+        let path = dir.join(AUDIT_FILE);
+        let len = std::fs::metadata(&path).unwrap().len();
+        // chop into the last frame's payload
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_len(len - 7)
+            .unwrap();
+        let err = verify_dir(&dir).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("record 3"), "must name the torn record: {msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bit_flipped_body_is_named() {
+        let (dir, _) = chained_dir("flip");
+        let path = dir.join(AUDIT_FILE);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one byte in the second frame's payload: locate it by
+        // walking the frames
+        let mut pos = 8usize;
+        let len1 = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 8 + len1; // start of frame 2
+        bytes[pos + 8 + 10] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = verify_dir(&dir).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("record 2"), "must name the flipped record: {msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reordered_records_are_named() {
+        let (dir, recs) = chained_dir("reorder");
+        let path = dir.join(AUDIT_FILE);
+        let swapped = vec![recs[0].clone(), recs[2].clone(), recs[1].clone()];
+        write_replacing(&path, &swapped).unwrap();
+        let err = verify_dir(&dir).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("record 2"), "first out-of-order link is record 2: {msg}");
+        assert!(msg.contains("chain seq 3"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn forged_record_with_stale_prev_hash_is_named() {
+        let (dir, recs) = chained_dir("forge");
+        let path = dir.join(AUDIT_FILE);
+        // forge link 3: right chain_seq, but prev_hash skips link 2
+        // (points at link 1, as if link 2 were quietly replaced)
+        let mut forged = recs.clone();
+        forged[2].prev_hash = recs[0].core_hash();
+        forged[2].forget_acc = 0.0; // the doctored claim
+        write_replacing(&path, &forged).unwrap();
+        let err = verify_dir(&dir).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("record 3"), "must name the forged link: {msg}");
+        assert!(msg.contains("forged or tampered"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prove_returns_matching_links_and_rejects_unknown_specs() {
+        let (dir, recs) = chained_dir("prove");
+        // test_record specs are class:(chain_seq % 7) = 1, 2, 3
+        let got = prove(&dir, None, &ForgetSpec::Class(2)).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].chain_seq, recs[1].chain_seq);
+        let model = ModelId::default();
+        assert!(prove(&dir, Some(&model), &ForgetSpec::Class(2)).is_ok());
+        let err = prove(&dir, None, &ForgetSpec::Class(6)).unwrap_err();
+        assert!(format!("{err:#}").contains("class:6"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

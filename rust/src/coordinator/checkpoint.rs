@@ -11,6 +11,13 @@
 //! are named `ckpt-<generation>-<covering_seq>.fcp` with zero-padded
 //! fields so lexicographic order is (generation, seq) order.
 //!
+//! `FICABUC3` added the audit section: the per-model
+//! [`ChainHead`](crate::audit::ChainHead)s of the audit chain at
+//! snapshot time, so `audit verify` can anchor the standalone
+//! `audit.log` against the parameters a recovery would load. A
+//! `FICABUC2` file fails the magic check and is skipped like any
+//! invalid candidate — recovery degrades to full ledger replay.
+//!
 //! Writes are atomic: the body is written to a `.tmp` sibling, fsync'd,
 //! renamed over the final name, and the directory is fsync'd — a crash
 //! mid-write leaves a stale `.tmp` that is never loaded and is swept by
@@ -23,13 +30,15 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::audit::ChainHead;
+use crate::coordinator::registry::ModelId;
 use crate::coordinator::wal::crc32;
 use crate::model::ParamStore;
 use crate::tensor::quant::QTensor;
 use crate::tensor::Tensor;
 use crate::testkit::faults;
 
-const MAGIC: &[u8; 8] = b"FICABUC2";
+const MAGIC: &[u8; 8] = b"FICABUC3";
 const PREFIX: &str = "ckpt-";
 const SUFFIX: &str = ".fcp";
 
@@ -45,6 +54,9 @@ pub struct Checkpoint {
     /// snapshotted; their edits are *not* in `params` even when their
     /// seq is below the covering seq.
     pub pending: Vec<u64>,
+    /// Per-model audit chain heads (durably persisted links only) at
+    /// snapshot time — `audit verify` anchors the log against these.
+    pub audit: Vec<ChainHead>,
 }
 
 fn file_name(generation: u64, covering_seq: u64) -> String {
@@ -59,9 +71,10 @@ pub fn write(
     generation: u64,
     covering_seq: u64,
     pending: &[u64],
+    audit: &[ChainHead],
 ) -> Result<PathBuf> {
     faults::hit("checkpoint")?;
-    let body = encode(store, generation, covering_seq, pending);
+    let body = encode(store, generation, covering_seq, pending, audit);
     let name = file_name(generation, covering_seq);
     let path = dir.join(&name);
     let tmp = dir.join(format!("{name}.tmp"));
@@ -139,9 +152,17 @@ fn prune_older(dir: &Path, keep: &str) {
 //                    f32 LE data |
 //       quantized u8 | if 1, per segment, per slot:
 //           present u8 | if 1: rank u32, dims u32..., nscales u32,
-//                        scales f32 LE, data i8 raw
+//                        scales f32 LE, data i8 raw |
+//       nmodels u32 | per model: id_len u32, id bytes,
+//                     chain_len u64, head_hash u64
 
-fn encode(store: &ParamStore, generation: u64, covering_seq: u64, pending: &[u64]) -> Vec<u8> {
+fn encode(
+    store: &ParamStore,
+    generation: u64,
+    covering_seq: u64,
+    pending: &[u64],
+    audit: &[ChainHead],
+) -> Vec<u8> {
     let mut body = Vec::new();
     body.extend_from_slice(&generation.to_le_bytes());
     body.extend_from_slice(&covering_seq.to_le_bytes());
@@ -179,6 +200,14 @@ fn encode(store: &ParamStore, generation: u64, covering_seq: u64, pending: &[u64
                 }
             }
         }
+    }
+    body.extend_from_slice(&(audit.len() as u32).to_le_bytes());
+    for h in audit {
+        let id = h.model.as_str();
+        body.extend_from_slice(&(id.len() as u32).to_le_bytes());
+        body.extend_from_slice(id.as_bytes());
+        body.extend_from_slice(&h.chain_len.to_le_bytes());
+        body.extend_from_slice(&h.head_hash.to_le_bytes());
     }
     let mut out = Vec::with_capacity(body.len() + 12);
     out.extend_from_slice(MAGIC);
@@ -252,10 +281,30 @@ fn decode(bytes: &[u8]) -> Result<Checkpoint> {
     } else {
         None
     };
+    let nmodels = read_u32(body, &mut pos)? as usize;
+    if nmodels > (body.len() - pos) / 20 {
+        bail!("implausible audit head count {nmodels}");
+    }
+    let mut audit = Vec::with_capacity(nmodels);
+    for _ in 0..nmodels {
+        let n = read_u32(body, &mut pos)? as usize;
+        let raw = take(body, &mut pos, n)?;
+        let id = std::str::from_utf8(raw).context("audit head model id is not utf-8")?;
+        let model = ModelId::new(id)?;
+        let chain_len = read_u64(body, &mut pos)?;
+        let head_hash = read_u64(body, &mut pos)?;
+        audit.push(ChainHead { model, chain_len, head_hash });
+    }
     if pos != body.len() {
         bail!("checkpoint has {} trailing bytes", body.len() - pos);
     }
-    Ok(Checkpoint { params: ParamStore::from_parts(seg, quant)?, generation, covering_seq, pending })
+    Ok(Checkpoint {
+        params: ParamStore::from_parts(seg, quant)?,
+        generation,
+        covering_seq,
+        pending,
+        audit,
+    })
 }
 
 fn push_shape(buf: &mut Vec<u8>, shape: &[usize]) {
@@ -349,10 +398,19 @@ mod tests {
             if int8 {
                 store.quantize_int8(&meta);
             }
-            write(&dir, &store, 2, 7, &[3, 6]).unwrap();
+            let heads = vec![
+                ChainHead { model: ModelId::default(), chain_len: 4, head_hash: 0xfeed_beef },
+                ChainHead {
+                    model: ModelId::new("tenant-b").unwrap(),
+                    chain_len: 1,
+                    head_hash: 0x1234_5678_9abc_def0,
+                },
+            ];
+            write(&dir, &store, 2, 7, &[3, 6], &heads).unwrap();
             let c = load_latest(&dir).unwrap().expect("checkpoint present");
             assert_eq!((c.generation, c.covering_seq), (2, 7));
             assert_eq!(c.pending, [3, 6]);
+            assert_eq!(c.audit, heads, "audit heads roundtrip");
             assert_eq!(c.params.is_quantized(), int8);
             assert_bitwise_eq(&store, &c.params);
             c.params.validate(&meta).unwrap();
@@ -366,14 +424,14 @@ mod tests {
         let dir = tmpdir("newest");
         let s1 = ParamStore::init(&meta, 1);
         let s2 = ParamStore::init(&meta, 2);
-        write(&dir, &s1, 1, 3, &[]).unwrap();
-        write(&dir, &s2, 1, 8, &[]).unwrap();
+        write(&dir, &s1, 1, 3, &[], &[]).unwrap();
+        write(&dir, &s2, 1, 8, &[], &[]).unwrap();
         let c = load_latest(&dir).unwrap().unwrap();
         assert_eq!(c.covering_seq, 8);
         assert_bitwise_eq(&s2, &c.params);
         assert_eq!(list_checkpoints(&dir).unwrap().len(), 1, "older checkpoint pruned");
         // a later generation with a smaller seq still wins
-        write(&dir, &s1, 2, 1, &[]).unwrap();
+        write(&dir, &s1, 2, 1, &[], &[]).unwrap();
         let c = load_latest(&dir).unwrap().unwrap();
         assert_eq!((c.generation, c.covering_seq), (2, 1));
         std::fs::remove_dir_all(&dir).ok();
@@ -384,7 +442,7 @@ mod tests {
         let meta = ModelMeta::builtin("rn18slim").unwrap();
         let dir = tmpdir("corrupt");
         let good = ParamStore::init(&meta, 5);
-        write(&dir, &good, 1, 4, &[]).unwrap();
+        write(&dir, &good, 1, 4, &[], &[]).unwrap();
         // a "newer" file that is pure garbage, plus a torn .tmp
         std::fs::write(dir.join(file_name(1, 9)), b"garbage").unwrap();
         std::fs::write(dir.join(format!("{}.tmp", file_name(1, 12))), b"half").unwrap();

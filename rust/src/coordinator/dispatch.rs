@@ -912,6 +912,14 @@ impl Fleet {
         snapshot(&self.shared)
     }
 
+    /// The live audit chain of `model`, oldest link first (tainted
+    /// links included) — what `GET /models/{id}/audit` serves. Empty on
+    /// a non-durable fleet (no chain is kept) and for models with no
+    /// completed forgets.
+    pub fn audit_chain(&self, model: &ModelId) -> Vec<crate::audit::AuditRecord> {
+        self.shared.dur.as_ref().map(|d| d.audit_chain(model)).unwrap_or_default()
+    }
+
     /// Stop admission, drain the queue (every admitted request is
     /// answered), join the workers, and return the final statistics.
     pub fn shutdown(mut self) -> Result<FleetStats> {
@@ -1245,22 +1253,17 @@ fn serve_entry<S: UnlearnService>(
             s.config_hash = e.key.config_hash;
             s.timing = timing;
             s.wal_seq = e.wal_seqs.iter().copied().min();
-            // Durable ordering: `Completed` records, then (when due) the
-            // covering checkpoint, then the replies. Completion-before-
-            // checkpoint means a crash between the two replays onto the
-            // *previous* checkpoint (exactly-once parameter state);
-            // checkpoint-before-reply means an answered `done` is never
-            // silently lost. A crash before the reply re-runs the entry
-            // — at-least-once toward the caller, exactly-once on disk.
+            // Durable ordering: the audit chain link, then `Completed`
+            // records, then (when due) the covering checkpoint, then
+            // the replies. Completion-before-checkpoint means a crash
+            // between the two replays onto the *previous* checkpoint
+            // (exactly-once parameter state); checkpoint-before-reply
+            // means an answered `done` is never silently lost. A crash
+            // before the reply re-runs the entry — at-least-once toward
+            // the caller, exactly-once on disk.
             if let Some(dur) = &sh.dur {
                 if !e.wal_seqs.is_empty() {
-                    let logged = dur.log_completed(
-                        &e.wal_seqs,
-                        Disposition::Done,
-                        s.rolled_back,
-                        s.forget_acc,
-                        s.retain_acc,
-                    );
+                    let (logged, _link) = dur.log_completed_audited(&s, &e.wal_seqs);
                     rd.done_any = true;
                     if !logged.logged {
                         // The store now holds an edit the ledger will

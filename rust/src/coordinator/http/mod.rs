@@ -256,6 +256,7 @@ mod tests {
                 rolled_back: false,
                 timing: Timing { queue_ms: 0.0, service_ms: 0.0 },
                 wal_seq: None,
+                attest: None,
             })
         }
     }

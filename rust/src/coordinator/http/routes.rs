@@ -5,6 +5,7 @@
 //! | `POST /forget`             | the [`Reply`] wire body; status from its code     |
 //! | `POST /models/{id}/forget` | same, addressed to one registered model           |
 //! | `GET /models`              | `{"models":[{id,spec_key,config_hash,precision,warm}]}` |
+//! | `GET /models/{id}/audit`   | the model's audit chain: `{model,chain_len,head_hash,records}` |
 //! | `GET /stats`               | the fleet's percentile rollup, as JSON            |
 //! | `GET /healthz`             | fleet liveness: 200 `{"ok":true,...}`, 503 degraded |
 //!
@@ -68,14 +69,30 @@ pub(super) fn handle(req: &Request, fleet: &Fleet, bounds: Bounds) -> Response {
         (_, "/stats" | "/healthz" | "/models") => method_not_allowed(req, "GET"),
         (method, path) => {
             // `/models/{id}/forget`: the model-addressed submission route.
-            match path.strip_prefix("/models/").and_then(|rest| rest.strip_suffix("/forget")) {
-                Some(_) if method != "POST" => method_not_allowed(req, "POST"),
-                Some(id) => match ModelId::new(id) {
+            if let Some(id) =
+                path.strip_prefix("/models/").and_then(|rest| rest.strip_suffix("/forget"))
+            {
+                if method != "POST" {
+                    return method_not_allowed(req, "POST");
+                }
+                return match ModelId::new(id) {
                     Ok(model) => forget(req, fleet, bounds, Some(model)),
                     Err(e) => error(400, "invalid_model", format!("{e:#}"), None),
-                },
-                None => error(404, "not_found", format!("no route `{path}`"), None),
+                };
             }
+            // `/models/{id}/audit`: the model's verifiable forget history.
+            if let Some(id) =
+                path.strip_prefix("/models/").and_then(|rest| rest.strip_suffix("/audit"))
+            {
+                if method != "GET" {
+                    return method_not_allowed(req, "GET");
+                }
+                return match ModelId::new(id) {
+                    Ok(model) => audit(fleet, &model),
+                    Err(e) => error(400, "invalid_model", format!("{e:#}"), None),
+                };
+            }
+            error(404, "not_found", format!("no route `{path}`"), None)
         }
     }
 }
@@ -199,6 +216,36 @@ fn forget(req: &Request, fleet: &Fleet, bounds: Bounds, route_model: Option<Mode
     }
 }
 
+/// `GET /models/{id}/audit`: the model's hash-chained forget history.
+/// An empty chain (no completed forgets yet, or a fleet running without
+/// durability) answers 200 with `chain_len: 0` and the genesis hash, so
+/// clients can distinguish "nothing to audit" from "unknown model" (404).
+fn audit(fleet: &Fleet, model: &ModelId) -> Response {
+    use crate::audit::AuditRecord;
+    if !fleet.has_model(model) {
+        return error(
+            404,
+            "unknown-model",
+            format!("model {model} is not registered; GET /models lists what is"),
+            None,
+        );
+    }
+    let records = fleet.audit_chain(model);
+    let head = records
+        .last()
+        .map(AuditRecord::core_hash)
+        .unwrap_or_else(|| AuditRecord::genesis_hash(model));
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("model", Json::from(model.as_str())),
+            ("chain_len", Json::from(records.len())),
+            ("head_hash", Json::string(format!("{head:016x}"))),
+            ("records", Json::Arr(records.iter().map(AuditRecord::to_json).collect())),
+        ]),
+    )
+}
+
 enum BodyError {
     Json(JsonError),
     Spec(String, usize),
@@ -259,6 +306,7 @@ mod tests {
                 rolled_back: false,
                 timing: Timing { queue_ms: 0.0, service_ms: 0.0 },
                 wal_seq: None,
+                attest: None,
             })
         }
     }
@@ -373,6 +421,55 @@ mod tests {
         // Echo has no params: completions are ledgered, checkpoints skipped
         assert_eq!(d.get("checkpoints").unwrap().as_i64(), Some(0));
         assert!(d.get("generation").unwrap().as_i64().unwrap() >= 1);
+        drop(f);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn audit_route_serves_the_chain_and_head() {
+        // non-durable fleet: registered model, empty chain, genesis head
+        let f = fleet();
+        let resp = handle(&req("GET", "/models/default/audit", ""), &f, None);
+        assert_eq!(resp.status, 200, "{:?}", body(&resp));
+        let j = body(&resp);
+        assert_eq!(j.get("chain_len").unwrap().as_i64(), Some(0));
+        let genesis = crate::audit::AuditRecord::genesis_hash(&ModelId::default());
+        assert_eq!(j.get("head_hash").unwrap().as_str(), Some(format!("{genesis:016x}").as_str()));
+        // unknown model answers the machine-readable 404; bad method 405
+        let resp = handle(&req("GET", "/models/tenant-b/audit", ""), &f, None);
+        assert_eq!(resp.status, 404);
+        assert_eq!(body(&resp).get("code").unwrap().as_str(), Some("unknown-model"));
+        assert_eq!(handle(&req("POST", "/models/default/audit", ""), &f, None).status, 405);
+        drop(f);
+
+        // durable fleet: each completed forget appends one chained link
+        let dir = std::env::temp_dir()
+            .join(format!("ficabu_routes_audit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let f = Fleet::start_with_durable(
+            FleetConfig::default(),
+            |_| Ok(Echo),
+            crate::coordinator::DurabilityConfig { dir: dir.clone(), checkpoint_every: 1 },
+        )
+        .unwrap();
+        for class in [2, 5] {
+            let reply = f.submit(ForgetSpec::Class(class)).recv().unwrap();
+            assert!(matches!(reply, Reply::Done(_)), "{reply:?}");
+        }
+        let j = body(&handle(&req("GET", "/models/default/audit", ""), &f, None));
+        assert_eq!(j.get("chain_len").unwrap().as_i64(), Some(2));
+        let recs = j.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs[0].get("spec").unwrap().as_str(), Some("class:2"));
+        assert_eq!(recs[1].get("spec").unwrap().as_str(), Some("class:5"));
+        // the reported head is the last record's core hash: link 2's
+        // prev_hash must equal link 1's core hash, and the chain must
+        // verify end to end on disk
+        let chain = f.audit_chain(&ModelId::default());
+        assert_eq!(
+            j.get("head_hash").unwrap().as_str(),
+            Some(format!("{:016x}", chain[1].core_hash()).as_str())
+        );
+        assert_eq!(chain[1].prev_hash, chain[0].core_hash());
         drop(f);
         let _ = std::fs::remove_dir_all(&dir);
     }

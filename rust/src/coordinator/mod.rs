@@ -106,6 +106,12 @@ pub struct Summary {
     /// submissions) on a durable fleet; `None` otherwise. A caller can
     /// quote it against the ledger as proof its request was recorded.
     pub wal_seq: Option<u64>,
+    /// Membership-inference attestation of this event
+    /// ([`Attestation`](crate::audit::Attestation)): before/after
+    /// accuracies and MIA member-rates on the forget set. `None` when
+    /// the serving core cannot probe (e.g. a mock service). On a
+    /// durable fleet this is what enters the audit chain.
+    pub attest: Option<crate::audit::Attestation>,
 }
 
 impl Summary {
@@ -133,6 +139,7 @@ impl Summary {
             ("queue_ms", Json::from(self.timing.queue_ms)),
             ("service_ms", Json::from(self.timing.service_ms)),
             ("wal_seq", self.wal_seq.map(|s| Json::from(s as usize)).unwrap_or(Json::Null)),
+            ("attest", self.attest.as_ref().map(|a| a.to_json()).unwrap_or(Json::Null)),
         ])
     }
 }
@@ -173,6 +180,7 @@ mod tests {
             rolled_back: false,
             timing: Timing { queue_ms: 3.0, service_ms: 80.0 },
             wal_seq: None,
+            attest: None,
         }
     }
 

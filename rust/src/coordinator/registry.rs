@@ -125,16 +125,9 @@ impl ModelInfo {
             ("id", Json::string(self.id.to_string())),
             ("spec_key", Json::string(self.spec_key.clone())),
             ("config_hash", Json::string(format!("{:016x}", self.config_hash))),
-            ("precision", Json::string(precision_name(self.precision))),
+            ("precision", Json::string(self.precision.name())),
             ("warm", Json::from(self.warm)),
         ])
-    }
-}
-
-fn precision_name(p: Precision) -> &'static str {
-    match p {
-        Precision::F32 => "f32",
-        Precision::Int8 => "int8",
     }
 }
 

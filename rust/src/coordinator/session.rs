@@ -57,10 +57,11 @@ use crate::coordinator::dispatch::WorkerSpec;
 use crate::coordinator::registry::ModelId;
 use crate::coordinator::wal::config_fingerprint;
 use crate::coordinator::{Summary, Timing};
+use crate::audit::Attestation;
 use crate::data::Dataset;
 use crate::fisher::{FimdEngine, Importance};
 use crate::hwsim::{BaselineProcessor, FicabuProcessor};
-use crate::metrics;
+use crate::metrics::{self, ThresholdAttack};
 use crate::model::macs::ssd_ledger;
 use crate::model::{Model, ParamAccess, ParamStore};
 use crate::runtime::{Precision, Runtime};
@@ -331,6 +332,17 @@ pub(crate) fn execute_forget(
     // dataset's own class count, which may exceed the head's
     spec.validate(meta.num_classes, ctx.train.len())?;
     let pool = spec.pool(ctx.train)?;
+    // the retain split is the complement of the pool, subsampled to
+    // edge budget; computed up front so the attestation below can
+    // probe quality on both sides of the edit
+    let retain_idx: Vec<usize> =
+        ForgetSpec::retain_of(&pool, ctx.train.len()).into_iter().step_by(4).collect();
+    // pre-edit probes for the audit attestation: quality on both
+    // splits plus the forget set's loss profile
+    let forget_acc_before = metrics::eval_accuracy(ctx.model, &*params, ctx.train, &pool)?;
+    let retain_acc_before = metrics::eval_accuracy(ctx.model, &*params, ctx.train, &retain_idx)?;
+    let forget_losses_before =
+        metrics::per_sample_losses(ctx.model, &*params, ctx.train, &pool)?;
     // Per-request sampler: deterministic in (seed, spec) — required
     // for durable replay to reproduce the pre-crash edit bitwise.
     let mut rng = Pcg32::seeded(ctx.seed ^ spec.key().hash64());
@@ -346,12 +358,28 @@ pub(crate) fn execute_forget(
         ctx.strategy,
     )?;
 
-    // post-edit quality readout on a subsample (edge-budget sized);
-    // the retain split is the complement of the pool computed above
-    let retain_idx: Vec<usize> =
-        ForgetSpec::retain_of(&pool, ctx.train.len()).into_iter().step_by(4).collect();
+    // post-edit quality readout on the same splits
     let forget_acc = metrics::eval_accuracy(ctx.model, &*params, ctx.train, &pool)?;
     let retain_acc = metrics::eval_accuracy(ctx.model, &*params, ctx.train, &retain_idx)?;
+
+    // Membership-inference attestation: calibrate a threshold attack
+    // on the post-edit losses (members = retained samples, non-members
+    // = the forgotten samples), then probe the forget set's pre- vs
+    // post-edit losses. Successful unlearning drives the member-rate
+    // down — the per-link evidence the audit chain records.
+    let forget_losses_after = metrics::per_sample_losses(ctx.model, &*params, ctx.train, &pool)?;
+    let retain_losses_after =
+        metrics::per_sample_losses(ctx.model, &*params, ctx.train, &retain_idx)?;
+    let attack = ThresholdAttack::fit(&retain_losses_after, &forget_losses_after);
+    let attest = Attestation {
+        strategy: ctx.strategy.name().to_string(),
+        precision: report.precision.name().to_string(),
+        seed: ctx.seed,
+        forget_acc_before,
+        retain_acc_before,
+        mia_before: attack.member_rate(&forget_losses_before),
+        mia_after: attack.member_rate(&forget_losses_after),
+    };
 
     // hardware cost: this run on FiCABU vs the SSD ledger on baseline
     // (same executed precision, so the f32-gradient lane penalty and
@@ -382,5 +410,6 @@ pub(crate) fn execute_forget(
         rolled_back: report.rolled_back,
         timing: Timing::default(),
         wal_seq: None,
+        attest: Some(attest),
     })
 }

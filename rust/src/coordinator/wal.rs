@@ -80,9 +80,25 @@
 //! `Accepted` record per replayed entry — so a second crash before the
 //! replays complete recovers them again.
 //!
+//! # Audit chain
+//!
+//! A durable fleet also keeps the hash-chained audit log
+//! (`audit.log`, see [`crate::audit`]) beside the ledger. A successful
+//! completion goes through [`Durability::log_completed_audited`]: the
+//! audit link is appended *first*, then the WAL `Completed` records,
+//! both under one lock — so a crash leaves at most one trailing audit
+//! link whose completion is not durable. Recovery drops exactly those
+//! stale trailing links (their executions replay and re-derive them;
+//! the per-record `wal_gen` ties a link to the generation being
+//! recovered, so links from older generations — whose seqs the fresh
+//! ledger reuses — are never touched), which is why a `kill -9` cannot
+//! fork the chain: the replayed execution re-appends a link with the
+//! same hashed core.
+//!
 //! Fault seams for chaos tests: `wal_append` (every ledger append),
 //! `checkpoint` (every checkpoint write), `replay` (every re-enqueued
-//! entry during recovery) — see [`testkit::faults`](crate::testkit::faults).
+//! entry during recovery), `audit_append` (every audit chain append) —
+//! see [`testkit::faults`](crate::testkit::faults).
 
 use std::collections::{BTreeSet, HashMap, HashSet};
 use std::fs::{File, OpenOptions};
@@ -94,8 +110,10 @@ use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::audit::{self, AuditRecord, ChainHead};
 use crate::coordinator::checkpoint;
 use crate::coordinator::registry::ModelId;
+use crate::coordinator::Summary;
 use crate::model::ParamStore;
 use crate::testkit::faults;
 use crate::unlearn::{ForgetSpec, UnlearnConfig};
@@ -392,8 +410,9 @@ fn frame_into(buf: &mut Vec<u8>, rec: &Record) {
     buf.extend_from_slice(&payload);
 }
 
-/// Best-effort directory fsync so a rename survives power loss.
-fn sync_dir(dir: &Path) {
+/// Best-effort directory fsync so a rename survives power loss. Shared
+/// with the audit log and atomic parameter saves.
+pub(crate) fn sync_dir(dir: &Path) {
     if let Ok(d) = File::open(dir) {
         let _ = d.sync_all();
     }
@@ -602,6 +621,11 @@ pub struct CompletionLog {
 /// completion (worker threads).
 pub struct Durability {
     wal: Wal,
+    /// The per-model audit chains. The lock also pairs each audit
+    /// append with its WAL `Completed` appends
+    /// ([`log_completed_audited`](Durability::log_completed_audited)),
+    /// so a crash leaves at most one trailing unpaired link.
+    audit: Mutex<audit::AuditLog>,
     dir: PathBuf,
     checkpoint_every: u64,
     replayed: u64,
@@ -651,6 +675,7 @@ impl Durability {
             }
         }
         let mut seen_keys: HashSet<(ModelId, u64)> = HashSet::new();
+        let mut replayed_old: HashSet<u64> = HashSet::new();
         let mut fresh: Vec<Record> = Vec::new();
         let mut replay: Vec<(u64, ModelId, ForgetSpec)> = Vec::new();
         for rec in &scan.records {
@@ -666,6 +691,7 @@ impl Durability {
             if !replayable {
                 continue;
             }
+            replayed_old.insert(*seq);
             faults::hit("replay")?;
             // idempotent per (model, canonical SpecKey): two tenants
             // forgetting the same class are distinct replays
@@ -683,12 +709,51 @@ impl Durability {
             replay.push((new_seq, model.clone(), spec.canonical()));
         }
 
+        // Re-enter the audit chain (see the module docs): the pair lock
+        // appends the audit link before its WAL `Completed` records, so
+        // the tail of `audit.log` may hold links of this generation
+        // whose executions are about to replay — either their
+        // completion never landed, or it landed outside the checkpoint
+        // scope and its edits were lost with the process. Drop exactly
+        // those trailing links (the replayed executions re-derive
+        // them); `wal_gen` keeps links of older generations safe even
+        // though the fresh ledger reuses their seq numbers. The audit
+        // rewrite lands *before* the ledger rewrite: if we crash
+        // between the two, the next recovery recomputes the same drop
+        // set from the old ledger (idempotent), whereas the reverse
+        // order would judge old links against a fresh completion-less
+        // ledger and truncate valid history.
+        let audit_path = cfg.dir.join(audit::AUDIT_FILE);
+        if audit_path.exists() {
+            let mut links = audit::log::read_log(&audit_path)?.records;
+            let before = links.len();
+            while let Some(last) = links.last() {
+                let stale = last.wal_gen == scan.generation
+                    && match last.wal_seq {
+                        Some(s) => {
+                            replayed_old.contains(&s)
+                                || !matches!(completed.get(&s), Some(Disposition::Done))
+                        }
+                        None => false,
+                    };
+                if !stale {
+                    break;
+                }
+                links.pop();
+            }
+            if links.len() < before {
+                audit::log::write_replacing(&audit_path, &links)?;
+            }
+        }
+
         let generation = scan.generation.max(ckpt_gen) + 1;
         write_replacing(&path, generation, &fresh)?;
         let (wal, _) = Wal::open_append(&path)?;
+        let audit_log = audit::AuditLog::open_append(&audit_path)?;
         Ok(Recovered {
             durability: Durability {
                 wal,
+                audit: Mutex::new(audit_log),
                 dir: cfg.dir.clone(),
                 checkpoint_every: cfg.checkpoint_every,
                 replayed: replay.len() as u64,
@@ -745,6 +810,60 @@ impl Durability {
         CompletionLog { checkpoint_due: done % self.checkpoint_every == 0, logged }
     }
 
+    /// Record a *successful* completion together with its audit link.
+    /// The [`AuditRecord`] is appended to the model's hash chain first,
+    /// then every coalesced seq gets its WAL `Completed` record — one
+    /// lock spans both, so concurrent completions cannot interleave an
+    /// audit link with another entry's completion and a crash leaves at
+    /// most one trailing link without its completion (recovery drops it
+    /// and the replayed execution re-derives it). A failed audit append
+    /// taints the link ([`crate::audit::log`] — flagged in memory and
+    /// hashed over by later links, never dropped) and does not block
+    /// the reply. Returns the stamped link alongside the completion
+    /// outcome.
+    pub fn log_completed_audited(
+        &self,
+        summary: &Summary,
+        seqs: &[u64],
+    ) -> (CompletionLog, AuditRecord) {
+        let mut audit = self.audit.lock().unwrap_or_else(PoisonError::into_inner);
+        let link = audit.append(AuditRecord {
+            model: summary.model.clone(),
+            chain_seq: 0, // stamped by the chain
+            prev_hash: 0, // stamped by the chain
+            spec: summary.spec.canonical(),
+            config_hash: summary.config_hash,
+            git_rev: audit::git_rev().to_string(),
+            rolled_back: summary.rolled_back,
+            wal_seq: seqs.iter().copied().min(),
+            wal_gen: self.wal.generation(),
+            tainted: false,
+            forget_acc: summary.forget_acc,
+            retain_acc: summary.retain_acc,
+            attest: summary.attest.clone(),
+        });
+        let log = self.log_completed(
+            seqs,
+            Disposition::Done,
+            summary.rolled_back,
+            summary.forget_acc,
+            summary.retain_acc,
+        );
+        (log, link)
+    }
+
+    /// The live audit chain of `model`, oldest link first (tainted
+    /// links included) — what `GET /models/{id}/audit` serves.
+    pub fn audit_chain(&self, model: &ModelId) -> Vec<AuditRecord> {
+        self.audit.lock().unwrap_or_else(PoisonError::into_inner).chain(model)
+    }
+
+    /// Per-model heads over durably persisted links — what checkpoints
+    /// embed.
+    pub fn audit_heads(&self) -> Vec<ChainHead> {
+        self.audit.lock().unwrap_or_else(PoisonError::into_inner).heads()
+    }
+
     /// Atomically checkpoint `store` under the ledger's current scope
     /// (covering seq + pending list, snapshotted under the append
     /// lock). The caller asserts that `store` contains the edit of
@@ -752,8 +871,14 @@ impl Durability {
     /// an untainted one-worker fleet.
     pub fn write_checkpoint(&self, store: &ParamStore) -> Result<()> {
         let mut last = self.ckpt_scope.lock().unwrap_or_else(PoisonError::into_inner);
+        // Heads before scope: a completion racing this snapshot may add
+        // a link the checkpoint then doesn't anchor (harmless — the
+        // anchor check is containment), while the reverse could anchor
+        // a link whose seq falls outside the scope and is dropped by
+        // recovery.
+        let heads = self.audit_heads();
         let (covering, pending) = self.wal.checkpoint_scope();
-        checkpoint::write(&self.dir, store, self.wal.generation(), covering, &pending)?;
+        checkpoint::write(&self.dir, store, self.wal.generation(), covering, &pending, &heads)?;
         self.checkpoints.fetch_add(1, Ordering::SeqCst);
         *last = Some((covering, pending));
         Ok(())
@@ -949,7 +1074,7 @@ mod tests {
         // lost with the process, so it must be replayed; seq 1 must not.
         let meta = crate::config::ModelMeta::builtin("rn18slim").unwrap();
         let store = ParamStore::init(&meta, 3);
-        checkpoint::write(&dir, &store, 4, 1, &[]).unwrap();
+        checkpoint::write(&dir, &store, 4, 1, &[], &[]).unwrap();
 
         let rec = Durability::open_or_recover(&cfg).unwrap();
         let specs: Vec<&ForgetSpec> = rec.replay.iter().map(|(_, _, s)| s).collect();
@@ -1078,6 +1203,103 @@ mod tests {
             })
             .is_err(),
             "recovery must not silently rewrite a pre-registry ledger"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn audited_completion_appends_a_chained_link() {
+        let dir = tmpdir("audited");
+        let cfg = DurabilityConfig { dir: dir.clone(), checkpoint_every: 8 };
+        let d = Durability::open_or_recover(&cfg).unwrap().durability;
+        let m = ModelId::default();
+        let s1 = d.log_accepted(&m, &ForgetSpec::Class(1), 7, None).unwrap();
+        let summary = Summary {
+            model: m.clone(),
+            config_hash: 7,
+            spec: ForgetSpec::Class(1),
+            forget_acc: 0.05,
+            retain_acc: 0.9,
+            stop_depth: Some(2),
+            macs_vs_ssd_pct: 50.0,
+            sim_energy_mj: 1.0,
+            sim_energy_vs_ssd_pct: 40.0,
+            sim_ms: 2.0,
+            rolled_back: false,
+            timing: Default::default(),
+            wal_seq: Some(s1),
+            attest: None,
+        };
+        let (log, link) = d.log_completed_audited(&summary, &[s1]);
+        assert!(log.logged);
+        assert_eq!(link.chain_seq, 1);
+        assert_eq!(link.prev_hash, AuditRecord::genesis_hash(&m));
+        assert_eq!(link.wal_seq, Some(s1));
+        assert_eq!(link.wal_gen, d.stats().generation);
+        assert!(!link.tainted);
+        assert_eq!(d.audit_chain(&m), vec![link.clone()]);
+        let heads = d.audit_heads();
+        assert_eq!(heads.len(), 1);
+        assert_eq!((heads[0].chain_len, heads[0].head_hash), (1, link.core_hash()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The chain re-entry rule: a trailing audit link of the current
+    /// generation whose execution replays (no durable completion, or a
+    /// completion outside the checkpoint scope) is dropped; links of
+    /// older generations survive even when the fresh ledger reuses
+    /// their seq numbers.
+    #[test]
+    fn recovery_drops_stale_trailing_audit_links() {
+        let dir = tmpdir("auditchain");
+        let cfg = DurabilityConfig { dir: dir.clone(), checkpoint_every: 1 };
+        let m = ModelId::default();
+        // Ledger generation 4: seq 1 done, seq 2 accepted-only (its
+        // execution finished in memory — the audit link landed — but
+        // the process died before the `Completed` append).
+        let recs = vec![
+            Record::Accepted { seq: 1, model: m.clone(), spec: ForgetSpec::Class(1), config_hash: 9, deadline_ms: None },
+            Record::Completed { seq: 1, disposition: Disposition::Done, rolled_back: false, forget_acc: 0.1, retain_acc: 0.9 },
+            Record::Accepted { seq: 2, model: m.clone(), spec: ForgetSpec::Class(2), config_hash: 9, deadline_ms: None },
+        ];
+        write_replacing(&dir.join(LEDGER_FILE), 4, &recs).unwrap();
+        let meta = crate::config::ModelMeta::builtin("rn18slim").unwrap();
+        let store = ParamStore::init(&meta, 3);
+        checkpoint::write(&dir, &store, 4, 1, &[], &[]).unwrap();
+        let mk = |wal_seq: u64, wal_gen: u64| {
+            let mut r = crate::audit::test_record("default", wal_seq, 0);
+            r.wal_seq = Some(wal_seq);
+            r.wal_gen = wal_gen;
+            r
+        };
+        {
+            let mut alog = audit::AuditLog::open_append(dir.join(audit::AUDIT_FILE)).unwrap();
+            alog.append(mk(5, 3)); // older generation, seq meaningless here
+            alog.append(mk(1, 4)); // covered by the checkpoint
+            alog.append(mk(2, 4)); // the orphan
+        }
+
+        let rec = Durability::open_or_recover(&cfg).unwrap();
+        let specs: Vec<&ForgetSpec> = rec.replay.iter().map(|(_, _, s)| s).collect();
+        assert_eq!(specs, [&ForgetSpec::Class(2)], "only the orphan's entry replays");
+        let chain = rec.durability.audit_chain(&m);
+        assert_eq!(chain.len(), 2, "the orphan link is dropped, earlier links survive");
+        assert_eq!(chain[1].wal_seq, Some(1));
+        let heads = rec.durability.audit_heads();
+        assert_eq!((heads[0].chain_len, heads[0].head_hash), (2, chain[1].core_hash()));
+        drop(rec);
+
+        // Second crash before the replay completes: the fresh ledger
+        // (generation 6 now) reuses seq 1, which is accepted-only — but
+        // the surviving tail link carries wal_gen 4, so it is not
+        // judged against the new ledger and stays.
+        let rec2 = Durability::open_or_recover(&cfg).unwrap();
+        let specs: Vec<&ForgetSpec> = rec2.replay.iter().map(|(_, _, s)| s).collect();
+        assert_eq!(specs, [&ForgetSpec::Class(2)], "still replays after a second crash");
+        assert_eq!(
+            rec2.durability.audit_chain(&m).len(),
+            2,
+            "links of older generations survive seq-number reuse"
         );
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -52,6 +52,7 @@
 //! Python never runs at request time on either path: after an optional
 //! one-shot `make artifacts`, the `ficabu` binary is self-contained.
 
+pub mod audit;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -7,6 +7,8 @@
 //!   serve      edge request-loop demo (threads + channels), or — with
 //!              `--http ADDR` — a wire-facing HTTP/1.1 front-end
 //!              (`POST /forget`, `GET /stats`, `GET /healthz`)
+//!   audit      inspect/verify a durable directory's hash-chained audit
+//!              log offline (`list | verify | prove --spec class:3`)
 //!   info       runtime/platform and artifact inventory
 //!
 //! Table/figure regeneration lives in `examples/` (see DESIGN.md §4).
@@ -82,18 +84,29 @@ fn forget_specs(a: &Args, default: &str) -> Result<Vec<ForgetSpec>> {
 }
 
 fn run() -> Result<()> {
-    let mut args = Args::parse(std::env::args().skip(1))?;
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    // `audit` takes a positional action (`list | verify | prove`) ahead
+    // of the flag grammar; peel it off so `Args::parse` sees only
+    // `--key value` pairs.
+    let mut audit_action = "list".to_string();
+    if argv.first().map(String::as_str) == Some("audit")
+        && argv.get(1).is_some_and(|t| !t.starts_with("--"))
+    {
+        audit_action = argv.remove(1);
+    }
+    let mut args = Args::parse(argv)?;
     args.declare(&[
         "model", "dataset", "mode", "class", "forget", "steps", "lr", "imp-batches",
         "seed", "retrain", "int8", "verbose", "requests", "clients", "workers",
         "queue-cap", "deadline-ms", "batch-max", "pace-sim", "http", "http-threads",
-        "durable", "checkpoint-every",
+        "durable", "checkpoint-every", "spec",
     ]);
     args.finish()?;
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "unlearn" => cmd_unlearn(&args),
         "serve" => cmd_serve(&args),
+        "audit" => cmd_audit(&args, &audit_action),
         "info" => cmd_info(),
         _ => {
             print!("{HELP}");
@@ -120,6 +133,12 @@ USAGE: ficabu <command> [--key value] [--flag]
            [--durable DIR [--checkpoint-every N]  crash-safe serving:
             write-ahead ledger + parameter checkpoints in DIR; on start,
             recover and replay unfinished requests]
+  audit    list|verify|prove --durable DIR [--model M] [--spec class:3]
+           offline inspection of the hash-chained audit log a durable
+           fleet writes beside its ledger:
+             list    print every verified chain link as JSON
+             verify  re-check CRC frames, hash links, checkpoint anchors
+             prove   print the verified links that executed --spec
   info     platform + artifact inventory
 
 Tables/figures: cargo run --release --example table1 (table2, table4,
@@ -229,6 +248,67 @@ fn cmd_unlearn(a: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `audit list|verify|prove --durable DIR`: offline verification of a
+/// durable directory's audit chain — no fleet, no model, just the files.
+fn cmd_audit(a: &Args, action: &str) -> Result<()> {
+    use ficabu::audit;
+    let dir = match a.get("durable") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => anyhow::bail!("audit needs --durable DIR (the directory a durable fleet wrote)"),
+    };
+    let model = match a.get("model") {
+        Some(m) => Some(ficabu::coordinator::ModelId::new(m)?),
+        None => None,
+    };
+    match action {
+        "list" => {
+            let report = audit::verify_dir(&dir)?;
+            for rec in report
+                .records
+                .iter()
+                .filter(|r| model.as_ref().map(|m| r.model == *m).unwrap_or(true))
+            {
+                println!("{}", rec.to_json());
+            }
+            Ok(())
+        }
+        "verify" => {
+            let report = audit::verify_dir(&dir)?;
+            for head in &report.heads {
+                println!(
+                    "{}: chain ok, {} link(s), head {:016x}",
+                    head.model, head.chain_len, head.head_hash
+                );
+            }
+            if report.heads.is_empty() {
+                println!("audit log is empty (no completed forgets recorded)");
+            }
+            println!(
+                "checkpoint anchors: {}",
+                if report.checkpoint_checked { "verified" } else { "no checkpoint present" }
+            );
+            Ok(())
+        }
+        "prove" => {
+            let spec = match a.get("spec") {
+                Some(s) => ForgetSpec::parse(s)?,
+                None => anyhow::bail!("audit prove needs --spec (e.g. --spec class:3)"),
+            };
+            let links = audit::prove(&dir, model.as_ref(), &spec)?;
+            println!(
+                "proved: {} verified link(s) executed `{}`",
+                links.len(),
+                spec.canonical()
+            );
+            for rec in &links {
+                println!("{}", rec.to_json());
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown audit action `{other}` (list | verify | prove)"),
+    }
 }
 
 fn cmd_serve(a: &Args) -> Result<()> {

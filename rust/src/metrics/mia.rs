@@ -16,20 +16,33 @@ pub struct ThresholdAttack {
 
 impl ThresholdAttack {
     /// Fit by sweeping candidate thresholds over the pooled losses.
+    ///
+    /// O(n log n): sort each split once (`total_cmp`, so degenerate NaN
+    /// losses cannot panic the calibration), then read every candidate's
+    /// TPR/TNR as a prefix count via binary search. NaN losses never win
+    /// a `< t` / `>= t` comparison, so they are dropped from the sorted
+    /// arrays and candidate set while the denominators keep the raw
+    /// input lengths — identical scores to the quadratic filter-count
+    /// sweep on finite data.
     pub fn fit(member_losses: &[f32], nonmember_losses: &[f32]) -> ThresholdAttack {
-        let mut candidates: Vec<f32> = member_losses
-            .iter()
-            .chain(nonmember_losses)
-            .cloned()
-            .collect();
-        candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let sorted = |losses: &[f32]| {
+            let mut v: Vec<f32> = losses.iter().copied().filter(|l| !l.is_nan()).collect();
+            v.sort_by(f32::total_cmp);
+            v
+        };
+        let members = sorted(member_losses);
+        let nonmembers = sorted(nonmember_losses);
+        let mut candidates: Vec<f32> = members.iter().chain(&nonmembers).copied().collect();
+        candidates.sort_by(f32::total_cmp);
         candidates.dedup();
+        let m = member_losses.len().max(1) as f64;
+        let n = nonmember_losses.len().max(1) as f64;
         let mut best = ThresholdAttack { threshold: 0.0, calibration_acc: 0.0 };
         for &t in &candidates {
-            let tpr = member_losses.iter().filter(|&&l| l < t).count() as f64
-                / member_losses.len().max(1) as f64;
-            let tnr = nonmember_losses.iter().filter(|&&l| l >= t).count() as f64
-                / nonmember_losses.len().max(1) as f64;
+            // prefix length = |{l : l < t}| — the arrays hold no NaN, so
+            // `l < t` partitions them and `partition_point` is exact
+            let tpr = members.partition_point(|&l| l < t) as f64 / m;
+            let tnr = (nonmembers.len() - nonmembers.partition_point(|&l| l < t)) as f64 / n;
             let bal = (tpr + tnr) / 2.0;
             if bal > best.calibration_acc {
                 best = ThresholdAttack { threshold: t, calibration_acc: bal };
@@ -79,6 +92,46 @@ mod tests {
         assert_eq!(mia_accuracy(&members, &nonmembers, &forget_after_unlearn), 0.0);
         let forget_before = vec![0.05; 10];
         assert_eq!(mia_accuracy(&members, &nonmembers, &forget_before), 1.0);
+    }
+
+    #[test]
+    fn nan_losses_do_not_panic_and_dilute_the_rates() {
+        // a degenerate loss (NaN from an all-zero logit row) used to
+        // panic partial_cmp().unwrap(); now it simply never counts as a
+        // member or non-member hit while staying in the denominator
+        let members = vec![0.1, 0.2, f32::NAN, 0.15];
+        let nonmembers = vec![2.0, f32::NAN, 2.5];
+        let atk = ThresholdAttack::fit(&members, &nonmembers);
+        assert!(atk.threshold.is_finite());
+        // tpr = 3/4 (NaN member never < t), tnr = 2/3 at the best split
+        assert!((atk.calibration_acc - (3.0 / 4.0 + 2.0 / 3.0) / 2.0).abs() < 1e-9);
+        assert!(atk.calibration_acc <= 1.0);
+    }
+
+    #[test]
+    fn quadratic_oracle_agreement() {
+        // the prefix-count sweep must score exactly like the original
+        // O(n^2) filter-count sweep on finite data
+        let mut rng = Pcg32::seeded(7);
+        for _ in 0..25 {
+            let m: Vec<f32> = (0..17).map(|_| rng.range(0.0, 3.0)).collect();
+            let o: Vec<f32> = (0..13).map(|_| rng.range(0.0, 3.0)).collect();
+            let atk = ThresholdAttack::fit(&m, &o);
+            let mut cand: Vec<f32> = m.iter().chain(&o).copied().collect();
+            cand.sort_by(f32::total_cmp);
+            cand.dedup();
+            let mut best = ThresholdAttack { threshold: 0.0, calibration_acc: 0.0 };
+            for &t in &cand {
+                let tpr = m.iter().filter(|&&l| l < t).count() as f64 / m.len() as f64;
+                let tnr = o.iter().filter(|&&l| l >= t).count() as f64 / o.len() as f64;
+                let bal = (tpr + tnr) / 2.0;
+                if bal > best.calibration_acc {
+                    best = ThresholdAttack { threshold: t, calibration_acc: bal };
+                }
+            }
+            assert_eq!(atk.threshold, best.threshold);
+            assert_eq!(atk.calibration_acc, best.calibration_acc);
+        }
     }
 
     #[test]

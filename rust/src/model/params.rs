@@ -30,6 +30,32 @@ use crate::tensor::Tensor;
 use crate::util::prng::Pcg32;
 
 const MAGIC: &[u8; 8] = b"FICABU01";
+/// Trailing magic of the embedded provenance record
+/// ([`ParamStore::save_with_provenance`]).
+const PROV_MAGIC: &[u8; 8] = b"FICABUP1";
+
+/// Tmp + fsync + rename write discipline (the one `checkpoint.rs`
+/// uses): a crash mid-save can leave a stale `.tmp`, never a torn
+/// destination file.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let name = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+    let tmp = path.with_file_name(format!("{name}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    if let Some(parent) = path.parent() {
+        crate::coordinator::wal::sync_dir(parent);
+    }
+    Ok(())
+}
 
 #[derive(Clone)]
 pub struct ParamStore {
@@ -181,7 +207,7 @@ impl ParamStore {
 
     // --- checkpoint io -----------------------------------------------------
 
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+    fn encode(&self) -> Vec<u8> {
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(MAGIC);
         push_u32(&mut buf, self.seg.len() as u32);
@@ -197,13 +223,71 @@ impl ParamStore {
                 }
             }
         }
-        if let Some(parent) = path.as_ref().parent() {
-            std::fs::create_dir_all(parent)?;
+        buf
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        write_atomic(path.as_ref(), &self.encode())
+    }
+
+    /// Save with the model's audit-chain head embedded as a trailing
+    /// provenance record, so a shipped parameter file carries its own
+    /// forgetting provenance (in the spirit of cargo-auditable's
+    /// in-binary dependency record). The trailer rides *after* the
+    /// payload — [`ParamStore::load`] reads exactly the declared tensor
+    /// bytes and ignores the rest, so provenance-bearing files load
+    /// everywhere the plain format does. Layout, from the end of file:
+    ///
+    /// ```text
+    /// ... payload ... | record JSON | crc32(json) u32 | len u32 | "FICABUP1"
+    /// ```
+    pub fn save_with_provenance(
+        &self,
+        path: impl AsRef<Path>,
+        head: &crate::audit::AuditRecord,
+    ) -> Result<()> {
+        let mut buf = self.encode();
+        let json = head.to_json().to_string().into_bytes();
+        let crc = crate::coordinator::wal::crc32(&json);
+        buf.extend_from_slice(&json);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        push_u32(&mut buf, json.len() as u32);
+        buf.extend_from_slice(PROV_MAGIC);
+        write_atomic(path.as_ref(), &buf)
+    }
+
+    /// Read back the provenance record embedded by
+    /// [`ParamStore::save_with_provenance`]. `Ok(None)` for a plain
+    /// parameter file (no trailer magic); an error for a trailer that is
+    /// present but torn, CRC-damaged, or schema-invalid — a corrupted
+    /// provenance claim must fail loudly, never read as "no provenance".
+    pub fn load_provenance(path: impl AsRef<Path>) -> Result<Option<crate::audit::AuditRecord>> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?
+            .read_to_end(&mut bytes)?;
+        if bytes.len() < 8 || &bytes[bytes.len() - 8..] != PROV_MAGIC {
+            return Ok(None);
         }
-        let mut f = std::fs::File::create(path.as_ref())
-            .with_context(|| format!("creating {}", path.as_ref().display()))?;
-        f.write_all(&buf)?;
-        Ok(())
+        let end = bytes.len() - 8;
+        if end < 8 {
+            bail!("provenance trailer torn: no length/crc words");
+        }
+        let len =
+            u32::from_le_bytes(bytes[end - 4..end].try_into().unwrap()) as usize;
+        let crc_at = end - 8;
+        let Some(json_at) = crc_at.checked_sub(len) else {
+            bail!("provenance trailer torn: declared {len} JSON bytes, file too short");
+        };
+        let crc = u32::from_le_bytes(bytes[crc_at..crc_at + 4].try_into().unwrap());
+        let json = &bytes[json_at..crc_at];
+        if crate::coordinator::wal::crc32(json) != crc {
+            bail!("provenance trailer CRC mismatch");
+        }
+        let text = std::str::from_utf8(json).context("provenance record is not UTF-8")?;
+        let parsed = crate::util::json::Json::parse(text)
+            .map_err(|e| anyhow::anyhow!("provenance record unparsable: {e}"))?;
+        crate::audit::AuditRecord::from_json(&parsed).map(Some)
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<ParamStore> {
@@ -726,6 +810,90 @@ mod tests {
         for (x, y) in owned.seg[3].iter().zip(ParamAccess::seg(&cow, 3)) {
             assert!(x.data.iter().zip(&y.data).all(|(a, b)| a.to_bits() == b.to_bits()));
         }
+    }
+
+    fn head_record() -> crate::audit::AuditRecord {
+        crate::audit::AuditRecord {
+            model: crate::coordinator::ModelId::default(),
+            chain_seq: 2,
+            prev_hash: 0x1234_5678_9abc_def0,
+            spec: crate::unlearn::ForgetSpec::Class(3),
+            config_hash: 0xdead_beef_0042_0007,
+            git_rev: "abc123def456".to_string(),
+            rolled_back: false,
+            wal_seq: Some(7),
+            wal_gen: 1,
+            tainted: false,
+            forget_acc: 0.04,
+            retain_acc: 0.93,
+            attest: Some(crate::audit::Attestation {
+                strategy: "FiCABU".to_string(),
+                precision: "f32".to_string(),
+                seed: 0xedbe,
+                forget_acc_before: 0.91,
+                retain_acc_before: 0.92,
+                mia_before: 0.8,
+                mia_after: 0.1,
+            }),
+        }
+    }
+
+    #[test]
+    fn save_leaves_no_tmp_file() {
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
+        let ps = ParamStore::init(&meta, 11);
+        let dir = std::env::temp_dir().join("ficabu_test_atomic_save");
+        let path = dir.join("rn.fcb");
+        ps.save(&path).unwrap();
+        assert!(path.exists());
+        assert!(!dir.join("rn.fcb.tmp").exists(), "tmp must be renamed away");
+        ParamStore::load(&path).unwrap().validate(&meta).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn provenance_trailer_roundtrips_and_plain_load_ignores_it() {
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
+        let ps = ParamStore::init(&meta, 13);
+        let dir = std::env::temp_dir().join("ficabu_test_provenance");
+        let path = dir.join("rn.fcb");
+        let head = head_record();
+        ps.save_with_provenance(&path, &head).unwrap();
+        // the payload still loads as a plain store, trailer and all
+        let loaded = ParamStore::load(&path).unwrap();
+        loaded.validate(&meta).unwrap();
+        for (a, b) in ps.flat().iter().zip(loaded.flat().iter()) {
+            assert_eq!(a.data, b.data);
+        }
+        // the trailer reads back as the same canonical record
+        let got = ParamStore::load_provenance(&path).unwrap().expect("trailer present");
+        assert_eq!(got.core_hash(), head.core_hash());
+        assert_eq!(got.chain_seq, 2);
+        assert_eq!(got.wal_seq, Some(7));
+        assert!((got.attest.as_ref().unwrap().mia_after - 0.1).abs() < 1e-12);
+        // a plain save has no provenance, and that is not an error
+        let plain = dir.join("plain.fcb");
+        ps.save(&plain).unwrap();
+        assert!(ParamStore::load_provenance(&plain).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_provenance_rejected_loudly() {
+        let meta = ModelMeta::builtin("rn18slim").unwrap();
+        let ps = ParamStore::init(&meta, 17);
+        let dir = std::env::temp_dir().join("ficabu_test_provenance_bad");
+        let path = dir.join("rn.fcb");
+        ps.save_with_provenance(&path, &head_record()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one byte inside the JSON region (just before the 16-byte
+        // crc+len+magic tail) — CRC must catch it
+        let n = bytes.len();
+        bytes[n - 17] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ParamStore::load_provenance(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("CRC"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

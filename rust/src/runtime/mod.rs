@@ -54,6 +54,15 @@ impl Precision {
             Precision::Int8 => 1,
         }
     }
+
+    /// Canonical wire name, used by the registry's `GET /models` payload
+    /// and the audit subsystem's attestation records.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
 }
 
 /// Positional module argument: an f32 host tensor, or a pre-quantized

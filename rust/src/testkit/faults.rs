@@ -43,10 +43,21 @@ pub const ENV_VAR: &str = "FICABU_FAULTS";
 /// fault-free chaos run); sites starting with `test_` are exempt so
 /// unit tests can use scratch sites. Keep in sync with the `hit` call
 /// sites: engine stages (`forget_fisher`, `dampen`, `early_stop`), the
-/// fleet's `respawn` build path, and the durability seams
-/// (`wal_append`, `checkpoint`, `replay`).
-pub const SITES: &[&str] =
-    &["forget_fisher", "dampen", "early_stop", "respawn", "wal_append", "checkpoint", "replay"];
+/// fleet's `respawn` build path, the durability seams
+/// (`wal_append`, `checkpoint`, `replay`), and the audit seams
+/// (`audit_append` in the chain's durable append path, `audit_verify`
+/// in offline chain verification).
+pub const SITES: &[&str] = &[
+    "forget_fisher",
+    "dampen",
+    "early_stop",
+    "respawn",
+    "wal_append",
+    "checkpoint",
+    "replay",
+    "audit_append",
+    "audit_verify",
+];
 
 // Fast-path gate: `hit` is a relaxed load of this flag unless a plan is
 // armed. The plan itself lives behind a Mutex (hits are rare and slow

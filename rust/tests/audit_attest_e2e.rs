@@ -1,0 +1,92 @@
+//! Trained-model attestation acceptance: unlearning a class the model
+//! actually fitted must drive the attested MIA member-rate *down*, and
+//! the evidence must land in the model's audit chain link.
+//!
+//! The untrained fixtures in `tests/audit_e2e.rs` exercise the chain
+//! mechanics cheaply but cannot pin the member-rate's direction — a
+//! random-init network has no members. This test trains first, so the
+//! forget set is genuinely member-like (low loss) before the edit.
+//!
+//! In its own binary because it mutates `FICABU_ARTIFACTS` — tests that
+//! touch the process environment get a dedicated process (same rule as
+//! `tests/int8_e2e.rs`). Trains for 120 steps like the quickstart
+//! example, so it is among the slowest tests in the suite.
+
+use ficabu::audit;
+use ficabu::config::SharedMeta;
+use ficabu::coordinator::{
+    DurabilityConfig, Fleet, FleetConfig, Pacing, Reply, WorkerSpec,
+};
+use ficabu::exp::{self, DatasetKind, Mode, PrepareOpts};
+use ficabu::unlearn::ForgetSpec;
+
+#[test]
+fn attested_member_rate_drops_on_a_trained_model() {
+    let art = std::env::temp_dir().join("ficabu_audit_attest_artifacts");
+    std::env::set_var("FICABU_ARTIFACTS", &art);
+    let opts = PrepareOpts { train_steps: 120, retrain: true, ..PrepareOpts::default() };
+    let prep = exp::prepare("rn18slim", DatasetKind::Cifar20, &opts).unwrap();
+    let cfg = exp::tables::mode_config(&prep, Mode::Ficabu, None);
+    let wspec = WorkerSpec {
+        meta: prep.model.meta.clone(),
+        shared: SharedMeta::builtin(),
+        params: prep.params,
+        global: prep.global,
+        train: prep.train,
+        cfg,
+        precision: prep.precision,
+    };
+
+    let dir =
+        std::env::temp_dir().join(format!("ficabu_audit_attest_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let fleet = Fleet::start_durable(
+        wspec,
+        FleetConfig {
+            workers: 1,
+            queue_cap: 8,
+            deadline: None,
+            batch_max: 1,
+            pacing: Pacing::Host,
+            respawn_giveup: 5,
+        },
+        DurabilityConfig { dir: dir.clone(), checkpoint_every: 1 },
+    )
+    .unwrap();
+    let spec = ForgetSpec::Class(3);
+    let sm = match fleet.submit(spec.clone()).recv().unwrap() {
+        Reply::Done(sm) => sm,
+        other => panic!("unexpected reply {other:?}"),
+    };
+    fleet.shutdown().unwrap();
+
+    let at = sm.attest.as_ref().expect("a real forget carries an attestation");
+    // Trained on class 3, its samples are member-like before the edit;
+    // the pass makes them non-member-like. The attested member-rate
+    // must strictly drop — this is the per-link unlearning evidence.
+    assert!(
+        at.mia_after < at.mia_before,
+        "member-rate did not drop across the edit: {} -> {}",
+        at.mia_before,
+        at.mia_after
+    );
+    // Forgetting must not *improve* forget-set accuracy.
+    assert!(
+        sm.forget_acc <= at.forget_acc_before,
+        "forget accuracy rose: {} -> {}",
+        at.forget_acc_before,
+        sm.forget_acc
+    );
+
+    // The same evidence is in the verified chain link, and `prove`
+    // returns it for the executed spec.
+    let report = audit::verify_dir(&dir).unwrap();
+    assert_eq!(report.records.len(), 1);
+    let link = report.records[0].attest.as_ref().expect("link embeds the attestation");
+    assert_eq!(link, at);
+    let links = audit::prove(&dir, None, &spec).unwrap();
+    assert_eq!(links.len(), 1);
+
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&art);
+}

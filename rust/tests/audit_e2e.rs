@@ -1,0 +1,340 @@
+//! Audit-chain end-to-end tests: real durable fleets driving the real
+//! engine, with the hash-chained `audit.log` verified offline after the
+//! fact.
+//!
+//! Covers the verifiable-unlearning guarantees: a multi-forget run
+//! produces a chain `audit verify` accepts (heads, checkpoint anchors,
+//! per-link MIA attestation); any single-byte mutation of `audit.log` —
+//! CRC damage or a CRC-valid forged record — is rejected naming the
+//! offending record; kill-and-restart recovery re-enters the chain
+//! deterministically (identical per-link core hashes to an
+//! uninterrupted run); and a failed audit append taints the in-memory
+//! link without blocking the caller's reply.
+//!
+//! The fault plan is process-global, so every test here serializes on
+//! one lock and clears the plan before releasing it.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use ficabu::audit::{self, AuditRecord};
+use ficabu::config::{ModelMeta, SharedMeta};
+use ficabu::coordinator::{
+    wal, DurabilityConfig, Fleet, FleetConfig, ModelId, Pacing, Reply, Summary, WorkerSpec,
+};
+use ficabu::data::{cifar20_like, Dataset, DatasetCfg};
+use ficabu::fisher::Importance;
+use ficabu::model::ParamStore;
+use ficabu::runtime::Precision;
+use ficabu::testkit::faults;
+use ficabu::unlearn::{ForgetSpec, Ssd};
+
+static AUDIT: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    AUDIT.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn train_set() -> Dataset {
+    let cfg = DatasetCfg { train_per_class: 4, test_per_class: 1, ..DatasetCfg::cifar20() };
+    cifar20_like(&cfg).0
+}
+
+fn durable_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("ficabu_audit_e2e_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn durable_wspec(seed: u64) -> WorkerSpec {
+    let meta = ModelMeta::builtin("rn18slim").unwrap();
+    let mut global = Importance::zeros_like(&meta);
+    global.floor(1e-6);
+    WorkerSpec {
+        meta: meta.clone(),
+        shared: SharedMeta::builtin(),
+        params: ParamStore::init(&meta, seed),
+        global,
+        train: train_set(),
+        cfg: Ssd::new(1.0, 1.0).into_config(),
+        precision: Precision::F32,
+    }
+}
+
+/// One-worker durable production fleet, checkpointing every completion —
+/// the configuration under which chains, anchors, and replay identity
+/// are all exercised.
+fn durable_fleet(dir: &Path) -> Fleet {
+    Fleet::start_durable(
+        durable_wspec(5),
+        FleetConfig {
+            workers: 1,
+            queue_cap: 8,
+            deadline: None,
+            batch_max: 1,
+            pacing: Pacing::Host,
+            respawn_giveup: 5,
+        },
+        DurabilityConfig { dir: dir.to_path_buf(), checkpoint_every: 1 },
+    )
+    .unwrap()
+}
+
+/// Replayed entries have no reply channel; poll the rollup instead.
+fn wait_served(fleet: &Fleet, n: u64) {
+    let t0 = Instant::now();
+    while fleet.stats().merged().served < n {
+        assert!(t0.elapsed() < Duration::from_secs(120), "replayed work never completed");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn submit_done(fleet: &Fleet, spec: ForgetSpec) -> Summary {
+    match fleet.submit(spec.clone()).recv().unwrap() {
+        Reply::Done(sm) => sm,
+        other => panic!("{spec}: unexpected reply {other:?}"),
+    }
+}
+
+/// The headline chain guarantee: three completed forgets produce a
+/// chain `verify_dir` accepts — linked hashes, one head anchored by the
+/// checkpoint, and a well-formed MIA attestation embedded per link.
+/// (The *directional* member-rate drop needs a trained model and lives
+/// in `tests/audit_attest_e2e.rs`; this untrained fixture keeps the
+/// chain mechanics fast.)
+#[test]
+fn three_forget_chain_verifies_with_attestation() {
+    let _g = serial();
+    faults::clear();
+    let dir = durable_dir("three");
+
+    {
+        let fleet = durable_fleet(&dir);
+        for class in [1usize, 2, 5] {
+            let sm = submit_done(&fleet, ForgetSpec::Class(class));
+            let at = sm.attest.as_ref().expect("every real forget carries an attestation");
+            assert!(
+                (0.0..=1.0).contains(&at.mia_before) && (0.0..=1.0).contains(&at.mia_after),
+                "class {class}: member-rates are probabilities, got {} -> {}",
+                at.mia_before,
+                at.mia_after
+            );
+        }
+        fleet.shutdown().unwrap();
+    }
+
+    let report = audit::verify_dir(&dir).unwrap();
+    assert_eq!(report.records.len(), 3);
+    assert!(report.checkpoint_checked, "checkpoint anchors were verified");
+    assert_eq!(report.heads.len(), 1);
+    assert_eq!(report.heads[0].model, ModelId::default());
+    assert_eq!(report.heads[0].chain_len, 3);
+    assert_eq!(report.heads[0].head_hash, report.records[2].core_hash());
+
+    // Every link: chained hashes, durable coordinates, embedded evidence.
+    let genesis = AuditRecord::genesis_hash(&ModelId::default());
+    for (i, rec) in report.records.iter().enumerate() {
+        assert_eq!(rec.chain_seq, i as u64 + 1);
+        let expect_prev =
+            if i == 0 { genesis } else { report.records[i - 1].core_hash() };
+        assert_eq!(rec.prev_hash, expect_prev, "link {} prev hash", i + 1);
+        assert_eq!(rec.wal_seq, Some(i as u64 + 1));
+        assert_eq!(rec.wal_gen, 1);
+        assert!(!rec.tainted);
+        assert!(!rec.rolled_back);
+        let at = rec.attest.as_ref().expect("link records its attestation");
+        assert_eq!(at.precision, "f32");
+        assert!((0.0..=1.0).contains(&at.forget_acc_before), "link {}", i + 1);
+        assert!((0.0..=1.0).contains(&at.retain_acc_before), "link {}", i + 1);
+        assert!((0.0..=1.0).contains(&at.mia_before), "link {}", i + 1);
+        assert!((0.0..=1.0).contains(&at.mia_after), "link {}", i + 1);
+    }
+
+    // `prove` answers for an executed spec and refuses an unexecuted one.
+    let links = audit::prove(&dir, None, &ForgetSpec::Class(2)).unwrap();
+    assert_eq!(links.len(), 1);
+    assert_eq!(links[0].spec, ForgetSpec::Class(2));
+    let err = audit::prove(&dir, None, &ForgetSpec::Class(9)).unwrap_err();
+    assert!(format!("{err:#}").contains("class:9"), "{err:#}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Tamper evidence: a single flipped byte in `audit.log` (CRC damage)
+/// and a CRC-valid forged record (rewritten body) are both rejected,
+/// each naming the first record that no longer holds.
+#[test]
+fn any_single_byte_mutation_is_rejected_naming_the_record() {
+    let _g = serial();
+    faults::clear();
+    let dir = durable_dir("mutate");
+
+    {
+        let fleet = durable_fleet(&dir);
+        submit_done(&fleet, ForgetSpec::Class(3));
+        submit_done(&fleet, ForgetSpec::Classes(vec![1, 4]));
+        fleet.shutdown().unwrap();
+    }
+    audit::verify_dir(&dir).unwrap();
+    let path = dir.join(audit::AUDIT_FILE);
+    let pristine = std::fs::read(&path).unwrap();
+
+    // Frame layout after the 8-byte magic: `len u32 | crc u32 | body`.
+    let len1 = u32::from_le_bytes(pristine[8..12].try_into().unwrap()) as usize;
+    let frame2 = 8 + 8 + len1;
+
+    // Flip one byte inside record 2's body: its CRC no longer matches,
+    // the scan stops after record 1, and verification refuses the file
+    // naming the damaged record.
+    let mut bytes = pristine.clone();
+    bytes[frame2 + 8 + 10] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = format!("{:#}", audit::verify_dir(&dir).unwrap_err());
+    assert!(err.contains("record 2"), "damaged record is named: {err}");
+
+    // Same flip in record 1's body: now record 1 is named.
+    let mut bytes = pristine.clone();
+    bytes[8 + 8 + 10] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = format!("{:#}", audit::verify_dir(&dir).unwrap_err());
+    assert!(err.contains("record 1"), "damaged record is named: {err}");
+
+    // Truncated tail (a crash would leave this; a mutation can too):
+    // verification refuses rather than silently shortening history.
+    std::fs::write(&path, &pristine[..pristine.len() - 3]).unwrap();
+    let err = format!("{:#}", audit::verify_dir(&dir).unwrap_err());
+    assert!(err.contains("record 2"), "torn record is named: {err}");
+
+    // Forged embedded record, CRC recomputed: rewrite record 1 with an
+    // inflated accuracy. The file is frame-valid, but record 2's
+    // `prev_hash` no longer matches record 1's core hash.
+    let mut records = audit::log::read_log(&path_restore(&path, &pristine)).unwrap().records;
+    records[0].forget_acc = 0.999;
+    audit::log::write_replacing(&path, &records).unwrap();
+    let err = format!("{:#}", audit::verify_dir(&dir).unwrap_err());
+    assert!(err.contains("record 2"), "forged link is named: {err}");
+    assert!(err.contains("forged or tampered"), "{err}");
+
+    // Forged head: links still chain, but the checkpoint's embedded
+    // anchor no longer matches — the divergence is loud.
+    let mut records = audit::log::read_log(&path_restore(&path, &pristine)).unwrap().records;
+    records[1].retain_acc = 1.0;
+    audit::log::write_replacing(&path, &records).unwrap();
+    let err = format!("{:#}", audit::verify_dir(&dir).unwrap_err());
+    assert!(err.contains("diverged"), "anchor divergence is loud: {err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Restore `path` to `bytes` and hand the path back — keeps the
+/// mutate-verify-restore cadence above readable.
+fn path_restore(path: &Path, bytes: &[u8]) -> PathBuf {
+    std::fs::write(path, bytes).unwrap();
+    path.to_path_buf()
+}
+
+/// Kill-and-restart determinism: a run whose last forget is accepted on
+/// disk but never served, then recovered, ends with an audit chain
+/// whose per-link core hashes are identical to an uninterrupted run's —
+/// recovery re-enters the chain, it does not fork it.
+#[test]
+fn kill_and_restart_recovers_an_identical_chain() {
+    let _g = serial();
+    faults::clear();
+    let dir_a = durable_dir("chain_reference");
+    let dir_b = durable_dir("chain_crashed");
+    let spec1 = ForgetSpec::Class(3);
+    let spec2 = ForgetSpec::Classes(vec![1, 4]);
+    let spec3 = ForgetSpec::Class(6);
+
+    // Reference: all three events, no interruption.
+    {
+        let fleet = durable_fleet(&dir_a);
+        for spec in [&spec1, &spec2, &spec3] {
+            submit_done(&fleet, spec.clone());
+        }
+        fleet.shutdown().unwrap();
+    }
+
+    // Crashed: two events land; the third is accepted (fsync'd) but the
+    // process "dies" before serving it.
+    {
+        let fleet = durable_fleet(&dir_b);
+        submit_done(&fleet, spec1.clone());
+        submit_done(&fleet, spec2.clone());
+        fleet.shutdown().unwrap();
+        let (w, _tail) = wal::Wal::open_append(&dir_b.join(wal::LEDGER_FILE)).unwrap();
+        w.append_accepted(&ModelId::default(), &spec3, 0, None).unwrap();
+    }
+
+    // Restart: the unserved event replays and appends its link.
+    {
+        let fleet = durable_fleet(&dir_b);
+        assert_eq!(fleet.stats().durability.unwrap().replayed, 1);
+        wait_served(&fleet, 1);
+        fleet.shutdown().unwrap();
+    }
+
+    let a = audit::verify_dir(&dir_a).unwrap();
+    let b = audit::verify_dir(&dir_b).unwrap();
+    assert_eq!(a.records.len(), 3);
+    assert_eq!(b.records.len(), 3);
+    // Core hashes cover spec, config, build, accuracies, and the MIA
+    // attestation — but not the durability coordinates (the replayed
+    // link carries a different `wal_gen`), so identity here means the
+    // recovered history *is* the uninterrupted history.
+    for (i, (ra, rb)) in a.records.iter().zip(&b.records).enumerate() {
+        assert_eq!(
+            ra.core_hash(),
+            rb.core_hash(),
+            "link {}: recovered chain diverged from the uninterrupted run",
+            i + 1
+        );
+    }
+    assert_eq!(a.heads, b.heads);
+
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+/// A failed audit append must not block the caller: the reply is still
+/// `Done`, the link enters the in-memory chain flagged `tainted`, later
+/// links hash over it, and offline verification then refuses the
+/// on-disk log — the hole is permanent evidence, not silence.
+#[test]
+fn failed_audit_append_taints_without_blocking_replies() {
+    let _g = serial();
+    faults::clear();
+    let dir = durable_dir("taint");
+
+    let fleet = durable_fleet(&dir);
+    submit_done(&fleet, ForgetSpec::Class(1));
+
+    // The next audit append dies; the forget itself must still answer.
+    faults::arm("audit_append:1:error").unwrap();
+    let sm = submit_done(&fleet, ForgetSpec::Class(2));
+    faults::clear();
+    assert!(!sm.rolled_back);
+    assert_eq!(sm.wal_seq, Some(2));
+
+    // A third forget chains over the tainted link.
+    submit_done(&fleet, ForgetSpec::Class(4));
+
+    let chain = fleet.audit_chain(&ModelId::default());
+    assert_eq!(chain.len(), 3);
+    assert!(!chain[0].tainted);
+    assert!(chain[1].tainted, "the unpersisted link is flagged, not dropped");
+    assert!(!chain[2].tainted);
+    assert_eq!(chain[2].prev_hash, chain[1].core_hash(), "later links hash over the hole");
+
+    let stats = fleet.shutdown().unwrap();
+    assert_eq!(stats.merged().served, 3, "serving never paused");
+
+    // On disk the chain jumps 1 -> 3: verification names the hole.
+    let err = format!("{:#}", audit::verify_dir(&dir).unwrap_err());
+    assert!(err.contains("record 2"), "the missing link is named: {err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

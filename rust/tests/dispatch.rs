@@ -41,6 +41,7 @@ fn mock_summary(spec: &ForgetSpec) -> Summary {
         rolled_back: false,
         timing: Timing::default(),
         wal_seq: None,
+        attest: None,
     }
 }
 

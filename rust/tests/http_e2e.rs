@@ -57,6 +57,7 @@ impl UnlearnService for MockService {
             rolled_back: false,
             timing: Timing::default(),
             wal_seq: None,
+            attest: None,
         })
     }
 }
